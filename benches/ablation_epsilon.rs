@@ -1,0 +1,33 @@
+//! ε ablation (E9, §V-6): how sketch precision trades pivot quality
+//! against candidate volume inside GK Select. Paper-scale sweep with the
+//! modelled fabric: `repro bench ablation`.
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::new("ablation_epsilon").samples(10);
+    let n = 1_000_000u64;
+    for eps in [0.05, 0.01, 0.001] {
+        let mut cfg = ReproConfig::default();
+        cfg.algorithm.epsilon = eps;
+        let mut cluster = make_cluster(&cfg, 10);
+        let data = Distribution::Uniform
+            .generator(cfg.algorithm.seed)
+            .generate(&mut cluster, n);
+        let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+        bench.run(&format!("gk_select/eps{eps}"), || {
+            alg.quantile(&mut cluster, &data, 0.5)
+                .expect("quantile run")
+                .value
+        });
+        // observable trade-off: candidate traffic vs eps
+        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        println!(
+            "bench ablation_epsilon/eps{eps}/driver_bytes      {}",
+            out.report.bytes_to_driver
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Fig. 1 — runtime vs n at 10 core nodes (40 partitions).
+//!
+//! Wall-clock regression tracking at bench-scale n; the paper-scale sweep
+//! with the modelled EMR fabric is `repro bench fig --nodes 10`
+//! (EXPERIMENTS.md E1).
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let cfg = ReproConfig::default();
+    let nodes = 10;
+    let bench = Bench::new("fig1_10nodes").samples(10);
+    for n in [100_000u64, 1_000_000] {
+        let mut cluster = make_cluster(&cfg, nodes);
+        let data = Distribution::Uniform
+            .generator(cfg.algorithm.seed)
+            .generate(&mut cluster, n);
+        for choice in AlgoChoice::PAPER_SET {
+            let mut alg = build_algorithm(&cfg, choice).unwrap();
+            bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
+                alg.quantile(&mut cluster, &data, 0.5)
+                    .expect("quantile run")
+                    .value
+            });
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Fig. 2 — runtime vs n at 30 core nodes (120 partitions).
+//!
+//! Paper-scale: `repro bench fig --nodes 30` (EXPERIMENTS.md E2); the
+//! headline ≈10.5× sort gap is read off the large-n rows of that sweep.
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let cfg = ReproConfig::default();
+    let nodes = 30;
+    let bench = Bench::new("fig2_30nodes").samples(10);
+    let n = 1_000_000u64;
+    let mut cluster = make_cluster(&cfg, nodes);
+    let data = Distribution::Uniform
+        .generator(cfg.algorithm.seed)
+        .generate(&mut cluster, n);
+    for choice in AlgoChoice::PAPER_SET {
+        let mut alg = build_algorithm(&cfg, choice).unwrap();
+        bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
+            alg.quantile(&mut cluster, &data, 0.5)
+                .expect("quantile run")
+                .value
+        });
+    }
+
+    // modelled-time headline at bench scale: GK Select vs Full Sort
+    let mut gk = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+    let mut fs = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
+    let t_gk = gk.quantile(&mut cluster, &data, 0.5).unwrap().report.elapsed_secs;
+    let t_fs = fs.quantile(&mut cluster, &data, 0.5).unwrap().report.elapsed_secs;
+    println!(
+        "bench fig2_30nodes/headline_speedup_model        {:.2}x (full sort / gk select, n={n})",
+        t_fs / t_gk
+    );
+}

@@ -1,0 +1,31 @@
+//! Figs. 3–4 — GK Select runtime across the four input distributions at
+//! the 50th and 99th percentiles. Paper-scale CIs:
+//! `repro bench dist --n 1e8` / `--n 1e9` (EXPERIMENTS.md E3/E4).
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let cfg = ReproConfig::default();
+    let bench = Bench::new("fig3_distributions").samples(10);
+    let n = 500_000u64;
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Zipf,
+        Distribution::Bimodal,
+        Distribution::Sorted,
+    ] {
+        let mut cluster = make_cluster(&cfg, 10);
+        let data = dist.generator(cfg.algorithm.seed).generate(&mut cluster, n);
+        for (qlabel, q) in [("q50", 0.5), ("q99", 0.99)] {
+            let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+            bench.run(&format!("{}_{qlabel}/n{n}", dist.label()), || {
+                alg.quantile(&mut cluster, &data, q)
+                    .expect("quantile run")
+                    .value
+            });
+        }
+    }
+}

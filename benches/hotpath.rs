@@ -1,0 +1,65 @@
+//! §Perf micro-benches — the executor hot loops the optimization pass
+//! iterates on: pivot counting (native, and PJRT when artifacts exist),
+//! Dutch partition, quickselect, histogram, RNG.
+
+use gkselect::data::pcg::Pcg64;
+use gkselect::runtime::{KernelBackend, NativeBackend, PjrtBackend};
+use gkselect::select::{dutch_partition, select_kth, SplitMix64};
+use gkselect::util::benchkit::Bench;
+use gkselect::Key;
+use std::path::Path;
+
+fn data(n: usize) -> Vec<Key> {
+    let mut rng = Pcg64::new(42, 1);
+    (0..n).map(|_| rng.next_u64() as Key).collect()
+}
+
+fn main() {
+    let n = 4_000_000usize;
+    let xs = data(n);
+
+    let bench = Bench::new("hot_count_pivot").samples(20);
+    let mut native = NativeBackend::new();
+    bench.run_throughput("native_4m", n as u64, || native.count_pivot(&xs, 0).lt);
+
+    // PJRT path when artifacts are present (interpret-mode Pallas through
+    // XLA CPU — correctness vehicle; §Perf compares the gap)
+    if let Ok(mut pjrt) = PjrtBackend::load(Path::new("artifacts")) {
+        let small = &xs[..512 * 1024];
+        let pjrt_bench = Bench::new("hot_count_pivot_pjrt").samples(5);
+        pjrt_bench.run_throughput("pjrt_512k", small.len() as u64, || {
+            pjrt.count_pivot(small, 0).lt
+        });
+    } else {
+        println!("bench hot_count_pivot_pjrt/skipped (no artifacts — run `make artifacts`)");
+    }
+
+    let m = 1_000_000usize;
+    let ys = data(m);
+    let bench = Bench::new("hot_dutch_partition").samples(20);
+    bench.run_throughput("dutch_1m", m as u64, || {
+        let mut a = ys.clone();
+        dutch_partition(&mut a, 0).lt
+    });
+
+    let bench = Bench::new("hot_quickselect").samples(20);
+    bench.run_throughput("median_1m", m as u64, || {
+        let mut a = ys.clone();
+        select_kth(&mut a, m / 2, 99)
+    });
+    bench.run_throughput("sort_baseline_1m", m as u64, || {
+        let mut a = ys.clone();
+        a.sort_unstable();
+        a[m / 2]
+    });
+
+    let bench = Bench::new("hot_minmax_hist").samples(20);
+    bench.run_throughput("minmax_4m", n as u64, || native.minmax(&xs));
+    bench.run_throughput("histogram_128_4m", n as u64, || {
+        native.histogram(&xs, i32::MIN as i64, (1u64 << 32) as i64 / 128 + 1, 128)
+    });
+
+    let bench = Bench::new("hot_rng").samples(20);
+    let mut rng = SplitMix64::new(5);
+    bench.run("splitmix_below", || rng.below(1_000_000));
+}

@@ -1,0 +1,78 @@
+//! §IV-E — insert throughput of the three GK variants (E7).
+//!
+//! The paper's analytic claim: Spark GK pays an unavoidable `n log B`
+//! buffer-sort term (B = 50 000), while mSGK's adaptive buffer tracks the
+//! summary size and recovers the classical amortized bound. This bench
+//! measures inserts/second per variant and the driver-side fold vs tree
+//! merge cost at the paper's 120-partition shape.
+
+use gkselect::data::pcg::Pcg64;
+use gkselect::sketch::classical::ClassicalGk;
+use gkselect::sketch::modified::{fold_merge, tree_merge, ModifiedGk};
+use gkselect::sketch::spark::SparkGk;
+use gkselect::sketch::{GkCore, QuantileSketch};
+use gkselect::util::benchkit::Bench;
+use gkselect::Key;
+
+fn data(n: usize) -> Vec<Key> {
+    let mut rng = Pcg64::new(7, 7);
+    (0..n).map(|_| rng.next_u64() as Key).collect()
+}
+
+fn main() {
+    let n = 200_000usize;
+    let xs = data(n);
+    let bench = Bench::new("sketch_insert").samples(10);
+
+    bench.run_throughput("classical", n as u64, || {
+        let mut sk = ClassicalGk::new(0.01);
+        for &v in &xs {
+            sk.insert(v);
+        }
+        sk.finalize();
+        sk.summary_len()
+    });
+    bench.run_throughput("spark_B50k", n as u64, || {
+        let mut sk = SparkGk::new(0.01);
+        for &v in &xs {
+            sk.insert(v);
+        }
+        sk.finalize();
+        sk.summary_len()
+    });
+    bench.run_throughput("modified_adaptive", n as u64, || {
+        let mut sk = ModifiedGk::new(0.01);
+        for &v in &xs {
+            sk.insert(v);
+        }
+        sk.finalize();
+        sk.summary_len()
+    });
+    bench.run_throughput("bulk_from_sorted", n as u64, || {
+        let mut copy = xs.clone();
+        gkselect::sort::radix::radix_sort_i32(&mut copy);
+        gkselect::sketch::GkCore::from_sorted(&copy, 0.01).samples.len()
+    });
+    bench.run_throughput("kll_k200", n as u64, || {
+        let mut sk = gkselect::sketch::kll::KllSketch::new(7);
+        for &v in &xs {
+            sk.insert(v);
+        }
+        sk.retained()
+    });
+
+    // driver-side merge: 120 partitions' sketches (30-node shape)
+    let cores: Vec<GkCore> = (0..120)
+        .map(|i| {
+            let mut rng = Pcg64::new(i, 3);
+            let mut sk = ModifiedGk::new(0.01);
+            for _ in 0..20_000 {
+                sk.insert(rng.next_u64() as Key);
+            }
+            sk.into_core()
+        })
+        .collect();
+    let merge_bench = Bench::new("sketch_merge_120p").samples(10);
+    merge_bench.run("foldLeft", || fold_merge(cores.clone()).unwrap().count);
+    merge_bench.run("treeReduce", || tree_merge(cores.clone()).unwrap().count);
+}

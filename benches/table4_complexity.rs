@@ -1,0 +1,40 @@
+//! Table IV — wall-clock growth of each algorithm across a doubling-n
+//! ladder. The fitted scaling exponents are printed by
+//! `repro bench table4` (EXPERIMENTS.md E5).
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, stats, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let cfg = ReproConfig::default();
+    let bench = Bench::new("table4_scaling").samples(5);
+    let ladder = [250_000u64, 500_000, 1_000_000];
+    for choice in [
+        AlgoChoice::GkSelect,
+        AlgoChoice::GkSketch,
+        AlgoChoice::FullSort,
+        AlgoChoice::HistSelect,
+    ] {
+        let mut pts = Vec::new();
+        for &n in &ladder {
+            let mut cluster = make_cluster(&cfg, 10);
+            let data = Distribution::Uniform
+                .generator(cfg.algorithm.seed)
+                .generate(&mut cluster, n);
+            let mut alg = build_algorithm(&cfg, choice).unwrap();
+            let s = bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
+                alg.quantile(&mut cluster, &data, 0.5)
+                    .expect("quantile run")
+                    .value
+            });
+            pts.push((n as f64, s.p50_s));
+        }
+        println!(
+            "bench table4_scaling/{}/wall_slope              {:.3}",
+            choice.label().replace(' ', "_"),
+            stats::loglog_slope(&pts)
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Table V — communication/synchronization counters. The full table is
+//! printed from measured counters by `repro bench table5`
+//! (EXPERIMENTS.md E6); this bench asserts the counter *claims* hold on
+//! every iteration while tracking the query wall cost.
+
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::util::benchkit::Bench;
+
+fn main() {
+    let cfg = ReproConfig::default();
+    let bench = Bench::new("table5_counters").samples(10);
+    let n = 500_000u64;
+    let mut cluster = make_cluster(&cfg, 10);
+    let data = Distribution::Uniform
+        .generator(cfg.algorithm.seed)
+        .generate(&mut cluster, n);
+
+    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+    bench.run("gk_select_counter_invariants", || {
+        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        // Table V row for GK Select: 0 shuffles, ≤3 rounds, 0 persists
+        assert_eq!(out.report.shuffles, 0);
+        assert!(out.report.rounds <= 3);
+        assert_eq!(out.report.persists, 0);
+        out.value
+    });
+
+    let mut alg = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
+    bench.run("full_sort_counter_invariants", || {
+        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        // Table V row for Full Sort: 1 shuffle, 1 round, O(n) volume
+        assert_eq!(out.report.shuffles, 1);
+        assert_eq!(out.report.rounds, 1);
+        out.value
+    });
+
+    let mut alg = build_algorithm(&cfg, AlgoChoice::Afs).unwrap();
+    bench.run("afs_counter_invariants", || {
+        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        // Table V row for AFS: no shuffle, O(log n) rounds + persists
+        assert_eq!(out.report.shuffles, 0);
+        assert!(out.report.rounds >= 3 && out.report.persists >= 1);
+        out.value
+    });
+}

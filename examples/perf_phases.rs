@@ -1,0 +1,39 @@
+//! §Perf phase-level profiler: times GK Select's three phases
+//! (sketch / count / secondPass) separately at n = 1e8 on a modelled
+//! 10-node cluster — the measurement loop behind EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo run --release --example perf_phases
+//! ```
+use gkselect::algorithms::approx_quantile::{build_global_sketch, MergeStrategy, SketchVariant};
+use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::data::{DataGenerator, UniformGen};
+use gkselect::runtime::{KernelBackend, NativeBackend};
+use std::time::Instant;
+fn main() {
+    let mut c = Cluster::new(ClusterConfig::emr(10));
+    let t = Instant::now();
+    let data = UniformGen::new(7).generate(&mut c, 100_000_000);
+    println!("gen: {:?}", t.elapsed());
+    c.reset_run();
+    let t = Instant::now();
+    let sk = build_global_sketch(&mut c, &data, SketchVariant::Modified, MergeStrategy::Fold, 0.01).unwrap();
+    println!("sketch wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs());
+    let pivot = sk.query_quantile(0.5).unwrap();
+    let m0 = c.elapsed_secs();
+    let t = Instant::now();
+    let mut be = NativeBackend::new();
+    let pending = c.map_partitions(&data, |p, _| { let x = be.count_pivot(p, pivot); (x.lt, x.eq, x.gt) });
+    let _ = c.reduce(pending, |a, b| (a.0+b.0, a.1+b.1, a.2+b.2));
+    println!("count wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs() - m0);
+    let m1 = c.elapsed_secs();
+    let t = Instant::now();
+    let slices = c.map_partitions(&data, |p, ctx| gkselect_secondpass_probe(p, pivot, 500_000, ctx.partition as u64));
+    let _ = c.tree_reduce(slices, None, |a, b| { let mut a = a; a.extend_from_slice(&b); if a.len() > 500_000 { a.select_nth_unstable(499_999); a.truncate(500_000);} a });
+    println!("secondpass wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs() - m1);
+}
+fn gkselect_secondpass_probe(part: &[i32], pivot: i32, m: usize, _s: u64) -> Vec<i32> {
+    let mut side: Vec<i32> = part.iter().copied().filter(|&v| v > pivot).collect();
+    if m < side.len() { side.select_nth_unstable(m - 1); side.truncate(m); }
+    side
+}

@@ -1,0 +1,27 @@
+//! §Perf sketch-variant probe: insert throughput of ModifiedGk across
+//! α values and SparkGk, on 1e7 random keys — the L3.3 sweep.
+//!
+//! ```bash
+//! cargo run --release --example perf_sketch_sweep
+//! ```
+use gkselect::data::pcg::Pcg64;
+use gkselect::sketch::modified::ModifiedGk;
+use gkselect::sketch::spark::SparkGk;
+use gkselect::sketch::QuantileSketch;
+use std::time::Instant;
+fn main() {
+    let mut rng = Pcg64::new(1, 1);
+    let xs: Vec<i32> = (0..10_000_000).map(|_| rng.next_u64() as i32).collect();
+    for alpha in [2.0, 4.0, 8.0, 16.0, 32.0] {
+        let t = Instant::now();
+        let mut sk = ModifiedGk::with_alpha(0.01, alpha);
+        for &v in &xs { sk.insert(v); }
+        sk.finalize();
+        println!("modified a={alpha:>4}: {:?} ({:.1} ns/key, |S|={}, B={})", t.elapsed(), t.elapsed().as_nanos() as f64 / xs.len() as f64, sk.summary_len(), sk.head_capacity());
+    }
+    let t = Instant::now();
+    let mut sk = SparkGk::new(0.01);
+    for &v in &xs { sk.insert(v); }
+    sk.finalize();
+    println!("spark B=50k  : {:?} ({:.1} ns/key, |S|={})", t.elapsed(), t.elapsed().as_nanos() as f64 / xs.len() as f64, sk.summary_len());
+}

@@ -1,0 +1,43 @@
+//! Quickstart: exact median of 10M uniform keys on a simulated 10-node
+//! cluster, verified against a full-sort oracle and compared with the
+//! approximate GK sketch.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gkselect::algorithms::oracle_quantile;
+use gkselect::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // A 10-node EMR-like cluster: 40 partitions, 10 Gbit fabric model.
+    let mut cluster = Cluster::new(ClusterConfig::emr(10));
+
+    println!("generating 10M uniform keys across 40 partitions...");
+    let data = UniformGen::new(42).generate(&mut cluster, 10_000_000);
+
+    // Exact quantile in 3 rounds.
+    let mut gk = GkSelect::new(GkSelectParams::default());
+    let exact = gk.quantile(&mut cluster, &data, 0.5)?;
+    println!(
+        "GK Select : median = {:>12}  rounds = {}  modelled = {:.3}s  net = {}",
+        exact.value,
+        exact.report.rounds,
+        exact.report.elapsed_secs,
+        gkselect::cluster::metrics::human_bytes(exact.report.network_volume_bytes),
+    );
+
+    // The approximate baseline for comparison.
+    let mut sketch = ApproxQuantile::new(ApproxQuantileParams::default());
+    let approx = sketch.quantile(&mut cluster, &data, 0.5)?;
+    println!(
+        "GK Sketch : median ≈ {:>12}  rounds = {}  modelled = {:.3}s",
+        approx.value, approx.report.rounds, approx.report.elapsed_secs,
+    );
+
+    // Verify exactness.
+    let truth = oracle_quantile(&data, 0.5).expect("nonempty");
+    assert_eq!(exact.value, truth, "GK Select must equal the oracle");
+    println!("verified: GK Select matches the full-sort oracle ({truth})");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""Build-time compile path: L2 jax model + L1 Pallas kernels -> HLO text.
+
+Nothing in this package runs at L3 request time; `make artifacts` invokes
+`python -m compile.aot` once and the rust coordinator loads the emitted
+`artifacts/*.hlo.txt` through PJRT.
+"""
+
+import jax
+
+# Counts are int64 (n reaches 1e9 and sums cross partitions); without x64
+# jax silently downcasts jnp.int64 literals to int32 and Pallas ref stores
+# then fail on dtype mismatch.
+jax.config.update("jax_enable_x64", True)

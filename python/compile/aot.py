@@ -1,0 +1,77 @@
+"""AOT-lower the L2 pipeline to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Emits one `<kind>.hlo.txt` per artifact in model.ARTIFACTS plus a
+`manifest.json` describing buffer geometry so the rust side never has to
+guess shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(kind: str) -> str:
+    fn = model.ARTIFACTS[kind]()
+    args = model.example_args(kind)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact kinds to emit"
+    )
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    kinds = ns.only or list(model.ARTIFACTS)
+
+    manifest = {
+        "buf_len": model.BUF_LEN,
+        "chunk": model.CHUNK,
+        "hist_chunk": model.HIST_CHUNK,
+        "nbins": model.NBINS,
+        "dtype": "i32",
+        "artifacts": {},
+    }
+
+    for kind in kinds:
+        text = lower_artifact(kind)
+        path = os.path.join(ns.out_dir, f"{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][kind] = {
+            "file": f"{kind}.hlo.txt",
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(ns.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for the gkselect pivot pass.
+
+Every kernel is a streaming reduction over a fixed-size buffer of keys:
+the buffer is tiled into CHUNK-sized blocks via BlockSpec (the HBM->VMEM
+schedule), the grid walks the blocks, and a small accumulator is carried
+across grid steps. A `valid` scalar masks the padded tail so one lowered
+artifact serves any partition length.
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is what we validate here; TPU perf is
+estimated from VMEM footprint in DESIGN.md §Perf.
+"""
+
+from .count_pivot import build_count_pivot, count_pivot_kernel
+from .band_count import build_band_count, band_count_kernel
+from .histogram import build_histogram, histogram_kernel
+from .minmax import build_minmax, minmax_kernel
+
+__all__ = [
+    "build_count_pivot",
+    "count_pivot_kernel",
+    "build_band_count",
+    "band_count_kernel",
+    "build_histogram",
+    "histogram_kernel",
+    "build_minmax",
+    "minmax_kernel",
+]

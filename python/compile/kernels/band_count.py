@@ -1,0 +1,68 @@
+"""Band count kernel: rank-window statistics around a pivot interval.
+
+Counts, over the valid prefix of the buffer,
+    out[0] = |{x <  lo}|
+    out[1] = |{lo <= x <= hi}|   (the candidate band)
+    out[2] = |{x >  hi}|
+
+Used by the histogram-select extension (DESIGN.md S14) to decide which
+value band still contains the target rank, and by the epsilon-ablation to
+measure candidate-band volume without materialising candidates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def band_count_kernel(x_ref, lo_ref, hi_ref, valid_ref, out_ref, *, chunk):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros((3,), jnp.int64)
+
+    x = x_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+
+    # §Perf L1.1: int32 tile mask + arithmetic third count (see
+    # count_pivot.py)
+    remaining = valid_ref[0].astype(jnp.int32) - step.astype(jnp.int32) * chunk
+    live = jnp.clip(remaining, 0, chunk)
+    idx = jax.lax.iota(jnp.int32, chunk)
+    mask = idx < live
+
+    below = jnp.sum(jnp.where(mask & (x < lo), 1, 0).astype(jnp.int32))
+    band = jnp.sum(jnp.where(mask & (x >= lo) & (x <= hi), 1, 0).astype(jnp.int32))
+    above = live - below - band
+
+    out_ref[...] += jnp.stack([below, band, above]).astype(jnp.int64)
+
+
+def build_band_count(buf_len, chunk, dtype=jnp.int32):
+    """Return fn(x[buf_len], lo[1], hi[1], valid[1]) -> counts[3]."""
+    if buf_len % chunk != 0:
+        raise ValueError(f"buf_len {buf_len} not a multiple of chunk {chunk}")
+    grid = buf_len // chunk
+
+    kernel = functools.partial(band_count_kernel, chunk=chunk)
+
+    def fn(x, lo, hi, valid):
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((3,), jnp.int64),
+            interpret=True,
+        )(x.astype(dtype), lo.astype(dtype), hi.astype(dtype), valid.astype(jnp.int64))
+
+    return fn

@@ -1,0 +1,71 @@
+"""Equi-width histogram kernel over a value range [lo, lo + nbins*width).
+
+Per grid step, the CHUNK tile is bucketed with 64-bit arithmetic (the value
+span can exceed i32 range: hi - lo up to 2e9) and accumulated into the
+(nbins,) histogram via a one-hot comparison matrix — the VPU-friendly
+formulation of scatter-add (Pallas has no atomic scatter on TPU; a
+CHUNK x NBINS compare+reduce keeps everything dense in VMEM).
+
+Values outside the range are clamped into the first/last bin; padding
+beyond `valid` is dropped. Used by the histogram-select extension to narrow
+the candidate value band in O(1) rounds per refinement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def histogram_kernel(x_ref, lo_ref, width_ref, valid_ref, out_ref, *, chunk, nbins):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros((nbins,), jnp.int64)
+
+    x = x_ref[...].astype(jnp.int64)
+    lo = lo_ref[0].astype(jnp.int64)
+    width = width_ref[0].astype(jnp.int64)
+    valid = valid_ref[0]
+
+    idx = step * chunk + jax.lax.iota(jnp.int64, chunk)
+    mask = idx < valid
+
+    bins = jnp.clip((x - lo) // width, 0, nbins - 1)
+    # one-hot accumulate: (chunk, nbins) bool -> column sums
+    onehot = bins[:, None] == jax.lax.iota(jnp.int64, nbins)[None, :]
+    contrib = jnp.where(onehot & mask[:, None], 1, 0).astype(jnp.int64)
+    out_ref[...] += jnp.sum(contrib, axis=0)
+
+
+def build_histogram(buf_len, chunk, nbins, dtype=jnp.int32):
+    """Return fn(x[buf_len], lo[1], width[1], valid[1]) -> hist[nbins]."""
+    if buf_len % chunk != 0:
+        raise ValueError(f"buf_len {buf_len} not a multiple of chunk {chunk}")
+    grid = buf_len // chunk
+
+    kernel = functools.partial(histogram_kernel, chunk=chunk, nbins=nbins)
+
+    def fn(x, lo, width, valid):
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int64),
+            interpret=True,
+        )(
+            x.astype(dtype),
+            lo.astype(jnp.int64),
+            width.astype(jnp.int64),
+            valid.astype(jnp.int64),
+        )
+
+    return fn

@@ -1,0 +1,65 @@
+"""Min/max reduction kernel over the valid prefix of the buffer.
+
+Seeds the histogram-select value range and the data-validation pass. The
+padded tail is neutralised by substituting the dtype's extremes before the
+tile reduction; the (2,) accumulator [min, max] is carried across steps.
+
+If `valid == 0` the result is [dtype_max, dtype_min] — the caller treats
+that sentinel pair as "empty partition".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def minmax_kernel(x_ref, valid_ref, out_ref, *, chunk, dtype):
+    step = pl.program_id(0)
+    info = jnp.iinfo(dtype) if jnp.issubdtype(dtype, jnp.integer) else jnp.finfo(dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        # scalar stores: a captured i32[2] array constant is rejected by
+        # the Pallas tracer ("captures constants ... pass them as inputs")
+        out_ref[0] = jnp.array(info.max, dtype)
+        out_ref[1] = jnp.array(info.min, dtype)
+
+    x = x_ref[...]
+
+    # §Perf L1.1: int32 tile mask (see count_pivot.py)
+    remaining = valid_ref[0].astype(jnp.int32) - step.astype(jnp.int32) * chunk
+    live = jnp.clip(remaining, 0, chunk)
+    idx = jax.lax.iota(jnp.int32, chunk)
+    mask = idx < live
+
+    tile_min = jnp.min(jnp.where(mask, x, info.max))
+    tile_max = jnp.max(jnp.where(mask, x, info.min))
+
+    out_ref[0] = jnp.minimum(out_ref[0], tile_min)
+    out_ref[1] = jnp.maximum(out_ref[1], tile_max)
+
+
+def build_minmax(buf_len, chunk, dtype=jnp.int32):
+    """Return fn(x[buf_len], valid[1]) -> [min, max] (dtype)."""
+    if buf_len % chunk != 0:
+        raise ValueError(f"buf_len {buf_len} not a multiple of chunk {chunk}")
+    grid = buf_len // chunk
+
+    kernel = functools.partial(minmax_kernel, chunk=chunk, dtype=dtype)
+
+    def fn(x, valid):
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((2,), dtype),
+            interpret=True,
+        )(x.astype(dtype), valid.astype(jnp.int64))
+
+    return fn

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+Each `ref_*` function computes the same quantity as its Pallas counterpart
+using plain jax.numpy over the full (unpadded) valid prefix. pytest asserts
+bit-exact equality (all outputs are integer counts or exact extremes, so
+allclose degenerates to equality).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_count_pivot(x, pivot, valid):
+    """[|{x<pivot}|, |{x==pivot}|, |{x>pivot}|] over x[:valid]."""
+    v = x[: int(valid)]
+    return jnp.array(
+        [
+            jnp.sum(v < pivot),
+            jnp.sum(v == pivot),
+            jnp.sum(v > pivot),
+        ],
+        jnp.int64,
+    )
+
+
+def ref_band_count(x, lo, hi, valid):
+    """[|{x<lo}|, |{lo<=x<=hi}|, |{x>hi}|] over x[:valid]."""
+    v = x[: int(valid)]
+    return jnp.array(
+        [
+            jnp.sum(v < lo),
+            jnp.sum((v >= lo) & (v <= hi)),
+            jnp.sum(v > hi),
+        ],
+        jnp.int64,
+    )
+
+
+def ref_histogram(x, lo, width, nbins, valid):
+    """Equi-width histogram with clamped out-of-range values."""
+    v = x[: int(valid)].astype(jnp.int64)
+    bins = jnp.clip((v - jnp.int64(lo)) // jnp.int64(width), 0, nbins - 1)
+    return jnp.zeros((nbins,), jnp.int64).at[bins].add(1)
+
+
+def ref_minmax(x, valid, dtype=jnp.int32):
+    """[min, max] over x[:valid]; [dtype.max, dtype.min] when empty."""
+    v = x[: int(valid)]
+    info = jnp.iinfo(dtype) if jnp.issubdtype(dtype, jnp.integer) else jnp.finfo(dtype)
+    if v.size == 0:
+        return jnp.array([info.max, info.min], dtype)
+    return jnp.array([jnp.min(v), jnp.max(v)], dtype)

@@ -1,0 +1,120 @@
+"""L2: the jax pivot-pass pipeline lowered to the AOT artifacts.
+
+The rust coordinator's executor hot loop is a handful of streaming
+reductions over partition buffers. Each public `make_*` function here
+returns a jitted jax callable whose *whole body* is the corresponding L1
+Pallas kernel (plus any fusion-friendly post-processing), so the lowered
+HLO is exactly the executor-side compute the paper describes:
+
+  - pivot pass      (GK Select step 4, AFS/Jeffers local count)
+  - band pass       (candidate-band volume, epsilon ablation)
+  - histogram pass  (histogram-select range refinement)
+  - minmax pass     (range seeding / data validation)
+  - fused pivot+band pass (one read of the buffer feeding both reductions;
+    the L2-level fusion the perf pass compares against two separate passes)
+
+Buffer geometry is fixed at lowering time (HLO has static shapes); the rust
+wrapper streams a partition through the executable BUF_LEN keys at a time
+and passes the live length in `valid`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    build_band_count,
+    build_count_pivot,
+    build_histogram,
+    build_minmax,
+)
+
+# Geometry shared with the rust runtime via artifacts/manifest.json.
+BUF_LEN = 1 << 17  # keys per executable call
+CHUNK = 1 << 14  # keys per VMEM tile (grid = BUF_LEN / CHUNK = 8)
+NBINS = 128
+HIST_CHUNK = 1 << 12  # smaller tile: the one-hot matrix is CHUNK x NBINS
+
+DTYPE = jnp.int32
+
+
+def make_count_pivot(buf_len=BUF_LEN, chunk=CHUNK):
+    """fn(x[buf_len] i32, pivot[1] i32, valid[1] i64) -> i64[3] (lt, eq, gt)."""
+    inner = build_count_pivot(buf_len, chunk, DTYPE)
+
+    def fn(x, pivot, valid):
+        return (inner(x, pivot, valid),)
+
+    return fn
+
+
+def make_band_count(buf_len=BUF_LEN, chunk=CHUNK):
+    """fn(x, lo, hi, valid) -> i64[3] (below, band, above)."""
+    inner = build_band_count(buf_len, chunk, DTYPE)
+
+    def fn(x, lo, hi, valid):
+        return (inner(x, lo, hi, valid),)
+
+    return fn
+
+
+def make_histogram(buf_len=BUF_LEN, chunk=HIST_CHUNK, nbins=NBINS):
+    """fn(x, lo, width, valid) -> i64[nbins]."""
+    inner = build_histogram(buf_len, chunk, nbins, DTYPE)
+
+    def fn(x, lo, width, valid):
+        return (inner(x, lo, width, valid),)
+
+    return fn
+
+
+def make_minmax(buf_len=BUF_LEN, chunk=CHUNK):
+    """fn(x, valid) -> i32[2] (min, max)."""
+    inner = build_minmax(buf_len, chunk, DTYPE)
+
+    def fn(x, valid):
+        return (inner(x, valid),)
+
+    return fn
+
+
+def make_pivot_band(buf_len=BUF_LEN, chunk=CHUNK):
+    """Fused pass: one buffer read feeding the pivot AND band reductions.
+
+    Returns (counts[3], band[3]) in a single executable so the rust hot
+    path pays one PJRT dispatch instead of two when both are needed
+    (GK Select step 4 + ablation instrumentation).
+    """
+    count = build_count_pivot(buf_len, chunk, DTYPE)
+    band = build_band_count(buf_len, chunk, DTYPE)
+
+    def fn(x, pivot, lo, hi, valid):
+        return (count(x, pivot, valid), band(x, lo, hi, valid))
+
+    return fn
+
+
+def example_args(kind):
+    """ShapeDtypeStructs for jax.jit(...).lower(...) per artifact kind."""
+    x = jax.ShapeDtypeStruct((BUF_LEN,), DTYPE)
+    s32 = jax.ShapeDtypeStruct((1,), DTYPE)
+    s64 = jax.ShapeDtypeStruct((1,), jnp.int64)
+    if kind == "count_pivot":
+        return (x, s32, s64)
+    if kind == "band_count":
+        return (x, s32, s32, s64)
+    if kind == "histogram":
+        return (x, s64, s64, s64)
+    if kind == "minmax":
+        return (x, s64)
+    if kind == "pivot_band":
+        return (x, s32, s32, s32, s64)
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+ARTIFACTS = {
+    "count_pivot": make_count_pivot,
+    "band_count": make_band_count,
+    "histogram": make_histogram,
+    "minmax": make_minmax,
+    "pivot_band": make_pivot_band,
+}

@@ -1,0 +1,207 @@
+"""L1 kernel vs pure-jnp oracle — the core build-time correctness signal.
+
+Hypothesis sweeps buffer geometry (buf_len, chunk), dtypes, valid-prefix
+lengths (including 0 and full), and adversarial value placement (pivot
+present/absent, duplicates, extremes). All kernel outputs are integer
+counts or exact extremes, so comparisons are exact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    build_band_count,
+    build_count_pivot,
+    build_histogram,
+    build_minmax,
+)
+from compile.kernels.ref import (
+    ref_band_count,
+    ref_count_pivot,
+    ref_histogram,
+    ref_minmax,
+)
+
+I32 = np.iinfo(np.int32)
+
+# (buf_len, chunk) geometries: single-tile, multi-tile, non-power-of-two grid
+GEOMETRIES = [(64, 64), (128, 32), (192, 64), (1024, 256)]
+
+DTYPES = [jnp.int32, jnp.float32]
+
+
+def pad_to(x, buf_len, fill):
+    out = np.full((buf_len,), fill, dtype=x.dtype)
+    out[: len(x)] = x
+    return out
+
+
+@st.composite
+def data_and_pivot(draw, buf_len):
+    n = draw(st.integers(min_value=0, max_value=buf_len))
+    values = draw(
+        st.lists(
+            st.integers(min_value=-(10**9), max_value=10**9 - 1),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    # pivot: either drawn from the data (forcing eq hits) or arbitrary
+    if values and draw(st.booleans()):
+        pivot = draw(st.sampled_from(values))
+    else:
+        pivot = draw(st.integers(min_value=-(10**9), max_value=10**9 - 1))
+    return np.array(values, dtype=np.int64), pivot, n
+
+
+class TestCountPivot:
+    @pytest.mark.parametrize("buf_len,chunk", GEOMETRIES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @settings(max_examples=25, deadline=None)
+    @given(dp=data_and_pivot(64))
+    def test_matches_ref(self, buf_len, chunk, dtype, dp):
+        values, pivot, n = dp
+        fn = build_count_pivot(buf_len, chunk, dtype)
+        x = pad_to(values.astype(np.int32), buf_len, I32.max)
+        got = fn(
+            jnp.asarray(x),
+            jnp.asarray([pivot], jnp.int32),
+            jnp.asarray([n], jnp.int64),
+        )
+        want = ref_count_pivot(
+            jnp.asarray(x).astype(dtype), jnp.asarray(pivot, dtype), n
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(np.asarray(got).sum()) == n  # partition of the valid prefix
+
+    def test_empty_prefix(self):
+        fn = build_count_pivot(64, 32)
+        got = fn(
+            jnp.zeros(64, jnp.int32),
+            jnp.asarray([5], jnp.int32),
+            jnp.asarray([0], jnp.int64),
+        )
+        np.testing.assert_array_equal(np.asarray(got), [0, 0, 0])
+
+    def test_all_equal(self):
+        fn = build_count_pivot(128, 32)
+        x = np.full(128, 7, np.int32)
+        got = fn(jnp.asarray(x), jnp.asarray([7], jnp.int32), jnp.asarray([100], jnp.int64))
+        np.testing.assert_array_equal(np.asarray(got), [0, 100, 0])
+
+    def test_extremes(self):
+        fn = build_count_pivot(64, 64)
+        x = np.array([I32.min, I32.max] * 16, np.int32)
+        x = pad_to(x, 64, 0)
+        got = fn(jnp.asarray(x), jnp.asarray([0], jnp.int32), jnp.asarray([32], jnp.int64))
+        np.testing.assert_array_equal(np.asarray(got), [16, 0, 16])
+
+    def test_bad_geometry_raises(self):
+        with pytest.raises(ValueError):
+            build_count_pivot(100, 64)
+
+
+class TestBandCount:
+    @pytest.mark.parametrize("buf_len,chunk", GEOMETRIES)
+    @settings(max_examples=25, deadline=None)
+    @given(dp=data_and_pivot(64), span=st.integers(0, 10**8))
+    def test_matches_ref(self, buf_len, chunk, dp, span):
+        values, lo, n = dp
+        hi = min(lo + span, 10**9 - 1)
+        fn = build_band_count(buf_len, chunk)
+        x = pad_to(values.astype(np.int32), buf_len, I32.max)
+        got = fn(
+            jnp.asarray(x),
+            jnp.asarray([lo], jnp.int32),
+            jnp.asarray([hi], jnp.int32),
+            jnp.asarray([n], jnp.int64),
+        )
+        want = ref_band_count(jnp.asarray(x), lo, hi, n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(np.asarray(got).sum()) == n
+
+    def test_inverted_band_is_empty(self):
+        fn = build_band_count(64, 32)
+        x = np.arange(64, dtype=np.int32)
+        got = fn(
+            jnp.asarray(x),
+            jnp.asarray([50], jnp.int32),
+            jnp.asarray([10], jnp.int32),
+            jnp.asarray([64], jnp.int64),
+        )
+        assert int(np.asarray(got)[1]) == 0
+
+
+class TestHistogram:
+    @pytest.mark.parametrize("buf_len,chunk", [(64, 32), (256, 64)])
+    @pytest.mark.parametrize("nbins", [4, 16, 128])
+    @settings(max_examples=20, deadline=None)
+    @given(dp=data_and_pivot(64))
+    def test_matches_ref(self, buf_len, chunk, nbins, dp):
+        values, _, n = dp
+        lo, width = -(10**9), (2 * 10**9) // nbins + 1
+        fn = build_histogram(buf_len, chunk, nbins)
+        x = pad_to(values.astype(np.int32), buf_len, 0)
+        got = fn(
+            jnp.asarray(x),
+            jnp.asarray([lo], jnp.int64),
+            jnp.asarray([width], jnp.int64),
+            jnp.asarray([n], jnp.int64),
+        )
+        want = ref_histogram(jnp.asarray(x), lo, width, nbins, n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(np.asarray(got).sum()) == n
+
+    def test_out_of_range_clamps(self):
+        fn = build_histogram(64, 32, 8)
+        x = pad_to(np.array([-100, 100], np.int32), 64, 0)
+        # range [0, 8*4) => -100 clamps to bin 0, 100 clamps to bin 7
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([0], jnp.int64),
+                jnp.asarray([4], jnp.int64),
+                jnp.asarray([2], jnp.int64),
+            )
+        )
+        assert got[0] == 1 and got[7] == 1 and got.sum() == 2
+
+    def test_total_mass_preserved(self):
+        fn = build_histogram(256, 64, 16)
+        rng = np.random.default_rng(0)
+        x = rng.integers(I32.min, I32.max, 256).astype(np.int32)
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([I32.min], jnp.int64),
+                jnp.asarray([(2**32) // 16 + 1], jnp.int64),
+                jnp.asarray([200], jnp.int64),
+            )
+        )
+        assert got.sum() == 200
+
+
+class TestMinMax:
+    @pytest.mark.parametrize("buf_len,chunk", GEOMETRIES)
+    @settings(max_examples=25, deadline=None)
+    @given(dp=data_and_pivot(64))
+    def test_matches_ref(self, buf_len, chunk, dp):
+        values, _, n = dp
+        fn = build_minmax(buf_len, chunk)
+        x = pad_to(values.astype(np.int32), buf_len, 0)
+        got = fn(jnp.asarray(x), jnp.asarray([n], jnp.int64))
+        want = ref_minmax(jnp.asarray(x), n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_empty_sentinel(self):
+        fn = build_minmax(64, 32)
+        got = np.asarray(fn(jnp.zeros(64, jnp.int32), jnp.asarray([0], jnp.int64)))
+        assert got[0] == I32.max and got[1] == I32.min
+
+    def test_singleton(self):
+        fn = build_minmax(64, 32)
+        x = pad_to(np.array([-42], np.int32), 64, 99)
+        got = np.asarray(fn(jnp.asarray(x), jnp.asarray([1], jnp.int64)))
+        assert got[0] == -42 and got[1] == -42

@@ -1,0 +1,69 @@
+//! Al-Furaih Select for Spark (§IV-B): "serial pivot, parallel count"
+//! with per-round `treeReduce` of counts + candidate pivots.
+
+use super::count_discard::{AggMode, CountDiscardParams, CountDiscardSelect};
+use super::{Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::Key;
+use anyhow::Result;
+
+/// AFS parameters (count-discard knobs).
+pub type AfsParams = CountDiscardParams;
+
+/// Al-Furaih Select: `O(log n)` rounds, each ending in a treeReduce.
+pub struct Afs {
+    inner: CountDiscardSelect,
+}
+
+impl Afs {
+    pub fn new(params: AfsParams) -> Self {
+        Self {
+            inner: CountDiscardSelect::new("AFS", AggMode::TreeReduce, params),
+        }
+    }
+}
+
+impl QuantileAlgorithm for Afs {
+    fn name(&self) -> &'static str {
+        "AFS"
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        self.inner.quantile(cluster, data, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    #[test]
+    fn afs_is_exact_and_labeled() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Bimodal.generator(2).generate(&mut c, 20_000);
+        let truth = oracle_quantile(&data, 0.25).unwrap();
+        let mut alg = Afs::new(AfsParams::default());
+        let out = alg.quantile(&mut c, &data, 0.25).unwrap();
+        assert_eq!(out.value, truth);
+        assert_eq!(out.report.algorithm, "AFS");
+        assert!(out.report.exact);
+    }
+
+    #[test]
+    fn afs_uses_tree_reduce_traffic() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Uniform.generator(3).generate(&mut c, 50_000);
+        let mut alg = Afs::new(AfsParams::default());
+        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        // per-round messages are tiny: total volume must stay well below data size
+        assert!(out.report.network_volume_bytes < 50_000);
+    }
+}

@@ -1,0 +1,256 @@
+//! `approxQuantile` — the GK Sketch path (§IV-D): per-partition sketches,
+//! driver-side merge, one round, approximate answer.
+//!
+//! This is both the paper's approximate baseline and GK Select's Round 1
+//! (the pivot source), so the sketch-building helpers live here and are
+//! shared.
+
+use super::{make_report, Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::sketch::classical::ClassicalGk;
+use crate::sketch::modified::{fold_merge, tree_merge, ModifiedGk};
+use crate::sketch::spark::SparkGk;
+use crate::sketch::{GkCore, QuantileSketch};
+use crate::Key;
+use anyhow::{ensure, Result};
+
+/// Which GK implementation executors run (§IV-D/E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchVariant {
+    /// Per-insert Greenwald–Khanna.
+    Classical,
+    /// Spark 3.5.5 head-buffered (B = 50 000).
+    Spark,
+    /// The paper's mSGK (adaptive buffer).
+    Modified,
+    /// Bulk construction from a radix-sorted partition copy (§IV-D's
+    /// "all the data ahead of time" construction; §Perf L3.4). Valid
+    /// whenever the executor owns the partition — which GK Select's own
+    /// `secondPass` already assumes.
+    Bulk,
+}
+
+impl std::str::FromStr for SketchVariant {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "classical" => Ok(Self::Classical),
+            "spark" => Ok(Self::Spark),
+            "modified" => Ok(Self::Modified),
+            "bulk" => Ok(Self::Bulk),
+            other => anyhow::bail!("unknown sketch variant '{other}' (classical|spark|modified|bulk)"),
+        }
+    }
+}
+
+/// Driver-side merge strategy (§IV-E2 vs §IV-E3 change 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeStrategy {
+    /// Spark's sequential `foldLeft`.
+    Fold,
+    /// Recursive pairwise tree (mSGK).
+    Tree,
+}
+
+impl std::str::FromStr for MergeStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fold" => Ok(Self::Fold),
+            "tree" => Ok(Self::Tree),
+            other => anyhow::bail!("unknown merge strategy '{other}'"),
+        }
+    }
+}
+
+/// Build one partition's sketch and surrender its summary.
+pub fn sketch_partition(variant: SketchVariant, epsilon: f64, part: &[Key]) -> GkCore {
+    match variant {
+        SketchVariant::Classical => {
+            let mut sk = ClassicalGk::new(epsilon);
+            for &v in part {
+                sk.insert(v);
+            }
+            sk.finalize();
+            sk.into_core()
+        }
+        SketchVariant::Spark => {
+            let mut sk = SparkGk::new(epsilon);
+            for &v in part {
+                sk.insert(v);
+            }
+            sk.finalize();
+            sk.into_core()
+        }
+        SketchVariant::Modified => {
+            let mut sk = ModifiedGk::new(epsilon);
+            for &v in part {
+                sk.insert(v);
+            }
+            sk.finalize();
+            sk.into_core()
+        }
+        SketchVariant::Bulk => {
+            let mut copy = part.to_vec();
+            crate::sort::radix::radix_sort_i32(&mut copy);
+            GkCore::from_sorted(&copy, epsilon)
+        }
+    }
+}
+
+/// Shared Round-1 body: executor sketches → collect → driver merge →
+/// global sketch. Charges exactly one round.
+pub fn build_global_sketch(
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    variant: SketchVariant,
+    merge: MergeStrategy,
+    epsilon: f64,
+) -> Result<GkCore> {
+    let pending = cluster.map_partitions(data, |part, _| sketch_partition(variant, epsilon, part));
+    let cores = cluster.collect(pending);
+    let merged = cluster.driver(|| match merge {
+        MergeStrategy::Fold => fold_merge(cores),
+        MergeStrategy::Tree => tree_merge(cores),
+    });
+    merged.ok_or_else(|| anyhow::anyhow!("no partitions to sketch"))
+}
+
+/// Parameters for the approximate baseline.
+#[derive(Debug, Clone)]
+pub struct ApproxQuantileParams {
+    pub epsilon: f64,
+    pub variant: SketchVariant,
+    pub merge: MergeStrategy,
+}
+
+impl Default for ApproxQuantileParams {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.01,
+            variant: SketchVariant::Spark,
+            merge: MergeStrategy::Fold,
+        }
+    }
+}
+
+/// Spark's `approxQuantile` equivalent.
+#[derive(Debug, Clone)]
+pub struct ApproxQuantile {
+    pub params: ApproxQuantileParams,
+}
+
+impl ApproxQuantile {
+    pub fn new(params: ApproxQuantileParams) -> Self {
+        Self { params }
+    }
+}
+
+impl QuantileAlgorithm for ApproxQuantile {
+    fn name(&self) -> &'static str {
+        "GK Sketch"
+    }
+
+    fn exact(&self) -> bool {
+        false
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        cluster.reset_run();
+        let sketch = build_global_sketch(
+            cluster,
+            data,
+            self.params.variant,
+            self.params.merge,
+            self.params.epsilon,
+        )?;
+        let value = cluster.driver(|| sketch.query_quantile(q));
+        let value = value.ok_or_else(|| anyhow::anyhow!("empty sketch"))?;
+        Ok(make_report(self.name(), false, cluster, data.len(), value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    fn run(variant: SketchVariant, merge: MergeStrategy, n: u64, q: f64) -> (Outcome, Key, u64) {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Uniform.generator(21).generate(&mut c, n);
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = ApproxQuantile::new(ApproxQuantileParams {
+            epsilon: 0.01,
+            variant,
+            merge,
+        });
+        let out = alg.quantile(&mut c, &data, q).unwrap();
+        (out, truth, n)
+    }
+
+    fn assert_rank_close(data_q: f64, n: u64, got: Key, seed: u64, tol: f64) {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Uniform.generator(seed).generate(&mut c, n);
+        let mut all = data.to_vec();
+        all.sort_unstable();
+        let rank = all.partition_point(|&x| x < got) as f64;
+        let target = data_q * n as f64;
+        assert!(
+            (rank - target).abs() <= tol * n as f64 + 2.0,
+            "rank {rank} vs target {target} beyond {tol}·n"
+        );
+    }
+
+    #[test]
+    fn one_round_one_stage_boundary() {
+        let (out, _, _) = run(SketchVariant::Spark, MergeStrategy::Fold, 50_000, 0.5);
+        assert_eq!(out.report.rounds, 1);
+        assert_eq!(out.report.stage_boundaries, 1);
+        assert_eq!(out.report.shuffles, 0);
+        assert!(!out.report.exact);
+    }
+
+    #[test]
+    fn spark_fold_error_within_bound() {
+        let (out, _, n) = run(SketchVariant::Spark, MergeStrategy::Fold, 80_000, 0.5);
+        // pairwise merges widen the practical band; 8 partitions ⇒ stay
+        // within a few epsilon
+        assert_rank_close(0.5, n, out.value, 21, 0.04);
+    }
+
+    #[test]
+    fn all_variants_agree_roughly() {
+        for variant in [
+            SketchVariant::Classical,
+            SketchVariant::Spark,
+            SketchVariant::Modified,
+        ] {
+            let (out, _, n) = run(variant, MergeStrategy::Tree, 60_000, 0.9);
+            assert_rank_close(0.9, n, out.value, 21, 0.05);
+        }
+    }
+
+    #[test]
+    fn network_volume_is_sketch_sized_not_data_sized() {
+        let (out, _, n) = run(SketchVariant::Modified, MergeStrategy::Fold, 100_000, 0.5);
+        let data_bytes = n * 4;
+        assert!(
+            out.report.network_volume_bytes < data_bytes / 10,
+            "sketch path moved {} of {} data bytes",
+            out.report.network_volume_bytes,
+            data_bytes
+        );
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let mut c = Cluster::new(ClusterConfig::local(1, 1));
+        let data = Dataset::from_partitions(vec![vec![]]);
+        let mut alg = ApproxQuantile::new(ApproxQuantileParams::default());
+        assert!(alg.quantile(&mut c, &data, 0.5).is_err());
+    }
+}

@@ -1,0 +1,351 @@
+//! Count-and-discard distributed selection — the shared engine behind
+//! AFS (§IV-B) and Jeffers Select (§IV-C).
+//!
+//! Per round: broadcast pivot → local Dutch partition + count + candidate
+//! pivots from both sides → aggregate (treeReduce for AFS, collect for
+//! Jeffers) → driver picks the side containing the target rank, discards
+//! the other, and broadcasts the next pivot, which the executors supplied
+//! from the *correct* side (the paper's trick that halves the number of
+//! aggregations per pivot update).
+//!
+//! Because datasets are immutable, each round materializes the retained
+//! side as a new persisted dataset — the `O(log n)` persists in Table V.
+
+use super::{make_report, Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::netmodel::NetSize;
+use crate::cluster::Cluster;
+use crate::select::{dutch_partition, SplitMix64};
+use crate::{target_rank, Key};
+use anyhow::{bail, ensure, Result};
+
+/// How per-round stats reach the driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggMode {
+    /// log-depth treeReduce (AFS).
+    TreeReduce,
+    /// direct executor→driver collect (Jeffers).
+    Collect,
+}
+
+/// Tuning knobs shared by both variants.
+#[derive(Debug, Clone)]
+pub struct CountDiscardParams {
+    pub seed: u64,
+    /// Safety valve on the `O(log n)` expected rounds.
+    pub max_rounds: u64,
+    /// treeReduce depth override (AFS only).
+    pub tree_depth: Option<usize>,
+}
+
+impl Default for CountDiscardParams {
+    fn default() -> Self {
+        Self {
+            seed: 0xAF5_0001,
+            max_rounds: 10_000,
+            tree_depth: None,
+        }
+    }
+}
+
+/// Per-partition round message: counts + one uniform candidate from each
+/// side of the pivot, weighted by side population (reservoir merge keeps
+/// global uniformity).
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStats {
+    pub lt: u64,
+    pub eq: u64,
+    pub gt: u64,
+    pub cand_lo: Option<(Key, u64)>,
+    pub cand_hi: Option<(Key, u64)>,
+}
+
+impl NetSize for RoundStats {
+    fn net_bytes(&self) -> u64 {
+        3 * 8 + self.cand_lo.net_bytes() + self.cand_hi.net_bytes()
+    }
+}
+
+/// Weighted reservoir combine of two optional candidates.
+fn merge_cand(
+    a: Option<(Key, u64)>,
+    b: Option<(Key, u64)>,
+    rng: &mut SplitMix64,
+) -> Option<(Key, u64)> {
+    match (a, b) {
+        (None, x) | (x, None) => x,
+        (Some((va, wa)), Some((vb, wb))) => {
+            let total = wa + wb;
+            let pick_a = (rng.next_u64() % total.max(1)) < wa;
+            Some((if pick_a { va } else { vb }, total))
+        }
+    }
+}
+
+fn merge_stats(a: RoundStats, b: RoundStats, rng: &mut SplitMix64) -> RoundStats {
+    RoundStats {
+        lt: a.lt + b.lt,
+        eq: a.eq + b.eq,
+        gt: a.gt + b.gt,
+        cand_lo: merge_cand(a.cand_lo, b.cand_lo, rng),
+        cand_hi: merge_cand(a.cand_hi, b.cand_hi, rng),
+    }
+}
+
+/// The iterative engine. Generic over aggregation mode; AFS and Jeffers
+/// are thin wrappers.
+pub struct CountDiscardSelect {
+    pub label: &'static str,
+    pub mode: AggMode,
+    pub params: CountDiscardParams,
+}
+
+impl CountDiscardSelect {
+    pub fn new(label: &'static str, mode: AggMode, params: CountDiscardParams) -> Self {
+        Self {
+            label,
+            mode,
+            params,
+        }
+    }
+
+    /// Round 0: a uniform random element as the initial pivot (one
+    /// collect round, reservoir over partitions).
+    fn initial_pivot(&self, cluster: &mut Cluster, data: &Dataset<Key>) -> Result<Key> {
+        let seed = self.params.seed;
+        let pending = cluster.map_partitions(data, |part, ctx| {
+            if part.is_empty() {
+                None
+            } else {
+                let mut rng = SplitMix64::new(seed ^ (ctx.partition as u64) << 3);
+                Some((part[rng.below(part.len())], part.len() as u64))
+            }
+        });
+        let cands = cluster.collect(pending);
+        let mut rng = SplitMix64::new(seed ^ 0xD1CE);
+        let picked = cluster.driver(|| {
+            cands
+                .into_iter()
+                .flatten()
+                .fold(None, |acc, c| merge_cand(acc, Some(c), &mut rng))
+        });
+        picked
+            .map(|(v, _)| v)
+            .ok_or_else(|| anyhow::anyhow!("empty dataset"))
+    }
+}
+
+impl QuantileAlgorithm for CountDiscardSelect {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        cluster.reset_run();
+        let n = data.len();
+        let mut k = target_rank(n, q);
+        let mut pivot = self.initial_pivot(cluster, data)?;
+        let mut work = data.clone();
+
+        for round in 0..self.params.max_rounds {
+            cluster.broadcast(&pivot);
+
+            // local Dutch partition + counts + candidates; the partitioned
+            // copy rides along executor-side for the discard step
+            let seed = self.params.seed ^ (round << 32);
+            let pending = cluster.map_partitions(&work, |part, ctx| {
+                let mut a = part.to_vec();
+                let split = dutch_partition(&mut a, pivot);
+                let mut rng =
+                    SplitMix64::new(seed ^ ((ctx.partition as u64) << 8) ^ 0xBEEF);
+                let n_hi = a.len() - split.gt;
+                let cand_lo = (split.lt > 0)
+                    .then(|| (a[rng.below(split.lt)], split.lt as u64));
+                let cand_hi =
+                    (n_hi > 0).then(|| (a[split.gt + rng.below(n_hi)], n_hi as u64));
+                (
+                    RoundStats {
+                        lt: split.lt as u64,
+                        eq: (split.gt - split.lt) as u64,
+                        gt: n_hi as u64,
+                        cand_lo,
+                        cand_hi,
+                    },
+                    (a, split),
+                )
+            });
+            let (stats_p, parts_p) = pending.unzip();
+
+            // aggregate — the round's driver barrier
+            let mut rng = SplitMix64::new(seed ^ 0xA66);
+            let agg = match self.mode {
+                AggMode::TreeReduce => cluster
+                    .tree_reduce(stats_p, self.params.tree_depth, |a, b| {
+                        merge_stats(a, b, &mut rng)
+                    })
+                    .expect("nonempty"),
+                AggMode::Collect => {
+                    let all = cluster.collect(stats_p);
+                    cluster.driver(|| {
+                        all.into_iter()
+                            .reduce(|a, b| merge_stats(a, b, &mut rng))
+                            .expect("nonempty")
+                    })
+                }
+            };
+
+            // the partitioned copy is persisted for the discard
+            cluster.persist_bytes(work.data_bytes());
+
+            if agg.lt <= k && k < agg.lt + agg.eq {
+                return Ok(make_report(self.name(), true, cluster, n, pivot));
+            }
+
+            if k < agg.lt {
+                // discard everything ≥ pivot; target stays at rank k
+                pivot = agg
+                    .cand_lo
+                    .ok_or_else(|| anyhow::anyhow!("no candidate below pivot"))?
+                    .0;
+                work = Dataset::from_partitions(
+                    parts_p
+                        .values
+                        .into_iter()
+                        .map(|(a, split)| a[..split.lt].to_vec())
+                        .collect(),
+                );
+            } else {
+                // discard everything ≤ pivot; rebase the target rank
+                k -= agg.lt + agg.eq;
+                pivot = agg
+                    .cand_hi
+                    .ok_or_else(|| anyhow::anyhow!("no candidate above pivot"))?
+                    .0;
+                work = Dataset::from_partitions(
+                    parts_p
+                        .values
+                        .into_iter()
+                        .map(|(a, split)| a[split.gt..].to_vec())
+                        .collect(),
+                );
+            }
+        }
+        bail!(
+            "{} did not converge within {} rounds",
+            self.label,
+            self.params.max_rounds
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    fn check(mode: AggMode, dist: Distribution, n: u64, q: f64) -> Outcome {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = dist.generator(17).generate(&mut c, n);
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = CountDiscardSelect::new("cd", mode, CountDiscardParams::default());
+        let out = alg.quantile(&mut c, &data, q).unwrap();
+        assert_eq!(out.value, truth, "{mode:?} {} q={q}", dist.label());
+        out
+    }
+
+    #[test]
+    fn tree_reduce_exact_on_all_distributions() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Bimodal,
+            Distribution::Sorted,
+        ] {
+            check(AggMode::TreeReduce, dist, 30_000, 0.5);
+        }
+    }
+
+    #[test]
+    fn collect_exact_on_all_distributions() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Bimodal,
+            Distribution::Sorted,
+        ] {
+            check(AggMode::Collect, dist, 30_000, 0.99);
+        }
+    }
+
+    #[test]
+    fn rounds_are_logarithmic() {
+        let out = check(AggMode::TreeReduce, Distribution::Uniform, 100_000, 0.5);
+        // expected ~log2(1e5)≈17 rounds (+1 init); generous x4 bound
+        assert!(
+            (2..=80).contains(&out.report.rounds),
+            "rounds = {}",
+            out.report.rounds
+        );
+        assert!(out.report.persists > 0, "count-discard must persist");
+        assert_eq!(out.report.shuffles, 0);
+    }
+
+    #[test]
+    fn rounds_grow_with_n() {
+        let small = check(AggMode::TreeReduce, Distribution::Uniform, 1_000, 0.5);
+        let big = check(AggMode::TreeReduce, Distribution::Uniform, 300_000, 0.5);
+        assert!(
+            big.report.rounds > small.report.rounds,
+            "rounds {} !> {}",
+            big.report.rounds,
+            small.report.rounds
+        );
+    }
+
+    #[test]
+    fn extreme_quantiles_exact() {
+        check(AggMode::TreeReduce, Distribution::Uniform, 10_000, 0.0);
+        check(AggMode::TreeReduce, Distribution::Uniform, 10_000, 1.0);
+        check(AggMode::Collect, Distribution::Uniform, 10_000, 0.0);
+    }
+
+    #[test]
+    fn all_equal_terminates_immediately() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let data = Dataset::from_vec(vec![42; 10_000], 4);
+        let mut alg =
+            CountDiscardSelect::new("cd", AggMode::TreeReduce, CountDiscardParams::default());
+        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        assert_eq!(out.value, 42);
+        // init round + 1 iteration
+        assert!(out.report.rounds <= 2);
+    }
+
+    #[test]
+    fn singleton() {
+        let mut c = Cluster::new(ClusterConfig::local(1, 1));
+        let data = Dataset::from_vec(vec![7], 1);
+        let mut alg =
+            CountDiscardSelect::new("cd", AggMode::Collect, CountDiscardParams::default());
+        assert_eq!(alg.quantile(&mut c, &data, 0.5).unwrap().value, 7);
+    }
+
+    #[test]
+    fn round_stats_netsize() {
+        let s = RoundStats {
+            lt: 1,
+            eq: 2,
+            gt: 3,
+            cand_lo: Some((5, 1)),
+            cand_hi: None,
+        };
+        assert_eq!(s.net_bytes(), 24 + 13 + 1);
+    }
+}

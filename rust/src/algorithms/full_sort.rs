@@ -1,0 +1,84 @@
+//! Spark Full Sort quantile (§IV-A): `orderBy` the whole dataset via the
+//! PSRS pipeline, then index the k-th record — the Spark-default exact
+//! path GK Select is benchmarked against.
+
+use super::{make_report, Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::sort::psrs::{psrs_sort, PsrsParams};
+use crate::{target_rank, Key};
+use anyhow::{ensure, Result};
+
+/// Full-sort exact quantile.
+#[derive(Debug, Clone, Default)]
+pub struct FullSortQuantile {
+    pub params: PsrsParams,
+}
+
+impl FullSortQuantile {
+    pub fn new(params: PsrsParams) -> Self {
+        Self { params }
+    }
+}
+
+impl QuantileAlgorithm for FullSortQuantile {
+    fn name(&self) -> &'static str {
+        "Full Sort"
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        cluster.reset_run();
+        let n = data.len();
+        let sorted = psrs_sort(cluster, data, &self.params);
+        let k = target_rank(n, q);
+        let value = cluster.driver(|| sorted.kth(k));
+        let value = value.ok_or_else(|| anyhow::anyhow!("rank {k} out of range"))?;
+        Ok(make_report(self.name(), true, cluster, n, value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    #[test]
+    fn exact_on_all_distributions() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Bimodal,
+            Distribution::Sorted,
+        ] {
+            let mut c = Cluster::new(ClusterConfig::local(2, 8));
+            let data = dist.generator(6).generate(&mut c, 30_000);
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                let truth = oracle_quantile(&data, q).unwrap();
+                let mut alg = FullSortQuantile::default();
+                let out = alg.quantile(&mut c, &data, q).unwrap();
+                assert_eq!(out.value, truth, "{} q={q}", dist.label());
+            }
+        }
+    }
+
+    #[test]
+    fn moves_order_n_bytes() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Uniform.generator(8).generate(&mut c, 50_000);
+        let mut alg = FullSortQuantile::default();
+        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        assert_eq!(out.report.shuffles, 1);
+        assert!(
+            out.report.bytes_shuffled > 50_000 * 2,
+            "full sort should move most of the data; moved {}",
+            out.report.bytes_shuffled
+        );
+    }
+}

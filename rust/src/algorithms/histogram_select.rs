@@ -1,0 +1,245 @@
+//! Histogram Select — the extension sketched in the paper's trade-off
+//! discussion (§V-6): push rank-narrowing into the cluster instead of the
+//! driver, keeping per-round state `O(bins)` regardless of ε.
+//!
+//! Rounds: one min/max pass seeds the value range; then each round every
+//! executor histograms its partition over the current range (the AOT
+//! histogram kernel), the driver locates the bin containing the target
+//! rank and zooms in. The i32 key domain guarantees
+//! `⌈32 / log₂(nbins)⌉` refinement rounds worst-case (5 at 128 bins);
+//! once the surviving band is small (≤ `extract_cap` keys), a final
+//! extraction pass ships it to the driver for exact selection.
+//!
+//! Compared to GK Select: no sketch, slightly more rounds, but driver
+//! space is `O(bins + band)` instead of `O((P/ε)log(εn/P) + εn)` — the
+//! regime the paper worries about when ε must be tiny.
+
+use super::{make_report, Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::runtime::{KernelBackend, NativeBackend};
+use crate::select::{quickselect, SplitMix64};
+use crate::{target_rank, Key};
+use anyhow::{bail, ensure, Result};
+
+/// Histogram Select knobs.
+#[derive(Debug, Clone)]
+pub struct HistogramSelectParams {
+    /// Bins per refinement round (must match the AOT artifact when the
+    /// PJRT backend is used).
+    pub nbins: usize,
+    /// Stop refining once the candidate band is at most this many keys;
+    /// ship and select exactly.
+    pub extract_cap: u64,
+    pub seed: u64,
+    /// Safety valve (domain/bins bound the real count).
+    pub max_rounds: u64,
+}
+
+impl Default for HistogramSelectParams {
+    fn default() -> Self {
+        Self {
+            nbins: 128,
+            extract_cap: 1 << 20,
+            seed: 0x0157_0652,
+            max_rounds: 64,
+        }
+    }
+}
+
+/// Iterative histogram-refinement exact selection.
+pub struct HistogramSelect {
+    pub params: HistogramSelectParams,
+    backend: Box<dyn KernelBackend>,
+}
+
+impl HistogramSelect {
+    pub fn new(params: HistogramSelectParams) -> Self {
+        Self {
+            params,
+            backend: Box::new(NativeBackend::new()),
+        }
+    }
+
+    pub fn with_backend(params: HistogramSelectParams, backend: Box<dyn KernelBackend>) -> Self {
+        Self { params, backend }
+    }
+}
+
+impl QuantileAlgorithm for HistogramSelect {
+    fn name(&self) -> &'static str {
+        "Hist Select"
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        ensure!(self.params.nbins >= 2, "need at least 2 bins");
+        cluster.reset_run();
+        let n = data.len();
+        let mut k = target_rank(n, q);
+
+        // Round 1: global min/max seeds the value range
+        let backend = self.backend.as_mut();
+        let pending = cluster.map_partitions(data, |part, _| backend.minmax(part));
+        let bounds = cluster
+            .reduce(pending, |a, b| match (a, b) {
+                (None, x) | (x, None) => x,
+                (Some((alo, ahi)), Some((blo, bhi))) => Some((alo.min(blo), ahi.max(bhi))),
+            })
+            .flatten();
+        let (mut lo, mut hi) = bounds.ok_or_else(|| anyhow::anyhow!("empty dataset"))?;
+
+        // Refinement rounds: histogram over [lo, hi], zoom into the bin
+        // holding rank k (k rebased as mass below the band is discarded)
+        let nbins = self.params.nbins;
+        let mut band_count = n;
+        for _ in 0..self.params.max_rounds {
+            if lo == hi || band_count <= self.params.extract_cap {
+                break;
+            }
+            let span = hi as i64 - lo as i64 + 1;
+            let width = (span + nbins as i64 - 1) / nbins as i64; // ceil
+            let backend = self.backend.as_mut();
+            let lo_i = lo as i64;
+            let pending = cluster.map_partitions(data, |part, _| {
+                // restrict to the live band, then bucket
+                let banded: Vec<Key> = part
+                    .iter()
+                    .copied()
+                    .filter(|&v| v >= lo && v <= hi)
+                    .collect();
+                backend.histogram(&banded, lo_i, width, nbins)
+            });
+            let hist = cluster
+                .reduce(pending, |mut a, b| {
+                    for (x, y) in a.iter_mut().zip(b) {
+                        *x += y;
+                    }
+                    a
+                })
+                .expect("nonempty");
+
+            // locate the bin containing rank k within the band
+            let mut acc = 0u64;
+            let mut found = None;
+            for (b, &c) in hist.iter().enumerate() {
+                if acc + c > k {
+                    found = Some((b, acc, c));
+                    break;
+                }
+                acc += c;
+            }
+            let (bin, below, in_bin) =
+                found.ok_or_else(|| anyhow::anyhow!("rank {k} beyond band mass"))?;
+            k -= below;
+            band_count = in_bin;
+            let new_lo = lo_i + bin as i64 * width;
+            let new_hi = (new_lo + width - 1).min(hi as i64);
+            lo = new_lo.max(lo as i64) as Key;
+            hi = new_hi as Key;
+        }
+
+        if lo == hi {
+            // band collapsed to a single value — it is the answer
+            return Ok(make_report(self.name(), true, cluster, n, lo));
+        }
+        if band_count > self.params.extract_cap {
+            bail!(
+                "band still holds {band_count} keys after {} rounds",
+                self.params.max_rounds
+            );
+        }
+
+        // Final round: extract the band and select exactly on the driver
+        let (blo, bhi) = (lo, hi);
+        let pending = cluster.map_partitions(data, |part, _| {
+            part.iter()
+                .copied()
+                .filter(|&v| v >= blo && v <= bhi)
+                .collect::<Vec<Key>>()
+        });
+        let slices = cluster.collect(pending);
+        let seed = self.params.seed;
+        let value = cluster.driver(move || {
+            let mut band: Vec<Key> = slices.into_iter().flatten().collect();
+            debug_assert!((k as usize) < band.len());
+            let mut rng = SplitMix64::new(seed);
+            quickselect(&mut band, k as usize, &mut rng);
+            band[k as usize]
+        });
+        Ok(make_report(self.name(), true, cluster, n, value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    fn check(dist: Distribution, n: u64, q: f64, cap: u64) -> Outcome {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = dist.generator(44).generate(&mut c, n);
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = HistogramSelect::new(HistogramSelectParams {
+            extract_cap: cap,
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut c, &data, q).unwrap();
+        assert_eq!(out.value, truth, "{} q={q}", dist.label());
+        out
+    }
+
+    #[test]
+    fn exact_on_all_distributions() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Bimodal,
+            Distribution::Sorted,
+        ] {
+            check(dist, 30_000, 0.5, 4_000);
+            check(dist, 30_000, 0.99, 4_000);
+        }
+    }
+
+    #[test]
+    fn rounds_bounded_by_domain_refinement() {
+        let out = check(Distribution::Uniform, 100_000, 0.5, 1_000);
+        // minmax + ≤⌈32/7⌉ refinements + extract ≤ 7 rounds
+        assert!(
+            out.report.rounds <= 7,
+            "rounds = {} exceeds domain bound",
+            out.report.rounds
+        );
+        assert_eq!(out.report.shuffles, 0);
+    }
+
+    #[test]
+    fn duplicate_spike_collapses_band() {
+        // heavy spike: the refinement can't split a single value's mass,
+        // band collapse (lo == hi) must exit exactly
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let mut vals = vec![7; 50_000];
+        vals.extend(0..100);
+        let data = Dataset::from_vec(vals, 4);
+        let truth = oracle_quantile(&data, 0.5).unwrap();
+        let mut alg = HistogramSelect::new(HistogramSelectParams {
+            extract_cap: 100, // force refinement into the spike
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        assert_eq!(out.value, truth);
+    }
+
+    #[test]
+    fn extremes() {
+        check(Distribution::Uniform, 10_000, 0.0, 2_000);
+        check(Distribution::Uniform, 10_000, 1.0, 2_000);
+    }
+}

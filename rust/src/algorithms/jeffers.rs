@@ -1,0 +1,76 @@
+//! Jeffers Select for Spark (§IV-C): identical to AFS except the per-round
+//! aggregation is a direct `collect` — cheaper setup than a treeReduce,
+//! all-to-one traffic that only matters at very large `P`.
+
+use super::count_discard::{AggMode, CountDiscardParams, CountDiscardSelect};
+use super::{Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::Key;
+use anyhow::Result;
+
+/// Jeffers parameters (count-discard knobs).
+pub type JeffersParams = CountDiscardParams;
+
+/// Jeffers Select: `O(log n)` rounds, each ending in a collect.
+pub struct Jeffers {
+    inner: CountDiscardSelect,
+}
+
+impl Jeffers {
+    pub fn new(params: JeffersParams) -> Self {
+        Self {
+            inner: CountDiscardSelect::new("Jeffers", AggMode::Collect, params),
+        }
+    }
+}
+
+impl QuantileAlgorithm for Jeffers {
+    fn name(&self) -> &'static str {
+        "Jeffers"
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        self.inner.quantile(cluster, data, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::data::{DataGenerator, Distribution};
+
+    #[test]
+    fn jeffers_is_exact() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Distribution::Zipf.generator(4).generate(&mut c, 20_000);
+        let truth = oracle_quantile(&data, 0.75).unwrap();
+        let mut alg = Jeffers::new(JeffersParams::default());
+        let out = alg.quantile(&mut c, &data, 0.75).unwrap();
+        assert_eq!(out.value, truth);
+        assert_eq!(out.report.algorithm, "Jeffers");
+    }
+
+    #[test]
+    fn jeffers_sends_more_driver_bytes_than_afs_at_scale() {
+        // collect funnels every partition's stats to the driver each round
+        let mut c = Cluster::new(ClusterConfig::local(4, 32));
+        let data = Distribution::Uniform.generator(5).generate(&mut c, 100_000);
+        let mut j = Jeffers::new(JeffersParams::default());
+        let out_j = j.quantile(&mut c, &data, 0.5).unwrap();
+        let mut a = super::super::afs::Afs::new(CountDiscardParams::default());
+        let out_a = a.quantile(&mut c, &data, 0.5).unwrap();
+        assert!(
+            out_j.report.bytes_to_driver > out_a.report.bytes_to_driver,
+            "jeffers {} !> afs {}",
+            out_j.report.bytes_to_driver,
+            out_a.report.bytes_to_driver
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! The distributed quantile algorithms the paper evaluates (§IV–V), all
+//! running on the [`crate::cluster`] substrate so rounds, stage
+//! boundaries, and bytes are measured, not asserted.
+//!
+//! | Module | Paper §| Exact? | Rounds |
+//! |---|---|---|---|
+//! | [`gk_select`] | V (the contribution) | yes | 3 |
+//! | [`full_sort`] | IV-A (Spark default) | yes | 1 (+1 full shuffle) |
+//! | [`afs`] | IV-B (Al-Furaih) | yes | `O(log n)` |
+//! | [`jeffers`] | IV-C | yes | `O(log n)` |
+//! | [`approx_quantile`] | IV-D (GK Sketch) | no | 1 |
+//! | [`histogram_select`] | extension (§V-6 discussion) | yes | ≤ 2 + ⌈32/log₂bins⌉ |
+
+pub mod afs;
+pub mod approx_quantile;
+pub mod count_discard;
+pub mod full_sort;
+pub mod gk_select;
+pub mod histogram_select;
+pub mod jeffers;
+pub mod multi_select;
+
+use crate::cluster::dataset::Dataset;
+use crate::cluster::metrics::MetricsReport;
+use crate::cluster::Cluster;
+use crate::Key;
+use anyhow::Result;
+
+/// Result of one quantile query: the value plus the full measured report.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub value: Key,
+    pub report: MetricsReport,
+}
+
+/// Common driver interface over all algorithms.
+pub trait QuantileAlgorithm {
+    fn name(&self) -> &'static str;
+
+    /// Whether the returned value is the exact order statistic.
+    fn exact(&self) -> bool;
+
+    /// Answer quantile `q` over `data`. Resets the cluster's run ledger on
+    /// entry so the report covers exactly this query.
+    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome>;
+}
+
+/// Build the end-of-run report for an algorithm.
+pub(crate) fn make_report(
+    name: &str,
+    exact: bool,
+    cluster: &Cluster,
+    n: u64,
+    value: Key,
+) -> Outcome {
+    Outcome {
+        value,
+        report: MetricsReport::from_metrics(
+            name,
+            n,
+            cluster.cfg.partitions,
+            cluster.cfg.executors,
+            cluster.elapsed_secs(),
+            &cluster.metrics,
+            exact,
+        ),
+    }
+}
+
+/// Ground-truth oracle: exact quantile by full local sort (tests and
+/// verification runs only — this is what the algorithms are checked
+/// against, never part of any measured path).
+pub fn oracle_quantile(data: &Dataset<Key>, q: f64) -> Option<Key> {
+    let mut all = data.to_vec();
+    if all.is_empty() {
+        return None;
+    }
+    all.sort_unstable();
+    Some(all[crate::target_rank(all.len() as u64, q) as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn oracle_median() {
+        let d = Dataset::from_vec(vec![5, 1, 4, 2, 3], 2);
+        assert_eq!(oracle_quantile(&d, 0.5), Some(3));
+        assert_eq!(oracle_quantile(&d, 0.0), Some(1));
+        assert_eq!(oracle_quantile(&d, 1.0), Some(5));
+    }
+
+    #[test]
+    fn oracle_empty() {
+        let d: Dataset<Key> = Dataset::from_partitions(vec![vec![]]);
+        assert_eq!(oracle_quantile(&d, 0.5), None);
+    }
+
+    #[test]
+    fn report_carries_cluster_shape() {
+        let c = Cluster::new(ClusterConfig::local(2, 4));
+        let o = make_report("x", true, &c, 100, 7);
+        assert_eq!(o.report.partitions, 4);
+        assert_eq!(o.report.executors, 2);
+        assert_eq!(o.value, 7);
+    }
+}

@@ -1,0 +1,132 @@
+//! Immutable partitioned datasets — the RDD stand-in.
+//!
+//! Spark RDDs are immutable: algorithms that re-partition data (AFS /
+//! Jeffers count-and-discard, PSRS shuffle) must create *new* datasets,
+//! which is exactly what the paper charges them for (persists, copies).
+//! `Dataset` mirrors that: it is cheap to read, and every structural
+//! change constructs a fresh `Dataset`.
+
+use std::sync::Arc;
+
+/// An immutable, partitioned collection of keys.
+#[derive(Debug, Clone)]
+pub struct Dataset<T> {
+    partitions: Vec<Arc<Vec<T>>>,
+}
+
+impl<T> Dataset<T> {
+    /// Build from explicit partitions.
+    pub fn from_partitions(parts: Vec<Vec<T>>) -> Self {
+        assert!(!parts.is_empty(), "dataset needs at least one partition");
+        Self {
+            partitions: parts.into_iter().map(Arc::new).collect(),
+        }
+    }
+
+    /// Evenly split one vector across `p` partitions (generator helper).
+    pub fn from_vec(data: Vec<T>, p: usize) -> Self {
+        assert!(p > 0);
+        let n = data.len();
+        let base = n / p;
+        let extra = n % p;
+        let mut parts: Vec<Vec<T>> = Vec::with_capacity(p);
+        let mut it = data.into_iter();
+        for i in 0..p {
+            let take = base + usize::from(i < extra);
+            parts.push(it.by_ref().take(take).collect());
+        }
+        Self::from_partitions(parts)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn partition(&self, p: usize) -> &[T] {
+        &self.partitions[p]
+    }
+
+    /// Total number of records.
+    pub fn len(&self) -> u64 {
+        self.partitions.iter().map(|p| p.len() as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.iter().all(|p| p.is_empty())
+    }
+
+    /// Per-partition record counts.
+    pub fn partition_sizes(&self) -> Vec<usize> {
+        self.partitions.iter().map(|p| p.len()).collect()
+    }
+
+    /// Iterate over all records in partition order (test/oracle helper —
+    /// a real driver never does this).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.partitions.iter().flat_map(|p| p.iter())
+    }
+}
+
+impl<T: Clone> Dataset<T> {
+    /// Flatten to a single vector (oracle helper).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+}
+
+impl Dataset<i32> {
+    /// Payload bytes held by this dataset (for persist accounting).
+    pub fn data_bytes(&self) -> u64 {
+        self.len() * std::mem::size_of::<i32>() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_balances_with_remainder() {
+        let d = Dataset::from_vec((0..10).collect::<Vec<i32>>(), 3);
+        assert_eq!(d.partition_sizes(), vec![4, 3, 3]);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.to_vec(), (0..10).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn from_vec_more_partitions_than_records() {
+        let d = Dataset::from_vec(vec![1, 2], 4);
+        assert_eq!(d.partition_sizes(), vec![1, 1, 0, 0]);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn empty_partitions_allowed() {
+        let d: Dataset<i32> = Dataset::from_partitions(vec![vec![], vec![]]);
+        assert!(d.is_empty());
+        assert_eq!(d.len(), 0);
+    }
+
+    #[test]
+    fn clone_is_shallow() {
+        let d = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 4);
+        let e = d.clone();
+        assert_eq!(
+            d.partition(0).as_ptr(),
+            e.partition(0).as_ptr(),
+            "clones must share partition storage"
+        );
+    }
+
+    #[test]
+    fn data_bytes_counts_payload() {
+        let d = Dataset::from_vec(vec![1i32; 100], 4);
+        assert_eq!(d.data_bytes(), 400);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_partitions() {
+        Dataset::<i32>::from_partitions(vec![]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Run metrics: the counters behind the paper's Table V.
+//!
+//! Every synchronization and byte the substrate moves is tallied here, so
+//! `repro bench table5` can print *measured* rounds / shuffles / persists /
+//! network volume per algorithm instead of asymptotic claims.
+
+/// Raw counters accumulated by the substrate during one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunMetrics {
+    /// Driver synchronization barriers (BSP supersteps).
+    pub rounds: u64,
+    /// Shuffle/collect points where all executors must quiesce.
+    pub stage_boundaries: u64,
+    /// Full range-partition shuffles.
+    pub shuffles: u64,
+    /// Explicit persists of intermediate datasets.
+    pub persists: u64,
+    /// Bytes funneled into the driver (collects + treeReduce roots).
+    pub bytes_to_driver: u64,
+    /// Bytes moved by range-partition shuffles.
+    pub bytes_shuffled: u64,
+    /// Bytes moved between executors inside treeReduce levels.
+    pub bytes_tree_reduced: u64,
+    /// Bytes fanned out by TorrentBroadcast (payload × receivers).
+    pub bytes_broadcast: u64,
+    /// Bytes written by persists.
+    pub bytes_persisted: u64,
+    /// Messages sent on the fabric.
+    pub messages: u64,
+    /// Modelled driver-side compute seconds.
+    pub driver_compute_secs: f64,
+}
+
+impl RunMetrics {
+    /// Total network volume — the paper's Table V "Network volume" column.
+    pub fn network_volume(&self) -> u64 {
+        self.bytes_to_driver + self.bytes_shuffled + self.bytes_tree_reduced + self.bytes_broadcast
+    }
+}
+
+/// One algorithm's end-of-run report: metrics + modelled elapsed time.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub algorithm: String,
+    pub n: u64,
+    pub partitions: usize,
+    pub executors: usize,
+    pub elapsed_secs: f64,
+    pub rounds: u64,
+    pub stage_boundaries: u64,
+    pub shuffles: u64,
+    pub persists: u64,
+    pub network_volume_bytes: u64,
+    pub bytes_to_driver: u64,
+    pub bytes_shuffled: u64,
+    pub bytes_broadcast: u64,
+    pub messages: u64,
+    pub exact: bool,
+}
+
+impl MetricsReport {
+    pub fn from_metrics(
+        algorithm: &str,
+        n: u64,
+        partitions: usize,
+        executors: usize,
+        elapsed_secs: f64,
+        m: &RunMetrics,
+        exact: bool,
+    ) -> Self {
+        Self {
+            algorithm: algorithm.to_string(),
+            n,
+            partitions,
+            executors,
+            elapsed_secs,
+            rounds: m.rounds,
+            stage_boundaries: m.stage_boundaries,
+            shuffles: m.shuffles,
+            persists: m.persists,
+            network_volume_bytes: m.network_volume(),
+            bytes_to_driver: m.bytes_to_driver,
+            bytes_shuffled: m.bytes_shuffled,
+            bytes_broadcast: m.bytes_broadcast,
+            messages: m.messages,
+            exact,
+        }
+    }
+
+    /// One row in the Table V layout.
+    pub fn table5_row(&self) -> String {
+        format!(
+            "{:<16} {:>14} {:>8} {:>7} {:>8} {:>10}",
+            self.algorithm,
+            human_bytes(self.network_volume_bytes),
+            self.shuffles,
+            self.rounds,
+            self.persists,
+            if self.exact { "Exact" } else { "Approx." },
+        )
+    }
+
+    pub fn table5_header() -> String {
+        format!(
+            "{:<16} {:>14} {:>8} {:>7} {:>8} {:>10}",
+            "Algorithm", "Net volume", "Shuffles", "Rounds", "Persists", "E/A"
+        )
+    }
+}
+
+/// Human-readable byte count (reporting only).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn network_volume_sums_components() {
+        let m = RunMetrics {
+            bytes_to_driver: 10,
+            bytes_shuffled: 20,
+            bytes_tree_reduced: 30,
+            bytes_broadcast: 40,
+            ..Default::default()
+        };
+        assert_eq!(m.network_volume(), 100);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn report_row_mentions_exactness() {
+        let m = RunMetrics::default();
+        let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert!(r.table5_row().contains("Exact"));
+        let r = MetricsReport::from_metrics("GK Sketch", 100, 4, 2, 0.5, &m, false);
+        assert!(r.table5_row().contains("Approx."));
+    }
+}

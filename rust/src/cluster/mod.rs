@@ -1,0 +1,454 @@
+//! Spark-like execution substrate with explicit round / stage-boundary
+//! accounting and a calibrated cost model.
+//!
+//! The paper's analysis (§III) is phrased entirely in terms of:
+//!
+//! * **rounds** — units of parallel work bounded by a driver
+//!   synchronization barrier (BSP supersteps / CGM rounds),
+//! * **stage boundaries** — shuffle or collect points where no executor
+//!   can proceed until all upstream writes finish,
+//! * **network volume** — bytes crossing the cluster fabric,
+//! * **per-partition executor work**.
+//!
+//! This module reproduces those semantics in-process. Every distributed
+//! primitive the paper names is implemented with the same synchronization
+//! shape as Spark's:
+//!
+//! | Spark                  | Here                         | round? | stage boundary? |
+//! |------------------------|------------------------------|--------|-----------------|
+//! | `mapPartitions`        | [`Cluster::map_partitions`]  | no (lazy) | no           |
+//! | `collect`              | [`Cluster::collect`]         | yes    | yes             |
+//! | `reduce`               | [`Cluster::reduce`]          | yes    | yes             |
+//! | `treeReduce`           | [`Cluster::tree_reduce`]     | yes    | yes             |
+//! | `TorrentBroadcast`     | [`Cluster::broadcast`]       | no     | no              |
+//! | range-partition shuffle| [`shuffle::shuffle_by_range`]| no     | yes             |
+//! | `persist`              | [`dataset::Dataset::persist`]| no     | no              |
+//!
+//! ## Timing model
+//!
+//! The box running this reproduction has one core, so real parallel
+//! speed-up cannot materialize locally. Instead the substrate runs every
+//! partition closure sequentially, *measures* its wall time, and charges a
+//! **virtual clock** with the parallel elapsed time: the max over
+//! executors of the sum of their partitions' measured times, plus the
+//! network model's cost for the messages actually sent. This keeps
+//! compute costs honest (they come from real execution over real data)
+//! while modelling an EMR-like cluster's parallelism and fabric — the
+//! substitution DESIGN.md §2 documents.
+
+pub mod dataset;
+pub mod metrics;
+pub mod netmodel;
+pub mod shuffle;
+pub mod simclock;
+
+use std::time::Instant;
+
+use dataset::Dataset;
+use metrics::RunMetrics;
+use netmodel::{NetSize, NetworkModel};
+use simclock::SimClock;
+
+/// Static description of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of executor processes (the paper's "core nodes" × executors
+    /// per node; EMR m5.xlarge runs one 4-core executor per node).
+    pub executors: usize,
+    /// Number of data partitions (paper: 4 × core nodes).
+    pub partitions: usize,
+    /// Fabric model used to price messages.
+    pub net: NetworkModel,
+    /// Multiplier applied to measured closure time before charging the
+    /// virtual clock: maps this box's core to the reference core
+    /// (m5.xlarge vCPU). Calibrated by `repro calibrate`; 1.0 = this box.
+    pub compute_scale: f64,
+    /// Multiplier applied to driver-side measured time (driver nodes are
+    /// often less endowed than executors — paper §V-6).
+    pub driver_scale: f64,
+}
+
+impl ClusterConfig {
+    /// A local test cluster with a zero-cost network (pure wall-clock
+    /// semantics; rounds and volumes are still counted).
+    pub fn local(executors: usize, partitions: usize) -> Self {
+        Self {
+            executors,
+            partitions,
+            net: NetworkModel::zero(),
+            compute_scale: 1.0,
+            driver_scale: 1.0,
+        }
+    }
+
+    /// An EMR-like cluster: `nodes` m5.xlarge core nodes, 4 partitions per
+    /// node, 10 Gbit fabric with 200 µs message latency (the paper's
+    /// testbed shape).
+    pub fn emr(nodes: usize) -> Self {
+        Self {
+            executors: nodes,
+            partitions: nodes * 4,
+            net: NetworkModel::emr_like(),
+            compute_scale: 1.0,
+            driver_scale: 1.0,
+        }
+    }
+
+    /// Executor index owning partition `p` (Spark-style round-robin
+    /// locality).
+    pub fn executor_of(&self, p: usize) -> usize {
+        p % self.executors
+    }
+}
+
+/// Per-partition results of a `mapPartitions`, pending an action.
+///
+/// Carries the measured compute time of each partition closure so the
+/// consuming action can charge the virtual clock with the *parallel*
+/// elapsed time of the stage.
+#[derive(Debug)]
+pub struct PerPartition<R> {
+    pub values: Vec<R>,
+    /// Seconds of measured compute per partition.
+    times: Vec<f64>,
+}
+
+impl<R> PerPartition<R> {
+    /// Map the carried values without touching the time ledger (driver-side
+    /// relabeling, free in the model).
+    pub fn map_values<S>(self, f: impl FnMut(R) -> S) -> PerPartition<S> {
+        PerPartition {
+            values: self.values.into_iter().map(f).collect(),
+            times: self.times,
+        }
+    }
+}
+
+impl<A, B> PerPartition<(A, B)> {
+    /// Split a pair-producing stage into two pendings. The measured
+    /// compute time rides with the **first** half (charge once: the
+    /// second half stays executor-resident, e.g. AFS's retained
+    /// partitions while only counts travel).
+    pub fn unzip(self) -> (PerPartition<A>, PerPartition<B>) {
+        let (a, b): (Vec<A>, Vec<B>) = self.values.into_iter().unzip();
+        let zero = vec![0.0; a.len()];
+        (
+            PerPartition {
+                values: a,
+                times: self.times,
+            },
+            PerPartition {
+                values: b,
+                times: zero,
+            },
+        )
+    }
+}
+
+/// Context handed to every partition closure.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionCtx {
+    /// Partition index within the dataset.
+    pub partition: usize,
+    /// Executor that owns this partition.
+    pub executor: usize,
+    /// Total number of partitions.
+    pub num_partitions: usize,
+}
+
+/// The simulated cluster: driver + executors + fabric + clocks.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub clock: SimClock,
+    pub metrics: RunMetrics,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.executors > 0, "cluster needs at least one executor");
+        assert!(
+            cfg.partitions >= cfg.executors,
+            "need at least one partition per executor"
+        );
+        Self {
+            cfg,
+            clock: SimClock::new(),
+            metrics: RunMetrics::default(),
+        }
+    }
+
+    /// Reset clocks and metrics between trials (data stays put).
+    pub fn reset_run(&mut self) {
+        self.clock = SimClock::new();
+        self.metrics = RunMetrics::default();
+    }
+
+    /// Lazily-scheduled narrow transformation: run `f` over every
+    /// partition, measuring compute time per partition. No round, no
+    /// stage boundary — those are charged by the consuming action, like
+    /// Spark's lazy evaluation.
+    pub fn map_partitions<T, R>(
+        &mut self,
+        data: &Dataset<T>,
+        mut f: impl FnMut(&[T], PartitionCtx) -> R,
+    ) -> PerPartition<R> {
+        let num_partitions = data.num_partitions();
+        let mut values = Vec::with_capacity(num_partitions);
+        let mut times = Vec::with_capacity(num_partitions);
+        for p in 0..num_partitions {
+            let ctx = PartitionCtx {
+                partition: p,
+                executor: self.cfg.executor_of(p),
+                num_partitions,
+            };
+            let start = Instant::now();
+            values.push(f(data.partition(p), ctx));
+            times.push(start.elapsed().as_secs_f64());
+        }
+        PerPartition { values, times }
+    }
+
+    /// Parallel elapsed time of a stage: max over executors of the summed
+    /// measured times of their partitions, scaled to the reference core.
+    fn stage_elapsed(&self, times: &[f64]) -> f64 {
+        let mut per_exec = vec![0.0_f64; self.cfg.executors];
+        for (p, t) in times.iter().enumerate() {
+            per_exec[self.cfg.executor_of(p)] += t;
+        }
+        per_exec.into_iter().fold(0.0, f64::max) * self.cfg.compute_scale
+    }
+
+    /// `collect`: gather per-partition results at the driver. First stage
+    /// boundary of the consuming job; ends a round.
+    pub fn collect<R: NetSize>(&mut self, pending: PerPartition<R>) -> Vec<R> {
+        let compute = self.stage_elapsed(&pending.times);
+        let bytes: u64 = pending.values.iter().map(NetSize::net_bytes).sum();
+        let net = self.cfg.net.collect_cost(self.cfg.executors, bytes);
+        self.clock.advance(compute + net);
+        self.metrics.rounds += 1;
+        self.metrics.stage_boundaries += 1;
+        self.metrics.bytes_to_driver += bytes;
+        self.metrics.messages += self.cfg.partitions as u64;
+        pending.values
+    }
+
+    /// `reduce`: collect-shaped aggregation (Spark's `RDD.reduce` ships
+    /// partial results to the driver and folds there). Ends a round.
+    pub fn reduce<R: NetSize>(
+        &mut self,
+        pending: PerPartition<R>,
+        f: impl FnMut(R, R) -> R,
+    ) -> Option<R> {
+        let parts = self.collect(pending);
+        let start = Instant::now();
+        let out = parts.into_iter().reduce(f);
+        self.charge_driver(start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// `treeReduce`: log-depth aggregation over the executors; only the
+    /// final partial reaches the driver. Ends a round.
+    ///
+    /// `depth` overrides the tree depth (Spark defaults to 2; `None`
+    /// computes ⌈log₂ P⌉ like the paper's `O(log P)` analysis).
+    pub fn tree_reduce<R: NetSize>(
+        &mut self,
+        pending: PerPartition<R>,
+        depth: Option<usize>,
+        mut f: impl FnMut(R, R) -> R,
+    ) -> Option<R> {
+        let compute = self.stage_elapsed(&pending.times);
+        self.clock.advance(compute);
+
+        let mut level: Vec<R> = pending.values;
+        if level.is_empty() {
+            self.metrics.rounds += 1;
+            self.metrics.stage_boundaries += 1;
+            return None;
+        }
+        let natural_depth = (usize::BITS - (level.len().max(2) - 1).leading_zeros()) as usize;
+        let _requested = depth.unwrap_or(natural_depth); // shape is pairwise either way
+
+        // Pairwise merge level by level. Merges within a level run in
+        // parallel across executors: charge max(merge time) + one message
+        // exchange of the largest partial per level.
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut level_compute = 0.0_f64;
+            let mut level_max_bytes = 0_u64;
+            let mut level_bytes = 0_u64;
+            let mut it = level.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => {
+                        let moved = b.net_bytes();
+                        level_bytes += moved;
+                        level_max_bytes = level_max_bytes.max(moved);
+                        let start = Instant::now();
+                        let merged = f(a, b);
+                        level_compute =
+                            level_compute.max(start.elapsed().as_secs_f64());
+                        next.push(merged);
+                        self.metrics.messages += 1;
+                    }
+                    None => next.push(a),
+                }
+            }
+            self.metrics.bytes_tree_reduced += level_bytes;
+            self.clock.advance(
+                level_compute * self.cfg.compute_scale
+                    + self.cfg.net.message_cost(level_max_bytes),
+            );
+            level = next;
+        }
+
+        let root = level.pop();
+        // Final partial lands on the driver.
+        if let Some(ref r) = root {
+            let bytes = r.net_bytes();
+            self.metrics.bytes_to_driver += bytes;
+            self.clock.advance(self.cfg.net.message_cost(bytes));
+        }
+        self.metrics.rounds += 1;
+        self.metrics.stage_boundaries += 1;
+        root
+    }
+
+    /// `TorrentBroadcast`: BitTorrent-style log-depth fan-out from the
+    /// driver. Adds latency but **no** stage boundary and no round — the
+    /// paper is explicit about this (§IV-B).
+    pub fn broadcast<B: NetSize>(&mut self, value: &B) {
+        let bytes = value.net_bytes();
+        let hops = (usize::BITS - (self.cfg.executors.max(2) - 1).leading_zeros()) as u64;
+        self.clock
+            .advance(hops as f64 * self.cfg.net.message_cost(bytes));
+        self.metrics.bytes_broadcast += bytes * self.cfg.executors as u64;
+        self.metrics.messages += self.cfg.executors as u64;
+    }
+
+    /// Charge driver-side compute (merging sketches, folding counts, the
+    /// final candidate scan) at the driver's calibrated speed.
+    pub fn charge_driver(&mut self, measured_secs: f64) {
+        self.clock.advance(measured_secs * self.cfg.driver_scale);
+        self.metrics.driver_compute_secs += measured_secs * self.cfg.driver_scale;
+    }
+
+    /// Run a driver-side closure, measuring and charging its time.
+    pub fn driver<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.charge_driver(start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record a persist of `bytes` (AFS/Jeffers re-materialize the
+    /// retained side every round; GK Select persists nothing — Table V).
+    pub fn persist_bytes(&mut self, bytes: u64) {
+        self.metrics.persists += 1;
+        self.metrics.bytes_persisted += bytes;
+    }
+
+    /// Virtual elapsed seconds since the run started.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.clock.elapsed_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Cluster, Dataset<i32>) {
+        let cluster = Cluster::new(ClusterConfig::local(2, 4));
+        let data = Dataset::from_partitions(vec![
+            vec![1, 2, 3],
+            vec![4, 5],
+            vec![6],
+            vec![7, 8, 9, 10],
+        ]);
+        (cluster, data)
+    }
+
+    #[test]
+    fn map_partitions_sees_every_partition() {
+        let (mut c, d) = tiny();
+        let lens = c.map_partitions(&d, |part, ctx| (ctx.partition, part.len()));
+        assert_eq!(lens.values, vec![(0, 3), (1, 2), (2, 1), (3, 4)]);
+        // lazy: no round yet
+        assert_eq!(c.metrics.rounds, 0);
+    }
+
+    #[test]
+    fn collect_ends_a_round_and_counts_bytes() {
+        let (mut c, d) = tiny();
+        let counts = c.map_partitions(&d, |part, _| part.len() as u64);
+        let got = c.collect(counts);
+        assert_eq!(got.iter().sum::<u64>(), 10);
+        assert_eq!(c.metrics.rounds, 1);
+        assert_eq!(c.metrics.stage_boundaries, 1);
+        assert_eq!(c.metrics.bytes_to_driver, 4 * 8);
+    }
+
+    #[test]
+    fn reduce_folds_on_driver() {
+        let (mut c, d) = tiny();
+        let sums = c.map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>());
+        let total = c.reduce(sums, |a, b| a + b).unwrap();
+        assert_eq!(total, 55);
+        assert_eq!(c.metrics.rounds, 1);
+    }
+
+    #[test]
+    fn tree_reduce_matches_reduce() {
+        let (mut c, d) = tiny();
+        let sums = c.map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>());
+        let total = c.tree_reduce(sums, None, |a, b| a + b).unwrap();
+        assert_eq!(total, 55);
+        assert_eq!(c.metrics.rounds, 1);
+        assert_eq!(c.metrics.stage_boundaries, 1);
+        assert!(c.metrics.bytes_tree_reduced > 0);
+    }
+
+    #[test]
+    fn tree_reduce_empty_is_none() {
+        let mut c = Cluster::new(ClusterConfig::local(1, 1));
+        let pending: PerPartition<i64> = PerPartition {
+            values: vec![],
+            times: vec![],
+        };
+        assert!(c.tree_reduce(pending, None, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn broadcast_adds_no_round() {
+        let (mut c, _) = tiny();
+        c.broadcast(&42_i64);
+        assert_eq!(c.metrics.rounds, 0);
+        assert_eq!(c.metrics.stage_boundaries, 0);
+        assert_eq!(c.metrics.bytes_broadcast, 8 * 2);
+    }
+
+    #[test]
+    fn executor_assignment_round_robin() {
+        let cfg = ClusterConfig::local(3, 7);
+        assert_eq!(cfg.executor_of(0), 0);
+        assert_eq!(cfg.executor_of(4), 1);
+        assert_eq!(cfg.executor_of(5), 2);
+    }
+
+    #[test]
+    fn reset_run_clears_ledger() {
+        let (mut c, d) = tiny();
+        let xs = c.map_partitions(&d, |p, _| p.len() as u64);
+        c.collect(xs);
+        c.reset_run();
+        assert_eq!(c.metrics.rounds, 0);
+        assert_eq!(c.elapsed_secs(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_more_executors_than_partitions() {
+        Cluster::new(ClusterConfig::local(8, 4));
+    }
+}

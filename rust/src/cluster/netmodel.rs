@@ -1,0 +1,206 @@
+//! Fabric cost model + message sizing.
+//!
+//! Prices every message the substrate sends: `cost = latency + bytes /
+//! bandwidth`. Defaults model the paper's testbed (EMR m5.xlarge, ~10 Gbit
+//! NIC ≈ 1.25 GB/s, a few hundred µs per message round-trip). The model is
+//! deliberately simple — the paper's results are driven by *how many*
+//! synchronizations and *how many bytes*, both of which we count exactly;
+//! the model only converts them to seconds.
+
+/// Sizes a value as it would appear on the wire (Spark task results are
+/// serialized; we charge payload bytes plus a small framing overhead for
+/// containers).
+pub trait NetSize {
+    fn net_bytes(&self) -> u64;
+}
+
+/// Marker for fixed-width scalar payloads.
+pub trait FixedWire: Copy {
+    const WIRE_BYTES: u64;
+}
+
+macro_rules! fixed_wire {
+    ($($t:ty => $b:expr),* $(,)?) => {
+        $(impl FixedWire for $t { const WIRE_BYTES: u64 = $b; })*
+    };
+}
+
+fixed_wire!(
+    i8 => 1, u8 => 1, i16 => 2, u16 => 2,
+    i32 => 4, u32 => 4, f32 => 4,
+    i64 => 8, u64 => 8, f64 => 8, usize => 8,
+);
+
+impl<A: FixedWire, B: FixedWire> FixedWire for (A, B) {
+    const WIRE_BYTES: u64 = A::WIRE_BYTES + B::WIRE_BYTES;
+}
+
+impl<A: FixedWire, B: FixedWire, C: FixedWire> FixedWire for (A, B, C) {
+    const WIRE_BYTES: u64 = A::WIRE_BYTES + B::WIRE_BYTES + C::WIRE_BYTES;
+}
+
+impl<T: FixedWire> NetSize for T {
+    fn net_bytes(&self) -> u64 {
+        T::WIRE_BYTES
+    }
+}
+
+/// Framing overhead charged per serialized container (task result
+/// envelope).
+pub const CONTAINER_OVERHEAD: u64 = 16;
+
+impl<T: FixedWire> NetSize for Vec<T> {
+    fn net_bytes(&self) -> u64 {
+        CONTAINER_OVERHEAD + self.len() as u64 * T::WIRE_BYTES
+    }
+}
+
+impl<T: FixedWire> NetSize for &[T] {
+    fn net_bytes(&self) -> u64 {
+        CONTAINER_OVERHEAD + self.len() as u64 * T::WIRE_BYTES
+    }
+}
+
+impl<T: NetSize> NetSize for Option<T> {
+    fn net_bytes(&self) -> u64 {
+        1 + self.as_ref().map_or(0, NetSize::net_bytes)
+    }
+}
+
+/// Latency/bandwidth fabric model, plus the two shuffle-only costs Spark
+/// always pays on EMR: shuffle files spill through local EBS volumes, and
+/// every shuffled record crosses the JVM serializer twice.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Per-message setup latency, seconds.
+    pub latency_s: f64,
+    /// Point-to-point bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Driver ingest bandwidth, bytes/second (collect funnels through one
+    /// NIC).
+    pub driver_bandwidth_bps: f64,
+    /// Local shuffle-spill disk throughput, bytes/second (EMR m5.xlarge:
+    /// 15 GiB gp2 EBS ≈ 250 MB/s burst). Shuffle data is written by the
+    /// mapper and read by the reducer.
+    pub shuffle_disk_bps: f64,
+    /// Per-record serialization cost, seconds, paid on each side of a
+    /// shuffle (Spark's serializer + partitioner bookkeeping per record).
+    pub ser_s_per_record: f64,
+}
+
+impl NetworkModel {
+    /// Free fabric (unit tests / pure wall-clock mode).
+    pub fn zero() -> Self {
+        Self {
+            latency_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+            driver_bandwidth_bps: f64::INFINITY,
+            shuffle_disk_bps: f64::INFINITY,
+            ser_s_per_record: 0.0,
+        }
+    }
+
+    /// EMR-like defaults: 10 Gbit NIC, 200 µs message latency, gp2 EBS
+    /// shuffle volumes, ~100 ns/record serializer.
+    pub fn emr_like() -> Self {
+        Self {
+            latency_s: 200e-6,
+            bandwidth_bps: 1.25e9,
+            driver_bandwidth_bps: 1.25e9,
+            shuffle_disk_bps: 250e6,
+            ser_s_per_record: 100e-9,
+        }
+    }
+
+    /// Cost of one point-to-point message of `bytes`.
+    pub fn message_cost(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Cost of a collect: `executors` concurrent senders funneling
+    /// `total_bytes` through the driver NIC; latencies overlap, transfer
+    /// serializes on the driver link.
+    pub fn collect_cost(&self, _executors: usize, total_bytes: u64) -> f64 {
+        self.latency_s + total_bytes as f64 / self.driver_bandwidth_bps
+    }
+
+    /// Cost of an all-to-all shuffle: `total_records` pass through the
+    /// serializer on both sides, shuffle files traverse the local spill
+    /// disk on both sides, and `moved_bytes` cross the fabric — all
+    /// parallel across `executors`.
+    pub fn shuffle_cost(&self, executors: usize, moved_bytes: u64, total_records: u64) -> f64 {
+        let e = executors.max(1) as f64;
+        let per_link = moved_bytes as f64 / e;
+        let net = self.latency_s * e + 2.0 * per_link / self.bandwidth_bps;
+        // every record is shuffle-written locally even when it stays on
+        // the same executor (Spark writes map outputs before reducing)
+        let per_exec_bytes = moved_bytes as f64 / e;
+        let disk = 2.0 * per_exec_bytes / self.shuffle_disk_bps;
+        let ser = 2.0 * (total_records as f64 / e) * self.ser_s_per_record;
+        net + disk + ser
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(42_i32.net_bytes(), 4);
+        assert_eq!(42_u64.net_bytes(), 8);
+        assert_eq!((1_i32, 2_u64).net_bytes(), 12);
+        assert_eq!((1_u64, 2_u64, 3_u64).net_bytes(), 24);
+    }
+
+    #[test]
+    fn vec_includes_overhead() {
+        let v = vec![1_i32; 10];
+        assert_eq!(v.net_bytes(), CONTAINER_OVERHEAD + 40);
+    }
+
+    #[test]
+    fn option_sizes() {
+        assert_eq!(Option::<i32>::None.net_bytes(), 1);
+        assert_eq!(Some(1_i32).net_bytes(), 5);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = NetworkModel::zero();
+        assert_eq!(m.message_cost(1 << 30), 0.0);
+        assert_eq!(m.collect_cost(8, 1 << 30), 0.0);
+        assert_eq!(m.shuffle_cost(8, 1 << 30, 1 << 28), 0.0);
+    }
+
+    #[test]
+    fn shuffle_includes_disk_and_serialization() {
+        let m = NetworkModel::emr_like();
+        let bytes = 4_000_000_000u64; // 1e9 i32 keys
+        let records = 1_000_000_000u64;
+        let cost = m.shuffle_cost(30, bytes, records);
+        // serialization alone: 2 × (1e9/30) × 100ns ≈ 6.7s
+        assert!(cost > 6.0, "shuffle at 1e9 records must cost seconds, got {cost}");
+        // and it dwarfs a sketch-sized collect
+        assert!(cost > 100.0 * m.collect_cost(30, 10_000_000));
+    }
+
+    #[test]
+    fn emr_costs_scale_with_bytes() {
+        let m = NetworkModel::emr_like();
+        let small = m.message_cost(1_000);
+        let big = m.message_cost(1_000_000_000);
+        assert!(big > small);
+        assert!((big - 1e9 / 1.25e9 - 200e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_parallelism_helps() {
+        let m = NetworkModel::emr_like();
+        // same bytes over more executors should not be slower per link
+        let few = m.shuffle_cost(2, 1 << 30, 1 << 28);
+        let many = m.shuffle_cost(32, 1 << 30, 1 << 28);
+        // transfer part shrinks even though latency part grows
+        assert!(many < few);
+    }
+}

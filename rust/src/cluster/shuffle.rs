@@ -1,0 +1,124 @@
+//! Range-partition shuffle — the expensive primitive behind Spark's full
+//! sort (PSRS step 4, §IV-A).
+//!
+//! Every record is routed to the bucket whose splitter range contains it;
+//! all but the locally-retained fraction crosses the fabric. This is the
+//! paper's "second stage boundary" and the reason full sort is
+//! communication-bound: `O(n)` network volume versus the sketch methods'
+//! `O(P·poly(1/ε, log))`.
+
+use super::dataset::Dataset;
+use super::Cluster;
+use crate::Key;
+use std::time::Instant;
+
+/// Route `data` into `splitters.len() + 1` range buckets (splitters
+/// ascending; bucket `i` holds keys in `(splitters[i-1], splitters[i]]`
+/// boundary-wise like Spark's `RangePartitioner` lower-bound search).
+///
+/// Charges: one stage boundary, `bytes_shuffled` for every record that
+/// changes executor, and the fabric's all-to-all cost. Does **not** end a
+/// round — the downstream action does.
+pub fn shuffle_by_range(
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    splitters: &[Key],
+) -> Dataset<Key> {
+    let out_parts = splitters.len() + 1;
+    let start = Instant::now();
+
+    let mut buckets: Vec<Vec<Key>> = vec![Vec::new(); out_parts];
+    let mut moved_bytes = 0u64;
+    let key_bytes = std::mem::size_of::<Key>() as u64;
+
+    for p in 0..data.num_partitions() {
+        let src_exec = cluster.cfg.executor_of(p);
+        for &v in data.partition(p) {
+            // lower-bound bucket search (binary, like RangePartitioner)
+            let b = splitters.partition_point(|&s| s < v);
+            buckets[b].push(v);
+            let dst_exec = cluster.cfg.executor_of(b % cluster.cfg.partitions.max(1));
+            if dst_exec != src_exec {
+                moved_bytes += key_bytes;
+            }
+        }
+    }
+
+    let compute = start.elapsed().as_secs_f64();
+    // Bucketing runs in parallel across executors; modelled as the
+    // measured sequential scan divided evenly (each executor scans only
+    // its own partitions).
+    let parallel_compute =
+        compute / cluster.cfg.executors as f64 * cluster.cfg.compute_scale;
+    let net = cluster
+        .cfg
+        .net
+        .shuffle_cost(cluster.cfg.executors, moved_bytes, data.len());
+    cluster.clock.advance(parallel_compute + net);
+
+    cluster.metrics.stage_boundaries += 1;
+    cluster.metrics.shuffles += 1;
+    cluster.metrics.bytes_shuffled += moved_bytes;
+    cluster.metrics.messages += (cluster.cfg.executors * cluster.cfg.executors) as u64;
+
+    Dataset::from_partitions(buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(2, 4))
+    }
+
+    #[test]
+    fn routes_by_range_and_preserves_multiset() {
+        let mut c = cluster();
+        let data = Dataset::from_vec(vec![5, 1, 9, 3, 7, 2, 8, 4, 6, 0], 4);
+        let out = shuffle_by_range(&mut c, &data, &[3, 6]);
+        assert_eq!(out.num_partitions(), 3);
+        // bucket 0: <=3, bucket 1: (3,6], bucket 2: >6
+        let mut b0 = out.partition(0).to_vec();
+        b0.sort_unstable();
+        assert_eq!(b0, vec![0, 1, 2, 3]);
+        let mut b1 = out.partition(1).to_vec();
+        b1.sort_unstable();
+        assert_eq!(b1, vec![4, 5, 6]);
+        let mut all = out.to_vec();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn counts_stage_boundary_and_shuffle() {
+        let mut c = cluster();
+        let data = Dataset::from_vec((0..100).collect(), 4);
+        shuffle_by_range(&mut c, &data, &[25, 50, 75]);
+        assert_eq!(c.metrics.shuffles, 1);
+        assert_eq!(c.metrics.stage_boundaries, 1);
+        assert!(c.metrics.bytes_shuffled > 0);
+        // shuffle alone does not end a round
+        assert_eq!(c.metrics.rounds, 0);
+    }
+
+    #[test]
+    fn empty_splitters_single_bucket() {
+        let mut c = cluster();
+        let data = Dataset::from_vec((0..10).collect(), 4);
+        let out = shuffle_by_range(&mut c, &data, &[]);
+        assert_eq!(out.num_partitions(), 1);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn duplicate_heavy_input_survives() {
+        let mut c = cluster();
+        let data = Dataset::from_vec(vec![7; 1000], 4);
+        let out = shuffle_by_range(&mut c, &data, &[3, 7, 11]);
+        assert_eq!(out.len(), 1000);
+        // all 7s land in bucket with upper bound 7 (lower-bound search: first splitter >= 7)
+        assert_eq!(out.partition(1).len(), 1000);
+    }
+}

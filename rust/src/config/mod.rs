@@ -1,0 +1,324 @@
+//! Config system: TOML-subset file + programmatic defaults, overridable
+//! from the CLI. One `ReproConfig` fully describes a run (cluster shape,
+//! fabric, algorithm knobs, backend, artifact location) so every
+//! experiment in EXPERIMENTS.md is reproducible from its config + seed.
+
+use crate::cluster::netmodel::NetworkModel;
+use crate::cluster::ClusterConfig;
+use crate::util::minitoml::{self, Document, Section, Value};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Cluster shape section.
+#[derive(Debug, Clone)]
+pub struct ClusterSection {
+    /// Core nodes (the paper's unit of scaling).
+    pub nodes: usize,
+    /// Partitions per node (paper: 4 = vCPUs of m5.xlarge).
+    pub partitions_per_node: usize,
+    /// Measured-time → reference-core multiplier (from `repro calibrate`).
+    pub compute_scale: f64,
+    /// Driver slowdown factor (driver nodes are often smaller).
+    pub driver_scale: f64,
+}
+
+impl Default for ClusterSection {
+    fn default() -> Self {
+        Self {
+            nodes: 10,
+            partitions_per_node: 4,
+            compute_scale: 1.0,
+            driver_scale: 1.0,
+        }
+    }
+}
+
+/// Algorithm knobs.
+#[derive(Debug, Clone)]
+pub struct AlgorithmSection {
+    /// GK sketch relative error (the ablation sweeps this).
+    pub epsilon: f64,
+    /// treeReduce depth override (None → ⌈log₂P⌉).
+    pub tree_depth: Option<usize>,
+    /// Master seed for generators and pivot RNG.
+    pub seed: u64,
+    /// Sketch variant for GK paths: "classical" | "spark" | "modified".
+    pub sketch: String,
+    /// Driver-side sketch merge: "fold" (Spark's foldLeft) | "tree".
+    pub sketch_merge: String,
+}
+
+impl Default for AlgorithmSection {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.01,
+            tree_depth: None,
+            seed: 0xDEC0DE,
+            sketch: "bulk".into(),
+            sketch_merge: "fold".into(),
+        }
+    }
+}
+
+/// Fabric section (converted into [`NetworkModel`]).
+#[derive(Debug, Clone)]
+pub struct NetworkSection {
+    pub enabled: bool,
+    pub latency_us: f64,
+    pub bandwidth_gbps: f64,
+    pub driver_bandwidth_gbps: f64,
+    /// Shuffle-spill disk throughput (EMR gp2 EBS ≈ 250 MB/s).
+    pub shuffle_disk_mbps: f64,
+    /// Per-record shuffle serialization cost, nanoseconds per side.
+    pub ser_ns_per_record: f64,
+}
+
+impl Default for NetworkSection {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            latency_us: 200.0,
+            bandwidth_gbps: 10.0,
+            driver_bandwidth_gbps: 10.0,
+            shuffle_disk_mbps: 250.0,
+            ser_ns_per_record: 100.0,
+        }
+    }
+}
+
+impl NetworkSection {
+    pub fn to_model(&self) -> NetworkModel {
+        if !self.enabled {
+            return NetworkModel::zero();
+        }
+        NetworkModel {
+            latency_s: self.latency_us * 1e-6,
+            bandwidth_bps: self.bandwidth_gbps * 1e9 / 8.0,
+            driver_bandwidth_bps: self.driver_bandwidth_gbps * 1e9 / 8.0,
+            shuffle_disk_bps: self.shuffle_disk_mbps * 1e6,
+            ser_s_per_record: self.ser_ns_per_record * 1e-9,
+        }
+    }
+}
+
+/// Top-level config.
+#[derive(Debug, Clone)]
+pub struct ReproConfig {
+    pub cluster: ClusterSection,
+    pub network: NetworkSection,
+    pub algorithm: AlgorithmSection,
+    /// Kernel backend: "native" | "pjrt".
+    pub backend: String,
+    /// Where `make artifacts` put the HLO text.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ReproConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterSection::default(),
+            network: NetworkSection::default(),
+            algorithm: AlgorithmSection::default(),
+            backend: "native".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ReproConfig {
+    /// Parse from TOML-subset text (unknown keys are ignored; unknown
+    /// *sections* too — forward compatibility for configs from newer
+    /// versions).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = minitoml::parse(text)?;
+        Ok(Self::from_document(&doc))
+    }
+
+    fn from_document(doc: &Document) -> Self {
+        let d = Self::default();
+        let root = Section(doc.get(""));
+        let cluster = Section(doc.get("cluster"));
+        let network = Section(doc.get("network"));
+        let algorithm = Section(doc.get("algorithm"));
+        Self {
+            cluster: ClusterSection {
+                nodes: cluster.int_or("nodes", d.cluster.nodes as i64) as usize,
+                partitions_per_node: cluster
+                    .int_or("partitions_per_node", d.cluster.partitions_per_node as i64)
+                    as usize,
+                compute_scale: cluster.float_or("compute_scale", d.cluster.compute_scale),
+                driver_scale: cluster.float_or("driver_scale", d.cluster.driver_scale),
+            },
+            network: NetworkSection {
+                enabled: network.bool_or("enabled", d.network.enabled),
+                latency_us: network.float_or("latency_us", d.network.latency_us),
+                bandwidth_gbps: network.float_or("bandwidth_gbps", d.network.bandwidth_gbps),
+                driver_bandwidth_gbps: network
+                    .float_or("driver_bandwidth_gbps", d.network.driver_bandwidth_gbps),
+                shuffle_disk_mbps: network
+                    .float_or("shuffle_disk_mbps", d.network.shuffle_disk_mbps),
+                ser_ns_per_record: network
+                    .float_or("ser_ns_per_record", d.network.ser_ns_per_record),
+            },
+            algorithm: AlgorithmSection {
+                epsilon: algorithm.float_or("epsilon", d.algorithm.epsilon),
+                tree_depth: algorithm.int_opt("tree_depth").map(|v| v as usize),
+                seed: algorithm.int_or("seed", d.algorithm.seed as i64) as u64,
+                sketch: algorithm.str_or("sketch", &d.algorithm.sketch),
+                sketch_merge: algorithm.str_or("sketch_merge", &d.algorithm.sketch_merge),
+            },
+            backend: root.str_or("backend", &d.backend),
+            artifacts_dir: PathBuf::from(
+                root.str_or("artifacts_dir", d.artifacts_dir.to_str().unwrap_or("artifacts")),
+            ),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    /// Load if the file exists, defaults otherwise.
+    pub fn load_or_default(path: Option<&Path>) -> Result<Self> {
+        match path {
+            Some(p) => Self::load(p),
+            None => {
+                let default = Path::new("repro.toml");
+                if default.exists() {
+                    Self::load(default)
+                } else {
+                    Ok(Self::default())
+                }
+            }
+        }
+    }
+
+    /// Materialize the cluster description.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            executors: self.cluster.nodes,
+            partitions: self.cluster.nodes * self.cluster.partitions_per_node,
+            net: self.network.to_model(),
+            compute_scale: self.cluster.compute_scale,
+            driver_scale: self.cluster.driver_scale,
+        }
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut doc: Document = Default::default();
+        let root = doc.entry(String::new()).or_default();
+        root.insert("backend".into(), Value::Str(self.backend.clone()));
+        root.insert(
+            "artifacts_dir".into(),
+            Value::Str(self.artifacts_dir.to_string_lossy().into_owned()),
+        );
+        let c = doc.entry("cluster".into()).or_default();
+        c.insert("nodes".into(), Value::Int(self.cluster.nodes as i64));
+        c.insert(
+            "partitions_per_node".into(),
+            Value::Int(self.cluster.partitions_per_node as i64),
+        );
+        c.insert(
+            "compute_scale".into(),
+            Value::Float(self.cluster.compute_scale),
+        );
+        c.insert("driver_scale".into(), Value::Float(self.cluster.driver_scale));
+        let n = doc.entry("network".into()).or_default();
+        n.insert("enabled".into(), Value::Bool(self.network.enabled));
+        n.insert("latency_us".into(), Value::Float(self.network.latency_us));
+        n.insert(
+            "bandwidth_gbps".into(),
+            Value::Float(self.network.bandwidth_gbps),
+        );
+        n.insert(
+            "driver_bandwidth_gbps".into(),
+            Value::Float(self.network.driver_bandwidth_gbps),
+        );
+        n.insert(
+            "shuffle_disk_mbps".into(),
+            Value::Float(self.network.shuffle_disk_mbps),
+        );
+        n.insert(
+            "ser_ns_per_record".into(),
+            Value::Float(self.network.ser_ns_per_record),
+        );
+        let a = doc.entry("algorithm".into()).or_default();
+        a.insert("epsilon".into(), Value::Float(self.algorithm.epsilon));
+        if let Some(depth) = self.algorithm.tree_depth {
+            a.insert("tree_depth".into(), Value::Int(depth as i64));
+        }
+        a.insert("seed".into(), Value::Int(self.algorithm.seed as i64));
+        a.insert("sketch".into(), Value::Str(self.algorithm.sketch.clone()));
+        a.insert(
+            "sketch_merge".into(),
+            Value::Str(self.algorithm.sketch_merge.clone()),
+        );
+        minitoml::serialize(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ReproConfig::default();
+        assert_eq!(c.cluster.nodes, 10);
+        let cc = c.cluster_config();
+        assert_eq!(cc.partitions, 40);
+        assert_eq!(cc.executors, 10);
+        assert_eq!(c.backend, "native");
+    }
+
+    #[test]
+    fn roundtrips_through_toml() {
+        let mut c = ReproConfig::default();
+        c.algorithm.epsilon = 0.05;
+        c.cluster.nodes = 30;
+        c.algorithm.tree_depth = Some(4);
+        c.backend = "pjrt".into();
+        let text = c.to_toml();
+        let back = ReproConfig::from_toml(&text).unwrap();
+        assert_eq!(back.algorithm.epsilon, 0.05);
+        assert_eq!(back.cluster.nodes, 30);
+        assert_eq!(back.algorithm.tree_depth, Some(4));
+        assert_eq!(back.backend, "pjrt");
+    }
+
+    #[test]
+    fn partial_toml_fills_defaults() {
+        let back = ReproConfig::from_toml("[cluster]\nnodes = 3\n").unwrap();
+        assert_eq!(back.cluster.nodes, 3);
+        assert_eq!(back.cluster.partitions_per_node, 4);
+        assert_eq!(back.algorithm.epsilon, 0.01);
+        assert_eq!(back.algorithm.tree_depth, None);
+    }
+
+    #[test]
+    fn network_disable_zeroes_model() {
+        let n = NetworkSection {
+            enabled: false,
+            ..Default::default()
+        };
+        assert_eq!(n.to_model().latency_s, 0.0);
+    }
+
+    #[test]
+    fn network_unit_conversion() {
+        let n = NetworkSection::default();
+        let m = n.to_model();
+        assert!((m.latency_s - 200e-6).abs() < 1e-12);
+        assert!((m.bandwidth_bps - 1.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn load_missing_file_errors_with_path() {
+        let err = ReproConfig::load(Path::new("/nonexistent/x.toml"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent/x.toml"));
+    }
+}

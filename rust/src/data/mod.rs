@@ -1,0 +1,283 @@
+//! Workload generators (§VI-B): the four input distributions the paper's
+//! robustness study uses, all seeded and reproducible, generated
+//! per-partition so datasets materialize in parallel-friendly shards.
+//!
+//! * **Uniform** — i.i.d. from `[-1e9, 1e9)`; the Fig. 1/2 baseline.
+//! * **Zipf** — exponent `s = 2.5` over a ranked universe mapped into the
+//!   value range; models power-law data.
+//! * **Bimodal** — 50/50 mix of two Gaussians at `±3.33e8`, σ `= 1.66e8`,
+//!   clamped to the range.
+//! * **Sorted** — partition `i` holds a non-overlapping contiguous band,
+//!   locally sorted: globally ordered data, the pathological case for
+//!   sampling-based splitters.
+
+pub mod pcg;
+pub mod zipf;
+
+use crate::cluster::dataset::Dataset;
+use crate::cluster::Cluster;
+use crate::{Key, KEY_HI, KEY_LO};
+use pcg::Pcg64;
+
+/// The paper's four input distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    Uniform,
+    Zipf,
+    Bimodal,
+    Sorted,
+}
+
+impl std::str::FromStr for Distribution {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "uniform" => Ok(Self::Uniform),
+            "zipf" => Ok(Self::Zipf),
+            "bimodal" => Ok(Self::Bimodal),
+            "sorted" => Ok(Self::Sorted),
+            other => anyhow::bail!("unknown distribution '{other}' (uniform|zipf|bimodal|sorted)"),
+        }
+    }
+}
+
+impl Distribution {
+    pub fn generator(self, seed: u64) -> Box<dyn DataGenerator> {
+        match self {
+            Distribution::Uniform => Box::new(UniformGen::new(seed)),
+            Distribution::Zipf => Box::new(ZipfGen::new(seed, 2.5)),
+            Distribution::Bimodal => Box::new(BimodalGen::new(seed)),
+            Distribution::Sorted => Box::new(SortedBandsGen::new(seed)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Zipf => "zipf",
+            Distribution::Bimodal => "bimodal",
+            Distribution::Sorted => "sorted",
+        }
+    }
+}
+
+/// A seeded distributed data source.
+pub trait DataGenerator {
+    /// Fill partition `p` of `num_partitions` with `len` keys.
+    fn fill_partition(&self, p: usize, num_partitions: usize, len: usize, out: &mut Vec<Key>);
+
+    /// Materialize `n` keys across the cluster's partitions.
+    fn generate(&self, cluster: &mut Cluster, n: u64) -> Dataset<Key> {
+        let p = cluster.cfg.partitions;
+        let base = (n / p as u64) as usize;
+        let extra = (n % p as u64) as usize;
+        let parts: Vec<Vec<Key>> = (0..p)
+            .map(|i| {
+                let len = base + usize::from(i < extra);
+                let mut v = Vec::with_capacity(len);
+                self.fill_partition(i, p, len, &mut v);
+                v
+            })
+            .collect();
+        Dataset::from_partitions(parts)
+    }
+}
+
+fn partition_rng(seed: u64, p: usize) -> Pcg64 {
+    // independent stream per partition: same dataset regardless of P order
+    Pcg64::new(seed, 0x5851_F42D_4C95_7F2D ^ (p as u64))
+}
+
+/// Uniform over `[-1e9, 1e9)`.
+#[derive(Debug, Clone)]
+pub struct UniformGen {
+    seed: u64,
+}
+
+impl UniformGen {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl DataGenerator for UniformGen {
+    fn fill_partition(&self, p: usize, _np: usize, len: usize, out: &mut Vec<Key>) {
+        let mut rng = partition_rng(self.seed, p);
+        let span = (KEY_HI - KEY_LO) as u64;
+        out.extend((0..len).map(|_| (KEY_LO + (rng.next_u64() % span) as i64) as Key));
+    }
+}
+
+/// Zipf(s) over a ranked universe, ranks mapped into the value range.
+#[derive(Debug, Clone)]
+pub struct ZipfGen {
+    seed: u64,
+    exponent: f64,
+    universe: u64,
+}
+
+impl ZipfGen {
+    pub fn new(seed: u64, exponent: f64) -> Self {
+        Self {
+            seed,
+            exponent,
+            universe: 1 << 20,
+        }
+    }
+}
+
+impl DataGenerator for ZipfGen {
+    fn fill_partition(&self, p: usize, _np: usize, len: usize, out: &mut Vec<Key>) {
+        let mut rng = partition_rng(self.seed, p);
+        let mut z = zipf::ZipfSampler::new(self.universe, self.exponent);
+        let span = (KEY_HI - KEY_LO) as u64;
+        let stride = (span / self.universe).max(1);
+        out.extend((0..len).map(|_| {
+            let rank = z.sample(&mut rng); // 1-based, heavily skewed to small ranks
+            // spread ranks over the value range so heavy hitters are
+            // specific values, like word-frequency data mapped to ids
+            let mixed = rank.wrapping_mul(0x9E37_79B9_7F4A_7C15) % self.universe;
+            (KEY_LO + (mixed * stride) as i64) as Key
+        }));
+    }
+}
+
+/// 50/50 mix of `N(-3.33e8, 1.66e8)` and `N(+3.33e8, 1.66e8)`, clamped.
+#[derive(Debug, Clone)]
+pub struct BimodalGen {
+    seed: u64,
+}
+
+impl BimodalGen {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl DataGenerator for BimodalGen {
+    fn fill_partition(&self, p: usize, _np: usize, len: usize, out: &mut Vec<Key>) {
+        let mut rng = partition_rng(self.seed, p);
+        const MU: f64 = 3.33e8;
+        const SIGMA: f64 = 1.66e8;
+        out.extend((0..len).map(|_| {
+            let mu = if rng.next_u64() & 1 == 0 { -MU } else { MU };
+            let v = mu + SIGMA * rng.next_gaussian();
+            v.clamp(KEY_LO as f64, (KEY_HI - 1) as f64) as Key
+        }));
+    }
+}
+
+/// Globally sorted: partition `i` draws uniformly from its own contiguous
+/// band of the range and sorts locally.
+#[derive(Debug, Clone)]
+pub struct SortedBandsGen {
+    seed: u64,
+}
+
+impl SortedBandsGen {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl DataGenerator for SortedBandsGen {
+    fn fill_partition(&self, p: usize, np: usize, len: usize, out: &mut Vec<Key>) {
+        let mut rng = partition_rng(self.seed, p);
+        let span = (KEY_HI - KEY_LO) as u64 / np as u64;
+        let lo = KEY_LO + (p as u64 * span) as i64;
+        out.extend((0..len).map(|_| (lo + (rng.next_u64() % span.max(1)) as i64) as Key));
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn gen_n(d: Distribution, n: u64) -> Dataset<Key> {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        d.generator(7).generate(&mut c, n)
+    }
+
+    #[test]
+    fn uniform_covers_range_and_count() {
+        let d = gen_n(Distribution::Uniform, 100_000);
+        assert_eq!(d.len(), 100_000);
+        let v = d.to_vec();
+        assert!(v.iter().all(|&x| (KEY_LO..KEY_HI).contains(&(x as i64))));
+        // both halves populated
+        assert!(v.iter().any(|&x| x < 0) && v.iter().any(|&x| x > 0));
+    }
+
+    #[test]
+    fn uniform_mean_near_zero() {
+        let d = gen_n(Distribution::Uniform, 200_000);
+        let mean: f64 =
+            d.iter().map(|&x| x as f64).sum::<f64>() / d.len() as f64;
+        assert!(
+            mean.abs() < 2e7,
+            "uniform mean {mean:.0} too far from 0 (≈1% of range)"
+        );
+    }
+
+    #[test]
+    fn zipf_is_heavily_skewed() {
+        let d = gen_n(Distribution::Zipf, 50_000);
+        let mut counts = std::collections::HashMap::new();
+        for &v in d.iter() {
+            *counts.entry(v).or_insert(0u64) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        // s=2.5: the top value should dominate (>40% of mass)
+        assert!(
+            max as f64 > 0.4 * d.len() as f64,
+            "zipf top value only {max}/{}",
+            d.len()
+        );
+        assert!(counts.len() > 10, "zipf degenerate: {} distinct", counts.len());
+    }
+
+    #[test]
+    fn bimodal_two_lobes() {
+        let d = gen_n(Distribution::Bimodal, 100_000);
+        let v = d.to_vec();
+        let near_neg = v.iter().filter(|&&x| (x as f64 + 3.33e8).abs() < 2e8).count();
+        let near_pos = v.iter().filter(|&&x| (x as f64 - 3.33e8).abs() < 2e8).count();
+        let near_zero = v.iter().filter(|&&x| (x as f64).abs() < 5e7).count();
+        assert!(near_neg > v.len() / 5 && near_pos > v.len() / 5);
+        assert!(near_zero < near_neg / 2, "valley between modes missing");
+    }
+
+    #[test]
+    fn sorted_bands_globally_ordered() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let d = Distribution::Sorted.generator(3).generate(&mut c, 80_000);
+        for p in 0..d.num_partitions() {
+            let part = d.partition(p);
+            assert!(part.windows(2).all(|w| w[0] <= w[1]), "partition {p} unsorted");
+            if p + 1 < d.num_partitions() {
+                let next = d.partition(p + 1);
+                if let (Some(&last), Some(&first)) = (part.last(), next.first()) {
+                    assert!(last <= first, "bands overlap at {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = gen_n(Distribution::Uniform, 10_000).to_vec();
+        let b = gen_n(Distribution::Uniform, 10_000).to_vec();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn remainder_distribution_exact() {
+        let d = gen_n(Distribution::Uniform, 10_007);
+        assert_eq!(d.len(), 10_007);
+        let sizes = d.partition_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 10_007);
+        assert!(sizes.iter().all(|&s| s == 1250 || s == 1251));
+    }
+}

@@ -1,0 +1,127 @@
+//! PCG-XSH-RR 64/32-based generator with 64-bit output, plus a Box–Muller
+//! Gaussian tap. In-repo so runs are reproducible with zero external RNG
+//! dependencies.
+
+/// PCG with 128-bit state folded into two 64-bit LCG lanes (enough quality
+/// for workload generation; not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    cached_gauss: Option<f64>,
+}
+
+const MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// `seed` selects the stream start; `stream` selects the increment
+    /// (distinct streams are statistically independent).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+            cached_gauss: None,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.step();
+        rng
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+    }
+
+    /// One 32-bit PCG-XSH-RR output.
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.step();
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (caches the paired variate).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.cached_gauss.take() {
+            return g;
+        }
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * v;
+            self.cached_gauss = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_stream() {
+        let mut a = Pcg64::new(1, 2);
+        let mut b = Pcg64::new(1, 2);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_are_distinct() {
+        let mut a = Pcg64::new(1, 2);
+        let mut b = Pcg64::new(1, 3);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(5, 5);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniformity_chi_square_ish() {
+        let mut r = Pcg64::new(9, 1);
+        let mut buckets = [0u32; 16];
+        let n = 160_000;
+        for _ in 0..n {
+            buckets[(r.next_u64() % 16) as usize] += 1;
+        }
+        let expected = n as f64 / 16.0;
+        for (i, &b) in buckets.iter().enumerate() {
+            let dev = (b as f64 - expected).abs() / expected;
+            assert!(dev < 0.05, "bucket {i} off by {dev:.3}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(11, 7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "gaussian mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "gaussian var {var}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Small statistics helpers for the experiment reports: means, 95%
+//! t-distribution confidence intervals (Figs. 3–4), and log-log slope
+//! fits (Table IV scaling exponents).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1); 0 when fewer than 2 points.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Two-sided 95% critical value of Student's t for `df` degrees of
+/// freedom (table lookup, converging to 1.96).
+pub fn t95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::NAN;
+    }
+    if df <= TABLE.len() {
+        TABLE[df - 1]
+    } else if df <= 60 {
+        2.000
+    } else {
+        1.96
+    }
+}
+
+/// 95% confidence interval of the mean via the t-distribution (what the
+/// paper plots in Figs. 3–4).
+pub fn ci95(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, m);
+    }
+    let half = t95(xs.len() - 1) * std_dev(xs) / (xs.len() as f64).sqrt();
+    (m - half, m + half)
+}
+
+/// Least-squares slope of `log y` vs `log x` — the empirical scaling
+/// exponent over (n, time) points.
+pub fn loglog_slope(pts: &[(f64, f64)]) -> f64 {
+    let logged: Vec<(f64, f64)> = pts
+        .iter()
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .collect();
+    if logged.len() < 2 {
+        return f64::NAN;
+    }
+    let n = logged.len() as f64;
+    let sx: f64 = logged.iter().map(|(x, _)| x).sum();
+    let sy: f64 = logged.iter().map(|(_, y)| y).sum();
+    let sxx: f64 = logged.iter().map(|(x, _)| x * x).sum();
+    let sxy: f64 = logged.iter().map(|(x, y)| x * y).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn t95_values() {
+        assert!((t95(1) - 12.706).abs() < 1e-9);
+        assert!((t95(30) - 2.042).abs() < 1e-9);
+        assert!((t95(99) - 1.96).abs() < 1e-9);
+        assert!(t95(0).is_nan());
+    }
+
+    #[test]
+    fn ci_contains_mean() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let (lo, hi) = ci95(&xs);
+        assert!(lo < 3.0 && 3.0 < hi);
+        let (lo, hi) = ci95(&[7.0]);
+        assert_eq!((lo, hi), (7.0, 7.0));
+    }
+
+    #[test]
+    fn slope_of_powers() {
+        // y = x^2 → slope 2
+        let pts: Vec<(f64, f64)> = (1..10).map(|i| (i as f64, (i * i) as f64)).collect();
+        assert!((loglog_slope(&pts) - 2.0).abs() < 1e-9);
+        // y = 3x → slope 1
+        let pts: Vec<(f64, f64)> = (1..10).map(|i| (i as f64, 3.0 * i as f64)).collect();
+        assert!((loglog_slope(&pts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_degenerate() {
+        assert!(loglog_slope(&[(1.0, 1.0)]).is_nan());
+        assert!(loglog_slope(&[]).is_nan());
+    }
+}

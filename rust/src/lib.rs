@@ -1,0 +1,123 @@
+//! # gkselect — quick and exact distributed quantile computation
+//!
+//! Reproduction of *"A Quick and Exact Method for Distributed Quantile
+//! Computation"* (Cao, Saloni, Harrison; IEEE BigData 2025): **GK Select**,
+//! an exact distributed k-th order-statistic algorithm that uses a
+//! Greenwald–Khanna sketch to pick a near-target pivot and finishes in a
+//! constant number of rounds, plus every baseline the paper evaluates
+//! (Spark-style full sort / PSRS, Al-Furaih Select, Jeffers Select, and
+//! the Spark `approxQuantile` GK sketch).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — a Spark-like execution substrate
+//!   ([`cluster`]) with explicit rounds, stage boundaries, `treeReduce`,
+//!   `TorrentBroadcast`, range-partition shuffle, and a calibrated
+//!   network/compute cost model; the distributed quantile
+//!   [`algorithms`]; and all the substrates they need ([`sketch`],
+//!   [`select`], [`sort`], [`data`]).
+//! * **L2/L1 (python, build-time only)** — a JAX pivot-pass pipeline
+//!   whose hot loops are Pallas kernels, AOT-lowered to HLO text by
+//!   `make artifacts` and executed from the L3 hot path through
+//!   [`runtime`] (PJRT CPU client via the `xla` crate). Python never runs
+//!   at request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gkselect::prelude::*;
+//!
+//! let cfg = ClusterConfig::local(4, 16); // 4 executors, 16 partitions
+//! let mut cluster = Cluster::new(cfg);
+//! let data = UniformGen::new(42).generate(&mut cluster, 1_000_000);
+//! let mut gk = GkSelect::new(GkSelectParams::default());
+//! let outcome = gk.quantile(&mut cluster, &data, 0.5).unwrap();
+//! println!("median = {} in {} rounds", outcome.value, outcome.report.rounds);
+//! ```
+
+pub mod algorithms;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod harness;
+pub mod runtime;
+pub mod select;
+pub mod sketch;
+pub mod sort;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::algorithms::{
+        afs::{Afs, AfsParams},
+        approx_quantile::{ApproxQuantile, ApproxQuantileParams},
+        full_sort::FullSortQuantile,
+        gk_select::{GkSelect, GkSelectParams},
+        histogram_select::{HistogramSelect, HistogramSelectParams},
+        jeffers::{Jeffers, JeffersParams},
+        Outcome, QuantileAlgorithm,
+    };
+    pub use crate::cluster::{
+        dataset::Dataset,
+        metrics::{MetricsReport, RunMetrics},
+        netmodel::NetworkModel,
+        Cluster, ClusterConfig,
+    };
+    pub use crate::config::ReproConfig;
+    pub use crate::data::{
+        BimodalGen, DataGenerator, Distribution, SortedBandsGen, UniformGen, ZipfGen,
+    };
+    pub use crate::runtime::{KernelBackend, NativeBackend};
+    pub use crate::sketch::{
+        classical::ClassicalGk, modified::ModifiedGk, spark::SparkGk, QuantileSketch,
+    };
+}
+
+/// Key type used throughout: the paper benchmarks 32-bit integers drawn
+/// from `[-1e9, 1e9)`.
+pub type Key = i32;
+
+/// The inclusive value domain used by the paper's generators.
+pub const KEY_LO: i64 = -1_000_000_000;
+/// Exclusive upper bound of the paper's value domain.
+pub const KEY_HI: i64 = 1_000_000_000;
+
+/// Zero-based target rank for quantile `q` over `n` elements — the paper's
+/// `trueRank` (`k = nq`, clamped to the last index).
+pub fn target_rank(n: u64, q: f64) -> u64 {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if n == 0 {
+        return 0;
+    }
+    let k = (q * n as f64).floor() as u64;
+    k.min(n - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_rank_median_of_odd() {
+        assert_eq!(target_rank(101, 0.5), 50);
+    }
+
+    #[test]
+    fn target_rank_endpoints() {
+        assert_eq!(target_rank(10, 0.0), 0);
+        assert_eq!(target_rank(10, 1.0), 9);
+        assert_eq!(target_rank(0, 0.5), 0);
+    }
+
+    #[test]
+    fn target_rank_p99() {
+        assert_eq!(target_rank(1000, 0.99), 990);
+    }
+
+    #[test]
+    #[should_panic]
+    fn target_rank_rejects_bad_q() {
+        target_rank(10, 1.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! `repro` — the gkselect launcher.
+//!
+//! Subcommands cover the paper's full evaluation surface; every figure and
+//! table in EXPERIMENTS.md names the exact invocation that regenerated it.
+//!
+//! ```text
+//! repro quantile  --algorithm gk-select --n 1e8 --q 0.5 --distribution uniform [--verify]
+//! repro bench fig      --nodes 10 --max-exp 8 --trials 3
+//! repro bench dist     --n 1e8 --nodes 30 --trials 20
+//! repro bench table4   --nodes 10
+//! repro bench table5   --n 4e6 --nodes 10
+//! repro bench ablation --n 8e6 --nodes 10
+//! repro calibrate
+//! repro validate --n 2e5
+//! repro config
+//! ```
+//!
+//! Global flags: `--config <path>` (TOML), `--backend native|pjrt`.
+
+use anyhow::{bail, Result};
+use gkselect::config::ReproConfig;
+use gkselect::data::Distribution;
+use gkselect::harness::{self, AlgoChoice};
+use gkselect::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+repro — GK Select: quick and exact distributed quantile computation
+
+USAGE:
+  repro <command> [flags]
+
+COMMANDS:
+  quantile   run one algorithm on generated data and print its report
+             --algorithm gk-select|afs|jeffers|full-sort|gk-sketch|hist-select
+             --n <count> --q <quantile> --distribution uniform|zipf|bimodal|sorted
+             --nodes <count> --verify
+  bench fig       Figs. 1–2: runtime vs n   (--nodes --max-exp --trials)
+  bench dist      Figs. 3–4: distribution CIs (--n --nodes --trials)
+  bench table4    Table IV: scaling exponents (--nodes)
+  bench table5    Table V: measured counters  (--n --nodes)
+  bench ablation  ε sweep                     (--n --nodes)
+  calibrate  measure this box's per-element costs
+  validate   cross-check all algorithms vs the oracle (--n)
+  config     print the effective config
+
+GLOBAL FLAGS:
+  --config <path>    TOML config (default ./repro.toml if present)
+  --backend <name>   native | pjrt (pjrt needs `make artifacts`)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.path.is_empty() || args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    let cfg_path = args.str_opt("config").map(PathBuf::from);
+    let mut cfg = ReproConfig::load_or_default(cfg_path.as_deref().map(Path::new))?;
+    if let Some(b) = args.str_opt("backend") {
+        cfg.backend = b.to_string();
+    }
+
+    match args.path[0].as_str() {
+        "quantile" => {
+            args.ensure_known(&[
+                "config", "backend", "algorithm", "n", "q", "distribution", "nodes", "verify",
+            ])?;
+            let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
+            let n = args.u64_or("n", 1_000_000)?;
+            let q = args.f64_or("q", 0.5)?;
+            let dist: Distribution = args.str_or("distribution", "uniform").parse()?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            harness::run_quantile(&cfg, algorithm, n, q, dist, args.has("verify"))
+        }
+        "bench" => {
+            let which = args.path.get(1).map(String::as_str).unwrap_or("");
+            match which {
+                "fig" => {
+                    args.ensure_known(&["config", "backend", "nodes", "max-exp", "trials"])?;
+                    harness::bench_fig(
+                        &cfg,
+                        args.usize_or("nodes", 10)?,
+                        args.u64_or("max-exp", 8)? as u32,
+                        args.u64_or("trials", 3)? as u32,
+                    )
+                }
+                "dist" => {
+                    args.ensure_known(&["config", "backend", "n", "nodes", "trials"])?;
+                    harness::bench_dist(
+                        &cfg,
+                        args.u64_or("n", 100_000_000)?,
+                        args.usize_or("nodes", 30)?,
+                        args.u64_or("trials", 20)? as u32,
+                    )
+                }
+                "table4" => {
+                    args.ensure_known(&["config", "backend", "nodes"])?;
+                    harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
+                }
+                "table5" => {
+                    args.ensure_known(&["config", "backend", "n", "nodes"])?;
+                    harness::bench_table5(
+                        &cfg,
+                        args.u64_or("n", 4_000_000)?,
+                        args.usize_or("nodes", 10)?,
+                    )
+                }
+                "ablation" => {
+                    args.ensure_known(&["config", "backend", "n", "nodes"])?;
+                    harness::bench_ablation(
+                        &cfg,
+                        args.u64_or("n", 8_000_000)?,
+                        args.usize_or("nodes", 10)?,
+                    )
+                }
+                other => bail!("unknown bench '{other}' (fig|dist|table4|table5|ablation)"),
+            }
+        }
+        "calibrate" => harness::calibrate(),
+        "validate" => {
+            args.ensure_known(&["config", "backend", "n"])?;
+            harness::validate(&cfg, args.u64_or("n", 200_000)?)
+        }
+        "config" => {
+            print!("{}", cfg.to_toml());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}

@@ -1,0 +1,180 @@
+//! Kernel backend trait + the native reference implementation.
+
+use crate::Key;
+
+/// Three-way pivot classification counts (lt, eq, gt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PivotCounts {
+    pub lt: u64,
+    pub eq: u64,
+    pub gt: u64,
+}
+
+impl PivotCounts {
+    pub fn total(&self) -> u64 {
+        self.lt + self.eq + self.gt
+    }
+
+    pub fn add(&mut self, other: PivotCounts) {
+        self.lt += other.lt;
+        self.eq += other.eq;
+        self.gt += other.gt;
+    }
+}
+
+/// Band classification counts (below lo, inside [lo, hi], above hi).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BandCounts {
+    pub below: u64,
+    pub band: u64,
+    pub above: u64,
+}
+
+/// The executor-side compute hot spots, as implemented by either the
+/// AOT/PJRT path or native rust. All counts are over the full slice.
+pub trait KernelBackend {
+    /// `[|{x < pivot}|, |{x == pivot}|, |{x > pivot}|]`.
+    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts;
+
+    /// `[|{x < lo}|, |{lo <= x <= hi}|, |{x > hi}|]`.
+    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts;
+
+    /// Equi-width histogram over `[lo, lo + nbins*width)`, out-of-range
+    /// clamped into the edge bins.
+    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64>;
+
+    /// `(min, max)` or `None` when empty.
+    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)>;
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Plain-rust reference backend (also the fastest on this CPU-only box —
+/// see EXPERIMENTS.md §Perf for the measured comparison).
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl KernelBackend for NativeBackend {
+    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts {
+        // branchless accumulation: the compiler vectorizes the compares
+        let mut lt = 0u64;
+        let mut eq = 0u64;
+        for &v in data {
+            lt += u64::from(v < pivot);
+            eq += u64::from(v == pivot);
+        }
+        PivotCounts {
+            lt,
+            eq,
+            gt: data.len() as u64 - lt - eq,
+        }
+    }
+
+    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
+        let mut below = 0u64;
+        let mut band = 0u64;
+        for &v in data {
+            below += u64::from(v < lo);
+            band += u64::from(v >= lo && v <= hi);
+        }
+        BandCounts {
+            below,
+            band,
+            above: data.len() as u64 - below - band,
+        }
+    }
+
+    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
+        assert!(width > 0 && nbins > 0);
+        let mut hist = vec![0u64; nbins];
+        let top = (nbins - 1) as i64;
+        for &v in data {
+            let b = ((v as i64 - lo).div_euclid(width)).clamp(0, top) as usize;
+            hist[b] += 1;
+        }
+        hist
+    }
+
+    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)> {
+        data.iter()
+            .fold(None, |acc, &v| match acc {
+                None => Some((v, v)),
+                Some((lo, hi)) => Some((lo.min(v), hi.max(v))),
+            })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::SplitMix64;
+
+    #[test]
+    fn count_pivot_basic() {
+        let mut b = NativeBackend::new();
+        let c = b.count_pivot(&[1, 2, 3, 3, 4, 5], 3);
+        assert_eq!(c, PivotCounts { lt: 2, eq: 2, gt: 2 });
+        assert_eq!(c.total(), 6);
+    }
+
+    #[test]
+    fn count_pivot_empty() {
+        let mut b = NativeBackend::new();
+        assert_eq!(b.count_pivot(&[], 0).total(), 0);
+    }
+
+    #[test]
+    fn band_count_partition_of_input() {
+        let mut b = NativeBackend::new();
+        let mut rng = SplitMix64::new(1);
+        let data: Vec<Key> = (0..10_000).map(|_| (rng.next_u64() % 1000) as Key).collect();
+        let c = b.band_count(&data, 200, 700);
+        assert_eq!(c.below + c.band + c.above, 10_000);
+        assert_eq!(c.below, data.iter().filter(|&&v| v < 200).count() as u64);
+    }
+
+    #[test]
+    fn histogram_mass_and_clamping() {
+        let mut b = NativeBackend::new();
+        let h = b.histogram(&[-100, 0, 5, 9, 100], 0, 5, 2);
+        // bins: [0,5) and [5,10); -100 clamps to 0, 100 clamps to 1
+        assert_eq!(h, vec![2, 3]);
+    }
+
+    #[test]
+    fn histogram_negative_lo_div_euclid() {
+        let mut b = NativeBackend::new();
+        // lo=-10, width=10, bins over [-10, 10): -1 is in bin 0, 1 in bin 1
+        let h = b.histogram(&[-1, 1], -10, 10, 2);
+        assert_eq!(h, vec![1, 1]);
+    }
+
+    #[test]
+    fn minmax_extremes() {
+        let mut b = NativeBackend::new();
+        assert_eq!(b.minmax(&[]), None);
+        assert_eq!(b.minmax(&[5]), Some((5, 5)));
+        assert_eq!(
+            b.minmax(&[Key::MAX, 0, Key::MIN]),
+            Some((Key::MIN, Key::MAX))
+        );
+    }
+
+    #[test]
+    fn pivot_counts_add() {
+        let mut a = PivotCounts { lt: 1, eq: 2, gt: 3 };
+        a.add(PivotCounts { lt: 10, eq: 20, gt: 30 });
+        assert_eq!(a, PivotCounts { lt: 11, eq: 22, gt: 33 });
+    }
+}

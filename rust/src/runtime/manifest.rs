@@ -1,0 +1,157 @@
+//! `artifacts/manifest.json` — geometry contract between `aot.py` and the
+//! rust loader. The python side writes it next to the HLO text files so
+//! the rust side never hard-codes buffer shapes.
+
+use crate::util::minijson::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub bytes: u64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Keys per executable call (the static HLO buffer length).
+    pub buf_len: usize,
+    /// Keys per VMEM tile in the Pallas grid.
+    pub chunk: usize,
+    /// Tile used by the histogram kernel.
+    pub hist_chunk: usize,
+    /// Histogram bins.
+    pub nbins: usize,
+    /// Key dtype tag (always "i32" today).
+    pub dtype: String,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .with_context(|| format!("manifest missing integer field '{key}'"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = minijson::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts' object")?;
+        for (kind, entry) in arts {
+            artifacts.insert(
+                kind.clone(),
+                ArtifactEntry {
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("artifact '{kind}' missing 'file'"))?
+                        .to_string(),
+                    bytes: entry.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+                },
+            );
+        }
+
+        let m = Manifest {
+            buf_len: field_u64(&j, "buf_len")? as usize,
+            chunk: field_u64(&j, "chunk")? as usize,
+            hist_chunk: field_u64(&j, "hist_chunk")? as usize,
+            nbins: field_u64(&j, "nbins")? as usize,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .context("manifest missing 'dtype'")?
+                .to_string(),
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        anyhow::ensure!(
+            m.buf_len > 0 && m.chunk > 0 && m.buf_len % m.chunk == 0,
+            "bad geometry: buf_len={} chunk={}",
+            m.buf_len,
+            m.chunk
+        );
+        anyhow::ensure!(m.dtype == "i32", "unsupported key dtype {}", m.dtype);
+        Ok(m)
+    }
+
+    /// Absolute path of one artifact's HLO text.
+    pub fn artifact_path(&self, kind: &str) -> Result<PathBuf> {
+        let e = self
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("artifact '{kind}' missing from manifest"))?;
+        Ok(self.dir.join(&e.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("gkselect_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"buf_len":131072,"chunk":16384,"hist_chunk":4096,"nbins":128,
+                "dtype":"i32","artifacts":{"count_pivot":{"file":"count_pivot.hlo.txt","bytes":10}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buf_len, 131072);
+        assert_eq!(m.nbins, 128);
+        assert!(m
+            .artifact_path("count_pivot")
+            .unwrap()
+            .ends_with("count_pivot.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let dir = std::env::temp_dir().join("gkselect_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{"buf_len":100,"chunk":64,"hist_chunk":64,"nbins":8,"dtype":"i32","artifacts":{}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let dir = std::env::temp_dir().join("gkselect_manifest_dtype");
+        write_manifest(
+            &dir,
+            r#"{"buf_len":128,"chunk":64,"hist_chunk":64,"nbins":8,"dtype":"f64","artifacts":{}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_actionable() {
+        let dir = std::env::temp_dir().join("gkselect_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(
+            err.contains("make artifacts"),
+            "error should tell the user what to run: {err}"
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Runtime layer: AOT-compiled XLA artifacts on the L3 hot path.
+//!
+//! `make artifacts` lowers the L2 jax pipeline (whose bodies are the L1
+//! Pallas kernels) to HLO **text** under `artifacts/`; [`PjrtRuntime`]
+//! loads them through the PJRT CPU client (`xla` crate) at startup and
+//! exposes typed entry points. Python never runs at request time.
+//!
+//! Two interchangeable backends implement [`KernelBackend`]:
+//!
+//! * [`PjrtBackend`] — streams partitions through the compiled
+//!   executables `BUF_LEN` keys at a time (static HLO shapes; the live
+//!   prefix length travels in the `valid` scalar).
+//! * [`NativeBackend`] — plain rust loops, bit-identical results; the
+//!   correctness oracle for the PJRT path and the perf comparison point
+//!   (interpret-mode Pallas on CPU is a correctness vehicle, not a speed
+//!   one — DESIGN.md §Perf).
+
+pub mod kernels;
+pub mod manifest;
+pub mod pjrt;
+
+pub use kernels::{BandCounts, KernelBackend, NativeBackend, PivotCounts};
+pub use manifest::Manifest;
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Pick a backend by name ("native" or "pjrt"), loading artifacts from
+/// `dir` for the pjrt path.
+pub fn backend_from_name(name: &str, dir: &Path) -> Result<Box<dyn KernelBackend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "pjrt" => Ok(Box::new(PjrtBackend::load(dir)?)),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|pjrt)"),
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT backend: load `artifacts/*.hlo.txt`, compile once on the CPU
+//! client, stream partitions through the executables.
+//!
+//! Interchange is HLO text (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! HLO shapes are static, so each executable consumes exactly `buf_len`
+//! keys; the wrapper pads the tail and passes the live length in the
+//! `valid` scalar — the kernels mask everything past it.
+
+use super::kernels::{BandCounts, KernelBackend, PivotCounts};
+use super::manifest::Manifest;
+use crate::Key;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Compiled artifact handles + reusable staging buffer.
+pub struct PjrtBackend {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    count_pivot: xla::PjRtLoadedExecutable,
+    band_count: xla::PjRtLoadedExecutable,
+    histogram: xla::PjRtLoadedExecutable,
+    minmax: xla::PjRtLoadedExecutable,
+    buf_len: usize,
+    nbins: usize,
+    /// Staging buffer reused across calls (avoids a BUF_LEN alloc per
+    /// chunk — §Perf iteration 1).
+    stage: Vec<Key>,
+}
+
+impl PjrtBackend {
+    /// Load + compile every artifact listed in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.artifact_path(kind)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {kind}"))
+        };
+        Ok(Self {
+            count_pivot: compile("count_pivot")?,
+            band_count: compile("band_count")?,
+            histogram: compile("histogram")?,
+            minmax: compile("minmax")?,
+            buf_len: manifest.buf_len,
+            nbins: manifest.nbins,
+            stage: vec![0; manifest.buf_len],
+            client,
+        })
+    }
+
+    /// Stage `chunk` into the fixed-size buffer (pad tail with zeros —
+    /// masked off by `valid`) and return the literal plus live length.
+    fn stage_chunk(&mut self, chunk: &[Key]) -> (xla::Literal, i64) {
+        let n = chunk.len().min(self.buf_len);
+        self.stage[..n].copy_from_slice(&chunk[..n]);
+        self.stage[n..].fill(0);
+        (xla::Literal::vec1(&self.stage), n as i64)
+    }
+
+    fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+}
+
+impl KernelBackend for PjrtBackend {
+    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts {
+        let mut acc = PivotCounts::default();
+        for chunk in data.chunks(self.buf_len.max(1)) {
+            let (x, n) = self.stage_chunk(chunk);
+            let out = Self::run1(
+                &self.count_pivot,
+                &[x, xla::Literal::vec1(&[pivot]), xla::Literal::vec1(&[n])],
+            )
+            .expect("count_pivot execution failed");
+            let v = out.to_vec::<i64>().expect("count_pivot output");
+            acc.add(PivotCounts {
+                lt: v[0] as u64,
+                eq: v[1] as u64,
+                gt: v[2] as u64,
+            });
+        }
+        acc
+    }
+
+    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
+        let mut acc = BandCounts::default();
+        for chunk in data.chunks(self.buf_len.max(1)) {
+            let (x, n) = self.stage_chunk(chunk);
+            let out = Self::run1(
+                &self.band_count,
+                &[
+                    x,
+                    xla::Literal::vec1(&[lo]),
+                    xla::Literal::vec1(&[hi]),
+                    xla::Literal::vec1(&[n]),
+                ],
+            )
+            .expect("band_count execution failed");
+            let v = out.to_vec::<i64>().expect("band_count output");
+            acc.below += v[0] as u64;
+            acc.band += v[1] as u64;
+            acc.above += v[2] as u64;
+        }
+        acc
+    }
+
+    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
+        assert_eq!(
+            nbins, self.nbins,
+            "artifact compiled for {} bins, caller wants {nbins}",
+            self.nbins
+        );
+        let mut hist = vec![0u64; nbins];
+        for chunk in data.chunks(self.buf_len.max(1)) {
+            let (x, n) = self.stage_chunk(chunk);
+            let out = Self::run1(
+                &self.histogram,
+                &[
+                    x,
+                    xla::Literal::vec1(&[lo]),
+                    xla::Literal::vec1(&[width]),
+                    xla::Literal::vec1(&[n]),
+                ],
+            )
+            .expect("histogram execution failed");
+            let v = out.to_vec::<i64>().expect("histogram output");
+            for (h, add) in hist.iter_mut().zip(v) {
+                *h += add as u64;
+            }
+        }
+        hist
+    }
+
+    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)> {
+        if data.is_empty() {
+            return None;
+        }
+        let mut lo = Key::MAX;
+        let mut hi = Key::MIN;
+        for chunk in data.chunks(self.buf_len.max(1)) {
+            let (x, n) = self.stage_chunk(chunk);
+            let out = Self::run1(&self.minmax, &[x, xla::Literal::vec1(&[n])])
+                .expect("minmax execution failed");
+            let v = out.to_vec::<Key>().expect("minmax output");
+            lo = lo.min(v[0]);
+            hi = hi.max(v[1]);
+        }
+        Some((lo, hi))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

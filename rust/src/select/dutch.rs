@@ -1,0 +1,132 @@
+//! Dutch national flag (three-way) partition.
+//!
+//! One linear pass rearranges the slice into `[< pivot | == pivot |
+//! > pivot]` and reports the two boundaries. This is the executor-side
+//! workhorse: AFS/Jeffers run it every round to count and discard, and
+//! GK Select's `secondPass` runs it once before extracting the `|Δk|`
+//! candidate band (paper appendix, Fig. 5).
+
+/// Boundaries of a three-way partition: `lt` = index one past the last
+/// `< pivot` element, `gt` = index of the first `> pivot` element.
+/// Elements in `a[lt..gt]` equal the pivot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DutchSplit {
+    pub lt: usize,
+    pub gt: usize,
+}
+
+impl DutchSplit {
+    /// Count of elements strictly below the pivot.
+    pub fn below(&self) -> usize {
+        self.lt
+    }
+
+    /// Count of elements equal to the pivot.
+    pub fn equal(&self) -> usize {
+        self.gt - self.lt
+    }
+}
+
+/// Partition `a` in place around `pivot`; single pass, no allocation.
+pub fn dutch_partition<T: Ord + Copy>(a: &mut [T], pivot: T) -> DutchSplit {
+    let mut lo = 0usize;
+    let mut mid = 0usize;
+    let mut hi = a.len();
+    while mid < hi {
+        if a[mid] < pivot {
+            a.swap(lo, mid);
+            lo += 1;
+            mid += 1;
+        } else if a[mid] > pivot {
+            hi -= 1;
+            a.swap(mid, hi);
+        } else {
+            mid += 1;
+        }
+    }
+    DutchSplit { lt: lo, gt: hi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::SplitMix64;
+
+    fn check(a: &mut [i32], pivot: i32) -> DutchSplit {
+        let mut sorted = a.to_vec();
+        sorted.sort_unstable();
+        let s = dutch_partition(a, pivot);
+        // structural invariants
+        assert!(a[..s.lt].iter().all(|&x| x < pivot));
+        assert!(a[s.lt..s.gt].iter().all(|&x| x == pivot));
+        assert!(a[s.gt..].iter().all(|&x| x > pivot));
+        // permutation preserved
+        let mut after = a.to_vec();
+        after.sort_unstable();
+        assert_eq!(after, sorted);
+        s
+    }
+
+    #[test]
+    fn basic_three_way() {
+        let mut a = vec![5, 1, 5, 9, 5, 3, 7];
+        let s = check(&mut a, 5);
+        assert_eq!(s.below(), 2);
+        assert_eq!(s.equal(), 3);
+    }
+
+    #[test]
+    fn pivot_absent() {
+        let mut a = vec![1, 9, 3, 7];
+        let s = check(&mut a, 5);
+        assert_eq!(s.below(), 2);
+        assert_eq!(s.equal(), 0);
+    }
+
+    #[test]
+    fn all_equal() {
+        let mut a = vec![4; 100];
+        let s = check(&mut a, 4);
+        assert_eq!(s.below(), 0);
+        assert_eq!(s.equal(), 100);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut a: Vec<i32> = vec![];
+        let s = dutch_partition(&mut a, 5);
+        assert_eq!(s, DutchSplit { lt: 0, gt: 0 });
+        let mut a = vec![3];
+        let s = check(&mut a, 3);
+        assert_eq!(s.equal(), 1);
+    }
+
+    #[test]
+    fn pivot_below_all_and_above_all() {
+        let mut a = vec![5, 6, 7];
+        let s = check(&mut a, 1);
+        assert_eq!((s.lt, s.gt), (0, 0));
+        let mut a = vec![5, 6, 7];
+        let s = check(&mut a, 100);
+        assert_eq!((s.lt, s.gt), (3, 3));
+    }
+
+    #[test]
+    fn randomized_stress() {
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..50 {
+            let n = rng.below(200) + 1;
+            let mut a: Vec<i32> = (0..n).map(|_| (rng.next_u64() % 50) as i32 - 25).collect();
+            let pivot = a[rng.below(n)];
+            check(&mut a, pivot);
+        }
+    }
+
+    #[test]
+    fn extremes() {
+        let mut a = vec![i32::MIN, i32::MAX, 0, i32::MIN, i32::MAX];
+        let s = check(&mut a, 0);
+        assert_eq!(s.below(), 2);
+        assert_eq!(s.equal(), 1);
+    }
+}

@@ -1,0 +1,107 @@
+//! BFPRT median-of-medians ([2]): deterministic worst-case `O(n)`
+//! selection.
+//!
+//! Groups of five, median of the group medians as pivot — guarantees a
+//! 30/70 split. Constants are large (the paper notes randomized variants
+//! win in practice), so this is the *baseline* the select benches compare
+//! quickselect/Floyd–Rivest against, and the fallback for adversarial
+//! inputs.
+
+use super::dutch::dutch_partition;
+
+fn median_of_five<T: Ord + Copy>(a: &mut [T]) -> T {
+    // insertion sort of at most 5 elements
+    for i in 1..a.len() {
+        let mut j = i;
+        while j > 0 && a[j - 1] > a[j] {
+            a.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+    a[a.len() / 2]
+}
+
+fn mom_pivot<T: Ord + Copy>(a: &mut [T]) -> T {
+    if a.len() <= 5 {
+        return median_of_five(a);
+    }
+    let mut medians: Vec<T> = a.chunks_mut(5).map(median_of_five).collect();
+    let mid = medians.len() / 2;
+    bfprt_select(&mut medians, mid)
+}
+
+/// Deterministic selection of the k-th smallest (0-based), worst-case
+/// linear time.
+pub fn bfprt_select<T: Ord + Copy>(a: &mut [T], k: usize) -> T {
+    assert!(k < a.len(), "rank {k} out of bounds for len {}", a.len());
+    let mut lo = 0usize;
+    let mut hi = a.len();
+    loop {
+        if hi - lo <= 5 {
+            let sub = &mut a[lo..hi];
+            for i in 1..sub.len() {
+                let mut j = i;
+                while j > 0 && sub[j - 1] > sub[j] {
+                    sub.swap(j - 1, j);
+                    j -= 1;
+                }
+            }
+            return a[k];
+        }
+        // pivot from a scratch copy: mom_pivot reorders its input and we
+        // only need the value
+        let mut scratch = a[lo..hi].to_vec();
+        let pivot = mom_pivot(&mut scratch);
+        let split = dutch_partition(&mut a[lo..hi], pivot);
+        let (plt, pgt) = (lo + split.lt, lo + split.gt);
+        if k < plt {
+            hi = plt;
+        } else if k >= pgt {
+            lo = pgt;
+        } else {
+            return pivot;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::SplitMix64;
+
+    fn oracle(mut v: Vec<i32>, k: usize) -> i32 {
+        v.sort_unstable();
+        v[k]
+    }
+
+    #[test]
+    fn selects_every_rank_small() {
+        let base = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
+        for k in 0..base.len() {
+            let mut a = base.clone();
+            assert_eq!(bfprt_select(&mut a, k), oracle(base.clone(), k));
+        }
+    }
+
+    #[test]
+    fn worst_case_inputs() {
+        let mut a: Vec<i32> = (0..2_000).collect();
+        assert_eq!(bfprt_select(&mut a, 1_000), 1_000);
+        let mut a: Vec<i32> = (0..2_000).rev().collect();
+        assert_eq!(bfprt_select(&mut a, 0), 0);
+        let mut a = vec![1; 999];
+        assert_eq!(bfprt_select(&mut a, 500), 1);
+    }
+
+    #[test]
+    fn randomized_against_sort() {
+        let mut rng = SplitMix64::new(31);
+        for _ in 0..20 {
+            let n = rng.below(3_000) + 1;
+            let v: Vec<i32> = (0..n).map(|_| (rng.next_u64() % 500) as i32).collect();
+            let k = rng.below(n);
+            let mut a = v.clone();
+            assert_eq!(bfprt_select(&mut a, k), oracle(v, k));
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Sequential selection substrates (§II-A1): the in-partition primitives
+//! every distributed algorithm composes.
+//!
+//! * [`dutch::dutch_partition`] — three-way (Dutch national flag)
+//!   partition around a pivot, the local pass of AFS/Jeffers rounds and
+//!   GK Select's `secondPass`.
+//! * [`quickselect::quickselect`] — Hoare FIND with random pivots,
+//!   expected linear time.
+//! * [`floyd_rivest::floyd_rivest_select`] — SELECT with sampled pivots,
+//!   expected linear with small constants (the classical analogue of the
+//!   sketch-guided pivot idea).
+//! * [`median_of_medians::bfprt_select`] — BFPRT, worst-case `O(n)`.
+//!
+//! All operate on `&mut [T]`, mirroring the paper's appendix code which
+//! materializes the partition iterator into an array inside
+//! `mapPartitions`.
+
+pub mod dutch;
+pub mod floyd_rivest;
+pub mod median_of_medians;
+pub mod quickselect;
+
+pub use dutch::{dutch_partition, DutchSplit};
+pub use floyd_rivest::floyd_rivest_select;
+pub use median_of_medians::bfprt_select;
+pub use quickselect::{quickselect, select_kth};
+
+/// Deterministic xorshift64* used for pivot choice — no external RNG
+/// dependency, reproducible runs.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be nonzero.
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

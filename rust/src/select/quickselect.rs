@@ -1,0 +1,109 @@
+//! Hoare QuickSelect (FIND, [1]) with random pivots.
+//!
+//! Matches the paper's appendix `quickSelect`: in-place, expected linear,
+//! leaves the slice partitioned so that `a[k]` is the k-th smallest and
+//! everything before/after is ≤/≥ it — which is exactly what `secondPass`
+//! relies on to slice out the candidate band without a sort.
+
+use super::dutch::dutch_partition;
+use super::SplitMix64;
+
+/// Rearrange `a` so `a[k]` is the k-th smallest (0-based); elements below
+/// index `k` are ≤ `a[k]`, elements above are ≥ `a[k]`.
+pub fn quickselect<T: Ord + Copy>(a: &mut [T], k: usize, rng: &mut SplitMix64) {
+    assert!(k < a.len(), "rank {k} out of bounds for len {}", a.len());
+    let mut lo = 0usize;
+    let mut hi = a.len();
+    // invariant: target index k lies in a[lo..hi]
+    loop {
+        if hi - lo <= 1 {
+            return;
+        }
+        let pivot = a[lo + rng.below(hi - lo)];
+        let split = dutch_partition(&mut a[lo..hi], pivot);
+        let (plt, pgt) = (lo + split.lt, lo + split.gt);
+        if k < plt {
+            hi = plt;
+        } else if k >= pgt {
+            lo = pgt;
+        } else {
+            return; // k falls in the == pivot run
+        }
+    }
+}
+
+/// Return the k-th smallest of `a` (0-based) — convenience wrapper.
+pub fn select_kth<T: Ord + Copy>(a: &mut [T], k: usize, seed: u64) -> T {
+    let mut rng = SplitMix64::new(seed);
+    quickselect(a, k, &mut rng);
+    a[k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle(mut v: Vec<i32>, k: usize) -> i32 {
+        v.sort_unstable();
+        v[k]
+    }
+
+    #[test]
+    fn selects_every_rank_small() {
+        let base = vec![9, 1, 8, 2, 7, 3, 6, 4, 5, 0];
+        for k in 0..base.len() {
+            let mut a = base.clone();
+            assert_eq!(select_kth(&mut a, k, 42), oracle(base.clone(), k));
+        }
+    }
+
+    #[test]
+    fn duplicates() {
+        let base = vec![5, 5, 5, 1, 1, 9, 9, 5];
+        for k in 0..base.len() {
+            let mut a = base.clone();
+            assert_eq!(select_kth(&mut a, k, 7), oracle(base.clone(), k));
+        }
+    }
+
+    #[test]
+    fn partitions_around_result() {
+        let mut a: Vec<i32> = (0..500).rev().collect();
+        let mut rng = SplitMix64::new(3);
+        quickselect(&mut a, 250, &mut rng);
+        assert_eq!(a[250], 250);
+        assert!(a[..250].iter().all(|&x| x <= 250));
+        assert!(a[251..].iter().all(|&x| x >= 250));
+    }
+
+    #[test]
+    fn singleton() {
+        assert_eq!(select_kth(&mut [42], 0, 0), 42);
+    }
+
+    #[test]
+    fn adversarial_sorted_input() {
+        let mut a: Vec<i32> = (0..10_000).collect();
+        assert_eq!(select_kth(&mut a, 9_999, 5), 9_999);
+        let mut a: Vec<i32> = (0..10_000).collect();
+        assert_eq!(select_kth(&mut a, 0, 5), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_out_of_bounds_panics() {
+        select_kth(&mut [1, 2, 3], 3, 0);
+    }
+
+    #[test]
+    fn randomized_against_sort() {
+        let mut rng = SplitMix64::new(2024);
+        for _ in 0..30 {
+            let n = rng.below(1000) + 1;
+            let v: Vec<i32> = (0..n).map(|_| (rng.next_u64() % 100) as i32).collect();
+            let k = rng.below(n);
+            let mut a = v.clone();
+            assert_eq!(select_kth(&mut a, k, rng.next_u64()), oracle(v, k));
+        }
+    }
+}

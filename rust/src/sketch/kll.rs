@@ -1,0 +1,287 @@
+//! KLL sketch (Karnin, Lang & Liberty, FOCS'16) — the asymptotically
+//! optimal mergeable quantile summary the paper surveys in §II-B1.
+//!
+//! Included as an alternative pivot source for the sketch-choice
+//! ablation: `O((1/ε)·log log(1/ε))` space versus GK's
+//! `O((1/ε)·log(εn))`, randomized additive-`εn` rank error versus GK's
+//! deterministic bound. `benches/sketch_variants.rs` compares insert
+//! throughput and realized pivot quality against the GK family.
+//!
+//! Standard multi-level compactor design: level `i` stores items of
+//! weight `2^i`; a full level is sorted and every other element (random
+//! offset) is promoted. Capacities decay geometrically (`c = 2/3`) from
+//! `k` at the top level.
+
+use super::QuantileSketch;
+use crate::select::SplitMix64;
+use crate::Key;
+
+/// Default top-level capacity (DataSketches' default; ε ≈ 1.65/k at 99%
+/// confidence → ~0.8% rank error).
+pub const DEFAULT_K: usize = 200;
+
+const DECAY: f64 = 2.0 / 3.0;
+const MIN_LEVEL_CAP: usize = 8;
+
+/// Multi-level compactor KLL sketch.
+#[derive(Debug, Clone)]
+pub struct KllSketch {
+    /// `levels[i]` holds items of weight `2^i` (unsorted except after
+    /// compaction).
+    levels: Vec<Vec<Key>>,
+    k: usize,
+    count: u64,
+    rng: SplitMix64,
+}
+
+impl KllSketch {
+    pub fn new(seed: u64) -> Self {
+        Self::with_k(DEFAULT_K, seed)
+    }
+
+    pub fn with_k(k: usize, seed: u64) -> Self {
+        assert!(k >= 8, "k must be at least 8, got {k}");
+        Self {
+            levels: vec![Vec::new()],
+            k,
+            count: 0,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// Capacity of level `i` when the sketch currently has `num` levels.
+    fn level_capacity(&self, i: usize, num: usize) -> usize {
+        let depth = (num - 1 - i) as i32;
+        ((self.k as f64 * DECAY.powi(depth)).ceil() as usize).max(MIN_LEVEL_CAP)
+    }
+
+    fn total_capacity(&self) -> usize {
+        (0..self.levels.len())
+            .map(|i| self.level_capacity(i, self.levels.len()))
+            .sum()
+    }
+
+    fn total_items(&self) -> usize {
+        self.levels.iter().map(Vec::len).sum()
+    }
+
+    /// Compact the lowest over-full level: sort, keep every other item,
+    /// promote the rest one level up (doubling their weight).
+    fn compress(&mut self) {
+        while self.total_items() > self.total_capacity() {
+            let num = self.levels.len();
+            let mut target = None;
+            for i in 0..num {
+                if self.levels[i].len() > self.level_capacity(i, num) {
+                    target = Some(i);
+                    break;
+                }
+            }
+            // everything within per-level caps but total over: compact
+            // the largest level
+            let i = target.unwrap_or_else(|| {
+                (0..num)
+                    .max_by_key(|&i| self.levels[i].len())
+                    .expect("nonempty")
+            });
+            let mut level = std::mem::take(&mut self.levels[i]);
+            if level.len() < 2 {
+                self.levels[i] = level;
+                return; // nothing to compact — capacity rules say stop
+            }
+            level.sort_unstable();
+            let offset = (self.rng.next_u64() & 1) as usize;
+            let promoted: Vec<Key> = level.iter().skip(offset).step_by(2).copied().collect();
+            if i + 1 == self.levels.len() {
+                self.levels.push(Vec::new());
+            }
+            self.levels[i + 1].extend_from_slice(&promoted);
+        }
+    }
+
+    /// All (value, weight) pairs, sorted by value (query helper).
+    fn weighted_items(&self) -> Vec<(Key, u64)> {
+        let mut items: Vec<(Key, u64)> = Vec::with_capacity(self.total_items());
+        for (i, level) in self.levels.iter().enumerate() {
+            let w = 1u64 << i;
+            items.extend(level.iter().map(|&v| (v, w)));
+        }
+        items.sort_unstable();
+        items
+    }
+
+    /// Number of retained items (space check).
+    pub fn retained(&self) -> usize {
+        self.total_items()
+    }
+}
+
+impl QuantileSketch for KllSketch {
+    fn insert(&mut self, v: Key) {
+        self.levels[0].push(v);
+        self.count += 1;
+        if self.total_items() > self.total_capacity() {
+            self.compress();
+        }
+    }
+
+    fn finalize(&mut self) {}
+
+    fn merge(mut self, other: Self) -> Self {
+        for (i, level) in other.levels.into_iter().enumerate() {
+            if i >= self.levels.len() {
+                self.levels.push(Vec::new());
+            }
+            self.levels[i].extend(level);
+        }
+        self.count += other.count;
+        self.compress();
+        self
+    }
+
+    fn query(&self, q: f64) -> Option<Key> {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return None;
+        }
+        let items = self.weighted_items();
+        let total: u64 = items.iter().map(|&(_, w)| w).sum();
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for &(v, w) in &items {
+            acc += w;
+            if acc >= target {
+                return Some(v);
+            }
+        }
+        items.last().map(|&(v, _)| v)
+    }
+
+    fn count(&self) -> u64 {
+        self.count
+    }
+
+    fn summary_len(&self) -> usize {
+        self.total_items()
+    }
+
+    fn epsilon(&self) -> f64 {
+        1.65 / self.k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::SplitMix64;
+
+    fn rank_error(data: &mut Vec<Key>, sk: &KllSketch, q: f64) -> f64 {
+        data.sort_unstable();
+        let got = sk.query(q).unwrap();
+        let n = data.len() as f64;
+        let lo = data.partition_point(|&x| x < got) as f64;
+        let hi = data.partition_point(|&x| x <= got) as f64;
+        let target = q * n;
+        if target < lo {
+            (lo - target) / n
+        } else if target > hi {
+            (target - hi) / n
+        } else {
+            0.0
+        }
+    }
+
+    #[test]
+    fn rank_error_bounded_random_stream() {
+        let mut rng = SplitMix64::new(3);
+        let mut data: Vec<Key> = (0..200_000).map(|_| rng.next_u64() as Key).collect();
+        let mut sk = KllSketch::new(42);
+        for &v in &data {
+            sk.insert(v);
+        }
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let err = rank_error(&mut data, &sk, q);
+            assert!(err < 0.03, "q={q}: rank error {err}");
+        }
+    }
+
+    #[test]
+    fn space_stays_sublinear() {
+        let mut rng = SplitMix64::new(4);
+        let mut sk = KllSketch::new(1);
+        for _ in 0..1_000_000 {
+            sk.insert(rng.next_u64() as Key);
+        }
+        assert_eq!(sk.count(), 1_000_000);
+        // ~3k retained for k=200 regardless of n
+        assert!(sk.retained() < 5_000, "retained {}", sk.retained());
+    }
+
+    #[test]
+    fn sorted_and_reversed_streams() {
+        for rev in [false, true] {
+            let mut data: Vec<Key> = (0..100_000).collect();
+            if rev {
+                data.reverse();
+            }
+            let mut sk = KllSketch::new(9);
+            for &v in &data {
+                sk.insert(v);
+            }
+            for q in [0.25, 0.5, 0.75] {
+                let err = rank_error(&mut data, &sk, q);
+                assert!(err < 0.03, "rev={rev} q={q}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_preserves_error() {
+        let mut rng = SplitMix64::new(5);
+        let mut all: Vec<Key> = Vec::new();
+        let mut merged = KllSketch::new(11);
+        for part in 0..8 {
+            let mut sk = KllSketch::new(100 + part);
+            for _ in 0..25_000 {
+                let v = (rng.next_u64() % 5_000_000) as Key;
+                sk.insert(v);
+                all.push(v);
+            }
+            merged = merged.merge(sk);
+        }
+        assert_eq!(merged.count(), 200_000);
+        for q in [0.1, 0.5, 0.9] {
+            let err = rank_error(&mut all, &merged, q);
+            assert!(err < 0.04, "merged q={q}: {err}");
+        }
+    }
+
+    #[test]
+    fn tiny_streams_exact() {
+        let mut sk = KllSketch::new(7);
+        for v in [5, 1, 9, 3] {
+            sk.insert(v);
+        }
+        assert_eq!(sk.query(0.0), Some(1));
+        assert_eq!(sk.query(1.0), Some(9));
+        assert_eq!(sk.count(), 4);
+        assert_eq!(KllSketch::new(1).query(0.5), None);
+    }
+
+    #[test]
+    fn duplicates_heavy() {
+        let mut data: Vec<Key> = (0..100_000).map(|i| i % 3).collect();
+        let mut sk = KllSketch::new(13);
+        for &v in &data {
+            sk.insert(v);
+        }
+        let err = rank_error(&mut data, &sk, 0.5);
+        assert!(err < 0.03, "dup median err {err}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_k() {
+        KllSketch::with_k(2, 0);
+    }
+}

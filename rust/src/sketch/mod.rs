@@ -1,0 +1,509 @@
+//! Greenwald–Khanna quantile sketches (§IV-D/E): the approximate substrate
+//! GK Select's pivot comes from.
+//!
+//! Three variants, exactly as the paper dissects them:
+//!
+//! * [`classical::ClassicalGk`] — per-insert binary-search insert with a
+//!   compress every `⌈1/(2ε)⌉` insertions (Greenwald & Khanna 2001).
+//! * [`spark::SparkGk`] — Spark 3.5.5's `QuantileSummaries`: a head
+//!   buffer of `B = 50 000` appended to in `O(1)`, flushed (sort + linear
+//!   merge) when full, compressed past `compressThreshold = 10 000`.
+//! * [`modified::ModifiedGk`] — the paper's mSGK: the head buffer starts
+//!   small and is re-sized to `⌈α·|S|⌉` after every flush+compress,
+//!   recovering the classical `O(log 1/ε + log log εn)` amortized insert.
+//!
+//! All variants share [`GkCore`]: the ordered `(vᵢ, gᵢ, Δᵢ)` summary, the
+//! invariant `gᵢ + Δᵢ ≤ ⌊2εn⌋` (paper Eq. 1), the compress pass, the rank
+//! query, and the Spark-style pairwise merge used by the driver.
+
+pub mod classical;
+pub mod kll;
+pub mod modified;
+pub mod spark;
+
+use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
+use crate::Key;
+
+/// One summary tuple `(vᵢ, gᵢ, Δᵢ)` (paper Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GkTuple {
+    /// Sample value, strictly increasing across the summary.
+    pub v: Key,
+    /// Gap: lower bound on the number of values in `(v_{i-1}, v_i]`.
+    pub g: u64,
+    /// Slack: how far above its minimum rank `v_i`'s true rank may sit.
+    pub delta: u64,
+}
+
+/// Common interface over the sketch variants (what `approxQuantile` and
+/// GK Select's round 1 program against).
+pub trait QuantileSketch: Sized {
+    /// Stream one value in.
+    fn insert(&mut self, v: Key);
+
+    /// Flush any buffered values so queries see everything inserted.
+    fn finalize(&mut self);
+
+    /// Merge two finalized sketches (driver-side; Spark-style delta
+    /// adjustment).
+    fn merge(self, other: Self) -> Self;
+
+    /// Approximate value at quantile `q` (requires `finalize`).
+    fn query(&self, q: f64) -> Option<Key>;
+
+    /// Number of values inserted.
+    fn count(&self) -> u64;
+
+    /// Number of summary tuples currently held.
+    fn summary_len(&self) -> usize;
+
+    /// The ε this sketch was built with.
+    fn epsilon(&self) -> f64;
+}
+
+/// Shared summary state + the paper's core operations.
+#[derive(Debug, Clone)]
+pub struct GkCore {
+    pub samples: Vec<GkTuple>,
+    pub count: u64,
+    pub epsilon: f64,
+}
+
+impl GkCore {
+    /// Build a summary directly from **sorted** data: one sample every
+    /// `⌊2εn⌋` ranks with exact gaps and zero slack (the paper's §IV-D
+    /// "if we have all the data ahead of time" construction). `O(n + S)`
+    /// after the sort, invariant holds by construction — the fast path
+    /// when the executor owns the whole partition (§Perf L3.4).
+    pub fn from_sorted(sorted: &[Key], epsilon: f64) -> Self {
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input not sorted");
+        let mut core = GkCore::new(epsilon);
+        let n = sorted.len();
+        if n == 0 {
+            return core;
+        }
+        core.count = n as u64;
+        let step = ((2.0 * epsilon * n as f64).floor() as usize).max(1);
+        let mut samples = Vec::with_capacity(n / step + 2);
+        samples.push(GkTuple {
+            v: sorted[0],
+            g: 1,
+            delta: 0,
+        });
+        let mut prev = 0usize;
+        let mut i = step;
+        while i < n - 1 {
+            samples.push(GkTuple {
+                v: sorted[i],
+                g: (i - prev) as u64,
+                delta: 0,
+            });
+            prev = i;
+            i += step;
+        }
+        if n > 1 {
+            samples.push(GkTuple {
+                v: sorted[n - 1],
+                g: (n - 1 - prev) as u64,
+                delta: 0,
+            });
+        }
+        core.samples = samples;
+        core
+    }
+
+    pub fn new(epsilon: f64) -> Self {
+        assert!(
+            epsilon > 0.0 && epsilon < 1.0,
+            "epsilon must be in (0,1), got {epsilon}"
+        );
+        Self {
+            samples: Vec::new(),
+            count: 0,
+            epsilon,
+        }
+    }
+
+    /// `⌊2εn⌋` — the invariant's right-hand side at the current count.
+    pub fn threshold(&self) -> u64 {
+        (2.0 * self.epsilon * self.count as f64).floor() as u64
+    }
+
+    /// Paper Eq. 1: every tuple satisfies `g + Δ ≤ ⌊2εn⌋` (we allow the
+    /// two extremes their defining exception of g=1, Δ=0 at tiny n).
+    pub fn invariant_holds(&self) -> bool {
+        let t = self.threshold().max(1);
+        self.samples.iter().all(|s| s.g + s.delta <= t)
+    }
+
+    /// Greedy right-to-left compress: merge tuple `i` into `i+1` while the
+    /// combined gap and slack still satisfy the invariant. `O(|S|)`.
+    pub fn compress(&mut self) {
+        if self.samples.len() <= 2 {
+            return;
+        }
+        let t = self.threshold();
+        let mut out: Vec<GkTuple> = Vec::with_capacity(self.samples.len());
+        // keep both extremes untouched (they pin the exact min/max); walk
+        // the interior right-to-left accumulating into successors
+        let mut iter = self.samples[1..].iter().rev();
+        let mut head = *iter.next().expect("nonempty");
+        out.push(head);
+        for &s in iter {
+            if s.g + head.g + head.delta <= t {
+                // merge s into its successor (drop s, grow successor gap)
+                head.g += s.g;
+                *out.last_mut().expect("nonempty") = head;
+            } else {
+                out.push(s);
+                head = s;
+            }
+        }
+        out.push(self.samples[0]);
+        out.reverse();
+        self.samples = out;
+    }
+
+    /// Merge a *sorted* batch of raw values into the summary in one linear
+    /// pass (Spark's `insertHeadBuffer`): each inserted value gets `g = 1`
+    /// and `Δ = ⌊2εn⌋ - 1` (0 at the extremes).
+    pub fn merge_sorted_batch(&mut self, batch: &[Key]) {
+        if batch.is_empty() {
+            return;
+        }
+        debug_assert!(batch.windows(2).all(|w| w[0] <= w[1]), "batch not sorted");
+        let mut out: Vec<GkTuple> =
+            Vec::with_capacity(self.samples.len() + batch.len());
+        let mut si = 0usize;
+        for (bi, &v) in batch.iter().enumerate() {
+            while si < self.samples.len() && self.samples[si].v <= v {
+                out.push(self.samples[si]);
+                si += 1;
+            }
+            self.count += 1;
+            let at_edge = out.is_empty() || (si == self.samples.len() && bi == batch.len() - 1);
+            let delta = if at_edge {
+                0
+            } else {
+                self.threshold().saturating_sub(1)
+            };
+            out.push(GkTuple { v, g: 1, delta });
+        }
+        out.extend_from_slice(&self.samples[si..]);
+        self.samples = out;
+    }
+
+    /// Rank query (Spark's `query` semantics): the first sample whose
+    /// rank bounds sit within `targetError = εn` of `rank` (1-based).
+    /// GK's guarantee says one exists while the invariant holds; after
+    /// lossy merges we fall back to the sample whose bound interval is
+    /// closest to the target.
+    pub fn query_rank(&self, rank: u64) -> Option<Key> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let target_error = self.epsilon * self.count as f64;
+        let rank_f = rank as f64;
+        let mut min_rank = 0u64;
+        let mut best: Option<(f64, Key)> = None;
+        for s in &self.samples {
+            min_rank += s.g;
+            let max_rank = (min_rank + s.delta) as f64;
+            if max_rank - target_error <= rank_f && rank_f <= min_rank as f64 + target_error {
+                return Some(s.v);
+            }
+            // distance of rank to the sample's bound interval
+            let dist = if rank_f < min_rank as f64 {
+                min_rank as f64 - rank_f
+            } else if rank_f > max_rank {
+                rank_f - max_rank
+            } else {
+                0.0
+            };
+            if best.map(|(d, _)| dist < d).unwrap_or(true) {
+                best = Some((dist, s.v));
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
+    /// Value at quantile `q` (Spark convention: rank = ⌈q·n⌉ clamped ≥1).
+    pub fn query_quantile(&self, q: f64) -> Option<Key> {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        self.query_rank(rank)
+    }
+
+    /// Spark-style merge of two compressed summaries: merge-sort the
+    /// sample lists; a sample strictly inside the other summary's value
+    /// range picks up the other's `⌊2εn⌋` as extra slack.
+    pub fn merge_with(mut self, mut other: GkCore) -> GkCore {
+        if other.count == 0 {
+            return self;
+        }
+        if self.count == 0 {
+            return other;
+        }
+        let eps = self.epsilon.max(other.epsilon);
+        let add_to_self = (2.0 * other.epsilon * other.count as f64).floor() as u64;
+        let add_to_other = (2.0 * self.epsilon * self.count as f64).floor() as u64;
+
+        let (a, b) = (&mut self.samples, &mut other.samples);
+        let mut merged: Vec<GkTuple> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() || j < b.len() {
+            let take_a = j >= b.len() || (i < a.len() && a[i].v <= b[j].v);
+            if take_a {
+                let mut s = a[i];
+                // strictly inside other's range?
+                if j > 0 && j < b.len() {
+                    s.delta += add_to_self;
+                }
+                merged.push(s);
+                i += 1;
+            } else {
+                let mut s = b[j];
+                if i > 0 && i < a.len() {
+                    s.delta += add_to_other;
+                }
+                merged.push(s);
+                j += 1;
+            }
+        }
+
+        let mut out = GkCore {
+            samples: merged,
+            count: self.count + other.count,
+            epsilon: eps,
+        };
+        out.compress();
+        out
+    }
+}
+
+impl NetSize for GkCore {
+    fn net_bytes(&self) -> u64 {
+        // (v, g, delta) serialized per tuple + count/epsilon header
+        CONTAINER_OVERHEAD + 16 + self.samples.len() as u64 * (4 + 8 + 8)
+    }
+}
+
+/// Exhaustive oracle check used by tests: every query across the quantile
+/// range lands within `slack · n` ranks of the true rank.
+#[cfg(test)]
+pub(crate) fn assert_rank_error_bounded(
+    core: &GkCore,
+    mut data: Vec<Key>,
+    slack: f64,
+    label: &str,
+) {
+    data.sort_unstable();
+    let n = data.len() as f64;
+    for pct in 1..=99 {
+        let q = pct as f64 / 100.0;
+        let got = core.query_quantile(q).expect("nonempty sketch");
+        // true rank range of `got` in data (1-based)
+        let lo = data.partition_point(|&x| x < got) as f64 + 1.0;
+        let hi = data.partition_point(|&x| x <= got) as f64;
+        let target = (q * n).ceil().max(1.0);
+        let err = if target < lo {
+            lo - target
+        } else if target > hi {
+            target - hi
+        } else {
+            0.0
+        };
+        assert!(
+            err <= (slack * n).ceil() + 1.0,
+            "{label}: rank error {err} > {} at q={q} (n={n}, got={got})",
+            (slack * n).ceil() + 1.0,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(core: &mut GkCore, values: &[Key]) {
+        // classical-style: batch of one
+        for &v in values {
+            core.merge_sorted_batch(&[v]);
+        }
+    }
+
+    #[test]
+    fn empty_core_queries_none() {
+        let core = GkCore::new(0.01);
+        assert_eq!(core.query_quantile(0.5), None);
+        assert!(core.invariant_holds());
+    }
+
+    #[test]
+    fn gaps_sum_to_count() {
+        let mut core = GkCore::new(0.1);
+        stream(&mut core, &(0..1000).collect::<Vec<_>>());
+        let total_g: u64 = core.samples.iter().map(|s| s.g).sum();
+        assert_eq!(total_g, 1000);
+        core.compress();
+        let total_g: u64 = core.samples.iter().map(|s| s.g).sum();
+        assert_eq!(total_g, 1000, "compress must preserve total gap mass");
+    }
+
+    #[test]
+    fn compress_shrinks_and_keeps_invariant() {
+        let mut core = GkCore::new(0.05);
+        stream(&mut core, &(0..5000).rev().collect::<Vec<_>>());
+        let before = core.samples.len();
+        core.compress();
+        assert!(core.samples.len() < before);
+        assert!(core.invariant_holds());
+    }
+
+    #[test]
+    fn merge_sorted_batch_bulk() {
+        let mut core = GkCore::new(0.01);
+        let batch: Vec<Key> = (0..10_000).collect();
+        core.merge_sorted_batch(&batch);
+        assert_eq!(core.count, 10_000);
+        assert!(core.samples.windows(2).all(|w| w[0].v <= w[1].v));
+    }
+
+    #[test]
+    fn query_exact_on_small_stream() {
+        let mut core = GkCore::new(0.001);
+        stream(&mut core, &(1..=100).collect::<Vec<_>>());
+        core.compress();
+        // with epsilon tiny, the sketch is near-exact on 100 points
+        let med = core.query_quantile(0.5).unwrap();
+        assert!((49..=51).contains(&med), "median {med} out of band");
+    }
+
+    #[test]
+    fn rank_error_bounded_uniform() {
+        let mut core = GkCore::new(0.05);
+        let mut rng = crate::select::SplitMix64::new(4);
+        let data: Vec<Key> = (0..20_000)
+            .map(|_| (rng.next_u64() % 2_000_000) as i64 as Key)
+            .collect();
+        let mut sorted = data.clone();
+        sorted.sort_unstable();
+        for chunk in data.chunks(1000) {
+            let mut b = chunk.to_vec();
+            b.sort_unstable();
+            core.merge_sorted_batch(&b);
+            core.compress();
+        }
+        assert_rank_error_bounded(&core, data, 0.05, "uniform stream");
+    }
+
+    #[test]
+    fn merge_two_cores_preserves_count_and_order() {
+        let mut a = GkCore::new(0.02);
+        let mut b = GkCore::new(0.02);
+        a.merge_sorted_batch(&(0..5000).collect::<Vec<_>>());
+        a.compress();
+        b.merge_sorted_batch(&(5000..10_000).collect::<Vec<_>>());
+        b.compress();
+        let m = a.merge_with(b);
+        assert_eq!(m.count, 10_000);
+        assert!(m.samples.windows(2).all(|w| w[0].v <= w[1].v));
+    }
+
+    #[test]
+    fn merged_rank_error_bounded() {
+        let mut rng = crate::select::SplitMix64::new(9);
+        let data: Vec<Key> = (0..40_000)
+            .map(|_| (rng.next_u64() % 1_000_000) as i64 as Key)
+            .collect();
+        let mut cores: Vec<GkCore> = data
+            .chunks(10_000)
+            .map(|chunk| {
+                let mut c = GkCore::new(0.02);
+                let mut b = chunk.to_vec();
+                b.sort_unstable();
+                c.merge_sorted_batch(&b);
+                c.compress();
+                c
+            })
+            .collect();
+        let mut merged = cores.remove(0);
+        for c in cores {
+            merged = merged.merge_with(c);
+        }
+        assert_eq!(merged.count, 40_000);
+        // pairwise merge can accumulate slack; allow 2x epsilon
+        assert_rank_error_bounded(&merged, data, 0.04, "merged");
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = GkCore::new(0.01);
+        a.merge_sorted_batch(&[1, 2, 3]);
+        let b = GkCore::new(0.01);
+        let m = a.clone().merge_with(b);
+        assert_eq!(m.count, 3);
+        let b = GkCore::new(0.01);
+        let m2 = b.merge_with(a);
+        assert_eq!(m2.count, 3);
+    }
+
+    #[test]
+    fn net_bytes_tracks_summary_len() {
+        let mut a = GkCore::new(0.01);
+        a.merge_sorted_batch(&(0..100).collect::<Vec<_>>());
+        assert_eq!(a.net_bytes(), CONTAINER_OVERHEAD + 16 + 100 * 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_epsilon() {
+        GkCore::new(0.0);
+    }
+
+    #[test]
+    fn from_sorted_invariant_and_error() {
+        let mut rng = crate::select::SplitMix64::new(21);
+        let mut data: Vec<Key> = (0..50_000)
+            .map(|_| (rng.next_u64() % 3_000_000) as Key)
+            .collect();
+        let mut sorted = data.clone();
+        sorted.sort_unstable();
+        let core = GkCore::from_sorted(&sorted, 0.01);
+        assert_eq!(core.count, 50_000);
+        assert!(core.invariant_holds());
+        assert!(core.samples.windows(2).all(|w| w[0].v <= w[1].v));
+        let total_g: u64 = core.samples.iter().map(|s| s.g).sum();
+        assert_eq!(total_g, 50_000);
+        data.sort_unstable();
+        assert_rank_error_bounded(&core, data, 0.01, "from_sorted");
+    }
+
+    #[test]
+    fn from_sorted_edge_sizes() {
+        assert_eq!(GkCore::from_sorted(&[], 0.1).count, 0);
+        let c = GkCore::from_sorted(&[7], 0.1);
+        assert_eq!(c.count, 1);
+        assert_eq!(c.query_quantile(0.5), Some(7));
+        let c = GkCore::from_sorted(&[1, 2], 0.1);
+        assert_eq!(c.query_quantile(0.0), Some(1));
+        assert_eq!(c.query_quantile(1.0), Some(2));
+        // extremes are pinned exactly
+        let c = GkCore::from_sorted(&(0..10_000).collect::<Vec<_>>(), 0.05);
+        assert_eq!(c.samples.first().unwrap().v, 0);
+        assert_eq!(c.samples.last().unwrap().v, 9_999);
+    }
+
+    #[test]
+    fn from_sorted_merges_like_streamed() {
+        let a = GkCore::from_sorted(&(0..5_000).collect::<Vec<_>>(), 0.02);
+        let b = GkCore::from_sorted(&(5_000..10_000).collect::<Vec<_>>(), 0.02);
+        let m = a.merge_with(b);
+        assert_eq!(m.count, 10_000);
+        let med = m.query_quantile(0.5).unwrap();
+        assert!((4_700..=5_300).contains(&med), "merged median {med}");
+    }
+}

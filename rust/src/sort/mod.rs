@@ -1,0 +1,7 @@
+//! Distributed sorting substrate.
+
+pub mod psrs;
+pub mod radix;
+
+pub use psrs::{psrs_sort, PsrsParams, SortedDataset};
+pub use radix::radix_sort_i32;

@@ -1,0 +1,96 @@
+//! LSD radix sort for `i32` keys — the sketch-flush hot loop (§Perf L3.3).
+//!
+//! Every GK flush sorts a head buffer of a few thousand to 50 000 keys;
+//! comparison sorting pays `log B` passes where two 16-bit-digit counting
+//! passes suffice. Signed order falls out of XOR-ing the sign bit. Falls
+//! back to `sort_unstable` below the size where the 2×64Ki counter tables
+//! stop paying for themselves.
+
+/// Size below which `sort_unstable` wins (counter-table setup dominates).
+pub const RADIX_CUTOFF: usize = 4096;
+
+/// Sort `a` ascending. Allocation: one scratch buffer of `a.len()` plus
+/// two 64Ki counter tables.
+pub fn radix_sort_i32(a: &mut [i32]) {
+    if a.len() < RADIX_CUTOFF {
+        a.sort_unstable();
+        return;
+    }
+    let n = a.len();
+    let mut scratch: Vec<i32> = vec![0; n];
+
+    // pass 1: low 16 bits (stable)
+    let mut counts = vec![0u32; 1 << 16];
+    for &v in a.iter() {
+        counts[(v as u32 & 0xFFFF) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for c in counts.iter_mut() {
+        let t = *c;
+        *c = sum;
+        sum += t;
+    }
+    for &v in a.iter() {
+        let d = (v as u32 & 0xFFFF) as usize;
+        scratch[counts[d] as usize] = v;
+        counts[d] += 1;
+    }
+
+    // pass 2: high 16 bits with the sign bit flipped (signed order)
+    let mut counts = vec![0u32; 1 << 16];
+    for &v in scratch.iter() {
+        counts[(((v as u32) ^ 0x8000_0000) >> 16) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for c in counts.iter_mut() {
+        let t = *c;
+        *c = sum;
+        sum += t;
+    }
+    for &v in scratch.iter() {
+        let d = (((v as u32) ^ 0x8000_0000) >> 16) as usize;
+        a[counts[d] as usize] = v;
+        counts[d] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::pcg::Pcg64;
+
+    fn check(mut v: Vec<i32>) {
+        let mut want = v.clone();
+        want.sort_unstable();
+        radix_sort_i32(&mut v);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn below_cutoff_small() {
+        check(vec![]);
+        check(vec![5]);
+        check(vec![3, -1, 2, -7, 0]);
+    }
+
+    #[test]
+    fn above_cutoff_random_signed() {
+        let mut rng = Pcg64::new(3, 3);
+        let v: Vec<i32> = (0..100_000).map(|_| rng.next_u64() as i32).collect();
+        check(v);
+    }
+
+    #[test]
+    fn extremes_and_duplicates() {
+        let mut rng = Pcg64::new(4, 4);
+        let mut v: Vec<i32> = (0..20_000).map(|_| (rng.next_u64() % 5) as i32 - 2).collect();
+        v.extend([i32::MIN, i32::MAX, 0, i32::MIN, i32::MAX]);
+        check(v);
+    }
+
+    #[test]
+    fn already_sorted_and_reversed() {
+        check((0..50_000).collect());
+        check((0..50_000).rev().collect());
+    }
+}

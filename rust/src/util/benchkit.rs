@@ -1,0 +1,123 @@
+//! Micro-bench harness (criterion stand-in for the offline build).
+//!
+//! Warmup + fixed sample count, reports min/mean/p50/max and per-element
+//! throughput. Benches are plain `harness = false` binaries that call
+//! [`Bench::run`] per case; output is grep-friendly one-line-per-case so
+//! `cargo bench | tee bench_output.txt` stays diffable.
+
+use std::time::Instant;
+
+/// One benchmark group runner.
+pub struct Bench {
+    group: String,
+    warmup_iters: u32,
+    sample_iters: u32,
+}
+
+/// Result of one case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub max_s: f64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            warmup_iters: 2,
+            sample_iters: 10,
+        }
+    }
+
+    pub fn samples(mut self, n: u32) -> Self {
+        self.sample_iters = n.max(1);
+        self
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Run one case; `f` must return something observable so the work is
+    /// not optimized away.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.sample_iters as usize);
+        for _ in 0..self.sample_iters {
+            let start = Instant::now();
+            std::hint::black_box(f());
+            times.push(start.elapsed().as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        let sample = Sample {
+            name: format!("{}/{name}", self.group),
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            min_s: times[0],
+            p50_s: times[times.len() / 2],
+            max_s: *times.last().expect("nonempty"),
+        };
+        println!(
+            "bench {:<48} mean {:>12} p50 {:>12} min {:>12} max {:>12}",
+            sample.name,
+            fmt_s(sample.mean_s),
+            fmt_s(sample.p50_s),
+            fmt_s(sample.min_s),
+            fmt_s(sample.max_s),
+        );
+        sample
+    }
+
+    /// Like [`run`], also reporting elements/second.
+    pub fn run_throughput<T>(&self, name: &str, elements: u64, f: impl FnMut() -> T) -> Sample {
+        let s = self.run(name, f);
+        let eps = elements as f64 / s.mean_s;
+        println!(
+            "bench {:<48} throughput {:>10.1} Melem/s",
+            s.name,
+            eps / 1e6
+        );
+        s
+    }
+}
+
+/// Human-scaled seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench::new("test").samples(3).warmup(0);
+        let s = b.run("noop", || 42);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.max_s);
+        assert_eq!(s.name, "test/noop");
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_s(5e-9).contains("ns"));
+        assert!(fmt_s(5e-5).contains("µs"));
+        assert!(fmt_s(5e-2).contains("ms"));
+        assert!(fmt_s(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Tiny flag parser for the `repro` launcher: subcommands +
+//! `--flag value` / `--flag` booleans, with typed getters, `--help`
+//! generation, and unknown-flag rejection.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed invocation: subcommand path + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// e.g. `["bench", "fig"]`.
+    pub path: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags present without a value (`--verify`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: leading bare words become the subcommand path,
+    /// `--key value` and `--switch` populate the maps.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                // bare words extend the subcommand path wherever they
+                // appear, so global flags may precede the subcommand
+                // (`repro --backend pjrt quantile ...`)
+                out.path.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => parse_u64(v).with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    /// Reject any flag not in `known` (catches typos loudly).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (expected one of: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `u64` with `1e9` / `10_000` / `2^20` conveniences — experiment sizes
+/// read naturally on the command line.
+pub fn parse_u64(s: &str) -> Result<u64> {
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<u64>() {
+        return Ok(v);
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+            return Ok(f as u64);
+        }
+    }
+    if let Some((base, exp)) = cleaned.split_once('^') {
+        let b: u64 = base.parse()?;
+        let e: u32 = exp.parse()?;
+        return Ok(b.pow(e));
+    }
+    bail!("cannot parse {s:?} as a count")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_path_and_flags() {
+        let a = args(&["bench", "fig", "--nodes", "30", "--verify"]);
+        assert_eq!(a.path, vec!["bench", "fig"]);
+        assert_eq!(a.usize_or("nodes", 10).unwrap(), 30);
+        assert!(a.has("verify"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = args(&["quantile", "--n=1e6", "--q=0.99"]);
+        assert_eq!(a.u64_or("n", 0).unwrap(), 1_000_000);
+        assert_eq!(a.f64_or("q", 0.5).unwrap(), 0.99);
+    }
+
+    #[test]
+    fn scientific_and_underscore_counts() {
+        assert_eq!(parse_u64("1e9").unwrap(), 1_000_000_000);
+        assert_eq!(parse_u64("10_000").unwrap(), 10_000);
+        assert_eq!(parse_u64("2^20").unwrap(), 1 << 20);
+        assert!(parse_u64("1.5").is_err());
+        assert!(parse_u64("abc").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejection() {
+        let a = args(&["x", "--good", "1", "--bad", "2"]);
+        assert!(a.ensure_known(&["good"]).is_err());
+        assert!(a.ensure_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn global_flags_before_subcommand() {
+        let a = args(&["--backend", "pjrt", "quantile", "--n", "5"]);
+        assert_eq!(a.path, vec!["quantile"]);
+        assert_eq!(a.str_or("backend", "native"), "pjrt");
+        assert_eq!(a.u64_or("n", 0).unwrap(), 5);
+    }
+}

@@ -1,0 +1,278 @@
+//! Minimal JSON reader for `artifacts/manifest.json`.
+//!
+//! Full JSON value grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null) with a recursive-descent parser; no
+//! serialization (the python side writes the manifest).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input at {}", self.pos))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!(
+                "expected '{}' at byte {}, found '{}'",
+                b as char,
+                self.pos,
+                got as char
+            );
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, text: &str, value: Json) -> Result<Json> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(text.as_bytes()) {
+            self.pos += text.len();
+            Ok(value)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad number {s:?} at byte {start}")
+        })?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // accumulate raw bytes: the input is UTF-8 and multibyte sequences
+        // must pass through untouched
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => {
+                    return String::from_utf8(buf).map_err(|_| anyhow::anyhow!("invalid utf-8"))
+                }
+                b'\\' => {
+                    let Some(&e) = self.bytes.get(self.pos) else {
+                        bail!("unterminated escape");
+                    };
+                    self.pos += 1;
+                    let push_char = |c: char, buf: &mut Vec<u8>| {
+                        let mut tmp = [0u8; 4];
+                        buf.extend_from_slice(c.encode_utf8(&mut tmp).as_bytes());
+                    };
+                    match e {
+                        b'"' => buf.push(b'"'),
+                        b'\\' => buf.push(b'\\'),
+                        b'/' => buf.push(b'/'),
+                        b'n' => buf.push(b'\n'),
+                        b't' => buf.push(b'\t'),
+                        b'r' => buf.push(b'\r'),
+                        b'b' => buf.push(8),
+                        b'f' => buf.push(12),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.bytes.get(self.pos..self.pos + 4).unwrap_or(b""),
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            push_char(char::from_u32(cp).unwrap_or('\u{fffd}'), &mut buf);
+                        }
+                        other => bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                other => buf.push(other),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => bail!("expected ',' or ']' found '{}'", other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            map.insert(key, self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => bail!("expected ',' or '}}' found '{}'", other as char),
+            }
+        }
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let j = parse(
+            r#"{"buf_len":131072,"chunk":16384,"dtype":"i32",
+                "artifacts":{"count_pivot":{"file":"count_pivot.hlo.txt","bytes":7146}}}"#,
+        )
+        .unwrap();
+        assert_eq!(j.get("buf_len").unwrap().as_u64(), Some(131072));
+        assert_eq!(j.get("dtype").unwrap().as_str(), Some("i32"));
+        let a = j.get("artifacts").unwrap().get("count_pivot").unwrap();
+        assert_eq!(a.get("file").unwrap().as_str(), Some("count_pivot.hlo.txt"));
+    }
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let j = parse(r#"{"a":[1, -2.5, true, false, null, "s\n\"q\""], "b":{}}"#).unwrap();
+        let Json::Arr(items) = j.get("a").unwrap() else {
+            panic!()
+        };
+        assert_eq!(items.len(), 6);
+        assert_eq!(items[1], Json::Num(-2.5));
+        assert_eq!(items[5], Json::Str("s\n\"q\"".into()));
+        assert_eq!(j.get("b").unwrap().as_obj().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let j = parse(r#""Aé""#).unwrap();
+        assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse("3").unwrap().as_u64(), Some(3));
+        assert_eq!(parse("-3").unwrap().as_u64(), None);
+        assert_eq!(parse("2.5").unwrap(), Json::Num(2.5));
+        assert_eq!(parse("1e3").unwrap(), Json::Num(1000.0));
+    }
+}

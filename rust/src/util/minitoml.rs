@@ -1,0 +1,256 @@
+//! Minimal TOML subset for the config system.
+//!
+//! Supports what `repro.toml` needs and nothing more: `[section]`
+//! headers, `key = value` with string / integer / float / boolean
+//! values, `#` comments, and blank lines. Unknown keys are preserved in
+//! the parse result so callers can reject or ignore them explicitly.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section → key → value`; keys outside any section land in `""`.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("line {line_no}: empty value");
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .with_context(|| format!("line {line_no}: unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {line_no}: cannot parse value {raw:?}")
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc: Document = BTreeMap::new();
+    let mut section = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // strip comments outside strings (strings in our subset never
+        // contain '#')
+        let line = match line.find('#') {
+            Some(pos) if !line[..pos].contains('"') || line[..pos].matches('"').count() % 2 == 0 => {
+                &line[..pos]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {line_no}: unterminated section header"))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {line_no}: expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {line_no}: empty key");
+        }
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), parse_value(value, line_no)?);
+    }
+    Ok(doc)
+}
+
+/// Serialize a document in deterministic order.
+pub fn serialize(doc: &Document) -> String {
+    let mut out = String::new();
+    // root keys first
+    if let Some(root) = doc.get("") {
+        for (k, v) in root {
+            out.push_str(&format!("{k} = {}\n", format_value(v)));
+        }
+        if !root.is_empty() {
+            out.push('\n');
+        }
+    }
+    for (section, table) in doc {
+        if section.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("[{section}]\n"));
+        for (k, v) in table {
+            out.push_str(&format!("{k} = {}\n", format_value(v)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn format_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+/// Typed getters with defaulting — the pattern the config loader uses.
+pub struct Section<'a>(pub Option<&'a BTreeMap<String, Value>>);
+
+impl<'a> Section<'a> {
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.0
+            .and_then(|t| t.get(key))
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.0.and_then(|t| t.get(key)).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.0
+            .and_then(|t| t.get(key))
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.0.and_then(|t| t.get(key)).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn int_opt(&self, key: &str) -> Option<i64> {
+        self.0.and_then(|t| t.get(key)).and_then(Value::as_int)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+# top comment
+backend = "native"
+
+[cluster]
+nodes = 10          # trailing comment
+compute_scale = 1.5
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["backend"], Value::Str("native".into()));
+        assert_eq!(doc["cluster"]["nodes"], Value::Int(10));
+        assert_eq!(doc["cluster"]["compute_scale"], Value::Float(1.5));
+        assert_eq!(doc["cluster"]["enabled"], Value::Bool(true));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc: Document = BTreeMap::new();
+        doc.entry("".into())
+            .or_default()
+            .insert("backend".into(), Value::Str("pjrt".into()));
+        doc.entry("net".into())
+            .or_default()
+            .insert("latency_us".into(), Value::Float(200.0));
+        let text = serialize(&doc);
+        let back = parse(&text).unwrap();
+        assert_eq!(doc, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("key = what?").is_err());
+    }
+
+    #[test]
+    fn section_getters_default() {
+        let doc = parse("[a]\nx = 3\ny = 2.5\nname = \"z\"\nflag = false\n").unwrap();
+        let s = Section(doc.get("a"));
+        assert_eq!(s.int_or("x", 0), 3);
+        assert_eq!(s.float_or("y", 0.0), 2.5);
+        assert_eq!(s.float_or("x", 0.0), 3.0, "ints widen to float");
+        assert_eq!(s.str_or("name", "d"), "z");
+        assert!(!s.bool_or("flag", true));
+        assert_eq!(s.int_or("missing", 9), 9);
+        let none = Section(doc.get("nope"));
+        assert_eq!(none.int_or("x", 7), 7);
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        let doc = parse(r#"s = "a\"b\\c""#).unwrap();
+        assert_eq!(doc[""]["s"], Value::Str("a\"b\\c".into()));
+    }
+}

@@ -1,0 +1,17 @@
+//! In-repo substrates replacing the crates an online build would pull in.
+//!
+//! The reproduction environment is fully offline (only `xla` + `anyhow`
+//! are vendored), so the supporting machinery a production repo normally
+//! imports is implemented here:
+//!
+//! * [`minitoml`] — TOML subset reader/writer for the config system
+//! * [`minijson`] — JSON subset reader for `artifacts/manifest.json`
+//! * [`cli`] — declarative-ish flag parser for the `repro` launcher
+//! * [`benchkit`] — warmup/sample micro-bench harness (criterion stand-in)
+//! * [`propkit`] — seeded property-testing harness (proptest stand-in)
+
+pub mod benchkit;
+pub mod cli;
+pub mod minijson;
+pub mod minitoml;
+pub mod propkit;

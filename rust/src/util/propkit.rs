@@ -1,0 +1,109 @@
+//! Seeded property-testing harness (proptest stand-in for the offline
+//! build).
+//!
+//! A property runs `cases` times against values drawn from composable
+//! generators. On failure the harness re-reports the seed so the exact
+//! case replays (`PROPKIT_SEED=<n> cargo test ...`). No shrinking — cases
+//! are kept small instead.
+
+use crate::select::SplitMix64;
+
+/// Draw source handed to generators.
+pub struct Gen<'a> {
+    rng: &'a mut SplitMix64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        (lo as i64 + (self.rng.next_u64() % span) as i64) as i32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of `len ∈ [min_len, max_len]` values from `f`.
+    pub fn vec_i32(&mut self, min_len: usize, max_len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        let len = self.usize_in(min_len, max_len);
+        (0..len).map(|_| self.i32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `property` for `cases` seeded cases; panics with the failing seed.
+pub fn check(test_name: &str, cases: u64, mut property: impl FnMut(&mut Gen)) {
+    let base_seed = std::env::var("PROPKIT_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let (start, count) = match base_seed {
+        Some(s) => (s, 1), // replay exactly one case
+        None => (0xC0FFEE ^ fxhash(test_name), cases),
+    };
+    for i in 0..count {
+        let seed = start.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = SplitMix64::new(seed);
+        let mut g = Gen { rng: &mut rng };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(panic) = result {
+            eprintln!("\npropkit: {test_name} failed at case {i} — replay with PROPKIT_SEED={seed}");
+            std::panic::resume_unwind(panic);
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 200, |g| {
+            let v = g.i32_in(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_unit();
+            assert!((0.0..1.0).contains(&f));
+            let xs = g.vec_i32(2, 10, 0, 1);
+            assert!(xs.len() >= 2 && xs.len() <= 10);
+            assert!(xs.iter().all(|&x| x == 0 || x == 1));
+        });
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut a = Vec::new();
+        check("det", 5, |g| a.push(g.u64()));
+        let mut b = Vec::new();
+        check("det", 5, |g| b.push(g.u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fail", 10, |g| {
+            assert!(g.i32_in(0, 100) > 150, "impossible");
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! Cross-module integration: every algorithm against the oracle across
+//! the full (distribution × quantile × cluster-shape) matrix, plus the
+//! Table V counter contracts.
+
+use gkselect::algorithms::oracle_quantile;
+use gkselect::config::ReproConfig;
+use gkselect::data::{DataGenerator, Distribution};
+use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::prelude::*;
+
+fn cfg() -> ReproConfig {
+    ReproConfig {
+        backend: "native".into(),
+        ..Default::default()
+    }
+}
+
+const DISTS: [Distribution; 4] = [
+    Distribution::Uniform,
+    Distribution::Zipf,
+    Distribution::Bimodal,
+    Distribution::Sorted,
+];
+
+#[test]
+fn exact_algorithms_match_oracle_across_matrix() {
+    let cfg = cfg();
+    for dist in DISTS {
+        let mut cluster = make_cluster(&cfg, 3);
+        let data = dist.generator(91).generate(&mut cluster, 40_000);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let truth = oracle_quantile(&data, q).unwrap();
+            for choice in [
+                AlgoChoice::GkSelect,
+                AlgoChoice::Afs,
+                AlgoChoice::Jeffers,
+                AlgoChoice::FullSort,
+                AlgoChoice::HistSelect,
+            ] {
+                let mut alg = build_algorithm(&cfg, choice).unwrap();
+                let out = alg.quantile(&mut cluster, &data, q).unwrap();
+                assert_eq!(
+                    out.value,
+                    truth,
+                    "{} {} q={q}",
+                    choice.label(),
+                    dist.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn approx_algorithm_stays_within_rank_band() {
+    let cfg = cfg();
+    for dist in DISTS {
+        let mut cluster = make_cluster(&cfg, 3);
+        let data = dist.generator(92).generate(&mut cluster, 60_000);
+        let mut sorted = data.to_vec();
+        sorted.sort_unstable();
+        let n = sorted.len() as f64;
+        for q in [0.25, 0.5, 0.75, 0.99] {
+            let mut alg = build_algorithm(&cfg, AlgoChoice::GkSketch).unwrap();
+            let out = alg.quantile(&mut cluster, &data, q).unwrap();
+            let lo = sorted.partition_point(|&x| x < out.value) as f64;
+            let hi = sorted.partition_point(|&x| x <= out.value) as f64;
+            let target = q * n;
+            let err = if target < lo {
+                lo - target
+            } else if target > hi {
+                target - hi
+            } else {
+                0.0
+            };
+            // 12 partitions merged pairwise: allow a few ε of slack
+            assert!(
+                err <= 5.0 * 0.01 * n + 2.0,
+                "{} q={q}: rank err {err}",
+                dist.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn table5_contract_gk_select() {
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 5);
+    let data = Distribution::Uniform.generator(93).generate(&mut cluster, 100_000);
+    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+    let out = alg.quantile(&mut cluster, &data, 0.37).unwrap();
+    assert!(out.report.rounds <= 3, "GK Select used {} rounds", out.report.rounds);
+    assert_eq!(out.report.shuffles, 0);
+    assert_eq!(out.report.persists, 0);
+    assert!(out.report.exact);
+}
+
+#[test]
+fn table5_contract_full_sort() {
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 5);
+    let data = Distribution::Uniform.generator(94).generate(&mut cluster, 100_000);
+    let mut alg = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
+    let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    assert_eq!(out.report.shuffles, 1);
+    assert_eq!(out.report.rounds, 1);
+    // O(n) network volume: the shuffle moves most records
+    assert!(out.report.bytes_shuffled as f64 > 0.5 * 100_000.0 * 4.0);
+}
+
+#[test]
+fn table5_contract_count_discard() {
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 5);
+    let data = Distribution::Uniform.generator(95).generate(&mut cluster, 100_000);
+    for choice in [AlgoChoice::Afs, AlgoChoice::Jeffers] {
+        let mut alg = build_algorithm(&cfg, choice).unwrap();
+        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        assert!(out.report.rounds >= 3, "{}: rounds", choice.label());
+        assert!(out.report.persists >= 1, "{}: persists", choice.label());
+        assert_eq!(out.report.shuffles, 0, "{}: shuffles", choice.label());
+    }
+}
+
+#[test]
+fn table5_contract_gk_sketch() {
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 5);
+    let data = Distribution::Uniform.generator(96).generate(&mut cluster, 100_000);
+    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSketch).unwrap();
+    let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    assert_eq!(out.report.rounds, 1);
+    assert_eq!(out.report.shuffles, 0);
+    assert_eq!(out.report.persists, 0);
+    assert!(!out.report.exact);
+}
+
+#[test]
+fn modelled_time_ordering_holds_at_scale() {
+    // the paper's core result shape: sketch ≈ gk-select ≪ full sort under
+    // the EMR fabric model at meaningful n
+    let mut cfg = cfg();
+    cfg.network.enabled = true;
+    let mut cluster = make_cluster(&cfg, 10);
+    let data = Distribution::Uniform.generator(97).generate(&mut cluster, 2_000_000);
+
+    let run = |cfg: &ReproConfig, cluster: &mut gkselect::cluster::Cluster, c: AlgoChoice| {
+        let mut alg = build_algorithm(cfg, c).unwrap();
+        alg.quantile(cluster, &data, 0.5).unwrap().report.elapsed_secs
+    };
+    let t_select = run(&cfg, &mut cluster, AlgoChoice::GkSelect);
+    let t_sketch = run(&cfg, &mut cluster, AlgoChoice::GkSketch);
+    let t_sort = run(&cfg, &mut cluster, AlgoChoice::FullSort);
+    assert!(
+        t_sort > t_select,
+        "full sort ({t_sort:.4}s) must exceed GK Select ({t_select:.4}s)"
+    );
+    assert!(
+        t_select < 3.0 * t_sketch + 0.05,
+        "GK Select ({t_select:.4}s) should be sketch-level (sketch {t_sketch:.4}s)"
+    );
+}
+
+#[test]
+fn cluster_shape_sweep() {
+    let cfg = cfg();
+    for nodes in [1usize, 2, 7, 16] {
+        let mut cluster = make_cluster(&cfg, nodes);
+        let data = Distribution::Uniform.generator(98).generate(&mut cluster, 30_000);
+        let truth = oracle_quantile(&data, 0.5).unwrap();
+        let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        assert_eq!(out.value, truth, "nodes={nodes}");
+        assert_eq!(out.report.partitions, nodes * 4);
+    }
+}
+
+#[test]
+fn repeated_queries_are_deterministic() {
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 4);
+    let data = Distribution::Zipf.generator(99).generate(&mut cluster, 50_000);
+    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+    let a = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    let b = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    assert_eq!(a.value, b.value);
+    assert_eq!(a.report.rounds, b.report.rounds);
+    assert_eq!(a.report.network_volume_bytes, b.report.network_volume_bytes);
+}

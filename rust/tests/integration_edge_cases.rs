@@ -1,0 +1,168 @@
+//! Adversarial / failure-injection integration tests: degenerate
+//! partitioning, extreme values, pathological duplicates, and sketch
+//! variants — the inputs a production deployment actually sees.
+
+use gkselect::algorithms::approx_quantile::{MergeStrategy, SketchVariant};
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::histogram_select::{HistogramSelect, HistogramSelectParams};
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::prelude::*;
+use gkselect::Key;
+
+fn gk(eps: f64, variant: SketchVariant) -> GkSelect {
+    GkSelect::new(GkSelectParams {
+        epsilon: eps,
+        variant,
+        ..Default::default()
+    })
+}
+
+fn check_exact(alg: &mut dyn QuantileAlgorithm, data: &Dataset<Key>, parts: usize, q: f64) {
+    let mut cluster = Cluster::new(ClusterConfig::local(2, parts.max(2)));
+    let truth = oracle_quantile(data, q).unwrap();
+    let out = alg.quantile(&mut cluster, data, q).unwrap();
+    assert_eq!(out.value, truth, "{} q={q}", alg.name());
+}
+
+#[test]
+fn empty_partitions_interleaved() {
+    let data = Dataset::from_partitions(vec![
+        vec![],
+        vec![5, 1, 9],
+        vec![],
+        vec![3],
+        vec![],
+        vec![7, 2, 8, 4, 6],
+    ]);
+    for q in [0.0, 0.5, 1.0] {
+        check_exact(&mut gk(0.05, SketchVariant::Bulk), &data, 6, q);
+        check_exact(&mut gk(0.05, SketchVariant::Modified), &data, 6, q);
+        check_exact(
+            &mut HistogramSelect::new(HistogramSelectParams::default()),
+            &data,
+            6,
+            q,
+        );
+        check_exact(&mut Afs::new(AfsParams::default()), &data, 6, q);
+    }
+}
+
+#[test]
+fn single_record_per_partition() {
+    let data = Dataset::from_partitions((0..16).map(|i| vec![i * 7 % 13]).collect());
+    for q in [0.0, 0.33, 0.5, 1.0] {
+        check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 16, q);
+        check_exact(&mut Jeffers::new(JeffersParams::default()), &data, 16, q);
+    }
+}
+
+#[test]
+fn i32_extremes_dataset() {
+    let mut vals = vec![Key::MIN; 100];
+    vals.extend(vec![Key::MAX; 100]);
+    vals.extend(vec![0; 100]);
+    vals.extend(-50..50);
+    let data = Dataset::from_vec(vals, 8);
+    for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        check_exact(&mut gk(0.02, SketchVariant::Bulk), &data, 8, q);
+        check_exact(&mut FullSortQuantile::default(), &data, 8, q);
+        check_exact(
+            &mut HistogramSelect::new(HistogramSelectParams::default()),
+            &data,
+            8,
+            q,
+        );
+    }
+}
+
+#[test]
+fn two_value_distribution() {
+    // k lands exactly at the value boundary — exercises the eq-run exit
+    let mut vals = vec![1; 5_000];
+    vals.extend(vec![2; 5_000]);
+    let data = Dataset::from_vec(vals, 8);
+    for q in [0.4999, 0.5, 0.5001] {
+        check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 8, q);
+    }
+}
+
+#[test]
+fn severely_skewed_partition_sizes() {
+    // one giant partition + many tiny ones (real ingestion skew)
+    let mut parts: Vec<Vec<Key>> = vec![(0..50_000).map(|i| i * 3 % 1000).collect()];
+    for i in 0..15 {
+        parts.push(vec![i]);
+    }
+    let data = Dataset::from_partitions(parts);
+    for q in [0.1, 0.5, 0.9] {
+        check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 16, q);
+        check_exact(&mut gk(0.01, SketchVariant::Spark), &data, 16, q);
+    }
+}
+
+#[test]
+fn all_sketch_variants_give_exact_gk_select() {
+    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
+    let data = gkselect::data::Distribution::Bimodal
+        .generator(7)
+        .generate(&mut cluster, 40_000);
+    let truth = oracle_quantile(&data, 0.9).unwrap();
+    for variant in [
+        SketchVariant::Classical,
+        SketchVariant::Spark,
+        SketchVariant::Modified,
+        SketchVariant::Bulk,
+    ] {
+        let mut alg = gk(0.01, variant);
+        let out = alg.quantile(&mut cluster, &data, 0.9).unwrap();
+        assert_eq!(out.value, truth, "variant {variant:?}");
+    }
+    // merge strategies too
+    for merge in [MergeStrategy::Fold, MergeStrategy::Tree] {
+        let mut alg = GkSelect::new(GkSelectParams {
+            merge,
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut cluster, &data, 0.9).unwrap();
+        assert_eq!(out.value, truth, "merge {merge:?}");
+    }
+}
+
+#[test]
+fn epsilon_extremes_still_exact() {
+    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
+    let data = gkselect::data::Distribution::Uniform
+        .generator(8)
+        .generate(&mut cluster, 30_000);
+    let truth = oracle_quantile(&data, 0.5).unwrap();
+    for eps in [0.4, 0.001] {
+        let mut alg = gk(eps, SketchVariant::Bulk);
+        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        assert_eq!(out.value, truth, "eps {eps}");
+    }
+}
+
+#[test]
+fn quantile_sweep_dense() {
+    // every percentile over a small dataset — catches off-by-one rank
+    // conventions
+    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+    let data = Dataset::from_vec((0..1000).rev().collect::<Vec<Key>>(), 4);
+    let mut alg = gk(0.05, SketchVariant::Bulk);
+    for pct in 0..=100 {
+        let q = pct as f64 / 100.0;
+        let truth = oracle_quantile(&data, q).unwrap();
+        let out = alg.quantile(&mut cluster, &data, q).unwrap();
+        assert_eq!(out.value, truth, "pct={pct}");
+    }
+}
+
+#[test]
+fn more_partitions_than_values() {
+    let data = Dataset::from_vec(vec![3, 1, 2], 12);
+    check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 12, 0.5);
+    check_exact(&mut FullSortQuantile::default(), &data, 12, 0.5);
+}

@@ -1,0 +1,94 @@
+//! Runtime integration: the PJRT path (AOT Pallas kernels through the
+//! XLA CPU client) against the native backend on real data, plus GK
+//! Select running end-to-end on the PJRT backend.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` is
+//! missing — run `make artifacts` first; `make test` does.
+
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::data::pcg::Pcg64;
+use gkselect::data::{DataGenerator, Distribution};
+use gkselect::runtime::{KernelBackend, NativeBackend, PjrtBackend};
+use gkselect::Key;
+use std::path::Path;
+
+fn pjrt() -> Option<PjrtBackend> {
+    match PjrtBackend::load(Path::new("artifacts")) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP: PJRT artifacts unavailable — run `make artifacts` ({e:#})");
+            None
+        }
+    }
+}
+
+fn random_keys(n: usize, seed: u64) -> Vec<Key> {
+    let mut rng = Pcg64::new(seed, 5);
+    (0..n).map(|_| rng.next_u64() as Key).collect()
+}
+
+#[test]
+fn pjrt_count_pivot_matches_native() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut native = NativeBackend::new();
+    // sizes straddling the buffer length (131072): empty, tiny, exact,
+    // one-over, multi-chunk
+    for n in [0usize, 1, 1000, 131072, 131073, 400_000] {
+        let data = random_keys(n, n as u64);
+        for pivot in [Key::MIN, -1, 0, 42, Key::MAX] {
+            let a = pjrt.count_pivot(&data, pivot);
+            let b = native.count_pivot(&data, pivot);
+            assert_eq!(a, b, "n={n} pivot={pivot}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_band_count_matches_native() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut native = NativeBackend::new();
+    let data = random_keys(300_000, 9);
+    for (lo, hi) in [(-1000, 1000), (0, 0), (Key::MIN, Key::MAX), (500, 100)] {
+        let a = pjrt.band_count(&data, lo, hi);
+        let b = native.band_count(&data, lo, hi);
+        assert_eq!(a, b, "band [{lo}, {hi}]");
+    }
+}
+
+#[test]
+fn pjrt_histogram_matches_native() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut native = NativeBackend::new();
+    let data = random_keys(200_000, 11);
+    let lo = Key::MIN as i64;
+    let width = (1u64 << 32) as i64 / 128 + 1;
+    let a = pjrt.histogram(&data, lo, width, 128);
+    let b = native.histogram(&data, lo, width, 128);
+    assert_eq!(a, b);
+    assert_eq!(a.iter().sum::<u64>(), 200_000);
+}
+
+#[test]
+fn pjrt_minmax_matches_native() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut native = NativeBackend::new();
+    for n in [0usize, 1, 131072, 131073] {
+        let data = random_keys(n, 13 + n as u64);
+        assert_eq!(pjrt.minmax(&data), native.minmax(&data), "n={n}");
+    }
+}
+
+#[test]
+fn gk_select_exact_on_pjrt_backend() {
+    let Some(pjrt) = pjrt() else { return };
+    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
+    let data = Distribution::Uniform.generator(17).generate(&mut cluster, 50_000);
+    let truth = oracle_quantile(&data, 0.75).unwrap();
+    let mut alg = GkSelect::with_backend(GkSelectParams::default(), Box::new(pjrt));
+    let out = alg.quantile(&mut cluster, &data, 0.75).unwrap();
+    assert_eq!(out.value, truth, "PJRT-backed GK Select must stay exact");
+    assert_eq!(alg.backend_name(), "pjrt");
+}

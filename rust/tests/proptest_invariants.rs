@@ -1,0 +1,198 @@
+//! Property-based tests (propkit) on the coordinator's invariants:
+//! exactness of every exact algorithm under arbitrary data/partitioning,
+//! GK sketch rank-error bounds, selection primitives vs sort, and
+//! substrate conservation laws (routing preserves multisets).
+//!
+//! Replay a failing case with `PROPKIT_SEED=<seed> cargo test <name>`.
+
+use gkselect::algorithms::afs::{Afs, AfsParams};
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::histogram_select::{HistogramSelect, HistogramSelectParams};
+use gkselect::algorithms::jeffers::{Jeffers, JeffersParams};
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::shuffle::shuffle_by_range;
+use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::select::{bfprt_select, dutch_partition, floyd_rivest_select, select_kth};
+use gkselect::sketch::classical::ClassicalGk;
+use gkselect::sketch::QuantileSketch;
+use gkselect::util::propkit::{check, Gen};
+
+/// Arbitrary dataset: duplicate-heavy values over 2–8 partitions.
+fn gen_dataset(g: &mut Gen) -> (Dataset<i32>, Vec<i32>, usize) {
+    let values = g.vec_i32(1, 400, -1000, 1000);
+    let p = g.usize_in(2, 8);
+    (Dataset::from_vec(values.clone(), p), values, p)
+}
+
+#[test]
+fn prop_gk_select_always_exact() {
+    check("gk_select_exact", 64, |g| {
+        let (data, _, p) = gen_dataset(g);
+        let q = g.f64_unit();
+        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = GkSelect::new(GkSelectParams {
+            epsilon: 0.05,
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut cluster, &data, q).unwrap();
+        assert_eq!(out.value, truth, "q={q}");
+        assert!(out.report.rounds <= 3);
+        assert_eq!(out.report.shuffles, 0);
+        assert_eq!(out.report.persists, 0);
+    });
+}
+
+#[test]
+fn prop_count_discard_always_exact() {
+    check("count_discard_exact", 48, |g| {
+        let (data, _, p) = gen_dataset(g);
+        let q = g.f64_unit();
+        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut afs = Afs::new(AfsParams::default());
+        assert_eq!(afs.quantile(&mut cluster, &data, q).unwrap().value, truth);
+        let mut jeffers = Jeffers::new(JeffersParams::default());
+        assert_eq!(jeffers.quantile(&mut cluster, &data, q).unwrap().value, truth);
+    });
+}
+
+#[test]
+fn prop_histogram_select_always_exact() {
+    check("hist_select_exact", 48, |g| {
+        let (data, _, p) = gen_dataset(g);
+        let q = g.f64_unit();
+        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = HistogramSelect::new(HistogramSelectParams {
+            extract_cap: 64, // force several refinement rounds
+            ..Default::default()
+        });
+        assert_eq!(alg.quantile(&mut cluster, &data, q).unwrap().value, truth);
+    });
+}
+
+#[test]
+fn prop_selection_primitives_agree_with_sort() {
+    check("selection_vs_sort", 128, |g| {
+        let values = g.vec_i32(1, 400, -10_000, 10_000);
+        let k = g.usize_in(0, values.len() - 1);
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        let want = sorted[k];
+        let mut a = values.clone();
+        assert_eq!(select_kth(&mut a, k, g.u64()), want, "quickselect");
+        let mut b = values.clone();
+        assert_eq!(floyd_rivest_select(&mut b, k), want, "floyd-rivest");
+        let mut c = values;
+        assert_eq!(bfprt_select(&mut c, k), want, "bfprt");
+    });
+}
+
+#[test]
+fn prop_dutch_partition_structure() {
+    check("dutch_structure", 128, |g| {
+        let mut values = g.vec_i32(0, 300, -100, 100);
+        let pivot = g.i32_in(-100, 100);
+        let mut sorted_before = values.clone();
+        sorted_before.sort_unstable();
+        let s = dutch_partition(&mut values, pivot);
+        assert!(values[..s.lt].iter().all(|&x| x < pivot));
+        assert!(values[s.lt..s.gt].iter().all(|&x| x == pivot));
+        assert!(values[s.gt..].iter().all(|&x| x > pivot));
+        let mut sorted_after = values;
+        sorted_after.sort_unstable();
+        assert_eq!(sorted_before, sorted_after, "multiset changed");
+    });
+}
+
+#[test]
+fn prop_shuffle_preserves_multiset_and_ranges() {
+    check("shuffle_multiset", 64, |g| {
+        let values = g.vec_i32(1, 400, -1000, 1000);
+        let mut splitters = g.vec_i32(0, 6, -1000, 1000);
+        splitters.sort_unstable();
+        splitters.dedup();
+        let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+        let data = Dataset::from_vec(values.clone(), 4);
+        let routed = shuffle_by_range(&mut cluster, &data, &splitters);
+        let mut before = values;
+        before.sort_unstable();
+        let mut after = routed.to_vec();
+        after.sort_unstable();
+        assert_eq!(before, after, "shuffle lost/duplicated records");
+        for b in 0..routed.num_partitions() {
+            for &v in routed.partition(b) {
+                assert_eq!(splitters.partition_point(|&s| s < v), b, "misrouted {v}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_classical_gk_rank_error_bounded() {
+    check("gk_rank_error", 48, |g| {
+        let values = g.vec_i32(50, 2_000, -100_000, 100_000);
+        let eps = 0.05;
+        let mut sk = ClassicalGk::new(eps);
+        for &v in &values {
+            sk.insert(v);
+        }
+        sk.finalize();
+        assert!(sk.core().invariant_holds(), "g+Δ ≤ ⌊2εn⌋ violated");
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        let n = sorted.len() as f64;
+        for q in [0.1, 0.5, 0.9] {
+            let got = sk.query(q).unwrap();
+            let lo = sorted.partition_point(|&x| x < got) as f64;
+            let hi = sorted.partition_point(|&x| x <= got) as f64;
+            let target = (q * n).ceil().max(1.0);
+            let err = if target < lo {
+                lo - target
+            } else if target > hi {
+                target - hi
+            } else {
+                0.0
+            };
+            assert!(err <= (eps * n).ceil() + 1.0, "err {err} at q {q} (n={n})");
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_from_vec_is_balanced_partition_of_input() {
+    check("dataset_partition", 128, |g| {
+        let values = g.vec_i32(1, 500, i32::MIN / 2, i32::MAX / 2);
+        let p = g.usize_in(1, 16);
+        let d = Dataset::from_vec(values.clone(), p);
+        assert_eq!(d.len() as usize, values.len());
+        assert_eq!(d.to_vec(), values);
+        let sizes = d.partition_sizes();
+        let max = sizes.iter().max().unwrap();
+        let min = sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "unbalanced: {sizes:?}");
+    });
+}
+
+#[test]
+fn prop_gk_select_epsilon_sweep_stays_exact() {
+    check("gk_select_eps_sweep", 32, |g| {
+        let (data, _, p) = gen_dataset(g);
+        let q = g.f64_unit();
+        let eps = [0.2, 0.1, 0.01, 0.001][g.usize_in(0, 3)];
+        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = GkSelect::new(GkSelectParams {
+            epsilon: eps,
+            ..Default::default()
+        });
+        assert_eq!(
+            alg.quantile(&mut cluster, &data, q).unwrap().value,
+            truth,
+            "eps={eps} q={q}"
+        );
+    });
+}
