@@ -1,17 +1,67 @@
 //! §Perf micro-benches — the executor hot loops the optimization pass
 //! iterates on: pivot counting (native, and PJRT when artifacts exist),
+//! the fused band_extract kernel vs the split count passes it replaces,
 //! Dutch partition, quickselect, histogram, RNG.
+//!
+//! Also emits `BENCH_gk_select.json`: rounds / data_scans /
+//! virtual-clock seconds for GK Select on the paper's `emr(30)` shape,
+//! fused two-round path vs the seed three-round path (forced via a zero
+//! candidate budget), so the perf trajectory is machine-readable across
+//! PRs.
 
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::{Cluster, ClusterConfig};
 use gkselect::data::pcg::Pcg64;
-use gkselect::runtime::{KernelBackend, NativeBackend, PjrtBackend};
+use gkselect::data::{DataGenerator, Distribution};
+use gkselect::runtime::{KernelBackend, NativeBackend};
 use gkselect::select::{dutch_partition, select_kth, SplitMix64};
-use gkselect::util::benchkit::Bench;
+use gkselect::util::benchkit::{write_json, Bench, JsonVal};
 use gkselect::Key;
 use std::path::Path;
 
 fn data(n: usize) -> Vec<Key> {
     let mut rng = Pcg64::new(42, 1);
     (0..n).map(|_| rng.next_u64() as Key).collect()
+}
+
+/// One GK Select run on the `emr(30)` shape → a JSON record.
+fn gk_select_record(
+    label: &str,
+    dist: Distribution,
+    n: u64,
+    budget: Option<usize>,
+) -> JsonVal {
+    let mut cluster = Cluster::new(ClusterConfig::emr(30));
+    let dataset = dist.generator(42).generate(&mut cluster, n);
+    let mut alg = GkSelect::new(GkSelectParams {
+        candidate_budget: budget,
+        ..Default::default()
+    });
+    let out = alg
+        .quantile(&mut cluster, &dataset, 0.75)
+        .expect("bench run failed");
+    println!(
+        "bench gk_select_emr30/{label:<32} rounds {} scans {} model {:>10.4}s",
+        out.report.rounds, out.report.data_scans, out.report.elapsed_secs
+    );
+    JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str(format!("gk_select_{label}"))),
+        ("distribution", JsonVal::Str(dist.label().to_string())),
+        ("n", JsonVal::U64(n)),
+        ("q", JsonVal::F64(0.75)),
+        ("rounds", JsonVal::U64(out.report.rounds)),
+        ("data_scans", JsonVal::U64(out.report.data_scans)),
+        ("stage_boundaries", JsonVal::U64(out.report.stage_boundaries)),
+        ("shuffles", JsonVal::U64(out.report.shuffles)),
+        ("persists", JsonVal::U64(out.report.persists)),
+        (
+            "network_volume_bytes",
+            JsonVal::U64(out.report.network_volume_bytes),
+        ),
+        ("elapsed_model_s", JsonVal::F64(out.report.elapsed_secs)),
+        ("exact", JsonVal::Bool(out.report.exact)),
+    ])
 }
 
 fn main() {
@@ -22,17 +72,56 @@ fn main() {
     let mut native = NativeBackend::new();
     bench.run_throughput("native_4m", n as u64, || native.count_pivot(&xs, 0).lt);
 
+    // fused band_extract vs the split passes it replaces: same pivot, an
+    // ε-sized band around it (≈1% of the value space), generous budget
+    let span = (u32::MAX as f64 * 0.005) as i32;
+    let (lo, hi) = (-span, span);
+    let budget = n / 10;
+    let bench = Bench::new("hot_band_extract").samples(20);
+    bench.run_throughput("fused_4m", n as u64, || {
+        native.band_extract(&xs, 0, lo, hi, budget).band.inner
+    });
+    bench.run_throughput("split_count_then_band_4m", n as u64, || {
+        // the seed shape: one count_pivot pass + one band_count pass
+        let c = native.count_pivot(&xs, 0);
+        let b = native.band_count(&xs, lo, hi);
+        c.lt + b.band
+    });
+    let queries = [
+        (0, lo, hi),
+        (1 << 20, (1 << 20) - span, (1 << 20) + span),
+        (-(1 << 24), -(1 << 24) - span, -(1 << 24) + span),
+    ];
+    bench.run_throughput("multi3_fused_4m", n as u64, || {
+        native
+            .multi_band_extract(&xs, &queries, budget)
+            .iter()
+            .map(|e| e.band.inner)
+            .sum::<u64>()
+    });
+
     // PJRT path when artifacts are present (interpret-mode Pallas through
     // XLA CPU — correctness vehicle; §Perf compares the gap)
-    if let Ok(mut pjrt) = PjrtBackend::load(Path::new("artifacts")) {
-        let small = &xs[..512 * 1024];
-        let pjrt_bench = Bench::new("hot_count_pivot_pjrt").samples(5);
-        pjrt_bench.run_throughput("pjrt_512k", small.len() as u64, || {
-            pjrt.count_pivot(small, 0).lt
-        });
-    } else {
-        println!("bench hot_count_pivot_pjrt/skipped (no artifacts — run `make artifacts`)");
+    #[cfg(feature = "pjrt")]
+    {
+        use gkselect::runtime::PjrtBackend;
+        if let Ok(mut pjrt) = PjrtBackend::load(Path::new("artifacts")) {
+            let small = &xs[..512 * 1024];
+            let pjrt_bench = Bench::new("hot_count_pivot_pjrt").samples(5);
+            pjrt_bench.run_throughput("pjrt_512k", small.len() as u64, || {
+                pjrt.count_pivot(small, 0).lt
+            });
+            pjrt_bench.run_throughput("pjrt_band_extract_512k", small.len() as u64, || {
+                pjrt.band_extract(small, 0, lo, hi, budget).band.inner
+            });
+        } else {
+            println!(
+                "bench hot_count_pivot_pjrt/skipped (no artifacts — run `make artifacts`)"
+            );
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("bench hot_count_pivot_pjrt/skipped (built without the `pjrt` feature)");
 
     let m = 1_000_000usize;
     let ys = data(m);
@@ -62,4 +151,49 @@ fn main() {
     let bench = Bench::new("hot_rng").samples(20);
     let mut rng = SplitMix64::new(5);
     bench.run("splitmix_below", || rng.below(1_000_000));
+
+    // ---- machine-readable perf trajectory: BENCH_gk_select.json --------
+    let bn = 4_000_000u64;
+    let mut records = vec![
+        // the fused two-round path, acceptance distributions
+        gk_select_record("fused", Distribution::Uniform, bn, None),
+        gk_select_record("fused_zipf", Distribution::Zipf, bn, None),
+        gk_select_record("fused_bimodal", Distribution::Bimodal, bn, None),
+        gk_select_record("fused_sorted", Distribution::Sorted, bn, None),
+    ];
+    // the seed path's round/scan shape, same workload: budget 0 forces
+    // the overflow fallback, reproducing the seed's 3 rounds and 3 data
+    // scans (sketch + count + secondPass). Caveat: the middle scan here
+    // is the fused six-counter kernel where the seed ran plain
+    // count_pivot, so this baseline is marginally costlier per scanned
+    // key than the true seed and the time delta read from this file may
+    // be slightly *overstated* by that compute difference; the 3→2
+    // round and 3→2 scan accounting, which dominates the delta on the
+    // EMR fabric model, is structural and exact. See `note` in the JSON.
+    records.push(gk_select_record(
+        "three_round_baseline",
+        Distribution::Uniform,
+        bn,
+        Some(0),
+    ));
+    let doc = JsonVal::obj(vec![
+        ("bench", JsonVal::Str("gk_select".into())),
+        ("cluster", JsonVal::Str("emr(30)".into())),
+        (
+            "note",
+            JsonVal::Str(
+                "three_round_baseline replays the seed path's 3-round/3-scan \
+                 shape via a zero candidate budget; its middle scan is the \
+                 fused kernel (slightly costlier than the seed's count_pivot), \
+                 so the time improvement vs this baseline may be slightly \
+                 overstated by that compute delta — the 3->2 round and 3->2 \
+                 scan reduction is structural and exact"
+                    .into(),
+            ),
+        ),
+        ("runs", JsonVal::Arr(records)),
+    ]);
+    let path = Path::new("BENCH_gk_select.json");
+    write_json(path, &doc).expect("writing BENCH_gk_select.json");
+    println!("wrote {}", path.display());
 }

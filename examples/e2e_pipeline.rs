@@ -22,23 +22,13 @@ use gkselect::cluster::metrics::human_bytes;
 use gkselect::config::ReproConfig;
 use gkselect::harness::{build_algorithm, make_cluster, timed_run, AlgoChoice};
 use gkselect::prelude::*;
-use gkselect::runtime::{KernelBackend, PjrtBackend};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
-    let n: u64 = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(10_000_000);
-    let artifacts = Path::new("artifacts");
-
-    // ---- L1/L2/L3 composition check: PJRT vs native on real data ------
-    let mut cfg = ReproConfig {
-        backend: "native".into(),
-        artifacts_dir: artifacts.to_path_buf(),
-        ..Default::default()
-    };
-    let pjrt_available = match PjrtBackend::load(artifacts) {
+/// PJRT-vs-native kernel probe; only meaningful with the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+fn probe_pjrt(artifacts: &Path) -> bool {
+    use gkselect::runtime::{KernelBackend, PjrtBackend};
+    match PjrtBackend::load(artifacts) {
         Ok(mut pjrt) => {
             let mut native = NativeBackend::new();
             let probe: Vec<i32> = (0..300_000).map(|i| (i * 2_654_435_761u64 as i64) as i32).collect();
@@ -57,12 +47,33 @@ fn main() -> anyhow::Result<()> {
             println!("[1/4] PJRT artifacts unavailable ({e:#}); continuing native-only");
             false
         }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn probe_pjrt(_artifacts: &Path) -> bool {
+    println!("[1/4] built without the `pjrt` feature; continuing native-only");
+    false
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000_000);
+    let artifacts = Path::new("artifacts");
+
+    // ---- L1/L2/L3 composition check: PJRT vs native on real data ------
+    let cfg = ReproConfig {
+        backend: "native".into(),
+        artifacts_dir: artifacts.to_path_buf(),
+        ..Default::default()
     };
+    let pjrt_available = probe_pjrt(artifacts);
     // the comparison matrix runs on the native backend (the perf path —
     // interpret-mode Pallas through XLA CPU is the correctness vehicle);
     // a separate PJRT-backed GK Select run below proves the AOT path
     // composes end-to-end
-    let _ = &cfg;
 
     // ---- workload -------------------------------------------------------
     let mut cluster = make_cluster(&cfg, 10);

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     println!("generating 10M uniform keys across 40 partitions...");
     let data = UniformGen::new(42).generate(&mut cluster, 10_000_000);
 
-    // Exact quantile in 3 rounds.
+    // Exact quantile in 2 fused rounds.
     let mut gk = GkSelect::new(GkSelectParams::default());
     let exact = gk.quantile(&mut cluster, &data, 0.5)?;
     println!(

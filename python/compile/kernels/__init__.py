@@ -13,6 +13,7 @@ estimated from VMEM footprint in DESIGN.md §Perf.
 
 from .count_pivot import build_count_pivot, count_pivot_kernel
 from .band_count import build_band_count, band_count_kernel
+from .band_extract import build_band_extract, band_extract_kernel
 from .histogram import build_histogram, histogram_kernel
 from .minmax import build_minmax, minmax_kernel
 
@@ -21,6 +22,8 @@ __all__ = [
     "count_pivot_kernel",
     "build_band_count",
     "band_count_kernel",
+    "build_band_extract",
+    "band_extract_kernel",
     "build_histogram",
     "histogram_kernel",
     "build_minmax",

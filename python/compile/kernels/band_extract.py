@@ -1,0 +1,121 @@
+"""Fused pivot + band kernel: count AND extract in one read of the buffer.
+
+The two-round GK Select protocol needs, per partition chunk,
+
+    counts[0] = |{x <  pivot}|          (lt)
+    counts[1] = |{x == pivot}|          (eq)
+    counts[2] = |{x <  lo}|             (below)
+    counts[3] = |{x == lo}|             (eq_lo)
+    counts[4] = |{lo < x < hi}|         (inner — the extracted candidates)
+    counts[5] = |{x == hi}|             (eq_hi)
+
+plus the open-band values themselves, compacted to the front of a
+buf_len-sized output slot. Endpoint runs are counted, never copied, so
+duplicate-heavy data cannot widen the extraction: the open band's size is
+bounded by the GK invariant at O(eps*n) regardless of duplication.
+
+The counting reductions run as a single Pallas kernel over CHUNK tiles
+(one read of the buffer feeding all six accumulators). The compaction is
+a cumsum-scatter at the jnp level of the same jitted artifact: positions
+are the exclusive prefix sum of the band mask, non-band lanes are routed
+to a dump slot past the live region and dropped (mode="drop"), keeping
+the whole pass linear and branchless.
+
+Artifact output is one i64 vector of length 6 + buf_len:
+    out[:6]           = counts
+    out[6:6+inner]    = compacted open-band values (as i64)
+so the rust wrapper needs a single-output executable (matching run1's
+to_tuple1 contract) and slices by counts[4].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def band_extract_kernel(x_ref, pivot_ref, lo_ref, hi_ref, valid_ref, out_ref, *, chunk):
+    """Grid-step body: six fused masked reductions over one CHUNK tile.
+
+    out_ref holds [lt, eq, below, eq_lo, inner, eq_hi] as int64,
+    accumulated across the grid. Same int32 tile-mask trick as
+    count_pivot.py (§Perf L1.1).
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros((6,), jnp.int64)
+
+    x = x_ref[...]
+    pivot = pivot_ref[0]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+
+    remaining = valid_ref[0].astype(jnp.int32) - step.astype(jnp.int32) * chunk
+    live = jnp.clip(remaining, 0, chunk)
+    idx = jax.lax.iota(jnp.int32, chunk)
+    mask = idx < live
+
+    def msum(cond):
+        return jnp.sum(jnp.where(mask & cond, 1, 0).astype(jnp.int32))
+
+    lt = msum(x < pivot)
+    eq = msum(x == pivot)
+    below = msum(x < lo)
+    eq_lo = msum(x == lo)
+    inner = msum((x > lo) & (x < hi))
+    eq_hi = msum(x == hi)
+
+    out_ref[...] += jnp.stack([lt, eq, below, eq_lo, inner, eq_hi]).astype(jnp.int64)
+
+
+def build_band_extract(buf_len, chunk, dtype=jnp.int32):
+    """Return fn(x[buf_len], pivot[1], lo[1], hi[1], valid[1]) -> i64[6+buf_len]."""
+    if buf_len % chunk != 0:
+        raise ValueError(f"buf_len {buf_len} not a multiple of chunk {chunk}")
+    grid = buf_len // chunk
+
+    kernel = functools.partial(band_extract_kernel, chunk=chunk)
+
+    def fn(x, pivot, lo, hi, valid):
+        x = x.astype(dtype)
+        pivot = pivot.astype(dtype)
+        lo = lo.astype(dtype)
+        hi = hi.astype(dtype)
+        valid = valid.astype(jnp.int64)
+
+        counts = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((6,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((6,), jnp.int64),
+            interpret=True,
+        )(x, pivot, lo, hi, valid)
+
+        # cumsum-scatter compaction of the open-band values: linear,
+        # branchless, static shapes (out-of-band lanes -> dump slot).
+        # Length comes from the traced buffer itself so the jnp stage
+        # follows whatever geometry the caller lowers with.
+        blen = x.shape[0]
+        idx = jax.lax.iota(jnp.int32, blen)
+        live = idx.astype(jnp.int64) < valid[0]
+        flags = live & (x > lo[0]) & (x < hi[0])
+        pos = jnp.cumsum(flags) - 1  # exclusive prefix sum at flagged lanes
+        dest = jnp.where(flags, pos, blen)  # blen == dump slot
+        packed = (
+            jnp.zeros((blen + 1,), jnp.int64)
+            .at[dest]
+            .set(x.astype(jnp.int64), mode="drop")[:blen]
+        )
+        return jnp.concatenate([counts, packed])
+
+    return fn

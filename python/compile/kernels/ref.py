@@ -35,6 +35,24 @@ def ref_band_count(x, lo, hi, valid):
     )
 
 
+def ref_band_extract(x, pivot, lo, hi, valid):
+    """([lt, eq, below, eq_lo, inner, eq_hi], open-band values) over x[:valid]."""
+    v = x[: int(valid)]
+    counts = jnp.array(
+        [
+            jnp.sum(v < pivot),
+            jnp.sum(v == pivot),
+            jnp.sum(v < lo),
+            jnp.sum(v == lo),
+            jnp.sum((v > lo) & (v < hi)),
+            jnp.sum(v == hi),
+        ],
+        jnp.int64,
+    )
+    candidates = v[(v > lo) & (v < hi)].astype(jnp.int64)
+    return counts, candidates
+
+
 def ref_histogram(x, lo, width, nbins, valid):
     """Equi-width histogram with clamped out-of-range values."""
     v = x[: int(valid)].astype(jnp.int64)

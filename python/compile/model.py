@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from .kernels import (
     build_band_count,
+    build_band_extract,
     build_count_pivot,
     build_histogram,
     build_minmax,
@@ -77,6 +78,22 @@ def make_minmax(buf_len=BUF_LEN, chunk=CHUNK):
     return fn
 
 
+def make_band_extract(buf_len=BUF_LEN, chunk=CHUNK):
+    """Fused count+extract pass for the two-round GK Select protocol.
+
+    fn(x, pivot, lo, hi, valid) -> i64[6 + buf_len]: six fused counters
+    ([lt, eq, below, eq_lo, inner, eq_hi]) followed by the open-band
+    values compacted to the front. One executable dispatch replaces the
+    old count_pivot round AND the candidate-extraction round's read.
+    """
+    inner = build_band_extract(buf_len, chunk, DTYPE)
+
+    def fn(x, pivot, lo, hi, valid):
+        return (inner(x, pivot, lo, hi, valid),)
+
+    return fn
+
+
 def make_pivot_band(buf_len=BUF_LEN, chunk=CHUNK):
     """Fused pass: one buffer read feeding the pivot AND band reductions.
 
@@ -102,6 +119,8 @@ def example_args(kind):
         return (x, s32, s64)
     if kind == "band_count":
         return (x, s32, s32, s64)
+    if kind == "band_extract":
+        return (x, s32, s32, s32, s64)
     if kind == "histogram":
         return (x, s64, s64, s64)
     if kind == "minmax":
@@ -114,6 +133,7 @@ def example_args(kind):
 ARTIFACTS = {
     "count_pivot": make_count_pivot,
     "band_count": make_band_count,
+    "band_extract": make_band_extract,
     "histogram": make_histogram,
     "minmax": make_minmax,
     "pivot_band": make_pivot_band,

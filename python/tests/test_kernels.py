@@ -13,12 +13,14 @@ from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (
     build_band_count,
+    build_band_extract,
     build_count_pivot,
     build_histogram,
     build_minmax,
 )
 from compile.kernels.ref import (
     ref_band_count,
+    ref_band_extract,
     ref_count_pivot,
     ref_histogram,
     ref_minmax,
@@ -132,6 +134,110 @@ class TestBandCount:
             jnp.asarray([64], jnp.int64),
         )
         assert int(np.asarray(got)[1]) == 0
+
+
+class TestBandExtract:
+    @pytest.mark.parametrize("buf_len,chunk", GEOMETRIES)
+    @settings(max_examples=25, deadline=None)
+    @given(dp=data_and_pivot(64), span=st.integers(0, 10**8))
+    def test_matches_ref(self, buf_len, chunk, dp, span):
+        values, lo, n = dp
+        hi = min(lo + span, 10**9 - 1)
+        pivot = lo
+        fn = build_band_extract(buf_len, chunk)
+        x = pad_to(values.astype(np.int32), buf_len, I32.max)
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([pivot], jnp.int32),
+                jnp.asarray([lo], jnp.int32),
+                jnp.asarray([hi], jnp.int32),
+                jnp.asarray([n], jnp.int64),
+            )
+        )
+        counts, cands = ref_band_extract(
+            jnp.asarray(x), jnp.asarray(pivot), jnp.asarray(lo), jnp.asarray(hi), n
+        )
+        np.testing.assert_array_equal(got[:6], np.asarray(counts))
+        inner = int(got[4])
+        assert inner == len(np.asarray(cands))
+        # compaction preserves the open-band multiset, in order
+        np.testing.assert_array_equal(got[6 : 6 + inner], np.asarray(cands))
+        # and the rest of the packed slot is untouched zeros
+        np.testing.assert_array_equal(got[6 + inner :], np.zeros(buf_len - inner))
+        # the buckets partition the prefix (lo == hi aliases the endpoint
+        # counters; the rust wrapper zeroes eq_hi in that case)
+        eq_hi = 0 if lo == hi else int(got[5])
+        above = n - int(got[2] + got[3] + got[4]) - eq_hi
+        assert above >= 0
+
+    def test_empty_prefix(self):
+        fn = build_band_extract(64, 32)
+        got = np.asarray(
+            fn(
+                jnp.zeros(64, jnp.int32),
+                jnp.asarray([1], jnp.int32),
+                jnp.asarray([0], jnp.int32),
+                jnp.asarray([5], jnp.int32),
+                jnp.asarray([0], jnp.int64),
+            )
+        )
+        np.testing.assert_array_equal(got[:6], [0, 0, 0, 0, 0, 0])
+        assert got[6:].sum() == 0
+
+    def test_extraction_is_open_interval(self):
+        # endpoints are counted, not extracted — the duplicate-heavy
+        # guarantee the two-round protocol relies on
+        fn = build_band_extract(64, 32)
+        x = pad_to(np.array([10, 20, 20, 25, 30, 30, 30, 40], np.int32), 64, 0)
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([25], jnp.int32),
+                jnp.asarray([20], jnp.int32),
+                jnp.asarray([30], jnp.int32),
+                jnp.asarray([8], jnp.int64),
+            )
+        )
+        # [lt, eq, below, eq_lo, inner, eq_hi]
+        np.testing.assert_array_equal(got[:6], [3, 1, 1, 2, 1, 3])
+        assert got[6] == 25
+        assert got[7:].sum() == 0
+
+    def test_collapsed_band(self):
+        fn = build_band_extract(64, 32)
+        x = pad_to(np.array([1, 2, 2, 3], np.int32), 64, 0)
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([2], jnp.int32),
+                jnp.asarray([2], jnp.int32),
+                jnp.asarray([2], jnp.int32),
+                jnp.asarray([4], jnp.int64),
+            )
+        )
+        # lo == hi: inner empty, both endpoint counters see the run (the
+        # rust wrapper zeroes eq_hi when normalizing)
+        np.testing.assert_array_equal(got[:6], [1, 2, 1, 2, 0, 2])
+        assert got[6:].sum() == 0
+
+    def test_multi_chunk_compaction(self):
+        # candidates spread across several tiles must compact contiguously
+        fn = build_band_extract(128, 32)
+        x = np.zeros(128, np.int32)
+        x[5], x[40], x[70], x[100] = 11, 12, 13, 14
+        got = np.asarray(
+            fn(
+                jnp.asarray(x),
+                jnp.asarray([12], jnp.int32),
+                jnp.asarray([10], jnp.int32),
+                jnp.asarray([15], jnp.int32),
+                jnp.asarray([128], jnp.int64),
+            )
+        )
+        assert int(got[4]) == 4
+        np.testing.assert_array_equal(got[6:10], [11, 12, 13, 14])
+        assert got[10:].sum() == 0
 
 
 class TestHistogram:

@@ -4,7 +4,7 @@
 //!
 //! | Module | Paper §| Exact? | Rounds |
 //! |---|---|---|---|
-//! | [`gk_select`] | V (the contribution) | yes | 3 |
+//! | [`gk_select`] | V (the contribution) | yes | 2 (3 on band overflow) |
 //! | [`full_sort`] | IV-A (Spark default) | yes | 1 (+1 full shuffle) |
 //! | [`afs`] | IV-B (Al-Furaih) | yes | `O(log n)` |
 //! | [`jeffers`] | IV-C | yes | `O(log n)` |

@@ -11,6 +11,11 @@ pub struct RunMetrics {
     pub rounds: u64,
     /// Shuffle/collect points where all executors must quiesce.
     pub stage_boundaries: u64,
+    /// Linear passes over a dataset's partitions (`mapPartitions`
+    /// stages). Rounds count synchronizations; this counts *reads of the
+    /// data* — the fused GK Select path drops post-sketch scans from 2
+    /// to 1 while keeping rounds ≤ 2, and only this counter can see it.
+    pub data_scans: u64,
     /// Full range-partition shuffles.
     pub shuffles: u64,
     /// Explicit persists of intermediate datasets.
@@ -48,6 +53,7 @@ pub struct MetricsReport {
     pub elapsed_secs: f64,
     pub rounds: u64,
     pub stage_boundaries: u64,
+    pub data_scans: u64,
     pub shuffles: u64,
     pub persists: u64,
     pub network_volume_bytes: u64,
@@ -76,6 +82,7 @@ impl MetricsReport {
             elapsed_secs,
             rounds: m.rounds,
             stage_boundaries: m.stage_boundaries,
+            data_scans: m.data_scans,
             shuffles: m.shuffles,
             persists: m.persists,
             network_volume_bytes: m.network_volume(),
@@ -145,6 +152,16 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn report_carries_data_scans() {
+        let m = RunMetrics {
+            data_scans: 2,
+            ..Default::default()
+        };
+        let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.data_scans, 2);
     }
 
     #[test]

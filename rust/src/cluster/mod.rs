@@ -193,6 +193,9 @@ impl Cluster {
         mut f: impl FnMut(&[T], PartitionCtx) -> R,
     ) -> PerPartition<R> {
         let num_partitions = data.num_partitions();
+        // one mapPartitions stage = one linear read of the dataset; the
+        // consuming action charges the round, but the scan happens here
+        self.metrics.data_scans += 1;
         let mut values = Vec::with_capacity(num_partitions);
         let mut times = Vec::with_capacity(num_partitions);
         for p in 0..num_partitions {
@@ -374,8 +377,9 @@ mod tests {
         let (mut c, d) = tiny();
         let lens = c.map_partitions(&d, |part, ctx| (ctx.partition, part.len()));
         assert_eq!(lens.values, vec![(0, 3), (1, 2), (2, 1), (3, 4)]);
-        // lazy: no round yet
+        // lazy: no round yet, but the data was read once
         assert_eq!(c.metrics.rounds, 0);
+        assert_eq!(c.metrics.data_scans, 1);
     }
 
     #[test]

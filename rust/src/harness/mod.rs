@@ -94,7 +94,7 @@ pub fn build_algorithm(cfg: &ReproConfig, choice: AlgoChoice) -> Result<Box<dyn 
                 variant: sketch_variant(cfg)?,
                 merge: merge_strategy(cfg)?,
                 tree_depth: cfg.algorithm.tree_depth,
-                seed: cfg.algorithm.seed,
+                candidate_budget: None,
             };
             if cfg.backend == "native" {
                 Box::new(GkSelect::new(params))

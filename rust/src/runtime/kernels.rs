@@ -1,6 +1,19 @@
 //! Kernel backend trait + the native reference implementation.
+//!
+//! The fused hot path is [`KernelBackend::band_extract`]: one chunked
+//! pass that classifies every key against the broadcast pivot **and**
+//! the sketch-derived candidate band `[lo, hi]`, collecting the open-band
+//! values as it goes. Endpoint runs are *counted*, never materialized, so
+//! duplicate-heavy data (zipf) cannot blow the candidate buffer — the
+//! extracted set is `{x : lo < x < hi}`, whose size the GK invariant
+//! bounds by O(εn) regardless of duplication.
 
+use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
 use crate::Key;
+
+/// Keys per tile of the fused scan: counts vectorize within a tile while
+/// the (rare) extraction appends stay L1-resident.
+const BAND_CHUNK: usize = 4096;
 
 /// Three-way pivot classification counts (lt, eq, gt).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -30,6 +43,112 @@ pub struct BandCounts {
     pub above: u64,
 }
 
+/// Five-way classification against the band `[lo, hi]`, with endpoint
+/// runs split out so duplicates are counted instead of copied.
+///
+/// When `lo == hi` the two endpoint counters would alias; `eq_hi` is
+/// defined to be 0 in that case so the five buckets always partition the
+/// input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BandStats {
+    /// `|{x < lo}|`.
+    pub below: u64,
+    /// `|{x == lo}|`.
+    pub eq_lo: u64,
+    /// `|{lo < x < hi}|` — the extracted candidates.
+    pub inner: u64,
+    /// `|{x == hi}|` (0 when `lo == hi`).
+    pub eq_hi: u64,
+    /// `|{x > hi}|`.
+    pub above: u64,
+}
+
+impl BandStats {
+    pub fn total(&self) -> u64 {
+        self.below + self.eq_lo + self.inner + self.eq_hi + self.above
+    }
+
+    pub fn add(&mut self, other: BandStats) {
+        self.below += other.below;
+        self.eq_lo += other.eq_lo;
+        self.inner += other.inner;
+        self.eq_hi += other.eq_hi;
+        self.above += other.above;
+    }
+}
+
+/// Result of one fused `band_extract` pass: pivot counts, band counts,
+/// and the materialized open-band candidates.
+///
+/// `overflow` marks a pass (or merge) whose candidate set exceeded the
+/// caller's budget: candidates are dropped to keep memory and traffic
+/// bounded, but **all counts stay complete**, so the caller can still
+/// take the eq-run exit or fall back to a second extraction round.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BandExtract {
+    pub pivot: PivotCounts,
+    pub band: BandStats,
+    pub candidates: Vec<Key>,
+    pub overflow: bool,
+}
+
+impl BandExtract {
+    /// One element of the fused classification: accumulate the pivot and
+    /// band counters (except `inner`) and report whether `v` lies in the
+    /// open band. Shared by every scan loop so the native single/multi
+    /// and count-only/extracting variants cannot drift apart.
+    #[inline(always)]
+    pub fn tally(&mut self, v: Key, pivot: Key, lo: Key, hi: Key) -> bool {
+        self.pivot.lt += u64::from(v < pivot);
+        self.pivot.eq += u64::from(v == pivot);
+        self.band.below += u64::from(v < lo);
+        self.band.eq_lo += u64::from(v == lo);
+        self.band.eq_hi += u64::from(v == hi);
+        v > lo && v < hi
+    }
+
+    /// Derive the arithmetic counters after a full pass over `n` keys:
+    /// `gt`/`above` from the partition identity, and the `lo == hi`
+    /// normalization (the endpoint counters alias one run; keep `eq_lo`).
+    pub fn finalize(&mut self, n: u64, lo: Key, hi: Key) {
+        self.pivot.gt = n - self.pivot.lt - self.pivot.eq;
+        if lo == hi {
+            self.band.eq_hi = 0;
+        }
+        self.band.above =
+            n - self.band.below - self.band.eq_lo - self.band.inner - self.band.eq_hi;
+    }
+
+    /// treeReduce combiner: counts add; candidates concatenate unless
+    /// either side (or the merged total) blew the budget.
+    pub fn merge(mut self, other: BandExtract, budget: usize) -> BandExtract {
+        self.pivot.add(other.pivot);
+        self.band.add(other.band);
+        if self.overflow || other.overflow {
+            self.overflow = true;
+            self.candidates = Vec::new();
+        } else {
+            self.candidates.extend_from_slice(&other.candidates);
+            if self.candidates.len() > budget {
+                self.overflow = true;
+                self.candidates = Vec::new();
+            }
+        }
+        self
+    }
+}
+
+impl NetSize for BandExtract {
+    fn net_bytes(&self) -> u64 {
+        // 8 u64 counters + overflow flag + candidate payload
+        CONTAINER_OVERHEAD
+            + 8 * 8
+            + 1
+            + CONTAINER_OVERHEAD
+            + std::mem::size_of::<Key>() as u64 * self.candidates.len() as u64
+    }
+}
+
 /// The executor-side compute hot spots, as implemented by either the
 /// AOT/PJRT path or native rust. All counts are over the full slice.
 pub trait KernelBackend {
@@ -45,6 +164,29 @@ pub trait KernelBackend {
 
     /// `(min, max)` or `None` when empty.
     fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)>;
+
+    /// Fused scan: pivot counts + band counts + open-band extraction in
+    /// one pass (requires `lo ≤ hi`). At most `budget` candidates are
+    /// collected; past that the pass keeps counting but stops extracting
+    /// and sets `overflow`.
+    fn band_extract(&mut self, data: &[Key], pivot: Key, lo: Key, hi: Key, budget: usize)
+        -> BandExtract;
+
+    /// Batched form for MultiSelect: one result per `(pivot, lo, hi)`
+    /// query. The default delegates to [`Self::band_extract`] per query;
+    /// backends that can share a single read of `data` across all
+    /// queries (the native one does) should override.
+    fn multi_band_extract(
+        &mut self,
+        data: &[Key],
+        queries: &[(Key, Key, Key)],
+        budget: usize,
+    ) -> Vec<BandExtract> {
+        queries
+            .iter()
+            .map(|&(pivot, lo, hi)| self.band_extract(data, pivot, lo, hi, budget))
+            .collect()
+    }
 
     /// Backend label for reports.
     fn name(&self) -> &'static str;
@@ -108,6 +250,91 @@ impl KernelBackend for NativeBackend {
                 None => Some((v, v)),
                 Some((lo, hi)) => Some((lo.min(v), hi.max(v))),
             })
+    }
+
+    fn band_extract(
+        &mut self,
+        data: &[Key],
+        pivot: Key,
+        lo: Key,
+        hi: Key,
+        budget: usize,
+    ) -> BandExtract {
+        debug_assert!(lo <= hi, "band [{lo}, {hi}] inverted");
+        let mut out = BandExtract {
+            candidates: Vec::with_capacity(budget.min(data.len())),
+            ..Default::default()
+        };
+        for chunk in data.chunks(BAND_CHUNK) {
+            if out.overflow {
+                // count-only tile loop: counts must stay complete for the
+                // eq-run exit and the fallback Δk even past the budget
+                for &v in chunk {
+                    let in_band = out.tally(v, pivot, lo, hi);
+                    out.band.inner += u64::from(in_band);
+                }
+            } else {
+                for &v in chunk {
+                    if out.tally(v, pivot, lo, hi) {
+                        out.band.inner += 1;
+                        out.candidates.push(v);
+                    }
+                }
+                if out.candidates.len() > budget {
+                    out.overflow = true;
+                    out.candidates = Vec::new();
+                }
+            }
+        }
+        out.finalize(data.len() as u64, lo, hi);
+        out
+    }
+
+    /// One read of `data` serving every query: the m-way classification
+    /// runs tile by tile so the partition streams through cache once
+    /// (MultiSelect's "m quantiles, one scan").
+    fn multi_band_extract(
+        &mut self,
+        data: &[Key],
+        queries: &[(Key, Key, Key)],
+        budget: usize,
+    ) -> Vec<BandExtract> {
+        debug_assert!(
+            queries.iter().all(|&(_, lo, hi)| lo <= hi),
+            "inverted band in {queries:?}"
+        );
+        let mut outs: Vec<BandExtract> = queries
+            .iter()
+            .map(|_| BandExtract::default())
+            .collect();
+        for chunk in data.chunks(BAND_CHUNK) {
+            for (out, &(pivot, lo, hi)) in outs.iter_mut().zip(queries) {
+                if out.overflow {
+                    // count-only tile loop, mirroring band_extract: no
+                    // per-element budget branch once the query overflowed
+                    for &v in chunk {
+                        let in_band = out.tally(v, pivot, lo, hi);
+                        out.band.inner += u64::from(in_band);
+                    }
+                } else {
+                    for &v in chunk {
+                        if out.tally(v, pivot, lo, hi) {
+                            out.band.inner += 1;
+                            out.candidates.push(v);
+                        }
+                    }
+                    if out.candidates.len() > budget {
+                        out.overflow = true;
+                        out.candidates = Vec::new();
+                    }
+                }
+            }
+        }
+        let n = data.len() as u64;
+        for (out, &(_, lo, hi)) in outs.iter_mut().zip(queries) {
+            out.finalize(n, lo, hi);
+        }
+        outs
     }
 
     fn name(&self) -> &'static str {
@@ -176,5 +403,131 @@ mod tests {
         let mut a = PivotCounts { lt: 1, eq: 2, gt: 3 };
         a.add(PivotCounts { lt: 10, eq: 20, gt: 30 });
         assert_eq!(a, PivotCounts { lt: 11, eq: 22, gt: 33 });
+    }
+
+    /// Oracle for the fused scan, by definition.
+    fn band_oracle(data: &[Key], pivot: Key, lo: Key, hi: Key) -> (PivotCounts, BandStats, Vec<Key>) {
+        let count = |f: &dyn Fn(Key) -> bool| data.iter().filter(|&&v| f(v)).count() as u64;
+        let pc = PivotCounts {
+            lt: count(&|v| v < pivot),
+            eq: count(&|v| v == pivot),
+            gt: count(&|v| v > pivot),
+        };
+        let bs = BandStats {
+            below: count(&|v| v < lo),
+            eq_lo: count(&|v| v == lo),
+            inner: count(&|v| v > lo && v < hi),
+            eq_hi: if lo == hi { 0 } else { count(&|v| v == hi) },
+            above: count(&|v| v > hi),
+        };
+        let cands: Vec<Key> = data.iter().copied().filter(|&v| v > lo && v < hi).collect();
+        (pc, bs, cands)
+    }
+
+    #[test]
+    fn band_extract_matches_oracle() {
+        let mut b = NativeBackend::new();
+        let mut rng = SplitMix64::new(3);
+        let data: Vec<Key> = (0..20_000).map(|_| (rng.next_u64() % 500) as Key).collect();
+        for (pivot, lo, hi) in [(250, 200, 300), (0, 0, 499), (250, 250, 250), (600, 501, 700)] {
+            let got = b.band_extract(&data, pivot, lo, hi, usize::MAX);
+            let (pc, bs, mut cands) = band_oracle(&data, pivot, lo, hi);
+            assert_eq!(got.pivot, pc, "pivot counts at ({pivot},{lo},{hi})");
+            assert_eq!(got.band, bs, "band stats at ({pivot},{lo},{hi})");
+            assert!(!got.overflow);
+            let mut got_c = got.candidates.clone();
+            got_c.sort_unstable();
+            cands.sort_unstable();
+            assert_eq!(got_c, cands, "candidates at ({pivot},{lo},{hi})");
+            assert_eq!(got.band.total(), data.len() as u64);
+            assert_eq!(got.pivot.total(), data.len() as u64);
+        }
+    }
+
+    #[test]
+    fn band_extract_collapsed_band_counts_once() {
+        let mut b = NativeBackend::new();
+        let data = vec![1, 2, 2, 2, 3];
+        let got = b.band_extract(&data, 2, 2, 2, 100);
+        assert_eq!(got.band.below, 1);
+        assert_eq!(got.band.eq_lo, 3);
+        assert_eq!(got.band.eq_hi, 0);
+        assert_eq!(got.band.inner, 0);
+        assert_eq!(got.band.above, 1);
+        assert_eq!(got.band.total(), 5);
+    }
+
+    #[test]
+    fn band_extract_overflow_keeps_counts_complete() {
+        let mut b = NativeBackend::new();
+        let data: Vec<Key> = (0..10_000).collect();
+        let got = b.band_extract(&data, 5_000, 1_000, 9_000, 10);
+        assert!(got.overflow);
+        assert!(got.candidates.is_empty());
+        // counts unaffected by the overflow
+        assert_eq!(got.pivot.lt, 5_000);
+        assert_eq!(got.pivot.eq, 1);
+        assert_eq!(got.band.below, 1_000);
+        assert_eq!(got.band.inner, 7_999);
+        assert_eq!(got.band.total(), 10_000);
+    }
+
+    #[test]
+    fn band_extract_merge_accumulates_and_overflows() {
+        let mut b = NativeBackend::new();
+        let a = b.band_extract(&[1, 5, 9], 5, 2, 8, 100);
+        let c = b.band_extract(&[4, 6, 20], 5, 2, 8, 100);
+        let m = a.clone().merge(c.clone(), 100);
+        assert_eq!(m.band.total(), 6);
+        assert_eq!(m.pivot.total(), 6);
+        assert_eq!(m.candidates.len(), 3); // {5, 4, 6}
+        assert!(!m.overflow);
+        // budget violation at merge time drops candidates but keeps counts
+        let m2 = a.clone().merge(c.clone(), 2);
+        assert!(m2.overflow);
+        assert!(m2.candidates.is_empty());
+        assert_eq!(m2.band.total(), 6);
+        // overflow is sticky
+        let m3 = m2.merge(a, 1_000);
+        assert!(m3.overflow);
+        assert_eq!(m3.band.total(), 9);
+    }
+
+    #[test]
+    fn multi_band_extract_matches_single() {
+        let mut b = NativeBackend::new();
+        let mut rng = SplitMix64::new(9);
+        let data: Vec<Key> = (0..5_000).map(|_| (rng.next_u64() % 1_000) as Key).collect();
+        let queries = [(100, 50, 150), (500, 500, 500), (900, 850, 999)];
+        let multi = b.multi_band_extract(&data, &queries, usize::MAX);
+        assert_eq!(multi.len(), 3);
+        for (got, &(pivot, lo, hi)) in multi.iter().zip(queries.iter()) {
+            let single = b.band_extract(&data, pivot, lo, hi, usize::MAX);
+            assert_eq!(got.pivot, single.pivot);
+            assert_eq!(got.band, single.band);
+            let (mut a, mut c) = (got.candidates.clone(), single.candidates);
+            a.sort_unstable();
+            c.sort_unstable();
+            assert_eq!(a, c);
+        }
+    }
+
+    #[test]
+    fn band_extract_empty_input() {
+        let mut b = NativeBackend::new();
+        let got = b.band_extract(&[], 0, -5, 5, 10);
+        assert_eq!(got, BandExtract::default());
+    }
+
+    #[test]
+    fn band_extract_net_bytes_tracks_candidates() {
+        let mut b = NativeBackend::new();
+        let data: Vec<Key> = (0..100).collect();
+        let got = b.band_extract(&data, 50, 40, 60, 1_000);
+        assert_eq!(got.candidates.len(), 19);
+        assert_eq!(
+            got.net_bytes(),
+            crate::cluster::netmodel::CONTAINER_OVERHEAD * 2 + 65 + 19 * 4
+        );
     }
 }

@@ -17,10 +17,12 @@
 
 pub mod kernels;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use kernels::{BandCounts, KernelBackend, NativeBackend, PivotCounts};
+pub use kernels::{BandCounts, BandExtract, BandStats, KernelBackend, NativeBackend, PivotCounts};
 pub use manifest::Manifest;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
 use anyhow::Result;
@@ -31,7 +33,16 @@ use std::path::Path;
 pub fn backend_from_name(name: &str, dir: &Path) -> Result<Box<dyn KernelBackend>> {
     match name {
         "native" => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
         "pjrt" => Ok(Box::new(PjrtBackend::load(dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = dir;
+            anyhow::bail!(
+                "backend 'pjrt' requires building with `--features pjrt` \
+                 (and the `xla` crate — see Cargo.toml)"
+            )
+        }
         other => anyhow::bail!("unknown backend '{other}' (expected native|pjrt)"),
     }
 }

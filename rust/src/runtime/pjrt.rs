@@ -10,7 +10,7 @@
 //! keys; the wrapper pads the tail and passes the live length in the
 //! `valid` scalar — the kernels mask everything past it.
 
-use super::kernels::{BandCounts, KernelBackend, PivotCounts};
+use super::kernels::{BandCounts, BandExtract, KernelBackend, PivotCounts};
 use super::manifest::Manifest;
 use crate::Key;
 use anyhow::{Context, Result};
@@ -24,6 +24,11 @@ pub struct PjrtBackend {
     band_count: xla::PjRtLoadedExecutable,
     histogram: xla::PjRtLoadedExecutable,
     minmax: xla::PjRtLoadedExecutable,
+    /// Fused pivot+band counting/compaction kernel. `None` for artifact
+    /// directories lowered before the fused two-round protocol — the
+    /// wrapper then composes the split kernels + a native compaction of
+    /// the staged chunk (same result, one extra chunk read).
+    band_extract: Option<xla::PjRtLoadedExecutable>,
     buf_len: usize,
     nbins: usize,
     /// Staging buffer reused across calls (avoids a BUF_LEN alloc per
@@ -47,11 +52,17 @@ impl PjrtBackend {
                 .compile(&comp)
                 .with_context(|| format!("compiling {kind}"))
         };
+        let band_extract = if manifest.artifacts.contains_key("band_extract") {
+            Some(compile("band_extract")?)
+        } else {
+            None
+        };
         Ok(Self {
             count_pivot: compile("count_pivot")?,
             band_count: compile("band_count")?,
             histogram: compile("histogram")?,
             minmax: compile("minmax")?,
+            band_extract,
             buf_len: manifest.buf_len,
             nbins: manifest.nbins,
             stage: vec![0; manifest.buf_len],
@@ -158,6 +169,75 @@ impl KernelBackend for PjrtBackend {
             hi = hi.max(v[1]);
         }
         Some((lo, hi))
+    }
+
+    fn band_extract(
+        &mut self,
+        data: &[Key],
+        pivot: Key,
+        lo: Key,
+        hi: Key,
+        budget: usize,
+    ) -> BandExtract {
+        debug_assert!(lo <= hi, "band [{lo}, {hi}] inverted");
+        let mut out = BandExtract::default();
+        for chunk in data.chunks(self.buf_len.max(1)) {
+            let (x, n) = self.stage_chunk(chunk);
+            if let Some(exe) = &self.band_extract {
+                // fused artifact: [lt, eq, below, eq_lo, inner, eq_hi]
+                // followed by the compacted open-band values
+                let run = Self::run1(
+                    exe,
+                    &[
+                        x,
+                        xla::Literal::vec1(&[pivot]),
+                        xla::Literal::vec1(&[lo]),
+                        xla::Literal::vec1(&[hi]),
+                        xla::Literal::vec1(&[n]),
+                    ],
+                )
+                .expect("band_extract execution failed");
+                let v = run.to_vec::<i64>().expect("band_extract output");
+                out.pivot.lt += v[0] as u64;
+                out.pivot.eq += v[1] as u64;
+                out.band.below += v[2] as u64;
+                out.band.eq_lo += v[3] as u64;
+                out.band.inner += v[4] as u64;
+                out.band.eq_hi += v[5] as u64;
+                if !out.overflow {
+                    out.candidates
+                        .extend(v[6..6 + v[4] as usize].iter().map(|&k| k as Key));
+                }
+            } else {
+                // pre-fusion artifacts: split executable for the pivot
+                // counts, native compaction of the chunk
+                let run = Self::run1(
+                    &self.count_pivot,
+                    &[x, xla::Literal::vec1(&[pivot]), xla::Literal::vec1(&[n])],
+                )
+                .expect("count_pivot execution failed");
+                let pc = run.to_vec::<i64>().expect("count_pivot output");
+                out.pivot.lt += pc[0] as u64;
+                out.pivot.eq += pc[1] as u64;
+                for &v in chunk {
+                    out.band.below += u64::from(v < lo);
+                    out.band.eq_lo += u64::from(v == lo);
+                    out.band.eq_hi += u64::from(v == hi);
+                    if v > lo && v < hi {
+                        out.band.inner += 1;
+                        if !out.overflow {
+                            out.candidates.push(v);
+                        }
+                    }
+                }
+            }
+            if out.candidates.len() > budget {
+                out.overflow = true;
+                out.candidates = Vec::new();
+            }
+        }
+        out.finalize(data.len() as u64, lo, hi);
+        out
     }
 
     fn name(&self) -> &'static str {

@@ -227,6 +227,41 @@ impl GkCore {
         best.map(|(_, v)| v)
     }
 
+    /// Guaranteed value band around 1-based `rank`: a pair `(lo, hi)`
+    /// with `lo ≤ x₍rank₎ ≤ hi`, derived from the summary's rank
+    /// intervals alone (no ε slop on top).
+    ///
+    /// `lo` is the largest sample whose **maximum** possible rank is
+    /// still ≤ `rank` — its true rank r satisfies `r ≤ rank`, hence
+    /// `v = x₍r₎ ≤ x₍rank₎`. Symmetrically `hi` is the smallest sample
+    /// whose **minimum** possible rank is ≥ `rank`. The first/last
+    /// samples pin the exact min/max, so the fallbacks are always valid.
+    /// By the invariant (Eq. 1) the band spans O(εn) ranks, which is what
+    /// lets GK Select's fused scan extract every candidate in one pass
+    /// with bounded traffic.
+    pub fn query_rank_bounds(&self, rank: u64) -> Option<(Key, Key)> {
+        if self.samples.is_empty() || self.count == 0 {
+            return None;
+        }
+        let rank = rank.clamp(1, self.count);
+        // unconditional fallbacks: global min (rank 1) and max (rank n)
+        let mut lo = self.samples[0].v;
+        let mut hi = self.samples[self.samples.len() - 1].v;
+        let mut min_rank = 0u64;
+        for s in &self.samples {
+            min_rank += s.g;
+            let max_rank = min_rank + s.delta;
+            if max_rank <= rank {
+                lo = s.v; // samples ascend: the last hit is the largest
+            }
+            if min_rank >= rank {
+                hi = s.v; // first hit is the smallest such sample
+                break;
+            }
+        }
+        Some((lo, hi))
+    }
+
     /// Value at quantile `q` (Spark convention: rank = ⌈q·n⌉ clamped ≥1).
     pub fn query_quantile(&self, q: f64) -> Option<Key> {
         assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
@@ -495,6 +530,72 @@ mod tests {
         let c = GkCore::from_sorted(&(0..10_000).collect::<Vec<_>>(), 0.05);
         assert_eq!(c.samples.first().unwrap().v, 0);
         assert_eq!(c.samples.last().unwrap().v, 9_999);
+    }
+
+    #[test]
+    fn rank_bounds_bracket_true_value() {
+        let mut rng = crate::select::SplitMix64::new(77);
+        let mut data: Vec<Key> = (0..30_000)
+            .map(|_| (rng.next_u64() % 4_000_000) as i64 as Key)
+            .collect();
+        data.sort_unstable();
+        let eps = 0.02;
+        let core = GkCore::from_sorted(&data, eps);
+        let n = data.len() as u64;
+        for pct in [1u64, 10, 25, 50, 75, 90, 99] {
+            let rank = (pct * n / 100).max(1);
+            let truth = data[(rank - 1) as usize];
+            let (lo, hi) = core.query_rank_bounds(rank).unwrap();
+            assert!(lo <= truth && truth <= hi, "rank {rank}: [{lo},{hi}] ∌ {truth}");
+            // band stays O(εn) ranks wide (from_sorted: ≤ 2·⌊2εn⌋ + 2)
+            let lo_rank = data.partition_point(|&x| x < lo) as u64;
+            let hi_rank = data.partition_point(|&x| x <= hi) as u64;
+            let width = hi_rank - lo_rank;
+            let bound = 2 * (2.0 * eps * n as f64).floor() as u64 + 2;
+            assert!(width <= bound, "rank {rank}: band width {width} > {bound}");
+        }
+    }
+
+    #[test]
+    fn rank_bounds_bracket_after_merge() {
+        let mut rng = crate::select::SplitMix64::new(78);
+        let data: Vec<Key> = (0..40_000)
+            .map(|_| (rng.next_u64() % 1_000_000) as Key)
+            .collect();
+        let mut merged: Option<GkCore> = None;
+        for chunk in data.chunks(5_000) {
+            let mut b = chunk.to_vec();
+            b.sort_unstable();
+            let c = GkCore::from_sorted(&b, 0.01);
+            merged = Some(match merged {
+                None => c,
+                Some(m) => m.merge_with(c),
+            });
+        }
+        let core = merged.unwrap();
+        let mut sorted = data;
+        sorted.sort_unstable();
+        for rank in [1u64, 400, 20_000, 39_999, 40_000] {
+            let truth = sorted[(rank - 1) as usize];
+            let (lo, hi) = core.query_rank_bounds(rank).unwrap();
+            assert!(lo <= truth && truth <= hi, "rank {rank}: [{lo},{hi}] ∌ {truth}");
+        }
+    }
+
+    #[test]
+    fn rank_bounds_edges() {
+        assert_eq!(GkCore::new(0.1).query_rank_bounds(1), None);
+        let c = GkCore::from_sorted(&[7], 0.1);
+        assert_eq!(c.query_rank_bounds(1), Some((7, 7)));
+        let c = GkCore::from_sorted(&(0..100).collect::<Vec<_>>(), 0.05);
+        // out-of-range ranks clamp to the extremes
+        assert_eq!(c.query_rank_bounds(0).unwrap().0, 0);
+        assert_eq!(c.query_rank_bounds(10_000).unwrap().1, 99);
+        let (lo, hi) = c.query_rank_bounds(1).unwrap();
+        assert_eq!(lo, 0);
+        assert!(hi >= 0);
+        let (_, hi) = c.query_rank_bounds(100).unwrap();
+        assert_eq!(hi, 99);
     }
 
     #[test]

@@ -87,6 +87,75 @@ impl Bench {
     }
 }
 
+/// Minimal JSON value for machine-readable bench artifacts
+/// (`BENCH_*.json`): the write-side complement of `util::minijson`, so
+/// perf trajectories can be diffed across PRs without a serde
+/// dependency.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonVal {
+    Bool(bool),
+    U64(u64),
+    F64(f64),
+    Str(String),
+    Arr(Vec<JsonVal>),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    pub fn obj(fields: Vec<(&str, JsonVal)>) -> JsonVal {
+        JsonVal::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            JsonVal::Bool(b) => b.to_string(),
+            JsonVal::U64(u) => u.to_string(),
+            JsonVal::F64(f) => {
+                if f.is_finite() {
+                    // round-trippable, JSON-legal float formatting
+                    format!("{f:?}")
+                } else {
+                    "null".to_string()
+                }
+            }
+            JsonVal::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            JsonVal::Arr(items) => {
+                let body: Vec<String> = items.iter().map(JsonVal::render).collect();
+                format!("[{}]", body.join(","))
+            }
+            JsonVal::Obj(fields) => {
+                let body: Vec<String> = fields
+                    .iter()
+                    .map(|(k, v)| format!("{}:{}", JsonVal::Str(k.clone()).render(), v.render()))
+                    .collect();
+                format!("{{{}}}", body.join(","))
+            }
+        }
+    }
+}
+
+/// Write a bench artifact to `path` (pretty enough to diff: one trailing
+/// newline, compact body).
+pub fn write_json(path: &std::path::Path, value: &JsonVal) -> std::io::Result<()> {
+    std::fs::write(path, value.render() + "\n")
+}
+
 /// Human-scaled seconds.
 pub fn fmt_s(s: f64) -> String {
     if s < 1e-6 {
@@ -111,6 +180,28 @@ mod tests {
         assert!(s.mean_s >= 0.0);
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.max_s);
         assert_eq!(s.name, "test/noop");
+    }
+
+    #[test]
+    fn json_renders_and_roundtrips_through_minijson() {
+        let v = JsonVal::obj(vec![
+            ("algorithm", JsonVal::Str("GK Select".into())),
+            ("rounds", JsonVal::U64(2)),
+            ("elapsed_s", JsonVal::F64(0.125)),
+            ("exact", JsonVal::Bool(true)),
+            ("scans", JsonVal::Arr(vec![JsonVal::U64(1), JsonVal::U64(2)])),
+        ]);
+        let text = v.render();
+        let parsed = crate::util::minijson::parse(&text).unwrap();
+        assert_eq!(parsed.get("rounds").unwrap().as_u64(), Some(2));
+        assert_eq!(parsed.get("algorithm").unwrap().as_str(), Some("GK Select"));
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        let v = JsonVal::Str("a\"b\\c\nd".into());
+        assert_eq!(v.render(), r#""a\"b\\c\nd""#);
+        assert!(crate::util::minijson::parse(&v.render()).is_ok());
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //! Select running end-to-end on the PJRT backend.
 //!
 //! These tests are skipped (with a loud message) when `artifacts/` is
-//! missing — run `make artifacts` first; `make test` does.
+//! missing — run `make artifacts` first; `make test` does. The whole
+//! file is additionally gated on the `pjrt` cargo feature (the default
+//! build resolves offline and carries no XLA binding).
+
+#![cfg(feature = "pjrt")]
 
 use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
 use gkselect::algorithms::oracle_quantile;
@@ -78,6 +82,33 @@ fn pjrt_minmax_matches_native() {
     for n in [0usize, 1, 131072, 131073] {
         let data = random_keys(n, 13 + n as u64);
         assert_eq!(pjrt.minmax(&data), native.minmax(&data), "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_band_extract_matches_native() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut native = NativeBackend::new();
+    // straddle the 131072 buffer length so multi-chunk accumulation and
+    // per-chunk compaction both get exercised
+    for n in [0usize, 1, 1000, 131072, 131073, 300_000] {
+        let data = random_keys(n, 21 + n as u64);
+        for (pivot, lo, hi) in [
+            (0, -1_000_000, 1_000_000),
+            (0, 0, 0),
+            (42, Key::MIN, Key::MAX),
+        ] {
+            let budget = usize::MAX;
+            let a = pjrt.band_extract(&data, pivot, lo, hi, budget);
+            let b = native.band_extract(&data, pivot, lo, hi, budget);
+            assert_eq!(a.pivot, b.pivot, "n={n} pivot counts");
+            assert_eq!(a.band, b.band, "n={n} band stats");
+            assert_eq!(a.overflow, b.overflow, "n={n} overflow");
+            let (mut ac, mut bc) = (a.candidates, b.candidates);
+            ac.sort_unstable();
+            bc.sort_unstable();
+            assert_eq!(ac, bc, "n={n} candidates");
+        }
     }
 }
 

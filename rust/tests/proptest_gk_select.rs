@@ -1,0 +1,150 @@
+//! Property tests for the fused two-round GK Select protocol: the fused
+//! band path, the budget-overflow fallback, and the eq-run exit all have
+//! to agree with `oracle_quantile` for arbitrary
+//! (distribution, n, q, ε) tuples.
+
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::multi_select::MultiSelect;
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+/// Random dataset with a randomly chosen shape: wide-uniform,
+/// duplicate-heavy, sorted, or bimodal — the distribution axis of the
+/// acceptance matrix, without dragging the generators in.
+fn gen_dataset(g: &mut Gen) -> (Cluster, Dataset<Key>, u64) {
+    let executors = g.usize_in(1, 3);
+    let partitions = g.usize_in(executors, executors * 4);
+    let n = g.usize_in(1, 4_000);
+    let mut values: Vec<Key> = match g.usize_in(0, 3) {
+        0 => (0..n).map(|_| g.i32_in(-1_000_000_000, 999_999_999)).collect(),
+        1 => (0..n).map(|_| g.i32_in(0, 8)).collect(), // duplicate-heavy
+        2 => {
+            let mut v: Vec<Key> = (0..n).map(|_| g.i32_in(-50_000, 50_000)).collect();
+            v.sort_unstable();
+            v
+        }
+        _ => (0..n)
+            .map(|_| {
+                if g.bool() {
+                    g.i32_in(-1_000_000, -900_000)
+                } else {
+                    g.i32_in(900_000, 1_000_000)
+                }
+            })
+            .collect(),
+    };
+    if values.is_empty() {
+        values.push(g.i32_in(-5, 5));
+    }
+    let cluster = Cluster::new(ClusterConfig::local(executors, partitions));
+    let len = values.len() as u64;
+    (cluster, Dataset::from_vec(values, partitions), len)
+}
+
+fn gen_q(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 9) {
+        0 => 0.0,
+        1 => 1.0,
+        _ => g.f64_unit(),
+    }
+}
+
+fn gen_eps(g: &mut Gen) -> f64 {
+    0.001 + g.f64_unit() * 0.3
+}
+
+#[test]
+fn prop_fused_path_matches_oracle() {
+    check("fused_matches_oracle", 60, |g| {
+        let (mut cluster, data, _n) = gen_dataset(g);
+        let q = gen_q(g);
+        let eps = gen_eps(g);
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = GkSelect::new(GkSelectParams {
+            epsilon: eps,
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut cluster, &data, q).unwrap();
+        assert_eq!(out.value, truth, "q={q} eps={eps}");
+        assert!(out.report.rounds <= 3);
+        assert_eq!(out.report.shuffles, 0);
+        assert_eq!(out.report.persists, 0);
+        // fused path: ≤ 2 scans; fallback adds exactly one more
+        assert!(out.report.data_scans <= 3, "scans = {}", out.report.data_scans);
+    });
+}
+
+#[test]
+fn prop_band_overflow_fallback_stays_exact() {
+    // budget 0 forces the fallback whenever the open band is nonempty;
+    // across the sweep the 3-round path must fire and must stay exact
+    let mut saw_fallback = false;
+    check("overflow_fallback_exact", 40, |g| {
+        let (mut cluster, data, _n) = gen_dataset(g);
+        let q = gen_q(g);
+        let eps = gen_eps(g);
+        let truth = oracle_quantile(&data, q).unwrap();
+        let mut alg = GkSelect::new(GkSelectParams {
+            epsilon: eps,
+            candidate_budget: Some(0),
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut cluster, &data, q).unwrap();
+        assert_eq!(out.value, truth, "fallback q={q} eps={eps}");
+        assert!(out.report.rounds <= 3);
+        if out.report.rounds == 3 {
+            assert_eq!(out.report.data_scans, 3);
+            saw_fallback = true;
+        }
+    });
+    if std::env::var("PROPKIT_SEED").is_err() {
+        assert!(saw_fallback, "sweep never exercised the 3-round fallback");
+    }
+}
+
+#[test]
+fn prop_eq_run_exit_in_two_rounds() {
+    // constant datasets answer from the pivot's eq-run: 2 rounds, 1
+    // post-sketch scan, regardless of ε or the candidate budget
+    check("eq_run_two_rounds", 25, |g| {
+        let n = g.usize_in(1, 2_000);
+        let v = g.i32_in(-100, 100);
+        let partitions = g.usize_in(1, 8);
+        let mut cluster = Cluster::new(ClusterConfig::local(1, partitions));
+        let data = Dataset::from_vec(vec![v; n], partitions);
+        let q = gen_q(g);
+        let mut alg = GkSelect::new(GkSelectParams {
+            epsilon: gen_eps(g),
+            candidate_budget: Some(0),
+            ..Default::default()
+        });
+        let out = alg.quantile(&mut cluster, &data, q).unwrap();
+        assert_eq!(out.value, v);
+        assert_eq!(out.report.rounds, 2, "eq-run exit must stay 2 rounds");
+        assert_eq!(out.report.data_scans, 2);
+    });
+}
+
+#[test]
+fn prop_multi_select_matches_oracle() {
+    check("multi_select_matches_oracle", 30, |g| {
+        let (mut cluster, data, _n) = gen_dataset(g);
+        let m = g.usize_in(1, 5);
+        let qs: Vec<f64> = (0..m).map(|_| gen_q(g)).collect();
+        let mut alg = MultiSelect::new(GkSelectParams {
+            epsilon: gen_eps(g),
+            ..Default::default()
+        });
+        let out = alg.quantiles(&mut cluster, &data, &qs).unwrap();
+        for (&q, &v) in qs.iter().zip(out.values.iter()) {
+            assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
+        }
+        assert!(out.report.rounds <= 3);
+        assert!(out.report.data_scans <= 3);
+        assert_eq!(out.report.shuffles, 0);
+    });
+}
