@@ -3,20 +3,19 @@
 //! the fused band_extract kernel vs the split count passes it replaces,
 //! Dutch partition, quickselect, histogram, RNG.
 //!
-//! Also emits `BENCH_gk_select.json`: rounds / data_scans /
-//! virtual-clock seconds for GK Select on the paper's `emr(30)` shape,
-//! fused two-round path vs the seed three-round path (forced via a zero
-//! candidate budget), so the perf trajectory is machine-readable across
-//! PRs.
+//! Also emits `BENCH_gk_select.json` (via [`gkselect::harness::write_bench_json`],
+//! shared with `repro bench json`): rounds / data_scans / virtual-clock
+//! seconds for GK Select on the paper's `emr(30)` shape — the fused
+//! two-round path vs the seed three-round path (forced via a zero
+//! candidate budget), plus a threads-vs-sequential pair recording the
+//! *real* parallel wall-clock of the fused band-extract scan through the
+//! OS-thread executor pool.
 
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::QuantileAlgorithm;
-use gkselect::cluster::{Cluster, ClusterConfig};
 use gkselect::data::pcg::Pcg64;
-use gkselect::data::{DataGenerator, Distribution};
+use gkselect::harness;
 use gkselect::runtime::{KernelBackend, NativeBackend};
 use gkselect::select::{dutch_partition, select_kth, SplitMix64};
-use gkselect::util::benchkit::{write_json, Bench, JsonVal};
+use gkselect::util::benchkit::Bench;
 use gkselect::Key;
 use std::path::Path;
 
@@ -25,51 +24,12 @@ fn data(n: usize) -> Vec<Key> {
     (0..n).map(|_| rng.next_u64() as Key).collect()
 }
 
-/// One GK Select run on the `emr(30)` shape → a JSON record.
-fn gk_select_record(
-    label: &str,
-    dist: Distribution,
-    n: u64,
-    budget: Option<usize>,
-) -> JsonVal {
-    let mut cluster = Cluster::new(ClusterConfig::emr(30));
-    let dataset = dist.generator(42).generate(&mut cluster, n);
-    let mut alg = GkSelect::new(GkSelectParams {
-        candidate_budget: budget,
-        ..Default::default()
-    });
-    let out = alg
-        .quantile(&mut cluster, &dataset, 0.75)
-        .expect("bench run failed");
-    println!(
-        "bench gk_select_emr30/{label:<32} rounds {} scans {} model {:>10.4}s",
-        out.report.rounds, out.report.data_scans, out.report.elapsed_secs
-    );
-    JsonVal::obj(vec![
-        ("algorithm", JsonVal::Str(format!("gk_select_{label}"))),
-        ("distribution", JsonVal::Str(dist.label().to_string())),
-        ("n", JsonVal::U64(n)),
-        ("q", JsonVal::F64(0.75)),
-        ("rounds", JsonVal::U64(out.report.rounds)),
-        ("data_scans", JsonVal::U64(out.report.data_scans)),
-        ("stage_boundaries", JsonVal::U64(out.report.stage_boundaries)),
-        ("shuffles", JsonVal::U64(out.report.shuffles)),
-        ("persists", JsonVal::U64(out.report.persists)),
-        (
-            "network_volume_bytes",
-            JsonVal::U64(out.report.network_volume_bytes),
-        ),
-        ("elapsed_model_s", JsonVal::F64(out.report.elapsed_secs)),
-        ("exact", JsonVal::Bool(out.report.exact)),
-    ])
-}
-
 fn main() {
     let n = 4_000_000usize;
     let xs = data(n);
 
     let bench = Bench::new("hot_count_pivot").samples(20);
-    let mut native = NativeBackend::new();
+    let native = NativeBackend::new();
     bench.run_throughput("native_4m", n as u64, || native.count_pivot(&xs, 0).lt);
 
     // fused band_extract vs the split passes it replaces: same pivot, an
@@ -105,7 +65,7 @@ fn main() {
     #[cfg(feature = "pjrt")]
     {
         use gkselect::runtime::PjrtBackend;
-        if let Ok(mut pjrt) = PjrtBackend::load(Path::new("artifacts")) {
+        if let Ok(pjrt) = PjrtBackend::load(Path::new("artifacts")) {
             let small = &xs[..512 * 1024];
             let pjrt_bench = Bench::new("hot_count_pivot_pjrt").samples(5);
             pjrt_bench.run_throughput("pjrt_512k", small.len() as u64, || {
@@ -153,47 +113,9 @@ fn main() {
     bench.run("splitmix_below", || rng.below(1_000_000));
 
     // ---- machine-readable perf trajectory: BENCH_gk_select.json --------
-    let bn = 4_000_000u64;
-    let mut records = vec![
-        // the fused two-round path, acceptance distributions
-        gk_select_record("fused", Distribution::Uniform, bn, None),
-        gk_select_record("fused_zipf", Distribution::Zipf, bn, None),
-        gk_select_record("fused_bimodal", Distribution::Bimodal, bn, None),
-        gk_select_record("fused_sorted", Distribution::Sorted, bn, None),
-    ];
-    // the seed path's round/scan shape, same workload: budget 0 forces
-    // the overflow fallback, reproducing the seed's 3 rounds and 3 data
-    // scans (sketch + count + secondPass). Caveat: the middle scan here
-    // is the fused six-counter kernel where the seed ran plain
-    // count_pivot, so this baseline is marginally costlier per scanned
-    // key than the true seed and the time delta read from this file may
-    // be slightly *overstated* by that compute difference; the 3→2
-    // round and 3→2 scan accounting, which dominates the delta on the
-    // EMR fabric model, is structural and exact. See `note` in the JSON.
-    records.push(gk_select_record(
-        "three_round_baseline",
-        Distribution::Uniform,
-        bn,
-        Some(0),
-    ));
-    let doc = JsonVal::obj(vec![
-        ("bench", JsonVal::Str("gk_select".into())),
-        ("cluster", JsonVal::Str("emr(30)".into())),
-        (
-            "note",
-            JsonVal::Str(
-                "three_round_baseline replays the seed path's 3-round/3-scan \
-                 shape via a zero candidate budget; its middle scan is the \
-                 fused kernel (slightly costlier than the seed's count_pivot), \
-                 so the time improvement vs this baseline may be slightly \
-                 overstated by that compute delta — the 3->2 round and 3->2 \
-                 scan reduction is structural and exact"
-                    .into(),
-            ),
-        ),
-        ("runs", JsonVal::Arr(records)),
-    ]);
-    let path = Path::new("BENCH_gk_select.json");
-    write_json(path, &doc).expect("writing BENCH_gk_select.json");
-    println!("wrote {}", path.display());
+    // (fused vs three-round baseline, plus threads-vs-sequential real
+    // wall-clock for the fused band-extract scan — shared implementation
+    // with `repro bench json`)
+    harness::write_bench_json(Path::new("."), 4_000_000)
+        .expect("writing BENCH_gk_select.json");
 }

@@ -29,8 +29,8 @@ use std::path::Path;
 fn probe_pjrt(artifacts: &Path) -> bool {
     use gkselect::runtime::{KernelBackend, PjrtBackend};
     match PjrtBackend::load(artifacts) {
-        Ok(mut pjrt) => {
-            let mut native = NativeBackend::new();
+        Ok(pjrt) => {
+            let native = NativeBackend::new();
             let probe: Vec<i32> = (0..300_000).map(|i| (i * 2_654_435_761u64 as i64) as i32).collect();
             for pivot in [i32::MIN, -7, 0, 1 << 20, i32::MAX] {
                 let a = pjrt.count_pivot(&probe, pivot);

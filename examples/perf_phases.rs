@@ -22,7 +22,7 @@ fn main() {
     let pivot = sk.query_quantile(0.5).unwrap();
     let m0 = c.elapsed_secs();
     let t = Instant::now();
-    let mut be = NativeBackend::new();
+    let be = NativeBackend::new();
     let pending = c.map_partitions(&data, |p, _| { let x = be.count_pivot(p, pivot); (x.lt, x.eq, x.gt) });
     let _ = c.reduce(pending, |a, b| (a.0+b.0, a.1+b.1, a.2+b.2));
     println!("count wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs() - m0);

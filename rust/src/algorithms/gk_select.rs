@@ -250,7 +250,7 @@ impl QuantileAlgorithm for GkSelect {
             .params
             .candidate_budget
             .unwrap_or_else(|| default_candidate_budget(self.params.epsilon, n));
-        let backend = self.backend.as_mut();
+        let backend = self.backend.as_ref();
         let pending = cluster.map_partitions(data, |part, _| {
             backend.band_extract(part, pivot, lo, hi, budget)
         });
@@ -482,7 +482,7 @@ mod tests {
 
     #[test]
     fn resolve_band_arithmetic() {
-        let mut backend = NativeBackend::new();
+        let backend = NativeBackend::new();
         // data: 2×10, 3×20, 5×30, 4×40, 6×50  (n = 20)
         let mut data: Vec<Key> = Vec::new();
         for (v, c) in [(10, 2), (20, 3), (30, 5), (40, 4), (50, 6)] {

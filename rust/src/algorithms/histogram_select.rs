@@ -83,7 +83,7 @@ impl QuantileAlgorithm for HistogramSelect {
         let mut k = target_rank(n, q);
 
         // Round 1: global min/max seeds the value range
-        let backend = self.backend.as_mut();
+        let backend = self.backend.as_ref();
         let pending = cluster.map_partitions(data, |part, _| backend.minmax(part));
         let bounds = cluster
             .reduce(pending, |a, b| match (a, b) {
@@ -103,7 +103,7 @@ impl QuantileAlgorithm for HistogramSelect {
             }
             let span = hi as i64 - lo as i64 + 1;
             let width = (span + nbins as i64 - 1) / nbins as i64; // ceil
-            let backend = self.backend.as_mut();
+            let backend = self.backend.as_ref();
             let lo_i = lo as i64;
             let pending = cluster.map_partitions(data, |part, _| {
                 // restrict to the live band, then bucket

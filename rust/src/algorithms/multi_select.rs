@@ -123,7 +123,7 @@ impl MultiSelect {
             .params
             .candidate_budget
             .unwrap_or_else(|| default_candidate_budget(self.params.epsilon, n));
-        let backend = self.backend.as_mut();
+        let backend = self.backend.as_ref();
         let qy = queries.clone();
         let pending = cluster.map_partitions(data, |part, _| {
             ExtractSet(backend.multi_band_extract(part, &qy, budget))

@@ -34,12 +34,57 @@ pub struct RunMetrics {
     pub messages: u64,
     /// Modelled driver-side compute seconds.
     pub driver_compute_secs: f64,
+    /// treeReduce merge levels actually executed (pairwise: ⌈log₂ P⌉ per
+    /// reduce; Spark-style `depth` overrides squash this — the only
+    /// counter that can tell the two tree shapes apart, since total
+    /// messages are `P − 1` either way).
+    pub tree_levels: u64,
+    /// Real wall-clock seconds of each `map_partitions` stage, in
+    /// execution order: the parallel elapsed time under
+    /// `ExecMode::Threads`, the single-core elapsed time sequentially.
+    /// Real time, not the virtual clock — the two are compared, never
+    /// mixed.
+    pub stage_walls: Vec<f64>,
+    /// Σ `stage_walls`.
+    pub wall_stage_secs: f64,
+    /// Real seconds each executor spent inside partition closures,
+    /// accumulated across stages and indexed by executor — the
+    /// utilization / skew ledger.
+    pub executor_busy_secs: Vec<f64>,
 }
 
 impl RunMetrics {
     /// Total network volume — the paper's Table V "Network volume" column.
     pub fn network_volume(&self) -> u64 {
         self.bytes_to_driver + self.bytes_shuffled + self.bytes_tree_reduced + self.bytes_broadcast
+    }
+
+    /// Fraction of available executor-seconds spent computing across the
+    /// run's `map_partitions` stages: Σ busy / (E × Σ wall). 0.0 before
+    /// any stage ran. Only meaningful under `ExecMode::Threads` (the
+    /// sequential path's wall is the serialized sum, so utilization reads
+    /// as ≈ 1/E there).
+    pub fn executor_utilization(&self) -> f64 {
+        let denom = self.executor_busy_secs.len() as f64 * self.wall_stage_secs;
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        self.executor_busy_secs.iter().sum::<f64>() / denom
+    }
+
+    /// Busy-time skew: max executor busy time over the mean (1.0 =
+    /// perfectly balanced, larger = stragglers). 0.0 before any stage ran.
+    pub fn busy_skew(&self) -> f64 {
+        if self.executor_busy_secs.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.executor_busy_secs.iter().sum();
+        if sum <= 0.0 {
+            return 0.0;
+        }
+        let mean = sum / self.executor_busy_secs.len() as f64;
+        let max = self.executor_busy_secs.iter().fold(0.0_f64, |a, &b| a.max(b));
+        max / mean
     }
 }
 
@@ -61,6 +106,19 @@ pub struct MetricsReport {
     pub bytes_shuffled: u64,
     pub bytes_broadcast: u64,
     pub messages: u64,
+    pub tree_levels: u64,
+    /// Real wall-clock per `map_partitions` stage (see
+    /// [`RunMetrics::stage_walls`]).
+    pub stage_walls: Vec<f64>,
+    /// Σ `stage_walls` — the run's real parallel elapsed stage time under
+    /// `ExecMode::Threads`.
+    pub wall_stage_secs: f64,
+    /// Real per-executor busy seconds (utilization / skew ledger).
+    pub executor_busy_secs: Vec<f64>,
+    /// Σ busy / (E × Σ wall), from [`RunMetrics::executor_utilization`].
+    pub executor_utilization: f64,
+    /// max busy / mean busy, from [`RunMetrics::busy_skew`].
+    pub busy_skew: f64,
     pub exact: bool,
 }
 
@@ -90,6 +148,12 @@ impl MetricsReport {
             bytes_shuffled: m.bytes_shuffled,
             bytes_broadcast: m.bytes_broadcast,
             messages: m.messages,
+            tree_levels: m.tree_levels,
+            stage_walls: m.stage_walls.clone(),
+            wall_stage_secs: m.wall_stage_secs,
+            executor_busy_secs: m.executor_busy_secs.clone(),
+            executor_utilization: m.executor_utilization(),
+            busy_skew: m.busy_skew(),
             exact,
         }
     }
@@ -162,6 +226,42 @@ mod tests {
         };
         let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
         assert_eq!(r.data_scans, 2);
+    }
+
+    #[test]
+    fn utilization_and_skew_arithmetic() {
+        let m = RunMetrics {
+            wall_stage_secs: 2.0,
+            stage_walls: vec![2.0],
+            executor_busy_secs: vec![2.0, 1.0],
+            ..Default::default()
+        };
+        // 3 busy seconds over 2 executors × 2 wall seconds
+        assert!((m.executor_utilization() - 0.75).abs() < 1e-12);
+        // max 2.0 over mean 1.5
+        assert!((m.busy_skew() - 4.0 / 3.0).abs() < 1e-12);
+        // empty ledger: both degrade to 0
+        let empty = RunMetrics::default();
+        assert_eq!(empty.executor_utilization(), 0.0);
+        assert_eq!(empty.busy_skew(), 0.0);
+    }
+
+    #[test]
+    fn report_carries_real_time_ledgers() {
+        let m = RunMetrics {
+            tree_levels: 3,
+            wall_stage_secs: 1.0,
+            stage_walls: vec![0.25, 0.75],
+            executor_busy_secs: vec![0.5, 0.5],
+            ..Default::default()
+        };
+        let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.tree_levels, 3);
+        assert_eq!(r.stage_walls, vec![0.25, 0.75]);
+        assert_eq!(r.wall_stage_secs, 1.0);
+        assert_eq!(r.executor_busy_secs.len(), 2);
+        assert!((r.executor_utilization - 0.5).abs() < 1e-12);
+        assert!((r.busy_skew - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -24,21 +24,55 @@
 //! | range-partition shuffle| [`shuffle::shuffle_by_range`]| no     | yes             |
 //! | `persist`              | [`dataset::Dataset::persist`]| no     | no              |
 //!
-//! ## Timing model
+//! ## Timing model — two execution modes
 //!
-//! The box running this reproduction has one core, so real parallel
-//! speed-up cannot materialize locally. Instead the substrate runs every
-//! partition closure sequentially, *measures* its wall time, and charges a
-//! **virtual clock** with the parallel elapsed time: the max over
+//! The substrate executes partition closures in one of two modes
+//! ([`pool::ExecMode`], selected by `ClusterConfig::exec_mode`, the
+//! `GKSELECT_EXEC_MODE` env var, or `[cluster] exec_mode` in the config):
+//!
+//! * **`Sequential`** (default) — every partition closure runs on the
+//!   calling thread in partition order. Deterministic; what tests pin.
+//! * **`Threads`** — the [`pool::ExecutorPool`] dispatches each partition
+//!   to a scoped OS thread owned by its executor (one thread per
+//!   simulated executor, partitions in round-robin locality order), so
+//!   wall-clock tracks real parallelism and real contention.
+//!
+//! In **both** modes the **virtual clock stays authoritative**: each
+//! closure's wall time is *measured* per partition and the clock is
+//! charged with the modelled parallel elapsed time — the max over
 //! executors of the sum of their partitions' measured times, plus the
 //! network model's cost for the messages actually sent. This keeps
 //! compute costs honest (they come from real execution over real data)
 //! while modelling an EMR-like cluster's parallelism and fabric — the
-//! substitution DESIGN.md §2 documents.
+//! substitution DESIGN.md §2 documents. Partition closures are therefore
+//! required to be pure per partition (`Fn + Sync`): results, quantile
+//! answers, and all round/scan/byte counters are bit-identical across
+//! modes. The *numeric value* of the virtual clock is not: under
+//! `Threads` the measured per-partition times include real scheduling
+//! and contention (executors can outnumber cores), which is exactly what
+//! the mode exists to expose — quote modelled figures from a
+//! `Sequential` run and real wall-clock from a `Threads` run.
+//!
+//! What the modes *add* to [`metrics::RunMetrics`] is real-time
+//! observability of each `mapPartitions` stage:
+//!
+//! | field                 | meaning                                          |
+//! |-----------------------|--------------------------------------------------|
+//! | `stage_walls`         | real wall-clock seconds, one entry per stage     |
+//! | `wall_stage_secs`     | Σ `stage_walls` — real parallel elapsed (threads) or single-core elapsed (sequential) |
+//! | `executor_busy_secs`  | real seconds each executor spent in closures     |
+//! | `tree_levels`         | treeReduce merge levels actually executed        |
+//!
+//! `executor_busy_secs` against `stage_walls` gives utilization and skew
+//! ([`metrics::RunMetrics::executor_utilization`] /
+//! [`metrics::RunMetrics::busy_skew`]); under `Threads` the gap between
+//! `wall_stage_secs` and the virtual clock's compute term is the real
+//! scheduling + contention cost the sequential model cannot see.
 
 pub mod dataset;
 pub mod metrics;
 pub mod netmodel;
+pub mod pool;
 pub mod shuffle;
 pub mod simclock;
 
@@ -47,6 +81,8 @@ use std::time::Instant;
 use dataset::Dataset;
 use metrics::RunMetrics;
 use netmodel::{NetSize, NetworkModel};
+pub use pool::ExecMode;
+use pool::ExecutorPool;
 use simclock::SimClock;
 
 /// Static description of the simulated cluster.
@@ -66,6 +102,11 @@ pub struct ClusterConfig {
     /// Multiplier applied to driver-side measured time (driver nodes are
     /// often less endowed than executors — paper §V-6).
     pub driver_scale: f64,
+    /// How `map_partitions` stages execute: sequentially on the calling
+    /// thread (deterministic default) or on one OS thread per executor.
+    /// Constructors honor the `GKSELECT_EXEC_MODE` env var so CI can run
+    /// the whole suite under real concurrency.
+    pub exec_mode: ExecMode,
 }
 
 impl ClusterConfig {
@@ -78,6 +119,7 @@ impl ClusterConfig {
             net: NetworkModel::zero(),
             compute_scale: 1.0,
             driver_scale: 1.0,
+            exec_mode: ExecMode::from_env(),
         }
     }
 
@@ -91,7 +133,14 @@ impl ClusterConfig {
             net: NetworkModel::emr_like(),
             compute_scale: 1.0,
             driver_scale: 1.0,
+            exec_mode: ExecMode::from_env(),
         }
+    }
+
+    /// Override the execution mode (builder-style).
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
+        self
     }
 
     /// Executor index owning partition `p` (Spark-style round-robin
@@ -161,6 +210,8 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     pub clock: SimClock,
     pub metrics: RunMetrics,
+    /// Executor pool behind `map_partitions` (both execution strategies).
+    pool: ExecutorPool,
 }
 
 impl Cluster {
@@ -170,10 +221,12 @@ impl Cluster {
             cfg.partitions >= cfg.executors,
             "need at least one partition per executor"
         );
+        let pool = ExecutorPool::new(cfg.executors);
         Self {
             cfg,
             clock: SimClock::new(),
             metrics: RunMetrics::default(),
+            pool,
         }
     }
 
@@ -187,28 +240,48 @@ impl Cluster {
     /// partition, measuring compute time per partition. No round, no
     /// stage boundary — those are charged by the consuming action, like
     /// Spark's lazy evaluation.
+    ///
+    /// `f` must be pure per partition (`Fn + Sync`): under
+    /// [`ExecMode::Threads`] it runs concurrently on one OS thread per
+    /// executor, and the two modes are required to produce bit-identical
+    /// values. Either way the stage's real wall-clock and per-executor
+    /// busy times land in [`RunMetrics`]; the virtual clock is charged
+    /// from the measured per-partition times by the consuming action,
+    /// exactly as in the sequential-only substrate.
     pub fn map_partitions<T, R>(
         &mut self,
         data: &Dataset<T>,
-        mut f: impl FnMut(&[T], PartitionCtx) -> R,
-    ) -> PerPartition<R> {
-        let num_partitions = data.num_partitions();
+        f: impl Fn(&[T], PartitionCtx) -> R + Sync,
+    ) -> PerPartition<R>
+    where
+        T: Send + Sync,
+        R: Send,
+    {
         // one mapPartitions stage = one linear read of the dataset; the
         // consuming action charges the round, but the scan happens here
         self.metrics.data_scans += 1;
-        let mut values = Vec::with_capacity(num_partitions);
-        let mut times = Vec::with_capacity(num_partitions);
-        for p in 0..num_partitions {
-            let ctx = PartitionCtx {
-                partition: p,
-                executor: self.cfg.executor_of(p),
-                num_partitions,
-            };
-            let start = Instant::now();
-            values.push(f(data.partition(p), ctx));
-            times.push(start.elapsed().as_secs_f64());
+        let executor_of = |p: usize| self.cfg.executor_of(p);
+        let stage = match self.cfg.exec_mode {
+            ExecMode::Sequential => self.pool.run_sequential(data, executor_of, &f),
+            ExecMode::Threads => self.pool.run_threaded(data, executor_of, &f),
+        };
+        self.metrics.wall_stage_secs += stage.wall_secs;
+        self.metrics.stage_walls.push(stage.wall_secs);
+        if self.metrics.executor_busy_secs.len() < stage.busy_secs.len() {
+            self.metrics.executor_busy_secs.resize(stage.busy_secs.len(), 0.0);
         }
-        PerPartition { values, times }
+        for (ledger, busy) in self
+            .metrics
+            .executor_busy_secs
+            .iter_mut()
+            .zip(stage.busy_secs)
+        {
+            *ledger += busy;
+        }
+        PerPartition {
+            values: stage.values,
+            times: stage.times,
+        }
     }
 
     /// Parallel elapsed time of a stage: max over executors of the summed
@@ -252,8 +325,12 @@ impl Cluster {
     /// `treeReduce`: log-depth aggregation over the executors; only the
     /// final partial reaches the driver. Ends a round.
     ///
-    /// `depth` overrides the tree depth (Spark defaults to 2; `None`
-    /// computes ⌈log₂ P⌉ like the paper's `O(log P)` analysis).
+    /// `depth` overrides the tree depth the way Spark's
+    /// `RDD.treeReduce(f, depth)` does (default 2 there): `P` partials are
+    /// squashed in at most `depth` levels by merging groups of
+    /// `⌈P^(1/depth)⌉` per level. `None` keeps the pairwise tree —
+    /// ⌈log₂ P⌉ levels, the paper's `O(log P)` analysis. The number of
+    /// levels actually executed lands in `RunMetrics::tree_levels`.
     pub fn tree_reduce<R: NetSize>(
         &mut self,
         pending: PerPartition<R>,
@@ -269,33 +346,38 @@ impl Cluster {
             self.metrics.stage_boundaries += 1;
             return None;
         }
-        let natural_depth = (usize::BITS - (level.len().max(2) - 1).leading_zeros()) as usize;
-        let _requested = depth.unwrap_or(natural_depth); // shape is pairwise either way
+        let branch = branch_factor(level.len(), depth);
 
-        // Pairwise merge level by level. Merges within a level run in
-        // parallel across executors: charge max(merge time) + one message
-        // exchange of the largest partial per level.
+        // Merge groups of `branch` partials level by level. Groups within
+        // a level run in parallel across executors (charge the max summed
+        // merge time over groups); merges *within* a group are sequential
+        // on the receiving executor. One message per moved partial; the
+        // level's fabric charge is its largest single partial.
         while level.len() > 1 {
-            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            self.metrics.tree_levels += 1;
+            let mut next = Vec::with_capacity(level.len().div_ceil(branch));
             let mut level_compute = 0.0_f64;
             let mut level_max_bytes = 0_u64;
             let mut level_bytes = 0_u64;
             let mut it = level.into_iter();
-            while let Some(a) = it.next() {
-                match it.next() {
-                    Some(b) => {
-                        let moved = b.net_bytes();
-                        level_bytes += moved;
-                        level_max_bytes = level_max_bytes.max(moved);
-                        let start = Instant::now();
-                        let merged = f(a, b);
-                        level_compute =
-                            level_compute.max(start.elapsed().as_secs_f64());
-                        next.push(merged);
-                        self.metrics.messages += 1;
+            while let Some(mut acc) = it.next() {
+                let mut group_compute = 0.0_f64;
+                for _ in 1..branch {
+                    match it.next() {
+                        Some(b) => {
+                            let moved = b.net_bytes();
+                            level_bytes += moved;
+                            level_max_bytes = level_max_bytes.max(moved);
+                            let start = Instant::now();
+                            acc = f(acc, b);
+                            group_compute += start.elapsed().as_secs_f64();
+                            self.metrics.messages += 1;
+                        }
+                        None => break,
                     }
-                    None => next.push(a),
                 }
+                level_compute = level_compute.max(group_compute);
+                next.push(acc);
             }
             self.metrics.bytes_tree_reduced += level_bytes;
             self.clock.advance(
@@ -355,6 +437,19 @@ impl Cluster {
     pub fn elapsed_secs(&self) -> f64 {
         self.clock.elapsed_secs()
     }
+}
+
+/// treeReduce branching factor: smallest `b ≥ 2` with `b^depth ≥ p`
+/// (Spark's `scale = max(⌈P^(1/depth)⌉, 2)`, computed in integers to
+/// dodge `powf` rounding at exact powers). `None` → pairwise.
+fn branch_factor(p: usize, depth: Option<usize>) -> usize {
+    let Some(d) = depth else { return 2 };
+    let d = d.max(1) as u32;
+    let mut b = 2_usize;
+    while (b as u128).pow(d) < p as u128 {
+        b += 1;
+    }
+    b
 }
 
 #[cfg(test)]
@@ -454,5 +549,87 @@ mod tests {
     #[should_panic]
     fn rejects_more_executors_than_partitions() {
         Cluster::new(ClusterConfig::local(8, 4));
+    }
+
+    #[test]
+    fn branch_factor_shapes() {
+        // pairwise when unspecified
+        assert_eq!(branch_factor(8, None), 2);
+        // Spark default depth 2: ⌈√P⌉
+        assert_eq!(branch_factor(8, Some(2)), 3);
+        assert_eq!(branch_factor(16, Some(2)), 4);
+        assert_eq!(branch_factor(40, Some(2)), 7);
+        // depth 1 collapses in one level
+        assert_eq!(branch_factor(8, Some(1)), 8);
+        // depth ≥ log₂P degenerates to pairwise
+        assert_eq!(branch_factor(8, Some(3)), 2);
+        assert_eq!(branch_factor(8, Some(10)), 2);
+        assert_eq!(branch_factor(1, Some(2)), 2);
+    }
+
+    fn level_count(depth: Option<usize>) -> (i64, u64) {
+        let mut c = Cluster::new(ClusterConfig::local(2, 8));
+        let data = Dataset::from_vec((0..64).collect::<Vec<i32>>(), 8);
+        let sums = c.map_partitions(&data, |part, _| {
+            part.iter().map(|&x| x as i64).sum::<i64>()
+        });
+        let total = c.tree_reduce(sums, depth, |a, b| a + b).unwrap();
+        (total, c.metrics.tree_levels)
+    }
+
+    #[test]
+    fn tree_reduce_honors_depth() {
+        // 8 partials: pairwise runs ⌈log₂8⌉ = 3 levels; Spark's default
+        // depth-2 tree groups by ⌈√8⌉ = 3 → 8 → 3 → 1 in 2 levels;
+        // depth 1 is a single 8-way fold. Same answer everywhere.
+        let (t_nat, l_nat) = level_count(None);
+        let (t_d2, l_d2) = level_count(Some(2));
+        let (t_d1, l_d1) = level_count(Some(1));
+        assert_eq!(t_nat, (0..64).sum::<i64>());
+        assert_eq!(t_nat, t_d2);
+        assert_eq!(t_nat, t_d1);
+        assert_eq!(l_nat, 3, "pairwise levels");
+        assert_eq!(l_d2, 2, "depth-2 levels");
+        assert_eq!(l_d1, 1, "depth-1 levels");
+    }
+
+    #[test]
+    fn threads_mode_matches_sequential_values_and_counters() {
+        let run = |mode: ExecMode| {
+            let mut c = Cluster::new(ClusterConfig::local(3, 7).with_exec_mode(mode));
+            let data = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 7);
+            let pending = c.map_partitions(&data, |part, ctx| {
+                (ctx.partition, ctx.executor, part.iter().map(|&x| x as i64).sum::<i64>())
+            });
+            let values = pending.values.clone();
+            let got = c.collect(pending);
+            (values, got, c.metrics.clone())
+        };
+        let (sv, sc, sm) = run(ExecMode::Sequential);
+        let (tv, tc, tm) = run(ExecMode::Threads);
+        assert_eq!(sv, tv, "PerPartition.values must be bit-identical");
+        assert_eq!(sc, tc);
+        assert_eq!(sm.rounds, tm.rounds);
+        assert_eq!(sm.data_scans, tm.data_scans);
+        assert_eq!(sm.bytes_to_driver, tm.bytes_to_driver);
+        assert_eq!(sm.messages, tm.messages);
+        // the threaded run fills the real-time ledgers
+        assert_eq!(tm.executor_busy_secs.len(), 3);
+        assert_eq!(tm.stage_walls.len(), 1);
+        assert_eq!(tm.wall_stage_secs, tm.stage_walls.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn reset_run_clears_wall_ledgers() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4).with_exec_mode(ExecMode::Threads));
+        let d = Dataset::from_vec((0..100).collect::<Vec<i32>>(), 4);
+        let xs = c.map_partitions(&d, |p, _| p.len() as u64);
+        c.collect(xs);
+        assert!(!c.metrics.stage_walls.is_empty());
+        c.reset_run();
+        assert!(c.metrics.stage_walls.is_empty());
+        assert_eq!(c.metrics.wall_stage_secs, 0.0);
+        assert!(c.metrics.executor_busy_secs.is_empty());
+        assert_eq!(c.metrics.tree_levels, 0);
     }
 }

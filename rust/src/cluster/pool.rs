@@ -1,0 +1,321 @@
+//! Thread-parallel executor pool: one OS thread per simulated executor.
+//!
+//! The substrate's sequential path *models* parallelism on the virtual
+//! clock; this module makes it real. [`ExecutorPool::run_threaded`] runs
+//! one scoped OS thread per executor (no `'static` bounds — the threads
+//! borrow the dataset and the partition closure for the duration of the
+//! stage), each draining its own work queue of partition indices in
+//! round-robin locality order, exactly the partitions
+//! [`super::ClusterConfig::executor_of`] assigns it.
+//!
+//! Both execution strategies live here so the substrate's bookkeeping is
+//! mode-independent:
+//!
+//! * [`ExecutorPool::run_sequential`] — the deterministic default: every
+//!   partition closure runs on the calling thread in partition order.
+//! * [`ExecutorPool::run_threaded`] — real concurrency: partitions run on
+//!   their owning executor's thread; results are gathered back into
+//!   partition order, so `PerPartition.values` is bit-identical to the
+//!   sequential path for any pure (`Fn`) partition closure.
+//!
+//! Either way a [`StageOutput`] carries the per-partition measured times
+//! (the virtual clock's input — unchanged by the mode), the stage's real
+//! wall-clock, and a per-executor busy-time ledger (utilization / skew).
+
+use std::time::Instant;
+
+use super::dataset::Dataset;
+use super::PartitionCtx;
+
+/// How `map_partitions` stages execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Run every partition closure on the calling thread, in partition
+    /// order. Deterministic wall-clock; the default for tests.
+    #[default]
+    Sequential,
+    /// Dispatch partitions to one OS thread per executor (scoped threads
+    /// spawned per stage). Values and the virtual clock's accounting are
+    /// identical to `Sequential`; only the real wall-clock changes.
+    Threads,
+}
+
+impl ExecMode {
+    /// Mode requested by the `GKSELECT_EXEC_MODE` environment variable
+    /// (`sequential` | `threads`; unset → `Sequential`). This is the CI
+    /// toggle that re-runs the whole suite under real concurrency.
+    pub fn from_env() -> Self {
+        match std::env::var("GKSELECT_EXEC_MODE") {
+            Ok(v) if v.is_empty() => ExecMode::Sequential,
+            Ok(v) => v
+                .parse()
+                .expect("GKSELECT_EXEC_MODE must be 'sequential' or 'threads'"),
+            Err(_) => ExecMode::Sequential,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Threads => "threads",
+        }
+    }
+}
+
+impl std::str::FromStr for ExecMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "sequential" | "seq" => Ok(Self::Sequential),
+            "threads" | "thread" => Ok(Self::Threads),
+            other => anyhow::bail!("unknown exec mode '{other}' (sequential|threads)"),
+        }
+    }
+}
+
+/// Raw result of one `mapPartitions` stage, before the substrate's
+/// bookkeeping: values and measured compute times in partition order,
+/// plus the stage's real timing.
+#[derive(Debug)]
+pub struct StageOutput<R> {
+    /// One result per partition, in partition order (mode-independent).
+    pub values: Vec<R>,
+    /// Measured compute seconds per partition — what the virtual clock
+    /// charges (max over executors of their partitions' sums).
+    pub times: Vec<f64>,
+    /// Real wall-clock seconds of the whole stage: the sum of all
+    /// partition times (+ loop overhead) sequentially, the parallel
+    /// elapsed time under threads.
+    pub wall_secs: f64,
+    /// Real seconds each executor spent inside partition closures, indexed
+    /// by executor.
+    pub busy_secs: Vec<f64>,
+}
+
+/// The executor pool: owns the per-executor work-queue construction and
+/// both execution strategies. Threads are scoped per stage, so the pool
+/// itself is just the executor count — cheap to hold on the `Cluster`.
+#[derive(Debug, Clone)]
+pub struct ExecutorPool {
+    executors: usize,
+}
+
+impl ExecutorPool {
+    pub fn new(executors: usize) -> Self {
+        assert!(executors > 0, "pool needs at least one executor");
+        Self { executors }
+    }
+
+    pub fn executors(&self) -> usize {
+        self.executors
+    }
+
+    /// Per-executor work queues: partition indices in ascending order —
+    /// the round-robin locality order `executor_of` induces, and the
+    /// order the sequential path visits them in.
+    fn queues(
+        &self,
+        num_partitions: usize,
+        executor_of: impl Fn(usize) -> usize,
+    ) -> Vec<Vec<usize>> {
+        let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.executors];
+        for p in 0..num_partitions {
+            let e = executor_of(p);
+            assert!(e < self.executors, "executor_of({p}) = {e} out of range");
+            queues[e].push(p);
+        }
+        queues
+    }
+
+    /// Sequential strategy: run every partition on the calling thread, in
+    /// partition order.
+    pub fn run_sequential<T, R>(
+        &self,
+        data: &Dataset<T>,
+        executor_of: impl Fn(usize) -> usize,
+        f: impl Fn(&[T], PartitionCtx) -> R,
+    ) -> StageOutput<R> {
+        let num_partitions = data.num_partitions();
+        let wall_start = Instant::now();
+        let mut values = Vec::with_capacity(num_partitions);
+        let mut times = Vec::with_capacity(num_partitions);
+        let mut busy_secs = vec![0.0_f64; self.executors];
+        for p in 0..num_partitions {
+            let executor = executor_of(p);
+            let ctx = PartitionCtx {
+                partition: p,
+                executor,
+                num_partitions,
+            };
+            let start = Instant::now();
+            values.push(f(data.partition(p), ctx));
+            let dt = start.elapsed().as_secs_f64();
+            times.push(dt);
+            busy_secs[executor] += dt;
+        }
+        StageOutput {
+            values,
+            times,
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+            busy_secs,
+        }
+    }
+
+    /// Threaded strategy: one scoped OS thread per executor, each running
+    /// its own queue's partitions in locality order. Results are scattered
+    /// back into partition order, so for pure closures the output is
+    /// bit-identical to [`Self::run_sequential`].
+    pub fn run_threaded<T, R>(
+        &self,
+        data: &Dataset<T>,
+        executor_of: impl Fn(usize) -> usize,
+        f: impl Fn(&[T], PartitionCtx) -> R + Sync,
+    ) -> StageOutput<R>
+    where
+        T: Send + Sync,
+        R: Send,
+    {
+        let num_partitions = data.num_partitions();
+        let queues = self.queues(num_partitions, executor_of);
+        let wall_start = Instant::now();
+        // (partition, value, secs) triples per executor, plus its busy sum
+        let per_exec: Vec<(Vec<(usize, R, f64)>, f64)> = std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = queues
+                .iter()
+                .enumerate()
+                .map(|(executor, queue)| {
+                    scope.spawn(move || {
+                        let mut out = Vec::with_capacity(queue.len());
+                        let mut busy = 0.0_f64;
+                        for &p in queue {
+                            let ctx = PartitionCtx {
+                                partition: p,
+                                executor,
+                                num_partitions,
+                            };
+                            let start = Instant::now();
+                            let value = f(data.partition(p), ctx);
+                            let dt = start.elapsed().as_secs_f64();
+                            busy += dt;
+                            out.push((p, value, dt));
+                        }
+                        (out, busy)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(v) => v,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect()
+        });
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+
+        // scatter back into partition order
+        let mut values: Vec<Option<R>> = Vec::with_capacity(num_partitions);
+        values.resize_with(num_partitions, || None);
+        let mut times = vec![0.0_f64; num_partitions];
+        let mut busy_secs = Vec::with_capacity(self.executors);
+        for (outs, busy) in per_exec {
+            busy_secs.push(busy);
+            for (p, value, dt) in outs {
+                values[p] = Some(value);
+                times[p] = dt;
+            }
+        }
+        StageOutput {
+            values: values
+                .into_iter()
+                .map(|v| v.expect("every partition executed exactly once"))
+                .collect(),
+            times,
+            wall_secs,
+            busy_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Dataset<i32> {
+        Dataset::from_partitions(vec![
+            vec![1, 2, 3],
+            vec![4, 5],
+            vec![6],
+            vec![7, 8, 9, 10],
+            vec![],
+            vec![11],
+            vec![12, 13],
+        ])
+    }
+
+    #[test]
+    fn threaded_values_match_sequential_in_partition_order() {
+        let pool = ExecutorPool::new(3);
+        let d = dataset();
+        let f = |part: &[i32], ctx: PartitionCtx| {
+            (ctx.partition, ctx.executor, part.iter().sum::<i32>())
+        };
+        let seq = pool.run_sequential(&d, |p| p % 3, f);
+        let thr = pool.run_threaded(&d, |p| p % 3, f);
+        assert_eq!(seq.values, thr.values);
+        // partition order, correct executor assignment
+        for (p, &(part, exec, _)) in thr.values.iter().enumerate() {
+            assert_eq!(part, p);
+            assert_eq!(exec, p % 3);
+        }
+    }
+
+    #[test]
+    fn ledgers_are_shaped_by_the_pool() {
+        let pool = ExecutorPool::new(2);
+        let d = dataset();
+        let out = pool.run_threaded(&d, |p| p % 2, |part, _| part.len());
+        assert_eq!(out.values.len(), 7);
+        assert_eq!(out.times.len(), 7);
+        assert_eq!(out.busy_secs.len(), 2);
+        assert!(out.wall_secs >= 0.0);
+        assert!(out.busy_secs.iter().all(|&b| b >= 0.0));
+    }
+
+    #[test]
+    fn single_executor_degenerate_case() {
+        let pool = ExecutorPool::new(1);
+        let d = dataset();
+        let seq = pool.run_sequential(&d, |_| 0, |part, _| part.to_vec());
+        let thr = pool.run_threaded(&d, |_| 0, |part, _| part.to_vec());
+        assert_eq!(seq.values, thr.values);
+        assert_eq!(thr.busy_secs.len(), 1);
+    }
+
+    #[test]
+    fn more_executors_than_populated_queues() {
+        // 5 executors but only 2 partitions: three threads run empty queues
+        let pool = ExecutorPool::new(5);
+        let d = Dataset::from_partitions(vec![vec![1], vec![2, 3]]);
+        let thr = pool.run_threaded(&d, |p| p % 5, |part, _| part.len());
+        assert_eq!(thr.values, vec![1, 2]);
+        assert_eq!(thr.busy_secs.len(), 5);
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!("sequential".parse::<ExecMode>().unwrap(), ExecMode::Sequential);
+        assert_eq!("threads".parse::<ExecMode>().unwrap(), ExecMode::Threads);
+        assert!("turbo".parse::<ExecMode>().is_err());
+        assert_eq!(ExecMode::Threads.label(), "threads");
+        assert_eq!(ExecMode::default(), ExecMode::Sequential);
+    }
+
+    #[test]
+    fn queues_follow_locality_order() {
+        let pool = ExecutorPool::new(2);
+        let queues = pool.queues(5, |p| p % 2);
+        assert_eq!(queues, vec![vec![0, 2, 4], vec![1, 3]]);
+    }
+}

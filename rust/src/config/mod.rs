@@ -4,7 +4,7 @@
 //! experiment in EXPERIMENTS.md is reproducible from its config + seed.
 
 use crate::cluster::netmodel::NetworkModel;
-use crate::cluster::ClusterConfig;
+use crate::cluster::{ClusterConfig, ExecMode};
 use crate::util::minitoml::{self, Document, Section, Value};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -20,6 +20,10 @@ pub struct ClusterSection {
     pub compute_scale: f64,
     /// Driver slowdown factor (driver nodes are often smaller).
     pub driver_scale: f64,
+    /// Execution mode for `map_partitions` stages: "sequential" |
+    /// "threads". Empty = defer to the `GKSELECT_EXEC_MODE` env var
+    /// (unset → sequential).
+    pub exec_mode: String,
 }
 
 impl Default for ClusterSection {
@@ -29,6 +33,7 @@ impl Default for ClusterSection {
             partitions_per_node: 4,
             compute_scale: 1.0,
             driver_scale: 1.0,
+            exec_mode: String::new(),
         }
     }
 }
@@ -131,7 +136,15 @@ impl ReproConfig {
     /// versions).
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = minitoml::parse(text)?;
-        Ok(Self::from_document(&doc))
+        let cfg = Self::from_document(&doc);
+        if !cfg.cluster.exec_mode.is_empty() {
+            // fail config loading, not the first cluster_config() call
+            cfg.cluster
+                .exec_mode
+                .parse::<ExecMode>()
+                .with_context(|| format!("[cluster] exec_mode = {:?}", cfg.cluster.exec_mode))?;
+        }
+        Ok(cfg)
     }
 
     fn from_document(doc: &Document) -> Self {
@@ -148,6 +161,7 @@ impl ReproConfig {
                     as usize,
                 compute_scale: cluster.float_or("compute_scale", d.cluster.compute_scale),
                 driver_scale: cluster.float_or("driver_scale", d.cluster.driver_scale),
+                exec_mode: cluster.str_or("exec_mode", &d.cluster.exec_mode),
             },
             network: NetworkSection {
                 enabled: network.bool_or("enabled", d.network.enabled),
@@ -197,12 +211,19 @@ impl ReproConfig {
 
     /// Materialize the cluster description.
     pub fn cluster_config(&self) -> ClusterConfig {
+        let exec_mode = match self.cluster.exec_mode.as_str() {
+            "" => ExecMode::from_env(),
+            other => other
+                .parse()
+                .expect("cluster.exec_mode must be 'sequential' or 'threads'"),
+        };
         ClusterConfig {
             executors: self.cluster.nodes,
             partitions: self.cluster.nodes * self.cluster.partitions_per_node,
             net: self.network.to_model(),
             compute_scale: self.cluster.compute_scale,
             driver_scale: self.cluster.driver_scale,
+            exec_mode,
         }
     }
 
@@ -225,6 +246,9 @@ impl ReproConfig {
             Value::Float(self.cluster.compute_scale),
         );
         c.insert("driver_scale".into(), Value::Float(self.cluster.driver_scale));
+        if !self.cluster.exec_mode.is_empty() {
+            c.insert("exec_mode".into(), Value::Str(self.cluster.exec_mode.clone()));
+        }
         let n = doc.entry("network".into()).or_default();
         n.insert("enabled".into(), Value::Bool(self.network.enabled));
         n.insert("latency_us".into(), Value::Float(self.network.latency_us));
@@ -295,6 +319,19 @@ mod tests {
         assert_eq!(back.cluster.partitions_per_node, 4);
         assert_eq!(back.algorithm.epsilon, 0.01);
         assert_eq!(back.algorithm.tree_depth, None);
+    }
+
+    #[test]
+    fn exec_mode_roundtrips_and_materializes() {
+        let mut c = ReproConfig::default();
+        assert_eq!(c.cluster_config().exec_mode, ExecMode::from_env());
+        c.cluster.exec_mode = "threads".into();
+        let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.cluster.exec_mode, "threads");
+        assert_eq!(back.cluster_config().exec_mode, ExecMode::Threads);
+        // a bad mode fails at load time with context, not at first use
+        let err = ReproConfig::from_toml("[cluster]\nexec_mode = \"turbo\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("exec_mode"));
     }
 
     #[test]

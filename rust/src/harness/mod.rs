@@ -10,12 +10,14 @@ use crate::algorithms::approx_quantile::{
 };
 use crate::algorithms::oracle_quantile;
 use crate::algorithms::{Outcome, QuantileAlgorithm};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ExecMode};
 use crate::config::ReproConfig;
 use crate::data::Distribution;
 use crate::prelude::*;
 use crate::runtime::backend_from_name;
+use crate::util::benchkit::{write_json, JsonVal};
 use anyhow::{ensure, Context, Result};
+use std::path::Path;
 use std::time::Instant;
 
 /// CLI-facing algorithm picker.
@@ -406,7 +408,7 @@ pub fn calibrate() -> Result<()> {
     let mut rng = crate::data::pcg::Pcg64::new(1, 1);
     let data: Vec<crate::Key> = (0..n).map(|_| rng.next_u64() as crate::Key).collect();
 
-    let mut backend = NativeBackend::new();
+    let backend = NativeBackend::new();
     let t = Instant::now();
     let counts = backend.count_pivot(&data, 0);
     let scan = t.elapsed().as_secs_f64() / n as f64;
@@ -496,5 +498,158 @@ pub fn validate(cfg: &ReproConfig, n: u64) -> Result<()> {
     }
     println!("validate: {checks} checks, {failures} failures");
     ensure!(failures == 0, "{failures} validation failures");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable perf trajectory: the BENCH_*.json family
+// ---------------------------------------------------------------------------
+
+/// One GK Select run on the paper's `emr(30)` shape → a JSON record:
+/// round/scan/byte counters, the modelled (virtual-clock) seconds, and
+/// the *real* wall-clock of every `map_partitions` stage — on the fused
+/// path, stage index 1 is the fused band-extract scan, recorded
+/// separately as `band_scan_wall_s`.
+pub fn gk_select_bench_record(
+    label: &str,
+    dist: Distribution,
+    n: u64,
+    budget: Option<usize>,
+    mode: ExecMode,
+) -> Result<JsonVal> {
+    let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
+    let dataset = dist.generator(42).generate(&mut cluster, n);
+    let mut alg = GkSelect::new(GkSelectParams {
+        candidate_budget: budget,
+        ..Default::default()
+    });
+    let out = alg.quantile(&mut cluster, &dataset, 0.75)?;
+    let band_scan_wall = out.report.stage_walls.get(1).copied().unwrap_or(0.0);
+    println!(
+        "bench gk_select_emr30/{label:<24} {:<10} rounds {} scans {} model {:>9.4}s \
+         wall {:>8.4}s band-scan {:>8.4}s util {:.2} skew {:.2}",
+        mode.label(),
+        out.report.rounds,
+        out.report.data_scans,
+        out.report.elapsed_secs,
+        out.report.wall_stage_secs,
+        band_scan_wall,
+        out.report.executor_utilization,
+        out.report.busy_skew,
+    );
+    Ok(JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str(format!("gk_select_{label}"))),
+        ("distribution", JsonVal::Str(dist.label().to_string())),
+        ("exec_mode", JsonVal::Str(mode.label().to_string())),
+        ("n", JsonVal::U64(n)),
+        ("q", JsonVal::F64(0.75)),
+        ("rounds", JsonVal::U64(out.report.rounds)),
+        ("data_scans", JsonVal::U64(out.report.data_scans)),
+        ("stage_boundaries", JsonVal::U64(out.report.stage_boundaries)),
+        ("shuffles", JsonVal::U64(out.report.shuffles)),
+        ("persists", JsonVal::U64(out.report.persists)),
+        (
+            "network_volume_bytes",
+            JsonVal::U64(out.report.network_volume_bytes),
+        ),
+        ("elapsed_model_s", JsonVal::F64(out.report.elapsed_secs)),
+        ("wall_stage_secs", JsonVal::F64(out.report.wall_stage_secs)),
+        ("band_scan_wall_s", JsonVal::F64(band_scan_wall)),
+        (
+            "stage_walls",
+            JsonVal::Arr(out.report.stage_walls.iter().map(|&w| JsonVal::F64(w)).collect()),
+        ),
+        (
+            "executor_utilization",
+            JsonVal::F64(out.report.executor_utilization),
+        ),
+        ("busy_skew", JsonVal::F64(out.report.busy_skew)),
+        ("exact", JsonVal::Bool(out.report.exact)),
+    ]))
+}
+
+/// Build the `BENCH_gk_select.json` document: the fused two-round path on
+/// the acceptance distributions, a threads-vs-sequential pair on the same
+/// uniform workload (so the file carries modelled *and* real parallel
+/// wall time for the fused band-extract scan on `emr(30)`), and the
+/// seed-shaped three-round baseline.
+pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
+    let records = vec![
+        // the fused two-round path, acceptance distributions
+        gk_select_bench_record("fused", Distribution::Uniform, n, None, ExecMode::Sequential)?,
+        gk_select_bench_record("fused_zipf", Distribution::Zipf, n, None, ExecMode::Sequential)?,
+        gk_select_bench_record(
+            "fused_bimodal",
+            Distribution::Bimodal,
+            n,
+            None,
+            ExecMode::Sequential,
+        )?,
+        gk_select_bench_record(
+            "fused_sorted",
+            Distribution::Sorted,
+            n,
+            None,
+            ExecMode::Sequential,
+        )?,
+        // same workload through the thread pool: real parallel wall-clock
+        gk_select_bench_record(
+            "fused_threads",
+            Distribution::Uniform,
+            n,
+            None,
+            ExecMode::Threads,
+        )?,
+        // the seed path's round/scan shape, same workload: budget 0 forces
+        // the overflow fallback, reproducing the seed's 3 rounds and 3
+        // data scans (sketch + count + secondPass). Caveat: the middle
+        // scan here is the fused six-counter kernel where the seed ran
+        // plain count_pivot, so this baseline is marginally costlier per
+        // scanned key than the true seed; the 3→2 round and scan
+        // accounting, which dominates on the EMR fabric model, is
+        // structural and exact. See `note` in the JSON.
+        gk_select_bench_record(
+            "three_round_baseline",
+            Distribution::Uniform,
+            n,
+            Some(0),
+            ExecMode::Sequential,
+        )?,
+    ];
+    Ok(JsonVal::obj(vec![
+        ("bench", JsonVal::Str("gk_select".into())),
+        ("cluster", JsonVal::Str("emr(30)".into())),
+        (
+            "note",
+            JsonVal::Str(
+                "three_round_baseline replays the seed path's 3-round/3-scan \
+                 shape via a zero candidate budget; its middle scan is the \
+                 fused kernel (slightly costlier than the seed's count_pivot), \
+                 so the time improvement vs this baseline may be slightly \
+                 overstated by that compute delta — the 3->2 round and 3->2 \
+                 scan reduction is structural and exact. fused_threads runs \
+                 the identical workload through the OS-thread executor pool: \
+                 wall_stage_secs / band_scan_wall_s are real parallel \
+                 wall-clock; its elapsed_model_s absorbs real scheduling \
+                 contention (per-partition times are measured on \
+                 oversubscribed threads), so read modelled time from the \
+                 sequential `fused` record and real time from this one"
+                    .into(),
+            ),
+        ),
+        ("runs", JsonVal::Arr(records)),
+    ]))
+}
+
+/// Emit the `BENCH_*.json` family (today: `BENCH_gk_select.json`) — the
+/// shared implementation behind `repro bench json` and the tail of
+/// `benches/hotpath.rs`.
+pub fn write_bench_json(out_dir: &Path, n: u64) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating bench output dir {}", out_dir.display()))?;
+    let doc = gk_select_bench_doc(n)?;
+    let path = out_dir.join("BENCH_gk_select.json");
+    write_json(&path, &doc).with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
     Ok(())
 }

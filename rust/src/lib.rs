@@ -62,6 +62,7 @@ pub mod prelude {
         dataset::Dataset,
         metrics::{MetricsReport, RunMetrics},
         netmodel::NetworkModel,
+        pool::{ExecMode, ExecutorPool},
         Cluster, ClusterConfig,
     };
     pub use crate::config::ReproConfig;

@@ -10,12 +10,14 @@
 //! repro bench table4   --nodes 10
 //! repro bench table5   --n 4e6 --nodes 10
 //! repro bench ablation --n 8e6 --nodes 10
+//! repro bench json     --n 4e6 --out .
 //! repro calibrate
 //! repro validate --n 2e5
 //! repro config
 //! ```
 //!
-//! Global flags: `--config <path>` (TOML), `--backend native|pjrt`.
+//! Global flags: `--config <path>` (TOML), `--backend native|pjrt`,
+//! `--exec-mode sequential|threads`.
 
 use anyhow::{bail, Result};
 use gkselect::config::ReproConfig;
@@ -40,6 +42,7 @@ COMMANDS:
   bench table4    Table IV: scaling exponents (--nodes)
   bench table5    Table V: measured counters  (--n --nodes)
   bench ablation  ε sweep                     (--n --nodes)
+  bench json      emit the BENCH_*.json family (--n --out <dir>)
   calibrate  measure this box's per-element costs
   validate   cross-check all algorithms vs the oracle (--n)
   config     print the effective config
@@ -47,6 +50,8 @@ COMMANDS:
 GLOBAL FLAGS:
   --config <path>    TOML config (default ./repro.toml if present)
   --backend <name>   native | pjrt (pjrt needs `make artifacts`)
+  --exec-mode <m>    sequential | threads (real OS-thread executor pool;
+                     GKSELECT_EXEC_MODE=threads does the same)
 ";
 
 fn main() -> Result<()> {
@@ -61,11 +66,17 @@ fn main() -> Result<()> {
     if let Some(b) = args.str_opt("backend") {
         cfg.backend = b.to_string();
     }
+    if let Some(m) = args.str_opt("exec-mode") {
+        // validated here so a typo fails before any work runs
+        let _: gkselect::cluster::ExecMode = m.parse()?;
+        cfg.cluster.exec_mode = m.to_string();
+    }
 
     match args.path[0].as_str() {
         "quantile" => {
             args.ensure_known(&[
-                "config", "backend", "algorithm", "n", "q", "distribution", "nodes", "verify",
+                "config", "backend", "exec-mode", "algorithm", "n", "q", "distribution", "nodes",
+                "verify",
             ])?;
             let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
             let n = args.u64_or("n", 1_000_000)?;
@@ -80,7 +91,9 @@ fn main() -> Result<()> {
             let which = args.path.get(1).map(String::as_str).unwrap_or("");
             match which {
                 "fig" => {
-                    args.ensure_known(&["config", "backend", "nodes", "max-exp", "trials"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "nodes", "max-exp", "trials",
+                    ])?;
                     harness::bench_fig(
                         &cfg,
                         args.usize_or("nodes", 10)?,
@@ -89,7 +102,7 @@ fn main() -> Result<()> {
                     )
                 }
                 "dist" => {
-                    args.ensure_known(&["config", "backend", "n", "nodes", "trials"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes", "trials"])?;
                     harness::bench_dist(
                         &cfg,
                         args.u64_or("n", 100_000_000)?,
@@ -98,11 +111,11 @@ fn main() -> Result<()> {
                     )
                 }
                 "table4" => {
-                    args.ensure_known(&["config", "backend", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "nodes"])?;
                     harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
                 }
                 "table5" => {
-                    args.ensure_known(&["config", "backend", "n", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes"])?;
                     harness::bench_table5(
                         &cfg,
                         args.u64_or("n", 4_000_000)?,
@@ -110,19 +123,26 @@ fn main() -> Result<()> {
                     )
                 }
                 "ablation" => {
-                    args.ensure_known(&["config", "backend", "n", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes"])?;
                     harness::bench_ablation(
                         &cfg,
                         args.u64_or("n", 8_000_000)?,
                         args.usize_or("nodes", 10)?,
                     )
                 }
-                other => bail!("unknown bench '{other}' (fig|dist|table4|table5|ablation)"),
+                "json" => {
+                    args.ensure_known(&["config", "backend", "exec-mode", "n", "out"])?;
+                    harness::write_bench_json(
+                        Path::new(&args.str_or("out", ".")),
+                        args.u64_or("n", 4_000_000)?,
+                    )
+                }
+                other => bail!("unknown bench '{other}' (fig|dist|table4|table5|ablation|json)"),
             }
         }
         "calibrate" => harness::calibrate(),
         "validate" => {
-            args.ensure_known(&["config", "backend", "n"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "n"])?;
             harness::validate(&cfg, args.u64_or("n", 200_000)?)
         }
         "config" => {

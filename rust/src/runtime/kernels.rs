@@ -151,25 +151,30 @@ impl NetSize for BandExtract {
 
 /// The executor-side compute hot spots, as implemented by either the
 /// AOT/PJRT path or native rust. All counts are over the full slice.
-pub trait KernelBackend {
+///
+/// Methods take `&self` and the trait requires `Sync`: one backend
+/// instance is shared by every executor thread of the pool
+/// (`ExecMode::Threads` runs partition closures concurrently), so any
+/// backend-internal scratch state must use interior mutability.
+pub trait KernelBackend: Sync {
     /// `[|{x < pivot}|, |{x == pivot}|, |{x > pivot}|]`.
-    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts;
+    fn count_pivot(&self, data: &[Key], pivot: Key) -> PivotCounts;
 
     /// `[|{x < lo}|, |{lo <= x <= hi}|, |{x > hi}|]`.
-    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts;
+    fn band_count(&self, data: &[Key], lo: Key, hi: Key) -> BandCounts;
 
     /// Equi-width histogram over `[lo, lo + nbins*width)`, out-of-range
     /// clamped into the edge bins.
-    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64>;
+    fn histogram(&self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64>;
 
     /// `(min, max)` or `None` when empty.
-    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)>;
+    fn minmax(&self, data: &[Key]) -> Option<(Key, Key)>;
 
     /// Fused scan: pivot counts + band counts + open-band extraction in
     /// one pass (requires `lo ≤ hi`). At most `budget` candidates are
     /// collected; past that the pass keeps counting but stops extracting
     /// and sets `overflow`.
-    fn band_extract(&mut self, data: &[Key], pivot: Key, lo: Key, hi: Key, budget: usize)
+    fn band_extract(&self, data: &[Key], pivot: Key, lo: Key, hi: Key, budget: usize)
         -> BandExtract;
 
     /// Batched form for MultiSelect: one result per `(pivot, lo, hi)`
@@ -177,7 +182,7 @@ pub trait KernelBackend {
     /// backends that can share a single read of `data` across all
     /// queries (the native one does) should override.
     fn multi_band_extract(
-        &mut self,
+        &self,
         data: &[Key],
         queries: &[(Key, Key, Key)],
         budget: usize,
@@ -204,7 +209,7 @@ impl NativeBackend {
 }
 
 impl KernelBackend for NativeBackend {
-    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts {
+    fn count_pivot(&self, data: &[Key], pivot: Key) -> PivotCounts {
         // branchless accumulation: the compiler vectorizes the compares
         let mut lt = 0u64;
         let mut eq = 0u64;
@@ -219,7 +224,7 @@ impl KernelBackend for NativeBackend {
         }
     }
 
-    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
+    fn band_count(&self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
         let mut below = 0u64;
         let mut band = 0u64;
         for &v in data {
@@ -233,7 +238,7 @@ impl KernelBackend for NativeBackend {
         }
     }
 
-    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
+    fn histogram(&self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
         assert!(width > 0 && nbins > 0);
         let mut hist = vec![0u64; nbins];
         let top = (nbins - 1) as i64;
@@ -244,7 +249,7 @@ impl KernelBackend for NativeBackend {
         hist
     }
 
-    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)> {
+    fn minmax(&self, data: &[Key]) -> Option<(Key, Key)> {
         data.iter()
             .fold(None, |acc, &v| match acc {
                 None => Some((v, v)),
@@ -253,7 +258,7 @@ impl KernelBackend for NativeBackend {
     }
 
     fn band_extract(
-        &mut self,
+        &self,
         data: &[Key],
         pivot: Key,
         lo: Key,
@@ -294,7 +299,7 @@ impl KernelBackend for NativeBackend {
     /// runs tile by tile so the partition streams through cache once
     /// (MultiSelect's "m quantiles, one scan").
     fn multi_band_extract(
-        &mut self,
+        &self,
         data: &[Key],
         queries: &[(Key, Key, Key)],
         budget: usize,
@@ -349,7 +354,7 @@ mod tests {
 
     #[test]
     fn count_pivot_basic() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let c = b.count_pivot(&[1, 2, 3, 3, 4, 5], 3);
         assert_eq!(c, PivotCounts { lt: 2, eq: 2, gt: 2 });
         assert_eq!(c.total(), 6);
@@ -357,13 +362,13 @@ mod tests {
 
     #[test]
     fn count_pivot_empty() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         assert_eq!(b.count_pivot(&[], 0).total(), 0);
     }
 
     #[test]
     fn band_count_partition_of_input() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let mut rng = SplitMix64::new(1);
         let data: Vec<Key> = (0..10_000).map(|_| (rng.next_u64() % 1000) as Key).collect();
         let c = b.band_count(&data, 200, 700);
@@ -373,7 +378,7 @@ mod tests {
 
     #[test]
     fn histogram_mass_and_clamping() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let h = b.histogram(&[-100, 0, 5, 9, 100], 0, 5, 2);
         // bins: [0,5) and [5,10); -100 clamps to 0, 100 clamps to 1
         assert_eq!(h, vec![2, 3]);
@@ -381,7 +386,7 @@ mod tests {
 
     #[test]
     fn histogram_negative_lo_div_euclid() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         // lo=-10, width=10, bins over [-10, 10): -1 is in bin 0, 1 in bin 1
         let h = b.histogram(&[-1, 1], -10, 10, 2);
         assert_eq!(h, vec![1, 1]);
@@ -389,7 +394,7 @@ mod tests {
 
     #[test]
     fn minmax_extremes() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         assert_eq!(b.minmax(&[]), None);
         assert_eq!(b.minmax(&[5]), Some((5, 5)));
         assert_eq!(
@@ -426,7 +431,7 @@ mod tests {
 
     #[test]
     fn band_extract_matches_oracle() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let mut rng = SplitMix64::new(3);
         let data: Vec<Key> = (0..20_000).map(|_| (rng.next_u64() % 500) as Key).collect();
         for (pivot, lo, hi) in [(250, 200, 300), (0, 0, 499), (250, 250, 250), (600, 501, 700)] {
@@ -446,7 +451,7 @@ mod tests {
 
     #[test]
     fn band_extract_collapsed_band_counts_once() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let data = vec![1, 2, 2, 2, 3];
         let got = b.band_extract(&data, 2, 2, 2, 100);
         assert_eq!(got.band.below, 1);
@@ -459,7 +464,7 @@ mod tests {
 
     #[test]
     fn band_extract_overflow_keeps_counts_complete() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let data: Vec<Key> = (0..10_000).collect();
         let got = b.band_extract(&data, 5_000, 1_000, 9_000, 10);
         assert!(got.overflow);
@@ -474,7 +479,7 @@ mod tests {
 
     #[test]
     fn band_extract_merge_accumulates_and_overflows() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let a = b.band_extract(&[1, 5, 9], 5, 2, 8, 100);
         let c = b.band_extract(&[4, 6, 20], 5, 2, 8, 100);
         let m = a.clone().merge(c.clone(), 100);
@@ -495,7 +500,7 @@ mod tests {
 
     #[test]
     fn multi_band_extract_matches_single() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let mut rng = SplitMix64::new(9);
         let data: Vec<Key> = (0..5_000).map(|_| (rng.next_u64() % 1_000) as Key).collect();
         let queries = [(100, 50, 150), (500, 500, 500), (900, 850, 999)];
@@ -514,14 +519,14 @@ mod tests {
 
     #[test]
     fn band_extract_empty_input() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let got = b.band_extract(&[], 0, -5, 5, 10);
         assert_eq!(got, BandExtract::default());
     }
 
     #[test]
     fn band_extract_net_bytes_tracks_candidates() {
-        let mut b = NativeBackend::new();
+        let b = NativeBackend::new();
         let data: Vec<Key> = (0..100).collect();
         let got = b.band_extract(&data, 50, 40, 60, 1_000);
         assert_eq!(got.candidates.len(), 19);

@@ -15,6 +15,7 @@ use super::manifest::Manifest;
 use crate::Key;
 use anyhow::{Context, Result};
 use std::path::Path;
+use std::sync::Mutex;
 
 /// Compiled artifact handles + reusable staging buffer.
 pub struct PjrtBackend {
@@ -32,9 +33,20 @@ pub struct PjrtBackend {
     buf_len: usize,
     nbins: usize,
     /// Staging buffer reused across calls (avoids a BUF_LEN alloc per
-    /// chunk — §Perf iteration 1).
-    stage: Vec<Key>,
+    /// chunk — §Perf iteration 1). Behind a mutex because `KernelBackend`
+    /// methods take `&self` (the thread pool shares one backend); the
+    /// lock is held for a whole kernel call, so executions through this
+    /// backend serialize — the PJRT CPU client is a correctness vehicle,
+    /// not the parallel perf path.
+    stage: Mutex<Vec<Key>>,
 }
+
+// SAFETY: every kernel call takes the `stage` lock for its full
+// duration, so the client/executable handles are never used from two
+// threads at once; the handles themselves are only *moved* across
+// threads, which PJRT's C API permits.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
 
 impl PjrtBackend {
     /// Load + compile every artifact listed in `dir/manifest.json`.
@@ -65,18 +77,18 @@ impl PjrtBackend {
             band_extract,
             buf_len: manifest.buf_len,
             nbins: manifest.nbins,
-            stage: vec![0; manifest.buf_len],
+            stage: Mutex::new(vec![0; manifest.buf_len]),
             client,
         })
     }
 
     /// Stage `chunk` into the fixed-size buffer (pad tail with zeros —
     /// masked off by `valid`) and return the literal plus live length.
-    fn stage_chunk(&mut self, chunk: &[Key]) -> (xla::Literal, i64) {
+    fn stage_chunk(&self, stage: &mut [Key], chunk: &[Key]) -> (xla::Literal, i64) {
         let n = chunk.len().min(self.buf_len);
-        self.stage[..n].copy_from_slice(&chunk[..n]);
-        self.stage[n..].fill(0);
-        (xla::Literal::vec1(&self.stage), n as i64)
+        stage[..n].copy_from_slice(&chunk[..n]);
+        stage[n..].fill(0);
+        (xla::Literal::vec1(stage), n as i64)
     }
 
     fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
@@ -86,10 +98,11 @@ impl PjrtBackend {
 }
 
 impl KernelBackend for PjrtBackend {
-    fn count_pivot(&mut self, data: &[Key], pivot: Key) -> PivotCounts {
+    fn count_pivot(&self, data: &[Key], pivot: Key) -> PivotCounts {
         let mut acc = PivotCounts::default();
+        let mut stage = self.stage.lock().expect("stage lock poisoned");
         for chunk in data.chunks(self.buf_len.max(1)) {
-            let (x, n) = self.stage_chunk(chunk);
+            let (x, n) = self.stage_chunk(&mut stage, chunk);
             let out = Self::run1(
                 &self.count_pivot,
                 &[x, xla::Literal::vec1(&[pivot]), xla::Literal::vec1(&[n])],
@@ -105,10 +118,11 @@ impl KernelBackend for PjrtBackend {
         acc
     }
 
-    fn band_count(&mut self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
+    fn band_count(&self, data: &[Key], lo: Key, hi: Key) -> BandCounts {
         let mut acc = BandCounts::default();
+        let mut stage = self.stage.lock().expect("stage lock poisoned");
         for chunk in data.chunks(self.buf_len.max(1)) {
-            let (x, n) = self.stage_chunk(chunk);
+            let (x, n) = self.stage_chunk(&mut stage, chunk);
             let out = Self::run1(
                 &self.band_count,
                 &[
@@ -127,15 +141,16 @@ impl KernelBackend for PjrtBackend {
         acc
     }
 
-    fn histogram(&mut self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
+    fn histogram(&self, data: &[Key], lo: i64, width: i64, nbins: usize) -> Vec<u64> {
         assert_eq!(
             nbins, self.nbins,
             "artifact compiled for {} bins, caller wants {nbins}",
             self.nbins
         );
         let mut hist = vec![0u64; nbins];
+        let mut stage = self.stage.lock().expect("stage lock poisoned");
         for chunk in data.chunks(self.buf_len.max(1)) {
-            let (x, n) = self.stage_chunk(chunk);
+            let (x, n) = self.stage_chunk(&mut stage, chunk);
             let out = Self::run1(
                 &self.histogram,
                 &[
@@ -154,14 +169,15 @@ impl KernelBackend for PjrtBackend {
         hist
     }
 
-    fn minmax(&mut self, data: &[Key]) -> Option<(Key, Key)> {
+    fn minmax(&self, data: &[Key]) -> Option<(Key, Key)> {
         if data.is_empty() {
             return None;
         }
         let mut lo = Key::MAX;
         let mut hi = Key::MIN;
+        let mut stage = self.stage.lock().expect("stage lock poisoned");
         for chunk in data.chunks(self.buf_len.max(1)) {
-            let (x, n) = self.stage_chunk(chunk);
+            let (x, n) = self.stage_chunk(&mut stage, chunk);
             let out = Self::run1(&self.minmax, &[x, xla::Literal::vec1(&[n])])
                 .expect("minmax execution failed");
             let v = out.to_vec::<Key>().expect("minmax output");
@@ -172,7 +188,7 @@ impl KernelBackend for PjrtBackend {
     }
 
     fn band_extract(
-        &mut self,
+        &self,
         data: &[Key],
         pivot: Key,
         lo: Key,
@@ -181,8 +197,9 @@ impl KernelBackend for PjrtBackend {
     ) -> BandExtract {
         debug_assert!(lo <= hi, "band [{lo}, {hi}] inverted");
         let mut out = BandExtract::default();
+        let mut stage = self.stage.lock().expect("stage lock poisoned");
         for chunk in data.chunks(self.buf_len.max(1)) {
-            let (x, n) = self.stage_chunk(chunk);
+            let (x, n) = self.stage_chunk(&mut stage, chunk);
             if let Some(exe) = &self.band_extract {
                 // fused artifact: [lt, eq, below, eq_lo, inner, eq_hi]
                 // followed by the compacted open-band values

@@ -36,8 +36,8 @@ fn random_keys(n: usize, seed: u64) -> Vec<Key> {
 
 #[test]
 fn pjrt_count_pivot_matches_native() {
-    let Some(mut pjrt) = pjrt() else { return };
-    let mut native = NativeBackend::new();
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend::new();
     // sizes straddling the buffer length (131072): empty, tiny, exact,
     // one-over, multi-chunk
     for n in [0usize, 1, 1000, 131072, 131073, 400_000] {
@@ -52,8 +52,8 @@ fn pjrt_count_pivot_matches_native() {
 
 #[test]
 fn pjrt_band_count_matches_native() {
-    let Some(mut pjrt) = pjrt() else { return };
-    let mut native = NativeBackend::new();
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend::new();
     let data = random_keys(300_000, 9);
     for (lo, hi) in [(-1000, 1000), (0, 0), (Key::MIN, Key::MAX), (500, 100)] {
         let a = pjrt.band_count(&data, lo, hi);
@@ -64,8 +64,8 @@ fn pjrt_band_count_matches_native() {
 
 #[test]
 fn pjrt_histogram_matches_native() {
-    let Some(mut pjrt) = pjrt() else { return };
-    let mut native = NativeBackend::new();
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend::new();
     let data = random_keys(200_000, 11);
     let lo = Key::MIN as i64;
     let width = (1u64 << 32) as i64 / 128 + 1;
@@ -77,8 +77,8 @@ fn pjrt_histogram_matches_native() {
 
 #[test]
 fn pjrt_minmax_matches_native() {
-    let Some(mut pjrt) = pjrt() else { return };
-    let mut native = NativeBackend::new();
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend::new();
     for n in [0usize, 1, 131072, 131073] {
         let data = random_keys(n, 13 + n as u64);
         assert_eq!(pjrt.minmax(&data), native.minmax(&data), "n={n}");
@@ -87,8 +87,8 @@ fn pjrt_minmax_matches_native() {
 
 #[test]
 fn pjrt_band_extract_matches_native() {
-    let Some(mut pjrt) = pjrt() else { return };
-    let mut native = NativeBackend::new();
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend::new();
     // straddle the 131072 buffer length so multi-chunk accumulation and
     // per-chunk compaction both get exercised
     for n in [0usize, 1, 1000, 131072, 131073, 300_000] {

@@ -1,0 +1,176 @@
+//! Property tests for the thread-parallel executor pool: for any random
+//! cluster geometry (including partitions ≫ executors and the 1-executor
+//! degenerate case) and any dataset shape, `ExecMode::Threads` must
+//! produce bit-identical `PerPartition.values`, quantile results, and
+//! round / scan / byte counters to `ExecMode::Sequential` — real
+//! concurrency is allowed to change wall-clock and nothing else.
+
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::multi_select::MultiSelect;
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::metrics::MetricsReport;
+use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+/// Random geometry stressing the pool: mostly partitions ≫ executors,
+/// sometimes square, sometimes the 1-executor degenerate case.
+fn gen_geometry(g: &mut Gen) -> (usize, usize) {
+    let executors = match g.usize_in(0, 3) {
+        0 => 1, // degenerate: the pool is one thread
+        _ => g.usize_in(1, 6),
+    };
+    let partitions = match g.usize_in(0, 2) {
+        0 => executors,                        // one partition per executor
+        _ => executors * g.usize_in(2, 10),   // partitions ≫ executors
+    };
+    (executors, partitions)
+}
+
+fn gen_values(g: &mut Gen) -> Vec<Key> {
+    // n ≥ 1: the algorithms reject empty datasets by contract
+    let n = g.usize_in(1, 3_000);
+    match g.usize_in(0, 2) {
+        0 => (0..n).map(|_| g.i32_in(-1_000_000_000, 999_999_999)).collect(),
+        1 => (0..n).map(|_| g.i32_in(0, 6)).collect(), // duplicate-heavy
+        _ => {
+            let mut v: Vec<Key> = (0..n).map(|_| g.i32_in(-40_000, 40_000)).collect();
+            v.sort_unstable();
+            v
+        }
+    }
+}
+
+fn cluster(executors: usize, partitions: usize, mode: ExecMode) -> Cluster {
+    Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+}
+
+/// The counters that must be mode-independent (wall-clock ledgers and the
+/// virtual clock's seconds are real-time measurements and may differ).
+fn structural(r: &MetricsReport) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        r.rounds,
+        r.stage_boundaries,
+        r.data_scans,
+        r.shuffles,
+        r.persists,
+        r.network_volume_bytes,
+        r.bytes_to_driver,
+        r.messages,
+        r.tree_levels,
+    )
+}
+
+#[test]
+fn prop_map_partitions_values_bit_identical() {
+    check("pool_map_partitions_identical", 50, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let data = Dataset::from_vec(values, partitions);
+        let run = |mode: ExecMode| {
+            let mut c = cluster(executors, partitions, mode);
+            let pending = c.map_partitions(&data, |part, ctx| {
+                // value depends on data, partition id, and executor id, so
+                // any misrouted or reordered partition shows up
+                let sum: i64 = part.iter().map(|&x| x as i64).sum();
+                (ctx.partition, ctx.executor, sum, part.to_vec())
+            });
+            (pending.values, c.metrics.data_scans)
+        };
+        let (seq, seq_scans) = run(ExecMode::Sequential);
+        let (thr, thr_scans) = run(ExecMode::Threads);
+        assert_eq!(seq, thr, "PerPartition.values must be bit-identical");
+        assert_eq!(seq_scans, thr_scans);
+    });
+}
+
+#[test]
+fn prop_gk_select_equivalent_across_modes() {
+    check("pool_gk_select_equivalent", 30, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let data = Dataset::from_vec(values, partitions);
+        let q = g.f64_unit();
+        let eps = 0.002 + g.f64_unit() * 0.2;
+        // random budget sometimes forces the 3-round fallback so the
+        // fallback scan is exercised under real concurrency too
+        let budget = if g.bool() { None } else { Some(g.usize_in(0, 64)) };
+        let truth = oracle_quantile(&data, q).unwrap();
+
+        let run = |mode: ExecMode| {
+            let mut c = cluster(executors, partitions, mode);
+            let mut alg = GkSelect::new(GkSelectParams {
+                epsilon: eps,
+                candidate_budget: budget,
+                ..Default::default()
+            });
+            alg.quantile(&mut c, &data, q).unwrap()
+        };
+        let seq = run(ExecMode::Sequential);
+        let thr = run(ExecMode::Threads);
+        assert_eq!(seq.value, truth, "sequential exactness q={q} eps={eps}");
+        assert_eq!(thr.value, truth, "threads exactness q={q} eps={eps}");
+        assert_eq!(
+            structural(&seq.report),
+            structural(&thr.report),
+            "round/scan/byte counters must be mode-independent"
+        );
+        // the threaded run populates the real-time ledger, one slot per
+        // executor, one wall entry per data scan
+        assert_eq!(thr.report.executor_busy_secs.len(), executors);
+        assert_eq!(thr.report.stage_walls.len() as u64, thr.report.data_scans);
+    });
+}
+
+/// The acceptance shape: GK Select on `emr(30)` (30 executors, 120
+/// partitions, EMR fabric model) under `Threads` must match sequential
+/// answers and rounds/data_scans/bytes exactly, while reporting a real
+/// per-executor busy ledger.
+#[test]
+fn emr30_threads_matches_sequential() {
+    let values: Vec<Key> = (0..120_000)
+        .map(|i| (i * 2_654_435_761_u64 as i64) as Key)
+        .collect();
+    let data = Dataset::from_vec(values, 120);
+    let truth = oracle_quantile(&data, 0.75).unwrap();
+    let run = |mode: ExecMode| {
+        let mut c = Cluster::new(ClusterConfig::emr(30).with_exec_mode(mode));
+        let mut alg = GkSelect::new(GkSelectParams::default());
+        alg.quantile(&mut c, &data, 0.75).unwrap()
+    };
+    let seq = run(ExecMode::Sequential);
+    let thr = run(ExecMode::Threads);
+    assert_eq!(seq.value, truth);
+    assert_eq!(thr.value, truth);
+    assert_eq!(structural(&seq.report), structural(&thr.report));
+    assert_eq!(seq.report.rounds, 2, "fused path on uniform data");
+    assert_eq!(seq.report.data_scans, 2);
+    assert_eq!(thr.report.executor_busy_secs.len(), 30);
+    assert_eq!(thr.report.stage_walls.len(), 2);
+}
+
+#[test]
+fn prop_multi_select_equivalent_across_modes() {
+    check("pool_multi_select_equivalent", 20, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let data = Dataset::from_vec(values, partitions);
+        let m = g.usize_in(1, 4);
+        let qs: Vec<f64> = (0..m).map(|_| g.f64_unit()).collect();
+
+        let run = |mode: ExecMode| {
+            let mut c = cluster(executors, partitions, mode);
+            let mut alg = MultiSelect::new(GkSelectParams::default());
+            alg.quantiles(&mut c, &data, &qs).unwrap()
+        };
+        let seq = run(ExecMode::Sequential);
+        let thr = run(ExecMode::Threads);
+        assert_eq!(seq.values, thr.values, "batched answers must match");
+        for (&q, &v) in qs.iter().zip(seq.values.iter()) {
+            assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
+        }
+        assert_eq!(structural(&seq.report), structural(&thr.report));
+    });
+}
