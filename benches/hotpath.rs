@@ -7,9 +7,13 @@
 //! shared with `repro bench json`): rounds / data_scans / virtual-clock
 //! seconds for GK Select on the paper's `emr(30)` shape — the fused
 //! two-round path vs the seed three-round path (forced via a zero
-//! candidate budget), plus a threads-vs-sequential pair recording the
-//! *real* parallel wall-clock of the fused band-extract scan through the
-//! OS-thread executor pool.
+//! candidate budget), a threads-vs-sequential pair recording the *real*
+//! parallel wall-clock of the fused band-extract scan through the
+//! OS-thread executor pool, and the `stream_query[_threads]` serving
+//! hot path: one exact query answered from cached ingest-time sketches
+//! after 32 micro-batches (rounds=1 / data_scans=1). The CI
+//! `perf-tracking` job diffs this file against the committed baseline
+//! (`scripts/bench_diff.py`).
 
 use gkselect::data::pcg::Pcg64;
 use gkselect::harness;

@@ -1,0 +1,74 @@
+//! Live telemetry through the streaming quantile service: p50/p95/p99
+//! served **exactly** after every ingest tick, from cached sketches.
+//!
+//! A zipf-distributed event stream (hot endpoints dominate) arrives in
+//! micro-batches. Each tick the ingestor seals the batch as a new epoch
+//! and folds it into per-partition GK partials (1 round over the new
+//! records only); the query engine then serves all three percentiles
+//! from the cached partials plus one fused band-extract scan —
+//! rounds=1 / data_scans=1 per query, where batch GK Select would pay
+//! 2/2 rebuilding the sketch every time. Epoch compaction keeps the
+//! store's sketch footprint flat while the data keeps growing.
+//!
+//! ```bash
+//! cargo run --release --example streaming_quantiles
+//! ```
+
+use gkselect::algorithms::oracle_quantile;
+use gkselect::cluster::metrics::human_bytes;
+use gkselect::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let mut cluster = Cluster::new(ClusterConfig::emr(10));
+    let mut store = SketchStore::new(CompactionPolicy {
+        compact_threshold: 4,
+        max_live_epochs: 2,
+    })?;
+    let ingestor = StreamIngestor::new(0.01)?;
+    let mut engine = StreamQuery::new(GkSelectParams::default());
+    let qs = [0.5, 0.95, 0.99];
+
+    println!(
+        "{:<5} {:>10} {:>10} {:>10} {:>10} {:>7} {:>6} {:>7} {:>11}",
+        "tick", "p50", "p95", "p99", "records", "epochs", "rnds", "scans", "store"
+    );
+    for tick in 1..=8u64 {
+        // this tick's events: 400k zipf-distributed keys (DataGenerator
+        // is in the prelude)
+        let mut batch = Vec::new();
+        ZipfGen::new(1000 + tick, 2.5).fill_partition(tick as usize, 1, 400_000, &mut batch);
+
+        let ing = ingestor.ingest(&mut cluster, &mut store, "telemetry", MicroBatch::new(batch))?;
+        let out = engine.quantiles(&mut cluster, &store, "telemetry", &qs)?;
+
+        // the exactness the service sells: every percentile matches the
+        // oracle over everything ingested so far
+        let all = store
+            .stream("telemetry")
+            .expect("ingested")
+            .live_dataset()?;
+        for (&q, &v) in qs.iter().zip(out.values.iter()) {
+            assert_eq!(v, oracle_quantile(&all, q).expect("nonempty"), "q={q}");
+        }
+
+        println!(
+            "{:<5} {:>10} {:>10} {:>10} {:>10} {:>4}{:>3} {:>6} {:>7} {:>11}",
+            tick,
+            out.values[0],
+            out.values[1],
+            out.values[2],
+            ing.stream_records,
+            ing.live_epochs,
+            if ing.compacted_epochs > 0 { " ⤵" } else { "" },
+            out.report.rounds,
+            out.report.data_scans,
+            human_bytes(ing.store_bytes),
+        );
+    }
+    println!(
+        "\nevery query: rounds=1, data_scans=1 — the sketch pass was paid at ingest;\n\
+         batch GK Select would have paid 2 rounds / 2 full scans per tick (16 scans\n\
+         of ever-growing data instead of 8 ingest scans of just the new records)."
+    );
+    Ok(())
+}

@@ -249,7 +249,7 @@ mod tests {
     #[test]
     fn rejects_empty() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
-        let data = Dataset::from_partitions(vec![vec![]]);
+        let data = Dataset::from_partitions(vec![vec![]]).unwrap();
         let mut alg = ApproxQuantile::new(ApproxQuantileParams::default());
         assert!(alg.quantile(&mut c, &data, 0.5).is_err());
     }

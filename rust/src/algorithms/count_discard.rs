@@ -218,7 +218,8 @@ impl QuantileAlgorithm for CountDiscardSelect {
                         .into_iter()
                         .map(|(a, split)| a[..split.lt].to_vec())
                         .collect(),
-                );
+                )
+                .expect("partition count preserved by discard");
             } else {
                 // discard everything ≤ pivot; rebase the target rank
                 k -= agg.lt + agg.eq;
@@ -232,7 +233,8 @@ impl QuantileAlgorithm for CountDiscardSelect {
                         .into_iter()
                         .map(|(a, split)| a[split.gt..].to_vec())
                         .collect(),
-                );
+                )
+                .expect("partition count preserved by discard");
             }
         }
         bail!(
@@ -319,7 +321,7 @@ mod tests {
     #[test]
     fn all_equal_terminates_immediately() {
         let mut c = Cluster::new(ClusterConfig::local(2, 4));
-        let data = Dataset::from_vec(vec![42; 10_000], 4);
+        let data = Dataset::from_vec(vec![42; 10_000], 4).unwrap();
         let mut alg =
             CountDiscardSelect::new("cd", AggMode::TreeReduce, CountDiscardParams::default());
         let out = alg.quantile(&mut c, &data, 0.5).unwrap();
@@ -331,7 +333,7 @@ mod tests {
     #[test]
     fn singleton() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
-        let data = Dataset::from_vec(vec![7], 1);
+        let data = Dataset::from_vec(vec![7], 1).unwrap();
         let mut alg =
             CountDiscardSelect::new("cd", AggMode::Collect, CountDiscardParams::default());
         assert_eq!(alg.quantile(&mut c, &data, 0.5).unwrap().value, 7);

@@ -40,6 +40,7 @@ use super::{make_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
 use crate::runtime::{BandExtract, KernelBackend, NativeBackend};
+use crate::sketch::GkCore;
 use crate::{target_rank, Key};
 use anyhow::{ensure, Result};
 
@@ -113,6 +114,99 @@ impl GkSelect {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The post-sketch fused protocol, given an **already-merged** global
+    /// sketch covering exactly `data`: fused count+extract (one round,
+    /// one scan), with the classic 3-round extraction as the overflow /
+    /// out-of-contract fallback.
+    ///
+    /// Does NOT reset the cluster's run ledger and does NOT build a
+    /// sketch — `GkSelect::quantile` is `reset_run` + Round 1 + this;
+    /// the streaming query engine ([`crate::stream::query`]) calls it
+    /// with the store's *cached* merged sketch, which is how a streamed
+    /// query costs rounds=1 / data_scans=1 instead of 2/2.
+    pub fn select_with_sketch(
+        &mut self,
+        cluster: &mut Cluster,
+        data: &Dataset<Key>,
+        sketch: &GkCore,
+        q: f64,
+    ) -> Result<Outcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        let n = data.len();
+        ensure!(
+            sketch.count == n,
+            "sketch covers {} records, dataset holds {n}",
+            sketch.count
+        );
+        let k = target_rank(n, q);
+
+        let (pivot, lo, hi) = cluster
+            .driver(|| {
+                let pivot = sketch.query_quantile(q)?;
+                // k is 0-based; the summary speaks 1-based ranks
+                let (lo, hi) = sketch.query_rank_bounds(k + 1)?;
+                Some((pivot, lo, hi))
+            })
+            .ok_or_else(|| anyhow::anyhow!("empty sketch"))?;
+
+        // ---- fused count + band extraction -----------------------------
+        cluster.broadcast(&(pivot, lo, hi));
+        // the band's width is governed by the sketch that produced it —
+        // which for cached (streamed) sketches may be coarser than this
+        // engine's ε. Budget against the looser of the two, or a
+        // mismatched query engine would overflow on every query and
+        // silently pay the fallback round forever.
+        let budget_eps = self.params.epsilon.max(sketch.epsilon);
+        let budget = self
+            .params
+            .candidate_budget
+            .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
+        let backend = self.backend.as_ref();
+        let pending = cluster.map_partitions(data, |part, _| {
+            backend.band_extract(part, pivot, lo, hi, budget)
+        });
+        let mut merged = cluster
+            .tree_reduce(pending, self.params.tree_depth, |a, b| a.merge(b, budget))
+            .expect("nonempty dataset");
+        debug_assert_eq!(merged.band.total(), n);
+        debug_assert_eq!(merged.pivot.total(), n);
+
+        let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
+        if lt <= k && k < lt + eq {
+            // the pivot's own run covers the target — free exit
+            return Ok(make_report(self.name(), true, cluster, n, pivot));
+        }
+        if let Some(value) = cluster.driver(|| resolve_band(&mut merged, lo, hi, k)) {
+            // exact answer out of the extracted band
+            return Ok(make_report(self.name(), true, cluster, n, value));
+        }
+
+        // ---- fallback: classic candidate extraction --------------------
+        // Reached only on candidate overflow or an out-of-contract
+        // sketch; the fused pass's counts still give the exact Δk.
+        let delta = pivot_delta(lt, eq, k);
+        debug_assert!(delta != 0);
+        cluster.broadcast(&delta);
+        let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta));
+        let final_slice = cluster
+            .tree_reduce(slices, self.params.tree_depth, |a, b| {
+                reduce_slices(a, b, delta)
+            })
+            .expect("nonempty dataset");
+
+        let value = cluster.driver(|| {
+            if delta < 0 {
+                final_slice.iter().copied().min()
+            } else {
+                final_slice.iter().copied().max()
+            }
+        });
+        let value = value.ok_or_else(|| {
+            anyhow::anyhow!("empty candidate slice: Δk={delta}, lt={lt}, eq={eq}, k={k}")
+        })?;
+        Ok(make_report(self.name(), true, cluster, n, value))
     }
 }
 
@@ -224,8 +318,6 @@ impl QuantileAlgorithm for GkSelect {
     fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
         ensure!(!data.is_empty(), "empty dataset");
         cluster.reset_run();
-        let n = data.len();
-        let k = target_rank(n, q);
 
         // ---- Round 1: sketch-derived pivot + candidate band ------------
         let sketch = build_global_sketch(
@@ -235,65 +327,9 @@ impl QuantileAlgorithm for GkSelect {
             self.params.merge,
             self.params.epsilon,
         )?;
-        let (pivot, lo, hi) = cluster
-            .driver(|| {
-                let pivot = sketch.query_quantile(q)?;
-                // k is 0-based; the summary speaks 1-based ranks
-                let (lo, hi) = sketch.query_rank_bounds(k + 1)?;
-                Some((pivot, lo, hi))
-            })
-            .ok_or_else(|| anyhow::anyhow!("empty sketch"))?;
 
-        // ---- Round 2: fused count + band extraction --------------------
-        cluster.broadcast(&(pivot, lo, hi));
-        let budget = self
-            .params
-            .candidate_budget
-            .unwrap_or_else(|| default_candidate_budget(self.params.epsilon, n));
-        let backend = self.backend.as_ref();
-        let pending = cluster.map_partitions(data, |part, _| {
-            backend.band_extract(part, pivot, lo, hi, budget)
-        });
-        let mut merged = cluster
-            .tree_reduce(pending, self.params.tree_depth, |a, b| a.merge(b, budget))
-            .expect("nonempty dataset");
-        debug_assert_eq!(merged.band.total(), n);
-        debug_assert_eq!(merged.pivot.total(), n);
-
-        let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
-        if lt <= k && k < lt + eq {
-            // the pivot's own run covers the target — 2 rounds, free exit
-            return Ok(make_report(self.name(), true, cluster, n, pivot));
-        }
-        if let Some(value) = cluster.driver(|| resolve_band(&mut merged, lo, hi, k)) {
-            // exact answer out of the extracted band — 2 rounds
-            return Ok(make_report(self.name(), true, cluster, n, value));
-        }
-
-        // ---- Round 3 (fallback): classic candidate extraction ----------
-        // Reached only on candidate overflow or an out-of-contract
-        // sketch; the fused pass's counts still give the exact Δk.
-        let delta = pivot_delta(lt, eq, k);
-        debug_assert!(delta != 0);
-        cluster.broadcast(&delta);
-        let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta));
-        let final_slice = cluster
-            .tree_reduce(slices, self.params.tree_depth, |a, b| {
-                reduce_slices(a, b, delta)
-            })
-            .expect("nonempty dataset");
-
-        let value = cluster.driver(|| {
-            if delta < 0 {
-                final_slice.iter().copied().min()
-            } else {
-                final_slice.iter().copied().max()
-            }
-        });
-        let value = value.ok_or_else(|| {
-            anyhow::anyhow!("empty candidate slice: Δk={delta}, lt={lt}, eq={eq}, k={k}")
-        })?;
-        Ok(make_report(self.name(), true, cluster, n, value))
+        // ---- Round 2 (+3 fallback): the fused post-sketch protocol -----
+        self.select_with_sketch(cluster, data, &sketch, q)
     }
 }
 

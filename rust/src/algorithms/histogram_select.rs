@@ -227,7 +227,7 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 4));
         let mut vals = vec![7; 50_000];
         vals.extend(0..100);
-        let data = Dataset::from_vec(vals, 4);
+        let data = Dataset::from_vec(vals, 4).unwrap();
         let truth = oracle_quantile(&data, 0.5).unwrap();
         let mut alg = HistogramSelect::new(HistogramSelectParams {
             extract_cap: 100, // force refinement into the spike

@@ -86,7 +86,7 @@ mod tests {
 
     #[test]
     fn oracle_median() {
-        let d = Dataset::from_vec(vec![5, 1, 4, 2, 3], 2);
+        let d = Dataset::from_vec(vec![5, 1, 4, 2, 3], 2).unwrap();
         assert_eq!(oracle_quantile(&d, 0.5), Some(3));
         assert_eq!(oracle_quantile(&d, 0.0), Some(1));
         assert_eq!(oracle_quantile(&d, 1.0), Some(5));
@@ -94,7 +94,7 @@ mod tests {
 
     #[test]
     fn oracle_empty() {
-        let d: Dataset<Key> = Dataset::from_partitions(vec![vec![]]);
+        let d: Dataset<Key> = Dataset::from_partitions(vec![vec![]]).unwrap();
         assert_eq!(oracle_quantile(&d, 0.5), None);
     }
 

@@ -32,6 +32,7 @@ use crate::cluster::dataset::Dataset;
 use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
 use crate::cluster::Cluster;
 use crate::runtime::{BandExtract, KernelBackend, NativeBackend};
+use crate::sketch::GkCore;
 use crate::{target_rank, Key};
 use anyhow::{ensure, Result};
 
@@ -95,8 +96,6 @@ impl MultiSelect {
         ensure!(!data.is_empty(), "empty dataset");
         ensure!(!qs.is_empty(), "no quantiles requested");
         cluster.reset_run();
-        let n = data.len();
-        let ks: Vec<u64> = qs.iter().map(|&q| target_rank(n, q)).collect();
 
         // ---- Round 1: one sketch, m pivots + m bands -------------------
         let sketch = build_global_sketch(
@@ -106,6 +105,33 @@ impl MultiSelect {
             self.params.merge,
             self.params.epsilon,
         )?;
+
+        // ---- Round 2 (+3 fallback): one fused scan for all m queries ---
+        self.quantiles_with_sketch(cluster, data, &sketch, qs)
+    }
+
+    /// The batched post-sketch protocol against an **already-merged**
+    /// global sketch covering exactly `data`: one fused multi-band scan
+    /// answers every quantile (shared fallback round on overflow). Does
+    /// NOT reset the run ledger — the streaming query engine calls this
+    /// with cached sketches so an m-quantile query costs one data scan.
+    pub fn quantiles_with_sketch(
+        &mut self,
+        cluster: &mut Cluster,
+        data: &Dataset<Key>,
+        sketch: &GkCore,
+        qs: &[f64],
+    ) -> Result<MultiOutcome> {
+        ensure!(!data.is_empty(), "empty dataset");
+        ensure!(!qs.is_empty(), "no quantiles requested");
+        let n = data.len();
+        ensure!(
+            sketch.count == n,
+            "sketch covers {} records, dataset holds {n}",
+            sketch.count
+        );
+        let ks: Vec<u64> = qs.iter().map(|&q| target_rank(n, q)).collect();
+
         let queries: Vec<(Key, Key, Key)> = cluster.driver(|| {
             qs.iter()
                 .zip(ks.iter())
@@ -119,10 +145,13 @@ impl MultiSelect {
 
         // ---- Round 2: one fused scan serving all m queries --------------
         cluster.broadcast(&queries);
+        // budget against the looser of the engine's ε and the (possibly
+        // cached, coarser) sketch's ε — see GkSelect::select_with_sketch
+        let budget_eps = self.params.epsilon.max(sketch.epsilon);
         let budget = self
             .params
             .candidate_budget
-            .unwrap_or_else(|| default_candidate_budget(self.params.epsilon, n));
+            .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
         let backend = self.backend.as_ref();
         let qy = queries.clone();
         let pending = cluster.map_partitions(data, |part, _| {
@@ -312,10 +341,10 @@ mod tests {
     #[test]
     fn rejects_empty_inputs() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
-        let data = Dataset::from_partitions(vec![vec![]]);
+        let data = Dataset::from_partitions(vec![vec![]]).unwrap();
         let mut alg = MultiSelect::new(GkSelectParams::default());
         assert!(alg.quantiles(&mut c, &data, &[0.5]).is_err());
-        let data = Dataset::from_vec(vec![1, 2, 3], 1);
+        let data = Dataset::from_vec(vec![1, 2, 3], 1).unwrap();
         assert!(alg.quantiles(&mut c, &data, &[]).is_err());
     }
 }

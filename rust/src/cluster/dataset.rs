@@ -1,12 +1,33 @@
-//! Immutable partitioned datasets — the RDD stand-in.
+//! Immutable partitioned datasets — the RDD stand-in — and their
+//! streaming extension: **epochs**.
 //!
 //! Spark RDDs are immutable: algorithms that re-partition data (AFS /
 //! Jeffers count-and-discard, PSRS shuffle) must create *new* datasets,
 //! which is exactly what the paper charges them for (persists, copies).
 //! `Dataset` mirrors that: it is cheap to read, and every structural
 //! change constructs a fresh `Dataset`.
+//!
+//! The streaming service ([`crate::stream`]) leans on the same
+//! immutability for its micro-batch append path. Each ingested batch is
+//! sealed into an **epoch**: a fresh `Dataset` with its own partitions,
+//! never mutated again. Because partitions are `Arc`-shared,
+//!
+//! * [`Dataset::concat`] builds the "all live epochs" view a streaming
+//!   query scans — one logical dataset over every epoch's partitions,
+//!   O(#partitions) to construct, **zero data copied**;
+//! * [`Dataset::union_partitionwise`] is the compaction primitive: it
+//!   physically merges aligned partitions of several epochs into one
+//!   sealed epoch (this one *does* copy — it is the store's equivalent of
+//!   a persist, and the ingest path charges it as such).
+//!
+//! Construction is fallible ([`Dataset::from_partitions`] /
+//! [`Dataset::from_vec`] return `Result`): an empty micro-batch or a
+//! drained stream must surface as a recoverable error at the ingest
+//! boundary, not an executor abort.
 
 use std::sync::Arc;
+
+use anyhow::{ensure, Result};
 
 /// An immutable, partitioned collection of keys.
 #[derive(Debug, Clone)]
@@ -15,17 +36,20 @@ pub struct Dataset<T> {
 }
 
 impl<T> Dataset<T> {
-    /// Build from explicit partitions.
-    pub fn from_partitions(parts: Vec<Vec<T>>) -> Self {
-        assert!(!parts.is_empty(), "dataset needs at least one partition");
-        Self {
+    /// Build from explicit partitions. Errors on a partitionless dataset
+    /// (an unrepresentable cluster layout — the recoverable shape of the
+    /// old `assert!`).
+    pub fn from_partitions(parts: Vec<Vec<T>>) -> Result<Self> {
+        ensure!(!parts.is_empty(), "dataset needs at least one partition");
+        Ok(Self {
             partitions: parts.into_iter().map(Arc::new).collect(),
-        }
+        })
     }
 
     /// Evenly split one vector across `p` partitions (generator helper).
-    pub fn from_vec(data: Vec<T>, p: usize) -> Self {
-        assert!(p > 0);
+    /// Errors when `p == 0`.
+    pub fn from_vec(data: Vec<T>, p: usize) -> Result<Self> {
+        ensure!(p > 0, "dataset needs at least one partition");
         let n = data.len();
         let base = n / p;
         let extra = n % p;
@@ -36,6 +60,20 @@ impl<T> Dataset<T> {
             parts.push(it.by_ref().take(take).collect());
         }
         Self::from_partitions(parts)
+    }
+
+    /// Union of several datasets as one logical dataset: the partitions of
+    /// each input, in order, **shared** (`Arc` clones — no data copied).
+    /// This is the streaming query path's view over all live epochs: one
+    /// `map_partitions` over the result is one scan of every epoch.
+    pub fn concat(epochs: &[Dataset<T>]) -> Result<Self> {
+        ensure!(!epochs.is_empty(), "concat of zero datasets");
+        Ok(Self {
+            partitions: epochs
+                .iter()
+                .flat_map(|d| d.partitions.iter().cloned())
+                .collect(),
+        })
     }
 
     pub fn num_partitions(&self) -> usize {
@@ -72,6 +110,32 @@ impl<T: Clone> Dataset<T> {
     pub fn to_vec(&self) -> Vec<T> {
         self.iter().cloned().collect()
     }
+
+    /// Physically merge aligned partitions across datasets: partition `i`
+    /// of the result is the concatenation of partition `i` of every
+    /// input. All inputs must share a partition count. This is epoch
+    /// compaction's data move — unlike [`Dataset::concat`] it copies, so
+    /// the caller accounts for it (a persist in the cost model).
+    pub fn union_partitionwise(epochs: &[&Dataset<T>]) -> Result<Self> {
+        ensure!(!epochs.is_empty(), "union of zero datasets");
+        let p = epochs[0].num_partitions();
+        ensure!(
+            epochs.iter().all(|d| d.num_partitions() == p),
+            "partition-count mismatch in union: {:?}",
+            epochs.iter().map(|d| d.num_partitions()).collect::<Vec<_>>()
+        );
+        let parts: Vec<Vec<T>> = (0..p)
+            .map(|i| {
+                let mut out =
+                    Vec::with_capacity(epochs.iter().map(|d| d.partition(i).len()).sum());
+                for d in epochs {
+                    out.extend_from_slice(d.partition(i));
+                }
+                out
+            })
+            .collect();
+        Self::from_partitions(parts)
+    }
 }
 
 impl Dataset<i32> {
@@ -87,7 +151,7 @@ mod tests {
 
     #[test]
     fn from_vec_balances_with_remainder() {
-        let d = Dataset::from_vec((0..10).collect::<Vec<i32>>(), 3);
+        let d = Dataset::from_vec((0..10).collect::<Vec<i32>>(), 3).unwrap();
         assert_eq!(d.partition_sizes(), vec![4, 3, 3]);
         assert_eq!(d.len(), 10);
         assert_eq!(d.to_vec(), (0..10).collect::<Vec<i32>>());
@@ -95,21 +159,21 @@ mod tests {
 
     #[test]
     fn from_vec_more_partitions_than_records() {
-        let d = Dataset::from_vec(vec![1, 2], 4);
+        let d = Dataset::from_vec(vec![1, 2], 4).unwrap();
         assert_eq!(d.partition_sizes(), vec![1, 1, 0, 0]);
         assert!(!d.is_empty());
     }
 
     #[test]
     fn empty_partitions_allowed() {
-        let d: Dataset<i32> = Dataset::from_partitions(vec![vec![], vec![]]);
+        let d: Dataset<i32> = Dataset::from_partitions(vec![vec![], vec![]]).unwrap();
         assert!(d.is_empty());
         assert_eq!(d.len(), 0);
     }
 
     #[test]
     fn clone_is_shallow() {
-        let d = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 4);
+        let d = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 4).unwrap();
         let e = d.clone();
         assert_eq!(
             d.partition(0).as_ptr(),
@@ -120,13 +184,41 @@ mod tests {
 
     #[test]
     fn data_bytes_counts_payload() {
-        let d = Dataset::from_vec(vec![1i32; 100], 4);
+        let d = Dataset::from_vec(vec![1i32; 100], 4).unwrap();
         assert_eq!(d.data_bytes(), 400);
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_zero_partitions() {
-        Dataset::<i32>::from_partitions(vec![]);
+    fn rejects_zero_partitions_recoverably() {
+        // a drained stream / empty micro-batch is an Err, not an abort
+        assert!(Dataset::<i32>::from_partitions(vec![]).is_err());
+        assert!(Dataset::<i32>::from_vec(vec![1, 2], 0).is_err());
+    }
+
+    #[test]
+    fn concat_shares_partitions() {
+        let a = Dataset::from_vec(vec![1, 2, 3, 4], 2).unwrap();
+        let b = Dataset::from_vec(vec![5, 6], 2).unwrap();
+        let u = Dataset::concat(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(u.num_partitions(), 4);
+        assert_eq!(u.len(), 6);
+        assert_eq!(u.to_vec(), vec![1, 2, 3, 4, 5, 6]);
+        // epoch partitions are shared, not copied
+        assert_eq!(u.partition(0).as_ptr(), a.partition(0).as_ptr());
+        assert_eq!(u.partition(3).as_ptr(), b.partition(1).as_ptr());
+        assert!(Dataset::<i32>::concat(&[]).is_err());
+    }
+
+    #[test]
+    fn union_partitionwise_merges_aligned() {
+        let a = Dataset::from_vec(vec![1, 2, 3, 4], 2).unwrap();
+        let b = Dataset::from_vec(vec![5, 6], 2).unwrap();
+        let u = Dataset::union_partitionwise(&[&a, &b]).unwrap();
+        assert_eq!(u.num_partitions(), 2);
+        assert_eq!(u.partition(0), &[1, 2, 5]);
+        assert_eq!(u.partition(1), &[3, 4, 6]);
+        // mismatched partition counts are a recoverable error
+        let c = Dataset::from_vec(vec![7], 3).unwrap();
+        assert!(Dataset::union_partitionwise(&[&a, &c]).is_err());
     }
 }

@@ -59,6 +59,71 @@ impl RunMetrics {
         self.bytes_to_driver + self.bytes_shuffled + self.bytes_tree_reduced + self.bytes_broadcast
     }
 
+    /// Take a per-operation snapshot marker at the ledger's current
+    /// position. O(E): copies the scalar counters and the (bounded,
+    /// per-executor) busy ledger, but **not** the ever-growing
+    /// `stage_walls` vector — on a long-lived streaming cluster that
+    /// vector grows with every ingest/query for the process lifetime,
+    /// and cloning it per operation would be quadratic in total.
+    pub fn mark(&self) -> MetricsMark {
+        MetricsMark {
+            rounds: self.rounds,
+            stage_boundaries: self.stage_boundaries,
+            data_scans: self.data_scans,
+            shuffles: self.shuffles,
+            persists: self.persists,
+            bytes_to_driver: self.bytes_to_driver,
+            bytes_shuffled: self.bytes_shuffled,
+            bytes_tree_reduced: self.bytes_tree_reduced,
+            bytes_broadcast: self.bytes_broadcast,
+            bytes_persisted: self.bytes_persisted,
+            messages: self.messages,
+            driver_compute_secs: self.driver_compute_secs,
+            tree_levels: self.tree_levels,
+            stage_walls_len: self.stage_walls.len(),
+            wall_stage_secs: self.wall_stage_secs,
+            executor_busy_secs: self.executor_busy_secs.clone(),
+        }
+    }
+
+    /// Per-operation snapshot delta: the counters accumulated since
+    /// `base` was [`RunMetrics::mark`]ed off the live ledger. The
+    /// streaming service interleaves ingests and queries on one
+    /// long-lived cluster, so a single operation's cost is the
+    /// difference between two marks — `reset_run` would wipe the ingest
+    /// ledger mid-stream.
+    ///
+    /// `base` must be an earlier mark of the *same* run: counters are
+    /// monotone, `stage_walls` of the delta is the suffix of stages run
+    /// since, and `executor_busy_secs` subtracts elementwise.
+    pub fn since(&self, base: &MetricsMark) -> RunMetrics {
+        debug_assert!(self.rounds >= base.rounds, "mark from a different run");
+        debug_assert!(self.stage_walls.len() >= base.stage_walls_len);
+        RunMetrics {
+            rounds: self.rounds - base.rounds,
+            stage_boundaries: self.stage_boundaries - base.stage_boundaries,
+            data_scans: self.data_scans - base.data_scans,
+            shuffles: self.shuffles - base.shuffles,
+            persists: self.persists - base.persists,
+            bytes_to_driver: self.bytes_to_driver - base.bytes_to_driver,
+            bytes_shuffled: self.bytes_shuffled - base.bytes_shuffled,
+            bytes_tree_reduced: self.bytes_tree_reduced - base.bytes_tree_reduced,
+            bytes_broadcast: self.bytes_broadcast - base.bytes_broadcast,
+            bytes_persisted: self.bytes_persisted - base.bytes_persisted,
+            messages: self.messages - base.messages,
+            driver_compute_secs: self.driver_compute_secs - base.driver_compute_secs,
+            tree_levels: self.tree_levels - base.tree_levels,
+            stage_walls: self.stage_walls[base.stage_walls_len..].to_vec(),
+            wall_stage_secs: self.wall_stage_secs - base.wall_stage_secs,
+            executor_busy_secs: self
+                .executor_busy_secs
+                .iter()
+                .enumerate()
+                .map(|(e, &busy)| busy - base.executor_busy_secs.get(e).copied().unwrap_or(0.0))
+                .collect(),
+        }
+    }
+
     /// Fraction of available executor-seconds spent computing across the
     /// run's `map_partitions` stages: Σ busy / (E × Σ wall). 0.0 before
     /// any stage ran. Only meaningful under `ExecMode::Threads` (the
@@ -86,6 +151,29 @@ impl RunMetrics {
         let max = self.executor_busy_secs.iter().fold(0.0_f64, |a, &b| a.max(b));
         max / mean
     }
+}
+
+/// Position marker into a live [`RunMetrics`] ledger (see
+/// [`RunMetrics::mark`]): every scalar counter by value, the walls only
+/// by length.
+#[derive(Debug, Clone)]
+pub struct MetricsMark {
+    rounds: u64,
+    stage_boundaries: u64,
+    data_scans: u64,
+    shuffles: u64,
+    persists: u64,
+    bytes_to_driver: u64,
+    bytes_shuffled: u64,
+    bytes_tree_reduced: u64,
+    bytes_broadcast: u64,
+    bytes_persisted: u64,
+    messages: u64,
+    driver_compute_secs: f64,
+    tree_levels: u64,
+    stage_walls_len: usize,
+    wall_stage_secs: f64,
+    executor_busy_secs: Vec<f64>,
 }
 
 /// One algorithm's end-of-run report: metrics + modelled elapsed time.
@@ -262,6 +350,47 @@ mod tests {
         assert_eq!(r.executor_busy_secs.len(), 2);
         assert!((r.executor_utilization - 0.5).abs() < 1e-12);
         assert!((r.busy_skew - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn since_subtracts_counters_and_slices_walls() {
+        let start = RunMetrics {
+            rounds: 2,
+            data_scans: 3,
+            bytes_to_driver: 100,
+            messages: 10,
+            driver_compute_secs: 0.5,
+            stage_walls: vec![0.1, 0.2, 0.3],
+            wall_stage_secs: 0.6,
+            executor_busy_secs: vec![0.3, 0.3],
+            ..Default::default()
+        };
+        let base = start.mark();
+        let mut now = start.clone();
+        now.rounds = 3;
+        now.data_scans = 4;
+        now.bytes_to_driver = 150;
+        now.messages = 14;
+        now.driver_compute_secs = 0.75;
+        now.stage_walls.push(0.4);
+        now.wall_stage_secs = 1.0;
+        now.executor_busy_secs = vec![0.5, 0.4, 0.1];
+        let d = now.since(&base);
+        assert_eq!(d.rounds, 1);
+        assert_eq!(d.data_scans, 1);
+        assert_eq!(d.bytes_to_driver, 50);
+        assert_eq!(d.messages, 4);
+        assert!((d.driver_compute_secs - 0.25).abs() < 1e-12);
+        assert_eq!(d.stage_walls, vec![0.4]);
+        assert!((d.wall_stage_secs - 0.4).abs() < 1e-12);
+        // elementwise; executors first seen after the snapshot keep full time
+        assert_eq!(d.executor_busy_secs.len(), 3);
+        assert!((d.executor_busy_secs[0] - 0.2).abs() < 1e-12);
+        assert!((d.executor_busy_secs[2] - 0.1).abs() < 1e-12);
+        // delta of a ledger against its own fresh mark is all-zero
+        let z = now.since(&now.mark());
+        assert_eq!(z.rounds, 0);
+        assert!(z.stage_walls.is_empty());
     }
 
     #[test]

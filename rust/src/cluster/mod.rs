@@ -463,7 +463,8 @@ mod tests {
             vec![4, 5],
             vec![6],
             vec![7, 8, 9, 10],
-        ]);
+        ])
+        .unwrap();
         (cluster, data)
     }
 
@@ -569,7 +570,7 @@ mod tests {
 
     fn level_count(depth: Option<usize>) -> (i64, u64) {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
-        let data = Dataset::from_vec((0..64).collect::<Vec<i32>>(), 8);
+        let data = Dataset::from_vec((0..64).collect::<Vec<i32>>(), 8).unwrap();
         let sums = c.map_partitions(&data, |part, _| {
             part.iter().map(|&x| x as i64).sum::<i64>()
         });
@@ -597,7 +598,7 @@ mod tests {
     fn threads_mode_matches_sequential_values_and_counters() {
         let run = |mode: ExecMode| {
             let mut c = Cluster::new(ClusterConfig::local(3, 7).with_exec_mode(mode));
-            let data = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 7);
+            let data = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 7).unwrap();
             let pending = c.map_partitions(&data, |part, ctx| {
                 (ctx.partition, ctx.executor, part.iter().map(|&x| x as i64).sum::<i64>())
             });
@@ -622,7 +623,7 @@ mod tests {
     #[test]
     fn reset_run_clears_wall_ledgers() {
         let mut c = Cluster::new(ClusterConfig::local(2, 4).with_exec_mode(ExecMode::Threads));
-        let d = Dataset::from_vec((0..100).collect::<Vec<i32>>(), 4);
+        let d = Dataset::from_vec((0..100).collect::<Vec<i32>>(), 4).unwrap();
         let xs = c.map_partitions(&d, |p, _| p.len() as u64);
         c.collect(xs);
         assert!(!c.metrics.stage_walls.is_empty());

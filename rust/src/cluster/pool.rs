@@ -252,6 +252,7 @@ mod tests {
             vec![11],
             vec![12, 13],
         ])
+        .unwrap()
     }
 
     #[test]
@@ -297,7 +298,7 @@ mod tests {
     fn more_executors_than_populated_queues() {
         // 5 executors but only 2 partitions: three threads run empty queues
         let pool = ExecutorPool::new(5);
-        let d = Dataset::from_partitions(vec![vec![1], vec![2, 3]]);
+        let d = Dataset::from_partitions(vec![vec![1], vec![2, 3]]).unwrap();
         let thr = pool.run_threaded(&d, |p| p % 5, |part, _| part.len());
         assert_eq!(thr.values, vec![1, 2]);
         assert_eq!(thr.busy_secs.len(), 5);

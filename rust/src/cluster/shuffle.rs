@@ -61,7 +61,7 @@ pub fn shuffle_by_range(
     cluster.metrics.bytes_shuffled += moved_bytes;
     cluster.metrics.messages += (cluster.cfg.executors * cluster.cfg.executors) as u64;
 
-    Dataset::from_partitions(buckets)
+    Dataset::from_partitions(buckets).expect("one bucket per partition")
 }
 
 #[cfg(test)]
@@ -76,7 +76,7 @@ mod tests {
     #[test]
     fn routes_by_range_and_preserves_multiset() {
         let mut c = cluster();
-        let data = Dataset::from_vec(vec![5, 1, 9, 3, 7, 2, 8, 4, 6, 0], 4);
+        let data = Dataset::from_vec(vec![5, 1, 9, 3, 7, 2, 8, 4, 6, 0], 4).unwrap();
         let out = shuffle_by_range(&mut c, &data, &[3, 6]);
         assert_eq!(out.num_partitions(), 3);
         // bucket 0: <=3, bucket 1: (3,6], bucket 2: >6
@@ -94,7 +94,7 @@ mod tests {
     #[test]
     fn counts_stage_boundary_and_shuffle() {
         let mut c = cluster();
-        let data = Dataset::from_vec((0..100).collect(), 4);
+        let data = Dataset::from_vec((0..100).collect(), 4).unwrap();
         shuffle_by_range(&mut c, &data, &[25, 50, 75]);
         assert_eq!(c.metrics.shuffles, 1);
         assert_eq!(c.metrics.stage_boundaries, 1);
@@ -106,7 +106,7 @@ mod tests {
     #[test]
     fn empty_splitters_single_bucket() {
         let mut c = cluster();
-        let data = Dataset::from_vec((0..10).collect(), 4);
+        let data = Dataset::from_vec((0..10).collect(), 4).unwrap();
         let out = shuffle_by_range(&mut c, &data, &[]);
         assert_eq!(out.num_partitions(), 1);
         assert_eq!(out.len(), 10);
@@ -115,7 +115,7 @@ mod tests {
     #[test]
     fn duplicate_heavy_input_survives() {
         let mut c = cluster();
-        let data = Dataset::from_vec(vec![7; 1000], 4);
+        let data = Dataset::from_vec(vec![7; 1000], 4).unwrap();
         let out = shuffle_by_range(&mut c, &data, &[3, 7, 11]);
         assert_eq!(out.len(), 1000);
         // all 7s land in bucket with upper bound 7 (lower-bound search: first splitter >= 7)

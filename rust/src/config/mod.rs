@@ -65,6 +65,37 @@ impl Default for AlgorithmSection {
     }
 }
 
+/// Streaming-service section (converted into
+/// [`crate::stream::CompactionPolicy`]).
+#[derive(Debug, Clone)]
+pub struct StreamSection {
+    /// Live-epoch count that triggers store compaction at the next seal.
+    pub compact_threshold: usize,
+    /// Epochs retained after a compaction.
+    pub max_live_epochs: usize,
+}
+
+impl Default for StreamSection {
+    fn default() -> Self {
+        let p = crate::stream::CompactionPolicy::default();
+        Self {
+            compact_threshold: p.compact_threshold,
+            max_live_epochs: p.max_live_epochs,
+        }
+    }
+}
+
+impl StreamSection {
+    pub fn to_policy(&self) -> Result<crate::stream::CompactionPolicy> {
+        let policy = crate::stream::CompactionPolicy {
+            compact_threshold: self.compact_threshold,
+            max_live_epochs: self.max_live_epochs,
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
 /// Fabric section (converted into [`NetworkModel`]).
 #[derive(Debug, Clone)]
 pub struct NetworkSection {
@@ -112,6 +143,7 @@ pub struct ReproConfig {
     pub cluster: ClusterSection,
     pub network: NetworkSection,
     pub algorithm: AlgorithmSection,
+    pub stream: StreamSection,
     /// Kernel backend: "native" | "pjrt".
     pub backend: String,
     /// Where `make artifacts` put the HLO text.
@@ -124,6 +156,7 @@ impl Default for ReproConfig {
             cluster: ClusterSection::default(),
             network: NetworkSection::default(),
             algorithm: AlgorithmSection::default(),
+            stream: StreamSection::default(),
             backend: "native".into(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
@@ -137,6 +170,9 @@ impl ReproConfig {
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = minitoml::parse(text)?;
         let cfg = Self::from_document(&doc);
+        // fail config loading on an invalid compaction policy, not the
+        // first store construction
+        cfg.stream.to_policy().context("[stream] section")?;
         if !cfg.cluster.exec_mode.is_empty() {
             // fail config loading, not the first cluster_config() call
             cfg.cluster
@@ -153,6 +189,7 @@ impl ReproConfig {
         let cluster = Section(doc.get("cluster"));
         let network = Section(doc.get("network"));
         let algorithm = Section(doc.get("algorithm"));
+        let stream = Section(doc.get("stream"));
         Self {
             cluster: ClusterSection {
                 nodes: cluster.int_or("nodes", d.cluster.nodes as i64) as usize,
@@ -180,6 +217,14 @@ impl ReproConfig {
                 seed: algorithm.int_or("seed", d.algorithm.seed as i64) as u64,
                 sketch: algorithm.str_or("sketch", &d.algorithm.sketch),
                 sketch_merge: algorithm.str_or("sketch_merge", &d.algorithm.sketch_merge),
+            },
+            stream: StreamSection {
+                compact_threshold: stream
+                    .int_or("compact_threshold", d.stream.compact_threshold as i64)
+                    as usize,
+                max_live_epochs: stream
+                    .int_or("max_live_epochs", d.stream.max_live_epochs as i64)
+                    as usize,
             },
             backend: root.str_or("backend", &d.backend),
             artifacts_dir: PathBuf::from(
@@ -279,6 +324,15 @@ impl ReproConfig {
             "sketch_merge".into(),
             Value::Str(self.algorithm.sketch_merge.clone()),
         );
+        let s = doc.entry("stream".into()).or_default();
+        s.insert(
+            "compact_threshold".into(),
+            Value::Int(self.stream.compact_threshold as i64),
+        );
+        s.insert(
+            "max_live_epochs".into(),
+            Value::Int(self.stream.max_live_epochs as i64),
+        );
         minitoml::serialize(&doc)
     }
 }
@@ -332,6 +386,26 @@ mod tests {
         // a bad mode fails at load time with context, not at first use
         let err = ReproConfig::from_toml("[cluster]\nexec_mode = \"turbo\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("exec_mode"));
+    }
+
+    #[test]
+    fn stream_section_roundtrips_and_validates() {
+        let mut c = ReproConfig::default();
+        assert_eq!(c.stream.compact_threshold, 8);
+        assert_eq!(c.stream.max_live_epochs, 4);
+        c.stream.compact_threshold = 16;
+        c.stream.max_live_epochs = 2;
+        let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.stream.compact_threshold, 16);
+        assert_eq!(back.stream.max_live_epochs, 2);
+        let policy = back.stream.to_policy().unwrap();
+        assert_eq!(policy.compact_threshold, 16);
+        // an inverted policy fails at load time with section context
+        let err = ReproConfig::from_toml(
+            "[stream]\ncompact_threshold = 2\nmax_live_epochs = 6\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("stream"));
     }
 
     #[test]

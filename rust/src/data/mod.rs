@@ -79,7 +79,7 @@ pub trait DataGenerator {
                 v
             })
             .collect();
-        Dataset::from_partitions(parts)
+        Dataset::from_partitions(parts).expect("cluster has at least one partition")
     }
 }
 

@@ -79,6 +79,74 @@ impl AlgoChoice {
     }
 }
 
+/// Input shapes for the streaming replay (`repro stream`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamWorkload {
+    /// i.i.d. uniform batches — the stationary baseline.
+    Uniform,
+    /// Zipf(2.5) batches — heavy hitters, stresses endpoint-run counting.
+    Zipf,
+    /// Adversarially non-stationary: every batch lands in its own narrow
+    /// value band, hash-scattered across the key space, with a 25%
+    /// duplicate run at the band edge. Each batch maximally shifts the
+    /// global quantiles, so sketches cached from old epochs always
+    /// mispredict — the worst case a cached-sketch design must absorb
+    /// (exactness holds; a band miss costs one fallback scan).
+    Hostile,
+}
+
+impl std::str::FromStr for StreamWorkload {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(Self::Uniform),
+            "zipf" => Ok(Self::Zipf),
+            "hostile" => Ok(Self::Hostile),
+            other => anyhow::bail!("unknown stream workload '{other}' (uniform|zipf|hostile)"),
+        }
+    }
+}
+
+impl StreamWorkload {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Uniform => "uniform",
+            Self::Zipf => "zipf",
+            Self::Hostile => "hostile",
+        }
+    }
+
+    /// The records arriving at tick `tick` (deterministic per seed).
+    pub fn batch(self, seed: u64, tick: u64, len: usize) -> Vec<crate::Key> {
+        use crate::data::{DataGenerator, UniformGen, ZipfGen};
+        let mut out = Vec::with_capacity(len);
+        match self {
+            Self::Uniform => {
+                UniformGen::new(seed).fill_partition(tick as usize, 1, len, &mut out)
+            }
+            Self::Zipf => {
+                ZipfGen::new(seed, 2.5).fill_partition(tick as usize, 1, len, &mut out)
+            }
+            Self::Hostile => {
+                let mut rng = crate::data::pcg::Pcg64::new(seed, 0xB10C ^ tick);
+                const BANDS: u64 = 64;
+                let band = tick.wrapping_mul(0x9E37_79B9_7F4A_7C15) % BANDS;
+                let span = ((crate::KEY_HI - crate::KEY_LO) as u64 / BANDS).max(1);
+                let lo = crate::KEY_LO + (band * span) as i64;
+                for _ in 0..len {
+                    let v = if rng.next_u64() % 4 == 0 {
+                        lo // duplicate run pinned at the band edge
+                    } else {
+                        lo + (rng.next_u64() % span) as i64
+                    };
+                    out.push(v as crate::Key);
+                }
+            }
+        }
+        out
+    }
+}
+
 fn sketch_variant(cfg: &ReproConfig) -> Result<SketchVariant> {
     cfg.algorithm.sketch.parse()
 }
@@ -501,6 +569,111 @@ pub fn validate(cfg: &ReproConfig, n: u64) -> Result<()> {
     Ok(())
 }
 
+/// `repro stream`: replay an interleaved ingest/query workload against
+/// the streaming service and print the amortization the store buys —
+/// ingest throughput, per-query rounds/scans/latency, store footprint.
+#[allow(clippy::too_many_arguments)]
+pub fn run_stream(
+    cfg: &ReproConfig,
+    batches: u64,
+    batch_n: u64,
+    workload: StreamWorkload,
+    qs: &[f64],
+    query_every: u64,
+    verify: bool,
+) -> Result<()> {
+    use crate::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+    ensure!(batches > 0 && batch_n > 0, "need at least one nonempty batch");
+    ensure!(!qs.is_empty(), "need at least one quantile");
+    let query_every = query_every.max(1);
+    let mut cluster = make_cluster(cfg, cfg.cluster.nodes);
+    let mut store = SketchStore::new(cfg.stream.to_policy()?)?;
+    let ingestor =
+        StreamIngestor::new(cfg.algorithm.epsilon)?.with_variant(sketch_variant(cfg)?);
+    let params = GkSelectParams {
+        epsilon: cfg.algorithm.epsilon,
+        variant: sketch_variant(cfg)?,
+        merge: merge_strategy(cfg)?,
+        tree_depth: cfg.algorithm.tree_depth,
+        candidate_budget: None,
+    };
+    let mut engine = if cfg.backend == "native" {
+        StreamQuery::new(params)
+    } else {
+        // route the configured kernel backend through both engines, like
+        // every other subcommand (two loads: boxed backends don't clone)
+        StreamQuery::with_backends(
+            params.clone(),
+            backend_from_name(&cfg.backend, &cfg.artifacts_dir)
+                .context("loading kernel backend (run `make artifacts`?)")?,
+            backend_from_name(&cfg.backend, &cfg.artifacts_dir)?,
+        )
+    };
+    println!(
+        "# streaming replay — {} workload, {batches} batches × {batch_n} records, \
+         {} nodes, ε = {}, compaction {}→{}",
+        workload.label(),
+        cluster.cfg.executors,
+        cfg.algorithm.epsilon,
+        store.policy.compact_threshold,
+        store.policy.max_live_epochs,
+    );
+    let stream = "replay";
+    for tick in 1..=batches {
+        let values = workload.batch(cfg.algorithm.seed, tick, batch_n as usize);
+        let t = Instant::now();
+        let ing = ingestor.ingest(&mut cluster, &mut store, stream, MicroBatch::new(values))?;
+        let wall = t.elapsed().as_secs_f64();
+        println!(
+            "tick {tick:>3} ingest: {:>9} keys in {:>7.2} ms ({:>6.1} Mkeys/s)  \
+             epochs {:>2}{}  store {}",
+            ing.batch_records,
+            wall * 1e3,
+            ing.batch_records as f64 / wall / 1e6,
+            ing.live_epochs,
+            if ing.compacted_epochs > 0 {
+                format!(" (compacted {})", ing.compacted_epochs)
+            } else {
+                String::new()
+            },
+            crate::cluster::metrics::human_bytes(ing.store_bytes),
+        );
+        if tick % query_every == 0 {
+            let t = Instant::now();
+            let out = engine.quantiles(&mut cluster, &store, stream, qs)?;
+            let wall = t.elapsed().as_secs_f64();
+            let vals: Vec<String> = qs
+                .iter()
+                .zip(out.values.iter())
+                .map(|(&q, &v)| format!("p{}={v}", q * 100.0))
+                .collect();
+            println!(
+                "tick {tick:>3}  query: {:<40} rounds {} scans {} model {:.4}s wall {:.2} ms",
+                vals.join(" "),
+                out.report.rounds,
+                out.report.data_scans,
+                out.report.elapsed_secs,
+                wall * 1e3,
+            );
+            if verify {
+                let data = store
+                    .stream(stream)
+                    .expect("stream exists")
+                    .live_dataset()?;
+                for (&q, &v) in qs.iter().zip(out.values.iter()) {
+                    let truth = oracle_quantile(&data, q).expect("nonempty");
+                    ensure!(
+                        v == truth,
+                        "EXACTNESS VIOLATION at tick {tick} q={q}: got {v} want {truth}"
+                    );
+                }
+                println!("tick {tick:>3} verify: all {} quantiles exact", qs.len());
+            }
+        }
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Machine-readable perf trajectory: the BENCH_*.json family
 // ---------------------------------------------------------------------------
@@ -568,6 +741,80 @@ pub fn gk_select_bench_record(
     ]))
 }
 
+/// One streamed query on the paper's `emr(30)` shape after `batches`
+/// uniform micro-batches → a JSON record. The serving hot path: the
+/// query's only stage is the fused band-extract scan over the live
+/// epochs (stage index 0 — the sketch pass happened at ingest), so
+/// `band_scan_wall_s` is directly comparable with the batch records'.
+pub fn stream_query_bench_record(
+    label: &str,
+    n: u64,
+    batches: u64,
+    mode: ExecMode,
+) -> Result<JsonVal> {
+    use crate::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+    let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
+    let mut store = SketchStore::default();
+    let ingestor = StreamIngestor::new(0.01)?;
+    let per = (n / batches).max(1);
+    let mut ingest_wall = 0.0;
+    for tick in 0..batches {
+        let values = StreamWorkload::Uniform.batch(42, tick, per as usize);
+        let t = Instant::now();
+        ingestor.ingest(&mut cluster, &mut store, "bench", MicroBatch::new(values))?;
+        ingest_wall += t.elapsed().as_secs_f64();
+    }
+    let mut engine = StreamQuery::new(GkSelectParams::default());
+    let out = engine.quantile(&mut cluster, &store, "bench", 0.75)?;
+    let band_scan_wall = out.report.stage_walls.first().copied().unwrap_or(0.0);
+    let state = store.stream("bench").expect("ingested");
+    println!(
+        "bench gk_select_emr30/{label:<24} {:<10} rounds {} scans {} model {:>9.4}s \
+         wall {:>8.4}s band-scan {:>8.4}s util {:.2} skew {:.2}",
+        mode.label(),
+        out.report.rounds,
+        out.report.data_scans,
+        out.report.elapsed_secs,
+        out.report.wall_stage_secs,
+        band_scan_wall,
+        out.report.executor_utilization,
+        out.report.busy_skew,
+    );
+    Ok(JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str(label.to_string())),
+        ("distribution", JsonVal::Str("uniform".into())),
+        ("exec_mode", JsonVal::Str(mode.label().to_string())),
+        ("n", JsonVal::U64(out.report.n)),
+        ("micro_batches", JsonVal::U64(batches)),
+        ("q", JsonVal::F64(0.75)),
+        ("rounds", JsonVal::U64(out.report.rounds)),
+        ("data_scans", JsonVal::U64(out.report.data_scans)),
+        ("stage_boundaries", JsonVal::U64(out.report.stage_boundaries)),
+        ("shuffles", JsonVal::U64(out.report.shuffles)),
+        ("persists", JsonVal::U64(out.report.persists)),
+        (
+            "network_volume_bytes",
+            JsonVal::U64(out.report.network_volume_bytes),
+        ),
+        ("elapsed_model_s", JsonVal::F64(out.report.elapsed_secs)),
+        ("wall_stage_secs", JsonVal::F64(out.report.wall_stage_secs)),
+        ("band_scan_wall_s", JsonVal::F64(band_scan_wall)),
+        (
+            "stage_walls",
+            JsonVal::Arr(out.report.stage_walls.iter().map(|&w| JsonVal::F64(w)).collect()),
+        ),
+        (
+            "executor_utilization",
+            JsonVal::F64(out.report.executor_utilization),
+        ),
+        ("busy_skew", JsonVal::F64(out.report.busy_skew)),
+        ("live_epochs", JsonVal::U64(state.live_epochs() as u64)),
+        ("store_bytes", JsonVal::U64(state.store_bytes())),
+        ("ingest_wall_s_total", JsonVal::F64(ingest_wall)),
+        ("exact", JsonVal::Bool(out.report.exact)),
+    ]))
+}
+
 /// Build the `BENCH_gk_select.json` document: the fused two-round path on
 /// the acceptance distributions, a threads-vs-sequential pair on the same
 /// uniform workload (so the file carries modelled *and* real parallel
@@ -615,6 +862,12 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
             Some(0),
             ExecMode::Sequential,
         )?,
+        // the serving hot path: one streamed query after 32 micro-batches
+        // — its only data scan is the fused band-extract pass (rounds=1 /
+        // scans=1; the sketch work was paid at ingest), sequential and
+        // through the thread pool
+        stream_query_bench_record("stream_query", n, 32, ExecMode::Sequential)?,
+        stream_query_bench_record("stream_query_threads", n, 32, ExecMode::Threads)?,
     ];
     Ok(JsonVal::obj(vec![
         ("bench", JsonVal::Str("gk_select".into())),
@@ -633,7 +886,11 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
                  wall-clock; its elapsed_model_s absorbs real scheduling \
                  contention (per-partition times are measured on \
                  oversubscribed threads), so read modelled time from the \
-                 sequential `fused` record and real time from this one"
+                 sequential `fused` record and real time from this one. \
+                 stream_query[_threads] measure the serving hot path: one \
+                 exact query answered from cached ingest-time sketches \
+                 after 32 micro-batches — rounds=1/data_scans=1, the only \
+                 stage being the fused band-extract scan"
                     .into(),
             ),
         ),

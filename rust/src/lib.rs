@@ -14,8 +14,10 @@
 //!   ([`cluster`]) with explicit rounds, stage boundaries, `treeReduce`,
 //!   `TorrentBroadcast`, range-partition shuffle, and a calibrated
 //!   network/compute cost model; the distributed quantile
-//!   [`algorithms`]; and all the substrates they need ([`sketch`],
-//!   [`select`], [`sort`], [`data`]).
+//!   [`algorithms`]; the [`stream`] serving layer (micro-batch
+//!   ingestion, cached sketch store, one-scan exact queries); and all
+//!   the substrates they need ([`sketch`], [`select`], [`sort`],
+//!   [`data`]).
 //! * **L2/L1 (python, build-time only)** — a JAX pivot-pass pipeline
 //!   whose hot loops are Pallas kernels, AOT-lowered to HLO text by
 //!   `make artifacts` and executed from the L3 hot path through
@@ -44,6 +46,7 @@ pub mod runtime;
 pub mod select;
 pub mod sketch;
 pub mod sort;
+pub mod stream;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -72,6 +75,9 @@ pub mod prelude {
     pub use crate::runtime::{KernelBackend, NativeBackend};
     pub use crate::sketch::{
         classical::ClassicalGk, modified::ModifiedGk, spark::SparkGk, QuantileSketch,
+    };
+    pub use crate::stream::{
+        CompactionPolicy, MicroBatch, SketchStore, StreamIngestor, StreamQuery,
     };
 }
 

@@ -11,6 +11,7 @@
 //! repro bench table5   --n 4e6 --nodes 10
 //! repro bench ablation --n 8e6 --nodes 10
 //! repro bench json     --n 4e6 --out .
+//! repro stream         --batches 16 --batch-n 250000 --workload zipf --queries 0.5,0.95,0.99
 //! repro calibrate
 //! repro validate --n 2e5
 //! repro config
@@ -43,6 +44,10 @@ COMMANDS:
   bench table5    Table V: measured counters  (--n --nodes)
   bench ablation  ε sweep                     (--n --nodes)
   bench json      emit the BENCH_*.json family (--n --out <dir>)
+  stream     replay interleaved micro-batch ingests + exact quantile
+             queries through the streaming service
+             --batches <count> --batch-n <records> --workload uniform|zipf|hostile
+             --queries 0.5,0.95,0.99 --query-every <ticks> --nodes <count> --verify
   calibrate  measure this box's per-element costs
   validate   cross-check all algorithms vs the oracle (--n)
   config     print the effective config
@@ -139,6 +144,42 @@ fn main() -> Result<()> {
                 }
                 other => bail!("unknown bench '{other}' (fig|dist|table4|table5|ablation|json)"),
             }
+        }
+        "stream" => {
+            args.ensure_known(&[
+                "config",
+                "backend",
+                "exec-mode",
+                "batches",
+                "batch-n",
+                "workload",
+                "queries",
+                "query-every",
+                "nodes",
+                "verify",
+            ])?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            let workload: harness::StreamWorkload = args.str_or("workload", "zipf").parse()?;
+            let qs: Vec<f64> = args
+                .str_or("queries", "0.5,0.95,0.99")
+                .split(',')
+                .map(|s| {
+                    let q: f64 = s.trim().parse()?;
+                    anyhow::ensure!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+                    Ok(q)
+                })
+                .collect::<Result<_>>()?;
+            harness::run_stream(
+                &cfg,
+                args.u64_or("batches", 16)?,
+                args.u64_or("batch-n", 250_000)?,
+                workload,
+                &qs,
+                args.u64_or("query-every", 1)?,
+                args.has("verify"),
+            )
         }
         "calibrate" => harness::calibrate(),
         "validate" => {

@@ -129,7 +129,7 @@ pub fn psrs_sort(cluster: &mut Cluster, data: &Dataset<Key>, params: &PsrsParams
         .collect();
 
     SortedDataset {
-        data: Dataset::from_partitions(parts),
+        data: Dataset::from_partitions(parts).expect("shuffle preserves partition count"),
         splitters,
     }
 }
@@ -214,7 +214,7 @@ mod tests {
     #[test]
     fn tiny_input_fewer_records_than_partitions() {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
-        let data = Dataset::from_vec(vec![3, 1, 2], 8);
+        let data = Dataset::from_vec(vec![3, 1, 2], 8).unwrap();
         let sorted = psrs_sort(&mut c, &data, &PsrsParams::default());
         assert_eq!(sorted.data.to_vec(), vec![1, 2, 3]);
     }

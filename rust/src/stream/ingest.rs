@@ -1,0 +1,271 @@
+//! Micro-batch ingestion: the append path of the streaming service.
+//!
+//! One [`StreamIngestor::ingest`] call is the sketch round the batch
+//! path pays *per query*, moved to ingest time and paid **once per
+//! batch**: the batch is partitioned into a fresh epoch (sealed datasets
+//! are never mutated) and each partition builds its
+//! [`crate::sketch::GkCore`] partial with the batch path's own
+//! per-partition construction
+//! ([`crate::algorithms::approx_quantile::sketch_partition`]; `Bulk` by
+//! default — radix sort + zero-slack `from_sorted`, or any streamed GK
+//! variant via [`StreamIngestor::with_variant`]) — running on the
+//! executor pool like any `mapPartitions` stage — and the epoch lands in
+//! the [`SketchStore`]. Incremental growth happens by *merging*, never
+//! rebuilding: the store folds epochs with `GkCore::merge_with` at
+//! compaction, charged as a persist — the only time streamed data is
+//! ever rewritten.
+//!
+//! Cost per batch: **1 round, 1 data scan over the new records only** —
+//! queries then reuse the cached partials for free.
+
+use anyhow::{ensure, Result};
+
+use super::store::SketchStore;
+use crate::algorithms::approx_quantile::{sketch_partition, SketchVariant};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::metrics::MetricsReport;
+use crate::cluster::Cluster;
+use crate::Key;
+
+/// One ingestion unit: the records that arrived since the last tick.
+#[derive(Debug, Clone, Default)]
+pub struct MicroBatch {
+    pub values: Vec<Key>,
+}
+
+impl MicroBatch {
+    pub fn new(values: Vec<Key>) -> Self {
+        Self { values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// The append path: owns the sketch precision and variant (the store
+/// owns the data, the cluster owns the execution).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamIngestor {
+    /// GK relative error of the cached partials. The query engine
+    /// budgets against the looser of its own ε and the cached sketch's,
+    /// so a mismatch costs band width, never correctness.
+    pub epsilon: f64,
+    /// Which GK construction runs per partition (default: `Bulk`, the
+    /// radix-sort + zero-slack `from_sorted` fast path — §Perf L3.4).
+    pub variant: SketchVariant,
+}
+
+/// Receipt for one ingested micro-batch.
+#[derive(Debug, Clone)]
+pub struct IngestOutcome {
+    /// Epoch id the batch was sealed as.
+    pub epoch: u64,
+    /// Records in this batch.
+    pub batch_records: u64,
+    /// Live records across the whole stream after the seal.
+    pub stream_records: u64,
+    /// Live epochs after the seal (and possible compaction).
+    pub live_epochs: usize,
+    /// Epochs folded by a triggered compaction (0 = none fired).
+    pub compacted_epochs: usize,
+    /// Payload bytes the compaction rewrote (charged as a persist).
+    pub bytes_rewritten: u64,
+    /// Store footprint (cached sketches + payload) after the seal.
+    pub store_bytes: u64,
+    /// The ingest's own cost: metrics delta for exactly this call.
+    pub report: MetricsReport,
+}
+
+impl StreamIngestor {
+    pub fn new(epsilon: f64) -> Result<Self> {
+        ensure!(
+            epsilon > 0.0 && epsilon < 1.0,
+            "epsilon must be in (0,1), got {epsilon}"
+        );
+        Ok(Self {
+            epsilon,
+            variant: SketchVariant::Bulk,
+        })
+    }
+
+    /// Override the per-partition sketch construction (builder-style).
+    pub fn with_variant(mut self, variant: SketchVariant) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    /// Ingest `batch` into `stream`: seal a new epoch with its
+    /// per-partition sketch partials, compacting the store if the policy
+    /// says so. An empty batch is a recoverable error — the stream stays
+    /// untouched.
+    pub fn ingest(
+        &self,
+        cluster: &mut Cluster,
+        store: &mut SketchStore,
+        stream: &str,
+        batch: MicroBatch,
+    ) -> Result<IngestOutcome> {
+        ensure!(
+            !batch.is_empty(),
+            "empty micro-batch for stream '{stream}'"
+        );
+        if let Some(state) = store.stream(stream) {
+            ensure!(
+                state.partitions() == cluster.cfg.partitions,
+                "stream '{stream}' is partitioned {}-way, cluster runs {} partitions",
+                state.partitions(),
+                cluster.cfg.partitions
+            );
+        }
+        let base = cluster.metrics.mark();
+        let clock0 = cluster.elapsed_secs();
+
+        let data = Dataset::from_vec(batch.values, cluster.cfg.partitions)?;
+        let batch_records = data.len();
+        let eps = self.epsilon;
+        let variant = self.variant;
+        // the ingest-time sketch pass: same per-partition construction as
+        // the batch path's round 1 (Bulk = radix sort + zero-slack
+        // from_sorted), one O(1/ε) summary per partition
+        let pending =
+            cluster.map_partitions(&data, |part, _| sketch_partition(variant, eps, part));
+        let sketches = cluster.collect(pending);
+
+        let epoch = store.seal_epoch(stream, data, sketches)?;
+        let (compacted_epochs, bytes_rewritten) = if store.needs_compaction(stream) {
+            // driver-side fold of cached partials + partition-aligned
+            // data rewrite; the rewrite is the persist the cost model
+            // charges
+            let stats = cluster.driver(|| store.compact(stream))?;
+            match stats {
+                Some(s) => {
+                    cluster.persist_bytes(s.bytes_rewritten);
+                    (s.merged_epochs, s.bytes_rewritten)
+                }
+                None => (0, 0),
+            }
+        } else {
+            (0, 0)
+        };
+
+        let state = store.stream(stream).expect("epoch just sealed");
+        let delta = cluster.metrics.since(&base);
+        let report = MetricsReport::from_metrics(
+            "Stream Ingest",
+            batch_records,
+            cluster.cfg.partitions,
+            cluster.cfg.executors,
+            cluster.elapsed_secs() - clock0,
+            &delta,
+            true,
+        );
+        Ok(IngestOutcome {
+            epoch,
+            batch_records,
+            stream_records: state.total_count(),
+            live_epochs: state.live_epochs(),
+            compacted_epochs,
+            bytes_rewritten,
+            store_bytes: state.store_bytes(),
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::local(2, 4))
+    }
+
+    #[test]
+    fn ingest_seals_epoch_with_one_round_one_scan() {
+        let mut c = cluster();
+        let mut store = SketchStore::default();
+        let ing = StreamIngestor::new(0.02).unwrap();
+        let out = ing
+            .ingest(&mut c, &mut store, "s", MicroBatch::new((0..1000).collect()))
+            .unwrap();
+        assert_eq!(out.epoch, 0);
+        assert_eq!(out.batch_records, 1000);
+        assert_eq!(out.stream_records, 1000);
+        assert_eq!(out.live_epochs, 1);
+        assert_eq!(out.report.rounds, 1, "ingest = the sketch round");
+        assert_eq!(out.report.data_scans, 1, "only the new records are read");
+        assert_eq!(out.report.shuffles, 0);
+        assert_eq!(out.report.persists, 0);
+        assert!(out.store_bytes > 0);
+        let st = store.stream("s").unwrap();
+        assert_eq!(st.sketch_partials(), 4);
+        assert_eq!(st.merged_sketch().unwrap().count, 1000);
+    }
+
+    #[test]
+    fn second_ingest_scans_only_its_own_batch() {
+        let mut c = cluster();
+        let mut store = SketchStore::default();
+        let ing = StreamIngestor::new(0.02).unwrap();
+        ing.ingest(&mut c, &mut store, "s", MicroBatch::new((0..500).collect()))
+            .unwrap();
+        let out = ing
+            .ingest(&mut c, &mut store, "s", MicroBatch::new((500..800).collect()))
+            .unwrap();
+        // the per-call delta sees one round/scan even though the cluster
+        // ledger now carries two
+        assert_eq!(out.report.rounds, 1);
+        assert_eq!(out.report.data_scans, 1);
+        assert_eq!(out.batch_records, 300);
+        assert_eq!(out.stream_records, 800);
+        assert_eq!(c.metrics.data_scans, 2);
+    }
+
+    #[test]
+    fn empty_batch_is_recoverable_and_stream_untouched() {
+        let mut c = cluster();
+        let mut store = SketchStore::default();
+        let ing = StreamIngestor::new(0.02).unwrap();
+        ing.ingest(&mut c, &mut store, "s", MicroBatch::new(vec![1, 2, 3]))
+            .unwrap();
+        let err = ing.ingest(&mut c, &mut store, "s", MicroBatch::default());
+        assert!(err.is_err());
+        assert_eq!(store.stream("s").unwrap().total_count(), 3);
+        // a bad ε is also an Err, not an abort
+        assert!(StreamIngestor::new(0.0).is_err());
+    }
+
+    #[test]
+    fn threshold_crossing_triggers_compaction_and_charges_persist() {
+        let mut c = cluster();
+        let mut store = SketchStore::new(crate::stream::CompactionPolicy {
+            compact_threshold: 3,
+            max_live_epochs: 2,
+        })
+        .unwrap();
+        let ing = StreamIngestor::new(0.05).unwrap();
+        let mut last = None;
+        for b in 0..4i32 {
+            let vals: Vec<Key> = (b * 100..b * 100 + 100).collect();
+            last = Some(
+                ing.ingest(&mut c, &mut store, "s", MicroBatch::new(vals))
+                    .unwrap(),
+            );
+        }
+        let out = last.unwrap();
+        // 4th seal crossed threshold 3 → oldest 3 folded into 1
+        assert_eq!(out.compacted_epochs, 3);
+        assert_eq!(out.live_epochs, 2);
+        assert_eq!(out.bytes_rewritten, 3 * 100 * 4);
+        assert_eq!(out.report.persists, 1);
+        assert_eq!(store.stream("s").unwrap().total_count(), 400);
+        // partials bounded by max_live × partitions
+        assert_eq!(store.stream("s").unwrap().sketch_partials(), 8);
+    }
+}

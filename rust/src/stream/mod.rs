@@ -1,0 +1,49 @@
+//! Streaming quantile service: micro-batch ingestion, a per-partition
+//! sketch store, and one-scan exact queries.
+//!
+//! The batch reproduction answers every query from scratch: a sketch
+//! pass plus the fused band-extract pass — 2 rounds, 2 data scans, even
+//! when the data barely changed since the last query. In a serving
+//! setting (accumulating telemetry, many queries per ingest) the sketch
+//! pass is pure waste. This subsystem decouples the two:
+//!
+//! * [`ingest`] — [`StreamIngestor`] seals each [`MicroBatch`] as a new
+//!   immutable epoch (fresh partitions; sealed epochs are never
+//!   mutated) and folds the batch into per-partition [`GkCore`]
+//!   partials on the executor pool. **Ingest pays the sketch scan, once
+//!   per batch.**
+//! * [`store`] — [`SketchStore`] keys the partials by stream id ×
+//!   epoch. Epoch compaction folds old epochs (sketch merge + aligned
+//!   partition rewrite) so the cached-sketch footprint stays `O(P/ε)`
+//!   no matter how many batches ever arrived.
+//! * [`query`] — [`StreamQuery`] answers exact quantile /
+//!   multi-quantile queries by tree-merging the *cached* partials on
+//!   the driver (no data scan) and running only the fused band-extract
+//!   scan over the zero-copy union of live epochs.
+//!
+//! Cost shape, measured by the per-operation metrics snapshots every
+//! outcome carries:
+//!
+//! | operation            | rounds | data scans | scanned records |
+//! |----------------------|--------|------------|-----------------|
+//! | batch `GkSelect`     | 2      | 2          | 2n per query    |
+//! | stream ingest        | 1      | 1          | batch only      |
+//! | stream query         | 1      | 1          | n, once         |
+//!
+//! Exactness is inherited, not re-proven: the query path reuses
+//! [`GkSelect::select_with_sketch`] / [`MultiSelect`]'s fused protocol,
+//! whose answer is checked against *measured* counts and backed by the
+//! classic extraction fallback — a stale or hostile sketch costs one
+//! extra scan, never correctness.
+//!
+//! [`GkCore`]: crate::sketch::GkCore
+//! [`GkSelect::select_with_sketch`]: crate::algorithms::gk_select::GkSelect::select_with_sketch
+//! [`MultiSelect`]: crate::algorithms::multi_select::MultiSelect
+
+pub mod ingest;
+pub mod query;
+pub mod store;
+
+pub use ingest::{IngestOutcome, MicroBatch, StreamIngestor};
+pub use query::StreamQuery;
+pub use store::{CompactionPolicy, CompactionStats, Epoch, SketchStore, StreamState};

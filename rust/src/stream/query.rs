@@ -1,0 +1,222 @@
+//! One-scan exact queries over a live stream.
+//!
+//! A batch `GkSelect` query pays two data scans: the sketch pass plus
+//! the fused band-extract pass. A streamed query skips the first one
+//! entirely — the per-partition sketches were cached at ingest — so it
+//! costs:
+//!
+//! 1. **driver-side tree-merge** of the store's `O(P/ε)` cached partials
+//!    (no round, no data scan, pure driver compute);
+//! 2. **one fused band-extract scan** over the zero-copy union of all
+//!    live epochs ([`crate::cluster::dataset::Dataset::concat`]) — the
+//!    same exactness machinery as the batch path
+//!    ([`GkSelect::select_with_sketch`]), so the answer is bit-identical
+//!    to running batch GK Select over the concatenated data.
+//!
+//! Net: **rounds = 1, data_scans = 1 per query** (2/2 for the batch
+//! path), asserted by the per-query metrics snapshot every outcome
+//! carries. Exactness never rests on sketch freshness: the fused pass
+//! re-checks measured counts against the band and falls back to the
+//! classic extraction round if a hostile stream pushed the sketch out of
+//! contract — still exact, one extra scan.
+
+use anyhow::{ensure, Result};
+
+use super::store::SketchStore;
+use crate::algorithms::gk_select::{GkSelect, GkSelectParams};
+use crate::algorithms::multi_select::{MultiOutcome, MultiSelect};
+use crate::algorithms::Outcome;
+use crate::cluster::dataset::Dataset;
+use crate::cluster::metrics::{MetricsMark, MetricsReport};
+use crate::cluster::Cluster;
+use crate::runtime::KernelBackend;
+use crate::sketch::GkCore;
+use crate::Key;
+
+/// The query engine: batch GK Select's fused protocol, fed from the
+/// sketch store instead of a fresh sketch round.
+pub struct StreamQuery {
+    select: GkSelect,
+    multi: MultiSelect,
+}
+
+impl StreamQuery {
+    /// Native-backend engine. The candidate budget is derived from the
+    /// looser of `params.epsilon` and the cached sketch's ε, so an
+    /// ingestor/engine precision mismatch costs band width, not
+    /// correctness (and not the fast path).
+    pub fn new(params: GkSelectParams) -> Self {
+        Self {
+            select: GkSelect::new(params.clone()),
+            multi: MultiSelect::new(params),
+        }
+    }
+
+    /// Run the fused scans through specific kernel backends — one for
+    /// the single-quantile engine, one for the batched engine (boxed
+    /// backends are not cloneable).
+    pub fn with_backends(
+        params: GkSelectParams,
+        single: Box<dyn KernelBackend>,
+        multi: Box<dyn KernelBackend>,
+    ) -> Self {
+        Self {
+            select: GkSelect::with_backend(params.clone(), single),
+            multi: MultiSelect::with_backend(params, multi),
+        }
+    }
+
+    /// Exact quantile `q` over every live record of `stream`. The
+    /// outcome's report covers exactly this query (per-query snapshot):
+    /// rounds = 1, data_scans = 1 on the cached-sketch fast path.
+    pub fn quantile(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &SketchStore,
+        stream: &str,
+        q: f64,
+    ) -> Result<Outcome> {
+        let base = cluster.metrics.mark();
+        let clock0 = cluster.elapsed_secs();
+        let (data, sketch) = query_view(cluster, store, stream)?;
+        let out = self.select.select_with_sketch(cluster, &data, &sketch, q)?;
+        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data);
+        Ok(Outcome {
+            value: out.value,
+            report,
+        })
+    }
+
+    /// Exact values for every quantile in `qs`, all sharing the single
+    /// fused scan (the m-quantile serving shape: p50/p95/p99 per tick).
+    pub fn quantiles(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &SketchStore,
+        stream: &str,
+        qs: &[f64],
+    ) -> Result<MultiOutcome> {
+        ensure!(!qs.is_empty(), "no quantiles requested");
+        let base = cluster.metrics.mark();
+        let clock0 = cluster.elapsed_secs();
+        let (data, sketch) = query_view(cluster, store, stream)?;
+        let out = self
+            .multi
+            .quantiles_with_sketch(cluster, &data, &sketch, qs)?;
+        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data);
+        Ok(MultiOutcome {
+            values: out.values,
+            report,
+        })
+    }
+}
+
+/// The cached view a query runs against: the zero-copy union of all live
+/// epochs plus the driver-merged global sketch. No executor touches data
+/// here — the merge is driver compute over cached summaries.
+fn query_view(
+    cluster: &mut Cluster,
+    store: &SketchStore,
+    stream: &str,
+) -> Result<(Dataset<Key>, GkCore)> {
+    let state = store
+        .stream(stream)
+        .ok_or_else(|| anyhow::anyhow!("unknown stream '{stream}'"))?;
+    ensure!(
+        state.total_count() > 0,
+        "stream '{stream}' is drained (no live records)"
+    );
+    let data = state.live_dataset()?;
+    let sketch = cluster
+        .driver(|| state.merged_sketch())
+        .ok_or_else(|| anyhow::anyhow!("stream '{stream}' has no cached sketches"))?;
+    Ok((data, sketch))
+}
+
+/// Per-query report: the metrics delta since `base`, shaped like any
+/// algorithm report so the harness prints it uniformly.
+fn delta_report(
+    name: &str,
+    cluster: &Cluster,
+    base: &MetricsMark,
+    clock0: f64,
+    n: u64,
+    data: &Dataset<Key>,
+) -> MetricsReport {
+    let delta = cluster.metrics.since(base);
+    MetricsReport::from_metrics(
+        name,
+        n,
+        data.num_partitions(),
+        cluster.cfg.executors,
+        cluster.elapsed_secs() - clock0,
+        &delta,
+        true,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle_quantile;
+    use crate::cluster::ClusterConfig;
+    use crate::stream::{MicroBatch, StreamIngestor};
+
+    fn ingest_batches(c: &mut Cluster, store: &mut SketchStore, batches: &[Vec<Key>]) {
+        let ing = StreamIngestor::new(0.01).unwrap();
+        for b in batches {
+            ing.ingest(c, store, "s", MicroBatch::new(b.clone())).unwrap();
+        }
+    }
+
+    #[test]
+    fn query_is_exact_and_costs_one_round_one_scan() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let mut store = SketchStore::default();
+        let b0: Vec<Key> = (0..4000).map(|i| (i * 37) % 5000).collect();
+        let b1: Vec<Key> = (0..3000).map(|i| -(i * 13) % 4000).collect();
+        ingest_batches(&mut c, &mut store, &[b0.clone(), b1.clone()]);
+
+        let mut all: Vec<Key> = b0.iter().chain(b1.iter()).copied().collect();
+        all.sort_unstable();
+        let mut q = StreamQuery::new(GkSelectParams::default());
+        for quant in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            let out = q.quantile(&mut c, &store, "s", quant).unwrap();
+            let truth = all[crate::target_rank(all.len() as u64, quant) as usize];
+            assert_eq!(out.value, truth, "q={quant}");
+            assert_eq!(out.report.rounds, 1, "q={quant}: cached sketch → 1 round");
+            assert_eq!(out.report.data_scans, 1, "q={quant}: single fused scan");
+            assert_eq!(out.report.shuffles, 0);
+            assert_eq!(out.report.persists, 0);
+            assert!(out.report.exact);
+        }
+    }
+
+    #[test]
+    fn multi_quantile_shares_the_single_scan() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let mut store = SketchStore::default();
+        let b0: Vec<Key> = (0..2500).map(|i| (i * 7919) % 100_000).collect();
+        let b1: Vec<Key> = (0..2500).map(|i| (i * 104_729) % 100_000).collect();
+        ingest_batches(&mut c, &mut store, &[b0.clone(), b1.clone()]);
+        let data = store.stream("s").unwrap().live_dataset().unwrap();
+
+        let mut q = StreamQuery::new(GkSelectParams::default());
+        let qs = [0.5, 0.95, 0.99];
+        let out = q.quantiles(&mut c, &store, "s", &qs).unwrap();
+        assert_eq!(out.report.rounds, 1);
+        assert_eq!(out.report.data_scans, 1);
+        for (&quant, &v) in qs.iter().zip(out.values.iter()) {
+            assert_eq!(v, oracle_quantile(&data, quant).unwrap(), "q={quant}");
+        }
+    }
+
+    #[test]
+    fn unknown_and_missing_streams_are_recoverable() {
+        let mut c = Cluster::new(ClusterConfig::local(1, 2));
+        let store = SketchStore::default();
+        let mut q = StreamQuery::new(GkSelectParams::default());
+        assert!(q.quantile(&mut c, &store, "nope", 0.5).is_err());
+        assert!(q.quantiles(&mut c, &store, "nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,445 @@
+//! The sketch store: per-stream epoch registry + compaction.
+//!
+//! Every micro-batch a stream ingests is sealed into an [`Epoch`]: the
+//! batch's immutable `Dataset` plus one mergeable [`GkCore`] partial per
+//! partition, built at ingest time. Queries never rebuild sketches — the
+//! store *is* the cache, keyed by stream id × epoch.
+//!
+//! Without compaction the store would hold `K × P` sketch partials after
+//! `K` batches. [`SketchStore::compact`] folds the oldest epochs into
+//! one (datasets merged partition-wise, partials merged with
+//! [`GkCore::merge_with`]), so the live-sketch footprint stays
+//! `O(P/ε)` — independent of how many batches ever arrived — while the
+//! payload data is only ever rewritten, never dropped: queries stay
+//! exact across compactions.
+
+use std::cell::OnceCell;
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::dataset::Dataset;
+use crate::cluster::netmodel::NetSize;
+use crate::sketch::modified::tree_merge;
+use crate::sketch::GkCore;
+use crate::Key;
+
+/// When and how far the store folds old epochs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactionPolicy {
+    /// Live-epoch count that triggers a compaction at the next seal.
+    pub compact_threshold: usize,
+    /// Epochs retained after a compaction (the oldest
+    /// `live − max_live_epochs + 1` fold into one).
+    pub max_live_epochs: usize,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        Self {
+            compact_threshold: 8,
+            max_live_epochs: 4,
+        }
+    }
+}
+
+impl CompactionPolicy {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_live_epochs >= 1, "max_live_epochs must be ≥ 1");
+        ensure!(
+            self.compact_threshold >= self.max_live_epochs,
+            "compact_threshold ({}) below max_live_epochs ({})",
+            self.compact_threshold,
+            self.max_live_epochs
+        );
+        Ok(())
+    }
+}
+
+/// One sealed micro-batch: immutable data + its cached sketch partials.
+#[derive(Debug, Clone)]
+pub struct Epoch {
+    /// Monotone per-stream id (compaction keeps the oldest id of the
+    /// epochs it folds, so ids stay ordered).
+    pub id: u64,
+    /// The batch's records, partitioned like the ingesting cluster.
+    pub data: Dataset<Key>,
+    /// One mergeable GK partial per partition, built at ingest.
+    pub sketches: Vec<GkCore>,
+    /// Records in this epoch.
+    pub count: u64,
+}
+
+impl Epoch {
+    /// Serialized size of the cached partials (store-accounting).
+    pub fn sketch_bytes(&self) -> u64 {
+        self.sketches.iter().map(NetSize::net_bytes).sum()
+    }
+}
+
+/// All live state of one stream.
+#[derive(Debug, Clone)]
+pub struct StreamState {
+    next_epoch: u64,
+    partitions: usize,
+    epochs: Vec<Epoch>,
+    /// Lazily-computed global sketch over all live partials; filled by
+    /// the first query after a seal/compaction, cleared by both. Repeat
+    /// queries between ingests (the serving pattern: p50/p95/p99 every
+    /// tick) pay only the fused scan, not a re-merge.
+    cached_global: OnceCell<GkCore>,
+    /// Compactions performed over the stream's lifetime.
+    pub compactions: u64,
+}
+
+impl StreamState {
+    fn new(partitions: usize) -> Self {
+        Self {
+            next_epoch: 0,
+            partitions,
+            epochs: Vec::new(),
+            cached_global: OnceCell::new(),
+            compactions: 0,
+        }
+    }
+
+    pub fn epochs(&self) -> &[Epoch] {
+        &self.epochs
+    }
+
+    pub fn live_epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Partition count every epoch of this stream carries (pinned at
+    /// first ingest).
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    /// Total records across live epochs.
+    pub fn total_count(&self) -> u64 {
+        self.epochs.iter().map(|e| e.count).sum()
+    }
+
+    /// Cached sketch partials currently held (`live_epochs × partitions`;
+    /// what compaction keeps bounded).
+    pub fn sketch_partials(&self) -> usize {
+        self.epochs.iter().map(|e| e.sketches.len()).sum()
+    }
+
+    /// Serialized size of all cached partials.
+    pub fn sketch_bytes(&self) -> u64 {
+        self.epochs.iter().map(Epoch::sketch_bytes).sum()
+    }
+
+    /// Payload bytes across live epochs.
+    pub fn data_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.data.data_bytes()).sum()
+    }
+
+    /// Store footprint: cached sketches + payload.
+    pub fn store_bytes(&self) -> u64 {
+        self.sketch_bytes() + self.data_bytes()
+    }
+
+    /// Zero-copy union over every live epoch — the dataset a streamed
+    /// query's single fused scan reads.
+    pub fn live_dataset(&self) -> Result<Dataset<Key>> {
+        let views: Vec<Dataset<Key>> = self.epochs.iter().map(|e| e.data.clone()).collect();
+        Dataset::concat(&views)
+    }
+
+    /// Pairwise tree-merge of every cached partial into the global
+    /// sketch — pure driver compute over `O(P/ε)` summaries, **no data
+    /// scan** — memoized until the next seal or compaction. `None` when
+    /// the stream holds no records.
+    pub fn merged_sketch(&self) -> Option<GkCore> {
+        if self.epochs.is_empty() {
+            return None;
+        }
+        let core = self.cached_global.get_or_init(|| {
+            tree_merge(
+                self.epochs
+                    .iter()
+                    .flat_map(|e| e.sketches.iter().cloned())
+                    .collect(),
+            )
+            .expect("nonempty epochs")
+        });
+        (core.count > 0).then(|| core.clone())
+    }
+}
+
+/// Registry of streams: the serving layer's only persistent state.
+#[derive(Debug, Clone, Default)]
+pub struct SketchStore {
+    pub policy: CompactionPolicy,
+    streams: BTreeMap<String, StreamState>,
+}
+
+/// What one compaction moved (the ingest path charges the rewrite as a
+/// persist).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactionStats {
+    /// Epochs folded into one.
+    pub merged_epochs: usize,
+    /// Payload bytes physically rewritten.
+    pub bytes_rewritten: u64,
+    /// Live epochs after the fold.
+    pub live_epochs: usize,
+}
+
+impl SketchStore {
+    pub fn new(policy: CompactionPolicy) -> Result<Self> {
+        policy.validate()?;
+        Ok(Self {
+            policy,
+            streams: BTreeMap::new(),
+        })
+    }
+
+    pub fn stream(&self, id: &str) -> Option<&StreamState> {
+        self.streams.get(id)
+    }
+
+    pub fn stream_ids(&self) -> impl Iterator<Item = &str> {
+        self.streams.keys().map(String::as_str)
+    }
+
+    /// Seal one ingested micro-batch as a new epoch of `stream`,
+    /// creating the stream on first use. The epoch's geometry must match
+    /// the stream's (sketches are per-partition and compaction aligns
+    /// partitions across epochs).
+    pub fn seal_epoch(
+        &mut self,
+        stream: &str,
+        data: Dataset<Key>,
+        sketches: Vec<GkCore>,
+    ) -> Result<u64> {
+        ensure!(
+            data.num_partitions() == sketches.len(),
+            "epoch geometry mismatch: {} partitions vs {} sketches",
+            data.num_partitions(),
+            sketches.len()
+        );
+        let count = data.len();
+        ensure!(count > 0, "cannot seal an empty epoch for stream '{stream}'");
+        let sketched: u64 = sketches.iter().map(|s| s.count).sum();
+        ensure!(
+            sketched == count,
+            "cached sketches cover {sketched} records, epoch holds {count}"
+        );
+        let state = self
+            .streams
+            .entry(stream.to_string())
+            .or_insert_with(|| StreamState::new(data.num_partitions()));
+        ensure!(
+            data.num_partitions() == state.partitions,
+            "stream '{stream}' is partitioned {}-way, batch arrived {}-way",
+            state.partitions,
+            data.num_partitions()
+        );
+        let id = state.next_epoch;
+        state.next_epoch += 1;
+        state.epochs.push(Epoch {
+            id,
+            data,
+            sketches,
+            count,
+        });
+        state.cached_global = OnceCell::new();
+        Ok(id)
+    }
+
+    /// Whether `stream` has crossed the policy's compaction trigger.
+    pub fn needs_compaction(&self, stream: &str) -> bool {
+        self.stream(stream)
+            .map(|s| s.live_epochs() > self.policy.compact_threshold)
+            .unwrap_or(false)
+    }
+
+    /// Fold the oldest epochs of `stream` down to
+    /// `policy.max_live_epochs` live epochs: aligned partitions merge
+    /// physically, cached partials merge with `GkCore::merge_with`.
+    /// Returns `None` when the stream is already at or under the target.
+    /// Pure state transformation — the caller accounts for the data
+    /// rewrite (a persist in the cost model).
+    pub fn compact(&mut self, stream: &str) -> Result<Option<CompactionStats>> {
+        let state = self
+            .streams
+            .get_mut(stream)
+            .ok_or_else(|| anyhow::anyhow!("unknown stream '{stream}'"))?;
+        let target = self.policy.max_live_epochs;
+        if state.epochs.len() <= target {
+            return Ok(None);
+        }
+        let fold = state.epochs.len() - target + 1;
+        let rest = state.epochs.split_off(fold);
+        let old = std::mem::take(&mut state.epochs);
+
+        let views: Vec<&Dataset<Key>> = old.iter().map(|e| &e.data).collect();
+        let data = Dataset::union_partitionwise(&views)?;
+        let bytes_rewritten = data.data_bytes();
+        // per-partition pairwise tree-merge (not a sequential fold): a
+        // fold accumulates merge slack linearly in the number of epochs,
+        // and whatever slack a compaction bakes into the cached partials
+        // is permanent — the tree keeps it logarithmic, same reason
+        // `merged_sketch` trees
+        let mut sketches: Vec<GkCore> = Vec::with_capacity(state.partitions);
+        for p in 0..state.partitions {
+            let merged = tree_merge(old.iter().map(|e| e.sketches[p].clone()).collect())
+                .expect("fold of ≥2 epochs");
+            sketches.push(merged);
+        }
+        let merged = Epoch {
+            id: old[0].id,
+            count: old.iter().map(|e| e.count).sum(),
+            data,
+            sketches,
+        };
+        state.epochs.push(merged);
+        state.epochs.extend(rest);
+        state.cached_global = OnceCell::new();
+        state.compactions += 1;
+        Ok(Some(CompactionStats {
+            merged_epochs: fold,
+            bytes_rewritten,
+            live_epochs: state.epochs.len(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn epoch_inputs(lo: Key, n: usize, p: usize, eps: f64) -> (Dataset<Key>, Vec<GkCore>) {
+        let data = Dataset::from_vec((lo..lo + n as Key).collect(), p).unwrap();
+        let sketches = (0..p)
+            .map(|i| {
+                let mut sorted = data.partition(i).to_vec();
+                sorted.sort_unstable();
+                GkCore::from_sorted(&sorted, eps)
+            })
+            .collect();
+        (data, sketches)
+    }
+
+    #[test]
+    fn seal_assigns_monotone_ids_and_counts() {
+        let mut store = SketchStore::default();
+        let (d, s) = epoch_inputs(0, 100, 4, 0.05);
+        assert_eq!(store.seal_epoch("s", d, s).unwrap(), 0);
+        let (d, s) = epoch_inputs(100, 50, 4, 0.05);
+        assert_eq!(store.seal_epoch("s", d, s).unwrap(), 1);
+        let st = store.stream("s").unwrap();
+        assert_eq!(st.live_epochs(), 2);
+        assert_eq!(st.total_count(), 150);
+        assert_eq!(st.sketch_partials(), 8);
+        assert!(st.sketch_bytes() > 0);
+        assert_eq!(st.data_bytes(), 150 * 4);
+    }
+
+    #[test]
+    fn seal_rejects_geometry_and_count_mismatches() {
+        let mut store = SketchStore::default();
+        let (d, s) = epoch_inputs(0, 100, 4, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        // wrong partition count
+        let (d, s) = epoch_inputs(0, 100, 2, 0.05);
+        assert!(store.seal_epoch("s", d, s).is_err());
+        // sketches not covering the data
+        let (d, _) = epoch_inputs(0, 100, 4, 0.05);
+        let bad = vec![GkCore::new(0.05); 4];
+        assert!(store.seal_epoch("s", d, bad).is_err());
+        // empty epoch is a recoverable error
+        let d = Dataset::from_partitions(vec![vec![], vec![]]).unwrap();
+        assert!(store.seal_epoch("t", d, vec![GkCore::new(0.05); 2]).is_err());
+    }
+
+    #[test]
+    fn live_dataset_and_merged_sketch_cover_all_epochs() {
+        let mut store = SketchStore::default();
+        for b in 0..3 {
+            let (d, s) = epoch_inputs(b * 1000, 300, 3, 0.02);
+            store.seal_epoch("s", d, s).unwrap();
+        }
+        let st = store.stream("s").unwrap();
+        let all = st.live_dataset().unwrap();
+        assert_eq!(all.len(), 900);
+        assert_eq!(all.num_partitions(), 9);
+        let sk = st.merged_sketch().unwrap();
+        assert_eq!(sk.count, 900);
+    }
+
+    #[test]
+    fn compaction_folds_oldest_and_bounds_partials() {
+        let mut store = SketchStore::new(CompactionPolicy {
+            compact_threshold: 4,
+            max_live_epochs: 2,
+        })
+        .unwrap();
+        for b in 0..5 {
+            let (d, s) = epoch_inputs(b * 100, 60, 3, 0.05);
+            store.seal_epoch("s", d, s).unwrap();
+        }
+        assert!(store.needs_compaction("s"));
+        let stats = store.compact("s").unwrap().unwrap();
+        assert_eq!(stats.merged_epochs, 4);
+        assert_eq!(stats.live_epochs, 2);
+        assert_eq!(stats.bytes_rewritten, 4 * 60 * 4);
+        let st = store.stream("s").unwrap();
+        assert_eq!(st.live_epochs(), 2);
+        assert_eq!(st.sketch_partials(), 6);
+        assert_eq!(st.total_count(), 300);
+        assert_eq!(st.compactions, 1);
+        // ids stay ordered: folded epoch keeps the oldest id
+        assert_eq!(st.epochs()[0].id, 0);
+        assert_eq!(st.epochs()[1].id, 4);
+        // data preserved exactly
+        let mut v = st.live_dataset().unwrap().to_vec();
+        v.sort_unstable();
+        let mut want: Vec<Key> = (0..5).flat_map(|b| b * 100..b * 100 + 60).collect();
+        want.sort_unstable();
+        assert_eq!(v, want);
+        // under target: no-op
+        assert!(store.compact("s").unwrap().is_none());
+    }
+
+    #[test]
+    fn merged_sketch_cache_invalidates_on_seal_and_compact() {
+        let mut store = SketchStore::new(CompactionPolicy {
+            compact_threshold: 8,
+            max_live_epochs: 2,
+        })
+        .unwrap();
+        let (d, s) = epoch_inputs(0, 200, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        assert_eq!(store.stream("s").unwrap().merged_sketch().unwrap().count, 200);
+        // a second seal must not serve the stale cached merge
+        let (d, s) = epoch_inputs(200, 100, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        assert_eq!(store.stream("s").unwrap().merged_sketch().unwrap().count, 300);
+        // warm the cache, compact, and the merge must still cover all
+        let (d, s) = epoch_inputs(300, 100, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        let _ = store.stream("s").unwrap().merged_sketch();
+        store.compact("s").unwrap().unwrap();
+        assert_eq!(store.stream("s").unwrap().merged_sketch().unwrap().count, 400);
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(SketchStore::new(CompactionPolicy {
+            compact_threshold: 2,
+            max_live_epochs: 4
+        })
+        .is_err());
+        assert!(SketchStore::new(CompactionPolicy {
+            compact_threshold: 1,
+            max_live_epochs: 0
+        })
+        .is_err());
+    }
+}

@@ -36,7 +36,8 @@ fn empty_partitions_interleaved() {
         vec![3],
         vec![],
         vec![7, 2, 8, 4, 6],
-    ]);
+    ])
+    .unwrap();
     for q in [0.0, 0.5, 1.0] {
         check_exact(&mut gk(0.05, SketchVariant::Bulk), &data, 6, q);
         check_exact(&mut gk(0.05, SketchVariant::Modified), &data, 6, q);
@@ -52,7 +53,7 @@ fn empty_partitions_interleaved() {
 
 #[test]
 fn single_record_per_partition() {
-    let data = Dataset::from_partitions((0..16).map(|i| vec![i * 7 % 13]).collect());
+    let data = Dataset::from_partitions((0..16).map(|i| vec![i * 7 % 13]).collect()).unwrap();
     for q in [0.0, 0.33, 0.5, 1.0] {
         check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 16, q);
         check_exact(&mut Jeffers::new(JeffersParams::default()), &data, 16, q);
@@ -65,7 +66,7 @@ fn i32_extremes_dataset() {
     vals.extend(vec![Key::MAX; 100]);
     vals.extend(vec![0; 100]);
     vals.extend(-50..50);
-    let data = Dataset::from_vec(vals, 8);
+    let data = Dataset::from_vec(vals, 8).unwrap();
     for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
         check_exact(&mut gk(0.02, SketchVariant::Bulk), &data, 8, q);
         check_exact(&mut FullSortQuantile::default(), &data, 8, q);
@@ -83,7 +84,7 @@ fn two_value_distribution() {
     // k lands exactly at the value boundary — exercises the eq-run exit
     let mut vals = vec![1; 5_000];
     vals.extend(vec![2; 5_000]);
-    let data = Dataset::from_vec(vals, 8);
+    let data = Dataset::from_vec(vals, 8).unwrap();
     for q in [0.4999, 0.5, 0.5001] {
         check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 8, q);
     }
@@ -96,7 +97,7 @@ fn severely_skewed_partition_sizes() {
     for i in 0..15 {
         parts.push(vec![i]);
     }
-    let data = Dataset::from_partitions(parts);
+    let data = Dataset::from_partitions(parts).unwrap();
     for q in [0.1, 0.5, 0.9] {
         check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 16, q);
         check_exact(&mut gk(0.01, SketchVariant::Spark), &data, 16, q);
@@ -150,7 +151,7 @@ fn quantile_sweep_dense() {
     // every percentile over a small dataset — catches off-by-one rank
     // conventions
     let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
-    let data = Dataset::from_vec((0..1000).rev().collect::<Vec<Key>>(), 4);
+    let data = Dataset::from_vec((0..1000).rev().collect::<Vec<Key>>(), 4).unwrap();
     let mut alg = gk(0.05, SketchVariant::Bulk);
     for pct in 0..=100 {
         let q = pct as f64 / 100.0;
@@ -162,7 +163,7 @@ fn quantile_sweep_dense() {
 
 #[test]
 fn more_partitions_than_values() {
-    let data = Dataset::from_vec(vec![3, 1, 2], 12);
+    let data = Dataset::from_vec(vec![3, 1, 2], 12).unwrap();
     check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 12, 0.5);
     check_exact(&mut FullSortQuantile::default(), &data, 12, 0.5);
 }

@@ -42,7 +42,7 @@ fn gen_dataset(g: &mut Gen) -> (Cluster, Dataset<Key>, u64) {
     }
     let cluster = Cluster::new(ClusterConfig::local(executors, partitions));
     let len = values.len() as u64;
-    (cluster, Dataset::from_vec(values, partitions), len)
+    (cluster, Dataset::from_vec(values, partitions).unwrap(), len)
 }
 
 fn gen_q(g: &mut Gen) -> f64 {
@@ -115,7 +115,7 @@ fn prop_eq_run_exit_in_two_rounds() {
         let v = g.i32_in(-100, 100);
         let partitions = g.usize_in(1, 8);
         let mut cluster = Cluster::new(ClusterConfig::local(1, partitions));
-        let data = Dataset::from_vec(vec![v; n], partitions);
+        let data = Dataset::from_vec(vec![v; n], partitions).unwrap();
         let q = gen_q(g);
         let mut alg = GkSelect::new(GkSelectParams {
             epsilon: gen_eps(g),

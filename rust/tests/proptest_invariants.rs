@@ -23,7 +23,7 @@ use gkselect::util::propkit::{check, Gen};
 fn gen_dataset(g: &mut Gen) -> (Dataset<i32>, Vec<i32>, usize) {
     let values = g.vec_i32(1, 400, -1000, 1000);
     let p = g.usize_in(2, 8);
-    (Dataset::from_vec(values.clone(), p), values, p)
+    (Dataset::from_vec(values.clone(), p).unwrap(), values, p)
 }
 
 #[test]
@@ -116,7 +116,7 @@ fn prop_shuffle_preserves_multiset_and_ranges() {
         splitters.sort_unstable();
         splitters.dedup();
         let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
-        let data = Dataset::from_vec(values.clone(), 4);
+        let data = Dataset::from_vec(values.clone(), 4).unwrap();
         let routed = shuffle_by_range(&mut cluster, &data, &splitters);
         let mut before = values;
         before.sort_unstable();
@@ -167,7 +167,7 @@ fn prop_dataset_from_vec_is_balanced_partition_of_input() {
     check("dataset_partition", 128, |g| {
         let values = g.vec_i32(1, 500, i32::MIN / 2, i32::MAX / 2);
         let p = g.usize_in(1, 16);
-        let d = Dataset::from_vec(values.clone(), p);
+        let d = Dataset::from_vec(values.clone(), p).unwrap();
         assert_eq!(d.len() as usize, values.len());
         assert_eq!(d.to_vec(), values);
         let sizes = d.partition_sizes();

@@ -68,7 +68,7 @@ fn prop_map_partitions_values_bit_identical() {
     check("pool_map_partitions_identical", 50, |g| {
         let (executors, partitions) = gen_geometry(g);
         let values = gen_values(g);
-        let data = Dataset::from_vec(values, partitions);
+        let data = Dataset::from_vec(values, partitions).unwrap();
         let run = |mode: ExecMode| {
             let mut c = cluster(executors, partitions, mode);
             let pending = c.map_partitions(&data, |part, ctx| {
@@ -91,7 +91,7 @@ fn prop_gk_select_equivalent_across_modes() {
     check("pool_gk_select_equivalent", 30, |g| {
         let (executors, partitions) = gen_geometry(g);
         let values = gen_values(g);
-        let data = Dataset::from_vec(values, partitions);
+        let data = Dataset::from_vec(values, partitions).unwrap();
         let q = g.f64_unit();
         let eps = 0.002 + g.f64_unit() * 0.2;
         // random budget sometimes forces the 3-round fallback so the
@@ -133,7 +133,7 @@ fn emr30_threads_matches_sequential() {
     let values: Vec<Key> = (0..120_000)
         .map(|i| (i * 2_654_435_761_u64 as i64) as Key)
         .collect();
-    let data = Dataset::from_vec(values, 120);
+    let data = Dataset::from_vec(values, 120).unwrap();
     let truth = oracle_quantile(&data, 0.75).unwrap();
     let run = |mode: ExecMode| {
         let mut c = Cluster::new(ClusterConfig::emr(30).with_exec_mode(mode));
@@ -156,7 +156,7 @@ fn prop_multi_select_equivalent_across_modes() {
     check("pool_multi_select_equivalent", 20, |g| {
         let (executors, partitions) = gen_geometry(g);
         let values = gen_values(g);
-        let data = Dataset::from_vec(values, partitions);
+        let data = Dataset::from_vec(values, partitions).unwrap();
         let m = g.usize_in(1, 4);
         let qs: Vec<f64> = (0..m).map(|_| g.f64_unit()).collect();
 

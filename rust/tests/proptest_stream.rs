@@ -1,0 +1,206 @@
+//! Property tests for the streaming quantile service: incremental
+//! ingest-time sketches keep the ε guarantee of a from-scratch sketch,
+//! `StreamQuery` answers are bit-identical to batch `GkSelect` over the
+//! concatenated data in both execution modes, and epoch compaction never
+//! changes an answer.
+
+use gkselect::algorithms::gk_select::{default_candidate_budget, GkSelect, GkSelectParams};
+use gkselect::algorithms::oracle_quantile;
+use gkselect::algorithms::QuantileAlgorithm;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::sketch::GkCore;
+use gkselect::stream::{CompactionPolicy, MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+/// K random micro-batches with per-batch shape drawn from the
+/// acceptance matrix: wide-uniform, duplicate-heavy, sorted, or a
+/// narrow shifted band (the non-stationary case cached sketches hate).
+fn gen_batches(g: &mut Gen) -> Vec<Vec<Key>> {
+    let k = g.usize_in(2, 6);
+    (0..k)
+        .map(|_| {
+            let n = g.usize_in(1, 1500);
+            match g.usize_in(0, 3) {
+                0 => (0..n).map(|_| g.i32_in(-1_000_000, 1_000_000)).collect(),
+                1 => (0..n).map(|_| g.i32_in(0, 8)).collect(),
+                2 => {
+                    let mut v: Vec<Key> =
+                        (0..n).map(|_| g.i32_in(-50_000, 50_000)).collect();
+                    v.sort_unstable();
+                    v
+                }
+                _ => {
+                    let base = g.i32_in(-900_000, 900_000);
+                    (0..n).map(|_| base + g.i32_in(0, 1000)).collect()
+                }
+            }
+        })
+        .collect()
+}
+
+fn gen_q(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 9) {
+        0 => 0.0,
+        1 => 1.0,
+        _ => g.f64_unit(),
+    }
+}
+
+fn ingest_all(
+    cluster: &mut Cluster,
+    store: &mut SketchStore,
+    eps: f64,
+    batches: &[Vec<Key>],
+) {
+    let ing = StreamIngestor::new(eps).unwrap();
+    for b in batches {
+        ing.ingest(cluster, store, "s", MicroBatch::new(b.clone()))
+            .unwrap();
+    }
+}
+
+/// (a) After K random micro-batches the cached incremental sketches,
+/// merged, bracket every true rank — like a from-scratch sketch over the
+/// concatenation — and the open band they would extract stays within the
+/// ε-derived candidate budget (the protocol's definition of "same ε
+/// guarantee": the fused scan keeps its bounded-traffic contract).
+#[test]
+fn prop_incremental_sketches_keep_epsilon_guarantee() {
+    check("incremental_sketch_guarantee", 40, |g| {
+        let executors = g.usize_in(1, 3);
+        let partitions = g.usize_in(executors, executors * 3);
+        let mut cluster = Cluster::new(ClusterConfig::local(executors, partitions));
+        let mut store = SketchStore::default();
+        let eps = 0.005 + g.f64_unit() * 0.1;
+        let batches = gen_batches(g);
+        ingest_all(&mut cluster, &mut store, eps, &batches);
+
+        let mut all: Vec<Key> = batches.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let n = all.len() as u64;
+        let merged = store.stream("s").unwrap().merged_sketch().unwrap();
+        assert_eq!(merged.count, n, "cached partials must cover the stream");
+        let scratch = GkCore::from_sorted(&all, eps);
+
+        for pct in [1u64, 25, 50, 75, 99, 100] {
+            let rank = (pct * n).div_ceil(100).clamp(1, n);
+            let truth = all[(rank - 1) as usize];
+            let (lo, hi) = merged.query_rank_bounds(rank).unwrap();
+            assert!(
+                lo <= truth && truth <= hi,
+                "incremental band [{lo},{hi}] misses x({rank})={truth} (n={n}, eps={eps})"
+            );
+            let (slo, shi) = scratch.query_rank_bounds(rank).unwrap();
+            assert!(slo <= truth && truth <= shi, "scratch band broken");
+            // open-band volume within the ε-derived budget, same contract
+            // the batch path's candidate_volume analysis pins
+            let inner = all
+                .partition_point(|&x| x < hi)
+                .saturating_sub(all.partition_point(|&x| x <= lo));
+            assert!(
+                inner <= default_candidate_budget(eps, n),
+                "open band {inner} exceeds budget {} (n={n}, eps={eps}, K={})",
+                default_candidate_budget(eps, n),
+                batches.len()
+            );
+        }
+    });
+}
+
+/// (b) A streamed query equals batch GK Select over the concatenated
+/// data — bit-identical values, both execution modes, arbitrary
+/// geometries — and never exceeds the fallback cost envelope.
+#[test]
+fn prop_stream_query_matches_batch_gk_select_both_modes() {
+    check("stream_matches_batch", 25, |g| {
+        let batches = gen_batches(g);
+        let q = gen_q(g);
+        let executors = g.usize_in(1, 3);
+        let partitions = g.usize_in(executors, executors * 3);
+        let concat: Vec<Key> = batches.iter().flatten().copied().collect();
+        let mut across_modes: Option<Key> = None;
+
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut cluster =
+                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
+            let mut store = SketchStore::default();
+            ingest_all(&mut cluster, &mut store, 0.01, &batches);
+            let mut engine = StreamQuery::new(GkSelectParams::default());
+            let out = engine.quantile(&mut cluster, &store, "s", q).unwrap();
+
+            let data = Dataset::from_vec(concat.clone(), partitions).unwrap();
+            let mut batch_cluster =
+                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
+            let mut alg = GkSelect::new(GkSelectParams::default());
+            let batch_out = alg.quantile(&mut batch_cluster, &data, q).unwrap();
+
+            assert_eq!(
+                out.value, batch_out.value,
+                "stream vs batch disagree at q={q} ({} batches)",
+                batches.len()
+            );
+            assert_eq!(out.value, oracle_quantile(&data, q).unwrap(), "q={q}");
+            // fast path is 1 round / 1 scan; an out-of-contract band may
+            // cost the one fallback scan, never more
+            assert!(out.report.rounds <= 2, "rounds = {}", out.report.rounds);
+            assert!(out.report.data_scans <= 2);
+            assert_eq!(out.report.shuffles, 0);
+            assert_eq!(out.report.persists, 0);
+            match across_modes {
+                None => across_modes = Some(out.value),
+                Some(v) => assert_eq!(out.value, v, "exec modes disagree at q={q}"),
+            }
+        }
+    });
+}
+
+/// (c) Epoch compaction is invisible to queries: answers before and
+/// after a forced compaction are identical (data is rewritten, never
+/// dropped; merged partials stay in contract or the fallback absorbs
+/// them).
+#[test]
+fn prop_compaction_never_changes_answers() {
+    check("compaction_invariant", 25, |g| {
+        let batches = gen_batches(g);
+        let executors = g.usize_in(1, 2);
+        let partitions = g.usize_in(executors, executors * 3);
+        let mut cluster = Cluster::new(ClusterConfig::local(executors, partitions));
+        // threshold high enough that ingest never auto-compacts: the
+        // test owns the compaction point
+        let mut store = SketchStore::new(CompactionPolicy {
+            compact_threshold: 1000,
+            max_live_epochs: g.usize_in(1, 3),
+        })
+        .unwrap();
+        ingest_all(&mut cluster, &mut store, 0.02, &batches);
+        let total = store.stream("s").unwrap().total_count();
+
+        let qs = [0.0, 0.25, 0.5, 0.9, 1.0];
+        let params = GkSelectParams {
+            epsilon: 0.02,
+            ..Default::default()
+        };
+        let mut engine = StreamQuery::new(params.clone());
+        let before: Vec<Key> = qs
+            .iter()
+            .map(|&q| engine.quantile(&mut cluster, &store, "s", q).unwrap().value)
+            .collect();
+
+        let stats = store.compact("s").unwrap();
+        if batches.len() > store.policy.max_live_epochs {
+            let s = stats.expect("above target ⇒ compaction fires");
+            assert!(s.merged_epochs >= 2);
+            assert_eq!(s.live_epochs, store.policy.max_live_epochs);
+        }
+        assert_eq!(store.stream("s").unwrap().total_count(), total);
+
+        let mut engine = StreamQuery::new(params);
+        let after: Vec<Key> = qs
+            .iter()
+            .map(|&q| engine.quantile(&mut cluster, &store, "s", q).unwrap().value)
+            .collect();
+        assert_eq!(before, after, "compaction changed query answers");
+    });
+}

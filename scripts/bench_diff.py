@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_gk_select.json against the committed baseline.
+
+Two classes of check, per run (keyed by algorithm x exec_mode):
+
+* structural — rounds / data_scans / exact must match the baseline
+  exactly. These are the protocol's shape (fused = 2/2, stream query =
+  1/1, forced fallback = 3/3); any drift is a regression regardless of
+  hardware.
+* performance — band_scan_wall_s must not exceed baseline by more than
+  --max-regress (default 25%) AND --min-delta-s absolute (noise floor);
+  executor_utilization (threads runs) must not drop below baseline by
+  more than --max-regress. Performance checks are skipped per-field when
+  the baseline value sits under the calibration floor (an uncalibrated
+  baseline stores 0.0 there — refresh it from the workflow artifact of a
+  green run to arm them).
+
+Exit code 0 = no regression, 1 = regression, 2 = usage/schema error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_runs(path):
+    with open(path) as f:
+        doc = json.load(f)
+    runs = {}
+    for run in doc.get("runs", []):
+        key = (run.get("algorithm"), run.get("exec_mode"))
+        runs[key] = run
+    if not runs:
+        print(f"error: no runs found in {path}", file=sys.stderr)
+        sys.exit(2)
+    return runs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed relative regression (default 0.25)")
+    ap.add_argument("--min-wall", type=float, default=1e-4,
+                    help="baseline walls under this are uncalibrated; skip")
+    ap.add_argument("--min-delta-s", type=float, default=0.002,
+                    help="absolute wall-regression noise floor, seconds")
+    ap.add_argument("--min-util", type=float, default=0.05,
+                    help="baseline utilizations under this are skipped")
+    args = ap.parse_args()
+
+    base_runs = load_runs(args.baseline)
+    fresh_runs = load_runs(args.fresh)
+
+    failures = []
+    checked = 0
+    for key, base in sorted(base_runs.items()):
+        name = f"{key[0]} [{key[1]}]"
+        fresh = fresh_runs.get(key)
+        if fresh is None:
+            failures.append(f"{name}: run missing from fresh bench")
+            continue
+
+        # structural shape: must match exactly
+        for field in ("rounds", "data_scans", "exact"):
+            if base.get(field) != fresh.get(field):
+                failures.append(
+                    f"{name}: {field} changed {base.get(field)} -> {fresh.get(field)}"
+                )
+            checked += 1
+
+        # band-extract scan wall clock
+        bw, fw = base.get("band_scan_wall_s", 0.0), fresh.get("band_scan_wall_s", 0.0)
+        if bw >= args.min_wall:
+            checked += 1
+            if fw > bw * (1 + args.max_regress) and fw - bw > args.min_delta_s:
+                failures.append(
+                    f"{name}: band_scan_wall_s {bw:.4f}s -> {fw:.4f}s "
+                    f"(+{(fw / bw - 1) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        else:
+            print(f"note: {name}: baseline band_scan_wall_s uncalibrated "
+                  f"({bw}); skipping wall check")
+
+        # pool efficiency (meaningful on threads runs only)
+        bu = base.get("executor_utilization", 0.0)
+        fu = fresh.get("executor_utilization", 0.0)
+        if key[1] == "threads" and bu >= args.min_util:
+            checked += 1
+            if fu < bu * (1 - args.max_regress):
+                failures.append(
+                    f"{name}: executor_utilization {bu:.2f} -> {fu:.2f} "
+                    f"(-{(1 - fu / bu) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif key[1] == "threads":
+            print(f"note: {name}: baseline executor_utilization uncalibrated "
+                  f"({bu}); skipping utilization check")
+
+    for key in sorted(set(fresh_runs) - set(base_runs)):
+        print(f"note: new run {key[0]} [{key[1]}] not in baseline (ok)")
+
+    if failures:
+        print(f"\n{len(failures)} perf-tracking regression(s):")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"\nperf tracking OK: {checked} checks across {len(base_runs)} runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
