@@ -1,7 +1,9 @@
 //! §Perf micro-benches — the executor hot loops the optimization pass
 //! iterates on: pivot counting (native, and PJRT when artifacts exist),
 //! the fused band_extract kernel vs the split count passes it replaces,
-//! Dutch partition, quickselect, histogram, RNG.
+//! the SIMD tile vs the scalar oracle on that same fused scan
+//! (`simd_vs_scalar` family), Dutch partition, quickselect, histogram,
+//! RNG.
 //!
 //! Also emits `BENCH_gk_select.json` (via [`gkselect::harness::write_bench_json`],
 //! shared with `repro bench json`): rounds / data_scans / virtual-clock
@@ -17,7 +19,7 @@
 
 use gkselect::data::pcg::Pcg64;
 use gkselect::harness;
-use gkselect::runtime::{KernelBackend, NativeBackend};
+use gkselect::runtime::{KernelBackend, NativeBackend, SimdPolicy};
 use gkselect::select::{dutch_partition, select_kth, SplitMix64};
 use gkselect::util::benchkit::Bench;
 use gkselect::Key;
@@ -58,6 +60,38 @@ fn main() {
     ];
     bench.run_throughput("multi3_fused_4m", n as u64, || {
         native
+            .multi_band_extract(&xs, &queries, budget)
+            .iter()
+            .map(|e| e.band.inner)
+            .sum::<u64>()
+    });
+
+    // explicit dispatch pins: the SIMD tile vs the scalar oracle on the
+    // same fused scan (the `native` runs above use the ambient
+    // GKSELECT_SIMD policy; these two force each path)
+    let scalar_be = NativeBackend::with_policy(SimdPolicy::ForceScalar);
+    let simd_be = NativeBackend::with_policy(SimdPolicy::ForceSimd);
+    println!(
+        "bench simd_vs_scalar/dispatch = {} (lane width {})",
+        simd_be.dispatch().label(),
+        simd_be.simd_lane_width()
+    );
+    let bench = Bench::new("simd_vs_scalar").samples(20);
+    bench.run_throughput("band_extract_scalar_4m", n as u64, || {
+        scalar_be.band_extract(&xs, 0, lo, hi, budget).band.inner
+    });
+    bench.run_throughput("band_extract_simd_4m", n as u64, || {
+        simd_be.band_extract(&xs, 0, lo, hi, budget).band.inner
+    });
+    bench.run_throughput("multi3_scalar_4m", n as u64, || {
+        scalar_be
+            .multi_band_extract(&xs, &queries, budget)
+            .iter()
+            .map(|e| e.band.inner)
+            .sum::<u64>()
+    });
+    bench.run_throughput("multi3_simd_4m", n as u64, || {
+        simd_be
             .multi_band_extract(&xs, &queries, budget)
             .iter()
             .map(|e| e.band.inner)
@@ -120,6 +154,6 @@ fn main() {
     // (fused vs three-round baseline, plus threads-vs-sequential real
     // wall-clock for the fused band-extract scan — shared implementation
     // with `repro bench json`)
-    harness::write_bench_json(Path::new("."), 4_000_000)
+    harness::write_bench_json(Path::new("."), 4_000_000, SimdPolicy::from_env())
         .expect("writing BENCH_gk_select.json");
 }

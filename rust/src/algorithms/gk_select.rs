@@ -36,7 +36,7 @@
 //! counted, never shipped, so duplicate-heavy data cannot widen it).
 
 use super::approx_quantile::{build_global_sketch, MergeStrategy, SketchVariant};
-use super::{make_report, Outcome, QuantileAlgorithm};
+use super::{make_backend_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
 use crate::runtime::{BandExtract, KernelBackend, NativeBackend};
@@ -92,6 +92,17 @@ pub fn default_candidate_budget(epsilon: f64, n: u64) -> usize {
 
 /// The GK Select driver. Owns the kernel backend used for Round 2's
 /// fused count+extract pass.
+///
+/// ```
+/// use gkselect::prelude::*;
+///
+/// let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+/// let data = Dataset::from_vec((0..1_000).collect(), 4).unwrap();
+/// let mut gk = GkSelect::new(GkSelectParams::default());
+/// let out = gk.quantile(&mut cluster, &data, 0.5).unwrap();
+/// assert_eq!(out.value, 500);      // exact order statistic, not approximate
+/// assert!(out.report.rounds <= 2); // sketch round + fused count/extract round
+/// ```
 pub struct GkSelect {
     pub params: GkSelectParams,
     backend: Box<dyn KernelBackend>,
@@ -114,6 +125,17 @@ impl GkSelect {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Active SIMD lane width of the backend's fused band scan (1 =
+    /// scalar) — stamped onto every report this engine produces.
+    pub fn simd_lane_width(&self) -> usize {
+        self.backend.simd_lane_width()
+    }
+
+    /// [`make_backend_report`] with this engine's name and backend.
+    fn finish(&self, cluster: &Cluster, n: u64, value: Key) -> Outcome {
+        make_backend_report(self.name(), true, cluster, n, value, self.backend.as_ref())
     }
 
     /// The post-sketch fused protocol, given an **already-merged** global
@@ -176,11 +198,11 @@ impl GkSelect {
         let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
         if lt <= k && k < lt + eq {
             // the pivot's own run covers the target — free exit
-            return Ok(make_report(self.name(), true, cluster, n, pivot));
+            return Ok(self.finish(cluster, n, pivot));
         }
         if let Some(value) = cluster.driver(|| resolve_band(&mut merged, lo, hi, k)) {
             // exact answer out of the extracted band
-            return Ok(make_report(self.name(), true, cluster, n, value));
+            return Ok(self.finish(cluster, n, value));
         }
 
         // ---- fallback: classic candidate extraction --------------------
@@ -206,7 +228,7 @@ impl GkSelect {
         let value = value.ok_or_else(|| {
             anyhow::anyhow!("empty candidate slice: Δk={delta}, lt={lt}, eq={eq}, k={k}")
         })?;
-        Ok(make_report(self.name(), true, cluster, n, value))
+        Ok(self.finish(cluster, n, value))
     }
 }
 

@@ -14,7 +14,7 @@
 //! space is `O(bins + band)` instead of `O((P/ε)log(εn/P) + εn)` — the
 //! regime the paper worries about when ε must be tiny.
 
-use super::{make_report, Outcome, QuantileAlgorithm};
+use super::{make_backend_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
 use crate::runtime::{KernelBackend, NativeBackend};
@@ -63,6 +63,11 @@ impl HistogramSelect {
 
     pub fn with_backend(params: HistogramSelectParams, backend: Box<dyn KernelBackend>) -> Self {
         Self { params, backend }
+    }
+
+    /// [`make_backend_report`] with this engine's name and backend.
+    fn finish(&self, cluster: &Cluster, n: u64, value: Key) -> Outcome {
+        make_backend_report(self.name(), true, cluster, n, value, self.backend.as_ref())
     }
 }
 
@@ -145,7 +150,7 @@ impl QuantileAlgorithm for HistogramSelect {
 
         if lo == hi {
             // band collapsed to a single value — it is the answer
-            return Ok(make_report(self.name(), true, cluster, n, lo));
+            return Ok(self.finish(cluster, n, lo));
         }
         if band_count > self.params.extract_cap {
             bail!(
@@ -171,7 +176,7 @@ impl QuantileAlgorithm for HistogramSelect {
             quickselect(&mut band, k as usize, &mut rng);
             band[k as usize]
         });
-        Ok(make_report(self.name(), true, cluster, n, value))
+        Ok(self.finish(cluster, n, value))
     }
 }
 

@@ -23,6 +23,7 @@ pub mod multi_select;
 use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
 use crate::cluster::Cluster;
+use crate::runtime::KernelBackend;
 use crate::Key;
 use anyhow::Result;
 
@@ -65,6 +66,24 @@ pub(crate) fn make_report(
             exact,
         ),
     }
+}
+
+/// [`make_report`] for algorithms that own a kernel backend: also
+/// stamps the backend's active SIMD lane width, so every perf record
+/// says which band-scan dispatch produced it. New backend-owning exit
+/// paths must use this (not `make_report`) or their reports mislabel
+/// the dispatch as scalar.
+pub(crate) fn make_backend_report(
+    name: &str,
+    exact: bool,
+    cluster: &Cluster,
+    n: u64,
+    value: Key,
+    backend: &dyn KernelBackend,
+) -> Outcome {
+    let mut out = make_report(name, exact, cluster, n, value);
+    out.report = out.report.with_simd_lane_width(backend.simd_lane_width());
+    out
 }
 
 /// Ground-truth oracle: exact quantile by full local sort (tests and

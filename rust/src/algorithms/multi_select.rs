@@ -27,7 +27,7 @@ use super::gk_select::{
     default_candidate_budget, pivot_delta, reduce_slices, resolve_band, second_pass,
     GkSelectParams,
 };
-use super::make_report;
+use super::make_backend_report;
 use crate::cluster::dataset::Dataset;
 use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
 use crate::cluster::Cluster;
@@ -83,6 +83,12 @@ impl MultiSelect {
 
     pub fn with_backend(params: GkSelectParams, backend: Box<dyn KernelBackend>) -> Self {
         Self { params, backend }
+    }
+
+    /// Active SIMD lane width of the backend's fused band scan (1 =
+    /// scalar) — stamped onto every report this engine produces.
+    pub fn simd_lane_width(&self) -> usize {
+        self.backend.simd_lane_width()
     }
 
     /// Exact values for every quantile in `qs`, in 2 rounds (3 if any
@@ -199,7 +205,14 @@ impl MultiSelect {
         if values.iter().all(Option::is_some) {
             // all m answers out of the one fused scan — 2 rounds
             let out = values.into_iter().map(|v| v.expect("set")).collect();
-            let rep = make_report("GK Multi-Select", true, cluster, n, 0);
+            let rep = make_backend_report(
+                "GK Multi-Select",
+                true,
+                cluster,
+                n,
+                0,
+                self.backend.as_ref(),
+            );
             return Ok(MultiOutcome {
                 values: out,
                 report: rep.report,
@@ -250,7 +263,8 @@ impl MultiSelect {
             values[i] = Some(v);
         }
 
-        let rep = make_report("GK Multi-Select", true, cluster, n, 0);
+        let rep =
+            make_backend_report("GK Multi-Select", true, cluster, n, 0, self.backend.as_ref());
         Ok(MultiOutcome {
             values: values.into_iter().map(|v| v.expect("set")).collect(),
             report: rep.report,

@@ -207,6 +207,12 @@ pub struct MetricsReport {
     pub executor_utilization: f64,
     /// max busy / mean busy, from [`RunMetrics::busy_skew`].
     pub busy_skew: f64,
+    /// Keys per vector of the kernel backend's band-scan tile (8 = AVX2,
+    /// 4 = SSE2, 1 = scalar or a non-SIMD backend) — so every recorded
+    /// wall time says which dispatch produced it. Algorithms that own a
+    /// kernel backend stamp this via [`Self::with_simd_lane_width`];
+    /// default 1.
+    pub simd_lane_width: u64,
     pub exact: bool,
 }
 
@@ -242,8 +248,16 @@ impl MetricsReport {
             executor_busy_secs: m.executor_busy_secs.clone(),
             executor_utilization: m.executor_utilization(),
             busy_skew: m.busy_skew(),
+            simd_lane_width: 1,
             exact,
         }
+    }
+
+    /// Stamp the kernel backend's active SIMD lane width onto the
+    /// report (builder-style, used by the band-kernel algorithms).
+    pub fn with_simd_lane_width(mut self, lanes: usize) -> Self {
+        self.simd_lane_width = lanes as u64;
+        self
     }
 
     /// One row in the Table V layout.
@@ -391,6 +405,15 @@ mod tests {
         let z = now.since(&now.mark());
         assert_eq!(z.rounds, 0);
         assert!(z.stage_walls.is_empty());
+    }
+
+    #[test]
+    fn report_stamps_simd_lane_width() {
+        let m = RunMetrics::default();
+        let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.simd_lane_width, 1, "default is scalar");
+        let r = r.with_simd_lane_width(8);
+        assert_eq!(r.simd_lane_width, 8);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use crate::cluster::netmodel::NetworkModel;
 use crate::cluster::{ClusterConfig, ExecMode};
+use crate::runtime::{KernelBackend, SimdPolicy};
 use crate::util::minitoml::{self, Document, Section, Value};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -96,6 +97,16 @@ impl StreamSection {
     }
 }
 
+/// Kernel-runtime section.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeSection {
+    /// SIMD dispatch policy for the native backend's fused band scan:
+    /// "auto" | "scalar" | "force". Empty = defer to the `GKSELECT_SIMD`
+    /// env var (unset → auto). See [`crate::runtime::simd`] for the
+    /// dispatch rules.
+    pub simd: String,
+}
+
 /// Fabric section (converted into [`NetworkModel`]).
 #[derive(Debug, Clone)]
 pub struct NetworkSection {
@@ -144,6 +155,7 @@ pub struct ReproConfig {
     pub network: NetworkSection,
     pub algorithm: AlgorithmSection,
     pub stream: StreamSection,
+    pub runtime: RuntimeSection,
     /// Kernel backend: "native" | "pjrt".
     pub backend: String,
     /// Where `make artifacts` put the HLO text.
@@ -157,6 +169,7 @@ impl Default for ReproConfig {
             network: NetworkSection::default(),
             algorithm: AlgorithmSection::default(),
             stream: StreamSection::default(),
+            runtime: RuntimeSection::default(),
             backend: "native".into(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
@@ -180,6 +193,13 @@ impl ReproConfig {
                 .parse::<ExecMode>()
                 .with_context(|| format!("[cluster] exec_mode = {:?}", cfg.cluster.exec_mode))?;
         }
+        if !cfg.runtime.simd.is_empty() {
+            // fail config loading, not the first backend construction
+            cfg.runtime
+                .simd
+                .parse::<SimdPolicy>()
+                .with_context(|| format!("[runtime] simd = {:?}", cfg.runtime.simd))?;
+        }
         Ok(cfg)
     }
 
@@ -190,6 +210,7 @@ impl ReproConfig {
         let network = Section(doc.get("network"));
         let algorithm = Section(doc.get("algorithm"));
         let stream = Section(doc.get("stream"));
+        let runtime = Section(doc.get("runtime"));
         Self {
             cluster: ClusterSection {
                 nodes: cluster.int_or("nodes", d.cluster.nodes as i64) as usize,
@@ -226,6 +247,9 @@ impl ReproConfig {
                     .int_or("max_live_epochs", d.stream.max_live_epochs as i64)
                     as usize,
             },
+            runtime: RuntimeSection {
+                simd: runtime.str_or("simd", &d.runtime.simd),
+            },
             backend: root.str_or("backend", &d.backend),
             artifacts_dir: PathBuf::from(
                 root.str_or("artifacts_dir", d.artifacts_dir.to_str().unwrap_or("artifacts")),
@@ -252,6 +276,25 @@ impl ReproConfig {
                 }
             }
         }
+    }
+
+    /// The effective SIMD dispatch policy: `[runtime] simd` (or the
+    /// `--simd` CLI flag, which writes it) when set, the `GKSELECT_SIMD`
+    /// env var otherwise, `Auto` when neither is given.
+    pub fn simd_policy(&self) -> SimdPolicy {
+        match self.runtime.simd.as_str() {
+            "" => SimdPolicy::from_env(),
+            other => other
+                .parse()
+                .expect("runtime.simd must be 'auto', 'scalar', or 'force'"),
+        }
+    }
+
+    /// Materialize the configured kernel backend (backend name +
+    /// artifacts dir + SIMD policy). The native path never touches the
+    /// artifacts dir, so it cannot fail.
+    pub fn kernel_backend(&self) -> Result<Box<dyn KernelBackend>> {
+        crate::runtime::backend_from_name(&self.backend, &self.artifacts_dir, self.simd_policy())
     }
 
     /// Materialize the cluster description.
@@ -333,6 +376,10 @@ impl ReproConfig {
             "max_live_epochs".into(),
             Value::Int(self.stream.max_live_epochs as i64),
         );
+        if !self.runtime.simd.is_empty() {
+            let r = doc.entry("runtime".into()).or_default();
+            r.insert("simd".into(), Value::Str(self.runtime.simd.clone()));
+        }
         minitoml::serialize(&doc)
     }
 }
@@ -406,6 +453,25 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("stream"));
+    }
+
+    #[test]
+    fn simd_policy_roundtrips_and_materializes() {
+        let mut c = ReproConfig::default();
+        assert_eq!(c.runtime.simd, "");
+        c.runtime.simd = "scalar".into();
+        let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.runtime.simd, "scalar");
+        assert_eq!(back.simd_policy(), SimdPolicy::ForceScalar);
+        let backend = back.kernel_backend().unwrap();
+        assert_eq!(backend.simd_lane_width(), 1);
+        // a bad policy fails at load time with section context
+        let err = ReproConfig::from_toml("[runtime]\nsimd = \"turbo\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("simd"));
+        // force parses and resolves to whatever tile this CPU has
+        let forced = ReproConfig::from_toml("[runtime]\nsimd = \"force\"\n").unwrap();
+        assert_eq!(forced.simd_policy(), SimdPolicy::ForceSimd);
+        assert!(forced.kernel_backend().unwrap().simd_lane_width() >= 1);
     }
 
     #[test]

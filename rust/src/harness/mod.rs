@@ -14,7 +14,7 @@ use crate::cluster::{Cluster, ExecMode};
 use crate::config::ReproConfig;
 use crate::data::Distribution;
 use crate::prelude::*;
-use crate::runtime::backend_from_name;
+use crate::runtime::{SimdDispatch, SimdPolicy};
 use crate::util::benchkit::{write_json, JsonVal};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
@@ -166,13 +166,10 @@ pub fn build_algorithm(cfg: &ReproConfig, choice: AlgoChoice) -> Result<Box<dyn 
                 tree_depth: cfg.algorithm.tree_depth,
                 candidate_budget: None,
             };
-            if cfg.backend == "native" {
-                Box::new(GkSelect::new(params))
-            } else {
-                let backend = backend_from_name(&cfg.backend, &cfg.artifacts_dir)
-                    .context("loading kernel backend (run `make artifacts`?)")?;
-                Box::new(GkSelect::with_backend(params, backend))
-            }
+            let backend = cfg
+                .kernel_backend()
+                .context("loading kernel backend (run `make artifacts`?)")?;
+            Box::new(GkSelect::with_backend(params, backend))
         }
         AlgoChoice::Afs => Box::new(Afs::new(AfsParams {
             seed: cfg.algorithm.seed,
@@ -194,12 +191,8 @@ pub fn build_algorithm(cfg: &ReproConfig, choice: AlgoChoice) -> Result<Box<dyn 
                 seed: cfg.algorithm.seed,
                 ..Default::default()
             };
-            if cfg.backend == "native" {
-                Box::new(HistogramSelect::new(params))
-            } else {
-                let backend = backend_from_name(&cfg.backend, &cfg.artifacts_dir)?;
-                Box::new(HistogramSelect::with_backend(params, backend))
-            }
+            let backend = cfg.kernel_backend()?;
+            Box::new(HistogramSelect::with_backend(params, backend))
         }
     })
 }
@@ -468,19 +461,30 @@ pub fn bench_ablation(cfg: &ReproConfig, n: u64, nodes: usize) -> Result<()> {
     Ok(())
 }
 
-/// Measure this box's per-element costs (scan, sort, sketch insert) and
-/// print a `[cluster]` section with the derived compute_scale.
-pub fn calibrate() -> Result<()> {
-    use crate::runtime::{KernelBackend, NativeBackend};
+/// Measure this box's per-element costs (plain scan, fused band scan,
+/// sort, sketch insert) and print a `[cluster]` section with the
+/// derived compute_scale. The fused band-scan measurement goes through
+/// the configured SIMD policy (`--simd` / `[runtime] simd` /
+/// `GKSELECT_SIMD`), and the printed dispatch line labels exactly that
+/// measurement — `count_pivot` and the sort/sketch costs are not
+/// SIMD-dispatched.
+pub fn calibrate(cfg: &ReproConfig) -> Result<()> {
     let n = 20_000_000usize;
     let mut rng = crate::data::pcg::Pcg64::new(1, 1);
     let data: Vec<crate::Key> = (0..n).map(|_| rng.next_u64() as crate::Key).collect();
 
-    let backend = NativeBackend::new();
+    let backend = NativeBackend::with_policy(cfg.simd_policy());
     let t = Instant::now();
     let counts = backend.count_pivot(&data, 0);
     let scan = t.elapsed().as_secs_f64() / n as f64;
     ensure!(counts.total() == n as u64);
+
+    // the SIMD-dispatched hot path: same geometry as the hotpath bench
+    let span = (u32::MAX as f64 * 0.005) as crate::Key;
+    let t = Instant::now();
+    let ext = backend.band_extract(&data, 0, -span, span, n / 10);
+    let band_scan = t.elapsed().as_secs_f64() / n as f64;
+    ensure!(ext.band.total() == n as u64);
 
     let mut copy = data[..4_000_000].to_vec();
     let t = Instant::now();
@@ -497,6 +501,12 @@ pub fn calibrate() -> Result<()> {
 
     println!("# measured per-element costs on this box");
     println!("scan (count_pivot): {:.2} ns/key", scan * 1e9);
+    println!(
+        "band_extract scan:  {:.2} ns/key  [{} dispatch, lane width {}]",
+        band_scan * 1e9,
+        backend.dispatch().label(),
+        backend.simd_lane_width()
+    );
     println!("local sort:         {:.2} ns/key", sort * 1e9);
     println!("mSGK insert:        {:.2} ns/key", sketch * 1e9);
     // m5.xlarge single-core scan reference ≈ 0.6 ns/key (memory-bound);
@@ -597,18 +607,15 @@ pub fn run_stream(
         tree_depth: cfg.algorithm.tree_depth,
         candidate_budget: None,
     };
-    let mut engine = if cfg.backend == "native" {
-        StreamQuery::new(params)
-    } else {
-        // route the configured kernel backend through both engines, like
-        // every other subcommand (two loads: boxed backends don't clone)
-        StreamQuery::with_backends(
-            params.clone(),
-            backend_from_name(&cfg.backend, &cfg.artifacts_dir)
-                .context("loading kernel backend (run `make artifacts`?)")?,
-            backend_from_name(&cfg.backend, &cfg.artifacts_dir)?,
-        )
-    };
+    // route the configured kernel backend (incl. SIMD policy) through
+    // both engines, like every other subcommand (two loads: boxed
+    // backends don't clone)
+    let mut engine = StreamQuery::with_backends(
+        params.clone(),
+        cfg.kernel_backend()
+            .context("loading kernel backend (run `make artifacts`?)")?,
+        cfg.kernel_backend()?,
+    );
     println!(
         "# streaming replay — {} workload, {batches} batches × {batch_n} records, \
          {} nodes, ε = {}, compaction {}→{}",
@@ -689,13 +696,17 @@ pub fn gk_select_bench_record(
     n: u64,
     budget: Option<usize>,
     mode: ExecMode,
+    simd: SimdPolicy,
 ) -> Result<JsonVal> {
     let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
     let dataset = dist.generator(42).generate(&mut cluster, n);
-    let mut alg = GkSelect::new(GkSelectParams {
-        candidate_budget: budget,
-        ..Default::default()
-    });
+    let mut alg = GkSelect::with_backend(
+        GkSelectParams {
+            candidate_budget: budget,
+            ..Default::default()
+        },
+        Box::new(NativeBackend::with_policy(simd)),
+    );
     let out = alg.quantile(&mut cluster, &dataset, 0.75)?;
     let band_scan_wall = out.report.stage_walls.get(1).copied().unwrap_or(0.0);
     println!(
@@ -737,6 +748,11 @@ pub fn gk_select_bench_record(
             JsonVal::F64(out.report.executor_utilization),
         ),
         ("busy_skew", JsonVal::F64(out.report.busy_skew)),
+        (
+            "simd",
+            JsonVal::Str(SimdDispatch::resolve(simd).label().into()),
+        ),
+        ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
         ("exact", JsonVal::Bool(out.report.exact)),
     ]))
 }
@@ -751,6 +767,7 @@ pub fn stream_query_bench_record(
     n: u64,
     batches: u64,
     mode: ExecMode,
+    simd: SimdPolicy,
 ) -> Result<JsonVal> {
     use crate::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
     let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
@@ -764,7 +781,11 @@ pub fn stream_query_bench_record(
         ingestor.ingest(&mut cluster, &mut store, "bench", MicroBatch::new(values))?;
         ingest_wall += t.elapsed().as_secs_f64();
     }
-    let mut engine = StreamQuery::new(GkSelectParams::default());
+    let mut engine = StreamQuery::with_backends(
+        GkSelectParams::default(),
+        Box::new(NativeBackend::with_policy(simd)),
+        Box::new(NativeBackend::with_policy(simd)),
+    );
     let out = engine.quantile(&mut cluster, &store, "bench", 0.75)?;
     let band_scan_wall = out.report.stage_walls.first().copied().unwrap_or(0.0);
     let state = store.stream("bench").expect("ingested");
@@ -808,10 +829,65 @@ pub fn stream_query_bench_record(
             JsonVal::F64(out.report.executor_utilization),
         ),
         ("busy_skew", JsonVal::F64(out.report.busy_skew)),
+        (
+            "simd",
+            JsonVal::Str(SimdDispatch::resolve(simd).label().into()),
+        ),
+        ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
         ("live_epochs", JsonVal::U64(state.live_epochs() as u64)),
         ("store_bytes", JsonVal::U64(state.store_bytes())),
         ("ingest_wall_s_total", JsonVal::F64(ingest_wall)),
         ("exact", JsonVal::Bool(out.report.exact)),
+    ]))
+}
+
+/// Single-thread fused band-scan throughput, SIMD tile vs the scalar
+/// oracle, on the hotpath bench's geometry (uniform keys, an ε-sized
+/// band around the median pivot, generous budget) → a JSON record. This
+/// is the per-thread scan rate the thread pool multiplies; on AVX2 the
+/// acceptance bar is ≥ 1.5x, and the record degrades gracefully to
+/// `simd_lane_width = 1` (speedup ≈ 1.0) on targets without a tile.
+pub fn simd_vs_scalar_bench_record(n: u64) -> Result<JsonVal> {
+    let mut rng = crate::data::pcg::Pcg64::new(42, 7);
+    let xs: Vec<crate::Key> = (0..n).map(|_| rng.next_u64() as crate::Key).collect();
+    let span = (u32::MAX as f64 * 0.005) as crate::Key;
+    let (pivot, lo, hi) = (0, -span, span);
+    let budget = (n as usize) / 10;
+
+    let scalar = NativeBackend::with_policy(SimdPolicy::ForceScalar);
+    let forced = NativeBackend::with_policy(SimdPolicy::ForceSimd);
+    let best_wall = |b: &NativeBackend| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t = Instant::now();
+            std::hint::black_box(b.band_extract(&xs, pivot, lo, hi, budget));
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let scalar_wall = best_wall(&scalar);
+    let simd_wall = best_wall(&forced);
+    let speedup = scalar_wall / simd_wall.max(1e-12);
+    let dispatch = forced.dispatch();
+    println!(
+        "bench gk_select_simd/simd_vs_scalar       {:<10} scalar {:>7.1} Mkeys/s  \
+         {} (x{}) {:>7.1} Mkeys/s  speedup {:.2}x",
+        "1-thread",
+        n as f64 / scalar_wall / 1e6,
+        dispatch.label(),
+        dispatch.lane_width(),
+        n as f64 / simd_wall / 1e6,
+        speedup,
+    );
+    Ok(JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str("simd_vs_scalar".into())),
+        ("exec_mode", JsonVal::Str("single_thread".into())),
+        ("n", JsonVal::U64(n)),
+        ("simd", JsonVal::Str(dispatch.label().into())),
+        ("simd_lane_width", JsonVal::U64(dispatch.lane_width() as u64)),
+        ("scalar_mkeys_per_s", JsonVal::F64(n as f64 / scalar_wall / 1e6)),
+        ("simd_mkeys_per_s", JsonVal::F64(n as f64 / simd_wall / 1e6)),
+        ("simd_speedup", JsonVal::F64(speedup)),
     ]))
 }
 
@@ -820,17 +896,32 @@ pub fn stream_query_bench_record(
 /// uniform workload (so the file carries modelled *and* real parallel
 /// wall time for the fused band-extract scan on `emr(30)`), and the
 /// seed-shaped three-round baseline.
-pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
+pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
     let records = vec![
         // the fused two-round path, acceptance distributions
-        gk_select_bench_record("fused", Distribution::Uniform, n, None, ExecMode::Sequential)?,
-        gk_select_bench_record("fused_zipf", Distribution::Zipf, n, None, ExecMode::Sequential)?,
+        gk_select_bench_record(
+            "fused",
+            Distribution::Uniform,
+            n,
+            None,
+            ExecMode::Sequential,
+            simd,
+        )?,
+        gk_select_bench_record(
+            "fused_zipf",
+            Distribution::Zipf,
+            n,
+            None,
+            ExecMode::Sequential,
+            simd,
+        )?,
         gk_select_bench_record(
             "fused_bimodal",
             Distribution::Bimodal,
             n,
             None,
             ExecMode::Sequential,
+            simd,
         )?,
         gk_select_bench_record(
             "fused_sorted",
@@ -838,6 +929,7 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
             n,
             None,
             ExecMode::Sequential,
+            simd,
         )?,
         // same workload through the thread pool: real parallel wall-clock
         gk_select_bench_record(
@@ -846,6 +938,7 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
             n,
             None,
             ExecMode::Threads,
+            simd,
         )?,
         // the seed path's round/scan shape, same workload: budget 0 forces
         // the overflow fallback, reproducing the seed's 3 rounds and 3
@@ -861,13 +954,17 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
             n,
             Some(0),
             ExecMode::Sequential,
+            simd,
         )?,
         // the serving hot path: one streamed query after 32 micro-batches
         // — its only data scan is the fused band-extract pass (rounds=1 /
         // scans=1; the sketch work was paid at ingest), sequential and
         // through the thread pool
-        stream_query_bench_record("stream_query", n, 32, ExecMode::Sequential)?,
-        stream_query_bench_record("stream_query_threads", n, 32, ExecMode::Threads)?,
+        stream_query_bench_record("stream_query", n, 32, ExecMode::Sequential, simd)?,
+        stream_query_bench_record("stream_query_threads", n, 32, ExecMode::Threads, simd)?,
+        // the kernel dispatch itself: single-thread band-scan rate of the
+        // SIMD tile vs the scalar oracle (what ExecMode::Threads multiplies)
+        simd_vs_scalar_bench_record(n)?,
     ];
     Ok(JsonVal::obj(vec![
         ("bench", JsonVal::Str("gk_select".into())),
@@ -890,7 +987,12 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
                  stream_query[_threads] measure the serving hot path: one \
                  exact query answered from cached ingest-time sketches \
                  after 32 micro-batches — rounds=1/data_scans=1, the only \
-                 stage being the fused band-extract scan"
+                 stage being the fused band-extract scan. simd_vs_scalar \
+                 pins the kernel dispatch itself: single-thread fused \
+                 band-scan throughput of the explicit SIMD tile (simd / \
+                 simd_lane_width say which tile) against the forced \
+                 scalar oracle on identical data; every other record also \
+                 carries the simd/simd_lane_width it ran with"
                     .into(),
             ),
         ),
@@ -901,10 +1003,10 @@ pub fn gk_select_bench_doc(n: u64) -> Result<JsonVal> {
 /// Emit the `BENCH_*.json` family (today: `BENCH_gk_select.json`) — the
 /// shared implementation behind `repro bench json` and the tail of
 /// `benches/hotpath.rs`.
-pub fn write_bench_json(out_dir: &Path, n: u64) -> Result<()> {
+pub fn write_bench_json(out_dir: &Path, n: u64, simd: SimdPolicy) -> Result<()> {
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating bench output dir {}", out_dir.display()))?;
-    let doc = gk_select_bench_doc(n)?;
+    let doc = gk_select_bench_doc(n, simd)?;
     let path = out_dir.join("BENCH_gk_select.json");
     write_json(&path, &doc).with_context(|| format!("writing {}", path.display()))?;
     println!("wrote {}", path.display());

@@ -72,7 +72,7 @@ pub mod prelude {
     pub use crate::data::{
         BimodalGen, DataGenerator, Distribution, SortedBandsGen, UniformGen, ZipfGen,
     };
-    pub use crate::runtime::{KernelBackend, NativeBackend};
+    pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
     pub use crate::sketch::{
         classical::ClassicalGk, modified::ModifiedGk, spark::SparkGk, QuantileSketch,
     };

@@ -18,7 +18,7 @@
 //! ```
 //!
 //! Global flags: `--config <path>` (TOML), `--backend native|pjrt`,
-//! `--exec-mode sequential|threads`.
+//! `--exec-mode sequential|threads`, `--simd auto|scalar|force`.
 
 use anyhow::{bail, Result};
 use gkselect::config::ReproConfig;
@@ -57,6 +57,8 @@ GLOBAL FLAGS:
   --backend <name>   native | pjrt (pjrt needs `make artifacts`)
   --exec-mode <m>    sequential | threads (real OS-thread executor pool;
                      GKSELECT_EXEC_MODE=threads does the same)
+  --simd <policy>    auto | scalar | force — band-scan SIMD dispatch for
+                     the native backend (GKSELECT_SIMD does the same)
 ";
 
 fn main() -> Result<()> {
@@ -76,12 +78,17 @@ fn main() -> Result<()> {
         let _: gkselect::cluster::ExecMode = m.parse()?;
         cfg.cluster.exec_mode = m.to_string();
     }
+    if let Some(sp) = args.str_opt("simd") {
+        // validated here so a typo fails before any work runs
+        let _: gkselect::runtime::SimdPolicy = sp.parse()?;
+        cfg.runtime.simd = sp.to_string();
+    }
 
     match args.path[0].as_str() {
         "quantile" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "algorithm", "n", "q", "distribution", "nodes",
-                "verify",
+                "config", "backend", "exec-mode", "simd", "algorithm", "n", "q",
+                "distribution", "nodes", "verify",
             ])?;
             let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
             let n = args.u64_or("n", 1_000_000)?;
@@ -97,7 +104,7 @@ fn main() -> Result<()> {
             match which {
                 "fig" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "nodes", "max-exp", "trials",
+                        "config", "backend", "exec-mode", "simd", "nodes", "max-exp", "trials",
                     ])?;
                     harness::bench_fig(
                         &cfg,
@@ -107,7 +114,9 @@ fn main() -> Result<()> {
                     )
                 }
                 "dist" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes", "trials"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "simd", "n", "nodes", "trials",
+                    ])?;
                     harness::bench_dist(
                         &cfg,
                         args.u64_or("n", 100_000_000)?,
@@ -116,11 +125,11 @@ fn main() -> Result<()> {
                     )
                 }
                 "table4" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "nodes"])?;
                     harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
                 }
                 "table5" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "nodes"])?;
                     harness::bench_table5(
                         &cfg,
                         args.u64_or("n", 4_000_000)?,
@@ -128,7 +137,7 @@ fn main() -> Result<()> {
                     )
                 }
                 "ablation" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "n", "nodes"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "nodes"])?;
                     harness::bench_ablation(
                         &cfg,
                         args.u64_or("n", 8_000_000)?,
@@ -136,10 +145,11 @@ fn main() -> Result<()> {
                     )
                 }
                 "json" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "n", "out"])?;
+                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "out"])?;
                     harness::write_bench_json(
                         Path::new(&args.str_or("out", ".")),
                         args.u64_or("n", 4_000_000)?,
+                        cfg.simd_policy(),
                     )
                 }
                 other => bail!("unknown bench '{other}' (fig|dist|table4|table5|ablation|json)"),
@@ -150,6 +160,7 @@ fn main() -> Result<()> {
                 "config",
                 "backend",
                 "exec-mode",
+                "simd",
                 "batches",
                 "batch-n",
                 "workload",
@@ -181,9 +192,12 @@ fn main() -> Result<()> {
                 args.has("verify"),
             )
         }
-        "calibrate" => harness::calibrate(),
+        "calibrate" => {
+            args.ensure_known(&["config", "backend", "exec-mode", "simd"])?;
+            harness::calibrate(&cfg)
+        }
         "validate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "n"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "n"])?;
             harness::validate(&cfg, args.u64_or("n", 200_000)?)
         }
         "config" => {

@@ -7,13 +7,48 @@
 //! duplicate-heavy data (zipf) cannot blow the candidate buffer — the
 //! extracted set is `{x : lo < x < hi}`, whose size the GK invariant
 //! bounds by O(εn) regardless of duplication.
+//!
+//! # Scalar oracle vs SIMD tile
+//!
+//! [`NativeBackend`] carries two interchangeable implementations of the
+//! fused scan and picks one **once, at construction**:
+//!
+//! * the portable scalar tile body ([`BandExtract::tally`] per element,
+//!   run by [`super::simd`]'s shared tile walker) — the authoritative
+//!   oracle, the default on targets without a SIMD tile, and the
+//!   `ForceScalar` pin;
+//! * the explicit SIMD tile in [`super::simd`] — AVX2 (8 × i32) or SSE2
+//!   (4 × i32) via `std::arch`, selected by
+//!   `is_x86_feature_detected!` at runtime, vectorizing the six-counter
+//!   classification with compare + accumulate and compressing the
+//!   open-band mask into the candidate buffer.
+//!
+//! # Dispatch rules
+//!
+//! Resolution happens in [`SimdDispatch::resolve`] from a
+//! [`SimdPolicy`], looked up in this order (first hit wins):
+//!
+//! 1. `--simd auto|scalar|force` on the `repro` CLI;
+//! 2. `[runtime] simd = "..."` in repro.toml;
+//! 3. the `GKSELECT_SIMD` environment variable (the CI pin);
+//! 4. default: `Auto` — the widest tile this CPU supports.
+//!
+//! Both paths are bit-identical — counts, candidate order, overflow
+//! points (the budget is checked at the same [`BAND_CHUNK`] tile
+//! boundaries) — property-tested in `tests/proptest_simd.rs` and pinned
+//! by the `GKSELECT_SIMD={scalar,force}` CI matrix. The active lane
+//! width is reported through [`KernelBackend::simd_lane_width`] into
+//! `MetricsReport` and the `BENCH_gk_select.json` records.
 
+use super::simd::{self, SimdDispatch, SimdPolicy};
 use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
 use crate::Key;
 
 /// Keys per tile of the fused scan: counts vectorize within a tile while
-/// the (rare) extraction appends stay L1-resident.
-const BAND_CHUNK: usize = 4096;
+/// the (rare) extraction appends stay L1-resident. The scalar and SIMD
+/// paths share this constant so candidate-budget overflow trips at the
+/// same point in the stream on both.
+pub const BAND_CHUNK: usize = 4096;
 
 /// Three-way pivot classification counts (lt, eq, gt).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -174,6 +209,17 @@ pub trait KernelBackend: Sync {
     /// one pass (requires `lo ≤ hi`). At most `budget` candidates are
     /// collected; past that the pass keeps counting but stops extracting
     /// and sets `overflow`.
+    ///
+    /// ```
+    /// use gkselect::runtime::{KernelBackend, NativeBackend};
+    ///
+    /// let backend = NativeBackend::new();
+    /// let e = backend.band_extract(&[1, 2, 3, 4, 5, 6], 4, 2, 5, 16);
+    /// assert_eq!((e.pivot.lt, e.pivot.eq, e.pivot.gt), (3, 1, 2));
+    /// assert_eq!(e.band.inner, 2);          // {3, 4} lie in the open band (2, 5)
+    /// assert_eq!(e.candidates, vec![3, 4]); // extracted in data order
+    /// assert!(!e.overflow);
+    /// ```
     fn band_extract(&self, data: &[Key], pivot: Key, lo: Key, hi: Key, budget: usize)
         -> BandExtract;
 
@@ -195,16 +241,57 @@ pub trait KernelBackend: Sync {
 
     /// Backend label for reports.
     fn name(&self) -> &'static str;
+
+    /// Keys per vector of the active band-scan tile; 1 = scalar. The
+    /// value lands in `MetricsReport::simd_lane_width` and the
+    /// `BENCH_gk_select.json` records so perf numbers always say which
+    /// path produced them.
+    fn simd_lane_width(&self) -> usize {
+        1
+    }
 }
 
 /// Plain-rust reference backend (also the fastest on this CPU-only box —
-/// see EXPERIMENTS.md §Perf for the measured comparison).
-#[derive(Debug, Default, Clone)]
-pub struct NativeBackend;
+/// see EXPERIMENTS.md §Perf for the measured comparison). Holds the
+/// SIMD dispatch decision, resolved once at construction — the module
+/// docs above list the dispatch rules.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    policy: SimdPolicy,
+    dispatch: SimdDispatch,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl NativeBackend {
+    /// Backend with the ambient policy: `GKSELECT_SIMD` if set, `Auto`
+    /// otherwise. Config/CLI overrides construct via
+    /// [`Self::with_policy`] instead.
     pub fn new() -> Self {
-        Self
+        Self::with_policy(SimdPolicy::from_env())
+    }
+
+    /// Backend with an explicit dispatch policy (resolved against this
+    /// CPU immediately; no per-call feature detection).
+    pub fn with_policy(policy: SimdPolicy) -> Self {
+        Self {
+            policy,
+            dispatch: SimdDispatch::resolve(policy),
+        }
+    }
+
+    /// The policy this backend was built with.
+    pub fn policy(&self) -> SimdPolicy {
+        self.policy
+    }
+
+    /// The resolved implementation the fused scans actually run.
+    pub fn dispatch(&self) -> SimdDispatch {
+        self.dispatch
     }
 }
 
@@ -265,34 +352,10 @@ impl KernelBackend for NativeBackend {
         hi: Key,
         budget: usize,
     ) -> BandExtract {
-        debug_assert!(lo <= hi, "band [{lo}, {hi}] inverted");
-        let mut out = BandExtract {
-            candidates: Vec::with_capacity(budget.min(data.len())),
-            ..Default::default()
-        };
-        for chunk in data.chunks(BAND_CHUNK) {
-            if out.overflow {
-                // count-only tile loop: counts must stay complete for the
-                // eq-run exit and the fallback Δk even past the budget
-                for &v in chunk {
-                    let in_band = out.tally(v, pivot, lo, hi);
-                    out.band.inner += u64::from(in_band);
-                }
-            } else {
-                for &v in chunk {
-                    if out.tally(v, pivot, lo, hi) {
-                        out.band.inner += 1;
-                        out.candidates.push(v);
-                    }
-                }
-                if out.candidates.len() > budget {
-                    out.overflow = true;
-                    out.candidates = Vec::new();
-                }
-            }
-        }
-        out.finalize(data.len() as u64, lo, hi);
-        out
+        // one driver for every dispatch: with `Scalar` the tile body is
+        // the shared `tally` loop, so the oracle and the SIMD tile can
+        // never disagree on tiling, budget boundaries, or finalize
+        simd::band_extract(self.dispatch, data, pivot, lo, hi, budget)
     }
 
     /// One read of `data` serving every query: the m-way classification
@@ -304,46 +367,15 @@ impl KernelBackend for NativeBackend {
         queries: &[(Key, Key, Key)],
         budget: usize,
     ) -> Vec<BandExtract> {
-        debug_assert!(
-            queries.iter().all(|&(_, lo, hi)| lo <= hi),
-            "inverted band in {queries:?}"
-        );
-        let mut outs: Vec<BandExtract> = queries
-            .iter()
-            .map(|_| BandExtract::default())
-            .collect();
-        for chunk in data.chunks(BAND_CHUNK) {
-            for (out, &(pivot, lo, hi)) in outs.iter_mut().zip(queries) {
-                if out.overflow {
-                    // count-only tile loop, mirroring band_extract: no
-                    // per-element budget branch once the query overflowed
-                    for &v in chunk {
-                        let in_band = out.tally(v, pivot, lo, hi);
-                        out.band.inner += u64::from(in_band);
-                    }
-                } else {
-                    for &v in chunk {
-                        if out.tally(v, pivot, lo, hi) {
-                            out.band.inner += 1;
-                            out.candidates.push(v);
-                        }
-                    }
-                    if out.candidates.len() > budget {
-                        out.overflow = true;
-                        out.candidates = Vec::new();
-                    }
-                }
-            }
-        }
-        let n = data.len() as u64;
-        for (out, &(_, lo, hi)) in outs.iter_mut().zip(queries) {
-            out.finalize(n, lo, hi);
-        }
-        outs
+        simd::multi_band_extract(self.dispatch, data, queries, budget)
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn simd_lane_width(&self) -> usize {
+        self.dispatch.lane_width()
     }
 }
 
@@ -522,6 +554,114 @@ mod tests {
         let b = NativeBackend::new();
         let got = b.band_extract(&[], 0, -5, 5, 10);
         assert_eq!(got, BandExtract::default());
+    }
+
+    /// Both dispatch pins, so every edge case below is pinned on the
+    /// scalar oracle AND the SIMD tile (which degrades to scalar on
+    /// targets without one — the assertions still hold).
+    fn pinned_backends() -> [(&'static str, NativeBackend); 2] {
+        [
+            ("scalar", NativeBackend::with_policy(SimdPolicy::ForceScalar)),
+            ("simd", NativeBackend::with_policy(SimdPolicy::ForceSimd)),
+        ]
+    }
+
+    #[test]
+    fn edge_empty_partition_both_paths() {
+        for (label, b) in pinned_backends() {
+            assert_eq!(b.band_extract(&[], 0, -5, 5, 10), BandExtract::default(), "{label}");
+            let multi = b.multi_band_extract(&[], &[(0, -5, 5), (1, 1, 1)], 10);
+            assert_eq!(multi, vec![BandExtract::default(); 2], "{label}");
+        }
+    }
+
+    #[test]
+    fn edge_zero_budget_both_paths() {
+        let data: Vec<Key> = (0..1000).collect();
+        for (label, b) in pinned_backends() {
+            let got = b.band_extract(&data, 500, 100, 900, 0);
+            // one in-band element already exceeds budget 0 → overflow,
+            // candidates dropped, every count still complete
+            assert!(got.overflow, "{label}");
+            assert!(got.candidates.is_empty(), "{label}");
+            assert_eq!(got.band.inner, 799, "{label}");
+            assert_eq!(got.band.total(), 1000, "{label}");
+            assert_eq!(got.pivot.total(), 1000, "{label}");
+        }
+    }
+
+    #[test]
+    fn edge_pivot_outside_data_range_both_paths() {
+        let data: Vec<Key> = (0..500).collect();
+        for (label, b) in pinned_backends() {
+            // pivot and band entirely above the data
+            let hi_side = b.band_extract(&data, 10_000, 9_000, 11_000, 64);
+            assert_eq!(hi_side.pivot, PivotCounts { lt: 500, eq: 0, gt: 0 }, "{label}");
+            assert_eq!(hi_side.band.below, 500, "{label}");
+            assert_eq!(hi_side.band.inner, 0, "{label}");
+            assert!(hi_side.candidates.is_empty() && !hi_side.overflow, "{label}");
+            // pivot below the data, band straddling its low edge
+            let lo_side = b.band_extract(&data, -7, -10, 3, 64);
+            assert_eq!(lo_side.pivot, PivotCounts { lt: 0, eq: 0, gt: 500 }, "{label}");
+            assert_eq!(lo_side.band.inner, 3, "{label}"); // {0, 1, 2}
+            assert_eq!(lo_side.candidates, vec![0, 1, 2], "{label}");
+        }
+    }
+
+    #[test]
+    fn edge_collapsed_band_both_paths() {
+        // lo == hi == pivot: the endpoint counters would alias; eq_hi is
+        // normalized to 0 and nothing is ever extracted
+        let data = vec![1, 2, 2, 2, 3];
+        for (label, b) in pinned_backends() {
+            let got = b.band_extract(&data, 2, 2, 2, 100);
+            assert_eq!(got.band.below, 1, "{label}");
+            assert_eq!(got.band.eq_lo, 3, "{label}");
+            assert_eq!(got.band.eq_hi, 0, "{label}");
+            assert_eq!(got.band.inner, 0, "{label}");
+            assert_eq!(got.band.above, 1, "{label}");
+            assert!(got.candidates.is_empty() && !got.overflow, "{label}");
+            assert_eq!(got.pivot, PivotCounts { lt: 1, eq: 3, gt: 1 }, "{label}");
+        }
+    }
+
+    #[test]
+    fn edge_duplicate_saturated_zipf_both_paths() {
+        use crate::data::{DataGenerator, ZipfGen};
+        let mut data: Vec<Key> = Vec::new();
+        ZipfGen::new(7, 2.5).fill_partition(0, 1, 30_000, &mut data);
+        let (pivot, lo, hi) = {
+            let (mut lo, mut hi) = (data[0], data[0]);
+            for &v in &data {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            (data[0], lo, hi)
+        };
+        for (label, b) in pinned_backends() {
+            let got = b.band_extract(&data, pivot, lo, hi, usize::MAX);
+            let (pc, bs, mut cands) = band_oracle(&data, pivot, lo, hi);
+            assert_eq!(got.pivot, pc, "{label}");
+            assert_eq!(got.band, bs, "{label}");
+            let mut got_c = got.candidates.clone();
+            got_c.sort_unstable();
+            cands.sort_unstable();
+            assert_eq!(got_c, cands, "{label}");
+            // endpoint runs are counted, never extracted: the heavy
+            // hitters at the band edges cannot blow the buffer
+            assert_eq!(got.band.total(), 30_000, "{label}");
+        }
+    }
+
+    #[test]
+    fn simd_lane_width_is_reported() {
+        let scalar = NativeBackend::with_policy(SimdPolicy::ForceScalar);
+        assert_eq!(scalar.simd_lane_width(), 1);
+        assert_eq!(scalar.policy(), SimdPolicy::ForceScalar);
+        let forced = NativeBackend::with_policy(SimdPolicy::ForceSimd);
+        assert_eq!(forced.simd_lane_width(), forced.dispatch().lane_width());
+        #[cfg(target_arch = "x86_64")]
+        assert!(forced.simd_lane_width() >= 4);
     }
 
     #[test]

@@ -10,29 +10,38 @@
 //! * [`PjrtBackend`] — streams partitions through the compiled
 //!   executables `BUF_LEN` keys at a time (static HLO shapes; the live
 //!   prefix length travels in the `valid` scalar).
-//! * [`NativeBackend`] — plain rust loops, bit-identical results; the
+//! * [`NativeBackend`] — native rust, bit-identical results; the
 //!   correctness oracle for the PJRT path and the perf comparison point
 //!   (interpret-mode Pallas on CPU is a correctness vehicle, not a speed
-//!   one — DESIGN.md §Perf).
+//!   one — DESIGN.md §Perf). Its fused band scan carries an explicit
+//!   SIMD tile (AVX2/SSE2) behind runtime dispatch — see [`simd`].
 
 pub mod kernels;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 
 pub use kernels::{BandCounts, BandExtract, BandStats, KernelBackend, NativeBackend, PivotCounts};
 pub use manifest::Manifest;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use simd::{SimdDispatch, SimdPolicy};
 
 use anyhow::Result;
 use std::path::Path;
 
 /// Pick a backend by name ("native" or "pjrt"), loading artifacts from
-/// `dir` for the pjrt path.
-pub fn backend_from_name(name: &str, dir: &Path) -> Result<Box<dyn KernelBackend>> {
+/// `dir` for the pjrt path. `simd` governs the native backend's
+/// band-scan dispatch (see [`simd`]); the PJRT path ignores it — its
+/// vectorization happens in XLA.
+pub fn backend_from_name(
+    name: &str,
+    dir: &Path,
+    simd: SimdPolicy,
+) -> Result<Box<dyn KernelBackend>> {
     match name {
-        "native" => Ok(Box::new(NativeBackend::new())),
+        "native" => Ok(Box::new(NativeBackend::with_policy(simd))),
         #[cfg(feature = "pjrt")]
         "pjrt" => Ok(Box::new(PjrtBackend::load(dir)?)),
         #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,517 @@
+//! Explicit SIMD tile for the fused band-extract scan, with runtime
+//! dispatch.
+//!
+//! GK Select's entire executor-side cost is one linear pass per
+//! partition, so the per-element throughput of
+//! [`super::KernelBackend::band_extract`] bounds everything the paper's
+//! 10.5x claim rests on. The portable loops in [`super::kernels`] lean
+//! on autovectorization, which survives the count-only tiles but dies at
+//! the data-dependent candidate append. This module vectorizes the whole
+//! classification explicitly:
+//!
+//! * **six-counter classification** — each lane is compared against the
+//!   broadcast `pivot`, `lo`, and `hi` (`v < π`, `v == π`, `v < lo`,
+//!   `v == lo`, `v == hi`, `lo < v < hi`); compare masks accumulate into
+//!   per-lane i32 counters (`acc -= mask`, since true is −1), summed
+//!   horizontally once per 4096-key tile. No popcount in the inner loop.
+//! * **bitmask-compress extraction** — only when a tile is still under
+//!   the candidate budget, the open-band mask is `movemask`ed to one bit
+//!   per lane and the (rare) set bits are walked LSB-first, appending
+//!   candidates in data order — bit-identical to the scalar append.
+//!
+//! Three dispatch targets, resolved once at backend construction by
+//! [`SimdDispatch::resolve`]:
+//!
+//! | target | lanes | availability |
+//! |---|---|---|
+//! | AVX2   | 8 × i32 | `is_x86_feature_detected!("avx2")` |
+//! | SSE2   | 4 × i32 | any `x86_64` (baseline feature) |
+//! | scalar | 1       | everywhere — the authoritative oracle |
+//!
+//! [`SimdPolicy`] picks between them: `Auto` takes the widest available
+//! tile, `ForceScalar` pins the portable oracle, `ForceSimd` pins the
+//! SIMD tile (degrading to scalar where no tile exists, e.g. non-x86).
+//! CI runs the whole suite under both pins via the `GKSELECT_SIMD`
+//! environment variable; `[runtime] simd` in repro.toml and the `--simd`
+//! CLI flag override it per run. `proptest_simd` asserts the tile and
+//! the oracle are bit-identical — counts, candidate order, overflow
+//! points — across random geometries including unaligned tails and
+//! partitions smaller than one vector.
+//!
+//! Budget semantics are shared with the scalar path by construction:
+//! both walk the same [`BAND_CHUNK`]-key tiles and check the candidate
+//! budget at the same tile boundaries, so an overflow flips to the
+//! count-only loop at exactly the same point in the stream. Tail
+//! elements (and the whole tile on non-SIMD targets) go through
+//! [`BandExtract::tally`] — the same per-element classification the
+//! scalar backend runs — so the arithmetic exists in exactly one place.
+//!
+//! [`BAND_CHUNK`]: super::kernels::BAND_CHUNK
+
+use super::kernels::{BandExtract, BAND_CHUNK};
+use crate::Key;
+
+// The intrinsics below hard-code 32-bit lanes; a Key width change must
+// revisit this module.
+const _: () = assert!(std::mem::size_of::<Key>() == 4, "SIMD tile assumes 32-bit keys");
+
+/// How the native backend picks its band-extract implementation.
+///
+/// ```
+/// use gkselect::runtime::{KernelBackend, NativeBackend, SimdPolicy};
+///
+/// let scalar = NativeBackend::with_policy(SimdPolicy::ForceScalar);
+/// assert_eq!(scalar.simd_lane_width(), 1);
+/// // Auto resolves to the widest tile this CPU offers (8 on AVX2,
+/// // 4 on pre-AVX2 x86_64, 1 elsewhere)
+/// let auto = NativeBackend::with_policy(SimdPolicy::Auto);
+/// assert!(auto.simd_lane_width() >= 1);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdPolicy {
+    /// Use the widest SIMD tile the CPU supports (scalar where none).
+    #[default]
+    Auto,
+    /// Pin the portable scalar path — the correctness oracle, and the
+    /// CI leg that keeps it honest.
+    ForceScalar,
+    /// Pin the SIMD tile; degrades to scalar (lane width 1) on targets
+    /// without one, so forcing is always safe.
+    ForceSimd,
+}
+
+impl SimdPolicy {
+    /// Policy requested by the `GKSELECT_SIMD` environment variable
+    /// (`auto` | `scalar` | `force`; unset → `Auto`). This is the CI
+    /// toggle that re-runs the whole suite under each dispatch pin.
+    pub fn from_env() -> Self {
+        match std::env::var("GKSELECT_SIMD") {
+            Ok(v) if v.is_empty() => SimdPolicy::Auto,
+            Ok(v) => v
+                .parse()
+                .expect("GKSELECT_SIMD must be 'auto', 'scalar', or 'force'"),
+            Err(_) => SimdPolicy::Auto,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::ForceScalar => "scalar",
+            SimdPolicy::ForceSimd => "force",
+        }
+    }
+}
+
+impl std::str::FromStr for SimdPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "scalar" | "force-scalar" => Ok(Self::ForceScalar),
+            "force" | "simd" | "force-simd" => Ok(Self::ForceSimd),
+            other => anyhow::bail!("unknown simd policy '{other}' (auto|scalar|force)"),
+        }
+    }
+}
+
+/// The resolved implementation a backend actually runs — one probe at
+/// construction, no per-call feature detection on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdDispatch {
+    /// Portable loops ([`super::kernels`]), the authoritative oracle.
+    Scalar,
+    /// 4 × i32 tile — x86_64 baseline, no runtime probe needed.
+    Sse2,
+    /// 8 × i32 tile behind `is_x86_feature_detected!("avx2")`.
+    Avx2,
+}
+
+impl SimdDispatch {
+    /// Resolve a policy against this CPU.
+    pub fn resolve(policy: SimdPolicy) -> Self {
+        match policy {
+            SimdPolicy::ForceScalar => Self::Scalar,
+            SimdPolicy::Auto | SimdPolicy::ForceSimd => Self::best_available(),
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn best_available() -> Self {
+        if is_x86_feature_detected!("avx2") {
+            Self::Avx2
+        } else {
+            Self::Sse2
+        }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn best_available() -> Self {
+        Self::Scalar
+    }
+
+    /// Keys per vector of the active tile; 1 = scalar.
+    pub fn lane_width(self) -> usize {
+        match self {
+            Self::Scalar => 1,
+            Self::Sse2 => 4,
+            Self::Avx2 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Sse2 => "sse2",
+            Self::Avx2 => "avx2",
+        }
+    }
+
+    /// Classify one tile (≤ [`BAND_CHUNK`] keys) into `out`'s counters
+    /// and, when `extracting`, append the open-band values to
+    /// `out.candidates` in data order. Never touches `out.pivot.gt` /
+    /// `out.band.above` — those are derived by `finalize`.
+    fn classify_chunk(
+        self,
+        chunk: &[Key],
+        pivot: Key,
+        lo: Key,
+        hi: Key,
+        out: &mut BandExtract,
+        extracting: bool,
+    ) {
+        match self {
+            Self::Scalar => classify_chunk_scalar(chunk, pivot, lo, hi, out, extracting),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Sse2 is an x86_64 baseline feature; Avx2 is only
+            // ever constructed after `is_x86_feature_detected!("avx2")`
+            // succeeded in `best_available`.
+            Self::Sse2 => unsafe {
+                x86::classify_chunk_sse2(chunk, pivot, lo, hi, out, extracting)
+            },
+            #[cfg(target_arch = "x86_64")]
+            Self::Avx2 => unsafe {
+                x86::classify_chunk_avx2(chunk, pivot, lo, hi, out, extracting)
+            },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => classify_chunk_scalar(chunk, pivot, lo, hi, out, extracting),
+        }
+    }
+}
+
+/// Scalar tile body — the SIMD kernels' tail loop and the non-x86
+/// fallback. Runs [`BandExtract::tally`] per element, exactly like the
+/// scalar backend's loops, so the classification arithmetic lives in
+/// one place only.
+fn classify_chunk_scalar(
+    chunk: &[Key],
+    pivot: Key,
+    lo: Key,
+    hi: Key,
+    out: &mut BandExtract,
+    extracting: bool,
+) {
+    if extracting {
+        for &v in chunk {
+            if out.tally(v, pivot, lo, hi) {
+                out.band.inner += 1;
+                out.candidates.push(v);
+            }
+        }
+    } else {
+        for &v in chunk {
+            let in_band = out.tally(v, pivot, lo, hi);
+            out.band.inner += u64::from(in_band);
+        }
+    }
+}
+
+/// The fused single-query scan through the resolved tile. Semantics
+/// (counts, candidate order, overflow points) are bit-identical to the
+/// scalar `NativeBackend` path — asserted by `proptest_simd`.
+pub(crate) fn band_extract(
+    dispatch: SimdDispatch,
+    data: &[Key],
+    pivot: Key,
+    lo: Key,
+    hi: Key,
+    budget: usize,
+) -> BandExtract {
+    debug_assert!(lo <= hi, "band [{lo}, {hi}] inverted");
+    let mut out = BandExtract {
+        candidates: Vec::with_capacity(budget.min(data.len())),
+        ..Default::default()
+    };
+    for chunk in data.chunks(BAND_CHUNK) {
+        let extracting = !out.overflow;
+        dispatch.classify_chunk(chunk, pivot, lo, hi, &mut out, extracting);
+        if extracting && out.candidates.len() > budget {
+            out.overflow = true;
+            out.candidates = Vec::new();
+        }
+    }
+    out.finalize(data.len() as u64, lo, hi);
+    out
+}
+
+/// The batched multi-query scan: one read of `data` serving every
+/// `(pivot, lo, hi)` triple, tile by tile, mirroring the scalar
+/// `multi_band_extract` (including its per-query overflow points).
+pub(crate) fn multi_band_extract(
+    dispatch: SimdDispatch,
+    data: &[Key],
+    queries: &[(Key, Key, Key)],
+    budget: usize,
+) -> Vec<BandExtract> {
+    debug_assert!(
+        queries.iter().all(|&(_, lo, hi)| lo <= hi),
+        "inverted band in {queries:?}"
+    );
+    let mut outs: Vec<BandExtract> = queries.iter().map(|_| BandExtract::default()).collect();
+    for chunk in data.chunks(BAND_CHUNK) {
+        for (out, &(pivot, lo, hi)) in outs.iter_mut().zip(queries) {
+            let extracting = !out.overflow;
+            dispatch.classify_chunk(chunk, pivot, lo, hi, out, extracting);
+            if extracting && out.candidates.len() > budget {
+                out.overflow = true;
+                out.candidates = Vec::new();
+            }
+        }
+    }
+    let n = data.len() as u64;
+    for (out, &(_, lo, hi)) in outs.iter_mut().zip(queries) {
+        out.finalize(n, lo, hi);
+    }
+    outs
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The x86_64 tiles. Compare masks are all-ones on true, so
+    //! `acc = sub(acc, mask)` counts matches per lane; one horizontal
+    //! sum per tile (≤ 4096 keys ⇒ per-lane counts ≤ 1024 < i32::MAX)
+    //! moves them into the output counters. The sub-vector tail of each
+    //! tile goes through `classify_chunk_scalar`, i.e. the shared
+    //! `BandExtract::tally` arithmetic.
+
+    use super::{classify_chunk_scalar, BandExtract};
+    use crate::Key;
+    use std::arch::x86_64::*;
+
+    /// The six vector-accumulated counters of one tile, merged into the
+    /// running [`BandExtract`] in one place (the vector counterpart of
+    /// `PivotCounts::add`/`BandStats::add`).
+    struct ChunkTally {
+        lt_pivot: u64,
+        eq_pivot: u64,
+        below_lo: u64,
+        eq_lo: u64,
+        eq_hi: u64,
+        inner: u64,
+    }
+
+    impl ChunkTally {
+        fn apply(self, out: &mut BandExtract) {
+            out.pivot.lt += self.lt_pivot;
+            out.pivot.eq += self.eq_pivot;
+            out.band.below += self.below_lo;
+            out.band.eq_lo += self.eq_lo;
+            out.band.eq_hi += self.eq_hi;
+            out.band.inner += self.inner;
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32_256(v: __m256i) -> u64 {
+        let mut buf = [0i32; 8];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v);
+        buf.iter().map(|&x| x as u64).sum()
+    }
+
+    #[inline]
+    unsafe fn hsum_epi32_128(v: __m128i) -> u64 {
+        let mut buf = [0i32; 4];
+        _mm_storeu_si128(buf.as_mut_ptr() as *mut __m128i, v);
+        buf.iter().map(|&x| x as u64).sum()
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (`SimdDispatch::resolve`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn classify_chunk_avx2(
+        chunk: &[Key],
+        pivot: Key,
+        lo: Key,
+        hi: Key,
+        out: &mut BandExtract,
+        extracting: bool,
+    ) {
+        const LANES: usize = 8;
+        let n = chunk.len();
+        let ptr = chunk.as_ptr();
+        let pv = _mm256_set1_epi32(pivot);
+        let lov = _mm256_set1_epi32(lo);
+        let hiv = _mm256_set1_epi32(hi);
+        let mut acc_lt = _mm256_setzero_si256();
+        let mut acc_eq = _mm256_setzero_si256();
+        let mut acc_below = _mm256_setzero_si256();
+        let mut acc_eqlo = _mm256_setzero_si256();
+        let mut acc_eqhi = _mm256_setzero_si256();
+        let mut acc_inner = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let v = _mm256_loadu_si256(ptr.add(i) as *const __m256i);
+            let lt = _mm256_cmpgt_epi32(pv, v); // v < pivot (signed)
+            let eq = _mm256_cmpeq_epi32(v, pv);
+            let below = _mm256_cmpgt_epi32(lov, v); // v < lo
+            let eqlo = _mm256_cmpeq_epi32(v, lov);
+            let eqhi = _mm256_cmpeq_epi32(v, hiv);
+            let inner = _mm256_and_si256(
+                _mm256_cmpgt_epi32(v, lov), // v > lo
+                _mm256_cmpgt_epi32(hiv, v), // v < hi
+            );
+            acc_lt = _mm256_sub_epi32(acc_lt, lt);
+            acc_eq = _mm256_sub_epi32(acc_eq, eq);
+            acc_below = _mm256_sub_epi32(acc_below, below);
+            acc_eqlo = _mm256_sub_epi32(acc_eqlo, eqlo);
+            acc_eqhi = _mm256_sub_epi32(acc_eqhi, eqhi);
+            acc_inner = _mm256_sub_epi32(acc_inner, inner);
+            if extracting {
+                // bitmask-compress: one bit per lane, walked LSB-first
+                // so candidates land in data order
+                let mut m = _mm256_movemask_ps(_mm256_castsi256_ps(inner)) as u32;
+                while m != 0 {
+                    let j = m.trailing_zeros() as usize;
+                    out.candidates.push(*ptr.add(i + j));
+                    m &= m - 1;
+                }
+            }
+            i += LANES;
+        }
+        ChunkTally {
+            lt_pivot: hsum_epi32_256(acc_lt),
+            eq_pivot: hsum_epi32_256(acc_eq),
+            below_lo: hsum_epi32_256(acc_below),
+            eq_lo: hsum_epi32_256(acc_eqlo),
+            eq_hi: hsum_epi32_256(acc_eqhi),
+            inner: hsum_epi32_256(acc_inner),
+        }
+        .apply(out);
+        // unaligned tail: the shared tally arithmetic, same append order
+        classify_chunk_scalar(&chunk[i..], pivot, lo, hi, out, extracting);
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86_64 baseline; callers only need the raw
+    /// loads to stay in-bounds, which the `i + LANES <= n` guard gives.
+    pub(super) unsafe fn classify_chunk_sse2(
+        chunk: &[Key],
+        pivot: Key,
+        lo: Key,
+        hi: Key,
+        out: &mut BandExtract,
+        extracting: bool,
+    ) {
+        const LANES: usize = 4;
+        let n = chunk.len();
+        let ptr = chunk.as_ptr();
+        let pv = _mm_set1_epi32(pivot);
+        let lov = _mm_set1_epi32(lo);
+        let hiv = _mm_set1_epi32(hi);
+        let mut acc_lt = _mm_setzero_si128();
+        let mut acc_eq = _mm_setzero_si128();
+        let mut acc_below = _mm_setzero_si128();
+        let mut acc_eqlo = _mm_setzero_si128();
+        let mut acc_eqhi = _mm_setzero_si128();
+        let mut acc_inner = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let v = _mm_loadu_si128(ptr.add(i) as *const __m128i);
+            let lt = _mm_cmpgt_epi32(pv, v);
+            let eq = _mm_cmpeq_epi32(v, pv);
+            let below = _mm_cmpgt_epi32(lov, v);
+            let eqlo = _mm_cmpeq_epi32(v, lov);
+            let eqhi = _mm_cmpeq_epi32(v, hiv);
+            let inner = _mm_and_si128(_mm_cmpgt_epi32(v, lov), _mm_cmpgt_epi32(hiv, v));
+            acc_lt = _mm_sub_epi32(acc_lt, lt);
+            acc_eq = _mm_sub_epi32(acc_eq, eq);
+            acc_below = _mm_sub_epi32(acc_below, below);
+            acc_eqlo = _mm_sub_epi32(acc_eqlo, eqlo);
+            acc_eqhi = _mm_sub_epi32(acc_eqhi, eqhi);
+            acc_inner = _mm_sub_epi32(acc_inner, inner);
+            if extracting {
+                let mut m = _mm_movemask_ps(_mm_castsi128_ps(inner)) as u32;
+                while m != 0 {
+                    let j = m.trailing_zeros() as usize;
+                    out.candidates.push(*ptr.add(i + j));
+                    m &= m - 1;
+                }
+            }
+            i += LANES;
+        }
+        ChunkTally {
+            lt_pivot: hsum_epi32_128(acc_lt),
+            eq_pivot: hsum_epi32_128(acc_eq),
+            below_lo: hsum_epi32_128(acc_below),
+            eq_lo: hsum_epi32_128(acc_eqlo),
+            eq_hi: hsum_epi32_128(acc_eqhi),
+            inner: hsum_epi32_128(acc_inner),
+        }
+        .apply(out);
+        classify_chunk_scalar(&chunk[i..], pivot, lo, hi, out, extracting);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_labels() {
+        assert_eq!("auto".parse::<SimdPolicy>().unwrap(), SimdPolicy::Auto);
+        assert_eq!("scalar".parse::<SimdPolicy>().unwrap(), SimdPolicy::ForceScalar);
+        assert_eq!("force".parse::<SimdPolicy>().unwrap(), SimdPolicy::ForceSimd);
+        assert_eq!("simd".parse::<SimdPolicy>().unwrap(), SimdPolicy::ForceSimd);
+        assert!("turbo".parse::<SimdPolicy>().is_err());
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+        assert_eq!(SimdPolicy::ForceSimd.label(), "force");
+    }
+
+    #[test]
+    fn dispatch_resolution_is_sane() {
+        assert_eq!(SimdDispatch::resolve(SimdPolicy::ForceScalar), SimdDispatch::Scalar);
+        let auto = SimdDispatch::resolve(SimdPolicy::Auto);
+        let forced = SimdDispatch::resolve(SimdPolicy::ForceSimd);
+        // Auto and ForceSimd agree: both take the widest available tile
+        assert_eq!(auto, forced);
+        assert!(auto.lane_width() >= 1);
+        #[cfg(target_arch = "x86_64")]
+        assert!(auto.lane_width() >= 4, "x86_64 always has the SSE2 tile");
+        assert_eq!(SimdDispatch::Scalar.lane_width(), 1);
+        assert_eq!(SimdDispatch::Avx2.lane_width(), 8);
+        assert_eq!(SimdDispatch::Sse2.label(), "sse2");
+    }
+
+    #[test]
+    fn classify_chunk_matches_scalar_for_every_available_tile() {
+        // direct tile-level check on a deliberately awkward length (not
+        // a multiple of any lane width); the backend-level equivalence
+        // lives in tests/proptest_simd.rs
+        let dispatches = [
+            SimdDispatch::Scalar,
+            SimdDispatch::resolve(SimdPolicy::ForceSimd),
+        ];
+        let data: Vec<Key> = (0..1037).map(|i| (i * 37 % 101) - 50).collect();
+        let mut oracle = BandExtract::default();
+        classify_chunk_scalar(&data, 0, -10, 10, &mut oracle, true);
+        for d in dispatches {
+            let mut got = BandExtract::default();
+            d.classify_chunk(&data, 0, -10, 10, &mut got, true);
+            assert_eq!(got, oracle, "{d:?}");
+            assert_eq!(got.candidates.len() as u64, got.band.inner, "{d:?}");
+            let expect: Vec<Key> = data.iter().copied().filter(|&v| v > -10 && v < 10).collect();
+            assert_eq!(got.candidates, expect, "{d:?}: candidates must keep data order");
+        }
+    }
+}

@@ -36,6 +36,32 @@
 //! classic extraction fallback — a stale or hostile sketch costs one
 //! extra scan, never correctness.
 //!
+//! # Example
+//!
+//! Ingest two micro-batches, then answer an exact median from the
+//! cached sketches — one round, one data scan:
+//!
+//! ```
+//! use gkselect::prelude::*;
+//!
+//! let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+//! let mut store = SketchStore::default();
+//! let ingestor = StreamIngestor::new(0.01).unwrap();
+//!
+//! // each ingest scans only its own batch (1 round / 1 scan)
+//! let batch: Vec<i32> = (0..600).collect();
+//! ingestor.ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch)).unwrap();
+//! let batch: Vec<i32> = (600..1_000).collect();
+//! ingestor.ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch)).unwrap();
+//!
+//! // the query tree-merges cached partials (no scan) and pays one
+//! // fused band-extract pass over the live epochs
+//! let mut engine = StreamQuery::new(GkSelectParams::default());
+//! let out = engine.quantile(&mut cluster, &store, "s", 0.5).unwrap();
+//! assert_eq!(out.value, 500); // exact over all 1000 live records
+//! assert_eq!((out.report.rounds, out.report.data_scans), (1, 1));
+//! ```
+//!
 //! [`GkCore`]: crate::sketch::GkCore
 //! [`GkSelect::select_with_sketch`]: crate::algorithms::gk_select::GkSelect::select_with_sketch
 //! [`MultiSelect`]: crate::algorithms::multi_select::MultiSelect

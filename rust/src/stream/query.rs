@@ -80,7 +80,8 @@ impl StreamQuery {
         let clock0 = cluster.elapsed_secs();
         let (data, sketch) = query_view(cluster, store, stream)?;
         let out = self.select.select_with_sketch(cluster, &data, &sketch, q)?;
-        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data);
+        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data)
+            .with_simd_lane_width(self.select.simd_lane_width());
         Ok(Outcome {
             value: out.value,
             report,
@@ -103,7 +104,8 @@ impl StreamQuery {
         let out = self
             .multi
             .quantiles_with_sketch(cluster, &data, &sketch, qs)?;
-        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data);
+        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data)
+            .with_simd_lane_width(self.multi.simd_lane_width());
         Ok(MultiOutcome {
             values: out.values,
             report,

@@ -1,0 +1,229 @@
+//! SIMD ≡ scalar: the explicit band-extract tile (`runtime/simd.rs`)
+//! must be **bit-identical** to the portable scalar oracle — counts,
+//! candidate sets *in data order*, and overflow points (the budget is
+//! checked at the same 4096-key tile boundaries) — across random
+//! geometries including unaligned tails, partitions smaller than one
+//! vector, collapsed bands, and budgets that trip mid-stream. On
+//! targets without a SIMD tile `ForceSimd` degrades to scalar and the
+//! properties hold trivially.
+//!
+//! End-to-end, `GkSelect` / `MultiSelect` / `StreamQuery` answers and
+//! round/scan shapes must not depend on the dispatch, in both executor
+//! modes.
+
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::multi_select::MultiSelect;
+use gkselect::algorithms::{oracle_quantile, QuantileAlgorithm};
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::runtime::{KernelBackend, NativeBackend, SimdPolicy};
+use gkselect::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+fn backends() -> (NativeBackend, NativeBackend) {
+    (
+        NativeBackend::with_policy(SimdPolicy::ForceScalar),
+        NativeBackend::with_policy(SimdPolicy::ForceSimd),
+    )
+}
+
+/// Random scan geometry. Sizes deliberately straddle the lane widths
+/// (4/8) and the 4096-key tile; values switch between a wide domain
+/// (sparse bands) and a tiny one (duplicate-saturated, endpoint runs).
+fn gen_geometry(g: &mut Gen) -> (Vec<Key>, Key, Key, Key) {
+    let n = match g.usize_in(0, 5) {
+        0 => g.usize_in(0, 7),           // below one AVX2 vector
+        1 => g.usize_in(8, 64),          // a few vectors + tail
+        2 => g.usize_in(65, 4_095),      // sub-tile, unaligned
+        3 => 4_096,                      // exactly one tile
+        4 => g.usize_in(4_097, 12_000),  // multiple tiles + tail
+        _ => g.usize_in(1, 300),
+    };
+    let (vlo, vhi) = if g.bool() {
+        (-1_000_000_000, 999_999_999)
+    } else {
+        (-40, 40) // duplicate-heavy: every comparison class is populated
+    };
+    let data: Vec<Key> = (0..n).map(|_| g.i32_in(vlo, vhi)).collect();
+    // pivot and band may sit inside, at the edge of, or entirely outside
+    // the data range
+    let pivot = g.i32_in(vlo - 50, vhi + 50);
+    let mut lo = g.i32_in(vlo - 50, vhi + 50);
+    let mut hi = g.i32_in(vlo - 50, vhi + 50);
+    if lo > hi {
+        std::mem::swap(&mut lo, &mut hi);
+    }
+    if g.usize_in(0, 4) == 0 {
+        hi = lo; // collapsed band
+    }
+    (data, pivot, lo, hi)
+}
+
+fn gen_budget(g: &mut Gen) -> usize {
+    match g.usize_in(0, 3) {
+        0 => 0,                       // overflow on the first candidate
+        1 => g.usize_in(1, 64),       // trips mid-stream
+        2 => g.usize_in(65, 6_000),   // may trip at a tile boundary
+        _ => usize::MAX,              // never trips
+    }
+}
+
+#[test]
+fn prop_band_extract_bit_identical() {
+    check("band_extract_simd_bit_identical", 150, |g| {
+        let (scalar, simd) = backends();
+        let (data, pivot, lo, hi) = gen_geometry(g);
+        let budget = gen_budget(g);
+        let a = scalar.band_extract(&data, pivot, lo, hi, budget);
+        let b = simd.band_extract(&data, pivot, lo, hi, budget);
+        // full structural equality: counts, candidates in data order,
+        // overflow flag
+        assert_eq!(
+            a, b,
+            "dispatch {} vs scalar at n={} pivot={pivot} band=[{lo},{hi}] budget={budget}",
+            simd.dispatch().label(),
+            data.len()
+        );
+        assert_eq!(a.band.total(), data.len() as u64);
+        assert_eq!(a.pivot.total(), data.len() as u64);
+    });
+}
+
+#[test]
+fn prop_multi_band_extract_bit_identical() {
+    check("multi_band_extract_simd_bit_identical", 80, |g| {
+        let (scalar, simd) = backends();
+        let (data, _, _, _) = gen_geometry(g);
+        let m = g.usize_in(1, 4);
+        let mut queries = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (_, pivot, lo, hi) = gen_geometry(g);
+            queries.push((pivot, lo, hi));
+        }
+        let budget = gen_budget(g);
+        let a = scalar.multi_band_extract(&data, &queries, budget);
+        let b = simd.multi_band_extract(&data, &queries, budget);
+        assert_eq!(
+            a,
+            b,
+            "dispatch {} vs scalar, {m} queries over n={}",
+            simd.dispatch().label(),
+            data.len()
+        );
+    });
+}
+
+#[test]
+fn prop_gk_select_answers_unchanged_both_exec_modes() {
+    check("gk_select_simd_end_to_end", 20, |g| {
+        let executors = g.usize_in(1, 3);
+        let partitions = g.usize_in(executors, executors * 3);
+        let n = g.usize_in(1, 3_000);
+        let values: Vec<Key> = (0..n).map(|_| g.i32_in(-100_000, 100_000)).collect();
+        let q = g.f64_unit();
+        let eps = 0.001 + g.f64_unit() * 0.2;
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut cluster =
+                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
+            let data = Dataset::from_vec(values.clone(), partitions).unwrap();
+            let (scalar, simd) = backends();
+            let params = GkSelectParams {
+                epsilon: eps,
+                ..Default::default()
+            };
+            let mut a = GkSelect::with_backend(params.clone(), Box::new(scalar));
+            let mut b = GkSelect::with_backend(params, Box::new(simd));
+            let oa = a.quantile(&mut cluster, &data, q).unwrap();
+            let ob = b.quantile(&mut cluster, &data, q).unwrap();
+            assert_eq!(oa.value, ob.value, "mode {mode:?} q={q} eps={eps}");
+            assert_eq!(oa.value, oracle_quantile(&data, q).unwrap());
+            // identical protocol shape: the dispatch may not change
+            // rounds, scans, or the overflow/fallback decision
+            assert_eq!(oa.report.rounds, ob.report.rounds);
+            assert_eq!(oa.report.data_scans, ob.report.data_scans);
+            assert_eq!(oa.report.network_volume_bytes, ob.report.network_volume_bytes);
+        }
+    });
+}
+
+#[test]
+fn prop_multi_select_answers_unchanged_both_exec_modes() {
+    check("multi_select_simd_end_to_end", 12, |g| {
+        let partitions = g.usize_in(2, 6);
+        let n = g.usize_in(2, 2_000);
+        let values: Vec<Key> = (0..n).map(|_| g.i32_in(-5_000, 5_000)).collect();
+        let qs: Vec<f64> = (0..g.usize_in(1, 4)).map(|_| g.f64_unit()).collect();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut cluster =
+                Cluster::new(ClusterConfig::local(2, partitions).with_exec_mode(mode));
+            let data = Dataset::from_vec(values.clone(), partitions).unwrap();
+            let (scalar, simd) = backends();
+            let mut a = MultiSelect::with_backend(GkSelectParams::default(), Box::new(scalar));
+            let mut b = MultiSelect::with_backend(GkSelectParams::default(), Box::new(simd));
+            let oa = a.quantiles(&mut cluster, &data, &qs).unwrap();
+            let ob = b.quantiles(&mut cluster, &data, &qs).unwrap();
+            assert_eq!(oa.values, ob.values, "mode {mode:?}");
+            assert_eq!(oa.report.rounds, ob.report.rounds);
+            assert_eq!(oa.report.data_scans, ob.report.data_scans);
+            for (&q, &v) in qs.iter().zip(oa.values.iter()) {
+                assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stream_query_answers_unchanged_both_exec_modes() {
+    check("stream_query_simd_end_to_end", 10, |g| {
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut cluster = Cluster::new(ClusterConfig::local(2, 4).with_exec_mode(mode));
+            let mut store = SketchStore::default();
+            let ingestor = StreamIngestor::new(0.01).unwrap();
+            for _ in 0..g.usize_in(2, 4) {
+                let len = g.usize_in(1, 800);
+                let batch: Vec<Key> = (0..len).map(|_| g.i32_in(-50_000, 50_000)).collect();
+                ingestor
+                    .ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch))
+                    .unwrap();
+            }
+            let q = g.f64_unit();
+            let (scalar, simd) = backends();
+            let mut ea = StreamQuery::with_backends(
+                GkSelectParams::default(),
+                Box::new(scalar.clone()),
+                Box::new(scalar),
+            );
+            let mut eb = StreamQuery::with_backends(
+                GkSelectParams::default(),
+                Box::new(simd.clone()),
+                Box::new(simd),
+            );
+            let oa = ea.quantile(&mut cluster, &store, "s", q).unwrap();
+            let ob = eb.quantile(&mut cluster, &store, "s", q).unwrap();
+            assert_eq!(oa.value, ob.value, "mode {mode:?} q={q}");
+            assert_eq!(oa.report.rounds, ob.report.rounds);
+            assert_eq!(oa.report.data_scans, ob.report.data_scans);
+            let data = store.stream("s").unwrap().live_dataset().unwrap();
+            assert_eq!(oa.value, oracle_quantile(&data, q).unwrap());
+        }
+    });
+}
+
+/// The lane width every report carries must reflect the forced policy.
+#[test]
+fn reports_carry_the_forced_lane_width() {
+    let (scalar, simd) = backends();
+    let expect_scalar = scalar.simd_lane_width();
+    let expect_simd = simd.simd_lane_width();
+    assert_eq!(expect_scalar, 1);
+    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+    let data = Dataset::from_vec((0..5_000).collect(), 4).unwrap();
+    let mut a = GkSelect::with_backend(GkSelectParams::default(), Box::new(scalar));
+    let mut b = GkSelect::with_backend(GkSelectParams::default(), Box::new(simd));
+    let oa = a.quantile(&mut cluster, &data, 0.5).unwrap();
+    let ob = b.quantile(&mut cluster, &data, 0.5).unwrap();
+    assert_eq!(oa.report.simd_lane_width, 1);
+    assert_eq!(ob.report.simd_lane_width, expect_simd as u64);
+    assert_eq!(oa.value, ob.value);
+}

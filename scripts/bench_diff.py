@@ -10,12 +10,44 @@ Two classes of check, per run (keyed by algorithm x exec_mode):
 * performance — band_scan_wall_s must not exceed baseline by more than
   --max-regress (default 25%) AND --min-delta-s absolute (noise floor);
   executor_utilization (threads runs) must not drop below baseline by
-  more than --max-regress. Performance checks are skipped per-field when
-  the baseline value sits under the calibration floor (an uncalibrated
-  baseline stores 0.0 there — refresh it from the workflow artifact of a
-  green run to arm them).
+  more than --max-regress; simd_speedup (the simd_vs_scalar record) must
+  not drop below baseline by more than --max-regress. Performance checks
+  are skipped per-field when the baseline value sits under the
+  calibration floor (an uncalibrated baseline stores 0.0 there).
+
+Schema evolution: a key that exists in the fresh JSON but not in the
+baseline is *not yet tracked* — reported as a note, never a failure —
+so newly added record fields (e.g. `simd` / `simd_lane_width`) don't
+break the perf-tracking job on the first run against an old baseline.
+The reverse direction IS a failure: a tracked baseline key that the
+fresh JSON silently omits means the emitter regressed.
 
 Exit code 0 = no regression, 1 = regression, 2 = usage/schema error.
+
+Calibration workflow (ROADMAP "Calibrate the perf-tracking baseline")
+---------------------------------------------------------------------
+
+The committed baseline pins the structural shape on day one but carries
+`"calibrated": false` with zeroed walls, because wall-clock numbers are
+only comparable within one runner class. To arm the 25% gates:
+
+1. Let the CI `perf-tracking` job run green on the target runner class.
+   It regenerates the JSON (`repro bench json --n 4000000`) and uploads
+   it as the `BENCH_gk_select` workflow artifact.
+2. Download that artifact and commit it as `BENCH_gk_select.json` at the
+   repo root (optionally add `"calibrated": true` and a short note for
+   provenance — the checker keys off the per-field floors, not the
+   flag).
+3. From then on this script enforces, per (algorithm, exec_mode) run:
+   - band_scan_wall_s: fresh ≤ baseline × (1 + --max-regress), with the
+     --min-delta-s absolute noise floor (floor: --min-wall);
+   - executor_utilization on threads runs: fresh ≥ baseline ×
+     (1 − --max-regress) (floor: --min-util);
+   - simd_speedup on the simd_vs_scalar record: fresh ≥ baseline ×
+     (1 − --max-regress) (floor: --min-speedup), guarding the SIMD
+     tile's ≥1.5x single-thread win on AVX2 runners.
+   Re-calibrate (repeat 1–2) whenever the runner class or the bench
+   geometry changes; walls from different hardware are not comparable.
 """
 
 import argparse
@@ -48,6 +80,8 @@ def main():
                     help="absolute wall-regression noise floor, seconds")
     ap.add_argument("--min-util", type=float, default=0.05,
                     help="baseline utilizations under this are skipped")
+    ap.add_argument("--min-speedup", type=float, default=1.05,
+                    help="baseline simd speedups under this are skipped")
     args = ap.parse_args()
 
     base_runs = load_runs(args.baseline)
@@ -62,11 +96,23 @@ def main():
             failures.append(f"{name}: run missing from fresh bench")
             continue
 
-        # structural shape: must match exactly
+        # structural shape: must match exactly where the baseline tracks
+        # it; a field the baseline doesn't carry yet is a note, not a
+        # failure (old baseline, new emitter)
         for field in ("rounds", "data_scans", "exact"):
-            if base.get(field) != fresh.get(field):
+            if field not in base:
+                print(f"note: {name}: {field} not yet tracked by baseline; "
+                      f"skipping")
+                continue
+            if field not in fresh:
                 failures.append(
-                    f"{name}: {field} changed {base.get(field)} -> {fresh.get(field)}"
+                    f"{name}: {field} missing from fresh bench "
+                    f"(baseline tracks {base.get(field)})"
+                )
+                continue
+            if base[field] != fresh[field]:
+                failures.append(
+                    f"{name}: {field} changed {base[field]} -> {fresh[field]}"
                 )
             checked += 1
 
@@ -74,12 +120,17 @@ def main():
         bw, fw = base.get("band_scan_wall_s", 0.0), fresh.get("band_scan_wall_s", 0.0)
         if bw >= args.min_wall:
             checked += 1
-            if fw > bw * (1 + args.max_regress) and fw - bw > args.min_delta_s:
+            if "band_scan_wall_s" not in fresh:
+                failures.append(
+                    f"{name}: band_scan_wall_s missing from fresh bench "
+                    f"(baseline tracks {bw:.4f}s)"
+                )
+            elif fw > bw * (1 + args.max_regress) and fw - bw > args.min_delta_s:
                 failures.append(
                     f"{name}: band_scan_wall_s {bw:.4f}s -> {fw:.4f}s "
                     f"(+{(fw / bw - 1) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
                 )
-        else:
+        elif "band_scan_wall_s" in base:
             print(f"note: {name}: baseline band_scan_wall_s uncalibrated "
                   f"({bw}); skipping wall check")
 
@@ -96,6 +147,20 @@ def main():
         elif key[1] == "threads":
             print(f"note: {name}: baseline executor_utilization uncalibrated "
                   f"({bu}); skipping utilization check")
+
+        # SIMD tile throughput win (the simd_vs_scalar record only)
+        bs = base.get("simd_speedup", 0.0)
+        fs = fresh.get("simd_speedup", 0.0)
+        if bs >= args.min_speedup:
+            checked += 1
+            if fs < bs * (1 - args.max_regress):
+                failures.append(
+                    f"{name}: simd_speedup {bs:.2f}x -> {fs:.2f}x "
+                    f"(-{(1 - fs / bs) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif "simd_speedup" in base:
+            print(f"note: {name}: baseline simd_speedup uncalibrated "
+                  f"({bs}); skipping speedup check")
 
     for key in sorted(set(fresh_runs) - set(base_runs)):
         print(f"note: new run {key[0]} [{key[1]}] not in baseline (ok)")
