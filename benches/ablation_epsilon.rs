@@ -1,10 +1,12 @@
 //! ε ablation (E9, §V-6): how sketch precision trades pivot quality
 //! against candidate volume inside GK Select. Paper-scale sweep with the
-//! modelled fabric: `repro bench ablation`.
+//! modelled fabric: `repro bench ablation`. Every run routes through
+//! `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -17,14 +19,17 @@ fn main() {
         let data = Distribution::Uniform
             .generator(cfg.algorithm.seed)
             .generate(&mut cluster, n);
-        let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+        let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 10).unwrap();
         bench.run(&format!("gk_select/eps{eps}"), || {
-            alg.quantile(&mut cluster, &data, 0.5)
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
                 .expect("quantile run")
-                .value
+                .value()
         });
         // observable trade-off: candidate traffic vs eps
-        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
         println!(
             "bench ablation_epsilon/eps{eps}/driver_bytes      {}",
             out.report.bytes_to_driver

@@ -2,11 +2,12 @@
 //!
 //! Wall-clock regression tracking at bench-scale n; the paper-scale sweep
 //! with the modelled EMR fabric is `repro bench fig --nodes 10`
-//! (EXPERIMENTS.md E1).
+//! (EXPERIMENTS.md E1). Every run routes through `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -19,11 +20,12 @@ fn main() {
             .generator(cfg.algorithm.seed)
             .generate(&mut cluster, n);
         for choice in AlgoChoice::PAPER_SET {
-            let mut alg = build_algorithm(&cfg, choice).unwrap();
+            let mut engine = engine_for(&cfg, choice, nodes).unwrap();
             bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
-                alg.quantile(&mut cluster, &data, 0.5)
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
                     .expect("quantile run")
-                    .value
+                    .value()
             });
         }
     }

@@ -2,10 +2,12 @@
 //!
 //! Paper-scale: `repro bench fig --nodes 30` (EXPERIMENTS.md E2); the
 //! headline ≈10.5× sort gap is read off the large-n rows of that sweep.
+//! Every run routes through `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -18,19 +20,28 @@ fn main() {
         .generator(cfg.algorithm.seed)
         .generate(&mut cluster, n);
     for choice in AlgoChoice::PAPER_SET {
-        let mut alg = build_algorithm(&cfg, choice).unwrap();
+        let mut engine = engine_for(&cfg, choice, nodes).unwrap();
         bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
-            alg.quantile(&mut cluster, &data, 0.5)
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
                 .expect("quantile run")
-                .value
+                .value()
         });
     }
 
     // modelled-time headline at bench scale: GK Select vs Full Sort
-    let mut gk = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
-    let mut fs = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
-    let t_gk = gk.quantile(&mut cluster, &data, 0.5).unwrap().report.elapsed_secs;
-    let t_fs = fs.quantile(&mut cluster, &data, 0.5).unwrap().report.elapsed_secs;
+    let mut gk = engine_for(&cfg, AlgoChoice::GkSelect, nodes).unwrap();
+    let mut fs = engine_for(&cfg, AlgoChoice::FullSort, nodes).unwrap();
+    let t_gk = gk
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap()
+        .report
+        .elapsed_secs;
+    let t_fs = fs
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap()
+        .report
+        .elapsed_secs;
     println!(
         "bench fig2_30nodes/headline_speedup_model        {:.2}x (full sort / gk select, n={n})",
         t_fs / t_gk

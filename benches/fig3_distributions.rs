@@ -1,10 +1,12 @@
 //! Figs. 3–4 — GK Select runtime across the four input distributions at
 //! the 50th and 99th percentiles. Paper-scale CIs:
 //! `repro bench dist --n 1e8` / `--n 1e9` (EXPERIMENTS.md E3/E4).
+//! Every run routes through `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -20,11 +22,12 @@ fn main() {
         let mut cluster = make_cluster(&cfg, 10);
         let data = dist.generator(cfg.algorithm.seed).generate(&mut cluster, n);
         for (qlabel, q) in [("q50", 0.5), ("q99", 0.99)] {
-            let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+            let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 10).unwrap();
             bench.run(&format!("{}_{qlabel}/n{n}", dist.label()), || {
-                alg.quantile(&mut cluster, &data, q)
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(q))
                     .expect("quantile run")
-                    .value
+                    .value()
             });
         }
     }

@@ -1,10 +1,12 @@
 //! Table IV — wall-clock growth of each algorithm across a doubling-n
 //! ladder. The fitted scaling exponents are printed by
-//! `repro bench table4` (EXPERIMENTS.md E5).
+//! `repro bench table4` (EXPERIMENTS.md E5). Every run routes through
+//! `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, stats, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, stats, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -23,11 +25,12 @@ fn main() {
             let data = Distribution::Uniform
                 .generator(cfg.algorithm.seed)
                 .generate(&mut cluster, n);
-            let mut alg = build_algorithm(&cfg, choice).unwrap();
+            let mut engine = engine_for(&cfg, choice, 10).unwrap();
             let s = bench.run(&format!("{}/n{n}", choice.label().replace(' ', "_")), || {
-                alg.quantile(&mut cluster, &data, 0.5)
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
                     .expect("quantile run")
-                    .value
+                    .value()
             });
             pts.push((n as f64, s.p50_s));
         }

@@ -1,11 +1,13 @@
 //! Table V — communication/synchronization counters. The full table is
 //! printed from measured counters by `repro bench table5`
 //! (EXPERIMENTS.md E6); this bench asserts the counter *claims* hold on
-//! every iteration while tracking the query wall cost.
+//! every iteration while tracking the query wall cost. Every run routes
+//! through `QuantileEngine::execute`.
 
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::util::benchkit::Bench;
 
 fn main() {
@@ -17,31 +19,37 @@ fn main() {
         .generator(cfg.algorithm.seed)
         .generate(&mut cluster, n);
 
-    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 10).unwrap();
     bench.run("gk_select_counter_invariants", || {
-        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .expect("run");
         // Table V row for GK Select: 0 shuffles, ≤3 rounds, 0 persists
         assert_eq!(out.report.shuffles, 0);
         assert!(out.report.rounds <= 3);
         assert_eq!(out.report.persists, 0);
-        out.value
+        out.value()
     });
 
-    let mut alg = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::FullSort, 10).unwrap();
     bench.run("full_sort_counter_invariants", || {
-        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .expect("run");
         // Table V row for Full Sort: 1 shuffle, 1 round, O(n) volume
         assert_eq!(out.report.shuffles, 1);
         assert_eq!(out.report.rounds, 1);
-        out.value
+        out.value()
     });
 
-    let mut alg = build_algorithm(&cfg, AlgoChoice::Afs).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::Afs, 10).unwrap();
     bench.run("afs_counter_invariants", || {
-        let out = alg.quantile(&mut cluster, &data, 0.5).expect("run");
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .expect("run");
         // Table V row for AFS: no shuffle, O(log n) rounds + persists
         assert_eq!(out.report.shuffles, 0);
         assert!(out.report.rounds >= 3 && out.report.persists >= 1);
-        out.value
+        out.value()
     });
 }

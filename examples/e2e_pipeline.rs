@@ -6,7 +6,8 @@
 //!    HLO text → rust runtime) when available, falling back to the native
 //!    backend with a warning;
 //! 2. generates a 10⁷-key workload across 40 partitions;
-//! 3. runs all six algorithms through the public API;
+//! 3. runs all six algorithms through the one public entry point
+//!    (`QuantileEngine::execute`);
 //! 4. verifies every exact algorithm against a ground-truth sort and the
 //!    PJRT count kernel against the native one;
 //! 5. reports the paper's headline metric: GK Select's speedup over Full
@@ -16,18 +17,16 @@
 //! make artifacts && cargo run --release --example e2e_pipeline
 //! ```
 
-use gkselect::algorithms::approx_quantile::{MergeStrategy, SketchVariant};
-use gkselect::algorithms::oracle_quantile;
 use gkselect::cluster::metrics::human_bytes;
 use gkselect::config::ReproConfig;
-use gkselect::harness::{build_algorithm, make_cluster, timed_run, AlgoChoice};
+use gkselect::harness::{make_cluster, timed_run};
 use gkselect::prelude::*;
 use std::path::Path;
 
 /// PJRT-vs-native kernel probe; only meaningful with the `pjrt` feature.
 #[cfg(feature = "pjrt")]
 fn probe_pjrt(artifacts: &Path) -> bool {
-    use gkselect::runtime::{KernelBackend, PjrtBackend};
+    use gkselect::runtime::PjrtBackend;
     match PjrtBackend::load(artifacts) {
         Ok(pjrt) => {
             let native = NativeBackend::new();
@@ -94,15 +93,18 @@ fn main() -> anyhow::Result<()> {
     for choice in AlgoChoice::ALL {
         // count-discard algorithms are wall-clock heavy at 1e7 on one
         // core; they still run — this is the e2e proof, not a bench
-        let mut alg = build_algorithm(&cfg, choice)?;
-        let (out, wall) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
+        let mut engine = EngineBuilder::new()
+            .config(cfg.clone())
+            .algorithm(choice)
+            .build()?;
+        let (out, wall) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
         if out.report.exact {
-            assert_eq!(out.value, truth, "{} exactness violated", choice.label());
+            assert_eq!(out.value(), truth, "{} exactness violated", choice.label());
         }
         println!(
             "{:<12} {:>12} {:>10.4} {:>8.2} {:>9} {:>12} {:>8}",
             out.report.algorithm,
-            out.value,
+            out.value(),
             out.report.elapsed_secs,
             wall,
             out.report.rounds,
@@ -140,18 +142,19 @@ fn main() -> anyhow::Result<()> {
     if pjrt_available {
         let mut pjrt_cfg = cfg.clone();
         pjrt_cfg.backend = "pjrt".into();
-        let mut alg = build_algorithm(&pjrt_cfg, AlgoChoice::GkSelect)?;
-        let (out, wall) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
-        assert_eq!(out.value, truth, "PJRT-backed GK Select exactness");
+        let mut engine = EngineBuilder::new()
+            .config(pjrt_cfg)
+            .algorithm(AlgoChoice::GkSelect)
+            .build()?;
+        let (out, wall) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
+        assert_eq!(out.value(), truth, "PJRT-backed GK Select exactness");
         println!(
             "\nPJRT-backed GK Select: median {} (exact ✓), wall {wall:.2}s — \
              L1 Pallas → L2 jax → HLO text → L3 rust verified on the query path",
-            out.value
+            out.value()
         );
     }
 
-    // exercised variants for the record
-    let _ = (SketchVariant::Modified, MergeStrategy::Tree);
     println!("\ne2e pipeline OK — all exact algorithms matched the oracle ({truth})");
     Ok(())
 }

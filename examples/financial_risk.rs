@@ -4,57 +4,56 @@
 //! Regulatory reporting (the paper's intro motivation) needs *exact*,
 //! reproducible percentiles: an approximate p99.9 that drifts by εn ranks
 //! can move a capital-requirement figure. This example builds a
-//! heavy-tailed bimodal book (hedged longs/shorts), asks GK Select for
-//! the extreme loss quantiles, and shows the exact-vs-approx discrepancy
-//! the sketch would have reported.
+//! heavy-tailed bimodal book (hedged longs/shorts), asks one engine for
+//! the extreme loss quantiles — exact via `Single`, approximate via a
+//! `Sketched` plan on the same call site — and shows the discrepancy the
+//! sketch would have reported.
 //!
 //! ```bash
 //! cargo run --release --example financial_risk
 //! ```
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let mut cluster = Cluster::new(ClusterConfig::emr(10));
+    // tight pivot: extreme quantiles live in thin tails
+    let mut engine = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(10))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(0.005)
+        .build()?;
 
     // Bimodal P&L: hedged book with two exposure lobes; values are basis
     // points × 1e4 (i32 range).
     println!("generating 20M P&L samples (bimodal, heavy lobes)...");
-    let data = BimodalGen::new(2024).generate(&mut cluster, 20_000_000);
-
-    let mut gk = GkSelect::new(GkSelectParams {
-        epsilon: 0.005, // tight pivot: extreme quantiles live in thin tails
-        ..Default::default()
-    });
-    let mut sketch = ApproxQuantile::new(ApproxQuantileParams {
-        epsilon: 0.005,
-        ..Default::default()
-    });
+    let data = BimodalGen::new(2024).generate(engine.cluster_mut(), 20_000_000);
 
     println!(
         "\n{:<8} {:>14} {:>14} {:>12} {:>10}",
         "quantile", "exact (GK Sel)", "approx (GK Sk)", "rank drift", "rounds"
     );
     for q in [0.95, 0.99, 0.999] {
-        let exact = gk.quantile(&mut cluster, &data, q)?;
-        let approx = sketch.quantile(&mut cluster, &data, q)?;
+        let exact = engine.execute(Source::Dataset(&data), QuantileQuery::Single(q))?;
+        let approx = engine.execute(
+            Source::Dataset(&data),
+            QuantileQuery::Sketched { q, eps: 0.005 },
+        )?;
 
         // measure how many ranks the approximation drifted
         let mut all = data.to_vec();
         all.sort_unstable();
         let true_rank = gkselect::target_rank(data.len(), q);
-        let approx_rank = all.partition_point(|&x| x < approx.value) as u64;
+        let approx_rank = all.partition_point(|&x| x < approx.value()) as u64;
         let drift = approx_rank.abs_diff(true_rank);
 
         let truth = oracle_quantile(&data, q).expect("nonempty");
-        assert_eq!(exact.value, truth, "exactness violated at q={q}");
+        assert_eq!(exact.value(), truth, "exactness violated at q={q}");
 
         println!(
             "p{:<7} {:>14} {:>14} {:>12} {:>10}",
             q * 100.0,
-            exact.value,
-            approx.value,
+            exact.value(),
+            approx.value(),
             drift,
             exact.report.rounds
         );

@@ -1,43 +1,49 @@
 //! Quickstart: exact median of 10M uniform keys on a simulated 10-node
 //! cluster, verified against a full-sort oracle and compared with the
-//! approximate GK sketch.
+//! approximate GK sketch — all through the one `QuantileEngine` entry
+//! point.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     // A 10-node EMR-like cluster: 40 partitions, 10 Gbit fabric model.
-    let mut cluster = Cluster::new(ClusterConfig::emr(10));
+    let mut engine = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(10))
+        .algorithm(AlgoChoice::GkSelect)
+        .build()?;
 
     println!("generating 10M uniform keys across 40 partitions...");
-    let data = UniformGen::new(42).generate(&mut cluster, 10_000_000);
+    let data = UniformGen::new(42).generate(engine.cluster_mut(), 10_000_000);
 
     // Exact quantile in 2 fused rounds.
-    let mut gk = GkSelect::new(GkSelectParams::default());
-    let exact = gk.quantile(&mut cluster, &data, 0.5)?;
+    let exact = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5))?;
     println!(
         "GK Select : median = {:>12}  rounds = {}  modelled = {:.3}s  net = {}",
-        exact.value,
+        exact.value(),
         exact.report.rounds,
         exact.report.elapsed_secs,
         gkselect::cluster::metrics::human_bytes(exact.report.network_volume_bytes),
     );
 
-    // The approximate baseline for comparison.
-    let mut sketch = ApproxQuantile::new(ApproxQuantileParams::default());
-    let approx = sketch.quantile(&mut cluster, &data, 0.5)?;
+    // The approximate baseline: same engine, a `Sketched` plan.
+    let approx = engine.execute(
+        Source::Dataset(&data),
+        QuantileQuery::Sketched { q: 0.5, eps: 0.01 },
+    )?;
     println!(
         "GK Sketch : median ≈ {:>12}  rounds = {}  modelled = {:.3}s",
-        approx.value, approx.report.rounds, approx.report.elapsed_secs,
+        approx.value(),
+        approx.report.rounds,
+        approx.report.elapsed_secs,
     );
 
     // Verify exactness.
     let truth = oracle_quantile(&data, 0.5).expect("nonempty");
-    assert_eq!(exact.value, truth, "GK Select must equal the oracle");
+    assert_eq!(exact.value(), truth, "GK Select must equal the oracle");
     println!("verified: GK Select matches the full-sort oracle ({truth})");
     Ok(())
 }

@@ -1,32 +1,33 @@
 //! Live telemetry through the streaming quantile service: p50/p95/p99
-//! served **exactly** after every ingest tick, from cached sketches.
+//! served **exactly** after every ingest tick, from cached sketches —
+//! ingest and query both through the one `QuantileEngine`.
 //!
 //! A zipf-distributed event stream (hot endpoints dominate) arrives in
-//! micro-batches. Each tick the ingestor seals the batch as a new epoch
-//! and folds it into per-partition GK partials (1 round over the new
-//! records only); the query engine then serves all three percentiles
-//! from the cached partials plus one fused band-extract scan —
-//! rounds=1 / data_scans=1 per query, where batch GK Select would pay
-//! 2/2 rebuilding the sketch every time. Epoch compaction keeps the
-//! store's sketch footprint flat while the data keeps growing.
+//! micro-batches. Each tick `engine.ingest` seals the batch as a new
+//! epoch and folds it into per-partition GK partials (1 round over the
+//! new records only); `engine.execute(Source::Stream(..), Multi(..))`
+//! then serves all three percentiles from the cached partials plus one
+//! fused band-extract scan — rounds=1 / data_scans=1 per query, where
+//! batch GK Select would pay 2/2 rebuilding the sketch every time.
+//! Epoch compaction keeps the store's sketch footprint flat while the
+//! data keeps growing.
 //!
 //! ```bash
 //! cargo run --release --example streaming_quantiles
 //! ```
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::cluster::metrics::human_bytes;
 use gkselect::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let mut cluster = Cluster::new(ClusterConfig::emr(10));
-    let mut store = SketchStore::new(CompactionPolicy {
-        compact_threshold: 4,
-        max_live_epochs: 2,
-    })?;
-    let ingestor = StreamIngestor::new(0.01)?;
-    let mut engine = StreamQuery::new(GkSelectParams::default());
-    let qs = [0.5, 0.95, 0.99];
+    let mut engine = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(10))
+        .compaction(CompactionPolicy {
+            compact_threshold: 4,
+            max_live_epochs: 2,
+        })
+        .build()?;
+    let qs = vec![0.5, 0.95, 0.99];
 
     println!(
         "{:<5} {:>10} {:>10} {:>10} {:>10} {:>7} {:>6} {:>7} {:>11}",
@@ -38,12 +39,16 @@ fn main() -> anyhow::Result<()> {
         let mut batch = Vec::new();
         ZipfGen::new(1000 + tick, 2.5).fill_partition(tick as usize, 1, 400_000, &mut batch);
 
-        let ing = ingestor.ingest(&mut cluster, &mut store, "telemetry", MicroBatch::new(batch))?;
-        let out = engine.quantiles(&mut cluster, &store, "telemetry", &qs)?;
+        let ing = engine.ingest("telemetry", MicroBatch::new(batch))?;
+        let out = engine.execute(
+            Source::Stream("telemetry"),
+            QuantileQuery::Multi(qs.clone()),
+        )?;
 
         // the exactness the service sells: every percentile matches the
         // oracle over everything ingested so far
-        let all = store
+        let all = engine
+            .store()
             .stream("telemetry")
             .expect("ingested")
             .live_dataset()?;

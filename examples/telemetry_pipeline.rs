@@ -5,38 +5,45 @@
 //! latencies bucketed by route) is ingested into a growing dataset;
 //! after each ingest window the pipeline computes the exact p50/p99 and
 //! compares what every algorithm charges the cluster for that answer —
-//! the Table V trade-offs on a realistic workload.
+//! the Table V trade-offs on a realistic workload. One `QuantileEngine`
+//! per strategy; one `execute` call site for all of them.
 //!
 //! ```bash
 //! cargo run --release --example telemetry_pipeline
 //! ```
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::cluster::metrics::human_bytes;
 use gkselect::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let mut cluster = Cluster::new(ClusterConfig::emr(10));
+    let mut gk = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(10))
+        .algorithm(AlgoChoice::GkSelect)
+        .build()?;
+    let mut sort = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(10))
+        .algorithm(AlgoChoice::FullSort)
+        .build()?;
 
     for (window, n) in [(1, 2_000_000u64), (2, 5_000_000), (3, 10_000_000)] {
         println!("── ingest window {window}: {n} zipf-distributed events ──");
-        let data = ZipfGen::new(100 + window as u64, 2.5).generate(&mut cluster, n);
+        let data = ZipfGen::new(100 + window as u64, 2.5).generate(gk.cluster_mut(), n);
 
         let truth_p99 = oracle_quantile(&data, 0.99).expect("nonempty");
 
         // exact path
-        let mut gk = GkSelect::new(GkSelectParams::default());
-        let exact = gk.quantile(&mut cluster, &data, 0.99)?;
-        assert_eq!(exact.value, truth_p99);
+        let exact = gk.execute(Source::Dataset(&data), QuantileQuery::Single(0.99))?;
+        assert_eq!(exact.value(), truth_p99);
 
-        // approx path
-        let mut sk = ApproxQuantile::new(ApproxQuantileParams::default());
-        let approx = sk.quantile(&mut cluster, &data, 0.99)?;
+        // approx path (same engine, a Sketched plan)
+        let approx = gk.execute(
+            Source::Dataset(&data),
+            QuantileQuery::Sketched { q: 0.99, eps: 0.01 },
+        )?;
 
         // the Spark-default exact path
-        let mut fs = FullSortQuantile::default();
-        let sorted = fs.quantile(&mut cluster, &data, 0.99)?;
-        assert_eq!(sorted.value, truth_p99);
+        let sorted = sort.execute(Source::Dataset(&data), QuantileQuery::Single(0.99))?;
+        assert_eq!(sorted.value(), truth_p99);
 
         println!(
             "{:<12} {:>12} {:>10} {:>8} {:>12} {:>10}",
@@ -46,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "{:<12} {:>12} {:>10.4} {:>8} {:>12} {:>10}",
                 out.report.algorithm,
-                out.value,
+                out.value(),
                 out.report.elapsed_secs,
                 out.report.rounds,
                 human_bytes(out.report.network_volume_bytes),

@@ -1,6 +1,7 @@
 //! Threads-vs-sequential executor pool comparison on the paper's
 //! `emr(30)` shape: same data, same GK Select query, once through the
-//! sequential substrate and once through the OS-thread executor pool.
+//! sequential substrate and once through the OS-thread executor pool —
+//! two engines differing only in `exec_mode`, one `execute` call each.
 //!
 //! Prints, per mode: the (identical) exact answer and round/scan
 //! counters, the virtual-clock model seconds, the *real* stage
@@ -18,14 +19,18 @@
 //! cargo run --release --example threads_vs_sequential [n]
 //! ```
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::prelude::*;
 
-fn run(mode: ExecMode, n: u64) -> Outcome {
-    let mut cluster = Cluster::new(ClusterConfig::emr(30).with_exec_mode(mode));
-    let data = UniformGen::new(42).generate(&mut cluster, n);
-    let mut gk = GkSelect::new(GkSelectParams::default());
-    gk.quantile(&mut cluster, &data, 0.75).expect("gk select run")
+fn run(mode: ExecMode, n: u64) -> QueryOutcome {
+    let mut engine = EngineBuilder::new()
+        .cluster(ClusterConfig::emr(30).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .build()
+        .expect("engine build");
+    let data = UniformGen::new(42).generate(engine.cluster_mut(), n);
+    engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.75))
+        .expect("gk select run")
 }
 
 fn main() {
@@ -45,7 +50,7 @@ fn main() {
         println!(
             "{:<12} {:>12} {:>7} {:>6} {:>10.4} {:>10.4} {:>10.4} {:>6.2} {:>6.2}",
             mode.label(),
-            out.value,
+            out.value(),
             out.report.rounds,
             out.report.data_scans,
             out.report.elapsed_secs,
@@ -58,7 +63,7 @@ fn main() {
     }
 
     let (seq, thr) = (&outs[0], &outs[1]);
-    assert_eq!(seq.value, thr.value, "modes must agree on the exact answer");
+    assert_eq!(seq.value(), thr.value(), "modes must agree on the exact answer");
     assert_eq!(seq.report.rounds, thr.report.rounds);
     assert_eq!(seq.report.data_scans, thr.report.data_scans);
     assert_eq!(
@@ -70,7 +75,7 @@ fn main() {
     let mut cluster = Cluster::new(ClusterConfig::emr(30));
     let data = UniformGen::new(42).generate(&mut cluster, n);
     let truth = oracle_quantile(&data, 0.75).expect("nonempty");
-    assert_eq!(seq.value, truth, "exactness");
+    assert_eq!(seq.value(), truth, "exactness");
 
     println!(
         "\nidentical results & counters across modes (oracle ✓); \

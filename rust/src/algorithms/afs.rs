@@ -5,13 +5,15 @@ use super::count_discard::{AggMode, CountDiscardParams, CountDiscardSelect};
 use super::{Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::Key;
 use anyhow::Result;
 
 /// AFS parameters (count-discard knobs).
 pub type AfsParams = CountDiscardParams;
 
-/// Al-Furaih Select: `O(log n)` rounds, each ending in a treeReduce.
+/// Al-Furaih Select: `O(log n)` rounds, each ending in a treeReduce —
+/// the stateless strategy behind `AlgoChoice::Afs`.
 pub struct Afs {
     inner: CountDiscardSelect,
 }
@@ -21,6 +23,15 @@ impl Afs {
         Self {
             inner: CountDiscardSelect::new("AFS", AggMode::TreeReduce, params),
         }
+    }
+
+    /// One exact quantile — the pre-redesign entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` with `AlgoChoice::Afs`"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        Ok(self.inner.quantile_with(cluster, data, q)?)
     }
 }
 
@@ -33,15 +44,19 @@ impl QuantileAlgorithm for Afs {
         true
     }
 
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        self.inner.quantile(cluster, data, q)
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        self.inner.execute_plan(ctx, query)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::oracle_quantile;
+    use crate::algorithms::{oracle_quantile, plan_single};
     use crate::cluster::ClusterConfig;
     use crate::data::{DataGenerator, Distribution};
 
@@ -50,9 +65,9 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Bimodal.generator(2).generate(&mut c, 20_000);
         let truth = oracle_quantile(&data, 0.25).unwrap();
-        let mut alg = Afs::new(AfsParams::default());
-        let out = alg.quantile(&mut c, &data, 0.25).unwrap();
-        assert_eq!(out.value, truth);
+        let alg = Afs::new(AfsParams::default());
+        let out = plan_single(&alg, &mut c, &data, 0.25).unwrap();
+        assert_eq!(out.value(), truth);
         assert_eq!(out.report.algorithm, "AFS");
         assert!(out.report.exact);
     }
@@ -61,8 +76,8 @@ mod tests {
     fn afs_uses_tree_reduce_traffic() {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Uniform.generator(3).generate(&mut c, 50_000);
-        let mut alg = Afs::new(AfsParams::default());
-        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        let alg = Afs::new(AfsParams::default());
+        let out = plan_single(&alg, &mut c, &data, 0.5).unwrap();
         // per-round messages are tiny: total volume must stay well below data size
         assert!(out.report.network_volume_bytes < 50_000);
     }

@@ -5,15 +5,16 @@
 //! (the pivot source), so the sketch-building helpers live here and are
 //! shared.
 
-use super::{make_report, Outcome, QuantileAlgorithm};
+use super::{drive_plan, run_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::sketch::classical::ClassicalGk;
 use crate::sketch::modified::{fold_merge, tree_merge, ModifiedGk};
 use crate::sketch::spark::SparkGk;
 use crate::sketch::{GkCore, QuantileSketch};
 use crate::Key;
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 /// Which GK implementation executors run (§IV-D/E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,7 +136,34 @@ impl Default for ApproxQuantileParams {
     }
 }
 
-/// Spark's `approxQuantile` equivalent.
+/// The one-round approximate path: per-partition sketches, driver-side
+/// merge, sketch query. The `Sketched` plan arm and the `GkSketch`
+/// strategy both run through here.
+pub(crate) fn sketch_quantile_with(
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    params: &ApproxQuantileParams,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    if !(params.epsilon > 0.0 && params.epsilon < 1.0) {
+        return Err(EngineError::BadEpsilon(params.epsilon));
+    }
+    cluster.reset_run();
+    let sketch = build_global_sketch(cluster, data, params.variant, params.merge, params.epsilon)?;
+    let value = cluster
+        .driver(|| sketch.query_quantile(q))
+        .ok_or(EngineError::EmptyInput)?;
+    Ok(Outcome {
+        value,
+        report: run_report("GK Sketch", false, cluster, data.len()),
+    })
+}
+
+/// Spark's `approxQuantile` equivalent — the stateless strategy behind
+/// `AlgoChoice::GkSketch`.
 #[derive(Debug, Clone)]
 pub struct ApproxQuantile {
     pub params: ApproxQuantileParams,
@@ -144,6 +172,16 @@ pub struct ApproxQuantile {
 impl ApproxQuantile {
     pub fn new(params: ApproxQuantileParams) -> Self {
         Self { params }
+    }
+
+    /// One approximate quantile — the pre-redesign entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` (strategy `AlgoChoice::GkSketch`, or a \
+                `QuantileQuery::Sketched` plan on any engine)"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        Ok(sketch_quantile_with(cluster, data, &self.params, q)?)
     }
 }
 
@@ -156,19 +194,15 @@ impl QuantileAlgorithm for ApproxQuantile {
         false
     }
 
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        cluster.reset_run();
-        let sketch = build_global_sketch(
-            cluster,
-            data,
-            self.params.variant,
-            self.params.merge,
-            self.params.epsilon,
-        )?;
-        let value = cluster.driver(|| sketch.query_quantile(q));
-        let value = value.ok_or_else(|| anyhow::anyhow!("empty sketch"))?;
-        Ok(make_report(self.name(), false, cluster, data.len(), value))
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let data = ctx.data;
+        drive_plan(ctx.cluster, data, query, |cluster, q| {
+            sketch_quantile_with(cluster, data, &self.params, q)
+        })
     }
 }
 
@@ -183,12 +217,12 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Uniform.generator(21).generate(&mut c, n);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = ApproxQuantile::new(ApproxQuantileParams {
+        let params = ApproxQuantileParams {
             epsilon: 0.01,
             variant,
             merge,
-        });
-        let out = alg.quantile(&mut c, &data, q).unwrap();
+        };
+        let out = sketch_quantile_with(&mut c, &data, &params, q).unwrap();
         (out, truth, n)
     }
 
@@ -250,7 +284,10 @@ mod tests {
     fn rejects_empty() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
         let data = Dataset::from_partitions(vec![vec![]]).unwrap();
-        let mut alg = ApproxQuantile::new(ApproxQuantileParams::default());
-        assert!(alg.quantile(&mut c, &data, 0.5).is_err());
+        assert_eq!(
+            sketch_quantile_with(&mut c, &data, &ApproxQuantileParams::default(), 0.5)
+                .unwrap_err(),
+            EngineError::EmptyInput
+        );
     }
 }

@@ -11,13 +11,14 @@
 //! Because datasets are immutable, each round materializes the retained
 //! side as a new persisted dataset — the `O(log n)` persists in Table V.
 
-use super::{make_report, Outcome, QuantileAlgorithm};
+use super::{drive_plan, run_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::netmodel::NetSize;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::select::{dutch_partition, SplitMix64};
 use crate::{target_rank, Key};
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 /// How per-round stats reach the driver.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,7 +112,7 @@ impl CountDiscardSelect {
 
     /// Round 0: a uniform random element as the initial pivot (one
     /// collect round, reservoir over partitions).
-    fn initial_pivot(&self, cluster: &mut Cluster, data: &Dataset<Key>) -> Result<Key> {
+    fn initial_pivot(&self, cluster: &mut Cluster, data: &Dataset<Key>) -> Result<Key, EngineError> {
         let seed = self.params.seed;
         let pending = cluster.map_partitions(data, |part, ctx| {
             if part.is_empty() {
@@ -129,23 +130,19 @@ impl CountDiscardSelect {
                 .flatten()
                 .fold(None, |acc, c| merge_cand(acc, Some(c), &mut rng))
         });
-        picked
-            .map(|(v, _)| v)
-            .ok_or_else(|| anyhow::anyhow!("empty dataset"))
-    }
-}
-
-impl QuantileAlgorithm for CountDiscardSelect {
-    fn name(&self) -> &'static str {
-        self.label
+        picked.map(|(v, _)| v).ok_or(EngineError::EmptyInput)
     }
 
-    fn exact(&self) -> bool {
-        true
-    }
-
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
+    /// The full count-discard protocol. Resets the run ledger.
+    pub(crate) fn quantile_with(
+        &self,
+        cluster: &mut Cluster,
+        data: &Dataset<Key>,
+        q: f64,
+    ) -> Result<Outcome, EngineError> {
+        if data.is_empty() {
+            return Err(EngineError::EmptyInput);
+        }
         cluster.reset_run();
         let n = data.len();
         let mut k = target_rank(n, q);
@@ -203,14 +200,19 @@ impl QuantileAlgorithm for CountDiscardSelect {
             cluster.persist_bytes(work.data_bytes());
 
             if agg.lt <= k && k < agg.lt + agg.eq {
-                return Ok(make_report(self.name(), true, cluster, n, pivot));
+                return Ok(Outcome {
+                    value: pivot,
+                    report: run_report(self.label, true, cluster, n),
+                });
             }
 
             if k < agg.lt {
                 // discard everything ≥ pivot; target stays at rank k
                 pivot = agg
                     .cand_lo
-                    .ok_or_else(|| anyhow::anyhow!("no candidate below pivot"))?
+                    .ok_or_else(|| {
+                        EngineError::Execution("no candidate below pivot".to_string())
+                    })?
                     .0;
                 work = Dataset::from_partitions(
                     parts_p
@@ -225,7 +227,9 @@ impl QuantileAlgorithm for CountDiscardSelect {
                 k -= agg.lt + agg.eq;
                 pivot = agg
                     .cand_hi
-                    .ok_or_else(|| anyhow::anyhow!("no candidate above pivot"))?
+                    .ok_or_else(|| {
+                        EngineError::Execution("no candidate above pivot".to_string())
+                    })?
                     .0;
                 work = Dataset::from_partitions(
                     parts_p
@@ -237,11 +241,40 @@ impl QuantileAlgorithm for CountDiscardSelect {
                 .expect("partition count preserved by discard");
             }
         }
-        bail!(
+        Err(EngineError::Execution(format!(
             "{} did not converge within {} rounds",
-            self.label,
-            self.params.max_rounds
-        )
+            self.label, self.params.max_rounds
+        )))
+    }
+
+    /// One exact quantile — the pre-redesign entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` with `AlgoChoice::Afs` / `AlgoChoice::Jeffers`"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        Ok(self.quantile_with(cluster, data, q)?)
+    }
+}
+
+impl QuantileAlgorithm for CountDiscardSelect {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let data = ctx.data;
+        drive_plan(ctx.cluster, data, query, |cluster, q| {
+            self.quantile_with(cluster, data, q)
+        })
     }
 }
 
@@ -256,8 +289,8 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = dist.generator(17).generate(&mut c, n);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = CountDiscardSelect::new("cd", mode, CountDiscardParams::default());
-        let out = alg.quantile(&mut c, &data, q).unwrap();
+        let alg = CountDiscardSelect::new("cd", mode, CountDiscardParams::default());
+        let out = alg.quantile_with(&mut c, &data, q).unwrap();
         assert_eq!(out.value, truth, "{mode:?} {} q={q}", dist.label());
         out
     }
@@ -322,9 +355,9 @@ mod tests {
     fn all_equal_terminates_immediately() {
         let mut c = Cluster::new(ClusterConfig::local(2, 4));
         let data = Dataset::from_vec(vec![42; 10_000], 4).unwrap();
-        let mut alg =
+        let alg =
             CountDiscardSelect::new("cd", AggMode::TreeReduce, CountDiscardParams::default());
-        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        let out = alg.quantile_with(&mut c, &data, 0.5).unwrap();
         assert_eq!(out.value, 42);
         // init round + 1 iteration
         assert!(out.report.rounds <= 2);
@@ -334,9 +367,9 @@ mod tests {
     fn singleton() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
         let data = Dataset::from_vec(vec![7], 1).unwrap();
-        let mut alg =
+        let alg =
             CountDiscardSelect::new("cd", AggMode::Collect, CountDiscardParams::default());
-        assert_eq!(alg.quantile(&mut c, &data, 0.5).unwrap().value, 7);
+        assert_eq!(alg.quantile_with(&mut c, &data, 0.5).unwrap().value, 7);
     }
 
     #[test]

@@ -2,14 +2,39 @@
 //! PSRS pipeline, then index the k-th record — the Spark-default exact
 //! path GK Select is benchmarked against.
 
-use super::{make_report, Outcome, QuantileAlgorithm};
+use super::{drive_plan, run_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::sort::psrs::{psrs_sort, PsrsParams};
 use crate::{target_rank, Key};
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
-/// Full-sort exact quantile.
+/// PSRS sort + index through explicit params. Resets the run ledger.
+pub(crate) fn full_sort_quantile_with(
+    cluster: &mut Cluster,
+    params: &PsrsParams,
+    data: &Dataset<Key>,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    cluster.reset_run();
+    let n = data.len();
+    let sorted = psrs_sort(cluster, data, params);
+    let k = target_rank(n, q);
+    let value = cluster.driver(|| sorted.kth(k));
+    let value =
+        value.ok_or_else(|| EngineError::Execution(format!("rank {k} out of range")))?;
+    Ok(Outcome {
+        value,
+        report: run_report("Full Sort", true, cluster, n),
+    })
+}
+
+/// Full-sort exact quantile — the stateless strategy behind
+/// `AlgoChoice::FullSort`.
 #[derive(Debug, Clone, Default)]
 pub struct FullSortQuantile {
     pub params: PsrsParams,
@@ -18,6 +43,15 @@ pub struct FullSortQuantile {
 impl FullSortQuantile {
     pub fn new(params: PsrsParams) -> Self {
         Self { params }
+    }
+
+    /// One exact quantile — the pre-redesign entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` with `AlgoChoice::FullSort`"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        Ok(full_sort_quantile_with(cluster, &self.params, data, q)?)
     }
 }
 
@@ -30,15 +64,15 @@ impl QuantileAlgorithm for FullSortQuantile {
         true
     }
 
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        cluster.reset_run();
-        let n = data.len();
-        let sorted = psrs_sort(cluster, data, &self.params);
-        let k = target_rank(n, q);
-        let value = cluster.driver(|| sorted.kth(k));
-        let value = value.ok_or_else(|| anyhow::anyhow!("rank {k} out of range"))?;
-        Ok(make_report(self.name(), true, cluster, n, value))
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let data = ctx.data;
+        drive_plan(ctx.cluster, data, query, |cluster, q| {
+            full_sort_quantile_with(cluster, &self.params, data, q)
+        })
     }
 }
 
@@ -61,8 +95,8 @@ mod tests {
             let data = dist.generator(6).generate(&mut c, 30_000);
             for q in [0.0, 0.5, 0.99, 1.0] {
                 let truth = oracle_quantile(&data, q).unwrap();
-                let mut alg = FullSortQuantile::default();
-                let out = alg.quantile(&mut c, &data, q).unwrap();
+                let out =
+                    full_sort_quantile_with(&mut c, &PsrsParams::default(), &data, q).unwrap();
                 assert_eq!(out.value, truth, "{} q={q}", dist.label());
             }
         }
@@ -72,8 +106,7 @@ mod tests {
     fn moves_order_n_bytes() {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Uniform.generator(8).generate(&mut c, 50_000);
-        let mut alg = FullSortQuantile::default();
-        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        let out = full_sort_quantile_with(&mut c, &PsrsParams::default(), &data, 0.5).unwrap();
         assert_eq!(out.report.shuffles, 1);
         assert!(
             out.report.bytes_shuffled > 50_000 * 2,

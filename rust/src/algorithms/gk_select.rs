@@ -34,15 +34,22 @@
 //! data scan** (was 2), no shuffle, no persist, candidate traffic
 //! bounded by the ε-band (`|{lo < x < hi}| = O(εn)` — endpoint runs are
 //! counted, never shipped, so duplicate-heavy data cannot widen it).
+//!
+//! Since the engine redesign the protocol lives in crate-internal free
+//! functions (`quantile_with` / `select_with_sketch_with`: cluster +
+//! backend + params in, typed errors out); [`GkSelectStrategy`] is the
+//! stateless plan executor the engine selects via
+//! `AlgoChoice::GkSelect`, and the backend-owning [`GkSelect`] struct
+//! is a deprecated shim.
 
 use super::approx_quantile::{build_global_sketch, MergeStrategy, SketchVariant};
-use super::{make_backend_report, Outcome, QuantileAlgorithm};
+use super::{drive_plan, run_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::runtime::{BandExtract, KernelBackend, NativeBackend};
 use crate::sketch::GkCore;
 use crate::{target_rank, Key};
-use anyhow::{ensure, Result};
 
 /// Tuning knobs for GK Select.
 #[derive(Debug, Clone)]
@@ -90,18 +97,191 @@ pub fn default_candidate_budget(epsilon: f64, n: u64) -> usize {
     (16.0 * epsilon * n as f64).ceil() as usize + 64
 }
 
-/// The GK Select driver. Owns the kernel backend used for Round 2's
-/// fused count+extract pass.
+/// The full GK Select protocol — Round 1 (sketch) plus the fused
+/// post-sketch rounds — through an explicit kernel backend. Resets the
+/// cluster's run ledger on entry so the report covers exactly this
+/// query.
+pub(crate) fn quantile_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    data: &Dataset<Key>,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    cluster.reset_run();
+
+    // ---- Round 1: sketch-derived pivot + candidate band ------------
+    let sketch = build_global_sketch(cluster, data, params.variant, params.merge, params.epsilon)?;
+
+    // ---- Round 2 (+3 fallback): the fused post-sketch protocol -----
+    select_with_sketch_with(cluster, backend, params, data, &sketch, q)
+}
+
+/// The post-sketch fused protocol, given an **already-merged** global
+/// sketch covering exactly `data`: fused count+extract (one round, one
+/// scan), with the classic 3-round extraction as the overflow /
+/// out-of-contract fallback.
+///
+/// Does NOT reset the cluster's run ledger and does NOT build a sketch —
+/// [`quantile_with`] is `reset_run` + Round 1 + this; the streaming
+/// query path ([`crate::stream::query`]) calls it with the store's
+/// *cached* merged sketch, which is how a streamed query costs
+/// rounds=1 / data_scans=1 instead of 2/2.
+pub(crate) fn select_with_sketch_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    data: &Dataset<Key>,
+    sketch: &GkCore,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    let n = data.len();
+    if sketch.count != n {
+        return Err(EngineError::Execution(format!(
+            "sketch covers {} records, dataset holds {n}",
+            sketch.count
+        )));
+    }
+    let k = target_rank(n, q);
+
+    let (pivot, lo, hi) = cluster
+        .driver(|| {
+            let pivot = sketch.query_quantile(q)?;
+            // k is 0-based; the summary speaks 1-based ranks
+            let (lo, hi) = sketch.query_rank_bounds(k + 1)?;
+            Some((pivot, lo, hi))
+        })
+        .ok_or(EngineError::EmptyInput)?;
+
+    // ---- fused count + band extraction -----------------------------
+    cluster.broadcast(&(pivot, lo, hi));
+    // the band's width is governed by the sketch that produced it —
+    // which for cached (streamed) sketches may be coarser than this
+    // engine's ε. Budget against the looser of the two, or a
+    // mismatched query engine would overflow on every query and
+    // silently pay the fallback round forever.
+    let budget_eps = params.epsilon.max(sketch.epsilon);
+    let budget = params
+        .candidate_budget
+        .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
+    let pending = cluster.map_partitions(data, |part, _| {
+        backend.band_extract(part, pivot, lo, hi, budget)
+    });
+    let mut merged = cluster
+        .tree_reduce(pending, params.tree_depth, |a, b| a.merge(b, budget))
+        .expect("nonempty dataset");
+    debug_assert_eq!(merged.band.total(), n);
+    debug_assert_eq!(merged.pivot.total(), n);
+
+    let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
+    if lt <= k && k < lt + eq {
+        // the pivot's own run covers the target — free exit
+        return Ok(finish(cluster, n, pivot));
+    }
+    if let Some(value) = cluster.driver(|| resolve_band(&mut merged, lo, hi, k)) {
+        // exact answer out of the extracted band
+        return Ok(finish(cluster, n, value));
+    }
+
+    // ---- fallback: classic candidate extraction --------------------
+    // Reached only on candidate overflow or an out-of-contract
+    // sketch; the fused pass's counts still give the exact Δk.
+    let delta = pivot_delta(lt, eq, k);
+    debug_assert!(delta != 0);
+    cluster.broadcast(&delta);
+    let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta));
+    let final_slice = cluster
+        .tree_reduce(slices, params.tree_depth, |a, b| reduce_slices(a, b, delta))
+        .expect("nonempty dataset");
+
+    let value = cluster.driver(|| {
+        if delta < 0 {
+            final_slice.iter().copied().min()
+        } else {
+            final_slice.iter().copied().max()
+        }
+    });
+    let value = value.ok_or(EngineError::BudgetOverflow {
+        fallback_used: true,
+    })?;
+    Ok(finish(cluster, n, value))
+}
+
+fn finish(cluster: &Cluster, n: u64, value: Key) -> Outcome {
+    Outcome {
+        value,
+        report: run_report("GK Select", true, cluster, n),
+    }
+}
+
+/// The stateless GK Select strategy: `AlgoChoice::GkSelect`'s plan
+/// executor. `Multi` plans run the fused multi-band protocol
+/// ([`super::multi_select`]) — m quantiles, one scan; everything else
+/// goes through the shared single-quantile dispatch.
+#[derive(Debug, Clone, Default)]
+pub struct GkSelectStrategy {
+    pub params: GkSelectParams,
+}
+
+impl GkSelectStrategy {
+    pub fn new(params: GkSelectParams) -> Self {
+        Self { params }
+    }
+}
+
+impl QuantileAlgorithm for GkSelectStrategy {
+    fn name(&self) -> &'static str {
+        "GK Select"
+    }
+
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let backend = ctx.backend;
+        let data = ctx.data;
+        if let QuantileQuery::Multi(qs) = query {
+            if data.is_empty() {
+                return Err(EngineError::EmptyInput);
+            }
+            query.validate(data.len())?;
+            let out =
+                super::multi_select::quantiles_with(ctx.cluster, backend, &self.params, data, qs)?;
+            return Ok(out.into());
+        }
+        drive_plan(ctx.cluster, data, query, |cluster, q| {
+            quantile_with(cluster, backend, &self.params, data, q)
+        })
+    }
+}
+
+/// The pre-redesign GK Select driver, owning its own kernel backend.
+/// Kept as a thin shim for one release — new code builds a
+/// [`crate::engine::QuantileEngine`] instead:
 ///
 /// ```
 /// use gkselect::prelude::*;
 ///
-/// let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+/// let mut engine = EngineBuilder::new()
+///     .cluster(ClusterConfig::local(2, 4))
+///     .algorithm(AlgoChoice::GkSelect)
+///     .build()
+///     .unwrap();
 /// let data = Dataset::from_vec((0..1_000).collect(), 4).unwrap();
-/// let mut gk = GkSelect::new(GkSelectParams::default());
-/// let out = gk.quantile(&mut cluster, &data, 0.5).unwrap();
-/// assert_eq!(out.value, 500);      // exact order statistic, not approximate
-/// assert!(out.report.rounds <= 2); // sketch round + fused count/extract round
+/// let out = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5)).unwrap();
+/// assert_eq!(out.value(), 500);      // exact order statistic, not approximate
+/// assert!(out.report.rounds <= 2);   // sketch round + fused count/extract round
 /// ```
 pub struct GkSelect {
     pub params: GkSelectParams,
@@ -110,6 +290,10 @@ pub struct GkSelect {
 
 impl GkSelect {
     /// Native-backend instance (no artifacts needed).
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a `QuantileEngine` via `EngineBuilder` and call `execute`"
+    )]
     pub fn new(params: GkSelectParams) -> Self {
         Self {
             params,
@@ -119,6 +303,10 @@ impl GkSelect {
 
     /// Run the fused pass through a specific backend (e.g. the
     /// PJRT-compiled Pallas kernel).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `EngineBuilder::kernel_backend` / `backend_name` instead"
+    )]
     pub fn with_backend(params: GkSelectParams, backend: Box<dyn KernelBackend>) -> Self {
         Self { params, backend }
     }
@@ -128,107 +316,46 @@ impl GkSelect {
     }
 
     /// Active SIMD lane width of the backend's fused band scan (1 =
-    /// scalar) — stamped onto every report this engine produces.
+    /// scalar).
     pub fn simd_lane_width(&self) -> usize {
         self.backend.simd_lane_width()
     }
 
-    /// [`make_backend_report`] with this engine's name and backend.
-    fn finish(&self, cluster: &Cluster, n: u64, value: Key) -> Outcome {
-        make_backend_report(self.name(), true, cluster, n, value, self.backend.as_ref())
+    /// One exact quantile — the pre-redesign entry point. Stamps this
+    /// shim's own backend lane width to preserve the old report
+    /// contract (engine outcomes are stamped centrally instead).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Dataset(..), QuantileQuery::Single(q))`"
+    )]
+    pub fn quantile(
+        &mut self,
+        cluster: &mut Cluster,
+        data: &Dataset<Key>,
+        q: f64,
+    ) -> anyhow::Result<Outcome> {
+        let mut out = quantile_with(cluster, self.backend.as_ref(), &self.params, data, q)?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 
-    /// The post-sketch fused protocol, given an **already-merged** global
-    /// sketch covering exactly `data`: fused count+extract (one round,
-    /// one scan), with the classic 3-round extraction as the overflow /
-    /// out-of-contract fallback.
-    ///
-    /// Does NOT reset the cluster's run ledger and does NOT build a
-    /// sketch — `GkSelect::quantile` is `reset_run` + Round 1 + this;
-    /// the streaming query engine ([`crate::stream::query`]) calls it
-    /// with the store's *cached* merged sketch, which is how a streamed
-    /// query costs rounds=1 / data_scans=1 instead of 2/2.
+    /// The post-sketch fused protocol against a pre-merged sketch — the
+    /// pre-redesign streaming entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Stream(..), ..)` — the engine owns the store"
+    )]
     pub fn select_with_sketch(
         &mut self,
         cluster: &mut Cluster,
         data: &Dataset<Key>,
         sketch: &GkCore,
         q: f64,
-    ) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        let n = data.len();
-        ensure!(
-            sketch.count == n,
-            "sketch covers {} records, dataset holds {n}",
-            sketch.count
-        );
-        let k = target_rank(n, q);
-
-        let (pivot, lo, hi) = cluster
-            .driver(|| {
-                let pivot = sketch.query_quantile(q)?;
-                // k is 0-based; the summary speaks 1-based ranks
-                let (lo, hi) = sketch.query_rank_bounds(k + 1)?;
-                Some((pivot, lo, hi))
-            })
-            .ok_or_else(|| anyhow::anyhow!("empty sketch"))?;
-
-        // ---- fused count + band extraction -----------------------------
-        cluster.broadcast(&(pivot, lo, hi));
-        // the band's width is governed by the sketch that produced it —
-        // which for cached (streamed) sketches may be coarser than this
-        // engine's ε. Budget against the looser of the two, or a
-        // mismatched query engine would overflow on every query and
-        // silently pay the fallback round forever.
-        let budget_eps = self.params.epsilon.max(sketch.epsilon);
-        let budget = self
-            .params
-            .candidate_budget
-            .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
-        let backend = self.backend.as_ref();
-        let pending = cluster.map_partitions(data, |part, _| {
-            backend.band_extract(part, pivot, lo, hi, budget)
-        });
-        let mut merged = cluster
-            .tree_reduce(pending, self.params.tree_depth, |a, b| a.merge(b, budget))
-            .expect("nonempty dataset");
-        debug_assert_eq!(merged.band.total(), n);
-        debug_assert_eq!(merged.pivot.total(), n);
-
-        let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
-        if lt <= k && k < lt + eq {
-            // the pivot's own run covers the target — free exit
-            return Ok(self.finish(cluster, n, pivot));
-        }
-        if let Some(value) = cluster.driver(|| resolve_band(&mut merged, lo, hi, k)) {
-            // exact answer out of the extracted band
-            return Ok(self.finish(cluster, n, value));
-        }
-
-        // ---- fallback: classic candidate extraction --------------------
-        // Reached only on candidate overflow or an out-of-contract
-        // sketch; the fused pass's counts still give the exact Δk.
-        let delta = pivot_delta(lt, eq, k);
-        debug_assert!(delta != 0);
-        cluster.broadcast(&delta);
-        let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta));
-        let final_slice = cluster
-            .tree_reduce(slices, self.params.tree_depth, |a, b| {
-                reduce_slices(a, b, delta)
-            })
-            .expect("nonempty dataset");
-
-        let value = cluster.driver(|| {
-            if delta < 0 {
-                final_slice.iter().copied().min()
-            } else {
-                final_slice.iter().copied().max()
-            }
-        });
-        let value = value.ok_or_else(|| {
-            anyhow::anyhow!("empty candidate slice: Δk={delta}, lt={lt}, eq={eq}, k={k}")
-        })?;
-        Ok(self.finish(cluster, n, value))
+    ) -> anyhow::Result<Outcome> {
+        let mut out =
+            select_with_sketch_with(cluster, self.backend.as_ref(), &self.params, data, sketch, q)?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 }
 
@@ -328,33 +455,6 @@ pub(crate) fn pivot_delta(lt: u64, eq: u64, k: u64) -> i64 {
     k as i64 - approx_rank
 }
 
-impl QuantileAlgorithm for GkSelect {
-    fn name(&self) -> &'static str {
-        "GK Select"
-    }
-
-    fn exact(&self) -> bool {
-        true
-    }
-
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        cluster.reset_run();
-
-        // ---- Round 1: sketch-derived pivot + candidate band ------------
-        let sketch = build_global_sketch(
-            cluster,
-            data,
-            self.params.variant,
-            self.params.merge,
-            self.params.epsilon,
-        )?;
-
-        // ---- Round 2 (+3 fallback): the fused post-sketch protocol -----
-        self.select_with_sketch(cluster, data, &sketch, q)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +462,16 @@ mod tests {
     use crate::cluster::netmodel::CONTAINER_OVERHEAD;
     use crate::cluster::ClusterConfig;
     use crate::data::{DataGenerator, Distribution};
+
+    fn run(
+        cluster: &mut Cluster,
+        data: &Dataset<Key>,
+        q: f64,
+        params: &GkSelectParams,
+    ) -> Outcome {
+        let backend = NativeBackend::new();
+        quantile_with(cluster, &backend, params, data, q).unwrap()
+    }
 
     fn check_with(
         dist: Distribution,
@@ -373,12 +483,12 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = dist.generator(33).generate(&mut c, n);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = GkSelect::new(GkSelectParams {
+        let params = GkSelectParams {
             epsilon: eps,
             candidate_budget: budget,
             ..Default::default()
-        });
-        let out = alg.quantile(&mut c, &data, q).unwrap();
+        };
+        let out = run(&mut c, &data, q, &params);
         assert_eq!(
             out.value, truth,
             "{}: exactness violated at q={q} n={n} eps={eps}",
@@ -495,11 +605,11 @@ mod tests {
         let n = 100_000u64;
         let eps = 0.01;
         let data = Distribution::Uniform.generator(5).generate(&mut c, n);
-        let mut alg = GkSelect::new(GkSelectParams {
+        let params = GkSelectParams {
             epsilon: eps,
             ..Default::default()
-        });
-        let out = alg.quantile(&mut c, &data, 0.25).unwrap();
+        };
+        let out = run(&mut c, &data, 0.25, &params);
 
         // Derived traffic bound, no magic numbers: per fused-pass message
         // the payload is the 8 counters + flag + ≤ budget candidate keys
@@ -532,10 +642,44 @@ mod tests {
             let mut c = Cluster::new(ClusterConfig::local(2, 4));
             let data = Distribution::Uniform.generator(n).generate(&mut c, n.max(1));
             let truth = oracle_quantile(&data, 0.5).unwrap();
-            let mut alg = GkSelect::new(GkSelectParams::default());
-            let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+            let out = run(&mut c, &data, 0.5, &GkSelectParams::default());
             assert_eq!(out.value, truth, "n={n}");
         }
+    }
+
+    #[test]
+    fn strategy_executes_all_plan_shapes() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let data = Dataset::from_vec((0..1_000).collect(), 4).unwrap();
+        let strategy = GkSelectStrategy::default();
+        let backend = NativeBackend::new();
+
+        let mut ctx = EngineCtx {
+            cluster: &mut c,
+            backend: &backend,
+            data: &data,
+        };
+        let single = strategy
+            .execute_plan(&mut ctx, &QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(single.value(), 500);
+
+        let rank = strategy
+            .execute_plan(&mut ctx, &QuantileQuery::Rank(500))
+            .unwrap();
+        assert_eq!(rank.value(), 500);
+
+        let multi = strategy
+            .execute_plan(&mut ctx, &QuantileQuery::Multi(vec![0.1, 0.9]))
+            .unwrap();
+        assert_eq!(multi.values, vec![100, 900]);
+        // the batched path shares one fused scan — not one per quantile
+        assert_eq!(multi.report.data_scans, 2);
+
+        let sk = strategy
+            .execute_plan(&mut ctx, &QuantileQuery::Sketched { q: 0.5, eps: 0.1 })
+            .unwrap();
+        assert!(!sk.report.exact);
     }
 
     #[test]

@@ -14,13 +14,14 @@
 //! space is `O(bins + band)` instead of `O((P/ε)log(εn/P) + εn)` — the
 //! regime the paper worries about when ε must be tiny.
 
-use super::{make_backend_report, Outcome, QuantileAlgorithm};
+use super::{drive_plan, run_report, Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::runtime::{KernelBackend, NativeBackend};
 use crate::select::{quickselect, SplitMix64};
 use crate::{target_rank, Key};
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 /// Histogram Select knobs.
 #[derive(Debug, Clone)]
@@ -47,31 +48,140 @@ impl Default for HistogramSelectParams {
     }
 }
 
-/// Iterative histogram-refinement exact selection.
-pub struct HistogramSelect {
-    pub params: HistogramSelectParams,
-    backend: Box<dyn KernelBackend>,
-}
+/// The iterative histogram-refinement protocol through an explicit
+/// kernel backend. Resets the run ledger.
+pub(crate) fn histogram_quantile_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &HistogramSelectParams,
+    data: &Dataset<Key>,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    if params.nbins < 2 {
+        return Err(EngineError::InvalidConfig(
+            "histogram select needs at least 2 bins".to_string(),
+        ));
+    }
+    cluster.reset_run();
+    let n = data.len();
+    let mut k = target_rank(n, q);
 
-impl HistogramSelect {
-    pub fn new(params: HistogramSelectParams) -> Self {
-        Self {
-            params,
-            backend: Box::new(NativeBackend::new()),
+    // Round 1: global min/max seeds the value range
+    let pending = cluster.map_partitions(data, |part, _| backend.minmax(part));
+    let bounds = cluster
+        .reduce(pending, |a, b| match (a, b) {
+            (None, x) | (x, None) => x,
+            (Some((alo, ahi)), Some((blo, bhi))) => Some((alo.min(blo), ahi.max(bhi))),
+        })
+        .flatten();
+    let (mut lo, mut hi) = bounds.ok_or(EngineError::EmptyInput)?;
+
+    // Refinement rounds: histogram over [lo, hi], zoom into the bin
+    // holding rank k (k rebased as mass below the band is discarded)
+    let nbins = params.nbins;
+    let mut band_count = n;
+    for _ in 0..params.max_rounds {
+        if lo == hi || band_count <= params.extract_cap {
+            break;
         }
+        let span = hi as i64 - lo as i64 + 1;
+        let width = (span + nbins as i64 - 1) / nbins as i64; // ceil
+        let lo_i = lo as i64;
+        let pending = cluster.map_partitions(data, |part, _| {
+            // restrict to the live band, then bucket
+            let banded: Vec<Key> = part
+                .iter()
+                .copied()
+                .filter(|&v| v >= lo && v <= hi)
+                .collect();
+            backend.histogram(&banded, lo_i, width, nbins)
+        });
+        let hist = cluster
+            .reduce(pending, |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            })
+            .expect("nonempty");
+
+        // locate the bin containing rank k within the band
+        let mut acc = 0u64;
+        let mut found = None;
+        for (b, &c) in hist.iter().enumerate() {
+            if acc + c > k {
+                found = Some((b, acc, c));
+                break;
+            }
+            acc += c;
+        }
+        let (bin, below, in_bin) = found.ok_or_else(|| {
+            EngineError::Execution(format!("rank {k} beyond band mass"))
+        })?;
+        k -= below;
+        band_count = in_bin;
+        let new_lo = lo_i + bin as i64 * width;
+        let new_hi = (new_lo + width - 1).min(hi as i64);
+        lo = new_lo.max(lo as i64) as Key;
+        hi = new_hi as Key;
     }
 
-    pub fn with_backend(params: HistogramSelectParams, backend: Box<dyn KernelBackend>) -> Self {
-        Self { params, backend }
+    if lo == hi {
+        // band collapsed to a single value — it is the answer
+        return Ok(finish(cluster, n, lo));
+    }
+    if band_count > params.extract_cap {
+        // the refinement budget ran out with the band still too large to
+        // ship — the histogram analogue of a candidate-budget overflow
+        return Err(EngineError::BudgetOverflow {
+            fallback_used: false,
+        });
     }
 
-    /// [`make_backend_report`] with this engine's name and backend.
-    fn finish(&self, cluster: &Cluster, n: u64, value: Key) -> Outcome {
-        make_backend_report(self.name(), true, cluster, n, value, self.backend.as_ref())
+    // Final round: extract the band and select exactly on the driver
+    let (blo, bhi) = (lo, hi);
+    let pending = cluster.map_partitions(data, |part, _| {
+        part.iter()
+            .copied()
+            .filter(|&v| v >= blo && v <= bhi)
+            .collect::<Vec<Key>>()
+    });
+    let slices = cluster.collect(pending);
+    let seed = params.seed;
+    let value = cluster.driver(move || {
+        let mut band: Vec<Key> = slices.into_iter().flatten().collect();
+        debug_assert!((k as usize) < band.len());
+        let mut rng = SplitMix64::new(seed);
+        quickselect(&mut band, k as usize, &mut rng);
+        band[k as usize]
+    });
+    Ok(finish(cluster, n, value))
+}
+
+fn finish(cluster: &Cluster, n: u64, value: Key) -> Outcome {
+    Outcome {
+        value,
+        report: run_report("Hist Select", true, cluster, n),
     }
 }
 
-impl QuantileAlgorithm for HistogramSelect {
+/// The stateless histogram-refinement strategy behind
+/// `AlgoChoice::HistSelect`.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSelectStrategy {
+    pub params: HistogramSelectParams,
+}
+
+impl HistogramSelectStrategy {
+    pub fn new(params: HistogramSelectParams) -> Self {
+        Self { params }
+    }
+}
+
+impl QuantileAlgorithm for HistogramSelectStrategy {
     fn name(&self) -> &'static str {
         "Hist Select"
     }
@@ -80,103 +190,58 @@ impl QuantileAlgorithm for HistogramSelect {
         true
     }
 
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        ensure!(self.params.nbins >= 2, "need at least 2 bins");
-        cluster.reset_run();
-        let n = data.len();
-        let mut k = target_rank(n, q);
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let backend = ctx.backend;
+        let data = ctx.data;
+        drive_plan(ctx.cluster, data, query, |cluster, q| {
+            histogram_quantile_with(cluster, backend, &self.params, data, q)
+        })
+    }
+}
 
-        // Round 1: global min/max seeds the value range
-        let backend = self.backend.as_ref();
-        let pending = cluster.map_partitions(data, |part, _| backend.minmax(part));
-        let bounds = cluster
-            .reduce(pending, |a, b| match (a, b) {
-                (None, x) | (x, None) => x,
-                (Some((alo, ahi)), Some((blo, bhi))) => Some((alo.min(blo), ahi.max(bhi))),
-            })
-            .flatten();
-        let (mut lo, mut hi) = bounds.ok_or_else(|| anyhow::anyhow!("empty dataset"))?;
+/// The pre-redesign backend-owning driver. Kept as a thin shim for one
+/// release — route queries through `QuantileEngine::execute` instead.
+pub struct HistogramSelect {
+    pub params: HistogramSelectParams,
+    backend: Box<dyn KernelBackend>,
+}
 
-        // Refinement rounds: histogram over [lo, hi], zoom into the bin
-        // holding rank k (k rebased as mass below the band is discarded)
-        let nbins = self.params.nbins;
-        let mut band_count = n;
-        for _ in 0..self.params.max_rounds {
-            if lo == hi || band_count <= self.params.extract_cap {
-                break;
-            }
-            let span = hi as i64 - lo as i64 + 1;
-            let width = (span + nbins as i64 - 1) / nbins as i64; // ceil
-            let backend = self.backend.as_ref();
-            let lo_i = lo as i64;
-            let pending = cluster.map_partitions(data, |part, _| {
-                // restrict to the live band, then bucket
-                let banded: Vec<Key> = part
-                    .iter()
-                    .copied()
-                    .filter(|&v| v >= lo && v <= hi)
-                    .collect();
-                backend.histogram(&banded, lo_i, width, nbins)
-            });
-            let hist = cluster
-                .reduce(pending, |mut a, b| {
-                    for (x, y) in a.iter_mut().zip(b) {
-                        *x += y;
-                    }
-                    a
-                })
-                .expect("nonempty");
-
-            // locate the bin containing rank k within the band
-            let mut acc = 0u64;
-            let mut found = None;
-            for (b, &c) in hist.iter().enumerate() {
-                if acc + c > k {
-                    found = Some((b, acc, c));
-                    break;
-                }
-                acc += c;
-            }
-            let (bin, below, in_bin) =
-                found.ok_or_else(|| anyhow::anyhow!("rank {k} beyond band mass"))?;
-            k -= below;
-            band_count = in_bin;
-            let new_lo = lo_i + bin as i64 * width;
-            let new_hi = (new_lo + width - 1).min(hi as i64);
-            lo = new_lo.max(lo as i64) as Key;
-            hi = new_hi as Key;
+impl HistogramSelect {
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a `QuantileEngine` with `AlgoChoice::HistSelect` and call `execute`"
+    )]
+    pub fn new(params: HistogramSelectParams) -> Self {
+        Self {
+            params,
+            backend: Box::new(NativeBackend::new()),
         }
+    }
 
-        if lo == hi {
-            // band collapsed to a single value — it is the answer
-            return Ok(self.finish(cluster, n, lo));
-        }
-        if band_count > self.params.extract_cap {
-            bail!(
-                "band still holds {band_count} keys after {} rounds",
-                self.params.max_rounds
-            );
-        }
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `EngineBuilder::kernel_backend` / `backend_name` instead"
+    )]
+    pub fn with_backend(params: HistogramSelectParams, backend: Box<dyn KernelBackend>) -> Self {
+        Self { params, backend }
+    }
 
-        // Final round: extract the band and select exactly on the driver
-        let (blo, bhi) = (lo, hi);
-        let pending = cluster.map_partitions(data, |part, _| {
-            part.iter()
-                .copied()
-                .filter(|&v| v >= blo && v <= bhi)
-                .collect::<Vec<Key>>()
-        });
-        let slices = cluster.collect(pending);
-        let seed = self.params.seed;
-        let value = cluster.driver(move || {
-            let mut band: Vec<Key> = slices.into_iter().flatten().collect();
-            debug_assert!((k as usize) < band.len());
-            let mut rng = SplitMix64::new(seed);
-            quickselect(&mut band, k as usize, &mut rng);
-            band[k as usize]
-        });
-        Ok(self.finish(cluster, n, value))
+    /// One exact quantile — the pre-redesign entry point. Stamps this
+    /// shim's own backend lane width to preserve the old report
+    /// contract.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` with `AlgoChoice::HistSelect`"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        let mut out =
+            histogram_quantile_with(cluster, self.backend.as_ref(), &self.params, data, q)?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 }
 
@@ -191,11 +256,12 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = dist.generator(44).generate(&mut c, n);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = HistogramSelect::new(HistogramSelectParams {
+        let backend = NativeBackend::new();
+        let params = HistogramSelectParams {
             extract_cap: cap,
             ..Default::default()
-        });
-        let out = alg.quantile(&mut c, &data, q).unwrap();
+        };
+        let out = histogram_quantile_with(&mut c, &backend, &params, &data, q).unwrap();
         assert_eq!(out.value, truth, "{} q={q}", dist.label());
         out
     }
@@ -234,11 +300,12 @@ mod tests {
         vals.extend(0..100);
         let data = Dataset::from_vec(vals, 4).unwrap();
         let truth = oracle_quantile(&data, 0.5).unwrap();
-        let mut alg = HistogramSelect::new(HistogramSelectParams {
+        let backend = NativeBackend::new();
+        let params = HistogramSelectParams {
             extract_cap: 100, // force refinement into the spike
             ..Default::default()
-        });
-        let out = alg.quantile(&mut c, &data, 0.5).unwrap();
+        };
+        let out = histogram_quantile_with(&mut c, &backend, &params, &data, 0.5).unwrap();
         assert_eq!(out.value, truth);
     }
 

@@ -6,13 +6,15 @@ use super::count_discard::{AggMode, CountDiscardParams, CountDiscardSelect};
 use super::{Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::Cluster;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::Key;
 use anyhow::Result;
 
 /// Jeffers parameters (count-discard knobs).
 pub type JeffersParams = CountDiscardParams;
 
-/// Jeffers Select: `O(log n)` rounds, each ending in a collect.
+/// Jeffers Select: `O(log n)` rounds, each ending in a collect — the
+/// stateless strategy behind `AlgoChoice::Jeffers`.
 pub struct Jeffers {
     inner: CountDiscardSelect,
 }
@@ -22,6 +24,15 @@ impl Jeffers {
         Self {
             inner: CountDiscardSelect::new("Jeffers", AggMode::Collect, params),
         }
+    }
+
+    /// One exact quantile — the pre-redesign entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute` with `AlgoChoice::Jeffers`"
+    )]
+    pub fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
+        Ok(self.inner.quantile_with(cluster, data, q)?)
     }
 }
 
@@ -34,15 +45,19 @@ impl QuantileAlgorithm for Jeffers {
         true
     }
 
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome> {
-        self.inner.quantile(cluster, data, q)
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        self.inner.execute_plan(ctx, query)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::oracle_quantile;
+    use crate::algorithms::{oracle_quantile, plan_single};
     use crate::cluster::ClusterConfig;
     use crate::data::{DataGenerator, Distribution};
 
@@ -51,9 +66,9 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Zipf.generator(4).generate(&mut c, 20_000);
         let truth = oracle_quantile(&data, 0.75).unwrap();
-        let mut alg = Jeffers::new(JeffersParams::default());
-        let out = alg.quantile(&mut c, &data, 0.75).unwrap();
-        assert_eq!(out.value, truth);
+        let alg = Jeffers::new(JeffersParams::default());
+        let out = plan_single(&alg, &mut c, &data, 0.75).unwrap();
+        assert_eq!(out.value(), truth);
         assert_eq!(out.report.algorithm, "Jeffers");
     }
 
@@ -62,10 +77,10 @@ mod tests {
         // collect funnels every partition's stats to the driver each round
         let mut c = Cluster::new(ClusterConfig::local(4, 32));
         let data = Distribution::Uniform.generator(5).generate(&mut c, 100_000);
-        let mut j = Jeffers::new(JeffersParams::default());
-        let out_j = j.quantile(&mut c, &data, 0.5).unwrap();
-        let mut a = super::super::afs::Afs::new(CountDiscardParams::default());
-        let out_a = a.quantile(&mut c, &data, 0.5).unwrap();
+        let j = Jeffers::new(JeffersParams::default());
+        let out_j = plan_single(&j, &mut c, &data, 0.5).unwrap();
+        let a = super::super::afs::Afs::new(CountDiscardParams::default());
+        let out_a = plan_single(&a, &mut c, &data, 0.5).unwrap();
         assert!(
             out_j.report.bytes_to_driver > out_a.report.bytes_to_driver,
             "jeffers {} !> afs {}",

@@ -10,6 +10,13 @@
 //! | [`jeffers`] | IV-C | yes | `O(log n)` |
 //! | [`approx_quantile`] | IV-D (GK Sketch) | no | 1 |
 //! | [`histogram_select`] | extension (§V-6 discussion) | yes | ≤ 2 + ⌈32/log₂bins⌉ |
+//!
+//! Since the [`crate::engine`] redesign, algorithms are **stateless
+//! strategies**: the [`QuantileAlgorithm`] trait takes a typed
+//! [`QuantileQuery`] plan and an [`EngineCtx`] carrying the engine's
+//! cluster, kernel backend, and source dataset. The old one-method-per-
+//! algorithm constructors remain as thin `#[deprecated]` shims for one
+//! release — route new code through [`crate::engine::QuantileEngine`].
 
 pub mod afs;
 pub mod approx_quantile;
@@ -23,67 +30,109 @@ pub mod multi_select;
 use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
 use crate::cluster::Cluster;
-use crate::runtime::KernelBackend;
+use crate::engine::{EngineCtx, EngineError, QuantileQuery, QueryOutcome};
 use crate::Key;
-use anyhow::Result;
 
-/// Result of one quantile query: the value plus the full measured report.
+/// Result of one single-value query: the value plus the full measured
+/// report. The engine-level equivalent (values plural, lane width
+/// stamped) is [`QueryOutcome`]; `Outcome` remains the currency of the
+/// per-algorithm internals and the deprecated shims.
 #[derive(Debug, Clone)]
 pub struct Outcome {
     pub value: Key,
     pub report: MetricsReport,
 }
 
-/// Common driver interface over all algorithms.
+/// Common strategy interface over all algorithms: execute one typed
+/// query plan against the context's dataset. Strategies are stateless —
+/// the kernel backend and the cluster arrive through the [`EngineCtx`],
+/// so one engine-owned backend serves every algorithm (and the report's
+/// SIMD lane width can be stamped in exactly one place, by the engine).
 pub trait QuantileAlgorithm {
     fn name(&self) -> &'static str;
 
-    /// Whether the returned value is the exact order statistic.
+    /// Whether returned values are exact order statistics.
     fn exact(&self) -> bool;
 
-    /// Answer quantile `q` over `data`. Resets the cluster's run ledger on
-    /// entry so the report covers exactly this query.
-    fn quantile(&mut self, cluster: &mut Cluster, data: &Dataset<Key>, q: f64) -> Result<Outcome>;
+    /// Execute `query` over `ctx.data`. Single-shot plans reset the
+    /// cluster's run ledger on entry so the report covers exactly this
+    /// query.
+    fn execute_plan(
+        &self,
+        ctx: &mut EngineCtx<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError>;
 }
 
-/// Build the end-of-run report for an algorithm.
-pub(crate) fn make_report(
-    name: &str,
-    exact: bool,
-    cluster: &Cluster,
-    n: u64,
-    value: Key,
-) -> Outcome {
-    Outcome {
-        value,
-        report: MetricsReport::from_metrics(
-            name,
-            n,
-            cluster.cfg.partitions,
-            cluster.cfg.executors,
-            cluster.elapsed_secs(),
-            &cluster.metrics,
-            exact,
-        ),
+/// Shared plan dispatch: validates the query, then answers it through
+/// the strategy's single-quantile closure. `Multi` loops the closure and
+/// folds the per-run reports ([`MetricsReport::absorb`]) — strategies
+/// with a native batched path (GK Select's fused multi-band scan)
+/// intercept `Multi` before delegating here. `Sketched` always runs the
+/// Spark-default GK sketch at the requested ε, strategy-independent.
+pub(crate) fn drive_plan<S>(
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    query: &QuantileQuery,
+    mut single: S,
+) -> Result<QueryOutcome, EngineError>
+where
+    S: FnMut(&mut Cluster, f64) -> Result<Outcome, EngineError>,
+{
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    let n = data.len();
+    query.validate(n)?;
+    match query {
+        QuantileQuery::Single(q) => Ok(single(cluster, *q)?.into()),
+        QuantileQuery::Rank(k) => {
+            Ok(single(cluster, crate::engine::rank_to_quantile(*k, n))?.into())
+        }
+        QuantileQuery::Multi(qs) => {
+            let mut values = Vec::with_capacity(qs.len());
+            let mut report: Option<MetricsReport> = None;
+            for &q in qs {
+                let out = single(cluster, q)?;
+                values.push(out.value);
+                report = Some(match report {
+                    None => out.report,
+                    Some(mut acc) => {
+                        acc.absorb(&out.report);
+                        acc
+                    }
+                });
+            }
+            Ok(QueryOutcome {
+                values,
+                report: report.expect("validated non-empty"),
+            })
+        }
+        QuantileQuery::Sketched { q, eps } => {
+            let params = approx_quantile::ApproxQuantileParams {
+                epsilon: *eps,
+                variant: approx_quantile::SketchVariant::Spark,
+                merge: approx_quantile::MergeStrategy::Fold,
+            };
+            Ok(approx_quantile::sketch_quantile_with(cluster, data, &params, *q)?.into())
+        }
     }
 }
 
-/// [`make_report`] for algorithms that own a kernel backend: also
-/// stamps the backend's active SIMD lane width, so every perf record
-/// says which band-scan dispatch produced it. New backend-owning exit
-/// paths must use this (not `make_report`) or their reports mislabel
-/// the dispatch as scalar.
-pub(crate) fn make_backend_report(
-    name: &str,
-    exact: bool,
-    cluster: &Cluster,
-    n: u64,
-    value: Key,
-    backend: &dyn KernelBackend,
-) -> Outcome {
-    let mut out = make_report(name, exact, cluster, n, value);
-    out.report = out.report.with_simd_lane_width(backend.simd_lane_width());
-    out
+/// Build the end-of-run report for an algorithm from the cluster's live
+/// ledger. The single report constructor — the engine stamps the SIMD
+/// lane width afterwards, centrally, so there is no backend-aware
+/// variant to forget (the old `make_backend_report` footgun).
+pub(crate) fn run_report(name: &str, exact: bool, cluster: &Cluster, n: u64) -> MetricsReport {
+    MetricsReport::from_metrics(
+        name,
+        n,
+        cluster.cfg.partitions,
+        cluster.cfg.executors,
+        cluster.elapsed_secs(),
+        &cluster.metrics,
+        exact,
+    )
 }
 
 /// Ground-truth oracle: exact quantile by full local sort (tests and
@@ -96,6 +145,22 @@ pub fn oracle_quantile(data: &Dataset<Key>, q: f64) -> Option<Key> {
     }
     all.sort_unstable();
     Some(all[crate::target_rank(all.len() as u64, q) as usize])
+}
+
+#[cfg(test)]
+pub(crate) fn plan_single(
+    alg: &dyn QuantileAlgorithm,
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    q: f64,
+) -> Result<QueryOutcome, EngineError> {
+    let backend = crate::runtime::NativeBackend::new();
+    let mut ctx = EngineCtx {
+        cluster,
+        backend: &backend,
+        data,
+    };
+    alg.execute_plan(&mut ctx, &QuantileQuery::Single(q))
 }
 
 #[cfg(test)]
@@ -120,9 +185,38 @@ mod tests {
     #[test]
     fn report_carries_cluster_shape() {
         let c = Cluster::new(ClusterConfig::local(2, 4));
-        let o = make_report("x", true, &c, 100, 7);
-        assert_eq!(o.report.partitions, 4);
-        assert_eq!(o.report.executors, 2);
-        assert_eq!(o.value, 7);
+        let r = run_report("x", true, &c, 100);
+        assert_eq!(r.partitions, 4);
+        assert_eq!(r.executors, 2);
+        assert_eq!(r.n, 100);
+        assert_eq!(r.simd_lane_width, 1, "strategies never stamp lane width");
+    }
+
+    #[test]
+    fn drive_plan_rejects_malformed_plans() {
+        let mut c = Cluster::new(ClusterConfig::local(1, 2));
+        let data = Dataset::from_vec(vec![1, 2, 3], 2).unwrap();
+        let single = |_: &mut Cluster, _: f64| -> Result<Outcome, EngineError> {
+            unreachable!("validation must fire first")
+        };
+        assert_eq!(
+            drive_plan(&mut c, &data, &QuantileQuery::Single(-0.1), single).unwrap_err(),
+            EngineError::BadQuantile(-0.1)
+        );
+        let single = |_: &mut Cluster, _: f64| -> Result<Outcome, EngineError> {
+            unreachable!()
+        };
+        assert_eq!(
+            drive_plan(&mut c, &data, &QuantileQuery::Rank(3), single).unwrap_err(),
+            EngineError::BadRank { k: 3, n: 3 }
+        );
+        let empty: Dataset<Key> = Dataset::from_partitions(vec![vec![]]).unwrap();
+        let single = |_: &mut Cluster, _: f64| -> Result<Outcome, EngineError> {
+            unreachable!()
+        };
+        assert_eq!(
+            drive_plan(&mut c, &empty, &QuantileQuery::Single(0.5), single).unwrap_err(),
+            EngineError::EmptyInput
+        );
     }
 }

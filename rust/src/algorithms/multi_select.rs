@@ -18,23 +18,25 @@
 //! counts contradict the sketch) fall back to one shared classic
 //! extraction round — still ≤ 3 rounds for the whole batch. Marginal
 //! cost per extra quantile is one more accumulator in the same scan; the
-//! sketch (the dominant term) is shared. `repro` exposes it through the
-//! library API; `examples/telemetry_pipeline.rs`-style monitoring is the
-//! use case (p50/p90/p99/p999 of the same window).
+//! sketch (the dominant term) is shared.
+//!
+//! This is the machinery behind `QuantileQuery::Multi` on the GK Select
+//! strategy — the engine's `execute` is the public entry point; the
+//! backend-owning [`MultiSelect`] struct remains as a deprecated shim.
 
 use super::approx_quantile::build_global_sketch;
 use super::gk_select::{
     default_candidate_budget, pivot_delta, reduce_slices, resolve_band, second_pass,
     GkSelectParams,
 };
-use super::make_backend_report;
+use super::run_report;
 use crate::cluster::dataset::Dataset;
 use crate::cluster::netmodel::{NetSize, CONTAINER_OVERHEAD};
 use crate::cluster::Cluster;
+use crate::engine::EngineError;
 use crate::runtime::{BandExtract, KernelBackend, NativeBackend};
 use crate::sketch::GkCore;
 use crate::{target_rank, Key};
-use anyhow::{ensure, Result};
 
 /// Fused per-query results travelling through treeReduce together.
 struct ExtractSet(Vec<BandExtract>);
@@ -59,12 +61,6 @@ impl NetSize for SliceSet {
     }
 }
 
-/// Batched exact multi-quantile driver.
-pub struct MultiSelect {
-    pub params: GkSelectParams,
-    backend: Box<dyn KernelBackend>,
-}
-
 /// Result of a batched query.
 #[derive(Debug, Clone)]
 pub struct MultiOutcome {
@@ -73,7 +69,194 @@ pub struct MultiOutcome {
     pub report: crate::cluster::metrics::MetricsReport,
 }
 
+/// The full batched protocol — sketch round plus one fused multi-band
+/// scan — through an explicit kernel backend. Resets the run ledger.
+pub(crate) fn quantiles_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    data: &Dataset<Key>,
+    qs: &[f64],
+) -> Result<MultiOutcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    if qs.is_empty() {
+        return Err(EngineError::NoQuantiles);
+    }
+    cluster.reset_run();
+
+    // ---- Round 1: one sketch, m pivots + m bands -------------------
+    let sketch = build_global_sketch(cluster, data, params.variant, params.merge, params.epsilon)?;
+
+    // ---- Round 2 (+3 fallback): one fused scan for all m queries ---
+    quantiles_with_sketch_with(cluster, backend, params, data, &sketch, qs)
+}
+
+/// The batched post-sketch protocol against an **already-merged** global
+/// sketch covering exactly `data`: one fused multi-band scan answers
+/// every quantile (shared fallback round on overflow). Does NOT reset
+/// the run ledger — the streaming query path calls this with cached
+/// sketches so an m-quantile query costs one data scan.
+pub(crate) fn quantiles_with_sketch_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    data: &Dataset<Key>,
+    sketch: &GkCore,
+    qs: &[f64],
+) -> Result<MultiOutcome, EngineError> {
+    if data.is_empty() {
+        return Err(EngineError::EmptyInput);
+    }
+    if qs.is_empty() {
+        return Err(EngineError::NoQuantiles);
+    }
+    let n = data.len();
+    if sketch.count != n {
+        return Err(EngineError::Execution(format!(
+            "sketch covers {} records, dataset holds {n}",
+            sketch.count
+        )));
+    }
+    let ks: Vec<u64> = qs.iter().map(|&q| target_rank(n, q)).collect();
+
+    let queries: Vec<(Key, Key, Key)> = cluster.driver(|| {
+        qs.iter()
+            .zip(ks.iter())
+            .map(|(&q, &k)| {
+                let pivot = sketch.query_quantile(q).expect("nonempty sketch");
+                let (lo, hi) = sketch.query_rank_bounds(k + 1).expect("nonempty sketch");
+                (pivot, lo, hi)
+            })
+            .collect()
+    });
+
+    // ---- Round 2: one fused scan serving all m queries --------------
+    cluster.broadcast(&queries);
+    // budget against the looser of the engine's ε and the (possibly
+    // cached, coarser) sketch's ε — see gk_select::select_with_sketch_with
+    let budget_eps = params.epsilon.max(sketch.epsilon);
+    let budget = params
+        .candidate_budget
+        .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
+    let qy = queries.clone();
+    let pending = cluster.map_partitions(data, |part, _| {
+        ExtractSet(backend.multi_band_extract(part, &qy, budget))
+    });
+    let mut merged = cluster
+        .tree_reduce(pending, params.tree_depth, |a, b| {
+            ExtractSet(
+                a.0.into_iter()
+                    .zip(b.0)
+                    .map(|(x, y)| x.merge(y, budget))
+                    .collect(),
+            )
+        })
+        .expect("nonempty dataset");
+
+    // per-query resolution: eq-run exit, band resolve, or open with Δk
+    let mut values: Vec<Option<Key>> = vec![None; qs.len()];
+    let mut deltas: Vec<i64> = vec![0; qs.len()];
+    let resolved: Vec<Option<Key>> = cluster.driver(|| {
+        merged
+            .0
+            .iter_mut()
+            .zip(queries.iter())
+            .zip(ks.iter())
+            .map(|((ext, &(pivot, lo, hi)), &k)| {
+                let (lt, eq) = (ext.pivot.lt, ext.pivot.eq);
+                if lt <= k && k < lt + eq {
+                    return Some(pivot);
+                }
+                resolve_band(ext, lo, hi, k)
+            })
+            .collect()
+    });
+    for (i, v) in resolved.into_iter().enumerate() {
+        match v {
+            Some(v) => values[i] = Some(v),
+            None => {
+                let ext = &merged.0[i];
+                deltas[i] = pivot_delta(ext.pivot.lt, ext.pivot.eq, ks[i]);
+            }
+        }
+    }
+
+    if values.iter().all(Option::is_some) {
+        // all m answers out of the one fused scan — 2 rounds
+        let out = values.into_iter().map(|v| v.expect("set")).collect();
+        return Ok(MultiOutcome {
+            values: out,
+            report: run_report("GK Multi-Select", true, cluster, n),
+        });
+    }
+
+    // ---- Round 3 (fallback): classic extraction for open queries ---
+    cluster.broadcast(&deltas);
+    let open: Vec<usize> = (0..qs.len()).filter(|&i| values[i].is_none()).collect();
+    let open_in_closure = open.clone();
+    let pv: Vec<Key> = queries.iter().map(|&(p, _, _)| p).collect();
+    let ds = deltas.clone();
+    let pending = cluster.map_partitions(data, |part, _| {
+        SliceSet(
+            open_in_closure
+                .iter()
+                .map(|&i| second_pass(part, pv[i], ds[i]))
+                .collect(),
+        )
+    });
+    let merged = cluster
+        .tree_reduce(pending, params.tree_depth, |a, b| {
+            SliceSet(
+                a.0.into_iter()
+                    .zip(b.0)
+                    .zip(open.iter())
+                    .map(|((sa, sb), &i)| reduce_slices(sa, sb, deltas[i]))
+                    .collect(),
+            )
+        })
+        .expect("nonempty");
+
+    let resolved: Vec<Option<Key>> = cluster.driver(|| {
+        merged
+            .0
+            .iter()
+            .zip(open.iter())
+            .map(|(slice, &i)| {
+                if deltas[i] < 0 {
+                    slice.iter().min().copied()
+                } else {
+                    slice.iter().max().copied()
+                }
+            })
+            .collect()
+    });
+    for (&i, v) in open.iter().zip(resolved) {
+        values[i] = Some(v.ok_or(EngineError::BudgetOverflow {
+            fallback_used: true,
+        })?);
+    }
+
+    Ok(MultiOutcome {
+        values: values.into_iter().map(|v| v.expect("set")).collect(),
+        report: run_report("GK Multi-Select", true, cluster, n),
+    })
+}
+
+/// The pre-redesign batched driver, owning its own kernel backend. Kept
+/// as a thin shim for one release — route `QuantileQuery::Multi` plans
+/// through [`crate::engine::QuantileEngine::execute`] instead.
+pub struct MultiSelect {
+    pub params: GkSelectParams,
+    backend: Box<dyn KernelBackend>,
+}
+
 impl MultiSelect {
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a `QuantileEngine` and execute `QuantileQuery::Multi(..)`"
+    )]
     pub fn new(params: GkSelectParams) -> Self {
         Self {
             params,
@@ -81,194 +264,60 @@ impl MultiSelect {
         }
     }
 
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `EngineBuilder::kernel_backend` / `backend_name` instead"
+    )]
     pub fn with_backend(params: GkSelectParams, backend: Box<dyn KernelBackend>) -> Self {
         Self { params, backend }
     }
 
     /// Active SIMD lane width of the backend's fused band scan (1 =
-    /// scalar) — stamped onto every report this engine produces.
+    /// scalar).
     pub fn simd_lane_width(&self) -> usize {
         self.backend.simd_lane_width()
     }
 
     /// Exact values for every quantile in `qs`, in 2 rounds (3 if any
-    /// band overflows the candidate budget).
+    /// band overflows the candidate budget). Stamps this shim's own
+    /// backend lane width to preserve the old report contract.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Dataset(..), QuantileQuery::Multi(..))`"
+    )]
     pub fn quantiles(
         &mut self,
         cluster: &mut Cluster,
         data: &Dataset<Key>,
         qs: &[f64],
-    ) -> Result<MultiOutcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        ensure!(!qs.is_empty(), "no quantiles requested");
-        cluster.reset_run();
-
-        // ---- Round 1: one sketch, m pivots + m bands -------------------
-        let sketch = build_global_sketch(
-            cluster,
-            data,
-            self.params.variant,
-            self.params.merge,
-            self.params.epsilon,
-        )?;
-
-        // ---- Round 2 (+3 fallback): one fused scan for all m queries ---
-        self.quantiles_with_sketch(cluster, data, &sketch, qs)
+    ) -> anyhow::Result<MultiOutcome> {
+        let mut out = quantiles_with(cluster, self.backend.as_ref(), &self.params, data, qs)?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 
-    /// The batched post-sketch protocol against an **already-merged**
-    /// global sketch covering exactly `data`: one fused multi-band scan
-    /// answers every quantile (shared fallback round on overflow). Does
-    /// NOT reset the run ledger — the streaming query engine calls this
-    /// with cached sketches so an m-quantile query costs one data scan.
+    /// The batched post-sketch protocol against a pre-merged sketch.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Stream(..), QuantileQuery::Multi(..))`"
+    )]
     pub fn quantiles_with_sketch(
         &mut self,
         cluster: &mut Cluster,
         data: &Dataset<Key>,
         sketch: &GkCore,
         qs: &[f64],
-    ) -> Result<MultiOutcome> {
-        ensure!(!data.is_empty(), "empty dataset");
-        ensure!(!qs.is_empty(), "no quantiles requested");
-        let n = data.len();
-        ensure!(
-            sketch.count == n,
-            "sketch covers {} records, dataset holds {n}",
-            sketch.count
-        );
-        let ks: Vec<u64> = qs.iter().map(|&q| target_rank(n, q)).collect();
-
-        let queries: Vec<(Key, Key, Key)> = cluster.driver(|| {
-            qs.iter()
-                .zip(ks.iter())
-                .map(|(&q, &k)| {
-                    let pivot = sketch.query_quantile(q).expect("nonempty sketch");
-                    let (lo, hi) = sketch.query_rank_bounds(k + 1).expect("nonempty sketch");
-                    (pivot, lo, hi)
-                })
-                .collect()
-        });
-
-        // ---- Round 2: one fused scan serving all m queries --------------
-        cluster.broadcast(&queries);
-        // budget against the looser of the engine's ε and the (possibly
-        // cached, coarser) sketch's ε — see GkSelect::select_with_sketch
-        let budget_eps = self.params.epsilon.max(sketch.epsilon);
-        let budget = self
-            .params
-            .candidate_budget
-            .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
-        let backend = self.backend.as_ref();
-        let qy = queries.clone();
-        let pending = cluster.map_partitions(data, |part, _| {
-            ExtractSet(backend.multi_band_extract(part, &qy, budget))
-        });
-        let mut merged = cluster
-            .tree_reduce(pending, self.params.tree_depth, |a, b| {
-                ExtractSet(
-                    a.0.into_iter()
-                        .zip(b.0)
-                        .map(|(x, y)| x.merge(y, budget))
-                        .collect(),
-                )
-            })
-            .expect("nonempty dataset");
-
-        // per-query resolution: eq-run exit, band resolve, or open with Δk
-        let mut values: Vec<Option<Key>> = vec![None; qs.len()];
-        let mut deltas: Vec<i64> = vec![0; qs.len()];
-        let resolved: Vec<Option<Key>> = cluster.driver(|| {
-            merged
-                .0
-                .iter_mut()
-                .zip(queries.iter())
-                .zip(ks.iter())
-                .map(|((ext, &(pivot, lo, hi)), &k)| {
-                    let (lt, eq) = (ext.pivot.lt, ext.pivot.eq);
-                    if lt <= k && k < lt + eq {
-                        return Some(pivot);
-                    }
-                    resolve_band(ext, lo, hi, k)
-                })
-                .collect()
-        });
-        for (i, v) in resolved.into_iter().enumerate() {
-            match v {
-                Some(v) => values[i] = Some(v),
-                None => {
-                    let ext = &merged.0[i];
-                    deltas[i] = pivot_delta(ext.pivot.lt, ext.pivot.eq, ks[i]);
-                }
-            }
-        }
-
-        if values.iter().all(Option::is_some) {
-            // all m answers out of the one fused scan — 2 rounds
-            let out = values.into_iter().map(|v| v.expect("set")).collect();
-            let rep = make_backend_report(
-                "GK Multi-Select",
-                true,
-                cluster,
-                n,
-                0,
-                self.backend.as_ref(),
-            );
-            return Ok(MultiOutcome {
-                values: out,
-                report: rep.report,
-            });
-        }
-
-        // ---- Round 3 (fallback): classic extraction for open queries ---
-        cluster.broadcast(&deltas);
-        let open: Vec<usize> = (0..qs.len()).filter(|&i| values[i].is_none()).collect();
-        let open_in_closure = open.clone();
-        let pv: Vec<Key> = queries.iter().map(|&(p, _, _)| p).collect();
-        let ds = deltas.clone();
-        let pending = cluster.map_partitions(data, |part, _| {
-            SliceSet(
-                open_in_closure
-                    .iter()
-                    .map(|&i| second_pass(part, pv[i], ds[i]))
-                    .collect(),
-            )
-        });
-        let merged = cluster
-            .tree_reduce(pending, self.params.tree_depth, |a, b| {
-                SliceSet(
-                    a.0.into_iter()
-                        .zip(b.0)
-                        .zip(open.iter())
-                        .map(|((sa, sb), &i)| reduce_slices(sa, sb, deltas[i]))
-                        .collect(),
-                )
-            })
-            .expect("nonempty");
-
-        let resolved: Vec<Key> = cluster.driver(|| {
-            merged
-                .0
-                .iter()
-                .zip(open.iter())
-                .map(|(slice, &i)| {
-                    if deltas[i] < 0 {
-                        *slice.iter().min().expect("nonempty slice")
-                    } else {
-                        *slice.iter().max().expect("nonempty slice")
-                    }
-                })
-                .collect()
-        });
-        for (&i, v) in open.iter().zip(resolved) {
-            values[i] = Some(v);
-        }
-
-        let rep =
-            make_backend_report("GK Multi-Select", true, cluster, n, 0, self.backend.as_ref());
-        Ok(MultiOutcome {
-            values: values.into_iter().map(|v| v.expect("set")).collect(),
-            report: rep.report,
-        })
+    ) -> anyhow::Result<MultiOutcome> {
+        let mut out = quantiles_with_sketch_with(
+            cluster,
+            self.backend.as_ref(),
+            &self.params,
+            data,
+            sketch,
+            qs,
+        )?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 }
 
@@ -282,8 +331,9 @@ mod tests {
     fn run(dist: Distribution, n: u64, qs: &[f64]) -> MultiOutcome {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = dist.generator(55).generate(&mut c, n);
-        let mut alg = MultiSelect::new(GkSelectParams::default());
-        let out = alg.quantiles(&mut c, &data, qs).unwrap();
+        let backend = NativeBackend::new();
+        let out =
+            quantiles_with(&mut c, &backend, &GkSelectParams::default(), &data, qs).unwrap();
         for (&q, &v) in qs.iter().zip(out.values.iter()) {
             assert_eq!(v, oracle_quantile(&data, q).unwrap(), "{} q={q}", dist.label());
         }
@@ -340,12 +390,13 @@ mod tests {
     fn zero_budget_batch_falls_back_exact() {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Distribution::Uniform.generator(56).generate(&mut c, 30_000);
-        let mut alg = MultiSelect::new(GkSelectParams {
+        let backend = NativeBackend::new();
+        let params = GkSelectParams {
             candidate_budget: Some(0),
             ..Default::default()
-        });
+        };
         let qs = [0.25, 0.5, 0.75];
-        let out = alg.quantiles(&mut c, &data, &qs).unwrap();
+        let out = quantiles_with(&mut c, &backend, &params, &data, &qs).unwrap();
         for (&q, &v) in qs.iter().zip(out.values.iter()) {
             assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
         }
@@ -355,10 +406,17 @@ mod tests {
     #[test]
     fn rejects_empty_inputs() {
         let mut c = Cluster::new(ClusterConfig::local(1, 1));
+        let backend = NativeBackend::new();
+        let params = GkSelectParams::default();
         let data = Dataset::from_partitions(vec![vec![]]).unwrap();
-        let mut alg = MultiSelect::new(GkSelectParams::default());
-        assert!(alg.quantiles(&mut c, &data, &[0.5]).is_err());
+        assert_eq!(
+            quantiles_with(&mut c, &backend, &params, &data, &[0.5]).unwrap_err(),
+            EngineError::EmptyInput
+        );
         let data = Dataset::from_vec(vec![1, 2, 3], 1).unwrap();
-        assert!(alg.quantiles(&mut c, &data, &[]).is_err());
+        assert_eq!(
+            quantiles_with(&mut c, &backend, &params, &data, &[]).unwrap_err(),
+            EngineError::NoQuantiles
+        );
     }
 }

@@ -254,10 +254,54 @@ impl MetricsReport {
     }
 
     /// Stamp the kernel backend's active SIMD lane width onto the
-    /// report (builder-style, used by the band-kernel algorithms).
+    /// report (builder-style; the engine is the one caller).
     pub fn with_simd_lane_width(mut self, lanes: usize) -> Self {
         self.simd_lane_width = lanes as u64;
         self
+    }
+
+    /// Fold another report's ledgers into this one — the aggregate cost
+    /// of a query batch answered by consecutive runs (the engine's
+    /// `Multi` plan on strategies without a native batched scan).
+    /// Counters and clocks sum; the real-time ledgers concatenate /
+    /// add elementwise and the derived ratios are recomputed; `exact`
+    /// stays true only if every constituent run was exact.
+    pub fn absorb(&mut self, other: &MetricsReport) {
+        self.elapsed_secs += other.elapsed_secs;
+        self.rounds += other.rounds;
+        self.stage_boundaries += other.stage_boundaries;
+        self.data_scans += other.data_scans;
+        self.shuffles += other.shuffles;
+        self.persists += other.persists;
+        self.network_volume_bytes += other.network_volume_bytes;
+        self.bytes_to_driver += other.bytes_to_driver;
+        self.bytes_shuffled += other.bytes_shuffled;
+        self.bytes_broadcast += other.bytes_broadcast;
+        self.messages += other.messages;
+        self.tree_levels += other.tree_levels;
+        self.stage_walls.extend_from_slice(&other.stage_walls);
+        self.wall_stage_secs += other.wall_stage_secs;
+        for (i, &busy) in other.executor_busy_secs.iter().enumerate() {
+            if i < self.executor_busy_secs.len() {
+                self.executor_busy_secs[i] += busy;
+            } else {
+                self.executor_busy_secs.push(busy);
+            }
+        }
+        let busy_total: f64 = self.executor_busy_secs.iter().sum();
+        let denom = self.executor_busy_secs.len() as f64 * self.wall_stage_secs;
+        self.executor_utilization = if denom > 0.0 { busy_total / denom } else { 0.0 };
+        self.busy_skew = if self.executor_busy_secs.is_empty() || busy_total <= 0.0 {
+            0.0
+        } else {
+            let mean = busy_total / self.executor_busy_secs.len() as f64;
+            let max = self
+                .executor_busy_secs
+                .iter()
+                .fold(0.0_f64, |a, &b| a.max(b));
+            max / mean
+        };
+        self.exact = self.exact && other.exact;
     }
 
     /// One row in the Table V layout.
@@ -405,6 +449,36 @@ mod tests {
         let z = now.since(&now.mark());
         assert_eq!(z.rounds, 0);
         assert!(z.stage_walls.is_empty());
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_recomputes_ratios() {
+        let m = RunMetrics {
+            rounds: 2,
+            data_scans: 2,
+            bytes_to_driver: 100,
+            stage_walls: vec![1.0],
+            wall_stage_secs: 1.0,
+            executor_busy_secs: vec![1.0, 0.5],
+            ..Default::default()
+        };
+        let mut a = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        let b = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.25, &m, true);
+        a.absorb(&b);
+        assert_eq!(a.rounds, 4);
+        assert_eq!(a.data_scans, 4);
+        assert_eq!(a.bytes_to_driver, 200);
+        assert!((a.elapsed_secs - 0.75).abs() < 1e-12);
+        assert_eq!(a.stage_walls, vec![1.0, 1.0]);
+        assert!((a.wall_stage_secs - 2.0).abs() < 1e-12);
+        assert_eq!(a.executor_busy_secs, vec![2.0, 1.0]);
+        // 3 busy seconds over 2 executors × 2 wall seconds
+        assert!((a.executor_utilization - 0.75).abs() < 1e-12);
+        assert!(a.exact);
+        // one approximate constituent poisons exactness
+        let approx = MetricsReport::from_metrics("GK Sketch", 100, 4, 2, 0.1, &m, false);
+        a.absorb(&approx);
+        assert!(!a.exact);
     }
 
     #[test]

@@ -44,14 +44,13 @@ impl ExecMode {
     /// Mode requested by the `GKSELECT_EXEC_MODE` environment variable
     /// (`sequential` | `threads`; unset → `Sequential`). This is the CI
     /// toggle that re-runs the whole suite under real concurrency.
+    /// Parsing lives in [`crate::engine::env`] — the one place env vars
+    /// are read; builders that can report errors use that module
+    /// directly instead of this panicking convenience.
     pub fn from_env() -> Self {
-        match std::env::var("GKSELECT_EXEC_MODE") {
-            Ok(v) if v.is_empty() => ExecMode::Sequential,
-            Ok(v) => v
-                .parse()
-                .expect("GKSELECT_EXEC_MODE must be 'sequential' or 'threads'"),
-            Err(_) => ExecMode::Sequential,
-        }
+        crate::engine::env::exec_mode()
+            .expect("GKSELECT_EXEC_MODE must be 'sequential' or 'threads'")
+            .unwrap_or(ExecMode::Sequential)
     }
 
     pub fn label(self) -> &'static str {

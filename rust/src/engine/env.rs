@@ -1,0 +1,114 @@
+//! The single place process environment variables are read and parsed.
+//!
+//! Before the engine existed, `GKSELECT_EXEC_MODE` and `GKSELECT_SIMD`
+//! were parsed ad hoc in three places (`ExecMode::from_env`,
+//! `SimdPolicy::from_env`, and the config layer), each with its own
+//! panic message and its own idea of what an empty value means. All of
+//! them now delegate here, so the parsing rules exist exactly once:
+//!
+//! * unset or empty → `Ok(None)` — the caller falls through to its
+//!   default (the builder > config file > env precedence is resolved in
+//!   [`super::EngineBuilder`]);
+//! * a valid value → `Ok(Some(..))`;
+//! * an unparseable value → a typed [`EngineError::InvalidEnv`] naming
+//!   the variable, the offending value, and the accepted grammar —
+//!   never a silent fallback.
+
+use super::EngineError;
+use crate::cluster::ExecMode;
+use crate::runtime::SimdPolicy;
+
+/// Environment variable selecting the executor pool mode
+/// (`sequential` | `threads`) — the CI toggle that re-runs the whole
+/// suite under real concurrency.
+pub const EXEC_MODE_VAR: &str = "GKSELECT_EXEC_MODE";
+
+/// Environment variable selecting the band-scan SIMD dispatch policy
+/// (`auto` | `scalar` | `force`) — the CI toggle pinning each side of
+/// the kernel dispatch.
+pub const SIMD_VAR: &str = "GKSELECT_SIMD";
+
+/// Parse an execution mode from a raw variable value. Pure — the
+/// testable core of [`exec_mode`].
+pub fn parse_exec_mode(raw: Option<&str>) -> Result<Option<ExecMode>, EngineError> {
+    match raw {
+        None => Ok(None),
+        Some("") => Ok(None),
+        Some(v) => v.parse::<ExecMode>().map(Some).map_err(|_| EngineError::InvalidEnv {
+            var: EXEC_MODE_VAR,
+            value: v.to_string(),
+            expected: "sequential|threads",
+        }),
+    }
+}
+
+/// Parse a SIMD policy from a raw variable value. Pure — the testable
+/// core of [`simd_policy`].
+pub fn parse_simd_policy(raw: Option<&str>) -> Result<Option<SimdPolicy>, EngineError> {
+    match raw {
+        None => Ok(None),
+        Some("") => Ok(None),
+        Some(v) => v.parse::<SimdPolicy>().map(Some).map_err(|_| EngineError::InvalidEnv {
+            var: SIMD_VAR,
+            value: v.to_string(),
+            expected: "auto|scalar|force",
+        }),
+    }
+}
+
+/// Read `GKSELECT_EXEC_MODE` from the process environment.
+pub fn exec_mode() -> Result<Option<ExecMode>, EngineError> {
+    let raw = std::env::var(EXEC_MODE_VAR).ok();
+    parse_exec_mode(raw.as_deref())
+}
+
+/// Read `GKSELECT_SIMD` from the process environment.
+pub fn simd_policy() -> Result<Option<SimdPolicy>, EngineError> {
+    let raw = std::env::var(SIMD_VAR).ok();
+    parse_simd_policy(raw.as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_and_empty_mean_none() {
+        assert_eq!(parse_exec_mode(None).unwrap(), None);
+        assert_eq!(parse_exec_mode(Some("")).unwrap(), None);
+        assert_eq!(parse_simd_policy(None).unwrap(), None);
+        assert_eq!(parse_simd_policy(Some("")).unwrap(), None);
+    }
+
+    #[test]
+    fn valid_values_parse() {
+        assert_eq!(parse_exec_mode(Some("threads")).unwrap(), Some(ExecMode::Threads));
+        assert_eq!(
+            parse_exec_mode(Some("sequential")).unwrap(),
+            Some(ExecMode::Sequential)
+        );
+        assert_eq!(
+            parse_simd_policy(Some("scalar")).unwrap(),
+            Some(SimdPolicy::ForceScalar)
+        );
+        assert_eq!(
+            parse_simd_policy(Some("force")).unwrap(),
+            Some(SimdPolicy::ForceSimd)
+        );
+        assert_eq!(parse_simd_policy(Some("auto")).unwrap(), Some(SimdPolicy::Auto));
+    }
+
+    #[test]
+    fn garbage_is_a_typed_error_naming_the_variable() {
+        let err = parse_exec_mode(Some("turbo")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(EXEC_MODE_VAR), "{msg}");
+        assert!(msg.contains("turbo"), "{msg}");
+        assert!(msg.contains("sequential|threads"), "{msg}");
+
+        let err = parse_simd_policy(Some("warp")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(SIMD_VAR), "{msg}");
+        assert!(msg.contains("auto|scalar|force"), "{msg}");
+    }
+}

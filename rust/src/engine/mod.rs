@@ -1,0 +1,1156 @@
+//! The serving front door: one engine, one builder, typed query plans,
+//! one outcome type across batch and stream.
+//!
+//! Before this module the public API was a loose federation: each
+//! algorithm exposed its own `quantile` method, multi-quantile and
+//! pre-merged-sketch entry points lived outside the trait, the stream
+//! layer was a third surface, and every consumer (CLI, harness, benches,
+//! examples) re-derived the backend / SIMD / exec-mode wiring by hand.
+//! [`QuantileEngine`] replaces all of that with a single call site:
+//!
+//! ```text
+//!   EngineBuilder ──► QuantileEngine ──► execute(Source, QuantileQuery)
+//!     (resolves          owns Cluster,        │
+//!      builder >         KernelBackend,       ▼
+//!      config file >     SketchStore)     QueryOutcome
+//!      env, once)                         (values + per-query report,
+//!                                          SIMD lane width stamped in
+//!                                          exactly one place)
+//! ```
+//!
+//! * [`Source::Dataset`] routes through the [`AlgoChoice`]-selected
+//!   strategy (the reworked [`QuantileAlgorithm`] trait — stateless
+//!   plan executors borrowing the engine's backend through
+//!   [`EngineCtx`]).
+//! * [`Source::Stream`] serves the query from the engine's
+//!   [`SketchStore`] via the GK fused protocol — cached ingest-time
+//!   sketches, one band-extract scan, exact — regardless of the batch
+//!   strategy (the store is GK-shaped).
+//! * Every failure at this boundary is a typed [`EngineError`], not a
+//!   stringly `anyhow` chain.
+//!
+//! # Example
+//!
+//! ```
+//! use gkselect::prelude::*;
+//!
+//! let mut engine = EngineBuilder::new()
+//!     .cluster(ClusterConfig::local(2, 4))
+//!     .algorithm(AlgoChoice::GkSelect)
+//!     .build()
+//!     .unwrap();
+//! let data = Dataset::from_vec((0..1_000).collect(), 4).unwrap();
+//!
+//! // one entry point for every query shape
+//! let median = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5)).unwrap();
+//! assert_eq!(median.value(), 500); // exact order statistic
+//!
+//! let tail = engine
+//!     .execute(Source::Dataset(&data), QuantileQuery::Multi(vec![0.9, 0.99]))
+//!     .unwrap();
+//! assert_eq!(tail.values, vec![900, 990]);
+//! ```
+
+pub mod env;
+
+use crate::algorithms::afs::{Afs, AfsParams};
+use crate::algorithms::approx_quantile::{
+    ApproxQuantile, ApproxQuantileParams, MergeStrategy, SketchVariant,
+};
+use crate::algorithms::full_sort::FullSortQuantile;
+use crate::algorithms::gk_select::{GkSelectParams, GkSelectStrategy};
+use crate::algorithms::histogram_select::{HistogramSelectParams, HistogramSelectStrategy};
+use crate::algorithms::jeffers::{Jeffers, JeffersParams};
+use crate::algorithms::multi_select::MultiOutcome;
+use crate::algorithms::{Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
+use crate::cluster::metrics::MetricsReport;
+use crate::cluster::{Cluster, ClusterConfig, ExecMode};
+use crate::config::ReproConfig;
+use crate::runtime::{backend_from_name, KernelBackend, SimdPolicy};
+use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor};
+use crate::Key;
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Every way a query can fail at the engine boundary. Replaces the
+/// stringly `anyhow` chains the old per-algorithm entry points returned.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// The source dataset or stream holds no records.
+    EmptyInput,
+    /// A requested quantile fell outside `[0, 1]`.
+    BadQuantile(f64),
+    /// A requested rank `k` is out of range for an input of `n` records.
+    BadRank { k: u64, n: u64 },
+    /// A `Multi` query carried no quantiles.
+    NoQuantiles,
+    /// A sketch precision outside `(0, 1)`.
+    BadEpsilon(f64),
+    /// Candidate extraction overflowed its budget and the run could not
+    /// resolve the target rank; `fallback_used` says whether the classic
+    /// extraction round was attempted before giving up.
+    BudgetOverflow { fallback_used: bool },
+    /// The query addressed a stream id the store has never ingested.
+    UnknownStream(String),
+    /// The stream exists but holds no live records.
+    DrainedStream(String),
+    /// A `Sketched` stream query asked for a tighter ε than the cached
+    /// ingest-time sketch can honor.
+    SketchTooCoarse { requested: f64, available: f64 },
+    /// An environment variable held an unparseable value.
+    InvalidEnv {
+        var: &'static str,
+        value: String,
+        expected: &'static str,
+    },
+    /// A builder or config knob failed validation.
+    InvalidConfig(String),
+    /// The kernel backend could not be constructed.
+    Backend(String),
+    /// An internal substrate failure (flattened error chain).
+    Execution(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::EmptyInput => write!(f, "empty input: no records to query"),
+            Self::BadQuantile(q) => write!(f, "quantile out of range: {q} (expected [0, 1])"),
+            Self::BadRank { k, n } => {
+                write!(f, "rank {k} out of range for {n} records (expected k < n)")
+            }
+            Self::NoQuantiles => write!(f, "no quantiles requested"),
+            Self::BadEpsilon(e) => write!(f, "epsilon out of range: {e} (expected (0, 1))"),
+            Self::BudgetOverflow { fallback_used } => write!(
+                f,
+                "candidate budget overflow left the target rank unresolved (fallback {})",
+                if *fallback_used { "exhausted" } else { "not taken" }
+            ),
+            Self::UnknownStream(id) => write!(f, "unknown stream '{id}' (never ingested)"),
+            Self::DrainedStream(id) => write!(f, "stream '{id}' is drained (no live records)"),
+            Self::SketchTooCoarse {
+                requested,
+                available,
+            } => write!(
+                f,
+                "sketched query wants eps={requested} but the cached sketch only \
+                 offers eps={available}"
+            ),
+            Self::InvalidEnv {
+                var,
+                value,
+                expected,
+            } => write!(f, "{var}={value:?} is invalid (expected {expected})"),
+            Self::InvalidConfig(msg) => write!(f, "invalid engine config: {msg}"),
+            Self::Backend(msg) => write!(f, "kernel backend unavailable: {msg}"),
+            Self::Execution(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<anyhow::Error> for EngineError {
+    fn from(e: anyhow::Error) -> Self {
+        EngineError::Execution(format!("{e:#}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Query plans, sources, outcomes
+// ---------------------------------------------------------------------------
+
+/// A typed query plan — what to compute, decoupled from how and from
+/// where the records live.
+///
+/// ```
+/// use gkselect::prelude::*;
+///
+/// let mut engine = EngineBuilder::new()
+///     .cluster(ClusterConfig::local(1, 2))
+///     .build()
+///     .unwrap();
+/// let data = Dataset::from_vec((0..100).collect(), 2).unwrap();
+///
+/// // Rank(k) and Single(q) agree at k = target_rank(n, q)
+/// let by_q = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.25)).unwrap();
+/// let k = gkselect::target_rank(100, 0.25);
+/// let by_k = engine.execute(Source::Dataset(&data), QuantileQuery::Rank(k)).unwrap();
+/// assert_eq!(by_q.value(), by_k.value());
+///
+/// // a malformed plan is a typed error, not a panic
+/// let err = engine
+///     .execute(Source::Dataset(&data), QuantileQuery::Single(1.5))
+///     .unwrap_err();
+/// assert_eq!(err, EngineError::BadQuantile(1.5));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantileQuery {
+    /// One exact quantile `q ∈ [0, 1]`.
+    Single(f64),
+    /// A batch of exact quantiles sharing one scan where the strategy
+    /// supports it (GK Select's fused multi-band protocol).
+    Multi(Vec<f64>),
+    /// The exact `k`-th order statistic (0-based, `k < n`).
+    Rank(u64),
+    /// An ε-approximate quantile from a GK sketch built (batch) or
+    /// cached (stream) at the requested precision. Always served by the
+    /// Spark-default sketch path regardless of the engine's strategy.
+    Sketched { q: f64, eps: f64 },
+}
+
+impl QuantileQuery {
+    /// Validate the plan against an input of `n` records.
+    pub fn validate(&self, n: u64) -> Result<(), EngineError> {
+        fn check_q(q: f64) -> Result<(), EngineError> {
+            if (0.0..=1.0).contains(&q) {
+                Ok(())
+            } else {
+                Err(EngineError::BadQuantile(q))
+            }
+        }
+        match self {
+            Self::Single(q) => check_q(*q),
+            Self::Multi(qs) => {
+                if qs.is_empty() {
+                    return Err(EngineError::NoQuantiles);
+                }
+                qs.iter().try_for_each(|&q| check_q(q))
+            }
+            Self::Rank(k) => {
+                if *k < n {
+                    Ok(())
+                } else {
+                    Err(EngineError::BadRank { k: *k, n })
+                }
+            }
+            Self::Sketched { q, eps } => {
+                check_q(*q)?;
+                if *eps > 0.0 && *eps < 1.0 {
+                    Ok(())
+                } else {
+                    Err(EngineError::BadEpsilon(*eps))
+                }
+            }
+        }
+    }
+}
+
+/// A quantile `q` whose [`crate::target_rank`] is exactly `k` — how
+/// `Rank(k)` plans reuse the quantile-shaped strategy internals.
+/// The half-offset keeps `⌊q·n⌋ = k` bit-exact for every `n < 2^52`
+/// (verified exhaustively for small n and by sweep up to that bound) —
+/// f64 rank spacing only breaks the roundtrip past ~4.5e15 records,
+/// orders of magnitude beyond what a [`Dataset`] of 4-byte keys can
+/// hold.
+///
+/// # Panics
+///
+/// Panics if `k >= n`. Engine plans never reach this — `Rank(k)` is
+/// validated into a typed [`EngineError::BadRank`] first — so the check
+/// only guards direct callers of this helper.
+pub fn rank_to_quantile(k: u64, n: u64) -> f64 {
+    assert!(k < n, "rank {k} out of range for n={n}");
+    debug_assert!(n < (1 << 52), "rank/quantile roundtrip needs n < 2^52");
+    (k as f64 + 0.5) / n as f64
+}
+
+/// Where the records live: a materialized dataset, or a live stream in
+/// the engine's sketch store.
+#[derive(Debug, Clone, Copy)]
+pub enum Source<'a> {
+    /// A partitioned in-memory dataset (the batch path).
+    Dataset(&'a Dataset<Key>),
+    /// A stream previously fed through [`QuantileEngine::ingest`],
+    /// addressed by id (the serving path: cached sketches, one scan).
+    Stream(&'a str),
+}
+
+/// The one result type every query produces: the answer values (one per
+/// requested quantile, in request order) plus the per-query measured
+/// report. The engine stamps the backend's SIMD lane width onto the
+/// report in exactly one place ([`QuantileEngine::execute`]), so no exit
+/// path can mislabel the dispatch.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    /// Exact (or, for `Sketched`, ε-approximate) values, one per
+    /// requested quantile / rank, in request order.
+    pub values: Vec<Key>,
+    /// The measured cost of exactly this query.
+    pub report: MetricsReport,
+}
+
+impl QueryOutcome {
+    /// The first (for single-value plans: the only) answer.
+    pub fn value(&self) -> Key {
+        self.values[0]
+    }
+}
+
+impl From<Outcome> for QueryOutcome {
+    fn from(o: Outcome) -> Self {
+        Self {
+            values: vec![o.value],
+            report: o.report,
+        }
+    }
+}
+
+impl From<MultiOutcome> for QueryOutcome {
+    fn from(o: MultiOutcome) -> Self {
+        Self {
+            values: o.values,
+            report: o.report,
+        }
+    }
+}
+
+/// What a strategy sees while executing a plan: the engine's cluster,
+/// its kernel backend, and the source dataset. Strategies are stateless
+/// — everything environmental comes through here.
+pub struct EngineCtx<'a> {
+    pub cluster: &'a mut Cluster,
+    pub backend: &'a dyn KernelBackend,
+    pub data: &'a Dataset<Key>,
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm choice
+// ---------------------------------------------------------------------------
+
+/// Which strategy answers `Source::Dataset` plans. (Stream plans are
+/// always served by the GK fused protocol — the sketch store caches GK
+/// partials.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoChoice {
+    GkSelect,
+    Afs,
+    Jeffers,
+    FullSort,
+    GkSketch,
+    HistSelect,
+}
+
+impl std::str::FromStr for AlgoChoice {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "gk-select" | "gkselect" => Ok(Self::GkSelect),
+            "afs" => Ok(Self::Afs),
+            "jeffers" => Ok(Self::Jeffers),
+            "full-sort" | "fullsort" | "sort" => Ok(Self::FullSort),
+            "gk-sketch" | "gksketch" | "approx" => Ok(Self::GkSketch),
+            "hist-select" | "histselect" | "hist" => Ok(Self::HistSelect),
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' (gk-select|afs|jeffers|full-sort|gk-sketch|hist-select)"
+            ),
+        }
+    }
+}
+
+impl AlgoChoice {
+    pub const ALL: [AlgoChoice; 6] = [
+        AlgoChoice::GkSelect,
+        AlgoChoice::Afs,
+        AlgoChoice::Jeffers,
+        AlgoChoice::FullSort,
+        AlgoChoice::GkSketch,
+        AlgoChoice::HistSelect,
+    ];
+
+    /// The paper's comparison set (Figs. 1–2).
+    pub const PAPER_SET: [AlgoChoice; 5] = [
+        AlgoChoice::FullSort,
+        AlgoChoice::Afs,
+        AlgoChoice::Jeffers,
+        AlgoChoice::GkSketch,
+        AlgoChoice::GkSelect,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AlgoChoice::GkSelect => "GK Select",
+            AlgoChoice::Afs => "AFS",
+            AlgoChoice::Jeffers => "Jeffers",
+            AlgoChoice::FullSort => "Full Sort",
+            AlgoChoice::GkSketch => "GK Sketch",
+            AlgoChoice::HistSelect => "Hist Select",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Builds a [`QuantileEngine`], resolving every knob with one documented
+/// precedence: **builder setter > config file ([`ReproConfig`]) > env
+/// var (`GKSELECT_EXEC_MODE` / `GKSELECT_SIMD`) > default**.
+///
+/// ```
+/// use gkselect::prelude::*;
+///
+/// // defaults: native backend, GK Select, ε = 0.01, 10-node cluster
+/// let engine = EngineBuilder::new().build().unwrap();
+/// assert_eq!(engine.algorithm(), AlgoChoice::GkSelect);
+/// assert_eq!(engine.cluster().cfg.partitions, 40);
+///
+/// // builder setters win over everything
+/// let engine = EngineBuilder::new()
+///     .cluster(ClusterConfig::local(2, 8))
+///     .algorithm(AlgoChoice::FullSort)
+///     .epsilon(0.02)
+///     .simd(SimdPolicy::ForceScalar)
+///     .build()
+///     .unwrap();
+/// assert_eq!(engine.simd_lane_width(), 1);
+/// ```
+#[derive(Default)]
+pub struct EngineBuilder {
+    config: Option<ReproConfig>,
+    cluster: Option<ClusterConfig>,
+    nodes: Option<usize>,
+    exec_mode: Option<ExecMode>,
+    simd: Option<SimdPolicy>,
+    backend_name: Option<String>,
+    backend: Option<Box<dyn KernelBackend>>,
+    algorithm: Option<AlgoChoice>,
+    epsilon: Option<f64>,
+    variant: Option<SketchVariant>,
+    merge: Option<MergeStrategy>,
+    tree_depth: Option<usize>,
+    candidate_budget: Option<usize>,
+    seed: Option<u64>,
+    compaction: Option<CompactionPolicy>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Supply the config-file layer of the precedence (usually a parsed
+    /// `repro.toml`). Builder setters still win over it.
+    pub fn config(mut self, cfg: ReproConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Take the full cluster shape as given (tests, bench pins). The
+    /// file and env exec-mode layers are not consulted for the shape —
+    /// an explicit shape wins, with [`Self::exec_mode`] still overriding
+    /// on top. Note that `build` still *parses* `GKSELECT_EXEC_MODE`
+    /// and the config's `exec_mode` first, so an unparseable value is a
+    /// loud [`EngineError::InvalidEnv`] / [`EngineError::InvalidConfig`]
+    /// rather than something an explicit shape can silently mask.
+    pub fn cluster(mut self, cc: ClusterConfig) -> Self {
+        self.cluster = Some(cc);
+        self
+    }
+
+    /// Override the core-node count (partitions follow the config's
+    /// partitions-per-node).
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = Some(nodes);
+        self
+    }
+
+    pub fn exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = Some(mode);
+        self
+    }
+
+    pub fn simd(mut self, policy: SimdPolicy) -> Self {
+        self.simd = Some(policy);
+        self
+    }
+
+    /// Select the kernel backend by name (`"native"` | `"pjrt"`).
+    pub fn backend_name(mut self, name: &str) -> Self {
+        self.backend_name = Some(name.to_string());
+        self
+    }
+
+    /// Inject a ready-made kernel backend (tests pinning a dispatch, a
+    /// pre-loaded PJRT runtime). Wins over [`Self::backend_name`], and
+    /// carries its own already-resolved SIMD dispatch — the file/env
+    /// SIMD layers don't apply to it, and combining it with an explicit
+    /// [`Self::simd`] call is rejected at `build` time so a forced
+    /// policy can never be silently ignored.
+    pub fn kernel_backend(mut self, backend: Box<dyn KernelBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn algorithm(mut self, choice: AlgoChoice) -> Self {
+        self.algorithm = Some(choice);
+        self
+    }
+
+    pub fn epsilon(mut self, epsilon: f64) -> Self {
+        self.epsilon = Some(epsilon);
+        self
+    }
+
+    pub fn sketch_variant(mut self, variant: SketchVariant) -> Self {
+        self.variant = Some(variant);
+        self
+    }
+
+    pub fn sketch_merge(mut self, merge: MergeStrategy) -> Self {
+        self.merge = Some(merge);
+        self
+    }
+
+    pub fn tree_depth(mut self, depth: usize) -> Self {
+        self.tree_depth = Some(depth);
+        self
+    }
+
+    /// Cap extracted open-band candidates (GK Select); `0` forces the
+    /// classic 3-round fallback, the bench baseline shape.
+    pub fn candidate_budget(mut self, budget: usize) -> Self {
+        self.candidate_budget = Some(budget);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Stream-store compaction policy for [`QuantileEngine::ingest`].
+    pub fn compaction(mut self, policy: CompactionPolicy) -> Self {
+        self.compaction = Some(policy);
+        self
+    }
+
+    pub fn build(self) -> Result<QuantileEngine, EngineError> {
+        let env_exec = env::exec_mode()?;
+        let env_simd = env::simd_policy()?;
+        self.build_resolved(env_exec, env_simd)
+    }
+
+    /// [`Self::build`] with the env layer injected — the pure core the
+    /// precedence tests drive without touching process state.
+    fn build_resolved(
+        self,
+        env_exec: Option<ExecMode>,
+        env_simd: Option<SimdPolicy>,
+    ) -> Result<QuantileEngine, EngineError> {
+        let cfg = self.config.unwrap_or_default();
+
+        let simd = resolve_simd(self.simd, &cfg.runtime.simd, env_simd)?;
+        let exec = resolve_exec_mode(self.exec_mode, &cfg.cluster.exec_mode, env_exec)?;
+
+        let cc = if let Some(mut cc) = self.cluster {
+            if let Some(mode) = self.exec_mode {
+                cc.exec_mode = mode;
+            }
+            cc
+        } else {
+            let nodes = self.nodes.unwrap_or(cfg.cluster.nodes);
+            ClusterConfig {
+                executors: nodes,
+                partitions: nodes * cfg.cluster.partitions_per_node,
+                net: cfg.network.to_model(),
+                compute_scale: cfg.cluster.compute_scale,
+                driver_scale: cfg.cluster.driver_scale,
+                exec_mode: exec.unwrap_or(ExecMode::Sequential),
+            }
+        };
+
+        let epsilon = self.epsilon.unwrap_or(cfg.algorithm.epsilon);
+        if !(epsilon > 0.0 && epsilon < 1.0) {
+            return Err(EngineError::BadEpsilon(epsilon));
+        }
+        let variant = match self.variant {
+            Some(v) => v,
+            None => cfg
+                .algorithm
+                .sketch
+                .parse::<SketchVariant>()
+                .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?,
+        };
+        let merge = match self.merge {
+            Some(m) => m,
+            None => cfg
+                .algorithm
+                .sketch_merge
+                .parse::<MergeStrategy>()
+                .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?,
+        };
+        let tree_depth = self.tree_depth.or(cfg.algorithm.tree_depth);
+        let seed = self.seed.unwrap_or(cfg.algorithm.seed);
+        let gk_params = GkSelectParams {
+            epsilon,
+            variant,
+            merge,
+            tree_depth,
+            candidate_budget: self.candidate_budget,
+        };
+
+        let choice = self.algorithm.unwrap_or(AlgoChoice::GkSelect);
+        let strategy: Box<dyn QuantileAlgorithm> = match choice {
+            AlgoChoice::GkSelect => Box::new(GkSelectStrategy {
+                params: gk_params.clone(),
+            }),
+            AlgoChoice::Afs => Box::new(Afs::new(AfsParams {
+                seed,
+                tree_depth,
+                ..Default::default()
+            })),
+            AlgoChoice::Jeffers => Box::new(Jeffers::new(JeffersParams {
+                seed,
+                ..Default::default()
+            })),
+            AlgoChoice::FullSort => Box::new(FullSortQuantile::default()),
+            AlgoChoice::GkSketch => Box::new(ApproxQuantile::new(ApproxQuantileParams {
+                epsilon,
+                variant: SketchVariant::Spark,
+                merge: MergeStrategy::Fold,
+            })),
+            AlgoChoice::HistSelect => Box::new(HistogramSelectStrategy {
+                params: HistogramSelectParams {
+                    seed,
+                    ..Default::default()
+                },
+            }),
+        };
+
+        let backend = match self.backend {
+            Some(b) => {
+                // an injected backend was constructed with its own
+                // dispatch policy; silently ignoring an explicit simd()
+                // would be the dispatch-mislabel footgun all over again
+                if self.simd.is_some() {
+                    return Err(EngineError::InvalidConfig(
+                        "kernel_backend() and simd() are mutually exclusive: the \
+                         injected backend already carries its own dispatch policy"
+                            .to_string(),
+                    ));
+                }
+                b
+            }
+            None => {
+                let name = self.backend_name.unwrap_or_else(|| cfg.backend.clone());
+                backend_from_name(&name, &cfg.artifacts_dir, simd)
+                    .map_err(|e| EngineError::Backend(format!("{e:#}")))?
+            }
+        };
+
+        let policy = match self.compaction {
+            Some(p) => {
+                p.validate()
+                    .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?;
+                p
+            }
+            None => cfg
+                .stream
+                .to_policy()
+                .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?,
+        };
+        let store =
+            SketchStore::new(policy).map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?;
+        let ingestor = StreamIngestor::new(epsilon)
+            .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?
+            .with_variant(variant);
+
+        Ok(QuantileEngine {
+            choice,
+            strategy,
+            cluster: Cluster::new(cc),
+            backend,
+            store,
+            ingestor,
+            gk_params,
+        })
+    }
+}
+
+/// Builder > config file > env for the SIMD policy; `Auto` when nothing
+/// speaks.
+fn resolve_simd(
+    builder: Option<SimdPolicy>,
+    file: &str,
+    env: Option<SimdPolicy>,
+) -> Result<SimdPolicy, EngineError> {
+    if let Some(p) = builder {
+        return Ok(p);
+    }
+    if !file.is_empty() {
+        return file
+            .parse::<SimdPolicy>()
+            .map_err(|e| EngineError::InvalidConfig(format!("[runtime] simd: {e:#}")));
+    }
+    Ok(env.unwrap_or(SimdPolicy::Auto))
+}
+
+/// Builder > config file > env for the exec mode; `None` when nothing
+/// speaks (the caller's cluster default applies).
+fn resolve_exec_mode(
+    builder: Option<ExecMode>,
+    file: &str,
+    env: Option<ExecMode>,
+) -> Result<Option<ExecMode>, EngineError> {
+    if let Some(m) = builder {
+        return Ok(Some(m));
+    }
+    if !file.is_empty() {
+        return file
+            .parse::<ExecMode>()
+            .map(Some)
+            .map_err(|e| EngineError::InvalidConfig(format!("[cluster] exec_mode: {e:#}")));
+    }
+    Ok(env)
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// The unified quantile-serving façade: owns the execution substrate
+/// ([`Cluster`]), the kernel backend, and the stream [`SketchStore`];
+/// answers typed [`QuantileQuery`] plans over datasets and streams
+/// through one [`Self::execute`] entry point.
+pub struct QuantileEngine {
+    choice: AlgoChoice,
+    strategy: Box<dyn QuantileAlgorithm>,
+    cluster: Cluster,
+    backend: Box<dyn KernelBackend>,
+    store: SketchStore,
+    ingestor: StreamIngestor,
+    gk_params: GkSelectParams,
+}
+
+impl QuantileEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Answer one query plan. Batch sources route through the configured
+    /// strategy; stream sources are served from cached ingest-time
+    /// sketches by the GK fused protocol. The outcome's report carries
+    /// the backend's SIMD lane width, stamped here and only here.
+    pub fn execute(
+        &mut self,
+        source: Source<'_>,
+        query: QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let mut out = match source {
+            Source::Dataset(data) => {
+                let strategy = &*self.strategy;
+                let mut ctx = EngineCtx {
+                    cluster: &mut self.cluster,
+                    backend: self.backend.as_ref(),
+                    data,
+                };
+                strategy.execute_plan(&mut ctx, &query)?
+            }
+            Source::Stream(id) => self.execute_stream(id, &query)?,
+        };
+        // THE stamping point: every outcome says which band-scan
+        // dispatch the engine's backend runs, no per-exit-path stamping
+        // to forget (the old make_report / make_backend_report footgun).
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
+    }
+
+    fn execute_stream(
+        &mut self,
+        id: &str,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let n = {
+            let state = self
+                .store
+                .stream(id)
+                .ok_or_else(|| EngineError::UnknownStream(id.to_string()))?;
+            state.total_count()
+        };
+        if n == 0 {
+            return Err(EngineError::DrainedStream(id.to_string()));
+        }
+        query.validate(n)?;
+        let backend = self.backend.as_ref();
+        match query {
+            QuantileQuery::Single(q) => Ok(crate::stream::query::quantile_with(
+                &mut self.cluster,
+                backend,
+                &self.gk_params,
+                &self.store,
+                id,
+                *q,
+            )?
+            .into()),
+            QuantileQuery::Rank(k) => Ok(crate::stream::query::quantile_with(
+                &mut self.cluster,
+                backend,
+                &self.gk_params,
+                &self.store,
+                id,
+                rank_to_quantile(*k, n),
+            )?
+            .into()),
+            QuantileQuery::Multi(qs) => Ok(crate::stream::query::quantiles_with(
+                &mut self.cluster,
+                backend,
+                &self.gk_params,
+                &self.store,
+                id,
+                qs,
+            )?
+            .into()),
+            QuantileQuery::Sketched { q, eps } => Ok(crate::stream::query::sketched_with(
+                &mut self.cluster,
+                &self.store,
+                id,
+                *q,
+                *eps,
+            )?
+            .into()),
+        }
+    }
+
+    /// Seal one micro-batch into `stream`'s epoch store (the streaming
+    /// append path: one round, one scan over the new records only).
+    pub fn ingest(
+        &mut self,
+        stream: &str,
+        batch: MicroBatch,
+    ) -> Result<IngestOutcome, EngineError> {
+        self.ingestor
+            .ingest(&mut self.cluster, &mut self.store, stream, batch)
+            .map_err(EngineError::from)
+    }
+
+    /// The strategy answering `Source::Dataset` plans.
+    pub fn algorithm(&self) -> AlgoChoice {
+        self.choice
+    }
+
+    /// Whether dataset plans return exact order statistics.
+    pub fn exact(&self) -> bool {
+        self.strategy.exact()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Mutable substrate access — data generators partition into the
+    /// engine's cluster shape through this.
+    pub fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+
+    pub fn store(&self) -> &SketchStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut SketchStore {
+        &mut self.store
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Active SIMD lane width of the backend's fused band scan (1 =
+    /// scalar) — the value stamped onto every outcome's report.
+    pub fn simd_lane_width(&self) -> usize {
+        self.backend.simd_lane_width()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn small_engine(choice: AlgoChoice) -> QuantileEngine {
+        EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .algorithm(choice)
+            .build()
+            .unwrap()
+    }
+
+    fn data_1k() -> Dataset<Key> {
+        Dataset::from_vec((0..1_000).collect(), 4).unwrap()
+    }
+
+    #[test]
+    fn single_and_rank_agree_for_exact_strategies() {
+        for choice in [AlgoChoice::GkSelect, AlgoChoice::FullSort, AlgoChoice::HistSelect] {
+            let mut engine = small_engine(choice);
+            let data = data_1k();
+            let by_q = engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(0.75))
+                .unwrap();
+            let k = crate::target_rank(1_000, 0.75);
+            let by_k = engine
+                .execute(Source::Dataset(&data), QuantileQuery::Rank(k))
+                .unwrap();
+            assert_eq!(by_q.value(), by_k.value(), "{choice:?}");
+            assert_eq!(by_q.value(), 750, "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn multi_matches_singles() {
+        let mut engine = small_engine(AlgoChoice::GkSelect);
+        let data = data_1k();
+        let multi = engine
+            .execute(
+                Source::Dataset(&data),
+                QuantileQuery::Multi(vec![0.1, 0.5, 0.9]),
+            )
+            .unwrap();
+        for (&q, &v) in [0.1, 0.5, 0.9].iter().zip(multi.values.iter()) {
+            let single = engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(single.value(), v, "q={q}");
+        }
+    }
+
+    #[test]
+    fn typed_errors_at_the_boundary() {
+        let mut engine = small_engine(AlgoChoice::GkSelect);
+        let data = data_1k();
+        assert_eq!(
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(1.5))
+                .unwrap_err(),
+            EngineError::BadQuantile(1.5)
+        );
+        assert_eq!(
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Rank(1_000))
+                .unwrap_err(),
+            EngineError::BadRank { k: 1_000, n: 1_000 }
+        );
+        assert_eq!(
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Multi(vec![]))
+                .unwrap_err(),
+            EngineError::NoQuantiles
+        );
+        let empty = Dataset::from_partitions(vec![vec![]]).unwrap();
+        assert_eq!(
+            engine
+                .execute(Source::Dataset(&empty), QuantileQuery::Single(0.5))
+                .unwrap_err(),
+            EngineError::EmptyInput
+        );
+        assert_eq!(
+            engine
+                .execute(Source::Stream("nope"), QuantileQuery::Single(0.5))
+                .unwrap_err(),
+            EngineError::UnknownStream("nope".into())
+        );
+    }
+
+    #[test]
+    fn stream_and_batch_share_the_call_site() {
+        let mut engine = small_engine(AlgoChoice::GkSelect);
+        engine
+            .ingest("s", MicroBatch::new((0..600).collect()))
+            .unwrap();
+        engine
+            .ingest("s", MicroBatch::new((600..1_000).collect()))
+            .unwrap();
+        let stream_out = engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(stream_out.value(), 500);
+        assert_eq!(stream_out.report.rounds, 1, "cached sketch → 1 round");
+        assert_eq!(stream_out.report.data_scans, 1);
+
+        let data = data_1k();
+        let batch_out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(batch_out.value(), stream_out.value());
+        assert_eq!(batch_out.report.data_scans, 2, "batch pays the sketch scan");
+    }
+
+    #[test]
+    fn lane_width_stamped_centrally_on_every_path() {
+        // forced-scalar engine: every outcome must say lane width 1
+        let mut scalar = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .simd(SimdPolicy::ForceScalar)
+            .build()
+            .unwrap();
+        // forced-SIMD engine: every outcome must say the resolved width
+        let forced_width = NativeBackend::with_policy(SimdPolicy::ForceSimd).simd_lane_width();
+        let mut forced = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .simd(SimdPolicy::ForceSimd)
+            .build()
+            .unwrap();
+        assert_eq!(scalar.simd_lane_width(), 1);
+        assert_eq!(forced.simd_lane_width(), forced_width);
+
+        let data = data_1k();
+        for (engine, want) in [(&mut scalar, 1), (&mut forced, forced_width)] {
+            engine.ingest("s", MicroBatch::new((0..500).collect())).unwrap();
+            let outs = [
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+                    .unwrap(),
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Multi(vec![0.25, 0.75]))
+                    .unwrap(),
+                engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Rank(10))
+                    .unwrap(),
+                engine
+                    .execute(
+                        Source::Dataset(&data),
+                        QuantileQuery::Sketched { q: 0.5, eps: 0.05 },
+                    )
+                    .unwrap(),
+                engine
+                    .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+                    .unwrap(),
+                engine
+                    .execute(Source::Stream("s"), QuantileQuery::Multi(vec![0.5, 0.9]))
+                    .unwrap(),
+            ];
+            for out in outs {
+                assert_eq!(
+                    out.report.simd_lane_width, want as u64,
+                    "every exit path must carry the engine backend's lane width"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn precedence_builder_beats_file_beats_env() {
+        // exec mode: builder > file > env
+        assert_eq!(
+            resolve_exec_mode(Some(ExecMode::Sequential), "threads", Some(ExecMode::Threads))
+                .unwrap(),
+            Some(ExecMode::Sequential)
+        );
+        assert_eq!(
+            resolve_exec_mode(None, "threads", Some(ExecMode::Sequential)).unwrap(),
+            Some(ExecMode::Threads)
+        );
+        assert_eq!(
+            resolve_exec_mode(None, "", Some(ExecMode::Threads)).unwrap(),
+            Some(ExecMode::Threads)
+        );
+        assert_eq!(resolve_exec_mode(None, "", None).unwrap(), None);
+        assert!(resolve_exec_mode(None, "turbo", None).is_err());
+
+        // simd: builder > file > env > Auto
+        assert_eq!(
+            resolve_simd(
+                Some(SimdPolicy::ForceScalar),
+                "force",
+                Some(SimdPolicy::ForceSimd)
+            )
+            .unwrap(),
+            SimdPolicy::ForceScalar
+        );
+        assert_eq!(
+            resolve_simd(None, "force", Some(SimdPolicy::ForceScalar)).unwrap(),
+            SimdPolicy::ForceSimd
+        );
+        assert_eq!(
+            resolve_simd(None, "", Some(SimdPolicy::ForceScalar)).unwrap(),
+            SimdPolicy::ForceScalar
+        );
+        assert_eq!(resolve_simd(None, "", None).unwrap(), SimdPolicy::Auto);
+        assert!(resolve_simd(None, "warp", None).is_err());
+    }
+
+    #[test]
+    fn file_layer_reaches_the_built_engine() {
+        let mut cfg = ReproConfig::default();
+        cfg.cluster.exec_mode = "threads".into();
+        cfg.cluster.nodes = 3;
+        let engine = EngineBuilder::new()
+            .config(cfg.clone())
+            .build_resolved(None, None)
+            .unwrap();
+        assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
+        assert_eq!(engine.cluster().cfg.executors, 3);
+        // builder wins over the same file
+        let engine = EngineBuilder::new()
+            .config(cfg)
+            .exec_mode(ExecMode::Sequential)
+            .nodes(5)
+            .build_resolved(None, None)
+            .unwrap();
+        assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Sequential);
+        assert_eq!(engine.cluster().cfg.executors, 5);
+        // env reaches the engine when builder and file are silent
+        let engine = EngineBuilder::new()
+            .build_resolved(Some(ExecMode::Threads), None)
+            .unwrap();
+        assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
+    }
+
+    #[test]
+    fn rank_to_quantile_roundtrips_target_rank() {
+        for n in [1u64, 2, 3, 10, 101, 1_000, 999_983] {
+            for k in [0, n / 3, n / 2, n - 1] {
+                let q = rank_to_quantile(k, n);
+                assert_eq!(crate::target_rank(n, q), k, "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketched_runs_the_sketch_path_for_any_strategy() {
+        let data = data_1k();
+        let mut values = Vec::new();
+        for choice in AlgoChoice::ALL {
+            let mut engine = small_engine(choice);
+            let out = engine
+                .execute(
+                    Source::Dataset(&data),
+                    QuantileQuery::Sketched { q: 0.5, eps: 0.05 },
+                )
+                .unwrap();
+            assert!(!out.report.exact, "{choice:?}: sketched answers are approximate");
+            values.push(out.value());
+        }
+        assert!(
+            values.windows(2).all(|w| w[0] == w[1]),
+            "sketched answers must be strategy-independent: {values:?}"
+        );
+    }
+
+    #[test]
+    fn bad_builder_knobs_are_typed_errors() {
+        assert!(matches!(
+            EngineBuilder::new().epsilon(0.0).build_resolved(None, None),
+            Err(EngineError::BadEpsilon(_))
+        ));
+        let mut cfg = ReproConfig::default();
+        cfg.backend = "warp-drive".into();
+        assert!(matches!(
+            EngineBuilder::new().config(cfg).build_resolved(None, None),
+            Err(EngineError::Backend(_))
+        ));
+        // an injected backend carries its own dispatch: an explicit
+        // simd() on top is a conflict, never silently ignored
+        assert!(matches!(
+            EngineBuilder::new()
+                .kernel_backend(Box::new(NativeBackend::new()))
+                .simd(SimdPolicy::ForceScalar)
+                .build_resolved(None, None),
+            Err(EngineError::InvalidConfig(_))
+        ));
+    }
+}

@@ -1,83 +1,27 @@
 //! Experiment harness: the runners behind `repro bench ...` and the
 //! criterion benches. Every paper figure/table maps to one function here
 //! (DESIGN.md §5), so the CLI, the benches, and EXPERIMENTS.md all share
-//! one implementation.
+//! one implementation — and since the API redesign they all share one
+//! entry point too: every measured run goes through
+//! [`QuantileEngine::execute`].
 
 pub mod stats;
 
-use crate::algorithms::approx_quantile::{
-    ApproxQuantile, ApproxQuantileParams, MergeStrategy, SketchVariant,
-};
 use crate::algorithms::oracle_quantile;
-use crate::algorithms::{Outcome, QuantileAlgorithm};
+use crate::cluster::dataset::Dataset;
 use crate::cluster::{Cluster, ExecMode};
 use crate::config::ReproConfig;
-use crate::data::Distribution;
-use crate::prelude::*;
-use crate::runtime::{SimdDispatch, SimdPolicy};
+use crate::data::{DataGenerator, Distribution};
+use crate::engine::{EngineBuilder, QuantileEngine, QuantileQuery, QueryOutcome, Source};
+use crate::runtime::{NativeBackend, SimdDispatch, SimdPolicy};
+use crate::sketch::modified::ModifiedGk;
 use crate::util::benchkit::{write_json, JsonVal};
-use anyhow::{ensure, Context, Result};
+use crate::Key;
+use anyhow::{ensure, Result};
 use std::path::Path;
 use std::time::Instant;
 
-/// CLI-facing algorithm picker.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AlgoChoice {
-    GkSelect,
-    Afs,
-    Jeffers,
-    FullSort,
-    GkSketch,
-    HistSelect,
-}
-
-impl std::str::FromStr for AlgoChoice {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
-        match s {
-            "gk-select" | "gkselect" => Ok(Self::GkSelect),
-            "afs" => Ok(Self::Afs),
-            "jeffers" => Ok(Self::Jeffers),
-            "full-sort" | "fullsort" | "sort" => Ok(Self::FullSort),
-            "gk-sketch" | "gksketch" | "approx" => Ok(Self::GkSketch),
-            "hist-select" | "histselect" | "hist" => Ok(Self::HistSelect),
-            other => anyhow::bail!(
-                "unknown algorithm '{other}' (gk-select|afs|jeffers|full-sort|gk-sketch|hist-select)"
-            ),
-        }
-    }
-}
-
-impl AlgoChoice {
-    pub const ALL: [AlgoChoice; 6] = [
-        AlgoChoice::GkSelect,
-        AlgoChoice::Afs,
-        AlgoChoice::Jeffers,
-        AlgoChoice::FullSort,
-        AlgoChoice::GkSketch,
-        AlgoChoice::HistSelect,
-    ];
-
-    /// The paper's comparison set (Figs. 1–2).
-    pub const PAPER_SET: [AlgoChoice; 5] = [
-        AlgoChoice::FullSort,
-        AlgoChoice::Afs,
-        AlgoChoice::Jeffers,
-        AlgoChoice::GkSketch,
-        AlgoChoice::GkSelect,
-    ];
-
-    pub fn label(self) -> &'static str {
-        match self {
-            AlgoChoice::GkSelect => "GK Select",
-            AlgoChoice::Afs => "AFS",
-            AlgoChoice::Jeffers => "Jeffers",
-            AlgoChoice::FullSort => "Full Sort",
-            AlgoChoice::GkSketch => "GK Sketch",
-            AlgoChoice::HistSelect => "Hist Select",
-        }
-    }
-}
+pub use crate::engine::AlgoChoice;
 
 /// Input shapes for the streaming replay (`repro stream`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,7 +62,7 @@ impl StreamWorkload {
 
     /// The records arriving at tick `tick` (deterministic per seed).
     pub fn batch(self, seed: u64, tick: u64, len: usize) -> Vec<crate::Key> {
-        use crate::data::{DataGenerator, UniformGen, ZipfGen};
+        use crate::data::{UniformGen, ZipfGen};
         let mut out = Vec::with_capacity(len);
         match self {
             Self::Uniform => {
@@ -147,57 +91,19 @@ impl StreamWorkload {
     }
 }
 
-fn sketch_variant(cfg: &ReproConfig) -> Result<SketchVariant> {
-    cfg.algorithm.sketch.parse()
+/// One engine per the config: `choice` strategy, `nodes` core nodes,
+/// everything else (backend, SIMD policy, ε, sketch knobs, stream
+/// compaction) resolved by the builder's documented precedence.
+pub fn engine_for(cfg: &ReproConfig, choice: AlgoChoice, nodes: usize) -> Result<QuantileEngine> {
+    Ok(EngineBuilder::new()
+        .config(cfg.clone())
+        .nodes(nodes)
+        .algorithm(choice)
+        .build()?)
 }
 
-fn merge_strategy(cfg: &ReproConfig) -> Result<MergeStrategy> {
-    cfg.algorithm.sketch_merge.parse()
-}
-
-/// Instantiate one algorithm per the config (backend, epsilon, seeds).
-pub fn build_algorithm(cfg: &ReproConfig, choice: AlgoChoice) -> Result<Box<dyn QuantileAlgorithm>> {
-    Ok(match choice {
-        AlgoChoice::GkSelect => {
-            let params = GkSelectParams {
-                epsilon: cfg.algorithm.epsilon,
-                variant: sketch_variant(cfg)?,
-                merge: merge_strategy(cfg)?,
-                tree_depth: cfg.algorithm.tree_depth,
-                candidate_budget: None,
-            };
-            let backend = cfg
-                .kernel_backend()
-                .context("loading kernel backend (run `make artifacts`?)")?;
-            Box::new(GkSelect::with_backend(params, backend))
-        }
-        AlgoChoice::Afs => Box::new(Afs::new(AfsParams {
-            seed: cfg.algorithm.seed,
-            tree_depth: cfg.algorithm.tree_depth,
-            ..Default::default()
-        })),
-        AlgoChoice::Jeffers => Box::new(Jeffers::new(JeffersParams {
-            seed: cfg.algorithm.seed,
-            ..Default::default()
-        })),
-        AlgoChoice::FullSort => Box::new(FullSortQuantile::default()),
-        AlgoChoice::GkSketch => Box::new(ApproxQuantile::new(ApproxQuantileParams {
-            epsilon: cfg.algorithm.epsilon,
-            variant: SketchVariant::Spark,
-            merge: MergeStrategy::Fold,
-        })),
-        AlgoChoice::HistSelect => {
-            let params = HistogramSelectParams {
-                seed: cfg.algorithm.seed,
-                ..Default::default()
-            };
-            let backend = cfg.kernel_backend()?;
-            Box::new(HistogramSelect::with_backend(params, backend))
-        }
-    })
-}
-
-/// Build an EMR-shaped cluster from the config with `nodes` core nodes.
+/// Build an EMR-shaped cluster from the config with `nodes` core nodes —
+/// for generating shared datasets outside any engine.
 pub fn make_cluster(cfg: &ReproConfig, nodes: usize) -> Cluster {
     let mut cc = cfg.cluster_config();
     cc.executors = nodes;
@@ -207,13 +113,12 @@ pub fn make_cluster(cfg: &ReproConfig, nodes: usize) -> Cluster {
 
 /// One measured run; returns the outcome and the wall-clock seconds spent.
 pub fn timed_run(
-    alg: &mut dyn QuantileAlgorithm,
-    cluster: &mut Cluster,
-    data: &crate::cluster::dataset::Dataset<crate::Key>,
-    q: f64,
-) -> Result<(Outcome, f64)> {
+    engine: &mut QuantileEngine,
+    data: &Dataset<Key>,
+    query: QuantileQuery,
+) -> Result<(QueryOutcome, f64)> {
     let start = Instant::now();
-    let out = alg.quantile(cluster, data, q)?;
+    let out = engine.execute(Source::Dataset(data), query)?;
     Ok((out, start.elapsed().as_secs_f64()))
 }
 
@@ -230,19 +135,20 @@ pub fn run_quantile(
     dist: Distribution,
     verify: bool,
 ) -> Result<()> {
-    let mut cluster = make_cluster(cfg, cfg.cluster.nodes);
+    let mut engine = engine_for(cfg, choice, cfg.cluster.nodes)?;
     println!(
         "generating {n} {} keys across {} partitions ({} nodes)...",
         dist.label(),
-        cluster.cfg.partitions,
-        cluster.cfg.executors
+        engine.cluster().cfg.partitions,
+        engine.cluster().cfg.executors
     );
-    let data = dist.generator(cfg.algorithm.seed).generate(&mut cluster, n);
-    let mut alg = build_algorithm(cfg, choice)?;
-    let (out, wall) = timed_run(alg.as_mut(), &mut cluster, &data, q)?;
+    let data = dist
+        .generator(cfg.algorithm.seed)
+        .generate(engine.cluster_mut(), n);
+    let (out, wall) = timed_run(&mut engine, &data, QuantileQuery::Single(q))?;
 
     println!("\n{} q={q} over n={n} ({}):", out.report.algorithm, dist.label());
-    println!("  value            = {}", out.value);
+    println!("  value            = {}", out.value());
     println!("  modelled elapsed = {:.4}s (wall {:.2}s on this box)", out.report.elapsed_secs, wall);
     println!("  rounds           = {}", out.report.rounds);
     println!("  stage boundaries = {}", out.report.stage_boundaries);
@@ -258,16 +164,16 @@ pub fn run_quantile(
         let truth = oracle_quantile(&data, q).expect("nonempty");
         if out.report.exact {
             ensure!(
-                out.value == truth,
+                out.value() == truth,
                 "EXACTNESS VIOLATION: got {} want {truth}",
-                out.value
+                out.value()
             );
             println!("  verified         = exact match with oracle ({truth})");
         } else {
             let mut all = data.to_vec();
             all.sort_unstable();
-            let lo = all.partition_point(|&x| x < out.value) as f64;
-            let hi = all.partition_point(|&x| x <= out.value) as f64;
+            let lo = all.partition_point(|&x| x < out.value()) as f64;
+            let hi = all.partition_point(|&x| x <= out.value()) as f64;
             let target = q * n as f64;
             let err = if target < lo {
                 (lo - target) / n as f64
@@ -307,12 +213,12 @@ pub fn bench_fig(cfg: &ReproConfig, nodes: usize, max_exp: u32, trials: u32) -> 
                 println!("{:<12} {:>12} {:>14} {:>14} {:>8}", choice.label(), n, "—", "—", "—");
                 continue;
             }
-            let mut alg = build_algorithm(cfg, choice)?;
+            let mut engine = engine_for(cfg, choice, nodes)?;
             let mut elapsed = Vec::new();
             let mut walls = Vec::new();
             let mut rounds = 0;
             for _ in 0..trials {
-                let (out, wall) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
+                let (out, wall) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
                 elapsed.push(out.report.elapsed_secs);
                 walls.push(wall);
                 rounds = out.report.rounds;
@@ -349,12 +255,10 @@ pub fn bench_dist(cfg: &ReproConfig, n: u64, nodes: usize, trials: u32) -> Resul
         let mut cluster = make_cluster(cfg, nodes);
         let data = dist.generator(cfg.algorithm.seed).generate(&mut cluster, n);
         for (qlabel, q) in [("50", 0.5), ("99", 0.99)] {
-            let mut alg = build_algorithm(cfg, AlgoChoice::GkSelect)?;
+            let mut engine = engine_for(cfg, AlgoChoice::GkSelect, nodes)?;
             let mut xs = Vec::new();
-            for t in 0..trials {
-                let mut trial_cfg = cfg.clone();
-                trial_cfg.algorithm.seed = cfg.algorithm.seed.wrapping_add(t as u64);
-                let (out, _) = timed_run(alg.as_mut(), &mut cluster, &data, q)?;
+            for _ in 0..trials {
+                let (out, _) = timed_run(&mut engine, &data, QuantileQuery::Single(q))?;
                 xs.push(out.report.elapsed_secs);
             }
             let (lo, hi) = stats::ci95(&xs);
@@ -396,11 +300,11 @@ pub fn bench_table4(cfg: &ReproConfig, nodes: usize) -> Result<()> {
             let data = Distribution::Uniform
                 .generator(cfg.algorithm.seed)
                 .generate(&mut cluster, n);
-            let mut alg = build_algorithm(cfg, choice)?;
+            let mut engine = engine_for(cfg, choice, nodes)?;
             // median of 3 to de-noise
             let mut xs = Vec::new();
             for _ in 0..3 {
-                let (out, _) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
+                let (out, _) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
                 xs.push(out.report.elapsed_secs);
             }
             xs.sort_by(f64::total_cmp);
@@ -421,8 +325,8 @@ pub fn bench_table5(cfg: &ReproConfig, n: u64, nodes: usize) -> Result<()> {
         let data = Distribution::Uniform
             .generator(cfg.algorithm.seed)
             .generate(&mut cluster, n);
-        let mut alg = build_algorithm(cfg, choice)?;
-        let (out, _) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
+        let mut engine = engine_for(cfg, choice, nodes)?;
+        let (out, _) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
         println!("{}", out.report.table5_row());
     }
     Ok(())
@@ -441,12 +345,11 @@ pub fn bench_ablation(cfg: &ReproConfig, n: u64, nodes: usize) -> Result<()> {
             let mut cfg2 = cfg.clone();
             cfg2.algorithm.epsilon = eps;
             cfg2.algorithm.sketch_merge = merge.into();
-            let mut cluster = make_cluster(&cfg2, nodes);
+            let mut engine = engine_for(&cfg2, AlgoChoice::GkSelect, nodes)?;
             let data = Distribution::Uniform
                 .generator(cfg2.algorithm.seed)
-                .generate(&mut cluster, n);
-            let mut alg = build_algorithm(&cfg2, AlgoChoice::GkSelect)?;
-            let (out, _) = timed_run(alg.as_mut(), &mut cluster, &data, 0.5)?;
+                .generate(engine.cluster_mut(), n);
+            let (out, _) = timed_run(&mut engine, &data, QuantileQuery::Single(0.5))?;
             println!(
                 "{:<10} {:<6} {:>14.4} {:>14} {:>12} {:>8}",
                 eps,
@@ -469,6 +372,7 @@ pub fn bench_ablation(cfg: &ReproConfig, n: u64, nodes: usize) -> Result<()> {
 /// measurement — `count_pivot` and the sort/sketch costs are not
 /// SIMD-dispatched.
 pub fn calibrate(cfg: &ReproConfig) -> Result<()> {
+    use crate::runtime::KernelBackend;
     let n = 20_000_000usize;
     let mut rng = crate::data::pcg::Pcg64::new(1, 1);
     let data: Vec<crate::Key> = (0..n).map(|_| rng.next_u64() as crate::Key).collect();
@@ -533,16 +437,16 @@ pub fn validate(cfg: &ReproConfig, n: u64) -> Result<()> {
         for q in [0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0] {
             let truth = oracle_quantile(&data, q).expect("nonempty");
             for choice in AlgoChoice::ALL {
-                let mut alg = build_algorithm(cfg, choice)?;
-                let (out, _) = timed_run(alg.as_mut(), &mut cluster, &data, q)?;
+                let mut engine = engine_for(cfg, choice, cfg.cluster.nodes)?;
+                let (out, _) = timed_run(&mut engine, &data, QuantileQuery::Single(q))?;
                 checks += 1;
-                if out.report.exact && out.value != truth {
+                if out.report.exact && out.value() != truth {
                     failures += 1;
                     println!(
                         "FAIL {} {} q={q}: got {} want {}",
                         choice.label(),
                         dist.label(),
-                        out.value,
+                        out.value(),
                         truth
                     );
                 } else if !out.report.exact {
@@ -551,8 +455,8 @@ pub fn validate(cfg: &ReproConfig, n: u64) -> Result<()> {
                     // zipf's heavy hitter covers most of them)
                     let mut all = data.to_vec();
                     all.sort_unstable();
-                    let lo = all.partition_point(|&x| x < out.value) as f64;
-                    let hi = all.partition_point(|&x| x <= out.value) as f64;
+                    let lo = all.partition_point(|&x| x < out.value()) as f64;
+                    let hi = all.partition_point(|&x| x <= out.value()) as f64;
                     let target = q * n as f64;
                     let err = if target < lo {
                         (lo - target) / n as f64
@@ -592,44 +496,28 @@ pub fn run_stream(
     query_every: u64,
     verify: bool,
 ) -> Result<()> {
-    use crate::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+    use crate::stream::MicroBatch;
     ensure!(batches > 0 && batch_n > 0, "need at least one nonempty batch");
     ensure!(!qs.is_empty(), "need at least one quantile");
     let query_every = query_every.max(1);
-    let mut cluster = make_cluster(cfg, cfg.cluster.nodes);
-    let mut store = SketchStore::new(cfg.stream.to_policy()?)?;
-    let ingestor =
-        StreamIngestor::new(cfg.algorithm.epsilon)?.with_variant(sketch_variant(cfg)?);
-    let params = GkSelectParams {
-        epsilon: cfg.algorithm.epsilon,
-        variant: sketch_variant(cfg)?,
-        merge: merge_strategy(cfg)?,
-        tree_depth: cfg.algorithm.tree_depth,
-        candidate_budget: None,
-    };
-    // route the configured kernel backend (incl. SIMD policy) through
-    // both engines, like every other subcommand (two loads: boxed
-    // backends don't clone)
-    let mut engine = StreamQuery::with_backends(
-        params.clone(),
-        cfg.kernel_backend()
-            .context("loading kernel backend (run `make artifacts`?)")?,
-        cfg.kernel_backend()?,
-    );
+    // one engine carries the whole replay: ingestor ε/variant, store
+    // compaction, kernel backend, and cluster shape all resolved by the
+    // builder from the same config the rest of the CLI uses
+    let mut engine = engine_for(cfg, AlgoChoice::GkSelect, cfg.cluster.nodes)?;
     println!(
         "# streaming replay — {} workload, {batches} batches × {batch_n} records, \
          {} nodes, ε = {}, compaction {}→{}",
         workload.label(),
-        cluster.cfg.executors,
+        engine.cluster().cfg.executors,
         cfg.algorithm.epsilon,
-        store.policy.compact_threshold,
-        store.policy.max_live_epochs,
+        engine.store().policy.compact_threshold,
+        engine.store().policy.max_live_epochs,
     );
     let stream = "replay";
     for tick in 1..=batches {
         let values = workload.batch(cfg.algorithm.seed, tick, batch_n as usize);
         let t = Instant::now();
-        let ing = ingestor.ingest(&mut cluster, &mut store, stream, MicroBatch::new(values))?;
+        let ing = engine.ingest(stream, MicroBatch::new(values))?;
         let wall = t.elapsed().as_secs_f64();
         println!(
             "tick {tick:>3} ingest: {:>9} keys in {:>7.2} ms ({:>6.1} Mkeys/s)  \
@@ -647,7 +535,7 @@ pub fn run_stream(
         );
         if tick % query_every == 0 {
             let t = Instant::now();
-            let out = engine.quantiles(&mut cluster, &store, stream, qs)?;
+            let out = engine.execute(Source::Stream(stream), QuantileQuery::Multi(qs.to_vec()))?;
             let wall = t.elapsed().as_secs_f64();
             let vals: Vec<String> = qs
                 .iter()
@@ -663,7 +551,8 @@ pub fn run_stream(
                 wall * 1e3,
             );
             if verify {
-                let data = store
+                let data = engine
+                    .store()
                     .stream(stream)
                     .expect("stream exists")
                     .live_dataset()?;
@@ -698,16 +587,16 @@ pub fn gk_select_bench_record(
     mode: ExecMode,
     simd: SimdPolicy,
 ) -> Result<JsonVal> {
-    let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
-    let dataset = dist.generator(42).generate(&mut cluster, n);
-    let mut alg = GkSelect::with_backend(
-        GkSelectParams {
-            candidate_budget: budget,
-            ..Default::default()
-        },
-        Box::new(NativeBackend::with_policy(simd)),
-    );
-    let out = alg.quantile(&mut cluster, &dataset, 0.75)?;
+    let mut builder = EngineBuilder::new()
+        .cluster(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .simd(simd);
+    if let Some(b) = budget {
+        builder = builder.candidate_budget(b);
+    }
+    let mut engine = builder.build()?;
+    let dataset = dist.generator(42).generate(engine.cluster_mut(), n);
+    let out = engine.execute(Source::Dataset(&dataset), QuantileQuery::Single(0.75))?;
     let band_scan_wall = out.report.stage_walls.get(1).copied().unwrap_or(0.0);
     println!(
         "bench gk_select_emr30/{label:<24} {:<10} rounds {} scans {} model {:>9.4}s \
@@ -769,26 +658,23 @@ pub fn stream_query_bench_record(
     mode: ExecMode,
     simd: SimdPolicy,
 ) -> Result<JsonVal> {
-    use crate::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
-    let mut cluster = Cluster::new(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode));
-    let mut store = SketchStore::default();
-    let ingestor = StreamIngestor::new(0.01)?;
+    use crate::stream::MicroBatch;
+    let mut engine = EngineBuilder::new()
+        .cluster(crate::cluster::ClusterConfig::emr(30).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .simd(simd)
+        .build()?;
     let per = (n / batches).max(1);
     let mut ingest_wall = 0.0;
     for tick in 0..batches {
         let values = StreamWorkload::Uniform.batch(42, tick, per as usize);
         let t = Instant::now();
-        ingestor.ingest(&mut cluster, &mut store, "bench", MicroBatch::new(values))?;
+        engine.ingest("bench", MicroBatch::new(values))?;
         ingest_wall += t.elapsed().as_secs_f64();
     }
-    let mut engine = StreamQuery::with_backends(
-        GkSelectParams::default(),
-        Box::new(NativeBackend::with_policy(simd)),
-        Box::new(NativeBackend::with_policy(simd)),
-    );
-    let out = engine.quantile(&mut cluster, &store, "bench", 0.75)?;
+    let out = engine.execute(Source::Stream("bench"), QuantileQuery::Single(0.75))?;
     let band_scan_wall = out.report.stage_walls.first().copied().unwrap_or(0.0);
-    let state = store.stream("bench").expect("ingested");
+    let state = engine.store().stream("bench").expect("ingested");
     println!(
         "bench gk_select_emr30/{label:<24} {:<10} rounds {} scans {} model {:>9.4}s \
          wall {:>8.4}s band-scan {:>8.4}s util {:.2} skew {:.2}",
@@ -848,6 +734,7 @@ pub fn stream_query_bench_record(
 /// acceptance bar is ≥ 1.5x, and the record degrades gracefully to
 /// `simd_lane_width = 1` (speedup ≈ 1.0) on targets without a tile.
 pub fn simd_vs_scalar_bench_record(n: u64) -> Result<JsonVal> {
+    use crate::runtime::KernelBackend;
     let mut rng = crate::data::pcg::Pcg64::new(42, 7);
     let xs: Vec<crate::Key> = (0..n).map(|_| rng.next_u64() as crate::Key).collect();
     let span = (u32::MAX as f64 * 0.005) as crate::Key;
@@ -1004,6 +891,7 @@ pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
 /// shared implementation behind `repro bench json` and the tail of
 /// `benches/hotpath.rs`.
 pub fn write_bench_json(out_dir: &Path, n: u64, simd: SimdPolicy) -> Result<()> {
+    use anyhow::Context;
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating bench output dir {}", out_dir.display()))?;
     let doc = gk_select_bench_doc(n, simd)?;

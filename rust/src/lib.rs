@@ -10,14 +10,16 @@
 //!
 //! The crate is the L3 coordinator of a three-layer stack:
 //!
-//! * **L3 (this crate)** — a Spark-like execution substrate
-//!   ([`cluster`]) with explicit rounds, stage boundaries, `treeReduce`,
-//!   `TorrentBroadcast`, range-partition shuffle, and a calibrated
-//!   network/compute cost model; the distributed quantile
-//!   [`algorithms`]; the [`stream`] serving layer (micro-batch
-//!   ingestion, cached sketch store, one-scan exact queries); and all
-//!   the substrates they need ([`sketch`], [`select`], [`sort`],
-//!   [`data`]).
+//! * **L3 (this crate)** — the [`engine`] serving façade
+//!   ([`engine::QuantileEngine`]: one builder, typed query plans, one
+//!   outcome across batch and stream) in front of a Spark-like
+//!   execution substrate ([`cluster`]) with explicit rounds, stage
+//!   boundaries, `treeReduce`, `TorrentBroadcast`, range-partition
+//!   shuffle, and a calibrated network/compute cost model; the
+//!   distributed quantile [`algorithms`] (stateless strategies behind
+//!   the engine); the [`stream`] serving layer (micro-batch ingestion,
+//!   cached sketch store, one-scan exact queries); and all the
+//!   substrates they need ([`sketch`], [`select`], [`sort`], [`data`]).
 //! * **L2/L1 (python, build-time only)** — a JAX pivot-pass pipeline
 //!   whose hot loops are Pallas kernels, AOT-lowered to HLO text by
 //!   `make artifacts` and executed from the L3 hot path through
@@ -26,21 +28,34 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! One engine answers every query shape over both batch datasets and
+//! live streams:
+//!
+//! ```
 //! use gkselect::prelude::*;
 //!
-//! let cfg = ClusterConfig::local(4, 16); // 4 executors, 16 partitions
-//! let mut cluster = Cluster::new(cfg);
-//! let data = UniformGen::new(42).generate(&mut cluster, 1_000_000);
-//! let mut gk = GkSelect::new(GkSelectParams::default());
-//! let outcome = gk.quantile(&mut cluster, &data, 0.5).unwrap();
-//! println!("median = {} in {} rounds", outcome.value, outcome.report.rounds);
+//! let mut engine = EngineBuilder::new()
+//!     .cluster(ClusterConfig::local(2, 8)) // 2 executors, 8 partitions
+//!     .algorithm(AlgoChoice::GkSelect)
+//!     .build()
+//!     .unwrap();
+//!
+//! // batch: exact median in 2 fused rounds
+//! let data = UniformGen::new(42).generate(engine.cluster_mut(), 100_000);
+//! let out = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5)).unwrap();
+//! println!("median = {} in {} rounds", out.value(), out.report.rounds);
+//!
+//! // stream: ingest micro-batches, then serve exactly from cached sketches
+//! engine.ingest("events", MicroBatch::new((0..1_000).collect())).unwrap();
+//! let p99 = engine.execute(Source::Stream("events"), QuantileQuery::Single(0.99)).unwrap();
+//! assert_eq!((p99.report.rounds, p99.report.data_scans), (1, 1));
 //! ```
 
 pub mod algorithms;
 pub mod cluster;
 pub mod config;
 pub mod data;
+pub mod engine;
 pub mod harness;
 pub mod runtime;
 pub mod select;
@@ -50,17 +65,13 @@ pub mod stream;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
-/// examples and benches.
+/// examples and benches — the [`engine`] façade plus the substrate types
+/// it is configured with. The pre-redesign per-algorithm drivers
+/// (`GkSelect`, `MultiSelect`, `StreamQuery`, …) are deliberately *not*
+/// re-exported here any more: they survive as `#[deprecated]` shims in
+/// their modules for one release.
 pub mod prelude {
-    pub use crate::algorithms::{
-        afs::{Afs, AfsParams},
-        approx_quantile::{ApproxQuantile, ApproxQuantileParams},
-        full_sort::FullSortQuantile,
-        gk_select::{GkSelect, GkSelectParams},
-        histogram_select::{HistogramSelect, HistogramSelectParams},
-        jeffers::{Jeffers, JeffersParams},
-        Outcome, QuantileAlgorithm,
-    };
+    pub use crate::algorithms::{oracle_quantile, Outcome, QuantileAlgorithm};
     pub use crate::cluster::{
         dataset::Dataset,
         metrics::{MetricsReport, RunMetrics},
@@ -72,12 +83,16 @@ pub mod prelude {
     pub use crate::data::{
         BimodalGen, DataGenerator, Distribution, SortedBandsGen, UniformGen, ZipfGen,
     };
+    pub use crate::engine::{
+        AlgoChoice, EngineBuilder, EngineCtx, EngineError, QuantileEngine, QuantileQuery,
+        QueryOutcome, Source,
+    };
     pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
     pub use crate::sketch::{
         classical::ClassicalGk, modified::ModifiedGk, spark::SparkGk, QuantileSketch,
     };
     pub use crate::stream::{
-        CompactionPolicy, MicroBatch, SketchStore, StreamIngestor, StreamQuery,
+        CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor,
     };
 }
 

@@ -2,6 +2,10 @@
 //!
 //! Subcommands cover the paper's full evaluation surface; every figure and
 //! table in EXPERIMENTS.md names the exact invocation that regenerated it.
+//! Every measured run routes through the `gkselect::engine` façade
+//! (`EngineBuilder` → `QuantileEngine::execute`), so the CLI's global
+//! flags are just builder inputs resolved with the engine's documented
+//! precedence (flag > config file > env var).
 //!
 //! ```text
 //! repro quantile  --algorithm gk-select --n 1e8 --q 0.5 --distribution uniform [--verify]

@@ -84,14 +84,13 @@ impl SimdPolicy {
     /// Policy requested by the `GKSELECT_SIMD` environment variable
     /// (`auto` | `scalar` | `force`; unset → `Auto`). This is the CI
     /// toggle that re-runs the whole suite under each dispatch pin.
+    /// Parsing lives in [`crate::engine::env`] — the one place env vars
+    /// are read; builders that can report errors use that module
+    /// directly instead of this panicking convenience.
     pub fn from_env() -> Self {
-        match std::env::var("GKSELECT_SIMD") {
-            Ok(v) if v.is_empty() => SimdPolicy::Auto,
-            Ok(v) => v
-                .parse()
-                .expect("GKSELECT_SIMD must be 'auto', 'scalar', or 'force'"),
-            Err(_) => SimdPolicy::Auto,
-        }
+        crate::engine::env::simd_policy()
+            .expect("GKSELECT_SIMD must be 'auto', 'scalar', or 'force'")
+            .unwrap_or(SimdPolicy::Auto)
     }
 
     pub fn label(self) -> &'static str {

@@ -30,41 +30,40 @@
 //! | stream ingest        | 1      | 1          | batch only      |
 //! | stream query         | 1      | 1          | n, once         |
 //!
-//! Exactness is inherited, not re-proven: the query path reuses
-//! [`GkSelect::select_with_sketch`] / [`MultiSelect`]'s fused protocol,
-//! whose answer is checked against *measured* counts and backed by the
-//! classic extraction fallback — a stale or hostile sketch costs one
-//! extra scan, never correctness.
+//! Exactness is inherited, not re-proven: the query path reuses the
+//! batch GK Select / Multi-Select fused protocol, whose answer is
+//! checked against *measured* counts and backed by the classic
+//! extraction fallback — a stale or hostile sketch costs one extra
+//! scan, never correctness.
 //!
 //! # Example
 //!
-//! Ingest two micro-batches, then answer an exact median from the
-//! cached sketches — one round, one data scan:
+//! Streams flow through the engine: `ingest` seals micro-batches,
+//! `execute(Source::Stream(..), ..)` answers exactly from the cached
+//! sketches — one round, one data scan — through the same call site as
+//! every batch query:
 //!
 //! ```
 //! use gkselect::prelude::*;
 //!
-//! let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
-//! let mut store = SketchStore::default();
-//! let ingestor = StreamIngestor::new(0.01).unwrap();
+//! let mut engine = EngineBuilder::new()
+//!     .cluster(ClusterConfig::local(2, 4))
+//!     .build()
+//!     .unwrap();
 //!
 //! // each ingest scans only its own batch (1 round / 1 scan)
-//! let batch: Vec<i32> = (0..600).collect();
-//! ingestor.ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch)).unwrap();
-//! let batch: Vec<i32> = (600..1_000).collect();
-//! ingestor.ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch)).unwrap();
+//! engine.ingest("s", MicroBatch::new((0..600).collect())).unwrap();
+//! engine.ingest("s", MicroBatch::new((600..1_000).collect())).unwrap();
 //!
 //! // the query tree-merges cached partials (no scan) and pays one
 //! // fused band-extract pass over the live epochs
-//! let mut engine = StreamQuery::new(GkSelectParams::default());
-//! let out = engine.quantile(&mut cluster, &store, "s", 0.5).unwrap();
-//! assert_eq!(out.value, 500); // exact over all 1000 live records
+//! let out = engine.execute(Source::Stream("s"), QuantileQuery::Single(0.5)).unwrap();
+//! assert_eq!(out.value(), 500); // exact over all 1000 live records
 //! assert_eq!((out.report.rounds, out.report.data_scans), (1, 1));
 //! ```
 //!
 //! [`GkCore`]: crate::sketch::GkCore
-//! [`GkSelect::select_with_sketch`]: crate::algorithms::gk_select::GkSelect::select_with_sketch
-//! [`MultiSelect`]: crate::algorithms::multi_select::MultiSelect
+//! [`StreamQuery`]: query::StreamQuery
 
 pub mod ingest;
 pub mod query;

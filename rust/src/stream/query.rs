@@ -1,6 +1,6 @@
 //! One-scan exact queries over a live stream.
 //!
-//! A batch `GkSelect` query pays two data scans: the sketch pass plus
+//! A batch GK Select query pays two data scans: the sketch pass plus
 //! the fused band-extract pass. A streamed query skips the first one
 //! entirely — the per-partition sketches were cached at ingest — so it
 //! costs:
@@ -10,8 +10,9 @@
 //! 2. **one fused band-extract scan** over the zero-copy union of all
 //!    live epochs ([`crate::cluster::dataset::Dataset::concat`]) — the
 //!    same exactness machinery as the batch path
-//!    ([`GkSelect::select_with_sketch`]), so the answer is bit-identical
-//!    to running batch GK Select over the concatenated data.
+//!    ([`crate::algorithms::gk_select`]'s fused protocol), so the answer
+//!    is bit-identical to running batch GK Select over the concatenated
+//!    data.
 //!
 //! Net: **rounds = 1, data_scans = 1 per query** (2/2 for the batch
 //! path), asserted by the per-query metrics snapshot every outcome
@@ -19,98 +20,116 @@
 //! re-checks measured counts against the band and falls back to the
 //! classic extraction round if a hostile stream pushed the sketch out of
 //! contract — still exact, one extra scan.
-
-use anyhow::{ensure, Result};
+//!
+//! The engine is the entry point: `Source::Stream(id)` plans land on
+//! the crate-internal free functions here (`quantile_with` /
+//! `quantiles_with` / `sketched_with`); the backend-owning
+//! [`StreamQuery`] struct remains as a deprecated shim.
 
 use super::store::SketchStore;
-use crate::algorithms::gk_select::{GkSelect, GkSelectParams};
-use crate::algorithms::multi_select::{MultiOutcome, MultiSelect};
+use crate::algorithms::gk_select::{self, GkSelectParams};
+use crate::algorithms::multi_select::{self, MultiOutcome};
 use crate::algorithms::Outcome;
 use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::{MetricsMark, MetricsReport};
 use crate::cluster::Cluster;
-use crate::runtime::KernelBackend;
+use crate::engine::EngineError;
+use crate::runtime::{KernelBackend, NativeBackend};
 use crate::sketch::GkCore;
 use crate::Key;
 
-/// The query engine: batch GK Select's fused protocol, fed from the
-/// sketch store instead of a fresh sketch round.
-pub struct StreamQuery {
-    select: GkSelect,
-    multi: MultiSelect,
+/// Exact quantile `q` over every live record of `stream`. The outcome's
+/// report covers exactly this query (per-query snapshot): rounds = 1,
+/// data_scans = 1 on the cached-sketch fast path.
+pub(crate) fn quantile_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    store: &SketchStore,
+    stream: &str,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    let (data, sketch) = query_view(cluster, store, stream)?;
+    let out = gk_select::select_with_sketch_with(cluster, backend, params, &data, &sketch, q)?;
+    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
+    Ok(Outcome {
+        value: out.value,
+        report,
+    })
 }
 
-impl StreamQuery {
-    /// Native-backend engine. The candidate budget is derived from the
-    /// looser of `params.epsilon` and the cached sketch's ε, so an
-    /// ingestor/engine precision mismatch costs band width, not
-    /// correctness (and not the fast path).
-    pub fn new(params: GkSelectParams) -> Self {
-        Self {
-            select: GkSelect::new(params.clone()),
-            multi: MultiSelect::new(params),
-        }
+/// Exact values for every quantile in `qs`, all sharing the single
+/// fused scan (the m-quantile serving shape: p50/p95/p99 per tick).
+pub(crate) fn quantiles_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    store: &SketchStore,
+    stream: &str,
+    qs: &[f64],
+) -> Result<MultiOutcome, EngineError> {
+    if qs.is_empty() {
+        return Err(EngineError::NoQuantiles);
     }
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    let (data, sketch) = query_view(cluster, store, stream)?;
+    let out = multi_select::quantiles_with_sketch_with(
+        cluster, backend, params, &data, &sketch, qs,
+    )?;
+    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
+    Ok(MultiOutcome {
+        values: out.values,
+        report,
+    })
+}
 
-    /// Run the fused scans through specific kernel backends — one for
-    /// the single-quantile engine, one for the batched engine (boxed
-    /// backends are not cloneable).
-    pub fn with_backends(
-        params: GkSelectParams,
-        single: Box<dyn KernelBackend>,
-        multi: Box<dyn KernelBackend>,
-    ) -> Self {
-        Self {
-            select: GkSelect::with_backend(params.clone(), single),
-            multi: MultiSelect::with_backend(params, multi),
-        }
+/// ε-approximate quantile straight from the cached merged sketch — no
+/// data scan, no round, pure driver compute. Errors with
+/// [`EngineError::SketchTooCoarse`] if the caller wants a tighter ε than
+/// the ingest-time sketches carry.
+pub(crate) fn sketched_with(
+    cluster: &mut Cluster,
+    store: &SketchStore,
+    stream: &str,
+    q: f64,
+    eps: f64,
+) -> Result<Outcome, EngineError> {
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    // no query_view here: a sketched answer never touches the data, so
+    // don't even assemble the epoch-union dataset — cached summaries only
+    let state = store
+        .stream(stream)
+        .ok_or_else(|| EngineError::UnknownStream(stream.to_string()))?;
+    if state.total_count() == 0 {
+        return Err(EngineError::DrainedStream(stream.to_string()));
     }
-
-    /// Exact quantile `q` over every live record of `stream`. The
-    /// outcome's report covers exactly this query (per-query snapshot):
-    /// rounds = 1, data_scans = 1 on the cached-sketch fast path.
-    pub fn quantile(
-        &mut self,
-        cluster: &mut Cluster,
-        store: &SketchStore,
-        stream: &str,
-        q: f64,
-    ) -> Result<Outcome> {
-        let base = cluster.metrics.mark();
-        let clock0 = cluster.elapsed_secs();
-        let (data, sketch) = query_view(cluster, store, stream)?;
-        let out = self.select.select_with_sketch(cluster, &data, &sketch, q)?;
-        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data)
-            .with_simd_lane_width(self.select.simd_lane_width());
-        Ok(Outcome {
-            value: out.value,
-            report,
-        })
+    let sketch = cluster
+        .driver(|| state.merged_sketch())
+        .ok_or_else(|| EngineError::DrainedStream(stream.to_string()))?;
+    if eps < sketch.epsilon {
+        return Err(EngineError::SketchTooCoarse {
+            requested: eps,
+            available: sketch.epsilon,
+        });
     }
-
-    /// Exact values for every quantile in `qs`, all sharing the single
-    /// fused scan (the m-quantile serving shape: p50/p95/p99 per tick).
-    pub fn quantiles(
-        &mut self,
-        cluster: &mut Cluster,
-        store: &SketchStore,
-        stream: &str,
-        qs: &[f64],
-    ) -> Result<MultiOutcome> {
-        ensure!(!qs.is_empty(), "no quantiles requested");
-        let base = cluster.metrics.mark();
-        let clock0 = cluster.elapsed_secs();
-        let (data, sketch) = query_view(cluster, store, stream)?;
-        let out = self
-            .multi
-            .quantiles_with_sketch(cluster, &data, &sketch, qs)?;
-        let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data)
-            .with_simd_lane_width(self.multi.simd_lane_width());
-        Ok(MultiOutcome {
-            values: out.values,
-            report,
-        })
-    }
+    let value = cluster
+        .driver(|| sketch.query_quantile(q))
+        .ok_or_else(|| EngineError::DrainedStream(stream.to_string()))?;
+    let delta = cluster.metrics.since(&base);
+    let report = MetricsReport::from_metrics(
+        "Stream Query",
+        state.total_count(),
+        state.partitions(),
+        cluster.cfg.executors,
+        cluster.elapsed_secs() - clock0,
+        &delta,
+        false,
+    );
+    Ok(Outcome { value, report })
 }
 
 /// The cached view a query runs against: the zero-copy union of all live
@@ -120,23 +139,23 @@ fn query_view(
     cluster: &mut Cluster,
     store: &SketchStore,
     stream: &str,
-) -> Result<(Dataset<Key>, GkCore)> {
+) -> Result<(Dataset<Key>, GkCore), EngineError> {
     let state = store
         .stream(stream)
-        .ok_or_else(|| anyhow::anyhow!("unknown stream '{stream}'"))?;
-    ensure!(
-        state.total_count() > 0,
-        "stream '{stream}' is drained (no live records)"
-    );
+        .ok_or_else(|| EngineError::UnknownStream(stream.to_string()))?;
+    if state.total_count() == 0 {
+        return Err(EngineError::DrainedStream(stream.to_string()));
+    }
     let data = state.live_dataset()?;
     let sketch = cluster
         .driver(|| state.merged_sketch())
-        .ok_or_else(|| anyhow::anyhow!("stream '{stream}' has no cached sketches"))?;
+        .ok_or_else(|| EngineError::DrainedStream(stream.to_string()))?;
     Ok((data, sketch))
 }
 
 /// Per-query report: the metrics delta since `base`, shaped like any
 /// algorithm report so the harness prints it uniformly.
+#[allow(clippy::too_many_arguments)]
 fn delta_report(
     name: &str,
     cluster: &Cluster,
@@ -144,6 +163,7 @@ fn delta_report(
     clock0: f64,
     n: u64,
     data: &Dataset<Key>,
+    exact: bool,
 ) -> MetricsReport {
     let delta = cluster.metrics.since(base);
     MetricsReport::from_metrics(
@@ -153,8 +173,102 @@ fn delta_report(
         cluster.cfg.executors,
         cluster.elapsed_secs() - clock0,
         &delta,
-        true,
+        exact,
     )
+}
+
+/// The pre-redesign query engine, owning its own kernel backends. Kept
+/// as a thin shim for one release — route stream queries through
+/// `QuantileEngine::execute(Source::Stream(..), ..)` instead (the engine
+/// owns the store and the backend).
+pub struct StreamQuery {
+    params: GkSelectParams,
+    single: Box<dyn KernelBackend>,
+    multi: Box<dyn KernelBackend>,
+}
+
+impl StreamQuery {
+    /// Native-backend engine.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a `QuantileEngine`, `ingest`, then `execute(Source::Stream(..), ..)`"
+    )]
+    pub fn new(params: GkSelectParams) -> Self {
+        Self {
+            params,
+            single: Box::new(NativeBackend::new()),
+            multi: Box::new(NativeBackend::new()),
+        }
+    }
+
+    /// Run the fused scans through specific kernel backends — one for
+    /// the single-quantile path, one for the batched path (boxed
+    /// backends are not cloneable).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `EngineBuilder::kernel_backend` — the engine's one backend serves both paths"
+    )]
+    pub fn with_backends(
+        params: GkSelectParams,
+        single: Box<dyn KernelBackend>,
+        multi: Box<dyn KernelBackend>,
+    ) -> Self {
+        Self {
+            params,
+            single,
+            multi,
+        }
+    }
+
+    /// Exact quantile `q` over every live record of `stream`. Stamps
+    /// this shim's own backend lane width to preserve the old report
+    /// contract (engine outcomes are stamped centrally instead).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Stream(..), QuantileQuery::Single(q))`"
+    )]
+    pub fn quantile(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &SketchStore,
+        stream: &str,
+        q: f64,
+    ) -> anyhow::Result<Outcome> {
+        let mut out = quantile_with(
+            cluster,
+            self.single.as_ref(),
+            &self.params,
+            store,
+            stream,
+            q,
+        )?;
+        out.report.simd_lane_width = self.single.simd_lane_width() as u64;
+        Ok(out)
+    }
+
+    /// Exact values for every quantile in `qs`.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `QuantileEngine::execute(Source::Stream(..), QuantileQuery::Multi(..))`"
+    )]
+    pub fn quantiles(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &SketchStore,
+        stream: &str,
+        qs: &[f64],
+    ) -> anyhow::Result<MultiOutcome> {
+        let mut out = quantiles_with(
+            cluster,
+            self.multi.as_ref(),
+            &self.params,
+            store,
+            stream,
+            qs,
+        )?;
+        out.report.simd_lane_width = self.multi.simd_lane_width() as u64;
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +285,10 @@ mod tests {
         }
     }
 
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
     #[test]
     fn query_is_exact_and_costs_one_round_one_scan() {
         let mut c = Cluster::new(ClusterConfig::local(2, 4));
@@ -181,9 +299,10 @@ mod tests {
 
         let mut all: Vec<Key> = b0.iter().chain(b1.iter()).copied().collect();
         all.sort_unstable();
-        let mut q = StreamQuery::new(GkSelectParams::default());
+        let be = backend();
+        let params = GkSelectParams::default();
         for quant in [0.0, 0.25, 0.5, 0.9, 1.0] {
-            let out = q.quantile(&mut c, &store, "s", quant).unwrap();
+            let out = quantile_with(&mut c, &be, &params, &store, "s", quant).unwrap();
             let truth = all[crate::target_rank(all.len() as u64, quant) as usize];
             assert_eq!(out.value, truth, "q={quant}");
             assert_eq!(out.report.rounds, 1, "q={quant}: cached sketch → 1 round");
@@ -203,9 +322,10 @@ mod tests {
         ingest_batches(&mut c, &mut store, &[b0.clone(), b1.clone()]);
         let data = store.stream("s").unwrap().live_dataset().unwrap();
 
-        let mut q = StreamQuery::new(GkSelectParams::default());
+        let be = backend();
         let qs = [0.5, 0.95, 0.99];
-        let out = q.quantiles(&mut c, &store, "s", &qs).unwrap();
+        let out = quantiles_with(&mut c, &be, &GkSelectParams::default(), &store, "s", &qs)
+            .unwrap();
         assert_eq!(out.report.rounds, 1);
         assert_eq!(out.report.data_scans, 1);
         for (&quant, &v) in qs.iter().zip(out.values.iter()) {
@@ -214,11 +334,37 @@ mod tests {
     }
 
     #[test]
+    fn sketched_query_needs_no_scan_and_respects_cached_epsilon() {
+        let mut c = Cluster::new(ClusterConfig::local(2, 4));
+        let mut store = SketchStore::default();
+        let b: Vec<Key> = (0..5_000).collect();
+        ingest_batches(&mut c, &mut store, &[b]);
+
+        let out = sketched_with(&mut c, &store, "s", 0.5, 0.05).unwrap();
+        assert!(!out.report.exact);
+        assert_eq!(out.report.data_scans, 0, "answered from the cached sketch");
+        assert_eq!(out.report.rounds, 0);
+        // within the cached ε band of the true median
+        assert!((out.value - 2_500).unsigned_abs() <= (0.05 * 2.0 * 5_000.0) as u32 + 2);
+
+        // asking for tighter precision than ingest cached is a typed error
+        let err = sketched_with(&mut c, &store, "s", 0.5, 0.0001).unwrap_err();
+        assert!(matches!(err, EngineError::SketchTooCoarse { .. }));
+    }
+
+    #[test]
     fn unknown_and_missing_streams_are_recoverable() {
         let mut c = Cluster::new(ClusterConfig::local(1, 2));
         let store = SketchStore::default();
-        let mut q = StreamQuery::new(GkSelectParams::default());
-        assert!(q.quantile(&mut c, &store, "nope", 0.5).is_err());
-        assert!(q.quantiles(&mut c, &store, "nope", &[]).is_err());
+        let be = backend();
+        let params = GkSelectParams::default();
+        assert_eq!(
+            quantile_with(&mut c, &be, &params, &store, "nope", 0.5).unwrap_err(),
+            EngineError::UnknownStream("nope".into())
+        );
+        assert_eq!(
+            quantiles_with(&mut c, &be, &params, &store, "nope", &[]).unwrap_err(),
+            EngineError::NoQuantiles
+        );
     }
 }

@@ -1,11 +1,11 @@
 //! Cross-module integration: every algorithm against the oracle across
 //! the full (distribution × quantile × cluster-shape) matrix, plus the
-//! Table V counter contracts.
+//! Table V counter contracts — all through the engine façade
+//! (`EngineBuilder` → `QuantileEngine::execute`).
 
-use gkselect::algorithms::oracle_quantile;
 use gkselect::config::ReproConfig;
 use gkselect::data::{DataGenerator, Distribution};
-use gkselect::harness::{build_algorithm, make_cluster, AlgoChoice};
+use gkselect::harness::{engine_for, make_cluster, AlgoChoice};
 use gkselect::prelude::*;
 
 fn cfg() -> ReproConfig {
@@ -37,10 +37,12 @@ fn exact_algorithms_match_oracle_across_matrix() {
                 AlgoChoice::FullSort,
                 AlgoChoice::HistSelect,
             ] {
-                let mut alg = build_algorithm(&cfg, choice).unwrap();
-                let out = alg.quantile(&mut cluster, &data, q).unwrap();
+                let mut engine = engine_for(&cfg, choice, 3).unwrap();
+                let out = engine
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                    .unwrap();
                 assert_eq!(
-                    out.value,
+                    out.value(),
                     truth,
                     "{} {} q={q}",
                     choice.label(),
@@ -61,10 +63,12 @@ fn approx_algorithm_stays_within_rank_band() {
         sorted.sort_unstable();
         let n = sorted.len() as f64;
         for q in [0.25, 0.5, 0.75, 0.99] {
-            let mut alg = build_algorithm(&cfg, AlgoChoice::GkSketch).unwrap();
-            let out = alg.quantile(&mut cluster, &data, q).unwrap();
-            let lo = sorted.partition_point(|&x| x < out.value) as f64;
-            let hi = sorted.partition_point(|&x| x <= out.value) as f64;
+            let mut engine = engine_for(&cfg, AlgoChoice::GkSketch, 3).unwrap();
+            let out = engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
+            let lo = sorted.partition_point(|&x| x < out.value()) as f64;
+            let hi = sorted.partition_point(|&x| x <= out.value()) as f64;
             let target = q * n;
             let err = if target < lo {
                 lo - target
@@ -88,8 +92,10 @@ fn table5_contract_gk_select() {
     let cfg = cfg();
     let mut cluster = make_cluster(&cfg, 5);
     let data = Distribution::Uniform.generator(93).generate(&mut cluster, 100_000);
-    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
-    let out = alg.quantile(&mut cluster, &data, 0.37).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 5).unwrap();
+    let out = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.37))
+        .unwrap();
     assert!(out.report.rounds <= 3, "GK Select used {} rounds", out.report.rounds);
     assert_eq!(out.report.shuffles, 0);
     assert_eq!(out.report.persists, 0);
@@ -101,8 +107,10 @@ fn table5_contract_full_sort() {
     let cfg = cfg();
     let mut cluster = make_cluster(&cfg, 5);
     let data = Distribution::Uniform.generator(94).generate(&mut cluster, 100_000);
-    let mut alg = build_algorithm(&cfg, AlgoChoice::FullSort).unwrap();
-    let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::FullSort, 5).unwrap();
+    let out = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap();
     assert_eq!(out.report.shuffles, 1);
     assert_eq!(out.report.rounds, 1);
     // O(n) network volume: the shuffle moves most records
@@ -115,8 +123,10 @@ fn table5_contract_count_discard() {
     let mut cluster = make_cluster(&cfg, 5);
     let data = Distribution::Uniform.generator(95).generate(&mut cluster, 100_000);
     for choice in [AlgoChoice::Afs, AlgoChoice::Jeffers] {
-        let mut alg = build_algorithm(&cfg, choice).unwrap();
-        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+        let mut engine = engine_for(&cfg, choice, 5).unwrap();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
         assert!(out.report.rounds >= 3, "{}: rounds", choice.label());
         assert!(out.report.persists >= 1, "{}: persists", choice.label());
         assert_eq!(out.report.shuffles, 0, "{}: shuffles", choice.label());
@@ -128,8 +138,10 @@ fn table5_contract_gk_sketch() {
     let cfg = cfg();
     let mut cluster = make_cluster(&cfg, 5);
     let data = Distribution::Uniform.generator(96).generate(&mut cluster, 100_000);
-    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSketch).unwrap();
-    let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
+    let mut engine = engine_for(&cfg, AlgoChoice::GkSketch, 5).unwrap();
+    let out = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap();
     assert_eq!(out.report.rounds, 1);
     assert_eq!(out.report.shuffles, 0);
     assert_eq!(out.report.persists, 0);
@@ -145,13 +157,17 @@ fn modelled_time_ordering_holds_at_scale() {
     let mut cluster = make_cluster(&cfg, 10);
     let data = Distribution::Uniform.generator(97).generate(&mut cluster, 2_000_000);
 
-    let run = |cfg: &ReproConfig, cluster: &mut gkselect::cluster::Cluster, c: AlgoChoice| {
-        let mut alg = build_algorithm(cfg, c).unwrap();
-        alg.quantile(cluster, &data, 0.5).unwrap().report.elapsed_secs
+    let run = |cfg: &ReproConfig, c: AlgoChoice| {
+        let mut engine = engine_for(cfg, c, 10).unwrap();
+        engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap()
+            .report
+            .elapsed_secs
     };
-    let t_select = run(&cfg, &mut cluster, AlgoChoice::GkSelect);
-    let t_sketch = run(&cfg, &mut cluster, AlgoChoice::GkSketch);
-    let t_sort = run(&cfg, &mut cluster, AlgoChoice::FullSort);
+    let t_select = run(&cfg, AlgoChoice::GkSelect);
+    let t_sketch = run(&cfg, AlgoChoice::GkSketch);
+    let t_sort = run(&cfg, AlgoChoice::FullSort);
     assert!(
         t_sort > t_select,
         "full sort ({t_sort:.4}s) must exceed GK Select ({t_select:.4}s)"
@@ -166,12 +182,15 @@ fn modelled_time_ordering_holds_at_scale() {
 fn cluster_shape_sweep() {
     let cfg = cfg();
     for nodes in [1usize, 2, 7, 16] {
-        let mut cluster = make_cluster(&cfg, nodes);
-        let data = Distribution::Uniform.generator(98).generate(&mut cluster, 30_000);
+        let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, nodes).unwrap();
+        let data = Distribution::Uniform
+            .generator(98)
+            .generate(engine.cluster_mut(), 30_000);
         let truth = oracle_quantile(&data, 0.5).unwrap();
-        let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
-        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
-        assert_eq!(out.value, truth, "nodes={nodes}");
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(out.value(), truth, "nodes={nodes}");
         assert_eq!(out.report.partitions, nodes * 4);
     }
 }
@@ -179,12 +198,47 @@ fn cluster_shape_sweep() {
 #[test]
 fn repeated_queries_are_deterministic() {
     let cfg = cfg();
-    let mut cluster = make_cluster(&cfg, 4);
-    let data = Distribution::Zipf.generator(99).generate(&mut cluster, 50_000);
-    let mut alg = build_algorithm(&cfg, AlgoChoice::GkSelect).unwrap();
-    let a = alg.quantile(&mut cluster, &data, 0.5).unwrap();
-    let b = alg.quantile(&mut cluster, &data, 0.5).unwrap();
-    assert_eq!(a.value, b.value);
+    let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 4).unwrap();
+    let data = Distribution::Zipf
+        .generator(99)
+        .generate(engine.cluster_mut(), 50_000);
+    let a = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap();
+    let b = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+        .unwrap();
+    assert_eq!(a.value(), b.value());
     assert_eq!(a.report.rounds, b.report.rounds);
     assert_eq!(a.report.network_volume_bytes, b.report.network_volume_bytes);
+}
+
+#[test]
+fn rank_and_multi_plans_cover_the_matrix() {
+    // the typed plans the redesign added, against the oracle
+    let cfg = cfg();
+    let mut cluster = make_cluster(&cfg, 3);
+    let data = Distribution::Bimodal.generator(90).generate(&mut cluster, 30_000);
+    let n = data.len();
+    let mut engine = engine_for(&cfg, AlgoChoice::GkSelect, 3).unwrap();
+
+    // Rank(k) == the k-th order statistic
+    let mut all = data.to_vec();
+    all.sort_unstable();
+    for k in [0, n / 4, n / 2, n - 1] {
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Rank(k))
+            .unwrap();
+        assert_eq!(out.value(), all[k as usize], "k={k}");
+    }
+
+    // Multi == the singles, one fused scan
+    let qs = vec![0.1, 0.5, 0.9, 0.99];
+    let multi = engine
+        .execute(Source::Dataset(&data), QuantileQuery::Multi(qs.clone()))
+        .unwrap();
+    assert_eq!(multi.report.data_scans, 2, "batched quantiles share one scan");
+    for (&q, &v) in qs.iter().zip(multi.values.iter()) {
+        assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
+    }
 }

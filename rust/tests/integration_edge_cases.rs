@@ -1,30 +1,36 @@
 //! Adversarial / failure-injection integration tests: degenerate
 //! partitioning, extreme values, pathological duplicates, and sketch
-//! variants — the inputs a production deployment actually sees.
+//! variants — the inputs a production deployment actually sees. Every
+//! query goes through `QuantileEngine::execute`.
 
 use gkselect::algorithms::approx_quantile::{MergeStrategy, SketchVariant};
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::histogram_select::{HistogramSelect, HistogramSelectParams};
-use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
-use gkselect::cluster::dataset::Dataset;
-use gkselect::cluster::{Cluster, ClusterConfig};
 use gkselect::prelude::*;
 use gkselect::Key;
 
-fn gk(eps: f64, variant: SketchVariant) -> GkSelect {
-    GkSelect::new(GkSelectParams {
-        epsilon: eps,
-        variant,
-        ..Default::default()
-    })
+fn gk_engine(parts: usize, eps: f64, variant: SketchVariant) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(ClusterConfig::local(2, parts.max(2)))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(eps)
+        .sketch_variant(variant)
+        .build()
+        .unwrap()
 }
 
-fn check_exact(alg: &mut dyn QuantileAlgorithm, data: &Dataset<Key>, parts: usize, q: f64) {
-    let mut cluster = Cluster::new(ClusterConfig::local(2, parts.max(2)));
+fn engine_of(parts: usize, choice: AlgoChoice) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(ClusterConfig::local(2, parts.max(2)))
+        .algorithm(choice)
+        .build()
+        .unwrap()
+}
+
+fn check_exact(engine: &mut QuantileEngine, data: &Dataset<Key>, q: f64) {
     let truth = oracle_quantile(data, q).unwrap();
-    let out = alg.quantile(&mut cluster, data, q).unwrap();
-    assert_eq!(out.value, truth, "{} q={q}", alg.name());
+    let out = engine
+        .execute(Source::Dataset(data), QuantileQuery::Single(q))
+        .unwrap();
+    assert_eq!(out.value(), truth, "{} q={q}", out.report.algorithm);
 }
 
 #[test]
@@ -39,15 +45,10 @@ fn empty_partitions_interleaved() {
     ])
     .unwrap();
     for q in [0.0, 0.5, 1.0] {
-        check_exact(&mut gk(0.05, SketchVariant::Bulk), &data, 6, q);
-        check_exact(&mut gk(0.05, SketchVariant::Modified), &data, 6, q);
-        check_exact(
-            &mut HistogramSelect::new(HistogramSelectParams::default()),
-            &data,
-            6,
-            q,
-        );
-        check_exact(&mut Afs::new(AfsParams::default()), &data, 6, q);
+        check_exact(&mut gk_engine(6, 0.05, SketchVariant::Bulk), &data, q);
+        check_exact(&mut gk_engine(6, 0.05, SketchVariant::Modified), &data, q);
+        check_exact(&mut engine_of(6, AlgoChoice::HistSelect), &data, q);
+        check_exact(&mut engine_of(6, AlgoChoice::Afs), &data, q);
     }
 }
 
@@ -55,8 +56,8 @@ fn empty_partitions_interleaved() {
 fn single_record_per_partition() {
     let data = Dataset::from_partitions((0..16).map(|i| vec![i * 7 % 13]).collect()).unwrap();
     for q in [0.0, 0.33, 0.5, 1.0] {
-        check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 16, q);
-        check_exact(&mut Jeffers::new(JeffersParams::default()), &data, 16, q);
+        check_exact(&mut gk_engine(16, 0.1, SketchVariant::Bulk), &data, q);
+        check_exact(&mut engine_of(16, AlgoChoice::Jeffers), &data, q);
     }
 }
 
@@ -68,14 +69,9 @@ fn i32_extremes_dataset() {
     vals.extend(-50..50);
     let data = Dataset::from_vec(vals, 8).unwrap();
     for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        check_exact(&mut gk(0.02, SketchVariant::Bulk), &data, 8, q);
-        check_exact(&mut FullSortQuantile::default(), &data, 8, q);
-        check_exact(
-            &mut HistogramSelect::new(HistogramSelectParams::default()),
-            &data,
-            8,
-            q,
-        );
+        check_exact(&mut gk_engine(8, 0.02, SketchVariant::Bulk), &data, q);
+        check_exact(&mut engine_of(8, AlgoChoice::FullSort), &data, q);
+        check_exact(&mut engine_of(8, AlgoChoice::HistSelect), &data, q);
     }
 }
 
@@ -86,7 +82,7 @@ fn two_value_distribution() {
     vals.extend(vec![2; 5_000]);
     let data = Dataset::from_vec(vals, 8).unwrap();
     for q in [0.4999, 0.5, 0.5001] {
-        check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 8, q);
+        check_exact(&mut gk_engine(8, 0.01, SketchVariant::Bulk), &data, q);
     }
 }
 
@@ -99,17 +95,17 @@ fn severely_skewed_partition_sizes() {
     }
     let data = Dataset::from_partitions(parts).unwrap();
     for q in [0.1, 0.5, 0.9] {
-        check_exact(&mut gk(0.01, SketchVariant::Bulk), &data, 16, q);
-        check_exact(&mut gk(0.01, SketchVariant::Spark), &data, 16, q);
+        check_exact(&mut gk_engine(16, 0.01, SketchVariant::Bulk), &data, q);
+        check_exact(&mut gk_engine(16, 0.01, SketchVariant::Spark), &data, q);
     }
 }
 
 #[test]
 fn all_sketch_variants_give_exact_gk_select() {
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
+    let mut scratch = Cluster::new(ClusterConfig::local(2, 8));
     let data = gkselect::data::Distribution::Bimodal
         .generator(7)
-        .generate(&mut cluster, 40_000);
+        .generate(&mut scratch, 40_000);
     let truth = oracle_quantile(&data, 0.9).unwrap();
     for variant in [
         SketchVariant::Classical,
@@ -117,32 +113,40 @@ fn all_sketch_variants_give_exact_gk_select() {
         SketchVariant::Modified,
         SketchVariant::Bulk,
     ] {
-        let mut alg = gk(0.01, variant);
-        let out = alg.quantile(&mut cluster, &data, 0.9).unwrap();
-        assert_eq!(out.value, truth, "variant {variant:?}");
+        let mut engine = gk_engine(8, 0.01, variant);
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.9))
+            .unwrap();
+        assert_eq!(out.value(), truth, "variant {variant:?}");
     }
     // merge strategies too
     for merge in [MergeStrategy::Fold, MergeStrategy::Tree] {
-        let mut alg = GkSelect::new(GkSelectParams {
-            merge,
-            ..Default::default()
-        });
-        let out = alg.quantile(&mut cluster, &data, 0.9).unwrap();
-        assert_eq!(out.value, truth, "merge {merge:?}");
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 8))
+            .algorithm(AlgoChoice::GkSelect)
+            .sketch_merge(merge)
+            .build()
+            .unwrap();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.9))
+            .unwrap();
+        assert_eq!(out.value(), truth, "merge {merge:?}");
     }
 }
 
 #[test]
 fn epsilon_extremes_still_exact() {
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
+    let mut scratch = Cluster::new(ClusterConfig::local(2, 8));
     let data = gkselect::data::Distribution::Uniform
         .generator(8)
-        .generate(&mut cluster, 30_000);
+        .generate(&mut scratch, 30_000);
     let truth = oracle_quantile(&data, 0.5).unwrap();
     for eps in [0.4, 0.001] {
-        let mut alg = gk(eps, SketchVariant::Bulk);
-        let out = alg.quantile(&mut cluster, &data, 0.5).unwrap();
-        assert_eq!(out.value, truth, "eps {eps}");
+        let mut engine = gk_engine(8, eps, SketchVariant::Bulk);
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(out.value(), truth, "eps {eps}");
     }
 }
 
@@ -150,20 +154,21 @@ fn epsilon_extremes_still_exact() {
 fn quantile_sweep_dense() {
     // every percentile over a small dataset — catches off-by-one rank
     // conventions
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
     let data = Dataset::from_vec((0..1000).rev().collect::<Vec<Key>>(), 4).unwrap();
-    let mut alg = gk(0.05, SketchVariant::Bulk);
+    let mut engine = gk_engine(4, 0.05, SketchVariant::Bulk);
     for pct in 0..=100 {
         let q = pct as f64 / 100.0;
         let truth = oracle_quantile(&data, q).unwrap();
-        let out = alg.quantile(&mut cluster, &data, q).unwrap();
-        assert_eq!(out.value, truth, "pct={pct}");
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), truth, "pct={pct}");
     }
 }
 
 #[test]
 fn more_partitions_than_values() {
     let data = Dataset::from_vec(vec![3, 1, 2], 12).unwrap();
-    check_exact(&mut gk(0.1, SketchVariant::Bulk), &data, 12, 0.5);
-    check_exact(&mut FullSortQuantile::default(), &data, 12, 0.5);
+    check_exact(&mut gk_engine(12, 0.1, SketchVariant::Bulk), &data, 0.5);
+    check_exact(&mut engine_of(12, AlgoChoice::FullSort), &data, 0.5);
 }

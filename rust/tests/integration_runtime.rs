@@ -8,10 +8,13 @@
 //! build resolves offline and carries no XLA binding).
 
 #![cfg(feature = "pjrt")]
+// The GK Select run below deliberately drives the pre-redesign
+// backend-owning shim with an explicit PjrtBackend; the supported path
+// is `EngineBuilder::kernel_backend(Box::new(pjrt))`.
+#![allow(deprecated)]
 
 use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
 use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::{Cluster, ClusterConfig};
 use gkselect::data::pcg::Pcg64;
 use gkselect::data::{DataGenerator, Distribution};

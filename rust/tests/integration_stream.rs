@@ -1,63 +1,76 @@
-//! Integration pins for the streaming quantile service — the PR's
+//! Integration pins for the streaming quantile service — the
 //! acceptance contract:
 //!
-//! * a `StreamQuery` after ≥ 2 micro-batches returns the bit-identical
-//!   exact quantile as batch `GkSelect` over the concatenated data,
+//! * a streamed engine query after ≥ 2 micro-batches returns the
+//!   bit-identical exact quantile as batch GK Select over the
+//!   concatenated data,
 //! * while recording **rounds = 1 / data_scans = 1** for the query
 //!   itself (the sketch work was amortized into ingest),
 //! * in both execution modes,
 //! * with the store footprint bounded by compaction and hostile
-//!   (non-stationary) streams staying exact.
+//!   (non-stationary) streams staying exact —
+//!
+//! batch and stream both served by `QuantileEngine::execute`, the one
+//! call site the redesign promises.
 
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::dataset::Dataset;
-use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::cluster::{ClusterConfig, ExecMode};
 use gkselect::harness::StreamWorkload;
-use gkselect::stream::{CompactionPolicy, MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+use gkselect::prelude::*;
 use gkselect::Key;
 
 fn batch(seed: u64, tick: u64, len: usize, workload: StreamWorkload) -> Vec<Key> {
     workload.batch(seed, tick, len)
 }
 
+fn engine_with(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    policy: Option<CompactionPolicy>,
+) -> QuantileEngine {
+    let mut b = EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect);
+    if let Some(p) = policy {
+        b = b.compaction(p);
+    }
+    b.build().unwrap()
+}
+
 /// The headline acceptance criterion, pinned per execution mode.
 fn acceptance_for_mode(mode: ExecMode) {
     let executors = 2;
     let partitions = 8;
-    let mut cluster =
-        Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
-    let mut store = SketchStore::default();
-    let ing = StreamIngestor::new(0.01).unwrap();
+    let mut engine = engine_with(executors, partitions, mode, None);
 
     let mut concat: Vec<Key> = Vec::new();
     for tick in 0..4u64 {
         let values = batch(7, tick, 20_000, StreamWorkload::Uniform);
         concat.extend_from_slice(&values);
-        let out = ing
-            .ingest(&mut cluster, &mut store, "s", MicroBatch::new(values))
-            .unwrap();
+        let out = engine.ingest("s", MicroBatch::new(values)).unwrap();
         // ingest itself is one round over the new records only
         assert_eq!(out.report.rounds, 1, "{mode:?} tick {tick}");
         assert_eq!(out.report.data_scans, 1, "{mode:?} tick {tick}");
     }
 
     let data = Dataset::from_vec(concat, partitions).unwrap();
-    let mut engine = StreamQuery::new(GkSelectParams::default());
     for q in [0.25, 0.5, 0.75, 0.99] {
-        let out = engine.quantile(&mut cluster, &store, "s", q).unwrap();
+        let out = engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(q))
+            .unwrap();
 
-        let mut batch_cluster =
-            Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
-        let mut alg = GkSelect::new(GkSelectParams::default());
-        let batch_out = alg.quantile(&mut batch_cluster, &data, q).unwrap();
+        let mut batch_engine = engine_with(executors, partitions, mode, None);
+        let batch_out = batch_engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
 
         assert_eq!(
-            out.value, batch_out.value,
+            out.value(),
+            batch_out.value(),
             "{mode:?} q={q}: stream must be bit-identical to batch"
         );
-        assert_eq!(out.value, oracle_quantile(&data, q).unwrap(), "{mode:?} q={q}");
+        assert_eq!(out.value(), oracle_quantile(&data, q).unwrap(), "{mode:?} q={q}");
         // the query pays only the fused band-extract scan
         assert_eq!(out.report.rounds, 1, "{mode:?} q={q}");
         assert_eq!(out.report.data_scans, 1, "{mode:?} q={q}");
@@ -82,20 +95,18 @@ fn stream_query_one_round_one_scan_threads() {
 
 #[test]
 fn multi_quantile_query_shares_the_scan() {
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 8));
-    let mut store = SketchStore::default();
-    let ing = StreamIngestor::new(0.01).unwrap();
+    let mut engine = engine_with(2, 8, ExecMode::Sequential, None);
     let mut concat: Vec<Key> = Vec::new();
     for tick in 0..3u64 {
         let values = batch(11, tick, 15_000, StreamWorkload::Zipf);
         concat.extend_from_slice(&values);
-        ing.ingest(&mut cluster, &mut store, "s", MicroBatch::new(values))
-            .unwrap();
+        engine.ingest("s", MicroBatch::new(values)).unwrap();
     }
     let data = Dataset::from_vec(concat, 8).unwrap();
-    let mut engine = StreamQuery::new(GkSelectParams::default());
-    let qs = [0.5, 0.95, 0.99];
-    let out = engine.quantiles(&mut cluster, &store, "s", &qs).unwrap();
+    let qs = vec![0.5, 0.95, 0.99];
+    let out = engine
+        .execute(Source::Stream("s"), QuantileQuery::Multi(qs.clone()))
+        .unwrap();
     assert_eq!(out.report.rounds, 1);
     assert_eq!(out.report.data_scans, 1);
     for (&q, &v) in qs.iter().zip(out.values.iter()) {
@@ -105,25 +116,26 @@ fn multi_quantile_query_shares_the_scan() {
 
 #[test]
 fn store_footprint_stays_bounded_across_many_batches() {
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
-    let mut store = SketchStore::new(CompactionPolicy {
-        compact_threshold: 4,
-        max_live_epochs: 2,
-    })
-    .unwrap();
-    let ing = StreamIngestor::new(0.02).unwrap();
+    let mut engine = EngineBuilder::new()
+        .cluster(ClusterConfig::local(2, 4))
+        .epsilon(0.02)
+        .compaction(CompactionPolicy {
+            compact_threshold: 4,
+            max_live_epochs: 2,
+        })
+        .build()
+        .unwrap();
     let mut peak_partials = 0usize;
     for tick in 0..32u64 {
-        ing.ingest(
-            &mut cluster,
-            &mut store,
-            "s",
-            MicroBatch::new(batch(3, tick, 2_000, StreamWorkload::Uniform)),
-        )
-        .unwrap();
-        peak_partials = peak_partials.max(store.stream("s").unwrap().sketch_partials());
+        engine
+            .ingest(
+                "s",
+                MicroBatch::new(batch(3, tick, 2_000, StreamWorkload::Uniform)),
+            )
+            .unwrap();
+        peak_partials = peak_partials.max(engine.store().stream("s").unwrap().sketch_partials());
     }
-    let state = store.stream("s").unwrap();
+    let state = engine.store().stream("s").unwrap();
     assert_eq!(state.total_count(), 64_000, "compaction never drops data");
     // live partials bounded by the policy (threshold+1 epochs × P at the
     // seal that triggers compaction), independent of the 32 batches
@@ -133,13 +145,11 @@ fn store_footprint_stays_bounded_across_many_batches() {
 
     // queries stay exact across all those compactions
     let data = state.live_dataset().unwrap();
-    let mut engine = StreamQuery::new(GkSelectParams {
-        epsilon: 0.02,
-        ..Default::default()
-    });
     for q in [0.1, 0.5, 0.9] {
-        let out = engine.quantile(&mut cluster, &store, "s", q).unwrap();
-        assert_eq!(out.value, oracle_quantile(&data, q).unwrap(), "q={q}");
+        let out = engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), oracle_quantile(&data, q).unwrap(), "q={q}");
     }
 }
 
@@ -148,22 +158,20 @@ fn hostile_nonstationary_stream_stays_exact() {
     // every batch shifts the global quantiles into a fresh band — cached
     // sketches always mispredict; exactness must come from measured
     // counts (fast path or one fallback scan, never a wrong answer)
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
-    let mut store = SketchStore::default();
-    let ing = StreamIngestor::new(0.01).unwrap();
-    let mut engine = StreamQuery::new(GkSelectParams::default());
+    let mut engine = engine_with(2, 4, ExecMode::Sequential, None);
     for tick in 0..6u64 {
-        ing.ingest(
-            &mut cluster,
-            &mut store,
-            "s",
-            MicroBatch::new(batch(5, tick, 8_000, StreamWorkload::Hostile)),
-        )
-        .unwrap();
-        let data = store.stream("s").unwrap().live_dataset().unwrap();
+        engine
+            .ingest(
+                "s",
+                MicroBatch::new(batch(5, tick, 8_000, StreamWorkload::Hostile)),
+            )
+            .unwrap();
+        let data = engine.store().stream("s").unwrap().live_dataset().unwrap();
         for q in [0.01, 0.5, 0.99] {
-            let out = engine.quantile(&mut cluster, &store, "s", q).unwrap();
-            assert_eq!(out.value, oracle_quantile(&data, q).unwrap(), "tick {tick} q={q}");
+            let out = engine
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(out.value(), oracle_quantile(&data, q).unwrap(), "tick {tick} q={q}");
             assert!(out.report.rounds <= 2, "tick {tick} q={q}");
             assert!(out.report.data_scans <= 2);
         }
@@ -172,20 +180,21 @@ fn hostile_nonstationary_stream_stays_exact() {
 
 #[test]
 fn drained_and_empty_streams_are_recoverable_errors() {
-    let mut cluster = Cluster::new(ClusterConfig::local(1, 2));
-    let mut store = SketchStore::default();
-    let ing = StreamIngestor::new(0.01).unwrap();
+    let mut engine = engine_with(1, 2, ExecMode::Sequential, None);
     // empty batch: Err, no panic, store untouched
-    assert!(ing
-        .ingest(&mut cluster, &mut store, "s", MicroBatch::default())
-        .is_err());
-    assert!(store.stream("s").is_none());
-    // querying a stream that never ingested: Err, no panic
-    let mut engine = StreamQuery::new(GkSelectParams::default());
-    assert!(engine.quantile(&mut cluster, &store, "s", 0.5).is_err());
-    // after a real ingest everything works again on the same handles
-    ing.ingest(&mut cluster, &mut store, "s", MicroBatch::new(vec![3, 1, 2]))
+    assert!(engine.ingest("s", MicroBatch::default()).is_err());
+    assert!(engine.store().stream("s").is_none());
+    // querying a stream that never ingested: a typed, recoverable error
+    assert_eq!(
+        engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+            .unwrap_err(),
+        EngineError::UnknownStream("s".into())
+    );
+    // after a real ingest everything works again on the same handle
+    engine.ingest("s", MicroBatch::new(vec![3, 1, 2])).unwrap();
+    let out = engine
+        .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
         .unwrap();
-    let out = engine.quantile(&mut cluster, &store, "s", 0.5).unwrap();
-    assert_eq!(out.value, 2);
+    assert_eq!(out.value(), 2);
 }

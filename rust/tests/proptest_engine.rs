@@ -1,0 +1,295 @@
+//! API-equivalence pins for the `QuantileEngine` redesign: every
+//! `AlgoChoice` × `QuantileQuery` variant executed through the engine
+//! must be **bit-identical** to the pre-redesign direct entry points
+//! (the `#[deprecated]` shims kept for one release), oracle-checked,
+//! across random geometries and both execution modes — including
+//! `Rank(k)` ↔ `Single(q)` consistency at `k = target_rank(n, q)`.
+//!
+//! This file is the one place in-tree that intentionally calls the
+//! deprecated surface: it IS the old-vs-new comparison.
+#![allow(deprecated)]
+
+use gkselect::algorithms::afs::{Afs, AfsParams};
+use gkselect::algorithms::approx_quantile::{
+    ApproxQuantile, ApproxQuantileParams, MergeStrategy, SketchVariant,
+};
+use gkselect::algorithms::full_sort::FullSortQuantile;
+use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
+use gkselect::algorithms::histogram_select::{HistogramSelect, HistogramSelectParams};
+use gkselect::algorithms::jeffers::{Jeffers, JeffersParams};
+use gkselect::algorithms::multi_select::MultiSelect;
+use gkselect::algorithms::oracle_quantile;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::engine::{
+    rank_to_quantile, AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source,
+};
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+const SEED: u64 = 0xDEC0DE; // the config default the engine resolves to
+const EPS: f64 = 0.02;
+
+fn gen_dataset(g: &mut Gen) -> (usize, usize, Dataset<Key>, u64) {
+    let executors = g.usize_in(1, 3);
+    let partitions = g.usize_in(executors, executors * 3);
+    let n = g.usize_in(1, 2_000);
+    let values: Vec<Key> = match g.usize_in(0, 2) {
+        0 => (0..n).map(|_| g.i32_in(-1_000_000, 1_000_000)).collect(),
+        1 => (0..n).map(|_| g.i32_in(0, 6)).collect(), // duplicate-heavy
+        _ => {
+            let mut v: Vec<Key> = (0..n).map(|_| g.i32_in(-40_000, 40_000)).collect();
+            v.sort_unstable();
+            v
+        }
+    };
+    let len = values.len() as u64;
+    (
+        executors,
+        partitions,
+        Dataset::from_vec(values, partitions).unwrap(),
+        len,
+    )
+}
+
+fn gen_q(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 9) {
+        0 => 0.0,
+        1 => 1.0,
+        _ => g.f64_unit(),
+    }
+}
+
+fn engine(executors: usize, partitions: usize, mode: ExecMode, choice: AlgoChoice) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+        .algorithm(choice)
+        .epsilon(EPS)
+        .seed(SEED)
+        .build()
+        .unwrap()
+}
+
+fn cluster(executors: usize, partitions: usize, mode: ExecMode) -> Cluster {
+    Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+}
+
+/// The pre-redesign direct call for one quantile, constructed exactly
+/// the way the engine builds its strategies (same seeds, same knobs).
+fn legacy_single(
+    choice: AlgoChoice,
+    c: &mut Cluster,
+    data: &Dataset<Key>,
+    q: f64,
+) -> Key {
+    match choice {
+        AlgoChoice::GkSelect => {
+            let mut alg = GkSelect::new(GkSelectParams {
+                epsilon: EPS,
+                ..Default::default()
+            });
+            alg.quantile(c, data, q).unwrap().value
+        }
+        AlgoChoice::Afs => {
+            let mut alg = Afs::new(AfsParams {
+                seed: SEED,
+                tree_depth: None,
+                ..Default::default()
+            });
+            alg.quantile(c, data, q).unwrap().value
+        }
+        AlgoChoice::Jeffers => {
+            let mut alg = Jeffers::new(JeffersParams {
+                seed: SEED,
+                ..Default::default()
+            });
+            alg.quantile(c, data, q).unwrap().value
+        }
+        AlgoChoice::FullSort => {
+            let mut alg = FullSortQuantile::default();
+            alg.quantile(c, data, q).unwrap().value
+        }
+        AlgoChoice::GkSketch => {
+            let mut alg = ApproxQuantile::new(ApproxQuantileParams {
+                epsilon: EPS,
+                variant: SketchVariant::Spark,
+                merge: MergeStrategy::Fold,
+            });
+            alg.quantile(c, data, q).unwrap().value
+        }
+        AlgoChoice::HistSelect => {
+            let mut alg = HistogramSelect::new(HistogramSelectParams {
+                seed: SEED,
+                ..Default::default()
+            });
+            alg.quantile(c, data, q).unwrap().value
+        }
+    }
+}
+
+#[test]
+fn prop_single_plans_match_legacy_calls_all_choices_both_modes() {
+    check("engine_single_vs_legacy", 12, |g| {
+        let (executors, partitions, data, _n) = gen_dataset(g);
+        let q = gen_q(g);
+        let truth = oracle_quantile(&data, q).unwrap();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            for choice in AlgoChoice::ALL {
+                let mut e = engine(executors, partitions, mode, choice);
+                let new = e
+                    .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                    .unwrap();
+                let mut c = cluster(executors, partitions, mode);
+                let old = legacy_single(choice, &mut c, &data, q);
+                assert_eq!(
+                    new.value(),
+                    old,
+                    "{choice:?} {mode:?} q={q}: engine must be bit-identical to the \
+                     pre-redesign entry point"
+                );
+                if e.exact() {
+                    assert_eq!(new.value(), truth, "{choice:?} {mode:?} oracle");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rank_plans_match_single_and_legacy() {
+    check("engine_rank_vs_single", 10, |g| {
+        let (executors, partitions, data, n) = gen_dataset(g);
+        let q = gen_q(g);
+        let k = gkselect::target_rank(n, q);
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            for choice in AlgoChoice::ALL {
+                let mut e = engine(executors, partitions, mode, choice);
+                let by_k = e
+                    .execute(Source::Dataset(&data), QuantileQuery::Rank(k))
+                    .unwrap();
+                // the pre-redesign way to ask for a rank: quantile at the
+                // rank-derived q
+                let mut c = cluster(executors, partitions, mode);
+                let old = legacy_single(choice, &mut c, &data, rank_to_quantile(k, n));
+                assert_eq!(by_k.value(), old, "{choice:?} {mode:?} k={k}");
+                if e.exact() {
+                    // Rank(k) ↔ Single(q) consistency for exact strategies
+                    let by_q = e
+                        .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                        .unwrap();
+                    assert_eq!(by_k.value(), by_q.value(), "{choice:?} {mode:?} q={q} k={k}");
+                    let mut sorted = data.to_vec();
+                    sorted.sort_unstable();
+                    assert_eq!(by_k.value(), sorted[k as usize], "{choice:?} oracle at k={k}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_multi_plans_match_legacy_calls() {
+    check("engine_multi_vs_legacy", 10, |g| {
+        let (executors, partitions, data, _n) = gen_dataset(g);
+        let m = g.usize_in(1, 4);
+        let qs: Vec<f64> = (0..m).map(|_| gen_q(g)).collect();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            for choice in AlgoChoice::ALL {
+                let mut e = engine(executors, partitions, mode, choice);
+                let new = e
+                    .execute(Source::Dataset(&data), QuantileQuery::Multi(qs.clone()))
+                    .unwrap();
+                // pre-redesign: GK Select had the fused MultiSelect batch
+                // driver; every other algorithm answered batches by
+                // repeated single-quantile calls
+                let old: Vec<Key> = if choice == AlgoChoice::GkSelect {
+                    let mut c = cluster(executors, partitions, mode);
+                    let mut alg = MultiSelect::new(GkSelectParams {
+                        epsilon: EPS,
+                        ..Default::default()
+                    });
+                    alg.quantiles(&mut c, &data, &qs).unwrap().values
+                } else {
+                    qs.iter()
+                        .map(|&q| {
+                            let mut c = cluster(executors, partitions, mode);
+                            legacy_single(choice, &mut c, &data, q)
+                        })
+                        .collect()
+                };
+                assert_eq!(new.values, old, "{choice:?} {mode:?} qs={qs:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sketched_plans_match_legacy_approx_for_every_strategy() {
+    check("engine_sketched_vs_legacy", 10, |g| {
+        let (executors, partitions, data, _n) = gen_dataset(g);
+        let q = gen_q(g);
+        let eps = 0.01 + g.f64_unit() * 0.2;
+        // the pre-redesign direct call: ApproxQuantile at the requested ε
+        let mut c = cluster(executors, partitions, ExecMode::Sequential);
+        let mut alg = ApproxQuantile::new(ApproxQuantileParams {
+            epsilon: eps,
+            variant: SketchVariant::Spark,
+            merge: MergeStrategy::Fold,
+        });
+        let old = alg.quantile(&mut c, &data, q).unwrap().value;
+        // every strategy serves `Sketched` identically
+        for choice in AlgoChoice::ALL {
+            let mut e = engine(executors, partitions, ExecMode::Sequential, choice);
+            let new = e
+                .execute(Source::Dataset(&data), QuantileQuery::Sketched { q, eps })
+                .unwrap();
+            assert_eq!(new.value(), old, "{choice:?} q={q} eps={eps}");
+            assert!(!new.report.exact);
+        }
+    });
+}
+
+#[test]
+fn stream_plans_match_legacy_stream_query() {
+    use gkselect::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+    for mode in [ExecMode::Sequential, ExecMode::Threads] {
+        let batches: Vec<Vec<Key>> = (0..3)
+            .map(|t: i32| (0..4_000).map(|i| (i * 37 + t * 1_000_003) % 90_000).collect())
+            .collect();
+
+        // new surface: one engine, ingest + execute
+        let mut e = engine(2, 6, mode, AlgoChoice::GkSelect);
+        for b in &batches {
+            e.ingest("s", MicroBatch::new(b.clone())).unwrap();
+        }
+
+        // old surface: StreamIngestor + SketchStore + StreamQuery
+        let mut c = cluster(2, 6, mode);
+        let mut store = SketchStore::default();
+        let ing = StreamIngestor::new(EPS).unwrap();
+        for b in &batches {
+            ing.ingest(&mut c, &mut store, "s", MicroBatch::new(b.clone()))
+                .unwrap();
+        }
+        let mut legacy = StreamQuery::new(GkSelectParams {
+            epsilon: EPS,
+            ..Default::default()
+        });
+
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            let new = e
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
+            let old = legacy.quantile(&mut c, &store, "s", q).unwrap();
+            assert_eq!(new.value(), old.value, "{mode:?} q={q}");
+            assert_eq!(new.report.rounds, old.report.rounds, "{mode:?} q={q}");
+            assert_eq!(new.report.data_scans, old.report.data_scans, "{mode:?} q={q}");
+        }
+        let qs = vec![0.5, 0.9, 0.99];
+        let new = e
+            .execute(Source::Stream("s"), QuantileQuery::Multi(qs.clone()))
+            .unwrap();
+        let old = legacy.quantiles(&mut c, &store, "s", &qs).unwrap();
+        assert_eq!(new.values, old.values, "{mode:?} multi");
+    }
+}

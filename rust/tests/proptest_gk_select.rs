@@ -1,21 +1,19 @@
 //! Property tests for the fused two-round GK Select protocol: the fused
 //! band path, the budget-overflow fallback, and the eq-run exit all have
 //! to agree with `oracle_quantile` for arbitrary
-//! (distribution, n, q, ε) tuples.
+//! (distribution, n, q, ε) tuples — driven through the engine façade.
 
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::multi_select::MultiSelect;
 use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::dataset::Dataset;
-use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::cluster::ClusterConfig;
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source};
 use gkselect::util::propkit::{check, Gen};
 use gkselect::Key;
 
 /// Random dataset with a randomly chosen shape: wide-uniform,
 /// duplicate-heavy, sorted, or bimodal — the distribution axis of the
 /// acceptance matrix, without dragging the generators in.
-fn gen_dataset(g: &mut Gen) -> (Cluster, Dataset<Key>, u64) {
+fn gen_dataset(g: &mut Gen) -> (usize, usize, Dataset<Key>, u64) {
     let executors = g.usize_in(1, 3);
     let partitions = g.usize_in(executors, executors * 4);
     let n = g.usize_in(1, 4_000);
@@ -40,9 +38,29 @@ fn gen_dataset(g: &mut Gen) -> (Cluster, Dataset<Key>, u64) {
     if values.is_empty() {
         values.push(g.i32_in(-5, 5));
     }
-    let cluster = Cluster::new(ClusterConfig::local(executors, partitions));
     let len = values.len() as u64;
-    (cluster, Dataset::from_vec(values, partitions).unwrap(), len)
+    (
+        executors,
+        partitions,
+        Dataset::from_vec(values, partitions).unwrap(),
+        len,
+    )
+}
+
+fn gk_engine(
+    executors: usize,
+    partitions: usize,
+    eps: f64,
+    budget: Option<usize>,
+) -> QuantileEngine {
+    let mut b = EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(eps);
+    if let Some(budget) = budget {
+        b = b.candidate_budget(budget);
+    }
+    b.build().unwrap()
 }
 
 fn gen_q(g: &mut Gen) -> f64 {
@@ -60,16 +78,15 @@ fn gen_eps(g: &mut Gen) -> f64 {
 #[test]
 fn prop_fused_path_matches_oracle() {
     check("fused_matches_oracle", 60, |g| {
-        let (mut cluster, data, _n) = gen_dataset(g);
+        let (executors, partitions, data, _n) = gen_dataset(g);
         let q = gen_q(g);
         let eps = gen_eps(g);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = GkSelect::new(GkSelectParams {
-            epsilon: eps,
-            ..Default::default()
-        });
-        let out = alg.quantile(&mut cluster, &data, q).unwrap();
-        assert_eq!(out.value, truth, "q={q} eps={eps}");
+        let mut engine = gk_engine(executors, partitions, eps, None);
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), truth, "q={q} eps={eps}");
         assert!(out.report.rounds <= 3);
         assert_eq!(out.report.shuffles, 0);
         assert_eq!(out.report.persists, 0);
@@ -84,17 +101,15 @@ fn prop_band_overflow_fallback_stays_exact() {
     // across the sweep the 3-round path must fire and must stay exact
     let mut saw_fallback = false;
     check("overflow_fallback_exact", 40, |g| {
-        let (mut cluster, data, _n) = gen_dataset(g);
+        let (executors, partitions, data, _n) = gen_dataset(g);
         let q = gen_q(g);
         let eps = gen_eps(g);
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = GkSelect::new(GkSelectParams {
-            epsilon: eps,
-            candidate_budget: Some(0),
-            ..Default::default()
-        });
-        let out = alg.quantile(&mut cluster, &data, q).unwrap();
-        assert_eq!(out.value, truth, "fallback q={q} eps={eps}");
+        let mut engine = gk_engine(executors, partitions, eps, Some(0));
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), truth, "fallback q={q} eps={eps}");
         assert!(out.report.rounds <= 3);
         if out.report.rounds == 3 {
             assert_eq!(out.report.data_scans, 3);
@@ -114,16 +129,13 @@ fn prop_eq_run_exit_in_two_rounds() {
         let n = g.usize_in(1, 2_000);
         let v = g.i32_in(-100, 100);
         let partitions = g.usize_in(1, 8);
-        let mut cluster = Cluster::new(ClusterConfig::local(1, partitions));
         let data = Dataset::from_vec(vec![v; n], partitions).unwrap();
         let q = gen_q(g);
-        let mut alg = GkSelect::new(GkSelectParams {
-            epsilon: gen_eps(g),
-            candidate_budget: Some(0),
-            ..Default::default()
-        });
-        let out = alg.quantile(&mut cluster, &data, q).unwrap();
-        assert_eq!(out.value, v);
+        let mut engine = gk_engine(1, partitions, gen_eps(g), Some(0));
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), v);
         assert_eq!(out.report.rounds, 2, "eq-run exit must stay 2 rounds");
         assert_eq!(out.report.data_scans, 2);
     });
@@ -132,19 +144,38 @@ fn prop_eq_run_exit_in_two_rounds() {
 #[test]
 fn prop_multi_select_matches_oracle() {
     check("multi_select_matches_oracle", 30, |g| {
-        let (mut cluster, data, _n) = gen_dataset(g);
+        let (executors, partitions, data, _n) = gen_dataset(g);
         let m = g.usize_in(1, 5);
         let qs: Vec<f64> = (0..m).map(|_| gen_q(g)).collect();
-        let mut alg = MultiSelect::new(GkSelectParams {
-            epsilon: gen_eps(g),
-            ..Default::default()
-        });
-        let out = alg.quantiles(&mut cluster, &data, &qs).unwrap();
+        let mut engine = gk_engine(executors, partitions, gen_eps(g), None);
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Multi(qs.clone()))
+            .unwrap();
         for (&q, &v) in qs.iter().zip(out.values.iter()) {
             assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");
         }
         assert!(out.report.rounds <= 3);
         assert!(out.report.data_scans <= 3);
         assert_eq!(out.report.shuffles, 0);
+    });
+}
+
+#[test]
+fn prop_rank_plans_match_single_plans() {
+    // Rank(k) ↔ Single(q) consistency at k = target_rank(n, q), plus the
+    // oracle, across random geometries
+    check("rank_matches_single", 30, |g| {
+        let (executors, partitions, data, n) = gen_dataset(g);
+        let q = gen_q(g);
+        let k = gkselect::target_rank(n, q);
+        let mut engine = gk_engine(executors, partitions, gen_eps(g), None);
+        let by_q = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        let by_k = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Rank(k))
+            .unwrap();
+        assert_eq!(by_q.value(), by_k.value(), "q={q} k={k} n={n}");
+        assert_eq!(by_k.value(), oracle_quantile(&data, q).unwrap());
     });
 }

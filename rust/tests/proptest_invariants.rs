@@ -5,15 +5,11 @@
 //!
 //! Replay a failing case with `PROPKIT_SEED=<seed> cargo test <name>`.
 
-use gkselect::algorithms::afs::{Afs, AfsParams};
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::histogram_select::{HistogramSelect, HistogramSelectParams};
-use gkselect::algorithms::jeffers::{Jeffers, JeffersParams};
 use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::dataset::Dataset;
 use gkselect::cluster::shuffle::shuffle_by_range;
 use gkselect::cluster::{Cluster, ClusterConfig};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileQuery, Source};
 use gkselect::select::{bfprt_select, dutch_partition, floyd_rivest_select, select_kth};
 use gkselect::sketch::classical::ClassicalGk;
 use gkselect::sketch::QuantileSketch;
@@ -31,14 +27,17 @@ fn prop_gk_select_always_exact() {
     check("gk_select_exact", 64, |g| {
         let (data, _, p) = gen_dataset(g);
         let q = g.f64_unit();
-        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = GkSelect::new(GkSelectParams {
-            epsilon: 0.05,
-            ..Default::default()
-        });
-        let out = alg.quantile(&mut cluster, &data, q).unwrap();
-        assert_eq!(out.value, truth, "q={q}");
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, p))
+            .algorithm(AlgoChoice::GkSelect)
+            .epsilon(0.05)
+            .build()
+            .unwrap();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), truth, "q={q}");
         assert!(out.report.rounds <= 3);
         assert_eq!(out.report.shuffles, 0);
         assert_eq!(out.report.persists, 0);
@@ -50,27 +49,48 @@ fn prop_count_discard_always_exact() {
     check("count_discard_exact", 48, |g| {
         let (data, _, p) = gen_dataset(g);
         let q = g.f64_unit();
-        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut afs = Afs::new(AfsParams::default());
-        assert_eq!(afs.quantile(&mut cluster, &data, q).unwrap().value, truth);
-        let mut jeffers = Jeffers::new(JeffersParams::default());
-        assert_eq!(jeffers.quantile(&mut cluster, &data, q).unwrap().value, truth);
+        for choice in [AlgoChoice::Afs, AlgoChoice::Jeffers] {
+            let mut engine = EngineBuilder::new()
+                .cluster(ClusterConfig::local(2, p))
+                .algorithm(choice)
+                .build()
+                .unwrap();
+            let out = engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(out.value(), truth, "{choice:?} q={q}");
+        }
     });
 }
 
 #[test]
 fn prop_histogram_select_always_exact() {
     check("hist_select_exact", 48, |g| {
+        use gkselect::algorithms::histogram_select::{
+            HistogramSelectParams, HistogramSelectStrategy,
+        };
+        use gkselect::algorithms::QuantileAlgorithm;
+        use gkselect::engine::EngineCtx;
+        use gkselect::runtime::NativeBackend;
         let (data, _, p) = gen_dataset(g);
         let q = g.f64_unit();
         let mut cluster = Cluster::new(ClusterConfig::local(2, p));
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = HistogramSelect::new(HistogramSelectParams {
+        let strategy = HistogramSelectStrategy::new(HistogramSelectParams {
             extract_cap: 64, // force several refinement rounds
             ..Default::default()
         });
-        assert_eq!(alg.quantile(&mut cluster, &data, q).unwrap().value, truth);
+        let backend = NativeBackend::new();
+        let mut ctx = EngineCtx {
+            cluster: &mut cluster,
+            backend: &backend,
+            data: &data,
+        };
+        let out = strategy
+            .execute_plan(&mut ctx, &QuantileQuery::Single(q))
+            .unwrap();
+        assert_eq!(out.value(), truth);
     });
 }
 
@@ -183,14 +203,18 @@ fn prop_gk_select_epsilon_sweep_stays_exact() {
         let (data, _, p) = gen_dataset(g);
         let q = g.f64_unit();
         let eps = [0.2, 0.1, 0.01, 0.001][g.usize_in(0, 3)];
-        let mut cluster = Cluster::new(ClusterConfig::local(2, p));
         let truth = oracle_quantile(&data, q).unwrap();
-        let mut alg = GkSelect::new(GkSelectParams {
-            epsilon: eps,
-            ..Default::default()
-        });
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, p))
+            .algorithm(AlgoChoice::GkSelect)
+            .epsilon(eps)
+            .build()
+            .unwrap();
         assert_eq!(
-            alg.quantile(&mut cluster, &data, q).unwrap().value,
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap()
+                .value(),
             truth,
             "eps={eps} q={q}"
         );

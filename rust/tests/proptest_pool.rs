@@ -4,14 +4,13 @@
 //! produce bit-identical `PerPartition.values`, quantile results, and
 //! round / scan / byte counters to `ExecMode::Sequential` — real
 //! concurrency is allowed to change wall-clock and nothing else.
+//! Quantile runs go through the engine façade.
 
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::multi_select::MultiSelect;
 use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::dataset::Dataset;
 use gkselect::cluster::metrics::MetricsReport;
 use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileQuery, QueryOutcome, Source};
 use gkselect::util::propkit::{check, Gen};
 use gkselect::Key;
 
@@ -45,6 +44,26 @@ fn gen_values(g: &mut Gen) -> Vec<Key> {
 
 fn cluster(executors: usize, partitions: usize, mode: ExecMode) -> Cluster {
     Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+}
+
+fn gk_run(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    eps: f64,
+    budget: Option<usize>,
+    data: &Dataset<Key>,
+    query: QuantileQuery,
+) -> QueryOutcome {
+    let mut b = EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(eps);
+    if let Some(budget) = budget {
+        b = b.candidate_budget(budget);
+    }
+    let mut engine = b.build().unwrap();
+    engine.execute(Source::Dataset(data), query).unwrap()
 }
 
 /// The counters that must be mode-independent (wall-clock ledgers and the
@@ -99,19 +118,26 @@ fn prop_gk_select_equivalent_across_modes() {
         let budget = if g.bool() { None } else { Some(g.usize_in(0, 64)) };
         let truth = oracle_quantile(&data, q).unwrap();
 
-        let run = |mode: ExecMode| {
-            let mut c = cluster(executors, partitions, mode);
-            let mut alg = GkSelect::new(GkSelectParams {
-                epsilon: eps,
-                candidate_budget: budget,
-                ..Default::default()
-            });
-            alg.quantile(&mut c, &data, q).unwrap()
-        };
-        let seq = run(ExecMode::Sequential);
-        let thr = run(ExecMode::Threads);
-        assert_eq!(seq.value, truth, "sequential exactness q={q} eps={eps}");
-        assert_eq!(thr.value, truth, "threads exactness q={q} eps={eps}");
+        let seq = gk_run(
+            executors,
+            partitions,
+            ExecMode::Sequential,
+            eps,
+            budget,
+            &data,
+            QuantileQuery::Single(q),
+        );
+        let thr = gk_run(
+            executors,
+            partitions,
+            ExecMode::Threads,
+            eps,
+            budget,
+            &data,
+            QuantileQuery::Single(q),
+        );
+        assert_eq!(seq.value(), truth, "sequential exactness q={q} eps={eps}");
+        assert_eq!(thr.value(), truth, "threads exactness q={q} eps={eps}");
         assert_eq!(
             structural(&seq.report),
             structural(&thr.report),
@@ -136,14 +162,19 @@ fn emr30_threads_matches_sequential() {
     let data = Dataset::from_vec(values, 120).unwrap();
     let truth = oracle_quantile(&data, 0.75).unwrap();
     let run = |mode: ExecMode| {
-        let mut c = Cluster::new(ClusterConfig::emr(30).with_exec_mode(mode));
-        let mut alg = GkSelect::new(GkSelectParams::default());
-        alg.quantile(&mut c, &data, 0.75).unwrap()
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::emr(30).with_exec_mode(mode))
+            .algorithm(AlgoChoice::GkSelect)
+            .build()
+            .unwrap();
+        engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.75))
+            .unwrap()
     };
     let seq = run(ExecMode::Sequential);
     let thr = run(ExecMode::Threads);
-    assert_eq!(seq.value, truth);
-    assert_eq!(thr.value, truth);
+    assert_eq!(seq.value(), truth);
+    assert_eq!(thr.value(), truth);
     assert_eq!(structural(&seq.report), structural(&thr.report));
     assert_eq!(seq.report.rounds, 2, "fused path on uniform data");
     assert_eq!(seq.report.data_scans, 2);
@@ -160,13 +191,24 @@ fn prop_multi_select_equivalent_across_modes() {
         let m = g.usize_in(1, 4);
         let qs: Vec<f64> = (0..m).map(|_| g.f64_unit()).collect();
 
-        let run = |mode: ExecMode| {
-            let mut c = cluster(executors, partitions, mode);
-            let mut alg = MultiSelect::new(GkSelectParams::default());
-            alg.quantiles(&mut c, &data, &qs).unwrap()
-        };
-        let seq = run(ExecMode::Sequential);
-        let thr = run(ExecMode::Threads);
+        let seq = gk_run(
+            executors,
+            partitions,
+            ExecMode::Sequential,
+            0.01,
+            None,
+            &data,
+            QuantileQuery::Multi(qs.clone()),
+        );
+        let thr = gk_run(
+            executors,
+            partitions,
+            ExecMode::Threads,
+            0.01,
+            None,
+            &data,
+            QuantileQuery::Multi(qs.clone()),
+        );
         assert_eq!(seq.values, thr.values, "batched answers must match");
         for (&q, &v) in qs.iter().zip(seq.values.iter()) {
             assert_eq!(v, oracle_quantile(&data, q).unwrap(), "q={q}");

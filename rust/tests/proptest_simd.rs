@@ -7,17 +7,16 @@
 //! targets without a SIMD tile `ForceSimd` degrades to scalar and the
 //! properties hold trivially.
 //!
-//! End-to-end, `GkSelect` / `MultiSelect` / `StreamQuery` answers and
-//! round/scan shapes must not depend on the dispatch, in both executor
-//! modes.
+//! End-to-end, engine answers and round/scan shapes must not depend on
+//! the dispatch, in both executor modes — the engines differ only in
+//! the injected kernel backend (`EngineBuilder::kernel_backend`).
 
-use gkselect::algorithms::gk_select::{GkSelect, GkSelectParams};
-use gkselect::algorithms::multi_select::MultiSelect;
-use gkselect::algorithms::{oracle_quantile, QuantileAlgorithm};
+use gkselect::algorithms::oracle_quantile;
 use gkselect::cluster::dataset::Dataset;
-use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::cluster::{ClusterConfig, ExecMode};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source};
 use gkselect::runtime::{KernelBackend, NativeBackend, SimdPolicy};
-use gkselect::stream::{MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+use gkselect::stream::MicroBatch;
 use gkselect::util::propkit::{check, Gen};
 use gkselect::Key;
 
@@ -26,6 +25,22 @@ fn backends() -> (NativeBackend, NativeBackend) {
         NativeBackend::with_policy(SimdPolicy::ForceScalar),
         NativeBackend::with_policy(SimdPolicy::ForceSimd),
     )
+}
+
+fn engine_with_backend(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    eps: f64,
+    backend: NativeBackend,
+) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(eps)
+        .kernel_backend(Box::new(backend))
+        .build()
+        .unwrap()
 }
 
 /// Random scan geometry. Sizes deliberately straddle the lane widths
@@ -124,20 +139,18 @@ fn prop_gk_select_answers_unchanged_both_exec_modes() {
         let q = g.f64_unit();
         let eps = 0.001 + g.f64_unit() * 0.2;
         for mode in [ExecMode::Sequential, ExecMode::Threads] {
-            let mut cluster =
-                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
             let data = Dataset::from_vec(values.clone(), partitions).unwrap();
             let (scalar, simd) = backends();
-            let params = GkSelectParams {
-                epsilon: eps,
-                ..Default::default()
-            };
-            let mut a = GkSelect::with_backend(params.clone(), Box::new(scalar));
-            let mut b = GkSelect::with_backend(params, Box::new(simd));
-            let oa = a.quantile(&mut cluster, &data, q).unwrap();
-            let ob = b.quantile(&mut cluster, &data, q).unwrap();
-            assert_eq!(oa.value, ob.value, "mode {mode:?} q={q} eps={eps}");
-            assert_eq!(oa.value, oracle_quantile(&data, q).unwrap());
+            let mut a = engine_with_backend(executors, partitions, mode, eps, scalar);
+            let mut b = engine_with_backend(executors, partitions, mode, eps, simd);
+            let oa = a
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
+            let ob = b
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(oa.value(), ob.value(), "mode {mode:?} q={q} eps={eps}");
+            assert_eq!(oa.value(), oracle_quantile(&data, q).unwrap());
             // identical protocol shape: the dispatch may not change
             // rounds, scans, or the overflow/fallback decision
             assert_eq!(oa.report.rounds, ob.report.rounds);
@@ -155,14 +168,16 @@ fn prop_multi_select_answers_unchanged_both_exec_modes() {
         let values: Vec<Key> = (0..n).map(|_| g.i32_in(-5_000, 5_000)).collect();
         let qs: Vec<f64> = (0..g.usize_in(1, 4)).map(|_| g.f64_unit()).collect();
         for mode in [ExecMode::Sequential, ExecMode::Threads] {
-            let mut cluster =
-                Cluster::new(ClusterConfig::local(2, partitions).with_exec_mode(mode));
             let data = Dataset::from_vec(values.clone(), partitions).unwrap();
             let (scalar, simd) = backends();
-            let mut a = MultiSelect::with_backend(GkSelectParams::default(), Box::new(scalar));
-            let mut b = MultiSelect::with_backend(GkSelectParams::default(), Box::new(simd));
-            let oa = a.quantiles(&mut cluster, &data, &qs).unwrap();
-            let ob = b.quantiles(&mut cluster, &data, &qs).unwrap();
+            let mut a = engine_with_backend(2, partitions, mode, 0.01, scalar);
+            let mut b = engine_with_backend(2, partitions, mode, 0.01, simd);
+            let oa = a
+                .execute(Source::Dataset(&data), QuantileQuery::Multi(qs.clone()))
+                .unwrap();
+            let ob = b
+                .execute(Source::Dataset(&data), QuantileQuery::Multi(qs.clone()))
+                .unwrap();
             assert_eq!(oa.values, ob.values, "mode {mode:?}");
             assert_eq!(oa.report.rounds, ob.report.rounds);
             assert_eq!(oa.report.data_scans, ob.report.data_scans);
@@ -177,53 +192,75 @@ fn prop_multi_select_answers_unchanged_both_exec_modes() {
 fn prop_stream_query_answers_unchanged_both_exec_modes() {
     check("stream_query_simd_end_to_end", 10, |g| {
         for mode in [ExecMode::Sequential, ExecMode::Threads] {
-            let mut cluster = Cluster::new(ClusterConfig::local(2, 4).with_exec_mode(mode));
-            let mut store = SketchStore::default();
-            let ingestor = StreamIngestor::new(0.01).unwrap();
-            for _ in 0..g.usize_in(2, 4) {
-                let len = g.usize_in(1, 800);
-                let batch: Vec<Key> = (0..len).map(|_| g.i32_in(-50_000, 50_000)).collect();
-                ingestor
-                    .ingest(&mut cluster, &mut store, "s", MicroBatch::new(batch))
-                    .unwrap();
-            }
+            let batches: Vec<Vec<Key>> = (0..g.usize_in(2, 4))
+                .map(|_| {
+                    let len = g.usize_in(1, 800);
+                    (0..len).map(|_| g.i32_in(-50_000, 50_000)).collect()
+                })
+                .collect();
             let q = g.f64_unit();
             let (scalar, simd) = backends();
-            let mut ea = StreamQuery::with_backends(
-                GkSelectParams::default(),
-                Box::new(scalar.clone()),
-                Box::new(scalar),
-            );
-            let mut eb = StreamQuery::with_backends(
-                GkSelectParams::default(),
-                Box::new(simd.clone()),
-                Box::new(simd),
-            );
-            let oa = ea.quantile(&mut cluster, &store, "s", q).unwrap();
-            let ob = eb.quantile(&mut cluster, &store, "s", q).unwrap();
-            assert_eq!(oa.value, ob.value, "mode {mode:?} q={q}");
+            let mut ea = engine_with_backend(2, 4, mode, 0.01, scalar);
+            let mut eb = engine_with_backend(2, 4, mode, 0.01, simd);
+            for b in &batches {
+                ea.ingest("s", MicroBatch::new(b.clone())).unwrap();
+                eb.ingest("s", MicroBatch::new(b.clone())).unwrap();
+            }
+            let oa = ea
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
+            let ob = eb
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(oa.value(), ob.value(), "mode {mode:?} q={q}");
             assert_eq!(oa.report.rounds, ob.report.rounds);
             assert_eq!(oa.report.data_scans, ob.report.data_scans);
-            let data = store.stream("s").unwrap().live_dataset().unwrap();
-            assert_eq!(oa.value, oracle_quantile(&data, q).unwrap());
+            let data = ea.store().stream("s").unwrap().live_dataset().unwrap();
+            assert_eq!(oa.value(), oracle_quantile(&data, q).unwrap());
         }
     });
 }
 
-/// The lane width every report carries must reflect the forced policy.
+/// The regression pin for the old `make_backend_report` footgun: the
+/// engine stamps the backend's lane width on **every** outcome in one
+/// place, so a forced-scalar engine reports 1 and a forced-SIMD engine
+/// reports the resolved tile width — on every plan shape and both
+/// sources.
 #[test]
-fn reports_carry_the_forced_lane_width() {
+fn reports_carry_the_forced_lane_width_on_every_path() {
     let (scalar, simd) = backends();
     let expect_scalar = scalar.simd_lane_width();
     let expect_simd = simd.simd_lane_width();
     assert_eq!(expect_scalar, 1);
-    let mut cluster = Cluster::new(ClusterConfig::local(2, 4));
+
     let data = Dataset::from_vec((0..5_000).collect(), 4).unwrap();
-    let mut a = GkSelect::with_backend(GkSelectParams::default(), Box::new(scalar));
-    let mut b = GkSelect::with_backend(GkSelectParams::default(), Box::new(simd));
-    let oa = a.quantile(&mut cluster, &data, 0.5).unwrap();
-    let ob = b.quantile(&mut cluster, &data, 0.5).unwrap();
-    assert_eq!(oa.report.simd_lane_width, 1);
-    assert_eq!(ob.report.simd_lane_width, expect_simd as u64);
-    assert_eq!(oa.value, ob.value);
+    for (backend, want) in [(scalar, expect_scalar), (simd, expect_simd)] {
+        let mut engine = engine_with_backend(2, 4, ExecMode::Sequential, 0.01, backend);
+        engine
+            .ingest("s", MicroBatch::new((0..2_000).collect()))
+            .unwrap();
+        let outs = [
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+                .unwrap(),
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Rank(100))
+                .unwrap(),
+            engine
+                .execute(Source::Dataset(&data), QuantileQuery::Multi(vec![0.1, 0.9]))
+                .unwrap(),
+            engine
+                .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+                .unwrap(),
+            engine
+                .execute(Source::Stream("s"), QuantileQuery::Multi(vec![0.5, 0.99]))
+                .unwrap(),
+        ];
+        for out in outs {
+            assert_eq!(
+                out.report.simd_lane_width, want as u64,
+                "lane width must be stamped centrally on every exit path"
+            );
+        }
+    }
 }

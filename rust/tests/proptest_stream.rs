@@ -1,16 +1,17 @@
 //! Property tests for the streaming quantile service: incremental
 //! ingest-time sketches keep the ε guarantee of a from-scratch sketch,
-//! `StreamQuery` answers are bit-identical to batch `GkSelect` over the
+//! streamed engine queries are bit-identical to batch GK Select over the
 //! concatenated data in both execution modes, and epoch compaction never
-//! changes an answer.
+//! changes an answer. Queries go through `QuantileEngine::execute` with
+//! `Source::Stream` / `Source::Dataset` sharing one call site.
 
-use gkselect::algorithms::gk_select::{default_candidate_budget, GkSelect, GkSelectParams};
+use gkselect::algorithms::gk_select::default_candidate_budget;
 use gkselect::algorithms::oracle_quantile;
-use gkselect::algorithms::QuantileAlgorithm;
 use gkselect::cluster::dataset::Dataset;
 use gkselect::cluster::{Cluster, ClusterConfig, ExecMode};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source};
 use gkselect::sketch::GkCore;
-use gkselect::stream::{CompactionPolicy, MicroBatch, SketchStore, StreamIngestor, StreamQuery};
+use gkselect::stream::{CompactionPolicy, MicroBatch, SketchStore, StreamIngestor};
 use gkselect::util::propkit::{check, Gen};
 use gkselect::Key;
 
@@ -48,16 +49,29 @@ fn gen_q(g: &mut Gen) -> f64 {
     }
 }
 
-fn ingest_all(
-    cluster: &mut Cluster,
-    store: &mut SketchStore,
+fn stream_engine(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
     eps: f64,
-    batches: &[Vec<Key>],
-) {
-    let ing = StreamIngestor::new(eps).unwrap();
+) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(ClusterConfig::local(executors, partitions).with_exec_mode(mode))
+        .algorithm(AlgoChoice::GkSelect)
+        .epsilon(eps)
+        // high threshold: ingest never auto-compacts unless a test
+        // triggers compaction itself
+        .compaction(CompactionPolicy {
+            compact_threshold: 1000,
+            max_live_epochs: 4,
+        })
+        .build()
+        .unwrap()
+}
+
+fn ingest_all(engine: &mut QuantileEngine, batches: &[Vec<Key>]) {
     for b in batches {
-        ing.ingest(cluster, store, "s", MicroBatch::new(b.clone()))
-            .unwrap();
+        engine.ingest("s", MicroBatch::new(b.clone())).unwrap();
     }
 }
 
@@ -75,7 +89,11 @@ fn prop_incremental_sketches_keep_epsilon_guarantee() {
         let mut store = SketchStore::default();
         let eps = 0.005 + g.f64_unit() * 0.1;
         let batches = gen_batches(g);
-        ingest_all(&mut cluster, &mut store, eps, &batches);
+        let ing = StreamIngestor::new(eps).unwrap();
+        for b in &batches {
+            ing.ingest(&mut cluster, &mut store, "s", MicroBatch::new(b.clone()))
+                .unwrap();
+        }
 
         let mut all: Vec<Key> = batches.iter().flatten().copied().collect();
         all.sort_unstable();
@@ -111,7 +129,8 @@ fn prop_incremental_sketches_keep_epsilon_guarantee() {
 
 /// (b) A streamed query equals batch GK Select over the concatenated
 /// data — bit-identical values, both execution modes, arbitrary
-/// geometries — and never exceeds the fallback cost envelope.
+/// geometries — and never exceeds the fallback cost envelope. One
+/// engine, two `Source`s.
 #[test]
 fn prop_stream_query_matches_batch_gk_select_both_modes() {
     check("stream_matches_batch", 25, |g| {
@@ -123,25 +142,25 @@ fn prop_stream_query_matches_batch_gk_select_both_modes() {
         let mut across_modes: Option<Key> = None;
 
         for mode in [ExecMode::Sequential, ExecMode::Threads] {
-            let mut cluster =
-                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
-            let mut store = SketchStore::default();
-            ingest_all(&mut cluster, &mut store, 0.01, &batches);
-            let mut engine = StreamQuery::new(GkSelectParams::default());
-            let out = engine.quantile(&mut cluster, &store, "s", q).unwrap();
+            let mut engine = stream_engine(executors, partitions, mode, 0.01);
+            ingest_all(&mut engine, &batches);
+            let out = engine
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
 
             let data = Dataset::from_vec(concat.clone(), partitions).unwrap();
-            let mut batch_cluster =
-                Cluster::new(ClusterConfig::local(executors, partitions).with_exec_mode(mode));
-            let mut alg = GkSelect::new(GkSelectParams::default());
-            let batch_out = alg.quantile(&mut batch_cluster, &data, q).unwrap();
+            let mut batch_engine = stream_engine(executors, partitions, mode, 0.01);
+            let batch_out = batch_engine
+                .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+                .unwrap();
 
             assert_eq!(
-                out.value, batch_out.value,
+                out.value(),
+                batch_out.value(),
                 "stream vs batch disagree at q={q} ({} batches)",
                 batches.len()
             );
-            assert_eq!(out.value, oracle_quantile(&data, q).unwrap(), "q={q}");
+            assert_eq!(out.value(), oracle_quantile(&data, q).unwrap(), "q={q}");
             // fast path is 1 round / 1 scan; an out-of-contract band may
             // cost the one fallback scan, never more
             assert!(out.report.rounds <= 2, "rounds = {}", out.report.rounds);
@@ -149,8 +168,8 @@ fn prop_stream_query_matches_batch_gk_select_both_modes() {
             assert_eq!(out.report.shuffles, 0);
             assert_eq!(out.report.persists, 0);
             match across_modes {
-                None => across_modes = Some(out.value),
-                Some(v) => assert_eq!(out.value, v, "exec modes disagree at q={q}"),
+                None => across_modes = Some(out.value()),
+                Some(v) => assert_eq!(out.value(), v, "exec modes disagree at q={q}"),
             }
         }
     });
@@ -166,40 +185,48 @@ fn prop_compaction_never_changes_answers() {
         let batches = gen_batches(g);
         let executors = g.usize_in(1, 2);
         let partitions = g.usize_in(executors, executors * 3);
-        let mut cluster = Cluster::new(ClusterConfig::local(executors, partitions));
+        let max_live = g.usize_in(1, 3);
         // threshold high enough that ingest never auto-compacts: the
         // test owns the compaction point
-        let mut store = SketchStore::new(CompactionPolicy {
-            compact_threshold: 1000,
-            max_live_epochs: g.usize_in(1, 3),
-        })
-        .unwrap();
-        ingest_all(&mut cluster, &mut store, 0.02, &batches);
-        let total = store.stream("s").unwrap().total_count();
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(executors, partitions))
+            .epsilon(0.02)
+            .compaction(CompactionPolicy {
+                compact_threshold: 1000,
+                max_live_epochs: max_live,
+            })
+            .build()
+            .unwrap();
+        ingest_all(&mut engine, &batches);
+        let total = engine.store().stream("s").unwrap().total_count();
 
         let qs = [0.0, 0.25, 0.5, 0.9, 1.0];
-        let params = GkSelectParams {
-            epsilon: 0.02,
-            ..Default::default()
-        };
-        let mut engine = StreamQuery::new(params.clone());
         let before: Vec<Key> = qs
             .iter()
-            .map(|&q| engine.quantile(&mut cluster, &store, "s", q).unwrap().value)
+            .map(|&q| {
+                engine
+                    .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                    .unwrap()
+                    .value()
+            })
             .collect();
 
-        let stats = store.compact("s").unwrap();
-        if batches.len() > store.policy.max_live_epochs {
+        let stats = engine.store_mut().compact("s").unwrap();
+        if batches.len() > max_live {
             let s = stats.expect("above target ⇒ compaction fires");
             assert!(s.merged_epochs >= 2);
-            assert_eq!(s.live_epochs, store.policy.max_live_epochs);
+            assert_eq!(s.live_epochs, max_live);
         }
-        assert_eq!(store.stream("s").unwrap().total_count(), total);
+        assert_eq!(engine.store().stream("s").unwrap().total_count(), total);
 
-        let mut engine = StreamQuery::new(params);
         let after: Vec<Key> = qs
             .iter()
-            .map(|&q| engine.quantile(&mut cluster, &store, "s", q).unwrap().value)
+            .map(|&q| {
+                engine
+                    .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                    .unwrap()
+                    .value()
+            })
             .collect();
         assert_eq!(before, after, "compaction changed query answers");
     });
