@@ -23,12 +23,12 @@ fn main() {
     let m0 = c.elapsed_secs();
     let t = Instant::now();
     let be = NativeBackend::new();
-    let pending = c.map_partitions(&data, |p, _| { let x = be.count_pivot(p, pivot); (x.lt, x.eq, x.gt) });
+    let pending = c.map_partitions(&data, |p, _| { let x = be.count_pivot(p, pivot); (x.lt, x.eq, x.gt) }).unwrap();
     let _ = c.reduce(pending, |a, b| (a.0+b.0, a.1+b.1, a.2+b.2));
     println!("count wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs() - m0);
     let m1 = c.elapsed_secs();
     let t = Instant::now();
-    let slices = c.map_partitions(&data, |p, ctx| gkselect_secondpass_probe(p, pivot, 500_000, ctx.partition as u64));
+    let slices = c.map_partitions(&data, |p, ctx| gkselect_secondpass_probe(p, pivot, 500_000, ctx.partition as u64)).unwrap();
     let _ = c.tree_reduce(slices, None, |a, b| { let mut a = a; a.extend_from_slice(&b); if a.len() > 500_000 { a.select_nth_unstable(499_999); a.truncate(500_000);} a });
     println!("secondpass wall {:?} model {:.4}", t.elapsed(), c.elapsed_secs() - m1);
 }

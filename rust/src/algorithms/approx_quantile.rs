@@ -109,7 +109,8 @@ pub fn build_global_sketch(
     merge: MergeStrategy,
     epsilon: f64,
 ) -> Result<GkCore> {
-    let pending = cluster.map_partitions(data, |part, _| sketch_partition(variant, epsilon, part));
+    let pending =
+        cluster.map_partitions(data, |part, _| sketch_partition(variant, epsilon, part))?;
     let cores = cluster.collect(pending);
     let merged = cluster.driver(|| match merge {
         MergeStrategy::Fold => fold_merge(cores),

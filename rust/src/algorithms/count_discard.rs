@@ -121,7 +121,7 @@ impl CountDiscardSelect {
                 let mut rng = SplitMix64::new(seed ^ (ctx.partition as u64) << 3);
                 Some((part[rng.below(part.len())], part.len() as u64))
             }
-        });
+        })?;
         let cands = cluster.collect(pending);
         let mut rng = SplitMix64::new(seed ^ 0xD1CE);
         let picked = cluster.driver(|| {
@@ -175,7 +175,7 @@ impl CountDiscardSelect {
                     },
                     (a, split),
                 )
-            });
+            })?;
             let (stats_p, parts_p) = pending.unzip();
 
             // aggregate — the round's driver barrier

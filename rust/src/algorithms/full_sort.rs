@@ -22,7 +22,7 @@ pub(crate) fn full_sort_quantile_with(
     }
     cluster.reset_run();
     let n = data.len();
-    let sorted = psrs_sort(cluster, data, params);
+    let sorted = psrs_sort(cluster, data, params)?;
     let k = target_rank(n, q);
     let value = cluster.driver(|| sorted.kth(k));
     let value =

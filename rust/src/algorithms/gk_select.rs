@@ -172,7 +172,7 @@ pub(crate) fn select_with_sketch_with(
         .unwrap_or_else(|| default_candidate_budget(budget_eps, n));
     let pending = cluster.map_partitions(data, |part, _| {
         backend.band_extract(part, pivot, lo, hi, budget)
-    });
+    })?;
     let mut merged = cluster
         .tree_reduce(pending, params.tree_depth, |a, b| a.merge(b, budget))
         .expect("nonempty dataset");
@@ -195,7 +195,7 @@ pub(crate) fn select_with_sketch_with(
     let delta = pivot_delta(lt, eq, k);
     debug_assert!(delta != 0);
     cluster.broadcast(&delta);
-    let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta));
+    let slices = cluster.map_partitions(data, |part, _| second_pass(part, pivot, delta))?;
     let final_slice = cluster
         .tree_reduce(slices, params.tree_depth, |a, b| reduce_slices(a, b, delta))
         .expect("nonempty dataset");

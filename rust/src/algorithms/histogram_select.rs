@@ -70,7 +70,7 @@ pub(crate) fn histogram_quantile_with(
     let mut k = target_rank(n, q);
 
     // Round 1: global min/max seeds the value range
-    let pending = cluster.map_partitions(data, |part, _| backend.minmax(part));
+    let pending = cluster.map_partitions(data, |part, _| backend.minmax(part))?;
     let bounds = cluster
         .reduce(pending, |a, b| match (a, b) {
             (None, x) | (x, None) => x,
@@ -98,7 +98,7 @@ pub(crate) fn histogram_quantile_with(
                 .filter(|&v| v >= lo && v <= hi)
                 .collect();
             backend.histogram(&banded, lo_i, width, nbins)
-        });
+        })?;
         let hist = cluster
             .reduce(pending, |mut a, b| {
                 for (x, y) in a.iter_mut().zip(b) {
@@ -148,7 +148,7 @@ pub(crate) fn histogram_quantile_with(
             .copied()
             .filter(|&v| v >= blo && v <= bhi)
             .collect::<Vec<Key>>()
-    });
+    })?;
     let slices = cluster.collect(pending);
     let seed = params.seed;
     let value = cluster.driver(move || {

@@ -106,6 +106,7 @@ where
             Ok(QueryOutcome {
                 values,
                 report: report.expect("validated non-empty"),
+                degraded: false,
             })
         }
         QuantileQuery::Sketched { q, eps } => {

@@ -143,7 +143,7 @@ pub(crate) fn quantiles_with_sketch_with(
     let qy = queries.clone();
     let pending = cluster.map_partitions(data, |part, _| {
         ExtractSet(backend.multi_band_extract(part, &qy, budget))
-    });
+    })?;
     let mut merged = cluster
         .tree_reduce(pending, params.tree_depth, |a, b| {
             ExtractSet(
@@ -205,7 +205,7 @@ pub(crate) fn quantiles_with_sketch_with(
                 .map(|&i| second_pass(part, pv[i], ds[i]))
                 .collect(),
         )
-    });
+    })?;
     let merged = cluster
         .tree_reduce(pending, params.tree_depth, |a, b| {
             SliceSet(

@@ -1,0 +1,560 @@
+//! Deterministic fault injection for the simulated cluster substrate.
+//!
+//! Spark's resilience story — task retry, speculative execution, lineage
+//! re-execution — is what lets the paper run exact quantiles on a real
+//! 30-core EMR cluster without babysitting stragglers and lost
+//! containers. This module gives the simulated substrate the same
+//! adversary: a seeded [`FaultPlan`] describes *which* task attempts
+//! fail (panics, transient errors), *which* tasks run slow (straggler
+//! multipliers), and *which* executors disappear at a given stage; a
+//! [`FaultInjector`] is consulted by [`ExecutorPool`] for every
+//! `(stage, partition, attempt)` and answers identically in both
+//! execution modes — injection is a pure function of the plan, never of
+//! thread timing, so `Sequential` and `Threads` runs see the same
+//! faults and produce bit-identical values.
+//!
+//! Recovery semantics live in [`RetryPolicy`]: failed attempts are
+//! retried up to `max_task_retries` with `backoff_secs` of virtual
+//! latency charged per retry; stragglers past the detection threshold
+//! get a speculative duplicate on an idle executor (first pure result
+//! wins — bit-identical by construction, so only the modelled time and
+//! the `speculative_*` counters change). A task that exhausts its
+//! retries fails the whole stage with a typed [`StageError`], which the
+//! engine surfaces as `EngineError::StageFailed` or absorbs under a
+//! degrade policy.
+//!
+//! [`ExecutorPool`]: super::pool::ExecutorPool
+
+use crate::select::SplitMix64;
+use std::fmt;
+
+/// What the injector decided for one `(stage, partition, attempt)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Abrupt task death (the simulated analogue of a task panic).
+    Panic,
+    /// Transient task error (fetch failure, lost heartbeat) — same
+    /// retry path as a panic, tracked separately only in the reason.
+    Transient,
+    /// The task completes but `mult`× slower than measured.
+    Straggler(f64),
+    /// The task's executor disappeared at this stage; every task it
+    /// owns dies once and is re-run on the replacement.
+    ExecutorLost,
+}
+
+impl FaultKind {
+    fn reason(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "injected task panic",
+            FaultKind::Transient => "injected transient task error",
+            FaultKind::Straggler(_) => "injected straggler",
+            FaultKind::ExecutorLost => "injected executor loss",
+        }
+    }
+}
+
+/// Builder-composable, seeded schedule of injected faults.
+///
+/// Rates are per-task probabilities decided by hashing
+/// `(seed, stage, partition)` — never by a shared mutable RNG — so the
+/// schedule is identical across execution modes and across retries of
+/// the same stage. An injected panic/transient repeats for
+/// [`fault_attempts`](Self::fault_attempts) consecutive attempts of the
+/// same task: with the default of 1 the first retry always succeeds;
+/// raise it past `RetryPolicy::max_task_retries` to force a
+/// `StageError`.
+///
+/// ```
+/// use gkselect::cluster::faults::FaultPlan;
+///
+/// let plan = FaultPlan::seeded(7)
+///     .panics(0.05)
+///     .stragglers(0.03, 4.0)
+///     .lose_executor(1, 0);
+/// let rt: FaultPlan = plan.to_string().parse().unwrap();
+/// assert_eq!(rt, plan);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-task fault hashes.
+    pub seed: u64,
+    /// Probability a task attempt dies abruptly.
+    pub panic_rate: f64,
+    /// Probability a task attempt fails with a transient error.
+    pub transient_rate: f64,
+    /// Probability a task runs slow (by `straggler_mult`).
+    pub straggler_rate: f64,
+    /// Slowdown factor applied to a straggling task's measured time.
+    pub straggler_mult: f64,
+    /// Consecutive attempts an injected panic/transient repeats for.
+    pub fault_attempts: u32,
+    /// `(stage, executor)` pairs: every task on that executor dies once
+    /// at that stage.
+    pub lost_executors: Vec<(u64, usize)>,
+    /// Explicit `(stage, partition)` task panics (repeat for
+    /// `fault_attempts` like the hashed ones).
+    pub task_panics: Vec<(u64, usize)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            panic_rate: 0.0,
+            transient_rate: 0.0,
+            straggler_rate: 0.0,
+            straggler_mult: 4.0,
+            fault_attempts: 1,
+            lost_executors: Vec::new(),
+            task_panics: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan with the given hash seed.
+    pub fn seeded(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Inject abrupt task death with this per-task probability.
+    pub fn panics(mut self, rate: f64) -> Self {
+        self.panic_rate = rate;
+        self
+    }
+
+    /// Inject transient task errors with this per-task probability.
+    pub fn transients(mut self, rate: f64) -> Self {
+        self.transient_rate = rate;
+        self
+    }
+
+    /// Slow tasks down by `mult`× with this per-task probability.
+    pub fn stragglers(mut self, rate: f64, mult: f64) -> Self {
+        self.straggler_rate = rate;
+        self.straggler_mult = mult;
+        self
+    }
+
+    /// Make every injected panic/transient repeat for `k` consecutive
+    /// attempts of the same task (`k = 1`: first retry succeeds).
+    pub fn attempts(mut self, k: u32) -> Self {
+        self.fault_attempts = k;
+        self
+    }
+
+    /// Kill executor `executor` at stage `stage` (0-based stage index,
+    /// counted per `map_partitions` since the cluster's last
+    /// `reset_run`).
+    pub fn lose_executor(mut self, stage: u64, executor: usize) -> Self {
+        self.lost_executors.push((stage, executor));
+        self
+    }
+
+    /// Panic the task for `partition` at stage `stage`, persistently
+    /// for `fault_attempts` attempts.
+    pub fn panic_task(mut self, stage: u64, partition: usize) -> Self {
+        self.task_panics.push((stage, partition));
+        self
+    }
+
+    /// True when the plan can never inject anything.
+    pub fn is_noop(&self) -> bool {
+        self.panic_rate <= 0.0
+            && self.transient_rate <= 0.0
+            && self.straggler_rate <= 0.0
+            && self.lost_executors.is_empty()
+            && self.task_panics.is_empty()
+    }
+}
+
+/// The `GKSELECT_FAULTS` grammar: comma-separated `key=value` items.
+///
+/// | item                     | meaning                                  |
+/// |--------------------------|------------------------------------------|
+/// | `seed=N`                 | hash seed                                |
+/// | `panic=R`                | per-task panic probability               |
+/// | `transient=R`            | per-task transient-error probability     |
+/// | `straggler=RxM`          | probability `R` of an `M`× slowdown      |
+/// | `attempts=K`             | injected faults persist for K attempts   |
+/// | `lose=S:E`               | executor `E` dies at stage `S`           |
+/// | `panic_at=S:P`           | partition `P`'s task panics at stage `S` |
+impl std::str::FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::default();
+        for item in s.split(',').map(str::trim).filter(|i| !i.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| format!("fault item '{item}' is not key=value"))?;
+            let bad = |what: &str| format!("fault item '{item}': bad {what}");
+            match key {
+                "seed" => plan.seed = val.parse().map_err(|_| bad("seed"))?,
+                "panic" => plan.panic_rate = parse_rate(val).ok_or_else(|| bad("rate"))?,
+                "transient" => plan.transient_rate = parse_rate(val).ok_or_else(|| bad("rate"))?,
+                "straggler" => {
+                    let (rate, mult) = val
+                        .split_once('x')
+                        .ok_or_else(|| bad("RATExMULT straggler"))?;
+                    plan.straggler_rate = parse_rate(rate).ok_or_else(|| bad("rate"))?;
+                    plan.straggler_mult = mult
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|m| *m >= 1.0 && m.is_finite())
+                        .ok_or_else(|| bad("multiplier (must be >= 1)"))?;
+                }
+                "attempts" => {
+                    plan.fault_attempts = val
+                        .parse::<u32>()
+                        .ok()
+                        .filter(|k| *k >= 1)
+                        .ok_or_else(|| bad("attempts (must be >= 1)"))?;
+                }
+                "lose" => plan.lost_executors.push(parse_pair(val).ok_or_else(|| bad("S:E"))?),
+                "panic_at" => plan.task_panics.push(parse_pair(val).ok_or_else(|| bad("S:P"))?),
+                other => return Err(format!("unknown fault item '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_rate(s: &str) -> Option<f64> {
+    s.parse::<f64>()
+        .ok()
+        .filter(|r| (0.0..=1.0).contains(r) && r.is_finite())
+}
+
+fn parse_pair(s: &str) -> Option<(u64, usize)> {
+    let (a, b) = s.split_once(':')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut items: Vec<String> = vec![format!("seed={}", self.seed)];
+        if self.panic_rate > 0.0 {
+            items.push(format!("panic={}", self.panic_rate));
+        }
+        if self.transient_rate > 0.0 {
+            items.push(format!("transient={}", self.transient_rate));
+        }
+        if self.straggler_rate > 0.0 {
+            items.push(format!("straggler={}x{}", self.straggler_rate, self.straggler_mult));
+        }
+        if self.fault_attempts != 1 {
+            items.push(format!("attempts={}", self.fault_attempts));
+        }
+        for &(s, e) in &self.lost_executors {
+            items.push(format!("lose={s}:{e}"));
+        }
+        for &(s, p) in &self.task_panics {
+            items.push(format!("panic_at={s}:{p}"));
+        }
+        write!(f, "{}", items.join(","))
+    }
+}
+
+/// Task-level recovery knobs — the simulated analogue of
+/// `spark.task.maxFailures` / `spark.speculation`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries per task before the stage fails (attempts = retries + 1).
+    pub max_task_retries: u32,
+    /// Virtual seconds charged to the clock per retry (re-launch
+    /// latency; never overlapped with other work).
+    pub backoff_secs: f64,
+    /// Launch a speculative duplicate for detected stragglers when the
+    /// cluster has more than one executor.
+    pub speculation: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_task_retries: 3,
+            backoff_secs: 0.05,
+            speculation: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries, no speculation — a failed task fails the stage.
+    pub fn none() -> Self {
+        Self {
+            max_task_retries: 0,
+            backoff_secs: 0.0,
+            speculation: false,
+        }
+    }
+
+    pub fn with_max_task_retries(mut self, retries: u32) -> Self {
+        self.max_task_retries = retries;
+        self
+    }
+
+    pub fn with_backoff_secs(mut self, secs: f64) -> Self {
+        self.backoff_secs = secs;
+        self
+    }
+
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculation = on;
+        self
+    }
+}
+
+/// A straggler this many × slower than its measured time triggers a
+/// speculative duplicate (Spark's `speculation.multiplier` analogue).
+pub const SPECULATION_THRESHOLD: f64 = 1.5;
+
+/// Consulted by the executor pool for every `(stage, partition,
+/// attempt)`; pure function of the plan, identical in both exec modes.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The fault (if any) injected into this task attempt. Failure
+    /// kinds repeat for `fault_attempts` attempts (executor loss: one
+    /// attempt — the replacement executor is healthy); the straggler
+    /// decision is attempt-independent so it applies to whichever
+    /// attempt finally runs.
+    pub fn fault_for(
+        &self,
+        stage: u64,
+        partition: usize,
+        executor: usize,
+        attempt: u32,
+    ) -> Option<FaultKind> {
+        let p = &self.plan;
+        if attempt < p.fault_attempts && p.task_panics.contains(&(stage, partition)) {
+            return Some(FaultKind::Panic);
+        }
+        if attempt == 0 && p.lost_executors.contains(&(stage, executor)) {
+            return Some(FaultKind::ExecutorLost);
+        }
+        if attempt < p.fault_attempts {
+            if self.decide(stage, partition, 1, p.panic_rate) {
+                return Some(FaultKind::Panic);
+            }
+            if self.decide(stage, partition, 2, p.transient_rate) {
+                return Some(FaultKind::Transient);
+            }
+        }
+        if self.decide(stage, partition, 3, p.straggler_rate) {
+            return Some(FaultKind::Straggler(p.straggler_mult));
+        }
+        None
+    }
+
+    fn decide(&self, stage: u64, partition: usize, salt: u64, rate: f64) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        let mix = self
+            .plan
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(stage.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add((partition as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(salt);
+        let r = SplitMix64::new(mix).next_u64();
+        (r as f64 / u64::MAX as f64) < rate
+    }
+}
+
+/// Typed failure of one `map_partitions` stage: some task exhausted its
+/// retries. Carries enough to surface `EngineError::StageFailed{stage,
+/// attempts}` and a human-readable cause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageError {
+    /// 0-based stage index (per `map_partitions` since `reset_run`).
+    pub stage: u64,
+    /// The partition whose task exhausted its retries.
+    pub partition: usize,
+    /// Attempts consumed (retries + 1).
+    pub attempts: u32,
+    /// Last failure cause (injected kind or real panic payload).
+    pub reason: String,
+}
+
+impl fmt::Display for StageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "stage {} failed: partition {} task died after {} attempts ({})",
+            self.stage, self.partition, self.attempts, self.reason
+        )
+    }
+}
+
+impl std::error::Error for StageError {}
+
+/// Per-stage recovery tallies produced by the pool and folded into
+/// `RunMetrics` by `Cluster::map_partitions`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultLedger {
+    pub faults_injected: u64,
+    pub tasks_retried: u64,
+    pub speculative_launched: u64,
+    pub speculative_wins: u64,
+    /// Virtual retry-backoff latency to charge to the clock.
+    pub backoff_secs: f64,
+}
+
+impl FaultLedger {
+    pub fn absorb(&mut self, other: &FaultLedger) {
+        self.faults_injected += other.faults_injected;
+        self.tasks_retried += other.tasks_retried;
+        self.speculative_launched += other.speculative_launched;
+        self.speculative_wins += other.speculative_wins;
+        self.backoff_secs += other.backoff_secs;
+    }
+}
+
+/// Everything the pool needs to run one stage's tasks under the fault
+/// model: the injector (if any), the retry policy, the stage index, and
+/// the executor count (speculation needs an idle executor to exist).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultContext<'a> {
+    pub injector: Option<&'a FaultInjector>,
+    pub retry: RetryPolicy,
+    pub stage: u64,
+    pub executors: usize,
+}
+
+impl FaultContext<'static> {
+    /// Fault-free context (unit tests, probes).
+    pub fn none(executors: usize) -> Self {
+        Self {
+            injector: None,
+            retry: RetryPolicy::default(),
+            stage: 0,
+            executors,
+        }
+    }
+}
+
+impl FaultKind {
+    /// Whether this fault kills the attempt (vs. slowing it down).
+    pub(crate) fn is_fatal(&self) -> bool {
+        !matches!(self, FaultKind::Straggler(_))
+    }
+
+    pub(crate) fn failure_reason(&self) -> String {
+        self.reason().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrips() {
+        let plan = FaultPlan::seeded(42)
+            .panics(0.2)
+            .transients(0.1)
+            .stragglers(0.05, 8.0)
+            .attempts(5)
+            .lose_executor(1, 2)
+            .panic_task(0, 3);
+        let rt: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(rt, plan);
+    }
+
+    #[test]
+    fn grammar_rejects_garbage() {
+        for bad in [
+            "panic",
+            "panic=2.0",
+            "straggler=0.5",
+            "straggler=0.5x0.5",
+            "attempts=0",
+            "lose=1",
+            "wat=1",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn empty_string_is_noop_plan() {
+        let plan: FaultPlan = "".parse().unwrap();
+        assert!(plan.is_noop());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_attempt_windowed() {
+        let inj = FaultInjector::new(FaultPlan::seeded(9).panics(0.5).attempts(2));
+        for stage in 0..4u64 {
+            for part in 0..16usize {
+                let a0 = inj.fault_for(stage, part, 0, 0);
+                assert_eq!(a0, inj.fault_for(stage, part, 0, 0), "not deterministic");
+                assert_eq!(a0, inj.fault_for(stage, part, 3, 1), "attempt 1 in window");
+                // past the window the task must succeed
+                assert_eq!(inj.fault_for(stage, part, 0, 2), None);
+            }
+        }
+        // 0.5 rate over 64 tasks: some but not all fault
+        let hits = (0..4u64)
+            .flat_map(|s| (0..16usize).map(move |p| (s, p)))
+            .filter(|&(s, p)| inj.fault_for(s, p, 0, 0).is_some())
+            .count();
+        assert!(hits > 8 && hits < 56, "hits = {hits}");
+    }
+
+    #[test]
+    fn executor_loss_hits_only_its_stage_and_executor_once() {
+        let inj = FaultInjector::new(FaultPlan::seeded(1).lose_executor(2, 1));
+        assert_eq!(inj.fault_for(2, 5, 1, 0), Some(FaultKind::ExecutorLost));
+        assert_eq!(inj.fault_for(2, 5, 1, 1), None, "replacement is healthy");
+        assert_eq!(inj.fault_for(2, 5, 0, 0), None, "other executor fine");
+        assert_eq!(inj.fault_for(1, 5, 1, 0), None, "other stage fine");
+    }
+
+    #[test]
+    fn explicit_task_panic_persists_for_attempts_window() {
+        let inj = FaultInjector::new(FaultPlan::seeded(0).panic_task(0, 2).attempts(10));
+        for attempt in 0..10 {
+            assert_eq!(inj.fault_for(0, 2, 0, attempt), Some(FaultKind::Panic));
+        }
+        assert_eq!(inj.fault_for(0, 2, 0, 10), None);
+        assert_eq!(inj.fault_for(0, 1, 0, 0), None);
+    }
+
+    #[test]
+    fn straggler_is_attempt_independent() {
+        let inj = FaultInjector::new(FaultPlan::seeded(3).stragglers(1.0, 4.0));
+        assert_eq!(inj.fault_for(0, 0, 0, 0), Some(FaultKind::Straggler(4.0)));
+        assert_eq!(inj.fault_for(0, 0, 0, 7), Some(FaultKind::Straggler(4.0)));
+    }
+
+    #[test]
+    fn stage_error_display() {
+        let e = StageError {
+            stage: 1,
+            partition: 3,
+            attempts: 4,
+            reason: "injected task panic".into(),
+        };
+        assert!(e.to_string().contains("stage 1"));
+        assert!(e.to_string().contains("4 attempts"));
+    }
+}

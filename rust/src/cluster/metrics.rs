@@ -51,6 +51,19 @@ pub struct RunMetrics {
     /// accumulated across stages and indexed by executor — the
     /// utilization / skew ledger.
     pub executor_busy_secs: Vec<f64>,
+    /// Injected faults that actually fired (panics, transients,
+    /// executor losses, stragglers — real caught panics don't count).
+    pub faults_injected: u64,
+    /// Task re-launches after a failed attempt (real or injected).
+    pub tasks_retried: u64,
+    /// Speculative duplicates launched against stragglers.
+    pub speculative_launched: u64,
+    /// Speculative duplicates that finished before the straggler.
+    pub speculative_wins: u64,
+    /// Engine queries answered from the sketch after a stage failure
+    /// (`DegradePolicy::SketchAnswer`); incremented by the engine, not
+    /// the substrate.
+    pub degraded_queries: u64,
 }
 
 impl RunMetrics {
@@ -83,6 +96,11 @@ impl RunMetrics {
             stage_walls_len: self.stage_walls.len(),
             wall_stage_secs: self.wall_stage_secs,
             executor_busy_secs: self.executor_busy_secs.clone(),
+            faults_injected: self.faults_injected,
+            tasks_retried: self.tasks_retried,
+            speculative_launched: self.speculative_launched,
+            speculative_wins: self.speculative_wins,
+            degraded_queries: self.degraded_queries,
         }
     }
 
@@ -121,6 +139,11 @@ impl RunMetrics {
                 .enumerate()
                 .map(|(e, &busy)| busy - base.executor_busy_secs.get(e).copied().unwrap_or(0.0))
                 .collect(),
+            faults_injected: self.faults_injected - base.faults_injected,
+            tasks_retried: self.tasks_retried - base.tasks_retried,
+            speculative_launched: self.speculative_launched - base.speculative_launched,
+            speculative_wins: self.speculative_wins - base.speculative_wins,
+            degraded_queries: self.degraded_queries - base.degraded_queries,
         }
     }
 
@@ -174,6 +197,11 @@ pub struct MetricsMark {
     stage_walls_len: usize,
     wall_stage_secs: f64,
     executor_busy_secs: Vec<f64>,
+    faults_injected: u64,
+    tasks_retried: u64,
+    speculative_launched: u64,
+    speculative_wins: u64,
+    degraded_queries: u64,
 }
 
 /// One algorithm's end-of-run report: metrics + modelled elapsed time.
@@ -213,6 +241,16 @@ pub struct MetricsReport {
     /// kernel backend stamp this via [`Self::with_simd_lane_width`];
     /// default 1.
     pub simd_lane_width: u64,
+    /// Injected faults that fired during the run.
+    pub faults_injected: u64,
+    /// Task re-launches after failed attempts.
+    pub tasks_retried: u64,
+    /// Speculative duplicates launched against stragglers.
+    pub speculative_launched: u64,
+    /// Speculative duplicates that won.
+    pub speculative_wins: u64,
+    /// Queries answered from the sketch after a stage failure.
+    pub degraded_queries: u64,
     pub exact: bool,
 }
 
@@ -249,6 +287,11 @@ impl MetricsReport {
             executor_utilization: m.executor_utilization(),
             busy_skew: m.busy_skew(),
             simd_lane_width: 1,
+            faults_injected: m.faults_injected,
+            tasks_retried: m.tasks_retried,
+            speculative_launched: m.speculative_launched,
+            speculative_wins: m.speculative_wins,
+            degraded_queries: m.degraded_queries,
             exact,
         }
     }
@@ -279,6 +322,11 @@ impl MetricsReport {
         self.bytes_broadcast += other.bytes_broadcast;
         self.messages += other.messages;
         self.tree_levels += other.tree_levels;
+        self.faults_injected += other.faults_injected;
+        self.tasks_retried += other.tasks_retried;
+        self.speculative_launched += other.speculative_launched;
+        self.speculative_wins += other.speculative_wins;
+        self.degraded_queries += other.degraded_queries;
         self.stage_walls.extend_from_slice(&other.stage_walls);
         self.wall_stage_secs += other.wall_stage_secs;
         for (i, &busy) in other.executor_busy_secs.iter().enumerate() {
@@ -479,6 +527,35 @@ mod tests {
         let approx = MetricsReport::from_metrics("GK Sketch", 100, 4, 2, 0.1, &m, false);
         a.absorb(&approx);
         assert!(!a.exact);
+    }
+
+    #[test]
+    fn fault_counters_flow_through_marks_reports_and_absorb() {
+        let m = RunMetrics {
+            faults_injected: 4,
+            tasks_retried: 3,
+            speculative_launched: 2,
+            speculative_wins: 1,
+            degraded_queries: 1,
+            ..Default::default()
+        };
+        let base = RunMetrics::default().mark();
+        let d = m.since(&base);
+        assert_eq!(d.faults_injected, 4);
+        assert_eq!(d.tasks_retried, 3);
+        let mut r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.speculative_launched, 2);
+        assert_eq!(r.speculative_wins, 1);
+        assert_eq!(r.degraded_queries, 1);
+        let other = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        r.absorb(&other);
+        assert_eq!(r.faults_injected, 8);
+        assert_eq!(r.tasks_retried, 6);
+        assert_eq!(r.degraded_queries, 2);
+        // and a fresh mark zeroes the delta
+        let z = m.since(&m.mark());
+        assert_eq!(z.faults_injected, 0);
+        assert_eq!(z.tasks_retried, 0);
     }
 
     #[test]

@@ -68,8 +68,59 @@
 //! [`metrics::RunMetrics::busy_skew`]); under `Threads` the gap between
 //! `wall_stage_secs` and the virtual clock's compute term is the real
 //! scheduling + contention cost the sequential model cannot see.
+//!
+//! ## Failure semantics — retries, speculation, and the clock
+//!
+//! Every `map_partitions` task attempt runs under the fault model
+//! ([`faults`]): a seeded [`faults::FaultPlan`] (from
+//! `ClusterConfig::faults`, the `[faults]` config section, or the
+//! `GKSELECT_FAULTS` env var) may inject panics, transient errors,
+//! straggler slowdowns, or whole-executor loss; real closure panics are
+//! caught by the same `catch_unwind` net. Recovery follows
+//! [`faults::RetryPolicy`] and is charged to the virtual clock like so:
+//!
+//! * **Retry backoff** — each retry adds `backoff_secs` of re-launch
+//!   latency. It is charged by `map_partitions` itself (immediately,
+//!   additively, never overlapped with other executors' work): a
+//!   retried task sits on the stage's critical path exactly like
+//!   Spark's re-queued task. Failed attempts consume no modelled
+//!   compute — injected faults kill the attempt before it runs, and a
+//!   real panicked attempt's partial work is lost, not charged.
+//! * **Stragglers** — an injected straggler multiplies the task's
+//!   *measured* time by `mult` in the `times` ledger the consuming
+//!   action charges (max-over-executors), leaving the real busy ledger
+//!   untouched: slowdown is a model effect, observability stays real.
+//! * **Speculative duplicates** — a straggler at ≥
+//!   [`faults::SPECULATION_THRESHOLD`] with an idle executor available
+//!   (`executors > 1`, `RetryPolicy::speculation`) launches a modelled
+//!   duplicate once the task overruns its expected duration `dt`; the
+//!   duplicate finishes at `2·dt`, so the charged time is
+//!   `min(mult·dt, 2·dt)`. Results are pure, the first finisher wins,
+//!   and values stay bit-identical — only time and counters move.
+//! * **Retry exhaustion** — a task that fails more than
+//!   `max_task_retries` times fails the whole stage with a typed
+//!   [`faults::StageError`] (deterministically the lowest failing
+//!   partition in both exec modes); `map_partitions` returns `Err` and
+//!   the engine maps it to `EngineError::StageFailed` or degrades.
+//!
+//! The recovery tallies land in [`metrics::RunMetrics`] (and every
+//! [`metrics::MetricsReport`]):
+//!
+//! | field                  | meaning                                       |
+//! |------------------------|-----------------------------------------------|
+//! | `faults_injected`      | injected faults that actually fired           |
+//! | `tasks_retried`        | task re-launches after a (real or injected) failure |
+//! | `speculative_launched` | speculative duplicates launched for stragglers |
+//! | `speculative_wins`     | duplicates that beat the original             |
+//! | `degraded_queries`     | engine queries answered from the sketch after a stage failure |
+//!
+//! Injection decisions are pure functions of
+//! `(plan seed, stage, partition)` — never of thread timing — so
+//! `Sequential` and `Threads` inject identically and stay bit-identical
+//! in values and counters under any plan.
 
 pub mod dataset;
+pub mod faults;
 pub mod metrics;
 pub mod netmodel;
 pub mod pool;
@@ -79,6 +130,8 @@ pub mod simclock;
 use std::time::Instant;
 
 use dataset::Dataset;
+pub use faults::{FaultInjector, FaultPlan, RetryPolicy, StageError};
+use faults::FaultContext;
 use metrics::RunMetrics;
 use netmodel::{NetSize, NetworkModel};
 pub use pool::ExecMode;
@@ -107,11 +160,25 @@ pub struct ClusterConfig {
     /// Constructors honor the `GKSELECT_EXEC_MODE` env var so CI can run
     /// the whole suite under real concurrency.
     pub exec_mode: ExecMode,
+    /// Seeded fault-injection schedule consulted on every task attempt.
+    /// `None` disables the injector entirely; `Some` (even a no-op plan)
+    /// keeps the hooks live so their overhead can be benchmarked.
+    /// Constructors honor the `GKSELECT_FAULTS` env var so CI can run the
+    /// whole suite under injection.
+    pub faults: Option<FaultPlan>,
+    /// Task retry / speculative-execution policy (Spark's
+    /// `spark.task.maxFailures` + `spark.speculation` analogue).
+    pub retry: RetryPolicy,
 }
 
 impl ClusterConfig {
     /// A local test cluster with a zero-cost network (pure wall-clock
     /// semantics; rounds and volumes are still counted).
+    ///
+    /// Honors `GKSELECT_EXEC_MODE` / `GKSELECT_FAULTS` quietly: an unset,
+    /// empty, or unparsable var falls back to the default here, while the
+    /// engine builder and CLI — which re-read the same vars through
+    /// [`crate::engine::env`] — reject garbage loudly with a typed error.
     pub fn local(executors: usize, partitions: usize) -> Self {
         Self {
             executors,
@@ -119,13 +186,15 @@ impl ClusterConfig {
             net: NetworkModel::zero(),
             compute_scale: 1.0,
             driver_scale: 1.0,
-            exec_mode: ExecMode::from_env(),
+            exec_mode: env_exec_mode(),
+            faults: env_fault_plan(),
+            retry: RetryPolicy::default(),
         }
     }
 
     /// An EMR-like cluster: `nodes` m5.xlarge core nodes, 4 partitions per
     /// node, 10 Gbit fabric with 200 µs message latency (the paper's
-    /// testbed shape).
+    /// testbed shape). Same quiet env fallback as [`ClusterConfig::local`].
     pub fn emr(nodes: usize) -> Self {
         Self {
             executors: nodes,
@@ -133,7 +202,9 @@ impl ClusterConfig {
             net: NetworkModel::emr_like(),
             compute_scale: 1.0,
             driver_scale: 1.0,
-            exec_mode: ExecMode::from_env(),
+            exec_mode: env_exec_mode(),
+            faults: env_fault_plan(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -143,11 +214,37 @@ impl ClusterConfig {
         self
     }
 
+    /// Override the fault-injection schedule (builder-style). `None`
+    /// removes the injector, including one picked up from the env.
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Override the retry / speculation policy (builder-style).
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
     /// Executor index owning partition `p` (Spark-style round-robin
     /// locality).
     pub fn executor_of(&self, p: usize) -> usize {
         p % self.executors
     }
+}
+
+/// Quiet `GKSELECT_EXEC_MODE` read for raw cluster constructors: unset,
+/// empty, or invalid → `Sequential`. Loud validation happens at the
+/// engine / CLI boundary via [`crate::engine::env::exec_mode`].
+fn env_exec_mode() -> ExecMode {
+    crate::engine::env::exec_mode().ok().flatten().unwrap_or_default()
+}
+
+/// Quiet `GKSELECT_FAULTS` read for raw cluster constructors: unset,
+/// empty, or invalid → no injector.
+fn env_fault_plan() -> Option<FaultPlan> {
+    crate::engine::env::faults().ok().flatten()
 }
 
 /// Per-partition results of a `mapPartitions`, pending an action.
@@ -212,6 +309,8 @@ pub struct Cluster {
     pub metrics: RunMetrics,
     /// Executor pool behind `map_partitions` (both execution strategies).
     pool: ExecutorPool,
+    /// Fault injector built from `cfg.faults`; consulted per task attempt.
+    injector: Option<FaultInjector>,
 }
 
 impl Cluster {
@@ -222,11 +321,13 @@ impl Cluster {
             "need at least one partition per executor"
         );
         let pool = ExecutorPool::new(cfg.executors);
+        let injector = cfg.faults.clone().map(FaultInjector::new);
         Self {
             cfg,
             clock: SimClock::new(),
             metrics: RunMetrics::default(),
             pool,
+            injector,
         }
     }
 
@@ -248,22 +349,39 @@ impl Cluster {
     /// busy times land in [`RunMetrics`]; the virtual clock is charged
     /// from the measured per-partition times by the consuming action,
     /// exactly as in the sequential-only substrate.
+    ///
+    /// Tasks run under the fault model (module docs, "Failure
+    /// semantics"): injected and real panics are caught and retried per
+    /// `cfg.retry`, with retry backoff charged to the virtual clock here
+    /// (the re-launch latency is on the stage's critical path regardless
+    /// of which action consumes it). A task that exhausts its retries
+    /// fails the whole stage with a typed [`StageError`] — deterministic
+    /// in both exec modes.
     pub fn map_partitions<T, R>(
         &mut self,
         data: &Dataset<T>,
         f: impl Fn(&[T], PartitionCtx) -> R + Sync,
-    ) -> PerPartition<R>
+    ) -> Result<PerPartition<R>, StageError>
     where
         T: Send + Sync,
         R: Send,
     {
         // one mapPartitions stage = one linear read of the dataset; the
-        // consuming action charges the round, but the scan happens here
+        // consuming action charges the round, but the scan happens here.
+        // The pre-increment scan count doubles as the stage index faults
+        // are keyed on (0-based from the last `reset_run`).
+        let stage_index = self.metrics.data_scans;
         self.metrics.data_scans += 1;
         let executor_of = |p: usize| self.cfg.executor_of(p);
+        let fx = FaultContext {
+            injector: self.injector.as_ref(),
+            retry: self.cfg.retry,
+            stage: stage_index,
+            executors: self.cfg.executors,
+        };
         let stage = match self.cfg.exec_mode {
-            ExecMode::Sequential => self.pool.run_sequential(data, executor_of, &f),
-            ExecMode::Threads => self.pool.run_threaded(data, executor_of, &f),
+            ExecMode::Sequential => self.pool.run_sequential(data, executor_of, &f, &fx)?,
+            ExecMode::Threads => self.pool.run_threaded(data, executor_of, &f, &fx)?,
         };
         self.metrics.wall_stage_secs += stage.wall_secs;
         self.metrics.stage_walls.push(stage.wall_secs);
@@ -278,10 +396,17 @@ impl Cluster {
         {
             *ledger += busy;
         }
-        PerPartition {
+        self.metrics.faults_injected += stage.faults.faults_injected;
+        self.metrics.tasks_retried += stage.faults.tasks_retried;
+        self.metrics.speculative_launched += stage.faults.speculative_launched;
+        self.metrics.speculative_wins += stage.faults.speculative_wins;
+        // retry re-launch latency: serial, on the critical path, charged
+        // now rather than deferred to the consuming action
+        self.clock.advance(stage.faults.backoff_secs);
+        Ok(PerPartition {
             values: stage.values,
             times: stage.times,
-        }
+        })
     }
 
     /// Parallel elapsed time of a stage: max over executors of the summed
@@ -471,7 +596,9 @@ mod tests {
     #[test]
     fn map_partitions_sees_every_partition() {
         let (mut c, d) = tiny();
-        let lens = c.map_partitions(&d, |part, ctx| (ctx.partition, part.len()));
+        let lens = c
+            .map_partitions(&d, |part, ctx| (ctx.partition, part.len()))
+            .unwrap();
         assert_eq!(lens.values, vec![(0, 3), (1, 2), (2, 1), (3, 4)]);
         // lazy: no round yet, but the data was read once
         assert_eq!(c.metrics.rounds, 0);
@@ -481,7 +608,7 @@ mod tests {
     #[test]
     fn collect_ends_a_round_and_counts_bytes() {
         let (mut c, d) = tiny();
-        let counts = c.map_partitions(&d, |part, _| part.len() as u64);
+        let counts = c.map_partitions(&d, |part, _| part.len() as u64).unwrap();
         let got = c.collect(counts);
         assert_eq!(got.iter().sum::<u64>(), 10);
         assert_eq!(c.metrics.rounds, 1);
@@ -492,7 +619,9 @@ mod tests {
     #[test]
     fn reduce_folds_on_driver() {
         let (mut c, d) = tiny();
-        let sums = c.map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>());
+        let sums = c
+            .map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>())
+            .unwrap();
         let total = c.reduce(sums, |a, b| a + b).unwrap();
         assert_eq!(total, 55);
         assert_eq!(c.metrics.rounds, 1);
@@ -501,7 +630,9 @@ mod tests {
     #[test]
     fn tree_reduce_matches_reduce() {
         let (mut c, d) = tiny();
-        let sums = c.map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>());
+        let sums = c
+            .map_partitions(&d, |part, _| part.iter().map(|&x| x as i64).sum::<i64>())
+            .unwrap();
         let total = c.tree_reduce(sums, None, |a, b| a + b).unwrap();
         assert_eq!(total, 55);
         assert_eq!(c.metrics.rounds, 1);
@@ -539,7 +670,7 @@ mod tests {
     #[test]
     fn reset_run_clears_ledger() {
         let (mut c, d) = tiny();
-        let xs = c.map_partitions(&d, |p, _| p.len() as u64);
+        let xs = c.map_partitions(&d, |p, _| p.len() as u64).unwrap();
         c.collect(xs);
         c.reset_run();
         assert_eq!(c.metrics.rounds, 0);
@@ -571,9 +702,11 @@ mod tests {
     fn level_count(depth: Option<usize>) -> (i64, u64) {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Dataset::from_vec((0..64).collect::<Vec<i32>>(), 8).unwrap();
-        let sums = c.map_partitions(&data, |part, _| {
-            part.iter().map(|&x| x as i64).sum::<i64>()
-        });
+        let sums = c
+            .map_partitions(&data, |part, _| {
+                part.iter().map(|&x| x as i64).sum::<i64>()
+            })
+            .unwrap();
         let total = c.tree_reduce(sums, depth, |a, b| a + b).unwrap();
         (total, c.metrics.tree_levels)
     }
@@ -599,9 +732,11 @@ mod tests {
         let run = |mode: ExecMode| {
             let mut c = Cluster::new(ClusterConfig::local(3, 7).with_exec_mode(mode));
             let data = Dataset::from_vec((0..1000).collect::<Vec<i32>>(), 7).unwrap();
-            let pending = c.map_partitions(&data, |part, ctx| {
-                (ctx.partition, ctx.executor, part.iter().map(|&x| x as i64).sum::<i64>())
-            });
+            let pending = c
+                .map_partitions(&data, |part, ctx| {
+                    (ctx.partition, ctx.executor, part.iter().map(|&x| x as i64).sum::<i64>())
+                })
+                .unwrap();
             let values = pending.values.clone();
             let got = c.collect(pending);
             (values, got, c.metrics.clone())
@@ -621,10 +756,52 @@ mod tests {
     }
 
     #[test]
+    fn retries_charge_backoff_and_land_in_metrics() {
+        let plan = FaultPlan::seeded(7).panic_task(0, 2);
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut c = Cluster::new(
+                ClusterConfig::local(2, 4)
+                    .with_exec_mode(mode)
+                    .with_fault_plan(Some(plan.clone())),
+            );
+            let d = Dataset::from_vec((0..40).collect::<Vec<i32>>(), 4).unwrap();
+            let xs = c.map_partitions(&d, |p, _| p.len() as u64).unwrap();
+            let got = c.collect(xs);
+            assert_eq!(got.iter().sum::<u64>(), 40, "values survive the retry");
+            assert_eq!(c.metrics.faults_injected, 1);
+            assert_eq!(c.metrics.tasks_retried, 1);
+            // the retry's re-launch latency reached the virtual clock
+            assert!(c.elapsed_secs() >= c.cfg.retry.backoff_secs);
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_surface_a_typed_stage_error() {
+        // a persistent fault (attempts window beyond the retry budget) on
+        // the SECOND stage: the first scan is clean, the second fails
+        let plan = FaultPlan::seeded(7).panic_task(1, 0).attempts(99);
+        let mut c = Cluster::new(
+            ClusterConfig::local(2, 4).with_fault_plan(Some(plan)),
+        );
+        let d = Dataset::from_vec((0..40).collect::<Vec<i32>>(), 4).unwrap();
+        let ok = c.map_partitions(&d, |p, _| p.len() as u64).unwrap();
+        c.collect(ok);
+        let err = c.map_partitions(&d, |p, _| p.len() as u64).unwrap_err();
+        assert_eq!(err.stage, 1);
+        assert_eq!(err.partition, 0);
+        assert_eq!(err.attempts, c.cfg.retry.max_task_retries + 1);
+        // stage indices restart at 0 after reset_run, so the same plan
+        // leaves stage 0 clean again and kills stage 1 again
+        c.reset_run();
+        assert!(c.map_partitions(&d, |p, _| p.len() as u64).is_ok());
+        assert!(c.map_partitions(&d, |p, _| p.len() as u64).is_err());
+    }
+
+    #[test]
     fn reset_run_clears_wall_ledgers() {
         let mut c = Cluster::new(ClusterConfig::local(2, 4).with_exec_mode(ExecMode::Threads));
         let d = Dataset::from_vec((0..100).collect::<Vec<i32>>(), 4).unwrap();
-        let xs = c.map_partitions(&d, |p, _| p.len() as u64);
+        let xs = c.map_partitions(&d, |p, _| p.len() as u64).unwrap();
         c.collect(xs);
         assert!(!c.metrics.stage_walls.is_empty());
         c.reset_run();

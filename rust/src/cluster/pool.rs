@@ -18,16 +18,35 @@
 //!   partition order, so `PerPartition.values` is bit-identical to the
 //!   sequential path for any pure (`Fn`) partition closure.
 //!
-//! Either way a [`StageOutput`] carries the per-partition measured times
+//! Every task attempt runs through the fault model
+//! ([`super::faults`]): the [`FaultInjector`] (if armed) is consulted
+//! per `(stage, partition, attempt)`, injected and *real* panics are
+//! caught with `catch_unwind` and retried under the stage's
+//! [`RetryPolicy`], stragglers are mitigated by modelled speculative
+//! duplicates, and a task that exhausts its retries fails the stage
+//! with a typed [`StageError`] instead of unwinding the driver. Because
+//! partition closures are pure, a retried or speculated task returns
+//! the same value — recovery changes counters and modelled time, never
+//! results.
+//!
+//! Either way a [`StageOutput`] carries the per-partition modelled times
 //! (the virtual clock's input — unchanged by the mode), the stage's real
-//! wall-clock, and a per-executor busy-time ledger (utilization / skew).
+//! wall-clock, a per-executor busy-time ledger (utilization / skew),
+//! and the stage's [`FaultLedger`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use super::dataset::Dataset;
+use super::faults::{FaultContext, FaultKind, FaultLedger, StageError, SPECULATION_THRESHOLD};
 use super::PartitionCtx;
 
 /// How `map_partitions` stages execute.
+///
+/// The `GKSELECT_EXEC_MODE` environment variable (`sequential` |
+/// `threads`) selects the mode for env-built clusters; it is parsed in
+/// [`crate::engine::env`] — the one place env vars are read — with
+/// typed `InvalidEnv` errors at the engine/CLI boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
     /// Run every partition closure on the calling thread, in partition
@@ -41,18 +60,6 @@ pub enum ExecMode {
 }
 
 impl ExecMode {
-    /// Mode requested by the `GKSELECT_EXEC_MODE` environment variable
-    /// (`sequential` | `threads`; unset → `Sequential`). This is the CI
-    /// toggle that re-runs the whole suite under real concurrency.
-    /// Parsing lives in [`crate::engine::env`] — the one place env vars
-    /// are read; builders that can report errors use that module
-    /// directly instead of this panicking convenience.
-    pub fn from_env() -> Self {
-        crate::engine::env::exec_mode()
-            .expect("GKSELECT_EXEC_MODE must be 'sequential' or 'threads'")
-            .unwrap_or(ExecMode::Sequential)
-    }
-
     pub fn label(self) -> &'static str {
         match self {
             ExecMode::Sequential => "sequential",
@@ -73,14 +80,16 @@ impl std::str::FromStr for ExecMode {
 }
 
 /// Raw result of one `mapPartitions` stage, before the substrate's
-/// bookkeeping: values and measured compute times in partition order,
-/// plus the stage's real timing.
+/// bookkeeping: values and modelled compute times in partition order,
+/// plus the stage's real timing and recovery tallies.
 #[derive(Debug)]
 pub struct StageOutput<R> {
     /// One result per partition, in partition order (mode-independent).
     pub values: Vec<R>,
-    /// Measured compute seconds per partition — what the virtual clock
-    /// charges (max over executors of their partitions' sums).
+    /// Modelled compute seconds per partition — what the virtual clock
+    /// charges (max over executors of their partitions' sums). Equals
+    /// the measured time except for straggled tasks, whose entry is the
+    /// slowed-down (or speculation-capped) duration.
     pub times: Vec<f64>,
     /// Real wall-clock seconds of the whole stage: the sum of all
     /// partition times (+ loop overhead) sequentially, the parallel
@@ -89,6 +98,115 @@ pub struct StageOutput<R> {
     /// Real seconds each executor spent inside partition closures, indexed
     /// by executor.
     pub busy_secs: Vec<f64>,
+    /// Injected-fault / retry / speculation tallies for this stage.
+    pub faults: FaultLedger,
+}
+
+/// One task's fate after retries and speculation.
+struct TaskOutcome<R> {
+    value: R,
+    /// Modelled seconds (straggler/speculation-adjusted).
+    model_secs: f64,
+    /// Measured seconds of the successful attempt (busy ledger).
+    busy_secs: f64,
+    ledger: FaultLedger,
+}
+
+/// Run one partition task to completion (or retry exhaustion) under the
+/// fault model. Pure closures make every attempt return the same value,
+/// so recovery is invisible in `values`.
+fn run_task<T, R, F>(
+    f: &F,
+    part: &[T],
+    ctx: PartitionCtx,
+    fx: &FaultContext<'_>,
+) -> Result<TaskOutcome<R>, StageError>
+where
+    F: Fn(&[T], PartitionCtx) -> R,
+{
+    let mut ledger = FaultLedger::default();
+    let mut attempt = 0u32;
+    loop {
+        let injected = fx
+            .injector
+            .and_then(|i| i.fault_for(fx.stage, ctx.partition, ctx.executor, attempt));
+        if let Some(kind) = injected.filter(FaultKind::is_fatal) {
+            ledger.faults_injected += 1;
+            if attempt >= fx.retry.max_task_retries {
+                return Err(StageError {
+                    stage: fx.stage,
+                    partition: ctx.partition,
+                    attempts: attempt + 1,
+                    reason: kind.failure_reason(),
+                });
+            }
+            ledger.tasks_retried += 1;
+            ledger.backoff_secs += fx.retry.backoff_secs;
+            attempt += 1;
+            continue;
+        }
+        let start = Instant::now();
+        let run = catch_unwind(AssertUnwindSafe(|| f(part, ctx)));
+        let dt = start.elapsed().as_secs_f64();
+        match run {
+            Ok(value) => {
+                let model_secs = match injected {
+                    Some(FaultKind::Straggler(mult)) => {
+                        ledger.faults_injected += 1;
+                        straggled_secs(dt, mult, fx, &mut ledger)
+                    }
+                    _ => dt,
+                };
+                return Ok(TaskOutcome {
+                    value,
+                    model_secs,
+                    busy_secs: dt,
+                    ledger,
+                });
+            }
+            Err(panic) => {
+                if attempt >= fx.retry.max_task_retries {
+                    return Err(StageError {
+                        stage: fx.stage,
+                        partition: ctx.partition,
+                        attempts: attempt + 1,
+                        reason: panic_message(panic.as_ref()),
+                    });
+                }
+                ledger.tasks_retried += 1;
+                ledger.backoff_secs += fx.retry.backoff_secs;
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Modelled duration of a straggled task: `mult`× the measured time,
+/// capped by a speculative duplicate when one can launch. The duplicate
+/// is detected once the task overruns its expected duration (`dt`) and
+/// then runs for `dt` itself, finishing at `2·dt`; the first finisher
+/// wins — results are pure, so only the time and counters change.
+fn straggled_secs(dt: f64, mult: f64, fx: &FaultContext<'_>, ledger: &mut FaultLedger) -> f64 {
+    let slowed = dt * mult;
+    if fx.retry.speculation && fx.executors > 1 && mult >= SPECULATION_THRESHOLD {
+        ledger.speculative_launched += 1;
+        let duplicate = 2.0 * dt;
+        if duplicate < slowed {
+            ledger.speculative_wins += 1;
+            return duplicate;
+        }
+    }
+    slowed
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
 }
 
 /// The executor pool: owns the per-executor work-queue construction and
@@ -127,18 +245,22 @@ impl ExecutorPool {
     }
 
     /// Sequential strategy: run every partition on the calling thread, in
-    /// partition order.
+    /// partition order. Fails with the first (lowest-partition) task
+    /// that exhausts its retries — the same error the threaded strategy
+    /// reports for the same plan.
     pub fn run_sequential<T, R>(
         &self,
         data: &Dataset<T>,
         executor_of: impl Fn(usize) -> usize,
         f: impl Fn(&[T], PartitionCtx) -> R,
-    ) -> StageOutput<R> {
+        fx: &FaultContext<'_>,
+    ) -> Result<StageOutput<R>, StageError> {
         let num_partitions = data.num_partitions();
         let wall_start = Instant::now();
         let mut values = Vec::with_capacity(num_partitions);
         let mut times = Vec::with_capacity(num_partitions);
         let mut busy_secs = vec![0.0_f64; self.executors];
+        let mut faults = FaultLedger::default();
         for p in 0..num_partitions {
             let executor = executor_of(p);
             let ctx = PartitionCtx {
@@ -146,30 +268,35 @@ impl ExecutorPool {
                 executor,
                 num_partitions,
             };
-            let start = Instant::now();
-            values.push(f(data.partition(p), ctx));
-            let dt = start.elapsed().as_secs_f64();
-            times.push(dt);
-            busy_secs[executor] += dt;
+            let task = run_task(&f, data.partition(p), ctx, fx)?;
+            values.push(task.value);
+            times.push(task.model_secs);
+            busy_secs[executor] += task.busy_secs;
+            faults.absorb(&task.ledger);
         }
-        StageOutput {
+        Ok(StageOutput {
             values,
             times,
             wall_secs: wall_start.elapsed().as_secs_f64(),
             busy_secs,
-        }
+            faults,
+        })
     }
 
     /// Threaded strategy: one scoped OS thread per executor, each running
     /// its own queue's partitions in locality order. Results are scattered
     /// back into partition order, so for pure closures the output is
-    /// bit-identical to [`Self::run_sequential`].
+    /// bit-identical to [`Self::run_sequential`]. On retry exhaustion
+    /// the reported `StageError` is the lowest-partition failure — the
+    /// same one the sequential strategy stops at, because each queue is
+    /// drained in ascending partition order.
     pub fn run_threaded<T, R>(
         &self,
         data: &Dataset<T>,
         executor_of: impl Fn(usize) -> usize,
         f: impl Fn(&[T], PartitionCtx) -> R + Sync,
-    ) -> StageOutput<R>
+        fx: &FaultContext<'_>,
+    ) -> Result<StageOutput<R>, StageError>
     where
         T: Send + Sync,
         R: Send,
@@ -177,29 +304,31 @@ impl ExecutorPool {
         let num_partitions = data.num_partitions();
         let queues = self.queues(num_partitions, executor_of);
         let wall_start = Instant::now();
-        // (partition, value, secs) triples per executor, plus its busy sum
-        let per_exec: Vec<(Vec<(usize, R, f64)>, f64)> = std::thread::scope(|scope| {
+        // per executor: (partition, value, model secs) triples + busy sum
+        // + fault ledger, or the executor's first stage failure
+        type ExecResult<R> = Result<(Vec<(usize, R, f64)>, f64, FaultLedger), StageError>;
+        let per_exec: Vec<ExecResult<R>> = std::thread::scope(|scope| {
             let f = &f;
             let handles: Vec<_> = queues
                 .iter()
                 .enumerate()
                 .map(|(executor, queue)| {
-                    scope.spawn(move || {
+                    scope.spawn(move || -> ExecResult<R> {
                         let mut out = Vec::with_capacity(queue.len());
                         let mut busy = 0.0_f64;
+                        let mut faults = FaultLedger::default();
                         for &p in queue {
                             let ctx = PartitionCtx {
                                 partition: p,
                                 executor,
                                 num_partitions,
                             };
-                            let start = Instant::now();
-                            let value = f(data.partition(p), ctx);
-                            let dt = start.elapsed().as_secs_f64();
-                            busy += dt;
-                            out.push((p, value, dt));
+                            let task = run_task(f, data.partition(p), ctx, fx)?;
+                            busy += task.busy_secs;
+                            faults.absorb(&task.ledger);
+                            out.push((p, task.value, task.model_secs));
                         }
-                        (out, busy)
+                        Ok((out, busy, faults))
                     })
                 })
                 .collect();
@@ -207,25 +336,46 @@ impl ExecutorPool {
                 .into_iter()
                 .map(|h| match h.join() {
                     Ok(v) => v,
+                    // task panics are caught inside run_task; a worker
+                    // unwind here is a pool bug, not a task fault
                     Err(panic) => std::panic::resume_unwind(panic),
                 })
                 .collect()
         });
         let wall_secs = wall_start.elapsed().as_secs_f64();
 
+        // deterministic failure: the lowest failing partition wins, which
+        // is exactly where the sequential strategy stops
+        let mut results = Vec::with_capacity(per_exec.len());
+        let mut first_failure: Option<StageError> = None;
+        for r in per_exec {
+            match r {
+                Ok(ok) => results.push(ok),
+                Err(e) => match &first_failure {
+                    Some(cur) if cur.partition <= e.partition => {}
+                    _ => first_failure = Some(e),
+                },
+            }
+        }
+        if let Some(err) = first_failure {
+            return Err(err);
+        }
+
         // scatter back into partition order
         let mut values: Vec<Option<R>> = Vec::with_capacity(num_partitions);
         values.resize_with(num_partitions, || None);
         let mut times = vec![0.0_f64; num_partitions];
         let mut busy_secs = Vec::with_capacity(self.executors);
-        for (outs, busy) in per_exec {
+        let mut faults = FaultLedger::default();
+        for (outs, busy, ledger) in results {
             busy_secs.push(busy);
+            faults.absorb(&ledger);
             for (p, value, dt) in outs {
                 values[p] = Some(value);
                 times[p] = dt;
             }
         }
-        StageOutput {
+        Ok(StageOutput {
             values: values
                 .into_iter()
                 .map(|v| v.expect("every partition executed exactly once"))
@@ -233,12 +383,14 @@ impl ExecutorPool {
             times,
             wall_secs,
             busy_secs,
-        }
+            faults,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::faults::{FaultInjector, FaultPlan, RetryPolicy};
     use super::*;
 
     fn dataset() -> Dataset<i32> {
@@ -254,6 +406,15 @@ mod tests {
         .unwrap()
     }
 
+    fn fx_with<'a>(injector: &'a FaultInjector, retry: RetryPolicy) -> FaultContext<'a> {
+        FaultContext {
+            injector: Some(injector),
+            retry,
+            stage: 0,
+            executors: 3,
+        }
+    }
+
     #[test]
     fn threaded_values_match_sequential_in_partition_order() {
         let pool = ExecutorPool::new(3);
@@ -261,8 +422,9 @@ mod tests {
         let f = |part: &[i32], ctx: PartitionCtx| {
             (ctx.partition, ctx.executor, part.iter().sum::<i32>())
         };
-        let seq = pool.run_sequential(&d, |p| p % 3, f);
-        let thr = pool.run_threaded(&d, |p| p % 3, f);
+        let fx = FaultContext::none(3);
+        let seq = pool.run_sequential(&d, |p| p % 3, f, &fx).unwrap();
+        let thr = pool.run_threaded(&d, |p| p % 3, f, &fx).unwrap();
         assert_eq!(seq.values, thr.values);
         // partition order, correct executor assignment
         for (p, &(part, exec, _)) in thr.values.iter().enumerate() {
@@ -275,20 +437,23 @@ mod tests {
     fn ledgers_are_shaped_by_the_pool() {
         let pool = ExecutorPool::new(2);
         let d = dataset();
-        let out = pool.run_threaded(&d, |p| p % 2, |part, _| part.len());
+        let fx = FaultContext::none(2);
+        let out = pool.run_threaded(&d, |p| p % 2, |part, _| part.len(), &fx).unwrap();
         assert_eq!(out.values.len(), 7);
         assert_eq!(out.times.len(), 7);
         assert_eq!(out.busy_secs.len(), 2);
         assert!(out.wall_secs >= 0.0);
         assert!(out.busy_secs.iter().all(|&b| b >= 0.0));
+        assert_eq!(out.faults, FaultLedger::default());
     }
 
     #[test]
     fn single_executor_degenerate_case() {
         let pool = ExecutorPool::new(1);
         let d = dataset();
-        let seq = pool.run_sequential(&d, |_| 0, |part, _| part.to_vec());
-        let thr = pool.run_threaded(&d, |_| 0, |part, _| part.to_vec());
+        let fx = FaultContext::none(1);
+        let seq = pool.run_sequential(&d, |_| 0, |part, _| part.to_vec(), &fx).unwrap();
+        let thr = pool.run_threaded(&d, |_| 0, |part, _| part.to_vec(), &fx).unwrap();
         assert_eq!(seq.values, thr.values);
         assert_eq!(thr.busy_secs.len(), 1);
     }
@@ -298,7 +463,8 @@ mod tests {
         // 5 executors but only 2 partitions: three threads run empty queues
         let pool = ExecutorPool::new(5);
         let d = Dataset::from_partitions(vec![vec![1], vec![2, 3]]).unwrap();
-        let thr = pool.run_threaded(&d, |p| p % 5, |part, _| part.len());
+        let fx = FaultContext::none(5);
+        let thr = pool.run_threaded(&d, |p| p % 5, |part, _| part.len(), &fx).unwrap();
         assert_eq!(thr.values, vec![1, 2]);
         assert_eq!(thr.busy_secs.len(), 5);
     }
@@ -317,5 +483,102 @@ mod tests {
         let pool = ExecutorPool::new(2);
         let queues = pool.queues(5, |p| p % 2);
         assert_eq!(queues, vec![vec![0, 2, 4], vec![1, 3]]);
+    }
+
+    #[test]
+    fn injected_panics_are_retried_to_identical_values() {
+        let pool = ExecutorPool::new(3);
+        let d = dataset();
+        let f = |part: &[i32], ctx: PartitionCtx| (ctx.partition, part.iter().sum::<i32>());
+        let clean = pool
+            .run_sequential(&d, |p| p % 3, f, &FaultContext::none(3))
+            .unwrap();
+
+        let inj = FaultInjector::new(FaultPlan::seeded(5).panics(0.5).transients(0.3));
+        let fx = fx_with(&inj, RetryPolicy::default());
+        let seq = pool.run_sequential(&d, |p| p % 3, f, &fx).unwrap();
+        let thr = pool.run_threaded(&d, |p| p % 3, f, &fx).unwrap();
+        assert_eq!(seq.values, clean.values, "retries must not change values");
+        assert_eq!(thr.values, clean.values);
+        assert!(seq.faults.faults_injected > 0, "plan must actually fire");
+        assert_eq!(seq.faults.tasks_retried, seq.faults.faults_injected);
+        assert_eq!(seq.faults, thr.faults, "recovery tallies mode-identical");
+        assert!(seq.faults.backoff_secs > 0.0);
+    }
+
+    #[test]
+    fn retry_exhaustion_is_a_typed_stage_error_in_both_modes() {
+        let pool = ExecutorPool::new(3);
+        let d = dataset();
+        let f = |part: &[i32], _: PartitionCtx| part.len();
+        // persistent failure on partitions 2 and 5: the lowest wins
+        let inj = FaultInjector::new(
+            FaultPlan::seeded(0).panic_task(0, 5).panic_task(0, 2).attempts(99),
+        );
+        let fx = fx_with(&inj, RetryPolicy::default().with_max_task_retries(2));
+        let seq = pool.run_sequential(&d, |p| p % 3, f, &fx).unwrap_err();
+        let thr = pool.run_threaded(&d, |p| p % 3, f, &fx).unwrap_err();
+        assert_eq!(seq, thr, "failure must be mode-identical");
+        assert_eq!(seq.partition, 2);
+        assert_eq!(seq.attempts, 3);
+        assert_eq!(seq.stage, 0);
+    }
+
+    #[test]
+    fn real_panics_are_caught_retried_and_typed() {
+        let pool = ExecutorPool::new(2);
+        let d = dataset();
+        // a deterministic closure panics on every attempt → typed error
+        let f = |part: &[i32], ctx: PartitionCtx| {
+            if ctx.partition == 1 {
+                panic!("boom in partition 1");
+            }
+            part.len()
+        };
+        let fx = FaultContext {
+            injector: None,
+            retry: RetryPolicy::default().with_max_task_retries(1),
+            stage: 7,
+            executors: 2,
+        };
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected unwinds
+        let seq = pool.run_sequential(&d, |p| p % 2, f, &fx).unwrap_err();
+        let thr = pool.run_threaded(&d, |p| p % 2, f, &fx).unwrap_err();
+        std::panic::set_hook(hook);
+        assert_eq!(seq, thr);
+        assert_eq!(seq.partition, 1);
+        assert_eq!(seq.attempts, 2, "one retry consumed before failing");
+        assert!(seq.reason.contains("boom"), "reason = {}", seq.reason);
+    }
+
+    #[test]
+    fn stragglers_charge_model_time_and_speculate() {
+        let pool = ExecutorPool::new(3);
+        let d = dataset();
+        let f = |part: &[i32], _: PartitionCtx| {
+            // enough work that the measured time is nonzero
+            part.iter().map(|&x| x as i64).sum::<i64>()
+        };
+        let inj = FaultInjector::new(FaultPlan::seeded(2).stragglers(1.0, 8.0));
+        let fx = fx_with(&inj, RetryPolicy::default());
+        let out = pool.run_sequential(&d, |p| p % 3, f, &fx).unwrap();
+        let n = d.num_partitions() as u64;
+        assert_eq!(out.faults.faults_injected, n, "every task straggles");
+        assert_eq!(out.faults.speculative_launched, n);
+        assert_eq!(out.faults.speculative_wins, n, "8x loses to the 2x duplicate");
+        assert_eq!(out.faults.tasks_retried, 0);
+
+        // no speculation on a single-executor cluster: full 8x charged
+        let fx1 = FaultContext {
+            injector: Some(&inj),
+            retry: RetryPolicy::default(),
+            stage: 0,
+            executors: 1,
+        };
+        let pool1 = ExecutorPool::new(1);
+        let out1 = pool1.run_sequential(&d, |_| 0, f, &fx1).unwrap();
+        assert_eq!(out1.faults.speculative_launched, 0);
+        assert!(out1.times.iter().sum::<f64>() >= out.times.iter().sum::<f64>());
     }
 }

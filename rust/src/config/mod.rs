@@ -4,7 +4,8 @@
 //! experiment in EXPERIMENTS.md is reproducible from its config + seed.
 
 use crate::cluster::netmodel::NetworkModel;
-use crate::cluster::{ClusterConfig, ExecMode};
+use crate::cluster::{ClusterConfig, ExecMode, FaultPlan, RetryPolicy};
+use crate::engine::DegradePolicy;
 use crate::runtime::{KernelBackend, SimdPolicy};
 use crate::util::minitoml::{self, Document, Section, Value};
 use anyhow::{Context, Result};
@@ -107,6 +108,53 @@ pub struct RuntimeSection {
     pub simd: String,
 }
 
+/// Fault-injection and recovery section (converted into a
+/// [`FaultPlan`] + [`RetryPolicy`] pair on the cluster config).
+#[derive(Debug, Clone)]
+pub struct FaultsSection {
+    /// Seeded fault plan in the [`FaultPlan`] grammar
+    /// (`"seed=N,panic=R,..."`). Empty = defer to the `GKSELECT_FAULTS`
+    /// env var (unset → no injection).
+    pub plan: String,
+    /// Task attempts after the first before a stage fails (Spark:
+    /// `spark.task.maxFailures - 1`).
+    pub max_task_retries: u32,
+    /// Modelled scheduler delay charged per retry, milliseconds.
+    pub backoff_ms: f64,
+    /// Re-launch straggler tasks speculatively (Spark:
+    /// `spark.speculation`).
+    pub speculation: bool,
+    /// What a query does when a stage exhausts its retries: "fail"
+    /// (typed error) | "sketch" (degrade to an ε-approximate answer).
+    /// Empty = "fail".
+    pub degrade: String,
+}
+
+impl Default for FaultsSection {
+    fn default() -> Self {
+        let r = RetryPolicy::default();
+        Self {
+            plan: String::new(),
+            max_task_retries: r.max_task_retries,
+            backoff_ms: r.backoff_secs * 1e3,
+            speculation: r.speculation,
+            degrade: String::new(),
+        }
+    }
+}
+
+impl FaultsSection {
+    /// Materialize the recovery knobs (the plan itself is resolved
+    /// separately so builder/env overrides can layer on top).
+    pub fn to_retry_policy(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_task_retries: self.max_task_retries,
+            backoff_secs: self.backoff_ms * 1e-3,
+            speculation: self.speculation,
+        }
+    }
+}
+
 /// Fabric section (converted into [`NetworkModel`]).
 #[derive(Debug, Clone)]
 pub struct NetworkSection {
@@ -156,6 +204,7 @@ pub struct ReproConfig {
     pub algorithm: AlgorithmSection,
     pub stream: StreamSection,
     pub runtime: RuntimeSection,
+    pub faults: FaultsSection,
     /// Kernel backend: "native" | "pjrt".
     pub backend: String,
     /// Where `make artifacts` put the HLO text.
@@ -170,6 +219,7 @@ impl Default for ReproConfig {
             algorithm: AlgorithmSection::default(),
             stream: StreamSection::default(),
             runtime: RuntimeSection::default(),
+            faults: FaultsSection::default(),
             backend: "native".into(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
@@ -200,6 +250,19 @@ impl ReproConfig {
                 .parse::<SimdPolicy>()
                 .with_context(|| format!("[runtime] simd = {:?}", cfg.runtime.simd))?;
         }
+        if !cfg.faults.plan.is_empty() {
+            // fail config loading, not the first cluster_config() call
+            cfg.faults
+                .plan
+                .parse::<FaultPlan>()
+                .with_context(|| format!("[faults] plan = {:?}", cfg.faults.plan))?;
+        }
+        if !cfg.faults.degrade.is_empty() {
+            cfg.faults
+                .degrade
+                .parse::<DegradePolicy>()
+                .with_context(|| format!("[faults] degrade = {:?}", cfg.faults.degrade))?;
+        }
         Ok(cfg)
     }
 
@@ -211,6 +274,7 @@ impl ReproConfig {
         let algorithm = Section(doc.get("algorithm"));
         let stream = Section(doc.get("stream"));
         let runtime = Section(doc.get("runtime"));
+        let faults = Section(doc.get("faults"));
         Self {
             cluster: ClusterSection {
                 nodes: cluster.int_or("nodes", d.cluster.nodes as i64) as usize,
@@ -249,6 +313,15 @@ impl ReproConfig {
             },
             runtime: RuntimeSection {
                 simd: runtime.str_or("simd", &d.runtime.simd),
+            },
+            faults: FaultsSection {
+                plan: faults.str_or("plan", &d.faults.plan),
+                max_task_retries: faults
+                    .int_or("max_task_retries", d.faults.max_task_retries as i64)
+                    as u32,
+                backoff_ms: faults.float_or("backoff_ms", d.faults.backoff_ms),
+                speculation: faults.bool_or("speculation", d.faults.speculation),
+                degrade: faults.str_or("degrade", &d.faults.degrade),
             },
             backend: root.str_or("backend", &d.backend),
             artifacts_dir: PathBuf::from(
@@ -297,13 +370,27 @@ impl ReproConfig {
         crate::runtime::backend_from_name(&self.backend, &self.artifacts_dir, self.simd_policy())
     }
 
-    /// Materialize the cluster description.
+    /// Materialize the cluster description. Empty `exec_mode` / `plan`
+    /// strings defer to the `GKSELECT_EXEC_MODE` / `GKSELECT_FAULTS`
+    /// env vars, read quietly (garbage → ignored — the engine builder
+    /// is the loud validation boundary).
     pub fn cluster_config(&self) -> ClusterConfig {
         let exec_mode = match self.cluster.exec_mode.as_str() {
-            "" => ExecMode::from_env(),
+            "" => crate::engine::env::exec_mode()
+                .ok()
+                .flatten()
+                .unwrap_or_default(),
             other => other
                 .parse()
                 .expect("cluster.exec_mode must be 'sequential' or 'threads'"),
+        };
+        let faults = match self.faults.plan.as_str() {
+            "" => crate::engine::env::faults().ok().flatten(),
+            other => Some(
+                other
+                    .parse()
+                    .expect("faults.plan must use the FaultPlan grammar"),
+            ),
         };
         ClusterConfig {
             executors: self.cluster.nodes,
@@ -312,6 +399,8 @@ impl ReproConfig {
             compute_scale: self.cluster.compute_scale,
             driver_scale: self.cluster.driver_scale,
             exec_mode,
+            faults,
+            retry: self.faults.to_retry_policy(),
         }
     }
 
@@ -380,6 +469,19 @@ impl ReproConfig {
             let r = doc.entry("runtime".into()).or_default();
             r.insert("simd".into(), Value::Str(self.runtime.simd.clone()));
         }
+        let f = doc.entry("faults".into()).or_default();
+        if !self.faults.plan.is_empty() {
+            f.insert("plan".into(), Value::Str(self.faults.plan.clone()));
+        }
+        f.insert(
+            "max_task_retries".into(),
+            Value::Int(self.faults.max_task_retries as i64),
+        );
+        f.insert("backoff_ms".into(), Value::Float(self.faults.backoff_ms));
+        f.insert("speculation".into(), Value::Bool(self.faults.speculation));
+        if !self.faults.degrade.is_empty() {
+            f.insert("degrade".into(), Value::Str(self.faults.degrade.clone()));
+        }
         minitoml::serialize(&doc)
     }
 }
@@ -425,7 +527,6 @@ mod tests {
     #[test]
     fn exec_mode_roundtrips_and_materializes() {
         let mut c = ReproConfig::default();
-        assert_eq!(c.cluster_config().exec_mode, ExecMode::from_env());
         c.cluster.exec_mode = "threads".into();
         let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
         assert_eq!(back.cluster.exec_mode, "threads");
@@ -472,6 +573,34 @@ mod tests {
         let forced = ReproConfig::from_toml("[runtime]\nsimd = \"force\"\n").unwrap();
         assert_eq!(forced.simd_policy(), SimdPolicy::ForceSimd);
         assert!(forced.kernel_backend().unwrap().simd_lane_width() >= 1);
+    }
+
+    #[test]
+    fn faults_section_roundtrips_and_materializes() {
+        let mut c = ReproConfig::default();
+        assert_eq!(c.faults.plan, "");
+        assert_eq!(c.faults.max_task_retries, 3);
+        assert!(c.faults.speculation);
+        c.faults.plan = "seed=9,panic=0.1".into();
+        c.faults.max_task_retries = 5;
+        c.faults.backoff_ms = 10.0;
+        c.faults.speculation = false;
+        c.faults.degrade = "sketch".into();
+        let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.faults.plan, "seed=9,panic=0.1");
+        assert_eq!(back.faults.degrade, "sketch");
+        let retry = back.faults.to_retry_policy();
+        assert_eq!(retry.max_task_retries, 5);
+        assert!((retry.backoff_secs - 0.01).abs() < 1e-12);
+        assert!(!retry.speculation);
+        let cc = back.cluster_config();
+        assert_eq!(cc.faults.as_ref().unwrap().seed, 9);
+        assert_eq!(cc.retry.max_task_retries, 5);
+        // a bad plan or degrade policy fails at load time with context
+        let err = ReproConfig::from_toml("[faults]\nplan = \"chaos\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("plan"));
+        let err = ReproConfig::from_toml("[faults]\ndegrade = \"explode\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("degrade"));
     }
 
     #[test]

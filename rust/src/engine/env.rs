@@ -15,7 +15,7 @@
 //!   never a silent fallback.
 
 use super::EngineError;
-use crate::cluster::ExecMode;
+use crate::cluster::{ExecMode, FaultPlan};
 use crate::runtime::SimdPolicy;
 
 /// Environment variable selecting the executor pool mode
@@ -27,6 +27,12 @@ pub const EXEC_MODE_VAR: &str = "GKSELECT_EXEC_MODE";
 /// (`auto` | `scalar` | `force`) — the CI toggle pinning each side of
 /// the kernel dispatch.
 pub const SIMD_VAR: &str = "GKSELECT_SIMD";
+
+/// Environment variable carrying a seeded fault-injection plan in
+/// [`FaultPlan`]'s `key=value` grammar (e.g.
+/// `seed=7,panic=0.02,straggler=0.1x4`) — the CI toggle that re-runs
+/// the whole suite under injection.
+pub const FAULTS_VAR: &str = "GKSELECT_FAULTS";
 
 /// Parse an execution mode from a raw variable value. Pure — the
 /// testable core of [`exec_mode`].
@@ -56,6 +62,20 @@ pub fn parse_simd_policy(raw: Option<&str>) -> Result<Option<SimdPolicy>, Engine
     }
 }
 
+/// Parse a fault plan from a raw variable value. Pure — the testable
+/// core of [`faults`].
+pub fn parse_faults(raw: Option<&str>) -> Result<Option<FaultPlan>, EngineError> {
+    match raw {
+        None => Ok(None),
+        Some("") => Ok(None),
+        Some(v) => v.parse::<FaultPlan>().map(Some).map_err(|_| EngineError::InvalidEnv {
+            var: FAULTS_VAR,
+            value: v.to_string(),
+            expected: "seed=N[,panic=R][,transient=R][,straggler=RxM][,attempts=K][,lose=S:E][,panic_at=S:P]",
+        }),
+    }
+}
+
 /// Read `GKSELECT_EXEC_MODE` from the process environment.
 pub fn exec_mode() -> Result<Option<ExecMode>, EngineError> {
     let raw = std::env::var(EXEC_MODE_VAR).ok();
@@ -68,6 +88,12 @@ pub fn simd_policy() -> Result<Option<SimdPolicy>, EngineError> {
     parse_simd_policy(raw.as_deref())
 }
 
+/// Read `GKSELECT_FAULTS` from the process environment.
+pub fn faults() -> Result<Option<FaultPlan>, EngineError> {
+    let raw = std::env::var(FAULTS_VAR).ok();
+    parse_faults(raw.as_deref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +104,24 @@ mod tests {
         assert_eq!(parse_exec_mode(Some("")).unwrap(), None);
         assert_eq!(parse_simd_policy(None).unwrap(), None);
         assert_eq!(parse_simd_policy(Some("")).unwrap(), None);
+        assert_eq!(parse_faults(None).unwrap(), None);
+        assert_eq!(parse_faults(Some("")).unwrap(), None);
+    }
+
+    #[test]
+    fn fault_plans_parse_and_reject() {
+        let plan = parse_faults(Some("seed=7,panic=0.25,straggler=0.5x4"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.panic_rate, 0.25);
+        assert_eq!(plan.straggler_mult, 4.0);
+
+        let err = parse_faults(Some("panic=lots")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(FAULTS_VAR), "{msg}");
+        assert!(msg.contains("panic=lots"), "{msg}");
+        assert!(msg.contains("seed=N"), "{msg}");
     }
 
     #[test]

@@ -65,7 +65,7 @@ use crate::algorithms::multi_select::MultiOutcome;
 use crate::algorithms::{Outcome, QuantileAlgorithm};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
-use crate::cluster::{Cluster, ClusterConfig, ExecMode};
+use crate::cluster::{Cluster, ClusterConfig, ExecMode, FaultPlan, RetryPolicy, StageError};
 use crate::config::ReproConfig;
 use crate::runtime::{backend_from_name, KernelBackend, SimdPolicy};
 use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor};
@@ -100,6 +100,10 @@ pub enum EngineError {
     /// A `Sketched` stream query asked for a tighter ε than the cached
     /// ingest-time sketch can honor.
     SketchTooCoarse { requested: f64, available: f64 },
+    /// A `map_partitions` stage exhausted its task retries (see
+    /// [`crate::cluster::faults`]). Under [`DegradePolicy::SketchAnswer`]
+    /// the engine converts this into a degraded sketch answer instead.
+    StageFailed { stage: u64, attempts: u32 },
     /// An environment variable held an unparseable value.
     InvalidEnv {
         var: &'static str,
@@ -139,6 +143,10 @@ impl std::fmt::Display for EngineError {
                 "sketched query wants eps={requested} but the cached sketch only \
                  offers eps={available}"
             ),
+            Self::StageFailed { stage, attempts } => write!(
+                f,
+                "stage {stage} failed: a task died {attempts} times (retries exhausted)"
+            ),
             Self::InvalidEnv {
                 var,
                 value,
@@ -155,7 +163,54 @@ impl std::error::Error for EngineError {}
 
 impl From<anyhow::Error> for EngineError {
     fn from(e: anyhow::Error) -> Self {
-        EngineError::Execution(format!("{e:#}"))
+        // a StageFailed that crossed an anyhow boundary (the sketch
+        // builder, stream ingest) stays typed rather than stringly
+        match e.downcast::<StageError>() {
+            Ok(se) => se.into(),
+            Err(e) => EngineError::Execution(format!("{e:#}")),
+        }
+    }
+}
+
+impl From<StageError> for EngineError {
+    fn from(e: StageError) -> Self {
+        EngineError::StageFailed {
+            stage: e.stage,
+            attempts: e.attempts,
+        }
+    }
+}
+
+/// What `execute` does when a stage exhausts its retries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradePolicy {
+    /// Surface the typed [`EngineError::StageFailed`] (default).
+    #[default]
+    Fail,
+    /// Serve the query from the GK sketch instead — the cached merged
+    /// sketch for streams, a freshly built one for datasets — with the
+    /// [`QueryOutcome`] explicitly marked degraded (ε-approximate, never
+    /// silently wrong).
+    SketchAnswer,
+}
+
+impl std::str::FromStr for DegradePolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fail" => Ok(Self::Fail),
+            "sketch" | "sketch-answer" => Ok(Self::SketchAnswer),
+            other => anyhow::bail!("unknown degrade policy '{other}' (fail|sketch)"),
+        }
+    }
+}
+
+impl std::fmt::Display for DegradePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Fail => "fail",
+            Self::SketchAnswer => "sketch",
+        })
     }
 }
 
@@ -237,6 +292,17 @@ impl QuantileQuery {
             }
         }
     }
+
+    /// Expand a validated plan to the quantiles it answers, in output
+    /// order — the positions of [`QueryOutcome::values`]. `Rank(k)`
+    /// plans need the input size `n` for the rank→quantile mapping.
+    pub fn quantiles(&self, n: u64) -> Vec<f64> {
+        match self {
+            Self::Single(q) | Self::Sketched { q, .. } => vec![*q],
+            Self::Multi(qs) => qs.clone(),
+            Self::Rank(k) => vec![rank_to_quantile(*k, n)],
+        }
+    }
 }
 
 /// A quantile `q` whose [`crate::target_rank`] is exactly `k` — how
@@ -281,6 +347,12 @@ pub struct QueryOutcome {
     pub values: Vec<Key>,
     /// The measured cost of exactly this query.
     pub report: MetricsReport,
+    /// True when a stage failure forced the engine to answer from the
+    /// sketch under [`DegradePolicy::SketchAnswer`]: the values are
+    /// ε-approximate, the report says `exact: false`, and the caller is
+    /// told so explicitly rather than discovering it from a wrong exact
+    /// value.
+    pub degraded: bool,
 }
 
 impl QueryOutcome {
@@ -295,6 +367,7 @@ impl From<Outcome> for QueryOutcome {
         Self {
             values: vec![o.value],
             report: o.report,
+            degraded: false,
         }
     }
 }
@@ -304,6 +377,7 @@ impl From<MultiOutcome> for QueryOutcome {
         Self {
             values: o.values,
             report: o.report,
+            degraded: false,
         }
     }
 }
@@ -425,6 +499,9 @@ pub struct EngineBuilder {
     candidate_budget: Option<usize>,
     seed: Option<u64>,
     compaction: Option<CompactionPolicy>,
+    faults: Option<FaultPlan>,
+    retry: Option<RetryPolicy>,
+    degrade: Option<DegradePolicy>,
 }
 
 impl EngineBuilder {
@@ -528,10 +605,31 @@ impl EngineBuilder {
         self
     }
 
+    /// Inject a seeded fault plan (chaos runs, robustness tests). Wins
+    /// over the `[faults]` config section and `GKSELECT_FAULTS`.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Override the task retry / speculation policy.
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = Some(retry);
+        self
+    }
+
+    /// What `execute` does when a stage exhausts its retries: fail typed
+    /// (default) or degrade to a sketch answer.
+    pub fn degrade_policy(mut self, policy: DegradePolicy) -> Self {
+        self.degrade = Some(policy);
+        self
+    }
+
     pub fn build(self) -> Result<QuantileEngine, EngineError> {
         let env_exec = env::exec_mode()?;
         let env_simd = env::simd_policy()?;
-        self.build_resolved(env_exec, env_simd)
+        let env_faults = env::faults()?;
+        self.build_resolved(env_exec, env_simd, env_faults)
     }
 
     /// [`Self::build`] with the env layer injected — the pure core the
@@ -540,15 +638,38 @@ impl EngineBuilder {
         self,
         env_exec: Option<ExecMode>,
         env_simd: Option<SimdPolicy>,
+        env_faults: Option<FaultPlan>,
     ) -> Result<QuantileEngine, EngineError> {
         let cfg = self.config.unwrap_or_default();
 
         let simd = resolve_simd(self.simd, &cfg.runtime.simd, env_simd)?;
         let exec = resolve_exec_mode(self.exec_mode, &cfg.cluster.exec_mode, env_exec)?;
+        let faults = resolve_faults(self.faults.clone(), &cfg.faults.plan, env_faults)?;
+        let retry = self.retry.unwrap_or_else(|| cfg.faults.to_retry_policy());
+        let degrade = match self.degrade {
+            Some(d) => d,
+            None => {
+                if cfg.faults.degrade.is_empty() {
+                    DegradePolicy::Fail
+                } else {
+                    cfg.faults.degrade.parse::<DegradePolicy>().map_err(|e| {
+                        EngineError::InvalidConfig(format!("[faults] degrade: {e:#}"))
+                    })?
+                }
+            }
+        };
 
         let cc = if let Some(mut cc) = self.cluster {
             if let Some(mode) = self.exec_mode {
                 cc.exec_mode = mode;
+            }
+            // an explicit shape keeps its own fault wiring (it read the
+            // env itself); explicit builder knobs still win on top
+            if let Some(plan) = self.faults {
+                cc.faults = Some(plan);
+            }
+            if let Some(r) = self.retry {
+                cc.retry = r;
             }
             cc
         } else {
@@ -560,6 +681,8 @@ impl EngineBuilder {
                 compute_scale: cfg.cluster.compute_scale,
                 driver_scale: cfg.cluster.driver_scale,
                 exec_mode: exec.unwrap_or(ExecMode::Sequential),
+                faults,
+                retry,
             }
         };
 
@@ -667,8 +790,28 @@ impl EngineBuilder {
             store,
             ingestor,
             gk_params,
+            degrade,
         })
     }
+}
+
+/// Builder > config file > env for the fault plan; `None` (no injector)
+/// when nothing speaks.
+fn resolve_faults(
+    builder: Option<FaultPlan>,
+    file: &str,
+    env: Option<FaultPlan>,
+) -> Result<Option<FaultPlan>, EngineError> {
+    if let Some(p) = builder {
+        return Ok(Some(p));
+    }
+    if !file.is_empty() {
+        return file
+            .parse::<FaultPlan>()
+            .map(Some)
+            .map_err(|e| EngineError::InvalidConfig(format!("[faults] plan: {e}")));
+    }
+    Ok(env)
 }
 
 /// Builder > config file > env for the SIMD policy; `Auto` when nothing
@@ -724,6 +867,7 @@ pub struct QuantileEngine {
     store: SketchStore,
     ingestor: StreamIngestor,
     gk_params: GkSelectParams,
+    degrade: DegradePolicy,
 }
 
 impl QuantileEngine {
@@ -735,12 +879,45 @@ impl QuantileEngine {
     /// strategy; stream sources are served from cached ingest-time
     /// sketches by the GK fused protocol. The outcome's report carries
     /// the backend's SIMD lane width, stamped here and only here.
+    ///
+    /// A stage that exhausts its retries surfaces as a typed
+    /// [`EngineError::StageFailed`] — or, under
+    /// [`DegradePolicy::SketchAnswer`], is answered from the GK sketch
+    /// with the outcome explicitly marked [`QueryOutcome::degraded`].
+    /// Either way a faulted query never panics and never returns a
+    /// silently wrong exact value.
     pub fn execute(
         &mut self,
         source: Source<'_>,
         query: QuantileQuery,
     ) -> Result<QueryOutcome, EngineError> {
-        let mut out = match source {
+        let mut out = match self.execute_exact(source, &query) {
+            Err(EngineError::StageFailed { .. })
+                if self.degrade == DegradePolicy::SketchAnswer =>
+            {
+                let mut out = self.degraded_answer(source, &query)?;
+                out.degraded = true;
+                out.report.exact = false;
+                out.report.degraded_queries += 1;
+                self.cluster.metrics.degraded_queries += 1;
+                out
+            }
+            other => other?,
+        };
+        // THE stamping point: every outcome says which band-scan
+        // dispatch the engine's backend runs, no per-exit-path stamping
+        // to forget (the old make_report / make_backend_report footgun).
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
+    }
+
+    /// The fault-free query path `execute` wraps.
+    fn execute_exact(
+        &mut self,
+        source: Source<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        match source {
             Source::Dataset(data) => {
                 let strategy = &*self.strategy;
                 let mut ctx = EngineCtx {
@@ -748,15 +925,76 @@ impl QuantileEngine {
                     backend: self.backend.as_ref(),
                     data,
                 };
-                strategy.execute_plan(&mut ctx, &query)?
+                strategy.execute_plan(&mut ctx, query)
             }
-            Source::Stream(id) => self.execute_stream(id, &query)?,
+            Source::Stream(id) => self.execute_stream(id, query),
+        }
+    }
+
+    /// Serve a plan from the GK sketch after a stage failure: the cached
+    /// merged sketch for streams (zero further scans — immune to the
+    /// injected faults that killed the exact path), a freshly built one
+    /// at the engine's ε for datasets. The sketch build itself runs
+    /// under the same fault model, so its failure is still a typed
+    /// error, never a panic.
+    fn degraded_answer(
+        &mut self,
+        source: Source<'_>,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let eps = self.gk_params.epsilon;
+        let n = match source {
+            Source::Dataset(data) => {
+                if data.is_empty() {
+                    return Err(EngineError::EmptyInput);
+                }
+                data.len()
+            }
+            Source::Stream(id) => {
+                let state = self
+                    .store
+                    .stream(id)
+                    .ok_or_else(|| EngineError::UnknownStream(id.to_string()))?;
+                state.total_count()
+            }
         };
-        // THE stamping point: every outcome says which band-scan
-        // dispatch the engine's backend runs, no per-exit-path stamping
-        // to forget (the old make_report / make_backend_report footgun).
-        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
-        Ok(out)
+        query.validate(n)?;
+        let qs = query.quantiles(n);
+        let mut agg: Option<QueryOutcome> = None;
+        for q in qs {
+            let out: QueryOutcome = match source {
+                Source::Stream(id) => crate::stream::query::sketched_with(
+                    &mut self.cluster,
+                    &self.store,
+                    id,
+                    q,
+                    eps,
+                )?
+                .into(),
+                Source::Dataset(data) => {
+                    let params = ApproxQuantileParams {
+                        epsilon: eps,
+                        variant: SketchVariant::Spark,
+                        merge: MergeStrategy::Fold,
+                    };
+                    crate::algorithms::approx_quantile::sketch_quantile_with(
+                        &mut self.cluster,
+                        data,
+                        &params,
+                        q,
+                    )?
+                    .into()
+                }
+            };
+            match &mut agg {
+                None => agg = Some(out),
+                Some(acc) => {
+                    acc.values.extend_from_slice(&out.values);
+                    acc.report.absorb(&out.report);
+                }
+            }
+        }
+        Ok(agg.expect("validated plans carry at least one quantile"))
     }
 
     fn execute_stream(
@@ -863,6 +1101,11 @@ impl QuantileEngine {
     /// scalar) — the value stamped onto every outcome's report.
     pub fn simd_lane_width(&self) -> usize {
         self.backend.simd_lane_width()
+    }
+
+    /// What `execute` does when a stage exhausts its retries.
+    pub fn degrade_policy(&self) -> DegradePolicy {
+        self.degrade
     }
 }
 
@@ -1080,7 +1323,7 @@ mod tests {
         cfg.cluster.nodes = 3;
         let engine = EngineBuilder::new()
             .config(cfg.clone())
-            .build_resolved(None, None)
+            .build_resolved(None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
         assert_eq!(engine.cluster().cfg.executors, 3);
@@ -1089,13 +1332,13 @@ mod tests {
             .config(cfg)
             .exec_mode(ExecMode::Sequential)
             .nodes(5)
-            .build_resolved(None, None)
+            .build_resolved(None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Sequential);
         assert_eq!(engine.cluster().cfg.executors, 5);
         // env reaches the engine when builder and file are silent
         let engine = EngineBuilder::new()
-            .build_resolved(Some(ExecMode::Threads), None)
+            .build_resolved(Some(ExecMode::Threads), None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
     }
@@ -1132,15 +1375,106 @@ mod tests {
     }
 
     #[test]
+    fn retries_keep_faulted_answers_bit_identical() {
+        let data = data_1k();
+        let clean = small_engine(AlgoChoice::GkSelect)
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        // one injected panic per stage, inside the retry budget
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .fault_plan(
+                FaultPlan::seeded(11)
+                    .panic_task(0, 1)
+                    .panic_task(1, 3)
+                    .stragglers(0.5, 4.0),
+            )
+            .build_resolved(None, None, None)
+            .unwrap();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(out.value(), clean.value(), "retried run must stay exact");
+        assert!(!out.degraded);
+        assert!(out.report.exact);
+        assert_eq!(out.report.tasks_retried, 2);
+        assert_eq!(out.report.rounds, clean.report.rounds);
+        assert_eq!(out.report.data_scans, clean.report.data_scans);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_typed_or_degrade_to_the_sketch() {
+        let data = data_1k();
+        // a fault that outlives any retry budget on the sketch stage
+        let plan = FaultPlan::seeded(3).panic_task(0, 0).attempts(u32::MAX);
+
+        let mut failing = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .fault_plan(plan.clone())
+            .build_resolved(None, None, None)
+            .unwrap();
+        let err = failing
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::StageFailed { stage: 0, attempts } if attempts > 0),
+            "{err}"
+        );
+
+        // same plan under SketchAnswer: the sketch rebuild runs at later
+        // stage indices the plan doesn't touch, so the query degrades
+        let mut degrading = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .fault_plan(plan)
+            .degrade_policy(DegradePolicy::SketchAnswer)
+            .build_resolved(None, None, None)
+            .unwrap();
+        let out = degrading
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert!(out.degraded, "fallback answers must be marked");
+        assert!(!out.report.exact);
+        assert_eq!(out.report.degraded_queries, 1);
+        // ε-approximate: rank error bounded by ε·n = 10
+        assert!((out.value() - 500).unsigned_abs() <= 10, "got {}", out.value());
+        assert_eq!(degrading.cluster().metrics.degraded_queries, 1);
+    }
+
+    #[test]
+    fn stream_queries_degrade_to_the_cached_sketch_without_a_scan() {
+        // fail every post-ingest stage persistently: the exact stream
+        // query (which scans the epoch partitions) cannot survive, but
+        // the cached merged sketch answers without any scan at all
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .degrade_policy(DegradePolicy::SketchAnswer)
+            .build_resolved(None, None, None)
+            .unwrap();
+        engine
+            .ingest("s", MicroBatch::new((0..1_000).collect()))
+            .unwrap();
+        // arm the faults only after ingest by rebuilding the injector
+        let mut cc = engine.cluster().cfg.clone();
+        cc.faults = Some(FaultPlan::seeded(5).panics(1.0).attempts(u32::MAX));
+        *engine.cluster_mut() = Cluster::new(cc);
+        let out = engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert!(out.degraded);
+        assert!(!out.report.exact);
+        assert!((out.value() - 500).unsigned_abs() <= 10, "got {}", out.value());
+    }
+
+    #[test]
     fn bad_builder_knobs_are_typed_errors() {
         assert!(matches!(
-            EngineBuilder::new().epsilon(0.0).build_resolved(None, None),
+            EngineBuilder::new().epsilon(0.0).build_resolved(None, None, None),
             Err(EngineError::BadEpsilon(_))
         ));
         let mut cfg = ReproConfig::default();
         cfg.backend = "warp-drive".into();
         assert!(matches!(
-            EngineBuilder::new().config(cfg).build_resolved(None, None),
+            EngineBuilder::new().config(cfg).build_resolved(None, None, None),
             Err(EngineError::Backend(_))
         ));
         // an injected backend carries its own dispatch: an explicit
@@ -1149,7 +1483,7 @@ mod tests {
             EngineBuilder::new()
                 .kernel_backend(Box::new(NativeBackend::new()))
                 .simd(SimdPolicy::ForceScalar)
-                .build_resolved(None, None),
+                .build_resolved(None, None, None),
             Err(EngineError::InvalidConfig(_))
         ));
     }

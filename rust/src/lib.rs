@@ -77,15 +77,15 @@ pub mod prelude {
         metrics::{MetricsReport, RunMetrics},
         netmodel::NetworkModel,
         pool::{ExecMode, ExecutorPool},
-        Cluster, ClusterConfig,
+        Cluster, ClusterConfig, FaultPlan, RetryPolicy, StageError,
     };
     pub use crate::config::ReproConfig;
     pub use crate::data::{
         BimodalGen, DataGenerator, Distribution, SortedBandsGen, UniformGen, ZipfGen,
     };
     pub use crate::engine::{
-        AlgoChoice, EngineBuilder, EngineCtx, EngineError, QuantileEngine, QuantileQuery,
-        QueryOutcome, Source,
+        AlgoChoice, DegradePolicy, EngineBuilder, EngineCtx, EngineError, QuantileEngine,
+        QuantileQuery, QueryOutcome, Source,
     };
     pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
     pub use crate::sketch::{

@@ -16,15 +16,18 @@
 //! repro bench ablation --n 8e6 --nodes 10
 //! repro bench json     --n 4e6 --out .
 //! repro stream         --batches 16 --batch-n 250000 --workload zipf --queries 0.5,0.95,0.99
+//! repro chaos          --n 2e6 --plan "seed=7,panic=0.02,straggler=0.1x4" --verify
 //! repro calibrate
 //! repro validate --n 2e5
 //! repro config
 //! ```
 //!
 //! Global flags: `--config <path>` (TOML), `--backend native|pjrt`,
-//! `--exec-mode sequential|threads`, `--simd auto|scalar|force`.
+//! `--exec-mode sequential|threads`, `--simd auto|scalar|force`,
+//! `--faults <plan>` (seeded fault-injection for any command).
 
 use anyhow::{bail, Result};
+use gkselect::cluster::FaultPlan;
 use gkselect::config::ReproConfig;
 use gkselect::data::Distribution;
 use gkselect::harness::{self, AlgoChoice};
@@ -52,6 +55,12 @@ COMMANDS:
              queries through the streaming service
              --batches <count> --batch-n <records> --workload uniform|zipf|hostile
              --queries 0.5,0.95,0.99 --query-every <ticks> --nodes <count> --verify
+  chaos      replay batch + stream queries under seeded fault injection and
+             report what the recovery layer did (retries, speculation,
+             degradations); --verify pins answers against a fault-free run
+             --n <count> --nodes <count> --seed <n> (canned plan)
+             --plan \"seed=7,panic=0.02,transient=0.05,straggler=0.1x4\"
+             --degrade fail|sketch --verify
   calibrate  measure this box's per-element costs
   validate   cross-check all algorithms vs the oracle (--n)
   config     print the effective config
@@ -63,6 +72,9 @@ GLOBAL FLAGS:
                      GKSELECT_EXEC_MODE=threads does the same)
   --simd <policy>    auto | scalar | force — band-scan SIMD dispatch for
                      the native backend (GKSELECT_SIMD does the same)
+  --faults <plan>    seeded fault-injection plan armed for any command
+                     (GKSELECT_FAULTS does the same; see `repro chaos`
+                     for the plan grammar)
 ";
 
 fn main() -> Result<()> {
@@ -87,11 +99,16 @@ fn main() -> Result<()> {
         let _: gkselect::runtime::SimdPolicy = sp.parse()?;
         cfg.runtime.simd = sp.to_string();
     }
+    if let Some(fp) = args.str_opt("faults") {
+        // validated here so a typo fails before any work runs
+        fp.parse::<FaultPlan>().map_err(anyhow::Error::msg)?;
+        cfg.faults.plan = fp.to_string();
+    }
 
     match args.path[0].as_str() {
         "quantile" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "algorithm", "n", "q",
+                "config", "backend", "exec-mode", "simd", "faults", "algorithm", "n", "q",
                 "distribution", "nodes", "verify",
             ])?;
             let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
@@ -108,7 +125,8 @@ fn main() -> Result<()> {
             match which {
                 "fig" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "nodes", "max-exp", "trials",
+                        "config", "backend", "exec-mode", "simd", "faults", "nodes", "max-exp",
+                        "trials",
                     ])?;
                     harness::bench_fig(
                         &cfg,
@@ -119,7 +137,7 @@ fn main() -> Result<()> {
                 }
                 "dist" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "n", "nodes", "trials",
+                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes", "trials",
                     ])?;
                     harness::bench_dist(
                         &cfg,
@@ -129,11 +147,15 @@ fn main() -> Result<()> {
                     )
                 }
                 "table4" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "nodes"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "simd", "faults", "nodes",
+                    ])?;
                     harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
                 }
                 "table5" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "nodes"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes",
+                    ])?;
                     harness::bench_table5(
                         &cfg,
                         args.u64_or("n", 4_000_000)?,
@@ -141,7 +163,9 @@ fn main() -> Result<()> {
                     )
                 }
                 "ablation" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "nodes"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes",
+                    ])?;
                     harness::bench_ablation(
                         &cfg,
                         args.u64_or("n", 8_000_000)?,
@@ -149,7 +173,9 @@ fn main() -> Result<()> {
                     )
                 }
                 "json" => {
-                    args.ensure_known(&["config", "backend", "exec-mode", "simd", "n", "out"])?;
+                    args.ensure_known(&[
+                        "config", "backend", "exec-mode", "simd", "faults", "n", "out",
+                    ])?;
                     harness::write_bench_json(
                         Path::new(&args.str_or("out", ".")),
                         args.u64_or("n", 4_000_000)?,
@@ -165,6 +191,7 @@ fn main() -> Result<()> {
                 "backend",
                 "exec-mode",
                 "simd",
+                "faults",
                 "batches",
                 "batch-n",
                 "workload",
@@ -196,12 +223,39 @@ fn main() -> Result<()> {
                 args.has("verify"),
             )
         }
+        "chaos" => {
+            args.ensure_known(&[
+                "config", "backend", "exec-mode", "simd", "faults", "n", "nodes", "plan", "seed",
+                "degrade", "verify",
+            ])?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            if let Some(d) = args.str_opt("degrade") {
+                // validated here so a typo fails before any work runs
+                let _: gkselect::engine::DegradePolicy = d.parse()?;
+                cfg.faults.degrade = d.to_string();
+            }
+            // --plan wins; --seed seeds a canned mixed plan; --faults /
+            // [faults] plan / GKSELECT_FAULTS are the usual fallback
+            let plan: FaultPlan = match args.str_opt("plan") {
+                Some(p) => p.parse().map_err(anyhow::Error::msg)?,
+                None if !cfg.faults.plan.is_empty() && !args.has("seed") => {
+                    cfg.faults.plan.parse().map_err(anyhow::Error::msg)?
+                }
+                None => FaultPlan::seeded(args.u64_or("seed", 7)?)
+                    .panics(0.02)
+                    .transients(0.05)
+                    .stragglers(0.10, 4.0),
+            };
+            harness::run_chaos(&cfg, args.u64_or("n", 2_000_000)?, plan, args.has("verify"))
+        }
         "calibrate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults"])?;
             harness::calibrate(&cfg)
         }
         "validate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd", "n"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "n"])?;
             harness::validate(&cfg, args.u64_or("n", 200_000)?)
         }
         "config" => {

@@ -21,7 +21,7 @@
 
 use crate::cluster::dataset::Dataset;
 use crate::cluster::shuffle::shuffle_by_range;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, StageError};
 use crate::select::SplitMix64;
 use crate::Key;
 
@@ -68,8 +68,14 @@ impl SortedDataset {
 }
 
 /// Run the full PSRS pipeline, charging the substrate for every
-/// synchronization and byte.
-pub fn psrs_sort(cluster: &mut Cluster, data: &Dataset<Key>, params: &PsrsParams) -> SortedDataset {
+/// synchronization and byte. Fallible like any multi-stage job: a stage
+/// that exhausts its task retries under the fault model surfaces as a
+/// typed [`StageError`].
+pub fn psrs_sort(
+    cluster: &mut Cluster,
+    data: &Dataset<Key>,
+    params: &PsrsParams,
+) -> Result<SortedDataset, StageError> {
     let p = cluster.cfg.partitions;
 
     // 1. per-partition reservoir sample
@@ -89,7 +95,7 @@ pub fn psrs_sort(cluster: &mut Cluster, data: &Dataset<Key>, params: &PsrsParams
             }
         }
         res
-    });
+    })?;
 
     // 2. collect samples (first stage boundary). This is an internal
     // action of RangePartitioner: we count its stage boundary but merge
@@ -121,17 +127,17 @@ pub fn psrs_sort(cluster: &mut Cluster, data: &Dataset<Key>, params: &PsrsParams
         let mut v = part.to_vec();
         v.sort_unstable();
         SizedOnly(v)
-    });
+    })?;
     let parts: Vec<Vec<Key>> = cluster
         .collect(sorted)
         .into_iter()
         .map(|SizedOnly(v)| v)
         .collect();
 
-    SortedDataset {
+    Ok(SortedDataset {
         data: Dataset::from_partitions(parts).expect("shuffle preserves partition count"),
         splitters,
-    }
+    })
 }
 
 /// Wrapper so the final action charges only task-status bytes: the sorted
@@ -155,7 +161,7 @@ mod tests {
         let data = dist.generator(11).generate(&mut c, n);
         let mut oracle = data.to_vec();
         oracle.sort_unstable();
-        let sorted = psrs_sort(&mut c, &data, &PsrsParams::default());
+        let sorted = psrs_sort(&mut c, &data, &PsrsParams::default()).unwrap();
         (c, sorted, oracle)
     }
 
@@ -215,7 +221,7 @@ mod tests {
     fn tiny_input_fewer_records_than_partitions() {
         let mut c = Cluster::new(ClusterConfig::local(2, 8));
         let data = Dataset::from_vec(vec![3, 1, 2], 8).unwrap();
-        let sorted = psrs_sort(&mut c, &data, &PsrsParams::default());
+        let sorted = psrs_sort(&mut c, &data, &PsrsParams::default()).unwrap();
         assert_eq!(sorted.data.to_vec(), vec![1, 2, 3]);
     }
 }

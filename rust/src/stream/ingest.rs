@@ -132,8 +132,11 @@ impl StreamIngestor {
         // the ingest-time sketch pass: same per-partition construction as
         // the batch path's round 1 (Bulk = radix sort + zero-slack
         // from_sorted), one O(1/ε) summary per partition
+        // a stage failure propagates here BEFORE seal_epoch runs, so a
+        // failed micro-batch leaves the store exactly unchanged — no
+        // partially sealed epoch to poison later queries
         let pending =
-            cluster.map_partitions(&data, |part, _| sketch_partition(variant, eps, part));
+            cluster.map_partitions(&data, |part, _| sketch_partition(variant, eps, part))?;
         let sketches = cluster.collect(pending);
 
         let epoch = store.seal_epoch(stream, data, sketches)?;

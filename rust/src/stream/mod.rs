@@ -36,6 +36,14 @@
 //! extraction fallback — a stale or hostile sketch costs one extra
 //! scan, never correctness.
 //!
+//! Ingest is **atomic under stage failure**: the epoch's partitions and
+//! sketch partials are built entirely on the executor pool *before* the
+//! store seals anything, so an ingest whose sketch stage exhausts its
+//! retry budget (`EngineError::StageFailed`) leaves the [`SketchStore`]
+//! byte-identical — no half-sealed epoch, no count drift — and the
+//! stream keeps answering exactly from the batches that did land
+//! (`tests/proptest_faults.rs` pins this in both exec modes).
+//!
 //! # Example
 //!
 //! Streams flow through the engine: `ingest` seals micro-batches,

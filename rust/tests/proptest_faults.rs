@@ -1,0 +1,259 @@
+//! Property tests for the fault-injection and recovery layer: for any
+//! random cluster geometry, dataset, and seeded [`FaultPlan`], in BOTH
+//! execution modes, a query either
+//!
+//! * returns the bit-identical fault-free exact answer (every injected
+//!   fault recovered within the retry budget), or
+//! * fails with a typed `EngineError::StageFailed`, or
+//! * degrades to an explicitly-marked ε-approximate answer under
+//!   `DegradePolicy::SketchAnswer` —
+//!
+//! and never panics and never returns a silently wrong exact value.
+//! Fault decisions are a pure function of the plan, so recovery tallies
+//! and outcomes must be identical across `Sequential` and `Threads`.
+
+use gkselect::algorithms::oracle_quantile;
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{Cluster, ClusterConfig, ExecMode, FaultPlan};
+use gkselect::engine::{
+    AlgoChoice, DegradePolicy, EngineBuilder, EngineError, QuantileEngine, QuantileQuery, Source,
+};
+use gkselect::stream::MicroBatch;
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+/// Random geometry stressing the recovery paths: mostly partitions ≫
+/// executors, sometimes square, sometimes the 1-executor degenerate
+/// case (where speculation has nowhere to run).
+fn gen_geometry(g: &mut Gen) -> (usize, usize) {
+    let executors = match g.usize_in(0, 3) {
+        0 => 1,
+        _ => g.usize_in(1, 6),
+    };
+    let partitions = match g.usize_in(0, 2) {
+        0 => executors,
+        _ => executors * g.usize_in(2, 8),
+    };
+    (executors, partitions)
+}
+
+fn gen_values(g: &mut Gen) -> Vec<Key> {
+    let n = g.usize_in(1, 2_000);
+    match g.usize_in(0, 2) {
+        0 => (0..n).map(|_| g.i32_in(-1_000_000_000, 999_999_999)).collect(),
+        1 => (0..n).map(|_| g.i32_in(0, 6)).collect(), // duplicate-heavy
+        _ => {
+            let mut v: Vec<Key> = (0..n).map(|_| g.i32_in(-40_000, 40_000)).collect();
+            v.sort_unstable();
+            v
+        }
+    }
+}
+
+/// A plan whose every failure is recoverable within the default retry
+/// budget: injected panics/transients persist for at most 3 attempts
+/// (`max_task_retries = 3` allows 4), executor loss kills tasks once,
+/// and stragglers never fail at all. Straggler multipliers avoid the
+/// `2.0` speculation boundary so win counts are mode-independent.
+fn gen_recoverable_plan(g: &mut Gen, executors: usize, partitions: usize) -> FaultPlan {
+    let mut plan = FaultPlan::seeded(g.u64())
+        .panics(g.f64_unit() * 0.3)
+        .transients(g.f64_unit() * 0.4)
+        .attempts(1 + g.usize_in(0, 2) as u32);
+    if g.bool() {
+        let mult = if g.bool() {
+            2.5 + g.f64_unit() * 3.0 // speculation launches and wins
+        } else {
+            1.0 + g.f64_unit() * 0.4 // below the detection threshold
+        };
+        plan = plan.stragglers(g.f64_unit() * 0.5, mult);
+    }
+    if g.bool() {
+        plan = plan.lose_executor(g.usize_in(0, 2) as u64, g.usize_in(0, executors - 1));
+    }
+    if g.bool() {
+        plan = plan.panic_task(g.usize_in(0, 2) as u64, g.usize_in(0, partitions - 1));
+    }
+    plan
+}
+
+/// Engine on an explicit local cluster: the explicit shape pins the
+/// fault wiring, so `GKSELECT_FAULTS` (e.g. the CI chaos job) cannot
+/// perturb what these properties measure.
+fn engine(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    faults: Option<FaultPlan>,
+) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(
+            ClusterConfig::local(executors, partitions)
+                .with_exec_mode(mode)
+                .with_fault_plan(faults),
+        )
+        .algorithm(AlgoChoice::GkSelect)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn prop_recoverable_faults_never_change_answers_in_either_mode() {
+    check("faults_recoverable_identical", 25, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let data = Dataset::from_vec(values, partitions).unwrap();
+        let plan = gen_recoverable_plan(g, executors, partitions);
+        let qs: Vec<f64> = (0..g.usize_in(1, 3)).map(|_| g.f64_unit()).collect();
+        let query = if qs.len() == 1 {
+            QuantileQuery::Single(qs[0])
+        } else {
+            QuantileQuery::Multi(qs.clone())
+        };
+
+        let clean = engine(executors, partitions, ExecMode::Sequential, None)
+            .execute(Source::Dataset(&data), query.clone())
+            .unwrap();
+        for (&q, &v) in qs.iter().zip(clean.values.iter()) {
+            assert_eq!(v, oracle_quantile(&data, q).unwrap(), "clean run q={q}");
+        }
+
+        let mut reports = Vec::new();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let out = engine(executors, partitions, mode, Some(plan.clone()))
+                .execute(Source::Dataset(&data), query.clone())
+                .unwrap_or_else(|e| {
+                    panic!("recoverable plan [{plan}] must never fail ({}): {e}", mode.label())
+                });
+            assert_eq!(
+                out.values, clean.values,
+                "faulted answers must be bit-identical to the fault-free run under [{plan}]"
+            );
+            assert!(out.report.exact && !out.degraded);
+            assert_eq!(out.report.rounds, clean.report.rounds, "recovery adds no rounds");
+            assert_eq!(out.report.data_scans, clean.report.data_scans);
+            reports.push(out.report);
+        }
+        let (seq, thr) = (&reports[0], &reports[1]);
+        assert_eq!(
+            (seq.faults_injected, seq.tasks_retried, seq.speculative_launched, seq.speculative_wins),
+            (thr.faults_injected, thr.tasks_retried, thr.speculative_launched, thr.speculative_wins),
+            "fault decisions must be mode-independent under [{plan}]"
+        );
+    });
+}
+
+#[test]
+fn prop_unrecoverable_faults_fail_typed_or_degrade_never_lie() {
+    check("faults_unrecoverable_typed", 20, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let data = Dataset::from_vec(values, partitions).unwrap();
+        let q = g.f64_unit();
+        let truth = oracle_quantile(&data, q).unwrap();
+        // failures persist past any retry budget; the rate decides how
+        // many stages they land on
+        let plan = FaultPlan::seeded(g.u64())
+            .panics(0.2 + g.f64_unit() * 0.8)
+            .attempts(u32::MAX);
+        let degrade = if g.bool() { DegradePolicy::Fail } else { DegradePolicy::SketchAnswer };
+
+        let mut outcomes: Vec<Result<Vec<Key>, ()>> = Vec::new();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut eng = EngineBuilder::new()
+                .cluster(
+                    ClusterConfig::local(executors, partitions)
+                        .with_exec_mode(mode)
+                        .with_fault_plan(Some(plan.clone())),
+                )
+                .algorithm(AlgoChoice::GkSelect)
+                .degrade_policy(degrade)
+                .build()
+                .unwrap();
+            match eng.execute(Source::Dataset(&data), QuantileQuery::Single(q)) {
+                Ok(out) => {
+                    if out.degraded {
+                        assert!(
+                            matches!(degrade, DegradePolicy::SketchAnswer),
+                            "only SketchAnswer may degrade"
+                        );
+                        assert!(!out.report.exact, "degraded answers must not claim exactness");
+                        assert!(out.report.degraded_queries >= 1);
+                        // the ε contract (engine default ε = 0.01, same
+                        // slack as `repro validate` gives merged sketches)
+                        let mut all = data.to_vec();
+                        all.sort_unstable();
+                        let n = all.len() as f64;
+                        let lo = all.partition_point(|&x| x < out.value()) as f64;
+                        let hi = all.partition_point(|&x| x <= out.value()) as f64;
+                        let target = q * n;
+                        let err = if target < lo {
+                            (lo - target) / n
+                        } else if target > hi {
+                            (target - hi) / n
+                        } else {
+                            0.0
+                        };
+                        assert!(err <= 5.0 * 0.01, "rank error {err:.4} > 5ε under [{plan}]");
+                    } else {
+                        // the plan happened to miss every stage this query
+                        // ran: the answer must be the exact one
+                        assert_eq!(out.value(), truth, "silently wrong value under [{plan}]");
+                        assert!(out.report.exact);
+                    }
+                    outcomes.push(Ok(out.values));
+                }
+                Err(EngineError::StageFailed { attempts, .. }) => {
+                    assert!(attempts >= 1);
+                    outcomes.push(Err(()));
+                }
+                Err(other) => panic!("expected StageFailed under [{plan}], got {other}"),
+            }
+        }
+        assert_eq!(
+            outcomes[0], outcomes[1],
+            "outcome (values or typed failure) must be mode-identical under [{plan}]"
+        );
+    });
+}
+
+#[test]
+fn prop_failed_ingest_leaves_the_sketch_store_unchanged() {
+    check("faults_ingest_atomic", 15, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let good: Vec<Key> =
+            (0..g.usize_in(1, 2_000)).map(|_| g.i32_in(-100_000, 100_000)).collect();
+        let bad: Vec<Key> =
+            (0..g.usize_in(1, 2_000)).map(|_| g.i32_in(-100_000, 100_000)).collect();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut eng = engine(executors, partitions, mode, None);
+            eng.ingest("s", MicroBatch::new(good.clone())).unwrap();
+            let (epochs, records) = {
+                let st = eng.store().stream("s").unwrap();
+                (st.live_epochs(), st.total_count())
+            };
+
+            // arm a persistent every-stage failure, then retry the ingest:
+            // it must fail typed and seal nothing
+            let mut cc = eng.cluster().cfg.clone();
+            cc.faults = Some(FaultPlan::seeded(g.u64()).panics(1.0).attempts(u32::MAX));
+            *eng.cluster_mut() = Cluster::new(cc);
+            let err = eng.ingest("s", MicroBatch::new(bad.clone())).unwrap_err();
+            assert!(matches!(err, EngineError::StageFailed { .. }), "{err}");
+            let st = eng.store().stream("s").unwrap();
+            assert_eq!(st.live_epochs(), epochs, "failed ingest must not seal an epoch");
+            assert_eq!(st.total_count(), records, "failed ingest must not change counts");
+
+            // disarm: the stream still answers exactly from the records
+            // that were actually sealed
+            let mut cc = eng.cluster().cfg.clone();
+            cc.faults = None;
+            *eng.cluster_mut() = Cluster::new(cc);
+            let q = g.f64_unit();
+            let out = eng.execute(Source::Stream("s"), QuantileQuery::Single(q)).unwrap();
+            let live = eng.store().stream("s").unwrap().live_dataset().unwrap();
+            assert_eq!(out.value(), oracle_quantile(&live, q).unwrap(), "q={q}");
+            assert!(out.report.exact && !out.degraded);
+        }
+    });
+}

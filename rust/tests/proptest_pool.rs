@@ -95,7 +95,7 @@ fn prop_map_partitions_values_bit_identical() {
                 // any misrouted or reordered partition shows up
                 let sum: i64 = part.iter().map(|&x| x as i64).sum();
                 (ctx.partition, ctx.executor, sum, part.to_vec())
-            });
+            }).unwrap();
             (pending.values, c.metrics.data_scans)
         };
         let (seq, seq_scans) = run(ExecMode::Sequential);

@@ -11,9 +11,11 @@ Two classes of check, per run (keyed by algorithm x exec_mode):
   --max-regress (default 25%) AND --min-delta-s absolute (noise floor);
   executor_utilization (threads runs) must not drop below baseline by
   more than --max-regress; simd_speedup (the simd_vs_scalar record) must
-  not drop below baseline by more than --max-regress. Performance checks
-  are skipped per-field when the baseline value sits under the
-  calibration floor (an uncalibrated baseline stores 0.0 there).
+  not drop below baseline by more than --max-regress;
+  fault_overhead_ratio (the fault_overhead record) must not grow past
+  baseline by more than --max-regress. Performance checks are skipped
+  per-field when the baseline value sits under the calibration floor
+  (an uncalibrated baseline stores 0.0 there).
 
 Schema evolution: a key that exists in the fresh JSON but not in the
 baseline is *not yet tracked* — reported as a note, never a failure —
@@ -45,7 +47,10 @@ only comparable within one runner class. To arm the 25% gates:
      (1 − --max-regress) (floor: --min-util);
    - simd_speedup on the simd_vs_scalar record: fresh ≥ baseline ×
      (1 − --max-regress) (floor: --min-speedup), guarding the SIMD
-     tile's ≥1.5x single-thread win on AVX2 runners.
+     tile's ≥1.5x single-thread win on AVX2 runners;
+   - fault_overhead_ratio on the fault_overhead record: fresh ≤
+     baseline × (1 + --max-regress) (floor: --min-ratio), guarding the
+     recovery layer's armed-but-idle cost (~1.0).
    Re-calibrate (repeat 1–2) whenever the runner class or the bench
    geometry changes; walls from different hardware are not comparable.
 """
@@ -82,6 +87,9 @@ def main():
                     help="baseline utilizations under this are skipped")
     ap.add_argument("--min-speedup", type=float, default=1.05,
                     help="baseline simd speedups under this are skipped")
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="baseline fault_overhead_ratios under this are "
+                         "uncalibrated; skip")
     args = ap.parse_args()
 
     base_runs = load_runs(args.baseline)
@@ -147,6 +155,22 @@ def main():
         elif key[1] == "threads":
             print(f"note: {name}: baseline executor_utilization uncalibrated "
                   f"({bu}); skipping utilization check")
+
+        # recovery-layer idle overhead (the fault_overhead record only):
+        # an armed-but-idle FaultPlan must stay ~free, so the ratio may
+        # not grow past the regression budget once calibrated
+        br = base.get("fault_overhead_ratio", 0.0)
+        fr = fresh.get("fault_overhead_ratio", 0.0)
+        if br >= args.min_ratio:
+            checked += 1
+            if fr > br * (1 + args.max_regress):
+                failures.append(
+                    f"{name}: fault_overhead_ratio {br:.3f} -> {fr:.3f} "
+                    f"(+{(fr / br - 1) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif "fault_overhead_ratio" in base:
+            print(f"note: {name}: baseline fault_overhead_ratio uncalibrated "
+                  f"({br}); skipping overhead check")
 
         # SIMD tile throughput win (the simd_vs_scalar record only)
         bs = base.get("simd_speedup", 0.0)
