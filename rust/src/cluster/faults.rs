@@ -437,6 +437,9 @@ pub struct FaultContext<'a> {
     pub retry: RetryPolicy,
     pub stage: u64,
     pub executors: usize,
+    /// Collect per-attempt [`AttemptRecord`](crate::obs::AttemptRecord)s
+    /// for the tracer (off by default — records cost allocations).
+    pub trace: bool,
 }
 
 impl FaultContext<'static> {
@@ -447,6 +450,7 @@ impl FaultContext<'static> {
             retry: RetryPolicy::default(),
             stage: 0,
             executors,
+            trace: false,
         }
     }
 }

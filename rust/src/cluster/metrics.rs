@@ -4,6 +4,9 @@
 //! `repro bench table5` can print *measured* rounds / shuffles / persists /
 //! network volume per algorithm instead of asymptotic claims.
 
+use crate::obs::stats::stage_stats;
+use crate::obs::StageStats;
+
 /// Raw counters accumulated by the substrate during one run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
@@ -51,6 +54,11 @@ pub struct RunMetrics {
     /// accumulated across stages and indexed by executor — the
     /// utilization / skew ledger.
     pub executor_busy_secs: Vec<f64>,
+    /// Modelled per-task durations (µs) of each `map_partitions` stage,
+    /// one inner vector per stage in execution order — the raw input of
+    /// the [`StageStats`] latency sketches. Virtual-clock µs, so the
+    /// values are deterministic and mode-independent.
+    pub stage_attempt_us: Vec<Vec<u32>>,
     /// Injected faults that actually fired (panics, transients,
     /// executor losses, stragglers — real caught panics don't count).
     pub faults_injected: u64,
@@ -94,6 +102,7 @@ impl RunMetrics {
             driver_compute_secs: self.driver_compute_secs,
             tree_levels: self.tree_levels,
             stage_walls_len: self.stage_walls.len(),
+            stage_attempt_us_len: self.stage_attempt_us.len(),
             wall_stage_secs: self.wall_stage_secs,
             executor_busy_secs: self.executor_busy_secs.clone(),
             faults_injected: self.faults_injected,
@@ -132,6 +141,7 @@ impl RunMetrics {
             driver_compute_secs: self.driver_compute_secs - base.driver_compute_secs,
             tree_levels: self.tree_levels - base.tree_levels,
             stage_walls: self.stage_walls[base.stage_walls_len..].to_vec(),
+            stage_attempt_us: self.stage_attempt_us[base.stage_attempt_us_len..].to_vec(),
             wall_stage_secs: self.wall_stage_secs - base.wall_stage_secs,
             executor_busy_secs: self
                 .executor_busy_secs
@@ -195,6 +205,7 @@ pub struct MetricsMark {
     driver_compute_secs: f64,
     tree_levels: u64,
     stage_walls_len: usize,
+    stage_attempt_us_len: usize,
     wall_stage_secs: f64,
     executor_busy_secs: Vec<f64>,
     faults_injected: u64,
@@ -231,6 +242,11 @@ pub struct MetricsReport {
     pub wall_stage_secs: f64,
     /// Real per-executor busy seconds (utilization / skew ledger).
     pub executor_busy_secs: Vec<f64>,
+    /// Per-stage task-latency summaries (p50/p95/p99/max, virtual-clock
+    /// µs) sketched with our own GK core from
+    /// [`RunMetrics::stage_attempt_us`] — one entry per
+    /// `map_partitions` stage.
+    pub stage_stats: Vec<StageStats>,
     /// Σ busy / (E × Σ wall), from [`RunMetrics::executor_utilization`].
     pub executor_utilization: f64,
     /// max busy / mean busy, from [`RunMetrics::busy_skew`].
@@ -284,6 +300,7 @@ impl MetricsReport {
             stage_walls: m.stage_walls.clone(),
             wall_stage_secs: m.wall_stage_secs,
             executor_busy_secs: m.executor_busy_secs.clone(),
+            stage_stats: stage_stats(&m.stage_attempt_us),
             executor_utilization: m.executor_utilization(),
             busy_skew: m.busy_skew(),
             simd_lane_width: 1,
@@ -328,6 +345,13 @@ impl MetricsReport {
         self.speculative_wins += other.speculative_wins;
         self.degraded_queries += other.degraded_queries;
         self.stage_walls.extend_from_slice(&other.stage_walls);
+        // concatenate stage stats, renumbering the absorbed run's stages
+        // to follow this one's
+        let offset = self.stage_stats.len() as u64;
+        self.stage_stats.extend(other.stage_stats.iter().map(|s| StageStats {
+            stage: offset + s.stage,
+            ..*s
+        }));
         self.wall_stage_secs += other.wall_stage_secs;
         for (i, &busy) in other.executor_busy_secs.iter().enumerate() {
             if i < self.executor_busy_secs.len() {
@@ -556,6 +580,27 @@ mod tests {
         let z = m.since(&m.mark());
         assert_eq!(z.faults_injected, 0);
         assert_eq!(z.tasks_retried, 0);
+    }
+
+    #[test]
+    fn stage_stats_flow_through_reports_since_and_absorb() {
+        let m = RunMetrics {
+            stage_attempt_us: vec![vec![100, 200], vec![300]],
+            ..Default::default()
+        };
+        let mut r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.stage_stats.len(), 2);
+        assert_eq!(r.stage_stats[1].max_us, 300);
+        let other = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        r.absorb(&other);
+        assert_eq!(r.stage_stats.len(), 4);
+        assert_eq!(r.stage_stats[2].stage, 2, "absorbed stages renumber");
+        // since() slices the per-stage suffix like stage_walls
+        let base = m.mark();
+        let mut now = m.clone();
+        now.stage_attempt_us.push(vec![400]);
+        let d = now.since(&base);
+        assert_eq!(d.stage_attempt_us, vec![vec![400]]);
     }
 
     #[test]

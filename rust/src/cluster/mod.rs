@@ -138,6 +138,8 @@ pub use pool::ExecMode;
 use pool::ExecutorPool;
 use simclock::SimClock;
 
+use crate::obs::{SpanKind, Tracer};
+
 /// Static description of the simulated cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -307,6 +309,9 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     pub clock: SimClock,
     pub metrics: RunMetrics,
+    /// Span collector — disabled (all hooks no-ops) until the engine
+    /// arms it for a non-`Null` [`crate::obs::TraceSink`].
+    pub tracer: Tracer,
     /// Executor pool behind `map_partitions` (both execution strategies).
     pool: ExecutorPool,
     /// Fault injector built from `cfg.faults`; consulted per task attempt.
@@ -326,12 +331,14 @@ impl Cluster {
             cfg,
             clock: SimClock::new(),
             metrics: RunMetrics::default(),
+            tracer: Tracer::disabled(),
             pool,
             injector,
         }
     }
 
-    /// Reset clocks and metrics between trials (data stays put).
+    /// Reset clocks and metrics between trials (data stays put; the
+    /// tracer keeps its arming and any open trace).
     pub fn reset_run(&mut self) {
         self.clock = SimClock::new();
         self.metrics = RunMetrics::default();
@@ -372,16 +379,30 @@ impl Cluster {
         // are keyed on (0-based from the last `reset_run`).
         let stage_index = self.metrics.data_scans;
         self.metrics.data_scans += 1;
+        let sid = self.tracer.open(
+            SpanKind::Stage,
+            format!("stage {stage_index}"),
+            self.clock.elapsed_secs(),
+        );
+        self.tracer.set_stage(sid, stage_index);
         let executor_of = |p: usize| self.cfg.executor_of(p);
         let fx = FaultContext {
             injector: self.injector.as_ref(),
             retry: self.cfg.retry,
             stage: stage_index,
             executors: self.cfg.executors,
+            trace: self.tracer.is_enabled(),
         };
-        let stage = match self.cfg.exec_mode {
-            ExecMode::Sequential => self.pool.run_sequential(data, executor_of, &f, &fx)?,
-            ExecMode::Threads => self.pool.run_threaded(data, executor_of, &f, &fx)?,
+        let run = match self.cfg.exec_mode {
+            ExecMode::Sequential => self.pool.run_sequential(data, executor_of, &f, &fx),
+            ExecMode::Threads => self.pool.run_threaded(data, executor_of, &f, &fx),
+        };
+        let stage = match run {
+            Ok(stage) => stage,
+            Err(err) => {
+                self.tracer.close(sid, self.clock.elapsed_secs());
+                return Err(err);
+            }
         };
         self.metrics.wall_stage_secs += stage.wall_secs;
         self.metrics.stage_walls.push(stage.wall_secs);
@@ -400,9 +421,16 @@ impl Cluster {
         self.metrics.tasks_retried += stage.faults.tasks_retried;
         self.metrics.speculative_launched += stage.faults.speculative_launched;
         self.metrics.speculative_wins += stage.faults.speculative_wins;
+        // per-task modelled durations (µs) feed the StageStats latency
+        // sketches — always on, independent of tracing
+        self.metrics
+            .stage_attempt_us
+            .push(stage.times.iter().map(|&t| (t * 1e6).round() as u32).collect());
         // retry re-launch latency: serial, on the critical path, charged
         // now rather than deferred to the consuming action
         self.clock.advance(stage.faults.backoff_secs);
+        self.tracer.record_attempts(sid, &stage.attempts);
+        self.tracer.close(sid, self.clock.elapsed_secs());
         Ok(PerPartition {
             values: stage.values,
             times: stage.times,
@@ -462,6 +490,12 @@ impl Cluster {
         depth: Option<usize>,
         mut f: impl FnMut(R, R) -> R,
     ) -> Option<R> {
+        let rid = self.tracer.open(
+            SpanKind::Reduce,
+            "tree-reduce",
+            self.clock.elapsed_secs(),
+        );
+        self.tracer.attr(rid, "partials", pending.values.len());
         let compute = self.stage_elapsed(&pending.times);
         self.clock.advance(compute);
 
@@ -469,6 +503,7 @@ impl Cluster {
         if level.is_empty() {
             self.metrics.rounds += 1;
             self.metrics.stage_boundaries += 1;
+            self.tracer.close(rid, self.clock.elapsed_secs());
             return None;
         }
         let branch = branch_factor(level.len(), depth);
@@ -521,6 +556,8 @@ impl Cluster {
         }
         self.metrics.rounds += 1;
         self.metrics.stage_boundaries += 1;
+        self.tracer.attr(rid, "levels", self.metrics.tree_levels);
+        self.tracer.close(rid, self.clock.elapsed_secs());
         root
     }
 

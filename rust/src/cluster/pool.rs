@@ -40,6 +40,7 @@ use std::time::Instant;
 use super::dataset::Dataset;
 use super::faults::{FaultContext, FaultKind, FaultLedger, StageError, SPECULATION_THRESHOLD};
 use super::PartitionCtx;
+use crate::obs::{AttemptOutcome, AttemptRecord};
 
 /// How `map_partitions` stages execute.
 ///
@@ -100,6 +101,10 @@ pub struct StageOutput<R> {
     pub busy_secs: Vec<f64>,
     /// Injected-fault / retry / speculation tallies for this stage.
     pub faults: FaultLedger,
+    /// Per-attempt records for the tracer (empty unless
+    /// `FaultContext::trace` was set). Ordering across executors is
+    /// unspecified; `Tracer::record_attempts` sorts before stitching.
+    pub attempts: Vec<AttemptRecord>,
 }
 
 /// One task's fate after retries and speculation.
@@ -110,6 +115,8 @@ struct TaskOutcome<R> {
     /// Measured seconds of the successful attempt (busy ledger).
     busy_secs: f64,
     ledger: FaultLedger,
+    /// Every attempt this task ran (traced stages only).
+    attempts: Vec<AttemptRecord>,
 }
 
 /// Run one partition task to completion (or retry exhaustion) under the
@@ -125,6 +132,7 @@ where
     F: Fn(&[T], PartitionCtx) -> R,
 {
     let mut ledger = FaultLedger::default();
+    let mut attempts: Vec<AttemptRecord> = Vec::new();
     let mut attempt = 0u32;
     loop {
         let injected = fx
@@ -132,6 +140,21 @@ where
             .and_then(|i| i.fault_for(fx.stage, ctx.partition, ctx.executor, attempt));
         if let Some(kind) = injected.filter(FaultKind::is_fatal) {
             ledger.faults_injected += 1;
+            if fx.trace {
+                attempts.push(AttemptRecord {
+                    partition: ctx.partition,
+                    executor: ctx.executor,
+                    attempt,
+                    outcome: match kind {
+                        FaultKind::Transient => AttemptOutcome::Transient,
+                        FaultKind::ExecutorLost => AttemptOutcome::Lost,
+                        _ => AttemptOutcome::Panic,
+                    },
+                    model_secs: 0.0,
+                    wall_secs: 0.0,
+                    fault: Some(kind.failure_reason()),
+                });
+            }
             if attempt >= fx.retry.max_task_retries {
                 return Err(StageError {
                     stage: fx.stage,
@@ -150,21 +173,77 @@ where
         let dt = start.elapsed().as_secs_f64();
         match run {
             Ok(value) => {
+                let mut record_outcome = AttemptOutcome::Ok;
+                let mut record_model = dt;
+                let mut record_fault: Option<String> = None;
+                let mut duplicate: Option<AttemptRecord> = None;
                 let model_secs = match injected {
-                    Some(FaultKind::Straggler(mult)) => {
+                    Some(kind @ FaultKind::Straggler(mult)) => {
                         ledger.faults_injected += 1;
-                        straggled_secs(dt, mult, fx, &mut ledger)
+                        let launched_before = ledger.speculative_launched;
+                        let wins_before = ledger.speculative_wins;
+                        let model = straggled_secs(dt, mult, fx, &mut ledger);
+                        // the straggled original runs (or would run) the
+                        // full slowed duration, whatever the stage charges
+                        record_model = dt * mult;
+                        record_fault = Some(kind.failure_reason());
+                        if fx.trace && ledger.speculative_launched > launched_before {
+                            let dup_won = ledger.speculative_wins > wins_before;
+                            record_outcome = if dup_won {
+                                AttemptOutcome::SpeculativeLoss
+                            } else {
+                                AttemptOutcome::SpeculativeWin
+                            };
+                            duplicate = Some(AttemptRecord {
+                                partition: ctx.partition,
+                                executor: (ctx.executor + 1) % fx.executors,
+                                attempt,
+                                outcome: if dup_won {
+                                    AttemptOutcome::SpeculativeWin
+                                } else {
+                                    AttemptOutcome::SpeculativeLoss
+                                },
+                                model_secs: 2.0 * dt,
+                                wall_secs: dt,
+                                fault: Some("speculative duplicate".to_string()),
+                            });
+                        }
+                        model
                     }
                     _ => dt,
                 };
+                if fx.trace {
+                    attempts.push(AttemptRecord {
+                        partition: ctx.partition,
+                        executor: ctx.executor,
+                        attempt,
+                        outcome: record_outcome,
+                        model_secs: record_model,
+                        wall_secs: dt,
+                        fault: record_fault,
+                    });
+                    attempts.extend(duplicate);
+                }
                 return Ok(TaskOutcome {
                     value,
                     model_secs,
                     busy_secs: dt,
                     ledger,
+                    attempts,
                 });
             }
             Err(panic) => {
+                if fx.trace {
+                    attempts.push(AttemptRecord {
+                        partition: ctx.partition,
+                        executor: ctx.executor,
+                        attempt,
+                        outcome: AttemptOutcome::Panic,
+                        model_secs: dt,
+                        wall_secs: dt,
+                        fault: Some(panic_message(panic.as_ref())),
+                    });
+                }
                 if attempt >= fx.retry.max_task_retries {
                     return Err(StageError {
                         stage: fx.stage,
@@ -261,6 +340,7 @@ impl ExecutorPool {
         let mut times = Vec::with_capacity(num_partitions);
         let mut busy_secs = vec![0.0_f64; self.executors];
         let mut faults = FaultLedger::default();
+        let mut attempts = Vec::new();
         for p in 0..num_partitions {
             let executor = executor_of(p);
             let ctx = PartitionCtx {
@@ -273,6 +353,7 @@ impl ExecutorPool {
             times.push(task.model_secs);
             busy_secs[executor] += task.busy_secs;
             faults.absorb(&task.ledger);
+            attempts.extend(task.attempts);
         }
         Ok(StageOutput {
             values,
@@ -280,6 +361,7 @@ impl ExecutorPool {
             wall_secs: wall_start.elapsed().as_secs_f64(),
             busy_secs,
             faults,
+            attempts,
         })
     }
 
@@ -305,8 +387,10 @@ impl ExecutorPool {
         let queues = self.queues(num_partitions, executor_of);
         let wall_start = Instant::now();
         // per executor: (partition, value, model secs) triples + busy sum
-        // + fault ledger, or the executor's first stage failure
-        type ExecResult<R> = Result<(Vec<(usize, R, f64)>, f64, FaultLedger), StageError>;
+        // + fault ledger + attempt records, or the executor's first
+        // stage failure
+        type ExecResult<R> =
+            Result<(Vec<(usize, R, f64)>, f64, FaultLedger, Vec<AttemptRecord>), StageError>;
         let per_exec: Vec<ExecResult<R>> = std::thread::scope(|scope| {
             let f = &f;
             let handles: Vec<_> = queues
@@ -317,6 +401,7 @@ impl ExecutorPool {
                         let mut out = Vec::with_capacity(queue.len());
                         let mut busy = 0.0_f64;
                         let mut faults = FaultLedger::default();
+                        let mut attempts = Vec::new();
                         for &p in queue {
                             let ctx = PartitionCtx {
                                 partition: p,
@@ -326,9 +411,10 @@ impl ExecutorPool {
                             let task = run_task(f, data.partition(p), ctx, fx)?;
                             busy += task.busy_secs;
                             faults.absorb(&task.ledger);
+                            attempts.extend(task.attempts);
                             out.push((p, task.value, task.model_secs));
                         }
-                        Ok((out, busy, faults))
+                        Ok((out, busy, faults, attempts))
                     })
                 })
                 .collect();
@@ -367,9 +453,11 @@ impl ExecutorPool {
         let mut times = vec![0.0_f64; num_partitions];
         let mut busy_secs = Vec::with_capacity(self.executors);
         let mut faults = FaultLedger::default();
-        for (outs, busy, ledger) in results {
+        let mut attempts = Vec::new();
+        for (outs, busy, ledger, recs) in results {
             busy_secs.push(busy);
             faults.absorb(&ledger);
+            attempts.extend(recs);
             for (p, value, dt) in outs {
                 values[p] = Some(value);
                 times[p] = dt;
@@ -384,6 +472,7 @@ impl ExecutorPool {
             wall_secs,
             busy_secs,
             faults,
+            attempts,
         })
     }
 }
@@ -412,6 +501,7 @@ mod tests {
             retry,
             stage: 0,
             executors: 3,
+            trace: false,
         }
     }
 
@@ -540,6 +630,7 @@ mod tests {
             retry: RetryPolicy::default().with_max_task_retries(1),
             stage: 7,
             executors: 2,
+            trace: false,
         };
         let hook = std::panic::take_hook();
         std::panic::set_hook(Box::new(|_| {})); // silence expected unwinds
@@ -575,6 +666,7 @@ mod tests {
             retry: RetryPolicy::default(),
             stage: 0,
             executors: 1,
+            trace: false,
         };
         let pool1 = ExecutorPool::new(1);
         let out1 = pool1.run_sequential(&d, |_| 0, f, &fx1).unwrap();

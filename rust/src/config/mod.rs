@@ -6,6 +6,7 @@
 use crate::cluster::netmodel::NetworkModel;
 use crate::cluster::{ClusterConfig, ExecMode, FaultPlan, RetryPolicy};
 use crate::engine::DegradePolicy;
+use crate::obs::TraceMode;
 use crate::runtime::{KernelBackend, SimdPolicy};
 use crate::util::minitoml::{self, Document, Section, Value};
 use anyhow::{Context, Result};
@@ -108,6 +109,16 @@ pub struct RuntimeSection {
     pub simd: String,
 }
 
+/// Observability section (converted into a
+/// [`crate::obs::TraceMode`] on the engine builder).
+#[derive(Debug, Clone, Default)]
+pub struct ObsSection {
+    /// Trace sink in the [`crate::obs::TraceMode`] grammar:
+    /// "off" | "memory" | "chrome:<path>" | a bare `*.json` path.
+    /// Empty = defer to the `GKSELECT_TRACE` env var (unset → off).
+    pub trace: String,
+}
+
 /// Fault-injection and recovery section (converted into a
 /// [`FaultPlan`] + [`RetryPolicy`] pair on the cluster config).
 #[derive(Debug, Clone)]
@@ -205,6 +216,7 @@ pub struct ReproConfig {
     pub stream: StreamSection,
     pub runtime: RuntimeSection,
     pub faults: FaultsSection,
+    pub obs: ObsSection,
     /// Kernel backend: "native" | "pjrt".
     pub backend: String,
     /// Where `make artifacts` put the HLO text.
@@ -220,6 +232,7 @@ impl Default for ReproConfig {
             stream: StreamSection::default(),
             runtime: RuntimeSection::default(),
             faults: FaultsSection::default(),
+            obs: ObsSection::default(),
             backend: "native".into(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
@@ -263,6 +276,13 @@ impl ReproConfig {
                 .parse::<DegradePolicy>()
                 .with_context(|| format!("[faults] degrade = {:?}", cfg.faults.degrade))?;
         }
+        if !cfg.obs.trace.is_empty() {
+            // fail config loading, not the first engine build
+            cfg.obs
+                .trace
+                .parse::<TraceMode>()
+                .with_context(|| format!("[obs] trace = {:?}", cfg.obs.trace))?;
+        }
         Ok(cfg)
     }
 
@@ -275,6 +295,7 @@ impl ReproConfig {
         let stream = Section(doc.get("stream"));
         let runtime = Section(doc.get("runtime"));
         let faults = Section(doc.get("faults"));
+        let obs = Section(doc.get("obs"));
         Self {
             cluster: ClusterSection {
                 nodes: cluster.int_or("nodes", d.cluster.nodes as i64) as usize,
@@ -322,6 +343,9 @@ impl ReproConfig {
                 backoff_ms: faults.float_or("backoff_ms", d.faults.backoff_ms),
                 speculation: faults.bool_or("speculation", d.faults.speculation),
                 degrade: faults.str_or("degrade", &d.faults.degrade),
+            },
+            obs: ObsSection {
+                trace: obs.str_or("trace", &d.obs.trace),
             },
             backend: root.str_or("backend", &d.backend),
             artifacts_dir: PathBuf::from(
@@ -482,6 +506,10 @@ impl ReproConfig {
         if !self.faults.degrade.is_empty() {
             f.insert("degrade".into(), Value::Str(self.faults.degrade.clone()));
         }
+        if !self.obs.trace.is_empty() {
+            let o = doc.entry("obs".into()).or_default();
+            o.insert("trace".into(), Value::Str(self.obs.trace.clone()));
+        }
         minitoml::serialize(&doc)
     }
 }
@@ -601,6 +629,24 @@ mod tests {
         assert!(format!("{err:#}").contains("plan"));
         let err = ReproConfig::from_toml("[faults]\ndegrade = \"explode\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("degrade"));
+    }
+
+    #[test]
+    fn obs_section_roundtrips_and_validates() {
+        let mut c = ReproConfig::default();
+        assert_eq!(c.obs.trace, "");
+        // the empty default stays out of the serialized form
+        assert!(!c.to_toml().contains("[obs]"));
+        c.obs.trace = "chrome:out/t.json".into();
+        let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.obs.trace, "chrome:out/t.json");
+        assert_eq!(
+            back.obs.trace.parse::<TraceMode>().unwrap(),
+            TraceMode::Chrome(PathBuf::from("out/t.json"))
+        );
+        // a bad mode fails at load time with section context
+        let err = ReproConfig::from_toml("[obs]\ntrace = \"perfetto\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("trace"));
     }
 
     #[test]

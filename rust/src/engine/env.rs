@@ -16,6 +16,7 @@
 
 use super::EngineError;
 use crate::cluster::{ExecMode, FaultPlan};
+use crate::obs::TraceMode;
 use crate::runtime::SimdPolicy;
 
 /// Environment variable selecting the executor pool mode
@@ -33,6 +34,12 @@ pub const SIMD_VAR: &str = "GKSELECT_SIMD";
 /// `seed=7,panic=0.02,straggler=0.1x4`) — the CI toggle that re-runs
 /// the whole suite under injection.
 pub const FAULTS_VAR: &str = "GKSELECT_FAULTS";
+
+/// Environment variable selecting the trace sink
+/// (`off` | `memory` | `chrome:<path>` | a bare `*.json` path) — lets
+/// CI or a shell capture Perfetto traces from any `repro` invocation
+/// without touching flags.
+pub const TRACE_VAR: &str = "GKSELECT_TRACE";
 
 /// Parse an execution mode from a raw variable value. Pure — the
 /// testable core of [`exec_mode`].
@@ -76,6 +83,20 @@ pub fn parse_faults(raw: Option<&str>) -> Result<Option<FaultPlan>, EngineError>
     }
 }
 
+/// Parse a trace mode from a raw variable value. Pure — the testable
+/// core of [`trace`].
+pub fn parse_trace(raw: Option<&str>) -> Result<Option<TraceMode>, EngineError> {
+    match raw {
+        None => Ok(None),
+        Some("") => Ok(None),
+        Some(v) => v.parse::<TraceMode>().map(Some).map_err(|_| EngineError::InvalidEnv {
+            var: TRACE_VAR,
+            value: v.to_string(),
+            expected: "off|memory|chrome:<path>|<path>.json",
+        }),
+    }
+}
+
 /// Read `GKSELECT_EXEC_MODE` from the process environment.
 pub fn exec_mode() -> Result<Option<ExecMode>, EngineError> {
     let raw = std::env::var(EXEC_MODE_VAR).ok();
@@ -94,6 +115,12 @@ pub fn faults() -> Result<Option<FaultPlan>, EngineError> {
     parse_faults(raw.as_deref())
 }
 
+/// Read `GKSELECT_TRACE` from the process environment.
+pub fn trace() -> Result<Option<TraceMode>, EngineError> {
+    let raw = std::env::var(TRACE_VAR).ok();
+    parse_trace(raw.as_deref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +133,28 @@ mod tests {
         assert_eq!(parse_simd_policy(Some("")).unwrap(), None);
         assert_eq!(parse_faults(None).unwrap(), None);
         assert_eq!(parse_faults(Some("")).unwrap(), None);
+        assert_eq!(parse_trace(None).unwrap(), None);
+        assert_eq!(parse_trace(Some("")).unwrap(), None);
+    }
+
+    #[test]
+    fn trace_modes_parse_and_reject() {
+        use std::path::PathBuf;
+        assert_eq!(parse_trace(Some("off")).unwrap(), Some(TraceMode::Off));
+        assert_eq!(parse_trace(Some("memory")).unwrap(), Some(TraceMode::Memory));
+        assert_eq!(
+            parse_trace(Some("chrome:/tmp/t.json")).unwrap(),
+            Some(TraceMode::Chrome(PathBuf::from("/tmp/t.json")))
+        );
+        assert_eq!(
+            parse_trace(Some("trace.json")).unwrap(),
+            Some(TraceMode::Chrome(PathBuf::from("trace.json")))
+        );
+        let err = parse_trace(Some("perfetto")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(TRACE_VAR), "{msg}");
+        assert!(msg.contains("perfetto"), "{msg}");
+        assert!(msg.contains("chrome:<path>"), "{msg}");
     }
 
     #[test]

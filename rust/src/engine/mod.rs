@@ -67,6 +67,7 @@ use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
 use crate::cluster::{Cluster, ClusterConfig, ExecMode, FaultPlan, RetryPolicy, StageError};
 use crate::config::ReproConfig;
+use crate::obs::{SpanKind, Trace, TraceMode, TraceSink};
 use crate::runtime::{backend_from_name, KernelBackend, SimdPolicy};
 use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor};
 use crate::Key;
@@ -303,6 +304,16 @@ impl QuantileQuery {
             Self::Rank(k) => vec![rank_to_quantile(*k, n)],
         }
     }
+
+    /// Short plan-shape label for trace root spans and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Single(_) => "single",
+            Self::Multi(_) => "multi",
+            Self::Rank(_) => "rank",
+            Self::Sketched { .. } => "sketched",
+        }
+    }
 }
 
 /// A quantile `q` whose [`crate::target_rank`] is exactly `k` — how
@@ -353,12 +364,23 @@ pub struct QueryOutcome {
     /// told so explicitly rather than discovering it from a wrong exact
     /// value.
     pub degraded: bool,
+    /// The span tree of exactly this query, present when the engine was
+    /// built with a span-collecting sink ([`TraceMode::Memory`] or
+    /// [`TraceMode::Chrome`]); `None` under the default
+    /// [`TraceSink::Null`], which leaves the rest of the outcome
+    /// byte-identical to a tracing-disabled run.
+    pub trace: Option<Trace>,
 }
 
 impl QueryOutcome {
     /// The first (for single-value plans: the only) answer.
     pub fn value(&self) -> Key {
         self.values[0]
+    }
+
+    /// The query's span tree, when the engine collects one.
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
     }
 }
 
@@ -368,6 +390,7 @@ impl From<Outcome> for QueryOutcome {
             values: vec![o.value],
             report: o.report,
             degraded: false,
+            trace: None,
         }
     }
 }
@@ -378,6 +401,7 @@ impl From<MultiOutcome> for QueryOutcome {
             values: o.values,
             report: o.report,
             degraded: false,
+            trace: None,
         }
     }
 }
@@ -502,6 +526,7 @@ pub struct EngineBuilder {
     faults: Option<FaultPlan>,
     retry: Option<RetryPolicy>,
     degrade: Option<DegradePolicy>,
+    trace: Option<TraceMode>,
 }
 
 impl EngineBuilder {
@@ -625,11 +650,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Select the trace sink: where per-query span trees go. Wins over
+    /// the `[obs]` config section and `GKSELECT_TRACE`; the default
+    /// ([`TraceMode::Off`]) keeps the tracer disarmed so queries pay
+    /// nothing.
+    pub fn trace(mut self, mode: TraceMode) -> Self {
+        self.trace = Some(mode);
+        self
+    }
+
     pub fn build(self) -> Result<QuantileEngine, EngineError> {
         let env_exec = env::exec_mode()?;
         let env_simd = env::simd_policy()?;
         let env_faults = env::faults()?;
-        self.build_resolved(env_exec, env_simd, env_faults)
+        let env_trace = env::trace()?;
+        self.build_resolved(env_exec, env_simd, env_faults, env_trace)
     }
 
     /// [`Self::build`] with the env layer injected — the pure core the
@@ -639,12 +674,14 @@ impl EngineBuilder {
         env_exec: Option<ExecMode>,
         env_simd: Option<SimdPolicy>,
         env_faults: Option<FaultPlan>,
+        env_trace: Option<TraceMode>,
     ) -> Result<QuantileEngine, EngineError> {
         let cfg = self.config.unwrap_or_default();
 
         let simd = resolve_simd(self.simd, &cfg.runtime.simd, env_simd)?;
         let exec = resolve_exec_mode(self.exec_mode, &cfg.cluster.exec_mode, env_exec)?;
         let faults = resolve_faults(self.faults.clone(), &cfg.faults.plan, env_faults)?;
+        let trace = resolve_trace(self.trace.clone(), &cfg.obs.trace, env_trace)?;
         let retry = self.retry.unwrap_or_else(|| cfg.faults.to_retry_policy());
         let degrade = match self.degrade {
             Some(d) => d,
@@ -782,15 +819,21 @@ impl EngineBuilder {
             .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?
             .with_variant(variant);
 
+        let sink = TraceSink::from_mode(trace);
+        let mut cluster = Cluster::new(cc);
+        cluster.tracer.set_enabled(sink.wants_spans());
+
         Ok(QuantileEngine {
             choice,
             strategy,
-            cluster: Cluster::new(cc),
+            cluster,
             backend,
             store,
             ingestor,
             gk_params,
             degrade,
+            sink,
+            trace_seq: 0,
         })
     }
 }
@@ -832,6 +875,24 @@ fn resolve_simd(
     Ok(env.unwrap_or(SimdPolicy::Auto))
 }
 
+/// Builder > config file > env for the trace sink; `Off` when nothing
+/// speaks.
+fn resolve_trace(
+    builder: Option<TraceMode>,
+    file: &str,
+    env: Option<TraceMode>,
+) -> Result<TraceMode, EngineError> {
+    if let Some(m) = builder {
+        return Ok(m);
+    }
+    if !file.is_empty() {
+        return file
+            .parse::<TraceMode>()
+            .map_err(|e| EngineError::InvalidConfig(format!("[obs] trace: {e:#}")));
+    }
+    Ok(env.unwrap_or(TraceMode::Off))
+}
+
 /// Builder > config file > env for the exec mode; `None` when nothing
 /// speaks (the caller's cluster default applies).
 fn resolve_exec_mode(
@@ -868,6 +929,10 @@ pub struct QuantileEngine {
     ingestor: StreamIngestor,
     gk_params: GkSelectParams,
     degrade: DegradePolicy,
+    /// Where finished span trees go (`Null` unless tracing was enabled).
+    sink: TraceSink,
+    /// Monotone id stamped onto each root span's `trace` attribute.
+    trace_seq: u64,
 }
 
 impl QuantileEngine {
@@ -891,24 +956,72 @@ impl QuantileEngine {
         source: Source<'_>,
         query: QuantileQuery,
     ) -> Result<QueryOutcome, EngineError> {
-        let mut out = match self.execute_exact(source, &query) {
+        // re-arm every call: callers can swap the cluster wholesale
+        // through cluster_mut(), and a fresh Cluster starts disarmed
+        self.cluster.tracer.set_enabled(self.sink.wants_spans());
+        self.trace_seq += 1;
+        let kind = match source {
+            Source::Dataset(_) => SpanKind::Query,
+            Source::Stream(_) => SpanKind::StreamQuery,
+        };
+        let now = self.cluster.clock.elapsed_secs();
+        let root = self
+            .cluster
+            .tracer
+            .open(kind, format!("query {}", self.trace_seq), now);
+        self.cluster.tracer.attr(root, "trace", self.trace_seq);
+        self.cluster.tracer.attr(root, "plan", query.label());
+        let source_label = match source {
+            Source::Dataset(_) => "dataset".to_string(),
+            Source::Stream(id) => format!("stream:{id}"),
+        };
+        self.cluster.tracer.attr(root, "source", source_label);
+        self.cluster.tracer.attr(root, "algorithm", self.choice.label());
+        self.cluster.tracer.attr(root, "epsilon", self.gk_params.epsilon);
+        self.cluster.tracer.attr(root, "backend", self.backend.name());
+        self.cluster
+            .tracer
+            .attr(root, "simd_lane_width", self.backend.simd_lane_width());
+
+        let result = match self.execute_exact(source, &query) {
             Err(EngineError::StageFailed { .. })
                 if self.degrade == DegradePolicy::SketchAnswer =>
             {
-                let mut out = self.degraded_answer(source, &query)?;
-                out.degraded = true;
-                out.report.exact = false;
-                out.report.degraded_queries += 1;
-                self.cluster.metrics.degraded_queries += 1;
-                out
+                match self.degraded_answer(source, &query) {
+                    Ok(mut out) => {
+                        out.degraded = true;
+                        out.report.exact = false;
+                        out.report.degraded_queries += 1;
+                        self.cluster.metrics.degraded_queries += 1;
+                        self.cluster.tracer.attr(root, "degraded", true);
+                        Ok(out)
+                    }
+                    Err(e) => Err(e),
+                }
             }
-            other => other?,
+            other => other,
         };
-        // THE stamping point: every outcome says which band-scan
-        // dispatch the engine's backend runs, no per-exit-path stamping
-        // to forget (the old make_report / make_backend_report footgun).
-        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
-        Ok(out)
+        self.cluster.tracer.close(root, self.cluster.clock.elapsed_secs());
+        match result {
+            Ok(mut out) => {
+                // THE stamping point: every outcome says which band-scan
+                // dispatch the engine's backend runs, no per-exit-path
+                // stamping to forget (the old make_report /
+                // make_backend_report footgun).
+                out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+                out.trace = self
+                    .sink
+                    .drain(&mut self.cluster.tracer)
+                    .map_err(EngineError::from)?;
+                Ok(out)
+            }
+            Err(e) => {
+                // a failed query leaves no spans behind — they would
+                // otherwise leak into the next query's tree
+                let _ = self.cluster.tracer.take();
+                Err(e)
+            }
+        }
     }
 
     /// The fault-free query path `execute` wraps.
@@ -1060,9 +1173,24 @@ impl QuantileEngine {
         stream: &str,
         batch: MicroBatch,
     ) -> Result<IngestOutcome, EngineError> {
-        self.ingestor
+        // see execute(): re-arm in case the cluster was swapped
+        self.cluster.tracer.set_enabled(self.sink.wants_spans());
+        match self
+            .ingestor
             .ingest(&mut self.cluster, &mut self.store, stream, batch)
-            .map_err(EngineError::from)
+        {
+            Ok(mut out) => {
+                out.trace = self
+                    .sink
+                    .drain(&mut self.cluster.tracer)
+                    .map_err(EngineError::from)?;
+                Ok(out)
+            }
+            Err(e) => {
+                let _ = self.cluster.tracer.take();
+                Err(EngineError::from(e))
+            }
+        }
     }
 
     /// The strategy answering `Source::Dataset` plans.
@@ -1323,7 +1451,7 @@ mod tests {
         cfg.cluster.nodes = 3;
         let engine = EngineBuilder::new()
             .config(cfg.clone())
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
         assert_eq!(engine.cluster().cfg.executors, 3);
@@ -1332,7 +1460,7 @@ mod tests {
             .config(cfg)
             .exec_mode(ExecMode::Sequential)
             .nodes(5)
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Sequential);
         assert_eq!(engine.cluster().cfg.executors, 5);
@@ -1341,6 +1469,62 @@ mod tests {
             .build_resolved(Some(ExecMode::Threads), None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
+    }
+
+    #[test]
+    fn trace_precedence_and_default_off() {
+        use std::path::PathBuf;
+        // builder > file > env > Off
+        assert_eq!(
+            resolve_trace(Some(TraceMode::Memory), "off", Some(TraceMode::Off)).unwrap(),
+            TraceMode::Memory
+        );
+        assert_eq!(
+            resolve_trace(None, "chrome:t.json", Some(TraceMode::Memory)).unwrap(),
+            TraceMode::Chrome(PathBuf::from("t.json"))
+        );
+        assert_eq!(
+            resolve_trace(None, "", Some(TraceMode::Memory)).unwrap(),
+            TraceMode::Memory
+        );
+        assert_eq!(resolve_trace(None, "", None).unwrap(), TraceMode::Off);
+        assert!(resolve_trace(None, "perfetto", None).is_err());
+
+        // the default engine collects nothing and surfaces no trace
+        let mut engine = small_engine(AlgoChoice::GkSelect);
+        assert!(!engine.cluster().tracer.is_enabled());
+        let out = engine
+            .execute(Source::Dataset(&data_1k()), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert!(out.trace().is_none());
+    }
+
+    #[test]
+    fn memory_traces_ride_the_outcome() {
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .trace(TraceMode::Memory)
+            .build_resolved(None, None, None, None)
+            .unwrap();
+        let data = data_1k();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        let trace = out.trace().expect("memory sink surfaces the trace");
+        assert!(trace.is_well_formed());
+        let roots: Vec<_> = trace.roots().collect();
+        assert_eq!(roots.len(), 1, "one root per query");
+        assert_eq!(roots[0].kind, SpanKind::Query);
+        assert!(roots[0].attrs.iter().any(|(k, v)| k == "plan" && v == "single"));
+        // GK Select fused protocol: 2 stages (sketch + band extract)
+        assert_eq!(trace.spans_of_kind(SpanKind::Stage).count(), 2);
+        // a second query starts a fresh tree, ids restarting at 1
+        let again = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        let trace2 = again.trace().unwrap();
+        assert_eq!(trace2.spans[0].id, 1);
+        assert!(trace2.roots().all(|r| r.kind == SpanKind::Query));
     }
 
     #[test]
@@ -1389,7 +1573,7 @@ mod tests {
                     .panic_task(1, 3)
                     .stragglers(0.5, 4.0),
             )
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         let out = engine
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1411,7 +1595,7 @@ mod tests {
         let mut failing = EngineBuilder::new()
             .cluster(ClusterConfig::local(2, 4))
             .fault_plan(plan.clone())
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         let err = failing
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1427,7 +1611,7 @@ mod tests {
             .cluster(ClusterConfig::local(2, 4))
             .fault_plan(plan)
             .degrade_policy(DegradePolicy::SketchAnswer)
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         let out = degrading
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1448,7 +1632,7 @@ mod tests {
         let mut engine = EngineBuilder::new()
             .cluster(ClusterConfig::local(2, 4))
             .degrade_policy(DegradePolicy::SketchAnswer)
-            .build_resolved(None, None, None)
+            .build_resolved(None, None, None, None)
             .unwrap();
         engine
             .ingest("s", MicroBatch::new((0..1_000).collect()))
@@ -1468,13 +1652,13 @@ mod tests {
     #[test]
     fn bad_builder_knobs_are_typed_errors() {
         assert!(matches!(
-            EngineBuilder::new().epsilon(0.0).build_resolved(None, None, None),
+            EngineBuilder::new().epsilon(0.0).build_resolved(None, None, None, None),
             Err(EngineError::BadEpsilon(_))
         ));
         let mut cfg = ReproConfig::default();
         cfg.backend = "warp-drive".into();
         assert!(matches!(
-            EngineBuilder::new().config(cfg).build_resolved(None, None, None),
+            EngineBuilder::new().config(cfg).build_resolved(None, None, None, None),
             Err(EngineError::Backend(_))
         ));
         // an injected backend carries its own dispatch: an explicit
@@ -1483,7 +1667,7 @@ mod tests {
             EngineBuilder::new()
                 .kernel_backend(Box::new(NativeBackend::new()))
                 .simd(SimdPolicy::ForceScalar)
-                .build_resolved(None, None, None),
+                .build_resolved(None, None, None, None),
             Err(EngineError::InvalidConfig(_))
         ));
     }

@@ -781,6 +781,27 @@ pub fn run_chaos(cfg: &ReproConfig, n: u64, plan: FaultPlan, verify: bool) -> Re
 // Machine-readable perf trajectory: the BENCH_*.json family
 // ---------------------------------------------------------------------------
 
+/// The self-sketched per-stage task-latency summaries of a report, as a
+/// JSON array for the BENCH records (see [`crate::obs::stats`]).
+fn stage_stats_json(report: &crate::cluster::metrics::MetricsReport) -> JsonVal {
+    JsonVal::Arr(
+        report
+            .stage_stats
+            .iter()
+            .map(|s| {
+                JsonVal::obj(vec![
+                    ("stage", JsonVal::U64(s.stage)),
+                    ("tasks", JsonVal::U64(s.tasks)),
+                    ("p50_us", JsonVal::U64(s.p50_us as u64)),
+                    ("p95_us", JsonVal::U64(s.p95_us as u64)),
+                    ("p99_us", JsonVal::U64(s.p99_us as u64)),
+                    ("max_us", JsonVal::U64(s.max_us as u64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// One GK Select run on the paper's `emr(30)` shape → a JSON record:
 /// round/scan/byte counters, the modelled (virtual-clock) seconds, and
 /// the *real* wall-clock of every `map_partitions` stage — on the fused
@@ -849,6 +870,7 @@ pub fn gk_select_bench_record(
             JsonVal::Str(SimdDispatch::resolve(simd).label().into()),
         ),
         ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
+        ("stage_stats", stage_stats_json(&out.report)),
         ("exact", JsonVal::Bool(out.report.exact)),
     ]))
 }
@@ -927,6 +949,7 @@ pub fn stream_query_bench_record(
             JsonVal::Str(SimdDispatch::resolve(simd).label().into()),
         ),
         ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
+        ("stage_stats", stage_stats_json(&out.report)),
         ("live_epochs", JsonVal::U64(state.live_epochs() as u64)),
         ("store_bytes", JsonVal::U64(state.store_bytes())),
         ("ingest_wall_s_total", JsonVal::F64(ingest_wall)),
@@ -1042,6 +1065,138 @@ pub fn fault_overhead_bench_record(n: u64, simd: SimdPolicy) -> Result<JsonVal> 
     ]))
 }
 
+/// What span collection costs when off vs fully on: the fused GK Select
+/// run under the default `Null` sink against the identical run writing
+/// a Chrome trace file, both pinned explicitly so `GKSELECT_TRACE`
+/// cannot perturb the measurement → a JSON record with the overhead
+/// ratio. Guards the tentpole's measured-zero-overhead claim for the
+/// disabled tracer; answers must stay bit-identical.
+pub fn trace_overhead_bench_record(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
+    use crate::obs::TraceMode;
+    let mut run = |mode: TraceMode| -> Result<(f64, QueryOutcome)> {
+        let mut cc = crate::cluster::ClusterConfig::emr(30);
+        cc.exec_mode = ExecMode::Sequential;
+        cc.faults = None;
+        let mut engine = EngineBuilder::new()
+            .cluster(cc)
+            .algorithm(AlgoChoice::GkSelect)
+            .simd(simd)
+            .trace(mode)
+            .build()?;
+        let data = Distribution::Uniform.generator(42).generate(engine.cluster_mut(), n);
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..3 {
+            let t = Instant::now();
+            let out = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.75))?;
+            best = best.min(t.elapsed().as_secs_f64());
+            last = Some(out);
+        }
+        Ok((best, last.expect("three timed runs")))
+    };
+    let chrome_path = std::env::temp_dir().join("gkselect_trace_overhead.json");
+    let (off_wall, off) = run(TraceMode::Off)?;
+    let (chrome_wall, chrome) = run(TraceMode::Chrome(chrome_path.clone()))?;
+    let _ = std::fs::remove_file(&chrome_path);
+    ensure!(
+        off.values == chrome.values,
+        "span collection must not change the answer"
+    );
+    ensure!(
+        off.trace().is_none() && chrome.trace().is_some(),
+        "sink wiring: Null surfaces no trace, Chrome surfaces one"
+    );
+    let spans = chrome.trace().map(|t| t.spans.len() as u64).unwrap_or(0);
+    let ratio = chrome_wall / off_wall.max(1e-12);
+    println!(
+        "bench gk_select_emr30/trace_overhead          sequential rounds {} scans {} \
+         null-sink {:>8.4}s chrome-sink {:>8.4}s ({spans} spans) overhead x{:.3}",
+        off.report.rounds, off.report.data_scans, off_wall, chrome_wall, ratio,
+    );
+    Ok(JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str("trace_overhead".into())),
+        ("distribution", JsonVal::Str("uniform".into())),
+        ("exec_mode", JsonVal::Str("sequential".into())),
+        ("n", JsonVal::U64(n)),
+        ("q", JsonVal::F64(0.75)),
+        ("rounds", JsonVal::U64(off.report.rounds)),
+        ("data_scans", JsonVal::U64(off.report.data_scans)),
+        ("spans", JsonVal::U64(spans)),
+        ("null_sink_wall_s", JsonVal::F64(off_wall)),
+        ("chrome_sink_wall_s", JsonVal::F64(chrome_wall)),
+        ("trace_overhead_ratio", JsonVal::F64(ratio)),
+        ("exact", JsonVal::Bool(off.report.exact)),
+    ]))
+}
+
+/// `repro trace <workload>`: run a small named workload with the
+/// Chrome-trace sink armed and leave the Perfetto-loadable span file at
+/// `out_path`. Workloads: `batch` (one fused GK Select query — 2 stage
+/// spans, 2 scans), `stream` (one ingest + one served query — 1 stage
+/// each), `chaos` (the batch query under a seeded plan with a retried
+/// panic and a speculated straggler, so the trace shows retry and
+/// speculative attempt spans).
+pub fn run_trace(cfg: &ReproConfig, workload: &str, n: u64, out_path: &Path) -> Result<()> {
+    use crate::obs::{SpanKind, TraceMode};
+    use crate::stream::MicroBatch;
+    ensure!(n > 0, "need a nonempty workload");
+    ensure!(
+        matches!(workload, "batch" | "stream" | "chaos"),
+        "unknown trace workload '{workload}' (batch|stream|chaos)"
+    );
+    let mut builder = EngineBuilder::new()
+        .config(cfg.clone())
+        .algorithm(AlgoChoice::GkSelect)
+        .trace(TraceMode::Chrome(out_path.to_path_buf()));
+    if workload == "chaos" {
+        // one retried panic + every task straggling hard enough to
+        // speculate: the trace must show both attempt-span shapes
+        builder = builder.fault_plan(FaultPlan::seeded(7).panic_task(0, 0).stragglers(1.0, 8.0));
+    }
+    let mut engine = builder.build()?;
+    ensure!(
+        workload != "chaos" || engine.cluster().cfg.executors > 1,
+        "chaos trace needs > 1 executor for speculation"
+    );
+    match workload {
+        "stream" => {
+            let values = StreamWorkload::Uniform.batch(cfg.algorithm.seed, 0, n as usize);
+            let ing = engine.ingest("trace", MicroBatch::new(values))?;
+            let out = engine.execute(Source::Stream("trace"), QuantileQuery::Single(0.5))?;
+            let trace = out.trace().expect("chrome sink collects spans");
+            println!(
+                "trace stream: value {}  ingest {} spans, query {} spans \
+                 ({} stages, {} attempts)",
+                out.value(),
+                ing.trace.as_ref().map(|t| t.spans.len()).unwrap_or(0),
+                trace.spans.len(),
+                trace.spans_of_kind(SpanKind::Stage).count(),
+                trace.spans_of_kind(SpanKind::Attempt).count(),
+            );
+        }
+        _ => {
+            let data = Distribution::Uniform
+                .generator(cfg.algorithm.seed)
+                .generate(engine.cluster_mut(), n);
+            let out = engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5))?;
+            let trace = out.trace().expect("chrome sink collects spans");
+            println!(
+                "trace {workload}: value {}  {} spans ({} stages, {} attempts)  \
+                 retried {} spec {}/{}",
+                out.value(),
+                trace.spans.len(),
+                trace.spans_of_kind(SpanKind::Stage).count(),
+                trace.spans_of_kind(SpanKind::Attempt).count(),
+                out.report.tasks_retried,
+                out.report.speculative_wins,
+                out.report.speculative_launched,
+            );
+        }
+    }
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
 /// Build the `BENCH_gk_select.json` document: the fused two-round path on
 /// the acceptance distributions, a threads-vs-sequential pair on the same
 /// uniform workload (so the file carries modelled *and* real parallel
@@ -1118,6 +1273,8 @@ pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
         simd_vs_scalar_bench_record(n)?,
         // the recovery layer armed-but-idle vs absent: "free when off"
         fault_overhead_bench_record(n, simd)?,
+        // the tracing layer disabled vs Chrome export: "free when off"
+        trace_overhead_bench_record(n, simd)?,
     ];
     Ok(JsonVal::obj(vec![
         ("bench", JsonVal::Str("gk_select".into())),
@@ -1154,7 +1311,14 @@ pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
                  cost: the same fused run with a seeded no-op FaultPlan \
                  (injector consulted per task attempt, nothing fires) vs no \
                  injector at all — answers bit-identical, \
-                 fault_overhead_ratio should stay ~1.0"
+                 fault_overhead_ratio should stay ~1.0. trace_overhead \
+                 pins the tracing layer the same way: the default Null \
+                 sink (tracer disarmed, hooks no-op) vs a Chrome-trace \
+                 export of every span — answers bit-identical, \
+                 trace_overhead_ratio should stay ~1.0. stage_stats on \
+                 each run are the self-sketched per-stage task-latency \
+                 percentiles (virtual-clock us through our own GK sketch; \
+                 deterministic, mode-independent)"
                     .into(),
             ),
         ),

@@ -57,6 +57,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod harness;
+pub mod obs;
 pub mod runtime;
 pub mod select;
 pub mod sketch;
@@ -86,6 +87,9 @@ pub mod prelude {
     pub use crate::engine::{
         AlgoChoice, DegradePolicy, EngineBuilder, EngineCtx, EngineError, QuantileEngine,
         QuantileQuery, QueryOutcome, Source,
+    };
+    pub use crate::obs::{
+        AttemptOutcome, Span, SpanKind, StageStats, Trace, TraceMode, TraceSink,
     };
     pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
     pub use crate::sketch::{

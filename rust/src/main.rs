@@ -17,6 +17,7 @@
 //! repro bench json     --n 4e6 --out .
 //! repro stream         --batches 16 --batch-n 250000 --workload zipf --queries 0.5,0.95,0.99
 //! repro chaos          --n 2e6 --plan "seed=7,panic=0.02,straggler=0.1x4" --verify
+//! repro trace batch    --n 2e5 --out trace.json
 //! repro calibrate
 //! repro validate --n 2e5
 //! repro config
@@ -24,7 +25,8 @@
 //!
 //! Global flags: `--config <path>` (TOML), `--backend native|pjrt`,
 //! `--exec-mode sequential|threads`, `--simd auto|scalar|force`,
-//! `--faults <plan>` (seeded fault-injection for any command).
+//! `--faults <plan>` (seeded fault-injection for any command),
+//! `--trace off|memory|chrome:<path>` (span capture for any command).
 
 use anyhow::{bail, Result};
 use gkselect::cluster::FaultPlan;
@@ -61,6 +63,9 @@ COMMANDS:
              --n <count> --nodes <count> --seed <n> (canned plan)
              --plan \"seed=7,panic=0.02,transient=0.05,straggler=0.1x4\"
              --degrade fail|sketch --verify
+  trace      run a small traced workload and write a Perfetto-loadable
+             Chrome-trace file of its span tree
+             trace batch|stream|chaos --n <count> --out <file.json> --nodes <count>
   calibrate  measure this box's per-element costs
   validate   cross-check all algorithms vs the oracle (--n)
   config     print the effective config
@@ -75,6 +80,9 @@ GLOBAL FLAGS:
   --faults <plan>    seeded fault-injection plan armed for any command
                      (GKSELECT_FAULTS does the same; see `repro chaos`
                      for the plan grammar)
+  --trace <mode>     off | memory | chrome:<path> (or a bare *.json path)
+                     — per-query span capture for any command
+                     (GKSELECT_TRACE does the same)
 ";
 
 fn main() -> Result<()> {
@@ -104,11 +112,16 @@ fn main() -> Result<()> {
         fp.parse::<FaultPlan>().map_err(anyhow::Error::msg)?;
         cfg.faults.plan = fp.to_string();
     }
+    if let Some(tm) = args.str_opt("trace") {
+        // validated here so a typo fails before any work runs
+        tm.parse::<gkselect::obs::TraceMode>()?;
+        cfg.obs.trace = tm.to_string();
+    }
 
     match args.path[0].as_str() {
         "quantile" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "faults", "algorithm", "n", "q",
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "algorithm", "n", "q",
                 "distribution", "nodes", "verify",
             ])?;
             let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
@@ -125,7 +138,7 @@ fn main() -> Result<()> {
             match which {
                 "fig" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "nodes", "max-exp",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "nodes", "max-exp",
                         "trials",
                     ])?;
                     harness::bench_fig(
@@ -137,7 +150,7 @@ fn main() -> Result<()> {
                 }
                 "dist" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes", "trials",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "trials",
                     ])?;
                     harness::bench_dist(
                         &cfg,
@@ -148,13 +161,13 @@ fn main() -> Result<()> {
                 }
                 "table4" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "nodes",
                     ])?;
                     harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
                 }
                 "table5" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes",
                     ])?;
                     harness::bench_table5(
                         &cfg,
@@ -164,7 +177,7 @@ fn main() -> Result<()> {
                 }
                 "ablation" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "n", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes",
                     ])?;
                     harness::bench_ablation(
                         &cfg,
@@ -174,7 +187,7 @@ fn main() -> Result<()> {
                 }
                 "json" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "n", "out",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "out",
                     ])?;
                     harness::write_bench_json(
                         Path::new(&args.str_or("out", ".")),
@@ -192,6 +205,7 @@ fn main() -> Result<()> {
                 "exec-mode",
                 "simd",
                 "faults",
+                "trace",
                 "batches",
                 "batch-n",
                 "workload",
@@ -225,7 +239,7 @@ fn main() -> Result<()> {
         }
         "chaos" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "faults", "n", "nodes", "plan", "seed",
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "plan", "seed",
                 "degrade", "verify",
             ])?;
             if let Some(nodes) = args.str_opt("nodes") {
@@ -250,12 +264,27 @@ fn main() -> Result<()> {
             };
             harness::run_chaos(&cfg, args.u64_or("n", 2_000_000)?, plan, args.has("verify"))
         }
+        "trace" => {
+            args.ensure_known(&[
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "out",
+            ])?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            let workload = args.path.get(1).map(String::as_str).unwrap_or("batch");
+            harness::run_trace(
+                &cfg,
+                workload,
+                args.u64_or("n", 200_000)?,
+                Path::new(&args.str_or("out", "trace.json")),
+            )
+        }
         "calibrate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace"])?;
             harness::calibrate(&cfg)
         }
         "validate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "n"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace", "n"])?;
             harness::validate(&cfg, args.u64_or("n", 200_000)?)
         }
         "config" => {

@@ -1,0 +1,150 @@
+//! Chrome-trace-event export: one JSON file loadable in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! Each drained [`Trace`] becomes one `pid` (so successive queries sit
+//! side by side in the UI); driver spans (query / stage / reduce) run on
+//! `tid 0`, attempt spans on `tid = executor + 1`. Every event is a
+//! complete `"ph": "X"` duration event with wall-clock `ts`/`dur` in
+//! microseconds, and carries `span_id` / `parent_id` plus the span's
+//! typed fields under `args` so the tree can be reconstructed from the
+//! file alone (`scripts/check_trace.py` validates exactly that).
+//!
+//! The writer rewrites the whole `{"traceEvents": [...]}` document on
+//! every append, so the file on disk is valid JSON after every query —
+//! there is no finalize step to forget.
+
+use super::{Span, Trace};
+use crate::util::benchkit::{write_json, JsonVal};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Accumulates trace events and rewrites the target file on each append.
+#[derive(Debug)]
+pub struct ChromeTraceWriter {
+    path: PathBuf,
+    events: Vec<JsonVal>,
+    next_pid: u64,
+}
+
+impl ChromeTraceWriter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self {
+            path: path.into(),
+            events: Vec::new(),
+            next_pid: 1,
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of events written so far (across all appended traces).
+    pub fn events_written(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Append one finished trace and rewrite the file.
+    pub fn append(&mut self, trace: &Trace) -> io::Result<()> {
+        let pid = self.next_pid;
+        self.next_pid += 1;
+        for span in &trace.spans {
+            self.events.push(event(pid, span));
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        write_json(
+            &self.path,
+            &JsonVal::obj(vec![(
+                "traceEvents",
+                JsonVal::Arr(self.events.clone()),
+            )]),
+        )
+    }
+}
+
+/// One span → one complete duration event.
+fn event(pid: u64, s: &Span) -> JsonVal {
+    let mut args = vec![
+        ("span_id", JsonVal::U64(s.id)),
+        ("parent_id", JsonVal::U64(s.parent)),
+        ("kind", JsonVal::Str(s.kind.label().to_string())),
+        ("start_model_s", JsonVal::F64(s.start_model_s)),
+        ("end_model_s", JsonVal::F64(s.end_model_s)),
+    ];
+    if let Some(stage) = s.stage {
+        args.push(("stage", JsonVal::U64(stage)));
+    }
+    if let Some(p) = s.partition {
+        args.push(("partition", JsonVal::U64(p as u64)));
+    }
+    if let Some(e) = s.executor {
+        args.push(("executor", JsonVal::U64(e as u64)));
+    }
+    if let Some(a) = s.attempt {
+        args.push(("attempt", JsonVal::U64(a as u64)));
+    }
+    if let Some(o) = s.outcome {
+        args.push(("outcome", JsonVal::Str(o.label().to_string())));
+    }
+    for (k, v) in &s.attrs {
+        args.push((k.as_str(), JsonVal::Str(v.clone())));
+    }
+    let tid = s.executor.map(|e| e as u64 + 1).unwrap_or(0);
+    JsonVal::obj(vec![
+        ("name", JsonVal::Str(s.name.clone())),
+        ("cat", JsonVal::Str(s.kind.label().to_string())),
+        ("ph", JsonVal::Str("X".to_string())),
+        ("ts", JsonVal::F64(s.start_wall_s * 1e6)),
+        (
+            "dur",
+            JsonVal::F64((s.end_wall_s - s.start_wall_s).max(0.0) * 1e6),
+        ),
+        ("pid", JsonVal::U64(pid)),
+        ("tid", JsonVal::U64(tid)),
+        ("args", JsonVal::obj(args)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanKind, Tracer};
+    use crate::util::minijson::parse;
+
+    #[test]
+    fn file_is_valid_json_after_every_append() {
+        let dir = std::env::temp_dir().join("gkselect_chrome_writer_test");
+        let path = dir.join("trace.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ChromeTraceWriter::new(&path);
+
+        let mut t = Tracer::disabled();
+        t.set_enabled(true);
+        for round in 1..=2u64 {
+            let root = t.open(SpanKind::Query, format!("q{round}"), 0.0);
+            let stage = t.open(SpanKind::Stage, "stage 0", 0.0);
+            t.close(stage, 1.0);
+            t.close(root, 2.0);
+            let trace = t.take().unwrap();
+            w.append(&trace).unwrap();
+
+            let text = std::fs::read_to_string(&path).unwrap();
+            let doc = parse(&text).unwrap();
+            let events = match doc.get("traceEvents") {
+                Some(crate::util::minijson::Json::Arr(events)) => events,
+                other => panic!("traceEvents must be an array, got {other:?}"),
+            };
+            assert_eq!(events.len() as u64, 2 * round, "2 spans per query");
+            for ev in events {
+                for field in ["name", "cat", "ph", "ts", "dur", "pid", "tid", "args"] {
+                    assert!(ev.get(field).is_some(), "missing {field}");
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,643 @@
+//! Structured span tracing: per-query trace trees from the engine down
+//! to individual task attempts.
+//!
+//! The counters in [`crate::cluster::metrics::MetricsReport`] assert the
+//! protocol's *shape* (rounds, scans, retry tallies); this module shows
+//! *where* time and retries go inside a query. Every
+//! [`QuantileEngine::execute`](crate::engine::QuantileEngine::execute)
+//! opens a root span (query kind, plan shape, ε, backend, SIMD lane
+//! width); every `Cluster::map_partitions` stage and `tree_reduce`
+//! opens a child span; every task **attempt** becomes a leaf span
+//! carrying partition, executor, attempt number, and outcome
+//! (`ok` / `panic` / `transient` / `lost` / `speculative-win` /
+//! `speculative-loss`) — the fault layer's five counters, visible as
+//! tree structure.
+//!
+//! Spans record both virtual-clock and real wall timestamps. Attempt
+//! records are collected per executor and stitched in deterministic
+//! `(partition, attempt)` order at stage end, so the span *tree* is
+//! identical under `ExecMode::Sequential` and `ExecMode::Threads` and
+//! tests can pin it. Finished traces drain into a pluggable
+//! [`TraceSink`]:
+//!
+//! * [`TraceSink::Null`] — the default; the [`Tracer`] stays disabled
+//!   and every hook is a no-op (measured ~zero overhead, gated by the
+//!   `trace_overhead` bench record).
+//! * [`TraceSink::InMemory`] — attaches the [`Trace`] to
+//!   `QueryOutcome::trace()` for tests and programmatic inspection.
+//! * [`TraceSink::Chrome`] — rewrites a Chrome-trace-event JSON file on
+//!   every drain (always valid JSON, loadable in Perfetto / `chrome://tracing`).
+//!
+//! The mode is resolved with the standard precedence — builder
+//! (`EngineBuilder::trace`) > config file (`[obs] trace`) > env
+//! (`GKSELECT_TRACE`) — and exposed on the CLI as the global `--trace`
+//! flag plus the `repro trace <workload>` subcommand.
+//!
+//! On top, [`StageStats`] summarizes per-stage task-latency
+//! distributions (p50/p95/p99/max) by feeding attempt durations through
+//! our own [`GkCore`](crate::sketch::GkCore) — the system measuring
+//! itself with the algorithm it implements. Stats are always on
+//! (independent of tracing) and ride every `MetricsReport`.
+//!
+//! ```
+//! use gkselect::prelude::*;
+//!
+//! let mut engine = EngineBuilder::new()
+//!     .cluster(ClusterConfig::local(2, 4))
+//!     .algorithm(AlgoChoice::GkSelect)
+//!     .trace(TraceMode::Memory)
+//!     .build()
+//!     .unwrap();
+//! let data = UniformGen::new(42).generate(engine.cluster_mut(), 10_000);
+//! let out = engine
+//!     .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+//!     .unwrap();
+//!
+//! let trace = out.trace().expect("memory sink attaches the trace");
+//! // fused batch protocol: one root query span, 2 stage spans under it
+//! assert_eq!(trace.roots().count(), 1);
+//! assert_eq!(trace.spans_of_kind(SpanKind::Stage).count(), 2);
+//! // per-stage latency sketches ride the report unconditionally
+//! assert_eq!(out.report.stage_stats.len(), 2);
+//! ```
+
+pub mod chrome;
+pub mod stats;
+
+use std::fmt;
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub use chrome::ChromeTraceWriter;
+pub use stats::StageStats;
+
+/// What a span describes. `Query`/`StreamQuery`/`Ingest` are roots
+/// opened by the engine; `Stage`/`Reduce` are driver-side children;
+/// `Attempt` leaves are individual task attempts on an executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// A batch query (`Source::Dataset`).
+    Query,
+    /// A streamed query (`Source::Stream`) — cached-sketch serving path.
+    StreamQuery,
+    /// A micro-batch ingest sealing an epoch into the sketch store.
+    Ingest,
+    /// One `Cluster::map_partitions` stage (= one data scan).
+    Stage,
+    /// One `Cluster::tree_reduce` merge (driver rounds, no data scan).
+    Reduce,
+    /// One task attempt on one executor (leaf).
+    Attempt,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Query => "query",
+            Self::StreamQuery => "stream-query",
+            Self::Ingest => "ingest",
+            Self::Stage => "stage",
+            Self::Reduce => "reduce",
+            Self::Attempt => "attempt",
+        }
+    }
+}
+
+/// How one task attempt ended. Mirrors the fault layer's ledger: a
+/// retried fault leaves its failed attempt behind as a span with the
+/// matching outcome, followed by the attempt that recovered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AttemptOutcome {
+    /// Ran to completion, no fault.
+    Ok,
+    /// Panicked (injected or real) and was retried or failed the stage.
+    Panic,
+    /// Failed with an injected transient error.
+    Transient,
+    /// Killed by executor loss.
+    Lost,
+    /// The faster copy of a speculated straggler pair.
+    SpeculativeWin,
+    /// The slower copy of a speculated straggler pair.
+    SpeculativeLoss,
+}
+
+impl AttemptOutcome {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Ok => "ok",
+            Self::Panic => "panic",
+            Self::Transient => "transient",
+            Self::Lost => "lost",
+            Self::SpeculativeWin => "speculative-win",
+            Self::SpeculativeLoss => "speculative-loss",
+        }
+    }
+}
+
+/// One task attempt as observed inside the executor pool, before it is
+/// stitched into the span tree at stage end. Produced by
+/// `cluster/pool.rs` only when tracing is enabled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptRecord {
+    pub partition: usize,
+    pub executor: usize,
+    pub attempt: u32,
+    pub outcome: AttemptOutcome,
+    /// Virtual-clock seconds charged to this attempt.
+    pub model_secs: f64,
+    /// Real wall seconds the attempt took on this box.
+    pub wall_secs: f64,
+    /// Failure reason for non-`Ok` outcomes (matches `StageError::reason`).
+    pub fault: Option<String>,
+}
+
+/// One node of the trace tree. `id` is 1-based within a trace;
+/// `parent == 0` marks a root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub id: u64,
+    pub parent: u64,
+    pub kind: SpanKind,
+    pub name: String,
+    /// Virtual-clock seconds at open/close.
+    pub start_model_s: f64,
+    pub end_model_s: f64,
+    /// Real wall seconds since the tracer's epoch at open/close.
+    pub start_wall_s: f64,
+    pub end_wall_s: f64,
+    /// Stage index (`Stage`/`Reduce`/`Attempt` spans).
+    pub stage: Option<u64>,
+    /// Partition and executor (`Attempt` spans).
+    pub partition: Option<usize>,
+    pub executor: Option<usize>,
+    pub attempt: Option<u32>,
+    pub outcome: Option<AttemptOutcome>,
+    /// Free-form key/value attributes (plan shape, ε, backend, ...).
+    pub attrs: Vec<(String, String)>,
+}
+
+/// A finished trace: the spans of one query (or ingest), in open order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Spans with no parent — exactly one per query in a well-formed trace.
+    pub fn roots(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(|s| s.parent == 0)
+    }
+
+    pub fn spans_of_kind(&self, kind: SpanKind) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.kind == kind)
+    }
+
+    /// Lookup by span id (ids are 1-based and dense).
+    pub fn span(&self, id: u64) -> Option<&Span> {
+        if id == 0 {
+            return None;
+        }
+        self.spans.get(id as usize - 1).filter(|s| s.id == id)
+    }
+
+    pub fn children(&self, id: u64) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.parent == id)
+    }
+
+    /// Structural well-formedness: every non-root parent id resolves to
+    /// an earlier span, every `Attempt` hangs off a `Stage` or `Reduce`,
+    /// and every `Stage`/`Reduce` hangs off a root kind (or is itself a
+    /// root when the cluster is driven without an engine).
+    pub fn is_well_formed(&self) -> bool {
+        self.spans.iter().all(|s| {
+            if s.parent == 0 {
+                return s.kind != SpanKind::Attempt;
+            }
+            let Some(p) = self.span(s.parent) else {
+                return false;
+            };
+            if p.id >= s.id {
+                return false;
+            }
+            match s.kind {
+                SpanKind::Attempt => matches!(p.kind, SpanKind::Stage | SpanKind::Reduce),
+                SpanKind::Stage | SpanKind::Reduce => matches!(
+                    p.kind,
+                    SpanKind::Query | SpanKind::StreamQuery | SpanKind::Ingest
+                ),
+                _ => false,
+            }
+        })
+    }
+}
+
+/// The span collector owned by every `Cluster`. All hooks are no-ops
+/// while disabled (the `TraceSink::Null` default), so the tracing layer
+/// costs nothing when off.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    spans: Vec<Span>,
+    /// Open-span stack: `open` parents under the top, `close` pops.
+    stack: Vec<u64>,
+    /// Wall-clock origin for `start_wall_s`/`end_wall_s`.
+    epoch: Instant,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl Tracer {
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            spans: Vec::new(),
+            stack: Vec::new(),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Arm or disarm span collection. Disarming drops any buffered spans
+    /// so a later re-arm starts a clean trace.
+    pub fn set_enabled(&mut self, on: bool) {
+        if !on {
+            self.spans.clear();
+            self.stack.clear();
+        }
+        self.enabled = on;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span under the current stack top (root if the stack is
+    /// empty). Returns the span id, or 0 when disabled — every other
+    /// hook treats id 0 as a no-op, so call sites never branch.
+    pub fn open(&mut self, kind: SpanKind, name: impl Into<String>, model_now: f64) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let id = self.spans.len() as u64 + 1;
+        let wall = self.epoch.elapsed().as_secs_f64();
+        self.spans.push(Span {
+            id,
+            parent: self.stack.last().copied().unwrap_or(0),
+            kind,
+            name: name.into(),
+            start_model_s: model_now,
+            end_model_s: model_now,
+            start_wall_s: wall,
+            end_wall_s: wall,
+            stage: None,
+            partition: None,
+            executor: None,
+            attempt: None,
+            outcome: None,
+            attrs: Vec::new(),
+        });
+        self.stack.push(id);
+        id
+    }
+
+    /// Stamp the stage index onto an open `Stage`/`Reduce` span.
+    pub fn set_stage(&mut self, id: u64, stage: u64) {
+        if let Some(s) = self.get_mut(id) {
+            s.stage = Some(stage);
+        }
+    }
+
+    /// Attach a key/value attribute to an open span.
+    pub fn attr(&mut self, id: u64, key: &str, value: impl fmt::Display) {
+        let text = value.to_string();
+        if let Some(s) = self.get_mut(id) {
+            s.attrs.push((key.to_string(), text));
+        }
+    }
+
+    /// Close span `id`, recording end timestamps and unwinding the open
+    /// stack to its parent.
+    pub fn close(&mut self, id: u64, model_now: f64) {
+        if id == 0 {
+            return;
+        }
+        let wall = self.epoch.elapsed().as_secs_f64();
+        if let Some(pos) = self.stack.iter().rposition(|&s| s == id) {
+            self.stack.truncate(pos);
+        }
+        if let Some(s) = self.get_mut(id) {
+            s.end_model_s = model_now;
+            s.end_wall_s = wall;
+        }
+    }
+
+    /// Stitch the attempt records of a finished stage under its span, in
+    /// deterministic `(partition, attempt, outcome)` order — the same
+    /// tree regardless of executor scheduling, so `Sequential` and
+    /// `Threads` traces are structurally identical.
+    pub fn record_attempts(&mut self, stage_id: u64, records: &[AttemptRecord]) {
+        if !self.enabled || stage_id == 0 {
+            return;
+        }
+        let Some(stage_span) = self.span_ref(stage_id) else {
+            return;
+        };
+        let (stage_index, sm, sw) = (
+            stage_span.stage,
+            stage_span.start_model_s,
+            stage_span.start_wall_s,
+        );
+        let mut ordered: Vec<&AttemptRecord> = records.iter().collect();
+        ordered.sort_by_key(|r| (r.partition, r.attempt, r.outcome));
+        for r in ordered {
+            let id = self.spans.len() as u64 + 1;
+            self.spans.push(Span {
+                id,
+                parent: stage_id,
+                kind: SpanKind::Attempt,
+                name: format!("task p{} a{} {}", r.partition, r.attempt, r.outcome.label()),
+                start_model_s: sm,
+                end_model_s: sm + r.model_secs,
+                start_wall_s: sw,
+                end_wall_s: sw + r.wall_secs,
+                stage: stage_index,
+                partition: Some(r.partition),
+                executor: Some(r.executor),
+                attempt: Some(r.attempt),
+                outcome: Some(r.outcome),
+                attrs: r
+                    .fault
+                    .iter()
+                    .map(|f| ("fault".to_string(), f.clone()))
+                    .collect(),
+            });
+        }
+    }
+
+    /// Take the finished trace, leaving the tracer empty and still
+    /// armed. Returns `None` while disabled.
+    pub fn take(&mut self) -> Option<Trace> {
+        if !self.enabled {
+            return None;
+        }
+        self.stack.clear();
+        Some(Trace {
+            spans: std::mem::take(&mut self.spans),
+        })
+    }
+
+    fn span_ref(&self, id: u64) -> Option<&Span> {
+        if id == 0 {
+            return None;
+        }
+        self.spans.get(id as usize - 1)
+    }
+
+    fn get_mut(&mut self, id: u64) -> Option<&mut Span> {
+        if id == 0 || !self.enabled {
+            return None;
+        }
+        self.spans.get_mut(id as usize - 1)
+    }
+}
+
+/// Accepted values for `--trace` / `[obs] trace` / `GKSELECT_TRACE`.
+pub const TRACE_GRAMMAR: &str = "off | memory | chrome:<path> | <path ending in .json>";
+
+/// Where finished traces go — the resolved form of the `--trace` /
+/// `[obs] trace` / `GKSELECT_TRACE` knob.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No tracing (the default): `TraceSink::Null`, hooks disabled.
+    Off,
+    /// Keep traces in memory, surfaced via `QueryOutcome::trace()`.
+    Memory,
+    /// Write a Chrome-trace-event JSON file (Perfetto-loadable).
+    Chrome(PathBuf),
+}
+
+impl std::str::FromStr for TraceMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(Self::Off),
+            "memory" => Ok(Self::Memory),
+            other => {
+                if let Some(path) = other.strip_prefix("chrome:") {
+                    if path.is_empty() {
+                        anyhow::bail!("chrome: needs a path ({TRACE_GRAMMAR})");
+                    }
+                    return Ok(Self::Chrome(PathBuf::from(path)));
+                }
+                if other.ends_with(".json") {
+                    return Ok(Self::Chrome(PathBuf::from(other)));
+                }
+                anyhow::bail!("unknown trace mode '{other}' ({TRACE_GRAMMAR})")
+            }
+        }
+    }
+}
+
+impl fmt::Display for TraceMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Off => write!(f, "off"),
+            Self::Memory => write!(f, "memory"),
+            Self::Chrome(p) => write!(f, "chrome:{}", p.display()),
+        }
+    }
+}
+
+/// Pluggable destination for finished traces. The engine drains its
+/// cluster's tracer into the sink after every query and ingest.
+#[derive(Debug)]
+pub enum TraceSink {
+    /// Discard everything; the tracer stays disabled (default).
+    Null,
+    /// Hand the trace back to the caller on the outcome.
+    InMemory,
+    /// Append to a Chrome-trace file, rewriting it whole on each drain
+    /// so the file is valid JSON after every query.
+    Chrome(ChromeTraceWriter),
+}
+
+impl TraceSink {
+    pub fn from_mode(mode: TraceMode) -> Self {
+        match mode {
+            TraceMode::Off => Self::Null,
+            TraceMode::Memory => Self::InMemory,
+            TraceMode::Chrome(path) => Self::Chrome(ChromeTraceWriter::new(path)),
+        }
+    }
+
+    /// Whether the tracer feeding this sink should collect spans.
+    pub fn wants_spans(&self) -> bool {
+        !matches!(self, Self::Null)
+    }
+
+    /// Drain `tracer` into this sink, returning the trace for the
+    /// outcome (None under `Null`). Chrome write failures are hard
+    /// errors: the caller asked for a file.
+    pub fn drain(&mut self, tracer: &mut Tracer) -> anyhow::Result<Option<Trace>> {
+        match self {
+            Self::Null => {
+                tracer.take();
+                Ok(None)
+            }
+            Self::InMemory => Ok(tracer.take()),
+            Self::Chrome(writer) => match tracer.take() {
+                None => Ok(None),
+                Some(trace) => {
+                    writer.append(&trace)?;
+                    Ok(Some(trace))
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn disabled_tracer_is_all_noops() {
+        let mut t = Tracer::disabled();
+        let id = t.open(SpanKind::Query, "q", 0.0);
+        assert_eq!(id, 0);
+        t.attr(id, "k", "v");
+        t.close(id, 1.0);
+        t.record_attempts(
+            id,
+            &[AttemptRecord {
+                partition: 0,
+                executor: 0,
+                attempt: 0,
+                outcome: AttemptOutcome::Ok,
+                model_secs: 0.0,
+                wall_secs: 0.0,
+                fault: None,
+            }],
+        );
+        assert_eq!(t.take(), None);
+    }
+
+    #[test]
+    fn open_close_builds_a_tree() {
+        let mut t = Tracer::disabled();
+        t.set_enabled(true);
+        let root = t.open(SpanKind::Query, "q", 0.0);
+        let stage = t.open(SpanKind::Stage, "stage 0", 0.0);
+        t.set_stage(stage, 0);
+        t.record_attempts(
+            stage,
+            &[
+                AttemptRecord {
+                    partition: 1,
+                    executor: 1,
+                    attempt: 0,
+                    outcome: AttemptOutcome::Ok,
+                    model_secs: 0.5,
+                    wall_secs: 0.1,
+                    fault: None,
+                },
+                AttemptRecord {
+                    partition: 0,
+                    executor: 0,
+                    attempt: 0,
+                    outcome: AttemptOutcome::Ok,
+                    model_secs: 0.25,
+                    wall_secs: 0.05,
+                    fault: None,
+                },
+            ],
+        );
+        t.close(stage, 1.0);
+        t.close(root, 2.0);
+        let trace = t.take().unwrap();
+        assert!(trace.is_well_formed());
+        assert_eq!(trace.roots().count(), 1);
+        assert_eq!(trace.spans_of_kind(SpanKind::Attempt).count(), 2);
+        // attempts stitched in partition order regardless of arrival order
+        let parts: Vec<usize> = trace
+            .spans_of_kind(SpanKind::Attempt)
+            .map(|s| s.partition.unwrap())
+            .collect();
+        assert_eq!(parts, vec![0, 1]);
+        // attempt leaves hang off the stage, the stage off the root
+        for a in trace.spans_of_kind(SpanKind::Attempt) {
+            assert_eq!(a.parent, stage);
+        }
+        assert_eq!(trace.span(stage).unwrap().parent, root);
+        // a second take starts a fresh trace with fresh ids
+        let id = t.open(SpanKind::Query, "q2", 0.0);
+        assert_eq!(id, 1);
+    }
+
+    #[test]
+    fn trace_mode_grammar_roundtrips() {
+        for s in ["off", "memory", "chrome:/tmp/t.json", "trace.json"] {
+            let m = TraceMode::from_str(s).unwrap();
+            let again = TraceMode::from_str(&m.to_string()).unwrap();
+            assert_eq!(m, again, "{s}");
+        }
+        assert_eq!(TraceMode::from_str("off").unwrap(), TraceMode::Off);
+        assert_eq!(
+            TraceMode::from_str("t.json").unwrap(),
+            TraceMode::Chrome(PathBuf::from("t.json"))
+        );
+        assert!(TraceMode::from_str("chrome:").is_err());
+        assert!(TraceMode::from_str("perfetto").is_err());
+        assert!(TraceMode::from_str("").is_err());
+    }
+
+    #[test]
+    fn malformed_trees_are_rejected() {
+        let mk = |kind, id, parent| Span {
+            id,
+            parent,
+            kind,
+            name: String::new(),
+            start_model_s: 0.0,
+            end_model_s: 0.0,
+            start_wall_s: 0.0,
+            end_wall_s: 0.0,
+            stage: None,
+            partition: None,
+            executor: None,
+            attempt: None,
+            outcome: None,
+            attrs: Vec::new(),
+        };
+        // attempt at the root
+        let t = Trace {
+            spans: vec![mk(SpanKind::Attempt, 1, 0)],
+        };
+        assert!(!t.is_well_formed());
+        // attempt under another attempt
+        let t = Trace {
+            spans: vec![
+                mk(SpanKind::Query, 1, 0),
+                mk(SpanKind::Stage, 2, 1),
+                mk(SpanKind::Attempt, 3, 2),
+                mk(SpanKind::Attempt, 4, 3),
+            ],
+        };
+        assert!(!t.is_well_formed());
+        // dangling parent
+        let t = Trace {
+            spans: vec![mk(SpanKind::Query, 1, 0), mk(SpanKind::Stage, 2, 9)],
+        };
+        assert!(!t.is_well_formed());
+        // a bare stage root is fine (cluster used without an engine)
+        let t = Trace {
+            spans: vec![mk(SpanKind::Stage, 1, 0)],
+        };
+        assert!(t.is_well_formed());
+    }
+}

@@ -1,0 +1,102 @@
+//! Self-sketched stage statistics: per-stage task-latency summaries
+//! computed by feeding attempt durations through our own
+//! [`GkCore`](crate::sketch::GkCore) — the system measuring itself with
+//! the algorithm it implements (the Moments-sketch framing: quantile
+//! sketches as the backbone of telemetry aggregation).
+//!
+//! The input is `RunMetrics::stage_attempt_us` — one `Vec<u32>` of
+//! per-task virtual-clock durations (µs) per `map_partitions` stage,
+//! recorded unconditionally (independent of tracing). Stats ride every
+//! `MetricsReport` and the BENCH json records.
+
+use crate::sketch::GkCore;
+use crate::Key;
+
+/// ε of the latency sketch. Stage task counts are small (≤ partitions),
+/// so a tight ε costs nothing and keeps the percentiles near-exact.
+const STATS_EPSILON: f64 = 0.01;
+
+/// Task-latency summary of one `map_partitions` stage: percentiles from
+/// the GK sketch, maximum exact. Durations are virtual-clock µs, so the
+/// numbers are deterministic and mode-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageStats {
+    /// Stage index within the run this report covers (0-based).
+    pub stage: u64,
+    /// Tasks (= partitions) the stage ran.
+    pub tasks: u64,
+    pub p50_us: u32,
+    pub p95_us: u32,
+    pub p99_us: u32,
+    pub max_us: u32,
+}
+
+/// Summarize every stage of a run. Empty stages (none in practice — a
+/// stage always runs ≥ 1 task) are skipped.
+pub fn stage_stats(stage_attempt_us: &[Vec<u32>]) -> Vec<StageStats> {
+    stage_attempt_us
+        .iter()
+        .enumerate()
+        .filter(|(_, durs)| !durs.is_empty())
+        .map(|(stage, durs)| {
+            let mut sorted: Vec<Key> = durs.iter().map(|&d| d.min(i32::MAX as u32) as Key).collect();
+            sorted.sort_unstable();
+            let core = GkCore::from_sorted(&sorted, STATS_EPSILON);
+            let pct = |q: f64| core.query_quantile(q).unwrap_or(0).max(0) as u32;
+            StageStats {
+                stage: stage as u64,
+                tasks: durs.len() as u64,
+                p50_us: pct(0.5),
+                p95_us: pct(0.95),
+                p99_us: pct(0.99),
+                max_us: *sorted.last().expect("nonempty") as u32,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_yields_no_stats() {
+        assert!(stage_stats(&[]).is_empty());
+        assert!(stage_stats(&[Vec::new()]).is_empty());
+    }
+
+    #[test]
+    fn single_task_stage_is_exact() {
+        let stats = stage_stats(&[vec![1_500]]);
+        assert_eq!(stats.len(), 1);
+        let s = stats[0];
+        assert_eq!((s.stage, s.tasks), (0, 1));
+        assert_eq!(
+            (s.p50_us, s.p95_us, s.p99_us, s.max_us),
+            (1_500, 1_500, 1_500, 1_500)
+        );
+    }
+
+    #[test]
+    fn percentiles_track_the_distribution() {
+        // 100 tasks: 99 take ~1000µs, one straggler takes 100_000µs
+        let mut durs: Vec<u32> = (0..99).map(|i| 1_000 + i).collect();
+        durs.push(100_000);
+        let stats = stage_stats(&[durs]);
+        let s = stats[0];
+        assert_eq!(s.tasks, 100);
+        assert!((1_000..1_100).contains(&s.p50_us), "p50 {}", s.p50_us);
+        assert!(s.p95_us < 100_000, "p95 {} must exclude the straggler", s.p95_us);
+        assert_eq!(s.max_us, 100_000, "max is exact");
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+    }
+
+    #[test]
+    fn stages_keep_their_index() {
+        let stats = stage_stats(&[vec![10, 20], vec![30, 40, 50]]);
+        assert_eq!(stats.len(), 2);
+        assert_eq!((stats[0].stage, stats[0].tasks), (0, 2));
+        assert_eq!((stats[1].stage, stats[1].tasks), (1, 3));
+        assert_eq!(stats[1].max_us, 50);
+    }
+}

@@ -25,6 +25,7 @@ use crate::algorithms::approx_quantile::{sketch_partition, SketchVariant};
 use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
 use crate::cluster::Cluster;
+use crate::obs::{SpanKind, Trace};
 use crate::Key;
 
 /// One ingestion unit: the records that arrived since the last tick.
@@ -79,6 +80,10 @@ pub struct IngestOutcome {
     pub store_bytes: u64,
     /// The ingest's own cost: metrics delta for exactly this call.
     pub report: MetricsReport,
+    /// The ingest's span tree, filled in by the engine when it drains a
+    /// span-collecting sink; `None` for standalone ingestor use or the
+    /// default `TraceSink::Null`.
+    pub trace: Option<Trace>,
 }
 
 impl StreamIngestor {
@@ -129,6 +134,12 @@ impl StreamIngestor {
         let batch_records = data.len();
         let eps = self.epsilon;
         let variant = self.variant;
+        let iid = cluster
+            .tracer
+            .open(SpanKind::Ingest, format!("ingest {stream}"), clock0);
+        cluster.tracer.attr(iid, "stream", stream);
+        cluster.tracer.attr(iid, "records", batch_records);
+        cluster.tracer.attr(iid, "epsilon", eps);
         // the ingest-time sketch pass: same per-partition construction as
         // the batch path's round 1 (Bulk = radix sort + zero-slack
         // from_sorted), one O(1/ε) summary per partition
@@ -136,7 +147,14 @@ impl StreamIngestor {
         // failed micro-batch leaves the store exactly unchanged — no
         // partially sealed epoch to poison later queries
         let pending =
-            cluster.map_partitions(&data, |part, _| sketch_partition(variant, eps, part))?;
+            match cluster.map_partitions(&data, |part, _| sketch_partition(variant, eps, part)) {
+                Ok(p) => p,
+                Err(e) => {
+                    let now = cluster.elapsed_secs();
+                    cluster.tracer.close(iid, now);
+                    return Err(e.into());
+                }
+            };
         let sketches = cluster.collect(pending);
 
         let epoch = store.seal_epoch(stream, data, sketches)?;
@@ -157,6 +175,11 @@ impl StreamIngestor {
         };
 
         let state = store.stream(stream).expect("epoch just sealed");
+        {
+            let now = cluster.elapsed_secs();
+            cluster.tracer.attr(iid, "epoch", epoch);
+            cluster.tracer.close(iid, now);
+        }
         let delta = cluster.metrics.since(&base);
         let report = MetricsReport::from_metrics(
             "Stream Ingest",
@@ -176,6 +199,7 @@ impl StreamIngestor {
             bytes_rewritten,
             store_bytes: state.store_bytes(),
             report,
+            trace: None,
         })
     }
 }

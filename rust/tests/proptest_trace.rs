@@ -1,0 +1,307 @@
+//! Property tests for the span-tracing layer: for any random cluster
+//! geometry, dataset, and recoverable [`FaultPlan`], the trace tree is
+//!
+//! * structurally well-formed (one root, attempts under stages, parents
+//!   resolve backwards),
+//! * identical in shape under `ExecMode::Sequential` and
+//!   `ExecMode::Threads` (attempt stitching is deterministic),
+//! * an exact ledger of the fault layer — retry and speculation spans
+//!   appear exactly where the plan injects them, and a recovered run
+//!   differs from the fault-free run only by its attempt spans —
+//!
+//! and the default `TraceSink::Null` is invisible: same values, same
+//! protocol counters, no trace on the outcome. Every engine here pins
+//! its trace mode explicitly, so `GKSELECT_TRACE` (like the CI chaos
+//! job's `GKSELECT_FAULTS` in `proptest_faults.rs`) cannot perturb what
+//! these properties measure.
+
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::{ClusterConfig, ExecMode, FaultPlan};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source};
+use gkselect::obs::{AttemptOutcome, SpanKind, Trace, TraceMode};
+use gkselect::stream::MicroBatch;
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+fn gen_geometry(g: &mut Gen) -> (usize, usize) {
+    let executors = g.usize_in(1, 4);
+    let partitions = executors * g.usize_in(1, 4);
+    (executors, partitions)
+}
+
+fn gen_values(g: &mut Gen) -> Vec<Key> {
+    let n = g.usize_in(1, 1_500);
+    (0..n).map(|_| g.i32_in(-500_000, 500_000)).collect()
+}
+
+/// Recoverable plan (every fault retires within the default budget);
+/// straggler multipliers avoid the 2.0 speculation boundary so
+/// speculative outcomes are mode-independent.
+fn gen_recoverable_plan(g: &mut Gen, partitions: usize) -> FaultPlan {
+    let mut plan = FaultPlan::seeded(g.u64())
+        .panics(g.f64_unit() * 0.25)
+        .transients(g.f64_unit() * 0.3);
+    if g.bool() {
+        let mult = if g.bool() {
+            2.5 + g.f64_unit() * 3.0
+        } else {
+            1.0 + g.f64_unit() * 0.4
+        };
+        plan = plan.stragglers(g.f64_unit() * 0.5, mult);
+    }
+    if g.bool() {
+        plan = plan.panic_task(g.usize_in(0, 1) as u64, g.usize_in(0, partitions - 1));
+    }
+    plan
+}
+
+fn engine(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    faults: Option<FaultPlan>,
+    trace: TraceMode,
+) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(
+            ClusterConfig::local(executors, partitions)
+                .with_exec_mode(mode)
+                .with_fault_plan(faults),
+        )
+        .algorithm(AlgoChoice::GkSelect)
+        .trace(trace)
+        .build()
+        .unwrap()
+}
+
+/// Everything about a span except its timestamps (wall clocks differ
+/// run to run; model clocks differ once faults charge retry time).
+type SpanShape = (
+    u64,
+    u64,
+    &'static str,
+    String,
+    Option<u64>,
+    Option<usize>,
+    Option<usize>,
+    Option<u32>,
+    Option<&'static str>,
+);
+
+fn shape(trace: &Trace) -> Vec<SpanShape> {
+    trace
+        .spans
+        .iter()
+        .map(|s| {
+            (
+                s.id,
+                s.parent,
+                s.kind.label(),
+                s.name.clone(),
+                s.stage,
+                s.partition,
+                s.executor,
+                s.attempt,
+                s.outcome.map(|o| o.label()),
+            )
+        })
+        .collect()
+}
+
+/// The non-attempt skeleton: what must survive fault recovery unchanged.
+fn skeleton(trace: &Trace) -> Vec<(&'static str, String, Option<u64>)> {
+    trace
+        .spans
+        .iter()
+        .filter(|s| s.kind != SpanKind::Attempt)
+        .map(|s| (s.kind.label(), s.name.clone(), s.stage))
+        .collect()
+}
+
+#[test]
+fn prop_trace_trees_are_well_formed_and_mode_identical() {
+    check("trace_tree_pinned", 20, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g), partitions).unwrap();
+        let plan = gen_recoverable_plan(g, partitions);
+        let query = QuantileQuery::Single(g.f64_unit());
+
+        // fault-free reference: one Ok attempt 0 per (stage, partition)
+        let clean = engine(executors, partitions, ExecMode::Sequential, None, TraceMode::Memory)
+            .execute(Source::Dataset(&data), query.clone())
+            .unwrap();
+        let clean_trace = clean.trace().expect("memory sink").clone();
+        assert!(clean_trace.is_well_formed());
+        assert_eq!(clean_trace.roots().count(), 1);
+        assert_eq!(clean_trace.roots().next().unwrap().kind, SpanKind::Query);
+        // GK Select fused batch protocol: 2 stages = 2 data scans
+        assert_eq!(clean_trace.spans_of_kind(SpanKind::Stage).count(), 2);
+        for s in clean_trace.spans_of_kind(SpanKind::Attempt) {
+            assert_eq!((s.attempt, s.outcome), (Some(0), Some(AttemptOutcome::Ok)));
+        }
+        assert_eq!(
+            clean_trace.spans_of_kind(SpanKind::Attempt).count(),
+            2 * partitions,
+            "one Ok attempt per partition per stage"
+        );
+
+        let mut shapes = Vec::new();
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let out = engine(executors, partitions, mode, Some(plan.clone()), TraceMode::Memory)
+                .execute(Source::Dataset(&data), query.clone())
+                .unwrap_or_else(|e| panic!("recoverable plan [{plan}] failed: {e}"));
+            assert_eq!(out.values, clean.values, "tracing must not change answers");
+            let trace = out.trace().expect("memory sink").clone();
+            assert!(trace.is_well_formed(), "malformed tree under [{plan}]");
+            assert_eq!(trace.roots().count(), 1);
+            // a recovered run differs from the fault-free run ONLY by
+            // its attempt spans: the query/stage/reduce skeleton is the
+            // same tree
+            assert_eq!(
+                skeleton(&trace),
+                skeleton(&clean_trace),
+                "fault recovery must not add or drop driver spans under [{plan}]"
+            );
+            // retries show up as extra attempt spans, one per retry
+            let extra = trace.spans_of_kind(SpanKind::Attempt).count()
+                - clean_trace.spans_of_kind(SpanKind::Attempt).count();
+            let ledger = (out.report.tasks_retried + out.report.speculative_launched) as usize;
+            assert_eq!(extra, ledger, "attempt spans must mirror the ledger under [{plan}]");
+            shapes.push(shape(&trace));
+        }
+        assert_eq!(
+            shapes[0], shapes[1],
+            "span tree must be mode-identical under [{plan}]"
+        );
+    });
+}
+
+#[test]
+fn prop_injected_faults_appear_exactly_where_planned() {
+    check("trace_attempts_placed", 20, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g), partitions).unwrap();
+        // one targeted injection: stage s, partition p, fails attempt 0
+        // once, recovered by attempt 1 (default persistence)
+        let stage = g.usize_in(0, 1) as u64;
+        let target = g.usize_in(0, partitions - 1);
+        let plan = FaultPlan::seeded(g.u64()).panic_task(stage, target);
+
+        let out = engine(
+            executors,
+            partitions,
+            ExecMode::Sequential,
+            Some(plan.clone()),
+            TraceMode::Memory,
+        )
+        .execute(Source::Dataset(&data), QuantileQuery::Single(g.f64_unit()))
+        .unwrap();
+        assert_eq!(out.report.tasks_retried, 1);
+        let trace = out.trace().unwrap();
+
+        for s in [0u64, 1] {
+            for p in 0..partitions {
+                let fates: Vec<_> = trace
+                    .spans_of_kind(SpanKind::Attempt)
+                    .filter(|a| (a.stage, a.partition) == (Some(s), Some(p)))
+                    .map(|a| (a.attempt.unwrap(), a.outcome.unwrap()))
+                    .collect();
+                if (s, p) == (stage, target) {
+                    assert_eq!(
+                        fates,
+                        vec![(0, AttemptOutcome::Panic), (1, AttemptOutcome::Ok)],
+                        "injected panic at stage {s} partition {p} under [{plan}]"
+                    );
+                    // the failed attempt records why
+                    let panic_span = trace
+                        .spans_of_kind(SpanKind::Attempt)
+                        .find(|a| {
+                            (a.stage, a.partition, a.outcome)
+                                == (Some(s), Some(p), Some(AttemptOutcome::Panic))
+                        })
+                        .unwrap();
+                    assert!(
+                        panic_span.attrs.iter().any(|(k, _)| k == "fault"),
+                        "failed attempts must carry a fault attr"
+                    );
+                } else {
+                    assert_eq!(
+                        fates,
+                        vec![(0, AttemptOutcome::Ok)],
+                        "no injection at stage {s} partition {p} under [{plan}]"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_null_sink_is_invisible() {
+    check("trace_null_invisible", 15, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g), partitions).unwrap();
+        let q = g.f64_unit();
+
+        // TraceMode::Off resolves to TraceSink::Null — the builder
+        // default — so this run IS the tracing-disabled configuration
+        let mut off_eng =
+            engine(executors, partitions, ExecMode::Sequential, None, TraceMode::Off);
+        assert!(!off_eng.cluster().tracer.is_enabled(), "Null sink keeps hooks disarmed");
+        let off = off_eng
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert!(off.trace().is_none(), "Null sink must not attach a trace");
+
+        let on = engine(executors, partitions, ExecMode::Sequential, None, TraceMode::Memory)
+            .execute(Source::Dataset(&data), QuantileQuery::Single(q))
+            .unwrap();
+        assert!(on.trace().is_some());
+
+        // everything the protocol promises is identical with and without
+        // span collection (walls aside, which no outcome field compares)
+        assert_eq!(off.values, on.values);
+        assert_eq!(off.degraded, on.degraded);
+        assert_eq!(off.report.rounds, on.report.rounds);
+        assert_eq!(off.report.data_scans, on.report.data_scans);
+        assert_eq!(off.report.exact, on.report.exact);
+        // stage latency sketches are always on, independent of tracing
+        assert_eq!(off.report.stage_stats.len(), 2);
+        assert_eq!(on.report.stage_stats.len(), 2);
+    });
+}
+
+#[test]
+fn prop_stream_ingest_and_query_get_distinct_span_kinds() {
+    check("trace_stream_kinds", 15, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let values = gen_values(g);
+        let mut eng = engine(executors, partitions, ExecMode::Sequential, None, TraceMode::Memory);
+
+        let ing = eng.ingest("s", MicroBatch::new(values)).unwrap();
+        let itrace = ing.trace.as_ref().expect("memory sink traces ingests");
+        assert!(itrace.is_well_formed());
+        assert_eq!(itrace.roots().count(), 1);
+        assert_eq!(itrace.roots().next().unwrap().kind, SpanKind::Ingest);
+        // streaming append path: 1 round, 1 scan over the new records
+        assert_eq!(itrace.spans_of_kind(SpanKind::Stage).count(), 1);
+        assert_eq!(
+            itrace.spans_of_kind(SpanKind::Attempt).count(),
+            partitions,
+            "one sketch task per partition"
+        );
+
+        let out = eng
+            .execute(Source::Stream("s"), QuantileQuery::Single(g.f64_unit()))
+            .unwrap();
+        let qtrace = out.trace().expect("memory sink traces stream queries");
+        assert!(qtrace.is_well_formed());
+        assert_eq!(qtrace.roots().count(), 1);
+        assert_eq!(qtrace.roots().next().unwrap().kind, SpanKind::StreamQuery);
+        // cached-sketch serving path: the single band-extract scan
+        assert_eq!(qtrace.spans_of_kind(SpanKind::Stage).count(), 1);
+        assert!(qtrace
+            .spans_of_kind(SpanKind::Attempt)
+            .all(|a| a.outcome == Some(AttemptOutcome::Ok)));
+    });
+}

@@ -13,9 +13,19 @@ Two classes of check, per run (keyed by algorithm x exec_mode):
   more than --max-regress; simd_speedup (the simd_vs_scalar record) must
   not drop below baseline by more than --max-regress;
   fault_overhead_ratio (the fault_overhead record) must not grow past
-  baseline by more than --max-regress. Performance checks are skipped
-  per-field when the baseline value sits under the calibration floor
-  (an uncalibrated baseline stores 0.0 there).
+  baseline by more than --max-regress; trace_overhead_ratio (the
+  trace_overhead record — Null span sink vs a live Chrome sink) must
+  not grow past baseline by more than --max-regress, pinning the
+  tracing layer's disabled-path cost at ~1.0. Performance checks are
+  skipped per-field when the baseline value sits under the calibration
+  floor (an uncalibrated baseline stores 0.0 there).
+
+Named baselines: `--save-baseline <name>` snapshots the fresh JSON as
+.bench-baselines/<name>.json (only after the diff passes, when a
+baseline was resolved), and `--baseline <name>` diffs against a
+previously saved snapshot instead of the positional baseline path —
+so a box can pin its own calibrated walls without touching the
+committed repo-root baseline.
 
 Schema evolution: a key that exists in the fresh JSON but not in the
 baseline is *not yet tracked* — reported as a note, never a failure —
@@ -57,6 +67,8 @@ only comparable within one runner class. To arm the 25% gates:
 
 import argparse
 import json
+import os
+import shutil
 import sys
 
 
@@ -75,8 +87,17 @@ def load_runs(path):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
+    ap.add_argument("baseline", nargs="?",
+                    help="baseline JSON path (or use --baseline <name>)")
     ap.add_argument("fresh")
+    ap.add_argument("--baseline", dest="baseline_name", metavar="NAME",
+                    help="diff against the saved .bench-baselines/<NAME>.json "
+                         "instead of the positional baseline path")
+    ap.add_argument("--save-baseline", dest="save_baseline", metavar="NAME",
+                    help="snapshot the fresh JSON as "
+                         ".bench-baselines/<NAME>.json (after a passing diff)")
+    ap.add_argument("--baselines-dir", default=".bench-baselines",
+                    help="where named baselines live (default .bench-baselines)")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed relative regression (default 0.25)")
     ap.add_argument("--min-wall", type=float, default=1e-4,
@@ -92,8 +113,25 @@ def main():
                          "uncalibrated; skip")
     args = ap.parse_args()
 
-    base_runs = load_runs(args.baseline)
+    base_path = args.baseline
+    if args.baseline_name:
+        base_path = os.path.join(args.baselines_dir,
+                                 args.baseline_name + ".json")
+        if not os.path.exists(base_path):
+            print(f"error: named baseline {base_path} not found "
+                  f"(save one with --save-baseline {args.baseline_name})",
+                  file=sys.stderr)
+            return 2
     fresh_runs = load_runs(args.fresh)
+
+    if base_path is None:
+        if not args.save_baseline:
+            print("error: no baseline given (positional path, --baseline "
+                  "<name>, or --save-baseline <name>)", file=sys.stderr)
+            return 2
+        # save-only mode: nothing to diff against yet
+        return save_baseline(args)
+    base_runs = load_runs(base_path)
 
     failures = []
     checked = 0
@@ -172,6 +210,22 @@ def main():
             print(f"note: {name}: baseline fault_overhead_ratio uncalibrated "
                   f"({br}); skipping overhead check")
 
+        # span-tracing idle overhead (the trace_overhead record only):
+        # the default Null sink must stay ~free next to a live Chrome
+        # sink, so the ratio may not grow past the budget once calibrated
+        bt = base.get("trace_overhead_ratio", 0.0)
+        ft = fresh.get("trace_overhead_ratio", 0.0)
+        if bt >= args.min_ratio:
+            checked += 1
+            if ft > bt * (1 + args.max_regress):
+                failures.append(
+                    f"{name}: trace_overhead_ratio {bt:.3f} -> {ft:.3f} "
+                    f"(+{(ft / bt - 1) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif "trace_overhead_ratio" in base:
+            print(f"note: {name}: baseline trace_overhead_ratio uncalibrated "
+                  f"({bt}); skipping overhead check")
+
         # SIMD tile throughput win (the simd_vs_scalar record only)
         bs = base.get("simd_speedup", 0.0)
         fs = fresh.get("simd_speedup", 0.0)
@@ -193,8 +247,21 @@ def main():
         print(f"\n{len(failures)} perf-tracking regression(s):")
         for f in failures:
             print(f"  FAIL {f}")
+        if args.save_baseline:
+            print(f"note: not saving baseline '{args.save_baseline}' over a "
+                  f"failing diff")
         return 1
     print(f"\nperf tracking OK: {checked} checks across {len(base_runs)} runs")
+    if args.save_baseline:
+        return save_baseline(args)
+    return 0
+
+
+def save_baseline(args):
+    os.makedirs(args.baselines_dir, exist_ok=True)
+    dest = os.path.join(args.baselines_dir, args.save_baseline + ".json")
+    shutil.copyfile(args.fresh, dest)
+    print(f"saved baseline {dest}")
     return 0
 
 

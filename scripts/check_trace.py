@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace file emitted by `repro trace` / TraceSink::Chrome.
+
+Checks the contract the CI `trace` job pins (stdlib only, exit 0/1/2):
+
+* the file is valid JSON with a non-empty `traceEvents` array;
+* every event is a complete-span record: `ph` == "X", string `name`
+  and `cat`, numeric `ts` / `dur` (µs, dur >= 0), integer `pid` /
+  `tid`, and an `args` object carrying `span_id` (> 0);
+* `cat` is one of the span kinds the tracer emits;
+* within each pid (one drained trace per pid) span ids are unique and
+  every non-zero `parent_id` resolves to an earlier-opened span id in
+  the same pid — the tree property `repro trace` promises;
+* each pid has at least one root (parent_id 0);
+* attempt spans (`cat` == "attempt") carry `partition`, `attempt` and
+  an `outcome` drawn from the attempt-outcome vocabulary.
+
+Usage: check_trace.py trace.json [--expect-attempts] [--expect-roots N]
+       [--expect-outcome KIND ...]
+
+`--expect-attempts` additionally requires at least one attempt span;
+`--expect-roots N` pins the root-span count (batch workload = 1 query
+root); `--expect-outcome KIND` (repeatable) requires at least one
+attempt span with that outcome — the chaos workload must show `panic`
+(a retried attempt) and `speculative-win` (a straggler mitigation).
+"""
+
+import argparse
+import json
+import sys
+
+SPAN_KINDS = {"query", "stream-query", "ingest", "stage", "reduce", "attempt"}
+ATTEMPT_OUTCOMES = {
+    "ok",
+    "panic",
+    "transient",
+    "lost",
+    "speculative-win",
+    "speculative-loss",
+}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace")
+    ap.add_argument("--expect-attempts", action="store_true",
+                    help="require at least one attempt span (chaos runs)")
+    ap.add_argument("--expect-roots", type=int, default=None,
+                    help="pin the total root-span count across all pids")
+    ap.add_argument("--expect-outcome", action="append", default=[],
+                    metavar="KIND", choices=sorted(ATTEMPT_OUTCOMES),
+                    help="require at least one attempt span with this "
+                         "outcome (repeatable)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read {args.trace}: {e}", file=sys.stderr)
+        return 2
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return fail("traceEvents missing or empty")
+
+    seen = {}  # pid -> set of span ids opened so far (events are in order)
+    roots = 0
+    attempts = 0
+    outcomes_seen = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            return fail(f"{where}: not an object")
+        if ev.get("ph") != "X":
+            return fail(f"{where}: ph is {ev.get('ph')!r}, want 'X'")
+        for key in ("name", "cat"):
+            if not isinstance(ev.get(key), str) or not ev[key]:
+                return fail(f"{where}: missing string {key}")
+        if ev["cat"] not in SPAN_KINDS:
+            return fail(f"{where}: unknown span kind {ev['cat']!r}")
+        for key in ("ts", "dur"):
+            if not isinstance(ev.get(key), (int, float)):
+                return fail(f"{where}: missing numeric {key}")
+        if ev["dur"] < 0:
+            return fail(f"{where}: negative dur {ev['dur']}")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                return fail(f"{where}: missing integer {key}")
+        span_args = ev.get("args")
+        if not isinstance(span_args, dict):
+            return fail(f"{where}: missing args object")
+        sid = span_args.get("span_id")
+        if not isinstance(sid, int) or sid <= 0:
+            return fail(f"{where}: args.span_id missing or not a positive int")
+        parent = span_args.get("parent_id", 0)
+        if not isinstance(parent, int) or parent < 0:
+            return fail(f"{where}: args.parent_id must be a non-negative int")
+
+        ids = seen.setdefault(ev["pid"], set())
+        if sid in ids:
+            return fail(f"{where}: duplicate span id {sid} in pid {ev['pid']}")
+        if parent == 0:
+            roots += 1
+        elif parent not in ids:
+            return fail(
+                f"{where}: parent_id {parent} does not resolve to an "
+                f"earlier span in pid {ev['pid']}"
+            )
+        ids.add(sid)
+
+        if ev["cat"] == "attempt":
+            attempts += 1
+            outcome = span_args.get("outcome")
+            if outcome not in ATTEMPT_OUTCOMES:
+                return fail(f"{where}: attempt outcome {outcome!r} not in "
+                            f"{sorted(ATTEMPT_OUTCOMES)}")
+            outcomes_seen.add(outcome)
+            for key in ("partition", "attempt"):
+                if not isinstance(span_args.get(key), int):
+                    return fail(f"{where}: attempt span missing integer {key}")
+
+    if roots == 0:
+        return fail("no root spans (parent_id 0) anywhere in the trace")
+    if args.expect_roots is not None and roots != args.expect_roots:
+        return fail(f"root-span count {roots}, expected {args.expect_roots}")
+    if args.expect_attempts and attempts == 0:
+        return fail("expected attempt spans, found none")
+    for kind in args.expect_outcome:
+        if kind not in outcomes_seen:
+            return fail(f"expected an attempt span with outcome {kind!r}; "
+                        f"saw {sorted(outcomes_seen)}")
+
+    print(
+        f"trace OK: {len(events)} spans, {len(seen)} trace(s), "
+        f"{roots} root(s), {attempts} attempt span(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
