@@ -178,6 +178,11 @@ pub(crate) fn select_with_sketch_with(
         .expect("nonempty dataset");
     debug_assert_eq!(merged.band.total(), n);
     debug_assert_eq!(merged.pivot.total(), n);
+    // band-efficiency ledger: candidates that actually reached the
+    // driver vs the 16εn+64 bound they were allowed — merge() truncates
+    // at the budget, so shipped ≤ budget holds structurally
+    cluster.metrics.band_candidates += merged.candidates.len() as u64;
+    cluster.metrics.band_budget += budget as u64;
 
     let (lt, eq) = (merged.pivot.lt, merged.pivot.eq);
     if lt <= k && k < lt + eq {

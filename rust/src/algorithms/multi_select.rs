@@ -154,6 +154,14 @@ pub(crate) fn quantiles_with_sketch_with(
             )
         })
         .expect("nonempty dataset");
+    // band-efficiency ledger: each of the m fused queries ran under its
+    // own 16εn+64 budget; shipped ≤ budget per query (merge truncates)
+    cluster.metrics.band_candidates += merged
+        .0
+        .iter()
+        .map(|e| e.candidates.len() as u64)
+        .sum::<u64>();
+    cluster.metrics.band_budget += (budget * queries.len()) as u64;
 
     // per-query resolution: eq-run exit, band resolve, or open with Δk
     let mut values: Vec<Option<Key>> = vec![None; qs.len()];

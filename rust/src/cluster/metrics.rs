@@ -72,12 +72,33 @@ pub struct RunMetrics {
     /// (`DegradePolicy::SketchAnswer`); incremented by the engine, not
     /// the substrate.
     pub degraded_queries: u64,
+    /// Band candidates actually shipped to the driver by GK Select's
+    /// fused band extract (Σ over band-extract scans). Together with
+    /// [`Self::band_budget`] this makes the paper's no-full-shuffle
+    /// claim observable: shipped / budget ≤ 1.0 always, because the
+    /// extract truncates at the budget.
+    pub band_candidates: u64,
+    /// Σ of the 16εn+64 candidate budgets those extracts ran under
+    /// (`default_candidate_budget`, or the caller's explicit override).
+    pub band_budget: u64,
 }
 
 impl RunMetrics {
-    /// Total network volume — the paper's Table V "Network volume" column.
-    pub fn network_volume(&self) -> u64 {
+    /// Bytes that crossed the network fabric — driver collects, shuffles,
+    /// treeReduce hops, and broadcasts. Deliberately **excludes**
+    /// [`Self::bytes_persisted`]: persists are local storage writes, not
+    /// traffic, and the paper's Table V "Network volume" column counts
+    /// movement only. Use [`Self::bytes_total`] when the storage ledger
+    /// must be included.
+    pub fn bytes_moved(&self) -> u64 {
         self.bytes_to_driver + self.bytes_shuffled + self.bytes_tree_reduced + self.bytes_broadcast
+    }
+
+    /// Every byte the substrate touched on behalf of the run:
+    /// [`Self::bytes_moved`] plus [`Self::bytes_persisted`] — the
+    /// all-five-ledgers total the metrics registry accumulates.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_moved() + self.bytes_persisted
     }
 
     /// Take a per-operation snapshot marker at the ledger's current
@@ -110,6 +131,8 @@ impl RunMetrics {
             speculative_launched: self.speculative_launched,
             speculative_wins: self.speculative_wins,
             degraded_queries: self.degraded_queries,
+            band_candidates: self.band_candidates,
+            band_budget: self.band_budget,
         }
     }
 
@@ -154,6 +177,8 @@ impl RunMetrics {
             speculative_launched: self.speculative_launched - base.speculative_launched,
             speculative_wins: self.speculative_wins - base.speculative_wins,
             degraded_queries: self.degraded_queries - base.degraded_queries,
+            band_candidates: self.band_candidates - base.band_candidates,
+            band_budget: self.band_budget - base.band_budget,
         }
     }
 
@@ -213,6 +238,8 @@ pub struct MetricsMark {
     speculative_launched: u64,
     speculative_wins: u64,
     degraded_queries: u64,
+    band_candidates: u64,
+    band_budget: u64,
 }
 
 /// One algorithm's end-of-run report: metrics + modelled elapsed time.
@@ -228,10 +255,18 @@ pub struct MetricsReport {
     pub data_scans: u64,
     pub shuffles: u64,
     pub persists: u64,
+    /// Network traffic only — [`RunMetrics::bytes_moved`]; excludes
+    /// `bytes_persisted` (see [`Self::bytes_total`]).
     pub network_volume_bytes: u64,
     pub bytes_to_driver: u64,
     pub bytes_shuffled: u64,
+    pub bytes_tree_reduced: u64,
     pub bytes_broadcast: u64,
+    /// Bytes written by persists — storage, not traffic; the fifth
+    /// ledger, carried separately so the registry never conflates the
+    /// two (see [`RunMetrics::bytes_moved`] vs
+    /// [`RunMetrics::bytes_total`]).
+    pub bytes_persisted: u64,
     pub messages: u64,
     pub tree_levels: u64,
     /// Real wall-clock per `map_partitions` stage (see
@@ -247,6 +282,12 @@ pub struct MetricsReport {
     /// [`RunMetrics::stage_attempt_us`] — one entry per
     /// `map_partitions` stage.
     pub stage_stats: Vec<StageStats>,
+    /// The raw per-task durations behind `stage_stats`, one inner vector
+    /// per stage. Carried on the report so the engine-lifetime
+    /// [`crate::obs::registry::MetricsRegistry`] can fold true samples
+    /// into its per-kind latency sketches instead of re-sketching
+    /// percentiles of percentiles.
+    pub stage_attempt_us: Vec<Vec<u32>>,
     /// Σ busy / (E × Σ wall), from [`RunMetrics::executor_utilization`].
     pub executor_utilization: f64,
     /// max busy / mean busy, from [`RunMetrics::busy_skew`].
@@ -267,6 +308,10 @@ pub struct MetricsReport {
     pub speculative_wins: u64,
     /// Queries answered from the sketch after a stage failure.
     pub degraded_queries: u64,
+    /// Band candidates shipped by the run's band-extract scans.
+    pub band_candidates: u64,
+    /// Σ candidate budgets (16εn+64 bound) those scans ran under.
+    pub band_budget: u64,
     pub exact: bool,
 }
 
@@ -291,16 +336,19 @@ impl MetricsReport {
             data_scans: m.data_scans,
             shuffles: m.shuffles,
             persists: m.persists,
-            network_volume_bytes: m.network_volume(),
+            network_volume_bytes: m.bytes_moved(),
             bytes_to_driver: m.bytes_to_driver,
             bytes_shuffled: m.bytes_shuffled,
+            bytes_tree_reduced: m.bytes_tree_reduced,
             bytes_broadcast: m.bytes_broadcast,
+            bytes_persisted: m.bytes_persisted,
             messages: m.messages,
             tree_levels: m.tree_levels,
             stage_walls: m.stage_walls.clone(),
             wall_stage_secs: m.wall_stage_secs,
             executor_busy_secs: m.executor_busy_secs.clone(),
             stage_stats: stage_stats(&m.stage_attempt_us),
+            stage_attempt_us: m.stage_attempt_us.clone(),
             executor_utilization: m.executor_utilization(),
             busy_skew: m.busy_skew(),
             simd_lane_width: 1,
@@ -309,7 +357,29 @@ impl MetricsReport {
             speculative_launched: m.speculative_launched,
             speculative_wins: m.speculative_wins,
             degraded_queries: m.degraded_queries,
+            band_candidates: m.band_candidates,
+            band_budget: m.band_budget,
             exact,
+        }
+    }
+
+    /// Network traffic plus the persist ledger —
+    /// [`RunMetrics::bytes_total`] at report granularity. The registry
+    /// accumulates this as `bytes_total`; `network_volume_bytes` stays
+    /// the Table V movement-only column.
+    pub fn bytes_total(&self) -> u64 {
+        self.network_volume_bytes + self.bytes_persisted
+    }
+
+    /// Band efficiency: candidates actually shipped over the 16εn+64
+    /// budget they were allowed — the paper's no-full-shuffle claim as
+    /// a ratio. Structurally ≤ 1.0 (the extract truncates at the
+    /// budget); 0.0 when the run performed no band extract.
+    pub fn band_efficiency(&self) -> f64 {
+        if self.band_budget == 0 {
+            0.0
+        } else {
+            self.band_candidates as f64 / self.band_budget as f64
         }
     }
 
@@ -336,7 +406,9 @@ impl MetricsReport {
         self.network_volume_bytes += other.network_volume_bytes;
         self.bytes_to_driver += other.bytes_to_driver;
         self.bytes_shuffled += other.bytes_shuffled;
+        self.bytes_tree_reduced += other.bytes_tree_reduced;
         self.bytes_broadcast += other.bytes_broadcast;
+        self.bytes_persisted += other.bytes_persisted;
         self.messages += other.messages;
         self.tree_levels += other.tree_levels;
         self.faults_injected += other.faults_injected;
@@ -344,6 +416,8 @@ impl MetricsReport {
         self.speculative_launched += other.speculative_launched;
         self.speculative_wins += other.speculative_wins;
         self.degraded_queries += other.degraded_queries;
+        self.band_candidates += other.band_candidates;
+        self.band_budget += other.band_budget;
         self.stage_walls.extend_from_slice(&other.stage_walls);
         // concatenate stage stats, renumbering the absorbed run's stages
         // to follow this one's
@@ -352,6 +426,8 @@ impl MetricsReport {
             stage: offset + s.stage,
             ..*s
         }));
+        self.stage_attempt_us
+            .extend(other.stage_attempt_us.iter().cloned());
         self.wall_stage_secs += other.wall_stage_secs;
         for (i, &busy) in other.executor_busy_secs.iter().enumerate() {
             if i < self.executor_busy_secs.len() {
@@ -418,15 +494,51 @@ mod tests {
     use super::*;
 
     #[test]
-    fn network_volume_sums_components() {
+    fn bytes_moved_excludes_persists_and_bytes_total_includes_them() {
         let m = RunMetrics {
             bytes_to_driver: 10,
             bytes_shuffled: 20,
             bytes_tree_reduced: 30,
             bytes_broadcast: 40,
+            bytes_persisted: 7,
             ..Default::default()
         };
-        assert_eq!(m.network_volume(), 100);
+        // movement only: the four network ledgers, never the persist one
+        assert_eq!(m.bytes_moved(), 100);
+        // the all-five total the registry accumulates
+        assert_eq!(m.bytes_total(), 107);
+        let r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.network_volume_bytes, 100, "Table V column = movement");
+        assert_eq!(r.bytes_tree_reduced, 30);
+        assert_eq!(r.bytes_persisted, 7);
+        assert_eq!(r.bytes_total(), 107);
+    }
+
+    #[test]
+    fn band_counters_flow_through_marks_reports_and_absorb() {
+        let m = RunMetrics {
+            band_candidates: 120,
+            band_budget: 200,
+            ..Default::default()
+        };
+        let d = m.since(&RunMetrics::default().mark());
+        assert_eq!(d.band_candidates, 120);
+        assert_eq!(d.band_budget, 200);
+        let mut r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        assert_eq!(r.band_candidates, 120);
+        assert!((r.band_efficiency() - 0.6).abs() < 1e-12);
+        let other = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
+        r.absorb(&other);
+        assert_eq!(r.band_candidates, 240);
+        assert_eq!(r.band_budget, 400);
+        assert!((r.band_efficiency() - 0.6).abs() < 1e-12);
+        // no band extract ran: the ratio degrades to 0, never NaN
+        let empty = MetricsReport::from_metrics("sort", 0, 1, 1, 0.0, &RunMetrics::default(), true);
+        assert_eq!(empty.band_efficiency(), 0.0);
+        // a fresh mark zeroes the delta
+        let z = m.since(&m.mark());
+        assert_eq!(z.band_candidates, 0);
+        assert_eq!(z.band_budget, 0);
     }
 
     #[test]
@@ -591,10 +703,13 @@ mod tests {
         let mut r = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
         assert_eq!(r.stage_stats.len(), 2);
         assert_eq!(r.stage_stats[1].max_us, 300);
+        // the raw samples ride the report for the registry's folds
+        assert_eq!(r.stage_attempt_us, m.stage_attempt_us);
         let other = MetricsReport::from_metrics("GK Select", 100, 4, 2, 0.5, &m, true);
         r.absorb(&other);
         assert_eq!(r.stage_stats.len(), 4);
         assert_eq!(r.stage_stats[2].stage, 2, "absorbed stages renumber");
+        assert_eq!(r.stage_attempt_us.len(), 4, "raw ledger concatenates too");
         // since() slices the per-stage suffix like stage_walls
         let base = m.mark();
         let mut now = m.clone();

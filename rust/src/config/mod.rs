@@ -6,7 +6,7 @@
 use crate::cluster::netmodel::NetworkModel;
 use crate::cluster::{ClusterConfig, ExecMode, FaultPlan, RetryPolicy};
 use crate::engine::DegradePolicy;
-use crate::obs::TraceMode;
+use crate::obs::{MetricsMode, TraceMode};
 use crate::runtime::{KernelBackend, SimdPolicy};
 use crate::util::minitoml::{self, Document, Section, Value};
 use anyhow::{Context, Result};
@@ -110,13 +110,19 @@ pub struct RuntimeSection {
 }
 
 /// Observability section (converted into a
-/// [`crate::obs::TraceMode`] on the engine builder).
+/// [`crate::obs::TraceMode`] / [`crate::obs::MetricsMode`] pair on the
+/// engine builder).
 #[derive(Debug, Clone, Default)]
 pub struct ObsSection {
     /// Trace sink in the [`crate::obs::TraceMode`] grammar:
     /// "off" | "memory" | "chrome:<path>" | a bare `*.json` path.
     /// Empty = defer to the `GKSELECT_TRACE` env var (unset → off).
     pub trace: String,
+    /// Engine-lifetime metrics mode in the
+    /// [`crate::obs::MetricsMode`] grammar:
+    /// "off" | "memory" | "prom:<path>" | "qlog:<path>".
+    /// Empty = defer to the `GKSELECT_METRICS` env var (unset → off).
+    pub metrics: String,
 }
 
 /// Fault-injection and recovery section (converted into a
@@ -283,6 +289,13 @@ impl ReproConfig {
                 .parse::<TraceMode>()
                 .with_context(|| format!("[obs] trace = {:?}", cfg.obs.trace))?;
         }
+        if !cfg.obs.metrics.is_empty() {
+            // fail config loading, not the first engine build
+            cfg.obs
+                .metrics
+                .parse::<MetricsMode>()
+                .with_context(|| format!("[obs] metrics = {:?}", cfg.obs.metrics))?;
+        }
         Ok(cfg)
     }
 
@@ -346,6 +359,7 @@ impl ReproConfig {
             },
             obs: ObsSection {
                 trace: obs.str_or("trace", &d.obs.trace),
+                metrics: obs.str_or("metrics", &d.obs.metrics),
             },
             backend: root.str_or("backend", &d.backend),
             artifacts_dir: PathBuf::from(
@@ -506,9 +520,14 @@ impl ReproConfig {
         if !self.faults.degrade.is_empty() {
             f.insert("degrade".into(), Value::Str(self.faults.degrade.clone()));
         }
-        if !self.obs.trace.is_empty() {
+        if !self.obs.trace.is_empty() || !self.obs.metrics.is_empty() {
             let o = doc.entry("obs".into()).or_default();
-            o.insert("trace".into(), Value::Str(self.obs.trace.clone()));
+            if !self.obs.trace.is_empty() {
+                o.insert("trace".into(), Value::Str(self.obs.trace.clone()));
+            }
+            if !self.obs.metrics.is_empty() {
+                o.insert("metrics".into(), Value::Str(self.obs.metrics.clone()));
+            }
         }
         minitoml::serialize(&doc)
     }
@@ -635,18 +654,32 @@ mod tests {
     fn obs_section_roundtrips_and_validates() {
         let mut c = ReproConfig::default();
         assert_eq!(c.obs.trace, "");
-        // the empty default stays out of the serialized form
+        assert_eq!(c.obs.metrics, "");
+        // the empty defaults stay out of the serialized form
         assert!(!c.to_toml().contains("[obs]"));
         c.obs.trace = "chrome:out/t.json".into();
+        c.obs.metrics = "prom:out/m.prom".into();
         let back = ReproConfig::from_toml(&c.to_toml()).unwrap();
         assert_eq!(back.obs.trace, "chrome:out/t.json");
         assert_eq!(
             back.obs.trace.parse::<TraceMode>().unwrap(),
             TraceMode::Chrome(PathBuf::from("out/t.json"))
         );
+        assert_eq!(
+            back.obs.metrics.parse::<MetricsMode>().unwrap(),
+            MetricsMode::Prom(PathBuf::from("out/m.prom"))
+        );
         // a bad mode fails at load time with section context
         let err = ReproConfig::from_toml("[obs]\ntrace = \"perfetto\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("trace"));
+        let err = ReproConfig::from_toml("[obs]\nmetrics = \"statsd\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("metrics"));
+        // metrics alone still emits the section
+        let mut only = ReproConfig::default();
+        only.obs.metrics = "memory".into();
+        let back = ReproConfig::from_toml(&only.to_toml()).unwrap();
+        assert_eq!(back.obs.metrics, "memory");
+        assert_eq!(back.obs.trace, "");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use super::EngineError;
 use crate::cluster::{ExecMode, FaultPlan};
-use crate::obs::TraceMode;
+use crate::obs::{MetricsMode, TraceMode};
 use crate::runtime::SimdPolicy;
 
 /// Environment variable selecting the executor pool mode
@@ -40,6 +40,11 @@ pub const FAULTS_VAR: &str = "GKSELECT_FAULTS";
 /// CI or a shell capture Perfetto traces from any `repro` invocation
 /// without touching flags.
 pub const TRACE_VAR: &str = "GKSELECT_TRACE";
+
+/// Environment variable selecting the engine-lifetime metrics mode
+/// (`off` | `memory` | `prom:<path>` | `qlog:<path>`) — lets CI or a
+/// shell scrape any `repro` invocation without touching flags.
+pub const METRICS_VAR: &str = "GKSELECT_METRICS";
 
 /// Parse an execution mode from a raw variable value. Pure — the
 /// testable core of [`exec_mode`].
@@ -97,6 +102,20 @@ pub fn parse_trace(raw: Option<&str>) -> Result<Option<TraceMode>, EngineError> 
     }
 }
 
+/// Parse a metrics mode from a raw variable value. Pure — the testable
+/// core of [`metrics`].
+pub fn parse_metrics(raw: Option<&str>) -> Result<Option<MetricsMode>, EngineError> {
+    match raw {
+        None => Ok(None),
+        Some("") => Ok(None),
+        Some(v) => v.parse::<MetricsMode>().map(Some).map_err(|_| EngineError::InvalidEnv {
+            var: METRICS_VAR,
+            value: v.to_string(),
+            expected: "off|memory|prom:<path>|qlog:<path>",
+        }),
+    }
+}
+
 /// Read `GKSELECT_EXEC_MODE` from the process environment.
 pub fn exec_mode() -> Result<Option<ExecMode>, EngineError> {
     let raw = std::env::var(EXEC_MODE_VAR).ok();
@@ -121,6 +140,12 @@ pub fn trace() -> Result<Option<TraceMode>, EngineError> {
     parse_trace(raw.as_deref())
 }
 
+/// Read `GKSELECT_METRICS` from the process environment.
+pub fn metrics() -> Result<Option<MetricsMode>, EngineError> {
+    let raw = std::env::var(METRICS_VAR).ok();
+    parse_metrics(raw.as_deref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +160,31 @@ mod tests {
         assert_eq!(parse_faults(Some("")).unwrap(), None);
         assert_eq!(parse_trace(None).unwrap(), None);
         assert_eq!(parse_trace(Some("")).unwrap(), None);
+        assert_eq!(parse_metrics(None).unwrap(), None);
+        assert_eq!(parse_metrics(Some("")).unwrap(), None);
+    }
+
+    #[test]
+    fn metrics_modes_parse_and_reject() {
+        use std::path::PathBuf;
+        assert_eq!(parse_metrics(Some("off")).unwrap(), Some(MetricsMode::Off));
+        assert_eq!(
+            parse_metrics(Some("memory")).unwrap(),
+            Some(MetricsMode::Memory)
+        );
+        assert_eq!(
+            parse_metrics(Some("prom:/tmp/m.prom")).unwrap(),
+            Some(MetricsMode::Prom(PathBuf::from("/tmp/m.prom")))
+        );
+        assert_eq!(
+            parse_metrics(Some("qlog:q.jsonl")).unwrap(),
+            Some(MetricsMode::Qlog(PathBuf::from("q.jsonl")))
+        );
+        let err = parse_metrics(Some("statsd")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(METRICS_VAR), "{msg}");
+        assert!(msg.contains("statsd"), "{msg}");
+        assert!(msg.contains("prom:<path>"), "{msg}");
     }
 
     #[test]

@@ -67,7 +67,10 @@ use crate::cluster::dataset::Dataset;
 use crate::cluster::metrics::MetricsReport;
 use crate::cluster::{Cluster, ClusterConfig, ExecMode, FaultPlan, RetryPolicy, StageError};
 use crate::config::ReproConfig;
-use crate::obs::{SpanKind, Trace, TraceMode, TraceSink};
+use crate::obs::registry::OpContext;
+use crate::obs::{
+    MetricsMode, MetricsRegistry, MetricsSnapshot, OpKind, SpanKind, Trace, TraceMode, TraceSink,
+};
 use crate::runtime::{backend_from_name, KernelBackend, SimdPolicy};
 use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor};
 use crate::Key;
@@ -382,6 +385,15 @@ impl QueryOutcome {
     pub fn trace(&self) -> Option<&Trace> {
         self.trace.as_ref()
     }
+
+    /// How the engine-lifetime [`MetricsRegistry`] classifies this
+    /// outcome — derived from the report's algorithm name, exactness,
+    /// and the degraded flag through the same [`OpKind::classify`] the
+    /// engine's absorb hook uses, so an outcome always lands in the
+    /// registry row its own accessor names.
+    pub fn op_kind(&self) -> OpKind {
+        OpKind::classify(&self.report.algorithm, self.report.exact, self.degraded)
+    }
 }
 
 impl From<Outcome> for QueryOutcome {
@@ -527,6 +539,7 @@ pub struct EngineBuilder {
     retry: Option<RetryPolicy>,
     degrade: Option<DegradePolicy>,
     trace: Option<TraceMode>,
+    metrics: Option<MetricsMode>,
 }
 
 impl EngineBuilder {
@@ -659,12 +672,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Select the engine-lifetime metrics mode: whether every
+    /// `execute`/`ingest` report is absorbed into the cumulative
+    /// [`MetricsRegistry`], and where its exports go. Wins over the
+    /// `[obs]` config section and `GKSELECT_METRICS`; the default
+    /// ([`MetricsMode::Off`]) keeps the registry inert so operations pay
+    /// nothing.
+    pub fn metrics(mut self, mode: MetricsMode) -> Self {
+        self.metrics = Some(mode);
+        self
+    }
+
     pub fn build(self) -> Result<QuantileEngine, EngineError> {
         let env_exec = env::exec_mode()?;
         let env_simd = env::simd_policy()?;
         let env_faults = env::faults()?;
         let env_trace = env::trace()?;
-        self.build_resolved(env_exec, env_simd, env_faults, env_trace)
+        let env_metrics = env::metrics()?;
+        self.build_resolved(env_exec, env_simd, env_faults, env_trace, env_metrics)
     }
 
     /// [`Self::build`] with the env layer injected — the pure core the
@@ -675,6 +700,7 @@ impl EngineBuilder {
         env_simd: Option<SimdPolicy>,
         env_faults: Option<FaultPlan>,
         env_trace: Option<TraceMode>,
+        env_metrics: Option<MetricsMode>,
     ) -> Result<QuantileEngine, EngineError> {
         let cfg = self.config.unwrap_or_default();
 
@@ -682,6 +708,7 @@ impl EngineBuilder {
         let exec = resolve_exec_mode(self.exec_mode, &cfg.cluster.exec_mode, env_exec)?;
         let faults = resolve_faults(self.faults.clone(), &cfg.faults.plan, env_faults)?;
         let trace = resolve_trace(self.trace.clone(), &cfg.obs.trace, env_trace)?;
+        let metrics = resolve_metrics(self.metrics.clone(), &cfg.obs.metrics, env_metrics)?;
         let retry = self.retry.unwrap_or_else(|| cfg.faults.to_retry_policy());
         let degrade = match self.degrade {
             Some(d) => d,
@@ -822,6 +849,11 @@ impl EngineBuilder {
         let sink = TraceSink::from_mode(trace);
         let mut cluster = Cluster::new(cc);
         cluster.tracer.set_enabled(sink.wants_spans());
+        let registry = MetricsRegistry::new(
+            metrics,
+            cluster.cfg.exec_mode.label(),
+            backend.simd_lane_width() as u64,
+        );
 
         Ok(QuantileEngine {
             choice,
@@ -834,6 +866,7 @@ impl EngineBuilder {
             degrade,
             sink,
             trace_seq: 0,
+            registry,
         })
     }
 }
@@ -893,6 +926,24 @@ fn resolve_trace(
     Ok(env.unwrap_or(TraceMode::Off))
 }
 
+/// Builder > config file > env for the metrics mode; `Off` when nothing
+/// speaks.
+fn resolve_metrics(
+    builder: Option<MetricsMode>,
+    file: &str,
+    env: Option<MetricsMode>,
+) -> Result<MetricsMode, EngineError> {
+    if let Some(m) = builder {
+        return Ok(m);
+    }
+    if !file.is_empty() {
+        return file
+            .parse::<MetricsMode>()
+            .map_err(|e| EngineError::InvalidConfig(format!("[obs] metrics: {e:#}")));
+    }
+    Ok(env.unwrap_or(MetricsMode::Off))
+}
+
 /// Builder > config file > env for the exec mode; `None` when nothing
 /// speaks (the caller's cluster default applies).
 fn resolve_exec_mode(
@@ -933,6 +984,8 @@ pub struct QuantileEngine {
     sink: TraceSink,
     /// Monotone id stamped onto each root span's `trace` attribute.
     trace_seq: u64,
+    /// Engine-lifetime metric totals (inert under [`MetricsMode::Off`]).
+    registry: MetricsRegistry,
 }
 
 impl QuantileEngine {
@@ -1012,6 +1065,20 @@ impl QuantileEngine {
                 out.trace = self
                     .sink
                     .drain(&mut self.cluster.tracer)
+                    .map_err(EngineError::from)?;
+                let ctx = OpContext {
+                    kind: out.op_kind(),
+                    stream: match source {
+                        Source::Stream(id) => Some(id),
+                        Source::Dataset(_) => None,
+                    },
+                    plan: query.label(),
+                    // the qlog join key: present exactly when a span
+                    // tree with the matching root attr was collected
+                    trace: self.sink.wants_spans().then_some(self.trace_seq),
+                };
+                self.registry
+                    .absorb(&ctx, &out.report, &self.store)
                     .map_err(EngineError::from)?;
                 Ok(out)
             }
@@ -1175,14 +1242,30 @@ impl QuantileEngine {
     ) -> Result<IngestOutcome, EngineError> {
         // see execute(): re-arm in case the cluster was swapped
         self.cluster.tracer.set_enabled(self.sink.wants_spans());
+        self.trace_seq += 1;
         match self
             .ingestor
             .ingest(&mut self.cluster, &mut self.store, stream, batch)
         {
             Ok(mut out) => {
+                // stamp the qlog join id onto the ingest root before the
+                // drain: the tracer is empty at every operation start
+                // (drained or cleared by the previous one), and the
+                // ingestor opens its root first, so the root is span 1;
+                // with the tracer disarmed this is a no-op
+                self.cluster.tracer.attr(1, "trace", self.trace_seq);
                 out.trace = self
                     .sink
                     .drain(&mut self.cluster.tracer)
+                    .map_err(EngineError::from)?;
+                let ctx = OpContext {
+                    kind: OpKind::Ingest,
+                    stream: Some(stream),
+                    plan: "ingest",
+                    trace: self.sink.wants_spans().then_some(self.trace_seq),
+                };
+                self.registry
+                    .absorb(&ctx, &out.report, &self.store)
                     .map_err(EngineError::from)?;
                 Ok(out)
             }
@@ -1234,6 +1317,19 @@ impl QuantileEngine {
     /// What `execute` does when a stage exhausts its retries.
     pub fn degrade_policy(&self) -> DegradePolicy {
         self.degrade
+    }
+
+    /// The engine-lifetime metrics registry. Always present — under the
+    /// default [`MetricsMode::Off`] it absorbs nothing and renders empty
+    /// exports, so callers never branch.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// A point-in-time copy of the engine-lifetime totals: per-kind
+    /// counters, task-latency summaries, and store-residency gauges.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
     }
 }
 
@@ -1451,7 +1547,7 @@ mod tests {
         cfg.cluster.nodes = 3;
         let engine = EngineBuilder::new()
             .config(cfg.clone())
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
         assert_eq!(engine.cluster().cfg.executors, 3);
@@ -1460,13 +1556,13 @@ mod tests {
             .config(cfg)
             .exec_mode(ExecMode::Sequential)
             .nodes(5)
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Sequential);
         assert_eq!(engine.cluster().cfg.executors, 5);
         // env reaches the engine when builder and file are silent
         let engine = EngineBuilder::new()
-            .build_resolved(Some(ExecMode::Threads), None, None)
+            .build_resolved(Some(ExecMode::Threads), None, None, None, None)
             .unwrap();
         assert_eq!(engine.cluster().cfg.exec_mode, ExecMode::Threads);
     }
@@ -1500,11 +1596,82 @@ mod tests {
     }
 
     #[test]
+    fn metrics_precedence_and_default_off() {
+        use std::path::PathBuf;
+        // builder > file > env > Off
+        assert_eq!(
+            resolve_metrics(Some(MetricsMode::Memory), "off", Some(MetricsMode::Off)).unwrap(),
+            MetricsMode::Memory
+        );
+        assert_eq!(
+            resolve_metrics(None, "prom:m.prom", Some(MetricsMode::Memory)).unwrap(),
+            MetricsMode::Prom(PathBuf::from("m.prom"))
+        );
+        assert_eq!(
+            resolve_metrics(None, "", Some(MetricsMode::Memory)).unwrap(),
+            MetricsMode::Memory
+        );
+        assert_eq!(resolve_metrics(None, "", None).unwrap(), MetricsMode::Off);
+        assert!(resolve_metrics(None, "statsd", None).is_err());
+
+        // the default engine's registry is inert: nothing absorbed, an
+        // empty snapshot, headers-only exposition
+        let mut engine = small_engine(AlgoChoice::GkSelect);
+        assert!(!engine.registry().is_enabled());
+        engine
+            .execute(Source::Dataset(&data_1k()), QuantileQuery::Single(0.5))
+            .unwrap();
+        let snap = engine.metrics_snapshot();
+        assert_eq!(snap.ops, 0);
+        assert!(snap.totals.is_empty());
+        assert!(engine.registry().qlog_lines().is_empty());
+    }
+
+    #[test]
+    fn registry_absorbs_batch_stream_and_ingest_rows() {
+        let mut engine = EngineBuilder::new()
+            .cluster(ClusterConfig::local(2, 4))
+            .metrics(MetricsMode::Memory)
+            .build_resolved(None, None, None, None, None)
+            .unwrap();
+        let data = data_1k();
+        let out = engine
+            .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(out.op_kind(), OpKind::Batch);
+        engine
+            .ingest("s", MicroBatch::new((0..500).collect()))
+            .unwrap();
+        let sout = engine
+            .execute(Source::Stream("s"), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(sout.op_kind(), OpKind::Stream);
+
+        let snap = engine.metrics_snapshot();
+        assert_eq!(snap.ops, 3);
+        let batch = snap.totals_for(OpKind::Batch, "").expect("batch row");
+        assert_eq!(batch.ops, 1);
+        assert_eq!((batch.rounds, batch.data_scans), (2, 2));
+        assert!(batch.band_efficiency() <= 1.0);
+        let ing = snap.totals_for(OpKind::Ingest, "s").expect("ingest row");
+        assert_eq!(ing.records, 500);
+        let stream = snap.totals_for(OpKind::Stream, "s").expect("stream row");
+        assert_eq!((stream.rounds, stream.data_scans), (1, 1));
+        // residency gauges sampled live from the store at absorb time
+        let (sid, res) = &snap.residency[0];
+        assert_eq!(sid, "s");
+        assert_eq!(res.records, 500);
+        assert!(res.sealed_epochs >= 1);
+        // one qlog line per absorbed operation, even in memory mode
+        assert_eq!(engine.registry().qlog_lines().len(), 3);
+    }
+
+    #[test]
     fn memory_traces_ride_the_outcome() {
         let mut engine = EngineBuilder::new()
             .cluster(ClusterConfig::local(2, 4))
             .trace(TraceMode::Memory)
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         let data = data_1k();
         let out = engine
@@ -1573,7 +1740,7 @@ mod tests {
                     .panic_task(1, 3)
                     .stragglers(0.5, 4.0),
             )
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         let out = engine
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1595,7 +1762,7 @@ mod tests {
         let mut failing = EngineBuilder::new()
             .cluster(ClusterConfig::local(2, 4))
             .fault_plan(plan.clone())
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         let err = failing
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1611,7 +1778,7 @@ mod tests {
             .cluster(ClusterConfig::local(2, 4))
             .fault_plan(plan)
             .degrade_policy(DegradePolicy::SketchAnswer)
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         let out = degrading
             .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
@@ -1632,7 +1799,7 @@ mod tests {
         let mut engine = EngineBuilder::new()
             .cluster(ClusterConfig::local(2, 4))
             .degrade_policy(DegradePolicy::SketchAnswer)
-            .build_resolved(None, None, None, None)
+            .build_resolved(None, None, None, None, None)
             .unwrap();
         engine
             .ingest("s", MicroBatch::new((0..1_000).collect()))
@@ -1652,13 +1819,13 @@ mod tests {
     #[test]
     fn bad_builder_knobs_are_typed_errors() {
         assert!(matches!(
-            EngineBuilder::new().epsilon(0.0).build_resolved(None, None, None, None),
+            EngineBuilder::new().epsilon(0.0).build_resolved(None, None, None, None, None),
             Err(EngineError::BadEpsilon(_))
         ));
         let mut cfg = ReproConfig::default();
         cfg.backend = "warp-drive".into();
         assert!(matches!(
-            EngineBuilder::new().config(cfg).build_resolved(None, None, None, None),
+            EngineBuilder::new().config(cfg).build_resolved(None, None, None, None, None),
             Err(EngineError::Backend(_))
         ));
         // an injected backend carries its own dispatch: an explicit
@@ -1667,7 +1834,7 @@ mod tests {
             EngineBuilder::new()
                 .kernel_backend(Box::new(NativeBackend::new()))
                 .simd(SimdPolicy::ForceScalar)
-                .build_resolved(None, None, None, None),
+                .build_resolved(None, None, None, None, None),
             Err(EngineError::InvalidConfig(_))
         ));
     }

@@ -871,6 +871,9 @@ pub fn gk_select_bench_record(
         ),
         ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
         ("stage_stats", stage_stats_json(&out.report)),
+        ("band_candidates", JsonVal::U64(out.report.band_candidates)),
+        ("band_budget", JsonVal::U64(out.report.band_budget)),
+        ("band_efficiency", JsonVal::F64(out.report.band_efficiency())),
         ("exact", JsonVal::Bool(out.report.exact)),
     ]))
 }
@@ -950,6 +953,9 @@ pub fn stream_query_bench_record(
         ),
         ("simd_lane_width", JsonVal::U64(out.report.simd_lane_width)),
         ("stage_stats", stage_stats_json(&out.report)),
+        ("band_candidates", JsonVal::U64(out.report.band_candidates)),
+        ("band_budget", JsonVal::U64(out.report.band_budget)),
+        ("band_efficiency", JsonVal::F64(out.report.band_efficiency())),
         ("live_epochs", JsonVal::U64(state.live_epochs() as u64)),
         ("store_bytes", JsonVal::U64(state.store_bytes())),
         ("ingest_wall_s_total", JsonVal::F64(ingest_wall)),
@@ -1194,6 +1200,132 @@ pub fn run_trace(cfg: &ReproConfig, workload: &str, n: u64, out_path: &Path) -> 
         }
     }
     println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// The `repro metrics` workload: one engine with a Prometheus-file
+/// metrics mode runs a mixed batch / stream / chaos sequence, dumping
+/// both registry exports into `out_dir`:
+///
+/// * `prom_early.prom` — a scrape copied mid-workload;
+/// * `metrics.prom` — the final scrape (the engine rewrites it after
+///   every absorb, so the file is always complete);
+/// * `qlog.jsonl` — the structured query log, one line per operation.
+///
+/// The early/final scrape pair is what `scripts/check_prom.py` feeds its
+/// monotone-counter check. Chaos: when neither the config nor
+/// `GKSELECT_FAULTS` arms a fault plan, a canned recoverable one (one
+/// planned panic + mild stragglers) is injected so the retry counters
+/// and attempt-latency sketches are exercised on every run; an
+/// env/config plan wins so the CI chaos leg measures exactly its plan.
+pub fn run_metrics(cfg: &ReproConfig, n: u64, out_dir: &Path) -> Result<()> {
+    use crate::obs::MetricsMode;
+    use crate::stream::MicroBatch;
+    use anyhow::Context;
+    ensure!(n > 0, "need a nonempty workload");
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating metrics output dir {}", out_dir.display()))?;
+    let prom_path = out_dir.join("metrics.prom");
+    let early_path = out_dir.join("prom_early.prom");
+    let qlog_path = out_dir.join("qlog.jsonl");
+
+    let mut builder = EngineBuilder::new()
+        .config(cfg.clone())
+        .algorithm(AlgoChoice::GkSelect)
+        .metrics(MetricsMode::Prom(prom_path.clone()));
+    let env_faults = crate::engine::env::faults()?;
+    let chaos_armed = !cfg.faults.plan.is_empty() || env_faults.is_some();
+    if !chaos_armed {
+        builder = builder.fault_plan(FaultPlan::seeded(7).panic_task(0, 0).stragglers(0.2, 4.0));
+    }
+    let mut engine = builder.build()?;
+
+    // batch phase: every plan shape, exact and sketched
+    let data = Distribution::Uniform
+        .generator(cfg.algorithm.seed)
+        .generate(engine.cluster_mut(), n);
+    engine.execute(Source::Dataset(&data), QuantileQuery::Single(0.5))?;
+    engine.execute(
+        Source::Dataset(&data),
+        QuantileQuery::Multi(vec![0.25, 0.5, 0.95]),
+    )?;
+    engine.execute(Source::Dataset(&data), QuantileQuery::Rank(n / 2))?;
+    engine.execute(
+        Source::Dataset(&data),
+        QuantileQuery::Sketched { q: 0.9, eps: 0.05 },
+    )?;
+    // mid-workload scrape: every counter here must be <= the final one
+    std::fs::copy(&prom_path, &early_path)
+        .with_context(|| format!("copying early scrape to {}", early_path.display()))?;
+
+    // stream phase: ingests interleaved with exact + sketched serving
+    let per = (n / 8).max(1) as usize;
+    for tick in 0..8u64 {
+        let values = StreamWorkload::Uniform.batch(cfg.algorithm.seed, tick, per);
+        engine.ingest("metrics", MicroBatch::new(values))?;
+        if tick % 2 == 1 {
+            engine.execute(Source::Stream("metrics"), QuantileQuery::Single(0.95))?;
+        }
+    }
+    engine.execute(
+        Source::Stream("metrics"),
+        QuantileQuery::Sketched { q: 0.5, eps: 0.05 },
+    )?;
+
+    // the qlog buffer is kept in every armed mode — dump it whole
+    let mut qlog = String::new();
+    for line in engine.registry().qlog_lines() {
+        qlog.push_str(line);
+        qlog.push('\n');
+    }
+    std::fs::write(&qlog_path, qlog)
+        .with_context(|| format!("writing {}", qlog_path.display()))?;
+
+    let snap = engine.metrics_snapshot();
+    println!(
+        "metrics: {} ops absorbed ({} exec, simd lane {})",
+        snap.ops, snap.exec_mode, snap.simd_lane_width
+    );
+    for ((kind, stream), t) in &snap.totals {
+        println!(
+            "  {:<8} {:<8} ops {:<3} rounds {:<3} scans {:<3} moved {} band-eff {:.3}",
+            kind.label(),
+            if stream.is_empty() { "-" } else { stream },
+            t.ops,
+            t.rounds,
+            t.data_scans,
+            crate::cluster::metrics::human_bytes(t.bytes_moved()),
+            t.band_efficiency(),
+        );
+    }
+    let g = snap.grand();
+    println!(
+        "  grand: faults {} retried {} spec {}/{}  band {}/{} (eff {:.3})",
+        g.faults_injected,
+        g.tasks_retried,
+        g.speculative_wins,
+        g.speculative_launched,
+        g.band_candidates,
+        g.band_budget,
+        g.band_efficiency(),
+    );
+    for (id, r) in &snap.residency {
+        println!(
+            "  store {:<8} live {}/{} epochs, {} partials, {} (compactions {})",
+            id,
+            r.live_epochs,
+            r.sealed_epochs,
+            r.sketch_partials,
+            crate::cluster::metrics::human_bytes(r.store_bytes()),
+            r.compactions,
+        );
+    }
+    println!(
+        "wrote {} + {} + {}",
+        prom_path.display(),
+        early_path.display(),
+        qlog_path.display()
+    );
     Ok(())
 }
 

@@ -89,7 +89,8 @@ pub mod prelude {
         QuantileQuery, QueryOutcome, Source,
     };
     pub use crate::obs::{
-        AttemptOutcome, Span, SpanKind, StageStats, Trace, TraceMode, TraceSink,
+        AttemptOutcome, MetricsMode, MetricsRegistry, MetricsSnapshot, OpKind, Span, SpanKind,
+        StageStats, Trace, TraceMode, TraceSink,
     };
     pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
     pub use crate::sketch::{

@@ -18,6 +18,7 @@
 //! repro stream         --batches 16 --batch-n 250000 --workload zipf --queries 0.5,0.95,0.99
 //! repro chaos          --n 2e6 --plan "seed=7,panic=0.02,straggler=0.1x4" --verify
 //! repro trace batch    --n 2e5 --out trace.json
+//! repro metrics        --n 2e5 --out metrics-out
 //! repro calibrate
 //! repro validate --n 2e5
 //! repro config
@@ -26,7 +27,9 @@
 //! Global flags: `--config <path>` (TOML), `--backend native|pjrt`,
 //! `--exec-mode sequential|threads`, `--simd auto|scalar|force`,
 //! `--faults <plan>` (seeded fault-injection for any command),
-//! `--trace off|memory|chrome:<path>` (span capture for any command).
+//! `--trace off|memory|chrome:<path>` (span capture for any command),
+//! `--metrics off|memory|prom:<path>|qlog:<path>` (lifetime metrics
+//! registry for any command).
 
 use anyhow::{bail, Result};
 use gkselect::cluster::FaultPlan;
@@ -66,6 +69,11 @@ COMMANDS:
   trace      run a small traced workload and write a Perfetto-loadable
              Chrome-trace file of its span tree
              trace batch|stream|chaos --n <count> --out <file.json> --nodes <count>
+  metrics    run a mixed batch/stream/chaos workload with the lifetime
+             metrics registry armed and dump both exports: a Prometheus
+             text-exposition scrape (early + final, for monotonicity
+             checks) and the structured JSON-lines query log
+             --n <count> --out <dir> --nodes <count>
   calibrate  measure this box's per-element costs
   validate   cross-check all algorithms vs the oracle (--n)
   config     print the effective config
@@ -83,6 +91,9 @@ GLOBAL FLAGS:
   --trace <mode>     off | memory | chrome:<path> (or a bare *.json path)
                      — per-query span capture for any command
                      (GKSELECT_TRACE does the same)
+  --metrics <mode>   off | memory | prom:<path> | qlog:<path> — engine-
+                     lifetime metrics registry for any command
+                     (GKSELECT_METRICS does the same)
 ";
 
 fn main() -> Result<()> {
@@ -117,11 +128,16 @@ fn main() -> Result<()> {
         tm.parse::<gkselect::obs::TraceMode>()?;
         cfg.obs.trace = tm.to_string();
     }
+    if let Some(mm) = args.str_opt("metrics") {
+        // validated here so a typo fails before any work runs
+        mm.parse::<gkselect::obs::MetricsMode>()?;
+        cfg.obs.metrics = mm.to_string();
+    }
 
     match args.path[0].as_str() {
         "quantile" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "faults", "trace", "algorithm", "n", "q",
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "algorithm", "n", "q",
                 "distribution", "nodes", "verify",
             ])?;
             let algorithm: AlgoChoice = args.str_or("algorithm", "gk-select").parse()?;
@@ -138,7 +154,7 @@ fn main() -> Result<()> {
             match which {
                 "fig" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "nodes", "max-exp",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "nodes", "max-exp",
                         "trials",
                     ])?;
                     harness::bench_fig(
@@ -150,7 +166,7 @@ fn main() -> Result<()> {
                 }
                 "dist" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "trials",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "nodes", "trials",
                     ])?;
                     harness::bench_dist(
                         &cfg,
@@ -161,13 +177,13 @@ fn main() -> Result<()> {
                 }
                 "table4" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "nodes",
                     ])?;
                     harness::bench_table4(&cfg, args.usize_or("nodes", 10)?)
                 }
                 "table5" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "nodes",
                     ])?;
                     harness::bench_table5(
                         &cfg,
@@ -177,7 +193,7 @@ fn main() -> Result<()> {
                 }
                 "ablation" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "nodes",
                     ])?;
                     harness::bench_ablation(
                         &cfg,
@@ -187,7 +203,7 @@ fn main() -> Result<()> {
                 }
                 "json" => {
                     args.ensure_known(&[
-                        "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "out",
+                        "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "out",
                     ])?;
                     harness::write_bench_json(
                         Path::new(&args.str_or("out", ".")),
@@ -206,6 +222,7 @@ fn main() -> Result<()> {
                 "simd",
                 "faults",
                 "trace",
+                "metrics",
                 "batches",
                 "batch-n",
                 "workload",
@@ -239,7 +256,7 @@ fn main() -> Result<()> {
         }
         "chaos" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "plan", "seed",
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "nodes", "plan", "seed",
                 "degrade", "verify",
             ])?;
             if let Some(nodes) = args.str_opt("nodes") {
@@ -266,7 +283,7 @@ fn main() -> Result<()> {
         }
         "trace" => {
             args.ensure_known(&[
-                "config", "backend", "exec-mode", "simd", "faults", "trace", "n", "nodes", "out",
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n", "nodes", "out",
             ])?;
             if let Some(nodes) = args.str_opt("nodes") {
                 cfg.cluster.nodes = nodes.parse()?;
@@ -279,12 +296,26 @@ fn main() -> Result<()> {
                 Path::new(&args.str_or("out", "trace.json")),
             )
         }
+        "metrics" => {
+            args.ensure_known(&[
+                "config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n",
+                "nodes", "out",
+            ])?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            harness::run_metrics(
+                &cfg,
+                args.u64_or("n", 200_000)?,
+                Path::new(&args.str_or("out", "metrics-out")),
+            )
+        }
         "calibrate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace", "metrics"])?;
             harness::calibrate(&cfg)
         }
         "validate" => {
-            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace", "n"])?;
+            args.ensure_known(&["config", "backend", "exec-mode", "simd", "faults", "trace", "metrics", "n"])?;
             harness::validate(&cfg, args.u64_or("n", 200_000)?)
         }
         "config" => {

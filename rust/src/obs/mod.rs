@@ -60,8 +60,46 @@
 //! // per-stage latency sketches ride the report unconditionally
 //! assert_eq!(out.report.stage_stats.len(), 2);
 //! ```
+//!
+//! ## Engine-lifetime metrics
+//!
+//! Traces show one query; the [`registry`] shows the engine's lifetime.
+//! With a metrics mode armed ([`MetricsMode`], resolved builder >
+//! `[obs] metrics` config > `GKSELECT_METRICS` env), every
+//! `execute`/`ingest` report is absorbed into cumulative per-kind
+//! counters, per-kind task-latency GK sketches, a live band-efficiency
+//! ratio, and store-residency gauges — exported as Prometheus text
+//! exposition ([`prom`]) and an append-only JSON-lines query log
+//! ([`qlog`]):
+//!
+//! ```
+//! use gkselect::prelude::*;
+//!
+//! let mut engine = EngineBuilder::new()
+//!     .cluster(ClusterConfig::local(2, 4))
+//!     .metrics(MetricsMode::Memory)
+//!     .build()
+//!     .unwrap();
+//! let data = UniformGen::new(7).generate(engine.cluster_mut(), 5_000);
+//! engine
+//!     .execute(Source::Dataset(&data), QuantileQuery::Single(0.5))
+//!     .unwrap();
+//!
+//! let snap = engine.metrics_snapshot();
+//! assert_eq!(snap.ops, 1);
+//! let batch = snap.totals_for(OpKind::Batch, "").unwrap();
+//! // fused batch protocol: 2 rounds, 2 data scans, budget respected
+//! assert_eq!((batch.rounds, batch.data_scans), (2, 2));
+//! assert!(batch.band_efficiency() <= 1.0);
+//! // and the snapshot renders as a Prometheus scrape
+//! let scrape = engine.registry().render_prometheus();
+//! assert!(scrape.contains("# TYPE gkselect_ops_total counter"));
+//! ```
 
 pub mod chrome;
+pub mod prom;
+pub mod qlog;
+pub mod registry;
 pub mod stats;
 
 use std::fmt;
@@ -69,6 +107,7 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 pub use chrome::ChromeTraceWriter;
+pub use registry::{MetricsMode, MetricsRegistry, MetricsSnapshot, OpKind, METRICS_GRAMMAR};
 pub use stats::StageStats;
 
 /// What a span describes. `Query`/`StreamQuery`/`Ingest` are roots

@@ -1,0 +1,400 @@
+//! Prometheus text exposition of a [`MetricsSnapshot`].
+//!
+//! One function, [`render_prometheus`]: every metric family gets its
+//! `# HELP` / `# TYPE` header, every series carries the four standard
+//! labels (`kind`, `stream`, `exec_mode`, `simd`; store gauges drop
+//! `kind` since they describe the store, not an operation), and series
+//! within a family come out in sorted key order — the snapshot's maps
+//! are BTreeMaps, so two renders of the same state are byte-identical
+//! and scrapes diff cleanly. Validated in CI by `scripts/check_prom.py`
+//! (TYPE/HELP presence, label syntax, counter monotonicity across
+//! scrapes).
+
+use super::registry::{MetricsSnapshot, OpTotals, StreamResidency};
+
+/// Escape a label value per the exposition format (`\` → `\\`,
+/// `"` → `\"`, newline → `\n`).
+fn escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn head(out: &mut String, name: &str, help: &str, typ: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+}
+
+fn line(out: &mut String, name: &str, labels: &[(&str, String)], value: impl std::fmt::Display) {
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape(v)))
+        .collect();
+    out.push_str(&format!("{name}{{{}}} {value}\n", body.join(",")));
+}
+
+/// Render the full exposition document: operation counters per
+/// (kind, stream), the band-efficiency ratio, per-kind task-latency
+/// summaries, and per-stream store-residency gauges.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let op_labels = |kind: &str, stream: &str| {
+        vec![
+            ("kind", kind.to_string()),
+            ("stream", stream.to_string()),
+            ("exec_mode", snap.exec_mode.clone()),
+            ("simd", snap.simd_lane_width.to_string()),
+        ]
+    };
+    let stream_labels = |stream: &str| {
+        vec![
+            ("stream", stream.to_string()),
+            ("exec_mode", snap.exec_mode.clone()),
+            ("simd", snap.simd_lane_width.to_string()),
+        ]
+    };
+
+    // -- lifetime operation counters, one series per (kind, stream) key
+    type Get = fn(&OpTotals) -> u64;
+    let counters: &[(&str, &str, Get)] = &[
+        (
+            "gkselect_ops_total",
+            "Operations absorbed by the engine-lifetime registry.",
+            |t| t.ops,
+        ),
+        (
+            "gkselect_records_total",
+            "Records covered by absorbed operations.",
+            |t| t.records,
+        ),
+        (
+            "gkselect_rounds_total",
+            "Driver synchronization rounds (BSP supersteps).",
+            |t| t.rounds,
+        ),
+        (
+            "gkselect_data_scans_total",
+            "Linear passes over dataset partitions.",
+            |t| t.data_scans,
+        ),
+        (
+            "gkselect_shuffles_total",
+            "Full range-partition shuffles (0 on every GK Select path).",
+            |t| t.shuffles,
+        ),
+        (
+            "gkselect_persists_total",
+            "Explicit persists of intermediate datasets.",
+            |t| t.persists,
+        ),
+        (
+            "gkselect_messages_total",
+            "Messages sent on the fabric.",
+            |t| t.messages,
+        ),
+        (
+            "gkselect_faults_injected_total",
+            "Injected faults that actually fired.",
+            |t| t.faults_injected,
+        ),
+        (
+            "gkselect_tasks_retried_total",
+            "Task re-launches after failed attempts.",
+            |t| t.tasks_retried,
+        ),
+        (
+            "gkselect_speculative_launched_total",
+            "Speculative duplicates launched against stragglers.",
+            |t| t.speculative_launched,
+        ),
+        (
+            "gkselect_speculative_wins_total",
+            "Speculative duplicates that beat the straggler.",
+            |t| t.speculative_wins,
+        ),
+        (
+            "gkselect_degraded_queries_total",
+            "Queries answered from the sketch after a stage failure.",
+            |t| t.degraded_queries,
+        ),
+        (
+            "gkselect_band_candidates_total",
+            "Band candidates shipped to the driver by fused extracts.",
+            |t| t.band_candidates,
+        ),
+        (
+            "gkselect_band_budget_total",
+            "Sum of the 16*eps*n+64 candidate budgets those extracts ran under.",
+            |t| t.band_budget,
+        ),
+    ];
+    for (name, help, get) in counters {
+        head(&mut out, name, help, "counter");
+        for ((kind, stream), t) in &snap.totals {
+            line(&mut out, name, &op_labels(kind.label(), stream), get(t));
+        }
+    }
+
+    // -- the five byte ledgers, disambiguated by the `ledger` label
+    head(
+        &mut out,
+        "gkselect_bytes_total",
+        "Bytes handled, by ledger: to_driver/shuffled/tree_reduced/broadcast move on the network, persisted is storage.",
+        "counter",
+    );
+    type LedgerGet = fn(&OpTotals) -> u64;
+    let ledgers: &[(&str, LedgerGet)] = &[
+        ("broadcast", |t| t.bytes_broadcast),
+        ("persisted", |t| t.bytes_persisted),
+        ("shuffled", |t| t.bytes_shuffled),
+        ("to_driver", |t| t.bytes_to_driver),
+        ("tree_reduced", |t| t.bytes_tree_reduced),
+    ];
+    for ((kind, stream), t) in &snap.totals {
+        for (ledger, get) in ledgers {
+            let mut labels = op_labels(kind.label(), stream);
+            labels.push(("ledger", ledger.to_string()));
+            line(&mut out, "gkselect_bytes_total", &labels, get(t));
+        }
+    }
+
+    // -- modelled elapsed seconds per key
+    head(
+        &mut out,
+        "gkselect_op_seconds_total",
+        "Modelled elapsed seconds of absorbed operations.",
+        "counter",
+    );
+    for ((kind, stream), t) in &snap.totals {
+        line(
+            &mut out,
+            "gkselect_op_seconds_total",
+            &op_labels(kind.label(), stream),
+            t.elapsed_secs,
+        );
+    }
+
+    // -- the paper's no-full-shuffle claim as a live ratio
+    head(
+        &mut out,
+        "gkselect_band_efficiency_ratio",
+        "Band candidates shipped over the 16*eps*n+64 budget; <= 1.0 by construction.",
+        "gauge",
+    );
+    for ((kind, stream), t) in &snap.totals {
+        line(
+            &mut out,
+            "gkselect_band_efficiency_ratio",
+            &op_labels(kind.label(), stream),
+            t.band_efficiency(),
+        );
+    }
+
+    // -- per-kind task-latency summaries from the registry's GK folds
+    head(
+        &mut out,
+        "gkselect_tasks_total",
+        "Task attempts folded into the per-kind latency sketch.",
+        "counter",
+    );
+    for l in &snap.latency {
+        line(
+            &mut out,
+            "gkselect_tasks_total",
+            &op_labels(l.kind.label(), ""),
+            l.tasks,
+        );
+    }
+    head(
+        &mut out,
+        "gkselect_task_latency_us",
+        "Per-kind task latency percentiles (virtual-clock us) from the lifetime GK sketch.",
+        "gauge",
+    );
+    for l in &snap.latency {
+        for (q, v) in [("0.5", l.p50_us), ("0.95", l.p95_us), ("0.99", l.p99_us)] {
+            let mut labels = op_labels(l.kind.label(), "");
+            labels.push(("quantile", q.to_string()));
+            line(&mut out, "gkselect_task_latency_us", &labels, v);
+        }
+    }
+    head(
+        &mut out,
+        "gkselect_task_latency_max_us",
+        "Per-kind maximum task latency (exact, virtual-clock us).",
+        "gauge",
+    );
+    for l in &snap.latency {
+        line(
+            &mut out,
+            "gkselect_task_latency_max_us",
+            &op_labels(l.kind.label(), ""),
+            l.max_us,
+        );
+    }
+
+    // -- store residency: the O(P/eps) footprint claim as gauges
+    type ResGet = fn(&StreamResidency) -> u64;
+    let gauges: &[(&str, &str, &str, ResGet)] = &[
+        (
+            "gkselect_store_live_epochs",
+            "Live epochs currently held (bounded by the compaction policy).",
+            "gauge",
+            |r| r.live_epochs,
+        ),
+        (
+            "gkselect_store_sealed_epochs_total",
+            "Epochs sealed over the stream's lifetime.",
+            "counter",
+            |r| r.sealed_epochs,
+        ),
+        (
+            "gkselect_store_sketch_partials",
+            "Cached GK partials currently held (live_epochs x partitions).",
+            "gauge",
+            |r| r.sketch_partials,
+        ),
+        (
+            "gkselect_store_sketch_bytes",
+            "Serialized bytes of cached partials (the O(P/eps) footprint).",
+            "gauge",
+            |r| r.sketch_bytes,
+        ),
+        (
+            "gkselect_store_data_bytes",
+            "Payload bytes across live epochs.",
+            "gauge",
+            |r| r.data_bytes,
+        ),
+        (
+            "gkselect_store_bytes",
+            "Store footprint: cached sketches plus payload.",
+            "gauge",
+            |r| r.store_bytes(),
+        ),
+        (
+            "gkselect_store_records",
+            "Records across live epochs.",
+            "gauge",
+            |r| r.records,
+        ),
+        (
+            "gkselect_store_compactions_total",
+            "Compactions run over the stream's lifetime.",
+            "counter",
+            |r| r.compactions,
+        ),
+    ];
+    for (name, help, typ, get) in gauges {
+        head(&mut out, name, help, typ);
+        for (stream, r) in &snap.residency {
+            line(&mut out, name, &stream_labels(stream), get(r));
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::{LatencySummary, OpKind};
+    use super::*;
+
+    fn snapshot() -> MetricsSnapshot {
+        let batch = OpTotals {
+            ops: 2,
+            rounds: 4,
+            bytes_to_driver: 100,
+            band_candidates: 50,
+            band_budget: 100,
+            ..Default::default()
+        };
+        let stream = OpTotals {
+            ops: 1,
+            rounds: 1,
+            ..Default::default()
+        };
+        MetricsSnapshot {
+            ops: 3,
+            exec_mode: "sequential".into(),
+            simd_lane_width: 8,
+            totals: vec![
+                ((OpKind::Batch, String::new()), batch),
+                ((OpKind::Stream, "s".into()), stream),
+            ],
+            latency: vec![LatencySummary {
+                kind: OpKind::Batch,
+                tasks: 8,
+                p50_us: 100,
+                p95_us: 300,
+                p99_us: 400,
+                max_us: 400,
+            }],
+            residency: vec![(
+                "s".into(),
+                StreamResidency {
+                    live_epochs: 2,
+                    sealed_epochs: 5,
+                    sketch_partials: 8,
+                    sketch_bytes: 1024,
+                    data_bytes: 4096,
+                    records: 1000,
+                    compactions: 1,
+                },
+            )],
+        }
+    }
+
+    #[test]
+    fn render_is_stable_and_headed() {
+        let snap = snapshot();
+        let a = render_prometheus(&snap);
+        let b = render_prometheus(&snap);
+        assert_eq!(a, b, "same snapshot renders byte-identically");
+        // every series line belongs to a family with HELP and TYPE
+        for name in [
+            "gkselect_ops_total",
+            "gkselect_rounds_total",
+            "gkselect_bytes_total",
+            "gkselect_band_efficiency_ratio",
+            "gkselect_task_latency_us",
+            "gkselect_store_sketch_bytes",
+            "gkselect_store_sealed_epochs_total",
+        ] {
+            assert!(a.contains(&format!("# HELP {name} ")), "{name} HELP");
+            assert!(a.contains(&format!("# TYPE {name} ")), "{name} TYPE");
+        }
+        assert!(a.contains(
+            "gkselect_ops_total{kind=\"batch\",stream=\"\",exec_mode=\"sequential\",simd=\"8\"} 2"
+        ));
+        assert!(a.contains(
+            "gkselect_ops_total{kind=\"stream\",stream=\"s\",exec_mode=\"sequential\",simd=\"8\"} 1"
+        ));
+        assert!(a.contains("gkselect_band_efficiency_ratio{kind=\"batch\",stream=\"\",exec_mode=\"sequential\",simd=\"8\"} 0.5"));
+        assert!(a.contains("ledger=\"persisted\""));
+        assert!(a.contains("quantile=\"0.95\""));
+        assert!(a.contains(
+            "gkselect_store_live_epochs{stream=\"s\",exec_mode=\"sequential\",simd=\"8\"} 2"
+        ));
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn empty_snapshot_renders_headers_only() {
+        let text = render_prometheus(&MetricsSnapshot::default());
+        assert!(text.contains("# TYPE gkselect_ops_total counter"));
+        for l in text.lines() {
+            assert!(l.starts_with('#'), "no series without data: {l}");
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Structured query log: one JSON line per engine operation.
+//!
+//! The qlog is the registry's event-level export — where Prometheus
+//! exposition ([`crate::obs::prom`]) aggregates, the qlog records every
+//! `execute`/`ingest` individually: operation kind, plan shape, outcome,
+//! duration, and the byte ledgers, one self-contained JSON object per
+//! line so `jq`/`grep` work without a parser state machine.
+//!
+//! ## Join key with PR-7 traces
+//!
+//! When a trace sink is armed ([`crate::obs::TraceSink`] ≠ `Null`) each
+//! record carries a `"trace"` field: the engine's monotone trace
+//! sequence number, the same value stamped as the `trace` attribute on
+//! the root span of the corresponding Chrome/in-memory trace. Joining a
+//! qlog line to its span tree is `qlog.trace == root_span.attrs["trace"]`.
+//! With no sink armed the field is omitted — there is no trace to join.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::cluster::metrics::MetricsReport;
+use crate::util::benchkit::JsonVal;
+
+use super::registry::{OpContext, OpKind};
+
+/// Render one qlog record as a single JSON line (no trailing newline).
+///
+/// `seq` is the registry's operation counter (1-based), so lines are
+/// totally ordered even after log rotation or concatenation.
+pub fn record(seq: u64, ctx: &OpContext<'_>, report: &MetricsReport) -> String {
+    let mut fields: Vec<(&str, JsonVal)> = vec![
+        ("seq", JsonVal::U64(seq)),
+        ("op", JsonVal::Str(ctx.kind.label().to_string())),
+        ("plan", JsonVal::Str(ctx.plan.to_string())),
+        ("algorithm", JsonVal::Str(report.algorithm.clone())),
+        (
+            "outcome",
+            JsonVal::Str(
+                if ctx.kind == OpKind::Degraded {
+                    "degraded"
+                } else {
+                    "ok"
+                }
+                .to_string(),
+            ),
+        ),
+        ("exact", JsonVal::Bool(report.exact)),
+        ("n", JsonVal::U64(report.n)),
+        ("duration_s", JsonVal::F64(report.elapsed_secs)),
+        ("rounds", JsonVal::U64(report.rounds)),
+        ("data_scans", JsonVal::U64(report.data_scans)),
+        ("shuffles", JsonVal::U64(report.shuffles)),
+        ("persists", JsonVal::U64(report.persists)),
+        ("bytes_moved", JsonVal::U64(report.network_volume_bytes)),
+        ("bytes_persisted", JsonVal::U64(report.bytes_persisted)),
+        ("bytes_total", JsonVal::U64(report.bytes_total())),
+        ("band_candidates", JsonVal::U64(report.band_candidates)),
+        ("band_budget", JsonVal::U64(report.band_budget)),
+        ("band_efficiency", JsonVal::F64(report.band_efficiency())),
+        ("faults_injected", JsonVal::U64(report.faults_injected)),
+        ("tasks_retried", JsonVal::U64(report.tasks_retried)),
+    ];
+    if let Some(stream) = ctx.stream {
+        fields.push(("stream", JsonVal::Str(stream.to_string())));
+    }
+    if let Some(trace) = ctx.trace {
+        fields.push(("trace", JsonVal::U64(trace)));
+    }
+    JsonVal::obj(fields).render()
+}
+
+/// Append-only qlog file writer. Each [`append`](Self::append) opens the
+/// file in append mode, writes one line, and closes it — operations are
+/// engine-level (a handful per second at most), so durability per line
+/// beats a held handle, and concatenating logs from restarted engines
+/// stays valid.
+#[derive(Debug)]
+pub struct QlogWriter {
+    path: PathBuf,
+}
+
+impl QlogWriter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one rendered record as a line.
+    pub fn append(&self, line: &str) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{line}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::metrics::RunMetrics;
+    use crate::util::minijson;
+
+    fn report() -> MetricsReport {
+        let m = RunMetrics {
+            rounds: 2,
+            data_scans: 2,
+            bytes_to_driver: 100,
+            bytes_persisted: 7,
+            band_candidates: 10,
+            band_budget: 40,
+            ..Default::default()
+        };
+        MetricsReport::from_metrics("GK Select", 1_000, 4, 2, 0.25, &m, true)
+    }
+
+    #[test]
+    fn record_is_one_parseable_json_line() {
+        let ctx = OpContext {
+            kind: OpKind::Batch,
+            stream: None,
+            plan: "single",
+            trace: Some(3),
+        };
+        let line = record(1, &ctx, &report());
+        assert!(!line.contains('\n'), "one line per record");
+        let doc = minijson::parse(&line).unwrap();
+        assert_eq!(doc.get("seq").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("op").unwrap().as_str(), Some("batch"));
+        assert_eq!(doc.get("plan").unwrap().as_str(), Some("single"));
+        assert_eq!(doc.get("outcome").unwrap().as_str(), Some("ok"));
+        assert_eq!(doc.get("trace").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("bytes_total").unwrap().as_u64(), Some(107));
+        assert!(doc.get("stream").is_none(), "batch ops carry no stream");
+    }
+
+    #[test]
+    fn trace_field_only_when_a_sink_is_armed() {
+        let ctx = OpContext {
+            kind: OpKind::Stream,
+            stream: Some("s"),
+            plan: "multi",
+            trace: None,
+        };
+        let line = record(2, &ctx, &report());
+        let doc = minijson::parse(&line).unwrap();
+        assert!(doc.get("trace").is_none(), "no sink, no join key");
+        assert_eq!(doc.get("stream").unwrap().as_str(), Some("s"));
+    }
+
+    #[test]
+    fn degraded_kind_stamps_the_outcome() {
+        let ctx = OpContext {
+            kind: OpKind::Degraded,
+            stream: Some("s"),
+            plan: "single",
+            trace: None,
+        };
+        let doc = minijson::parse(&record(3, &ctx, &report())).unwrap();
+        assert_eq!(doc.get("outcome").unwrap().as_str(), Some("degraded"));
+    }
+
+    #[test]
+    fn writer_appends_lines() {
+        let dir = std::env::temp_dir().join("gkselect_qlog_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("q{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let w = QlogWriter::new(&path);
+        w.append("{\"seq\":1}").unwrap();
+        w.append("{\"seq\":2}").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines.iter().all(|l| minijson::parse(l).is_ok()));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,693 @@
+//! Engine-lifetime metrics registry.
+//!
+//! Every [`MetricsReport`] is a per-operation delta that dies with its
+//! outcome; a long-lived streaming engine needs the cumulative view.
+//! The [`MetricsRegistry`] is owned by
+//! [`QuantileEngine`](crate::engine::QuantileEngine) and absorbs the
+//! report of every `execute`/`ingest` into lifetime counters keyed by
+//! [`OpKind`] × stream id, folds true per-task latencies into per-kind
+//! [`GkCore`] sketches (the system monitoring itself with the algorithm
+//! it implements), and samples **store-residency gauges** live from the
+//! [`SketchStore`] — making the paper's two structural claims
+//! continuously observable:
+//!
+//! * **band efficiency** — candidates actually shipped to the driver
+//!   over the Σ 16εn+64 budgets they ran under, ≤ 1.0 by construction
+//!   (the extract truncates at the budget): the no-full-shuffle claim
+//!   as a scrapeable ratio;
+//! * **store residency** — cached partial bytes, live vs sealed epoch
+//!   counts, and compactions run: the O(P/ε) footprint claim as gauges.
+//!
+//! Exports: [`MetricsRegistry::render_prometheus`] (text exposition,
+//! see [`crate::obs::prom`]) and an append-only JSON-lines query log
+//! (see [`crate::obs::qlog`]). The mode is resolved with the standard
+//! precedence — builder (`EngineBuilder::metrics`) > config file
+//! (`[obs] metrics`) > env (`GKSELECT_METRICS`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::cluster::metrics::MetricsReport;
+use crate::sketch::GkCore;
+use crate::stream::store::SketchStore;
+use crate::Key;
+
+use super::stats::STATS_EPSILON;
+use super::{prom, qlog};
+
+/// Accepted values for `--metrics` / `[obs] metrics` /
+/// `GKSELECT_METRICS`.
+pub const METRICS_GRAMMAR: &str = "off | memory | prom:<path> | qlog:<path>";
+
+/// Where the registry's exports go — the resolved form of the
+/// `--metrics` / `[obs] metrics` / `GKSELECT_METRICS` knob.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricsMode {
+    /// No registry (the default): absorb is a no-op, snapshots are
+    /// empty, nothing allocates.
+    Off,
+    /// Accumulate in memory only; read via
+    /// [`QuantileEngine::metrics_snapshot`](crate::engine::QuantileEngine::metrics_snapshot)
+    /// and [`MetricsRegistry::qlog_lines`].
+    Memory,
+    /// Accumulate and rewrite a Prometheus text-exposition file after
+    /// every operation (always a complete scrape, like the Chrome trace
+    /// writer).
+    Prom(PathBuf),
+    /// Accumulate and append one qlog JSON line per operation.
+    Qlog(PathBuf),
+}
+
+impl std::str::FromStr for MetricsMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(Self::Off),
+            "memory" => Ok(Self::Memory),
+            other => {
+                if let Some(path) = other.strip_prefix("prom:") {
+                    if path.is_empty() {
+                        anyhow::bail!("prom: needs a path ({METRICS_GRAMMAR})");
+                    }
+                    return Ok(Self::Prom(PathBuf::from(path)));
+                }
+                if let Some(path) = other.strip_prefix("qlog:") {
+                    if path.is_empty() {
+                        anyhow::bail!("qlog: needs a path ({METRICS_GRAMMAR})");
+                    }
+                    return Ok(Self::Qlog(PathBuf::from(path)));
+                }
+                anyhow::bail!("unknown metrics mode '{other}' ({METRICS_GRAMMAR})")
+            }
+        }
+    }
+}
+
+impl fmt::Display for MetricsMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Off => write!(f, "off"),
+            Self::Memory => write!(f, "memory"),
+            Self::Prom(p) => write!(f, "prom:{}", p.display()),
+            Self::Qlog(p) => write!(f, "qlog:{}", p.display()),
+        }
+    }
+}
+
+/// What kind of operation a report describes — the registry's first
+/// key dimension and the `kind` label of every Prometheus series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// Exact batch query over a `Source::Dataset`.
+    Batch,
+    /// Exact query served from a stream's cached sketches.
+    Stream,
+    /// Micro-batch ingest sealing an epoch.
+    Ingest,
+    /// ε-approximate answer straight from a sketch (no data scan).
+    Sketched,
+    /// Query answered from the sketch after a stage failure
+    /// (`DegradePolicy::SketchAnswer`).
+    Degraded,
+}
+
+impl OpKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Batch => "batch",
+            Self::Stream => "stream",
+            Self::Ingest => "ingest",
+            Self::Sketched => "sketched",
+            Self::Degraded => "degraded",
+        }
+    }
+
+    /// Classify a report the way the registry keys it. This is the one
+    /// shared rule — `QueryOutcome::op_kind()` and the engine's absorb
+    /// hook both call it, so the accessor can never disagree with the
+    /// registry's labels.
+    pub fn classify(algorithm: &str, exact: bool, degraded: bool) -> Self {
+        if degraded {
+            Self::Degraded
+        } else if algorithm == "Stream Ingest" {
+            Self::Ingest
+        } else if !exact {
+            Self::Sketched
+        } else if algorithm.starts_with("Stream") {
+            Self::Stream
+        } else {
+            Self::Batch
+        }
+    }
+}
+
+/// Per-operation context the engine hands to
+/// [`MetricsRegistry::absorb`] alongside the report: the key, the plan
+/// shape for the qlog, and the trace join key when a sink is armed.
+#[derive(Debug, Clone, Copy)]
+pub struct OpContext<'a> {
+    pub kind: OpKind,
+    /// Stream id for stream-keyed operations, `None` for batch.
+    pub stream: Option<&'a str>,
+    /// Plan shape (`single` / `multi` / `rank` / `sketched` / `ingest`).
+    pub plan: &'a str,
+    /// The engine's trace sequence number, present iff a trace sink is
+    /// armed — the qlog ↔ Chrome-trace join key (see [`crate::obs::qlog`]).
+    pub trace: Option<u64>,
+}
+
+/// Lifetime totals of one (kind, stream) key: every counter a
+/// [`MetricsReport`] carries, summed over operations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpTotals {
+    /// Operations absorbed under this key.
+    pub ops: u64,
+    /// Σ records covered (`report.n`).
+    pub records: u64,
+    pub rounds: u64,
+    pub stage_boundaries: u64,
+    pub data_scans: u64,
+    pub shuffles: u64,
+    pub persists: u64,
+    pub bytes_to_driver: u64,
+    pub bytes_shuffled: u64,
+    pub bytes_tree_reduced: u64,
+    pub bytes_broadcast: u64,
+    pub bytes_persisted: u64,
+    pub messages: u64,
+    pub faults_injected: u64,
+    pub tasks_retried: u64,
+    pub speculative_launched: u64,
+    pub speculative_wins: u64,
+    pub degraded_queries: u64,
+    pub band_candidates: u64,
+    pub band_budget: u64,
+    /// Σ modelled elapsed seconds.
+    pub elapsed_secs: f64,
+    /// Σ real stage wall seconds.
+    pub wall_stage_secs: f64,
+}
+
+impl OpTotals {
+    fn add(&mut self, r: &MetricsReport) {
+        self.ops += 1;
+        self.records += r.n;
+        self.rounds += r.rounds;
+        self.stage_boundaries += r.stage_boundaries;
+        self.data_scans += r.data_scans;
+        self.shuffles += r.shuffles;
+        self.persists += r.persists;
+        self.bytes_to_driver += r.bytes_to_driver;
+        self.bytes_shuffled += r.bytes_shuffled;
+        self.bytes_tree_reduced += r.bytes_tree_reduced;
+        self.bytes_broadcast += r.bytes_broadcast;
+        self.bytes_persisted += r.bytes_persisted;
+        self.messages += r.messages;
+        self.faults_injected += r.faults_injected;
+        self.tasks_retried += r.tasks_retried;
+        self.speculative_launched += r.speculative_launched;
+        self.speculative_wins += r.speculative_wins;
+        self.degraded_queries += r.degraded_queries;
+        self.band_candidates += r.band_candidates;
+        self.band_budget += r.band_budget;
+        self.elapsed_secs += r.elapsed_secs;
+        self.wall_stage_secs += r.wall_stage_secs;
+    }
+
+    /// Fold another totals bin into this one (grand-total view).
+    pub fn merge(&mut self, o: &OpTotals) {
+        self.ops += o.ops;
+        self.records += o.records;
+        self.rounds += o.rounds;
+        self.stage_boundaries += o.stage_boundaries;
+        self.data_scans += o.data_scans;
+        self.shuffles += o.shuffles;
+        self.persists += o.persists;
+        self.bytes_to_driver += o.bytes_to_driver;
+        self.bytes_shuffled += o.bytes_shuffled;
+        self.bytes_tree_reduced += o.bytes_tree_reduced;
+        self.bytes_broadcast += o.bytes_broadcast;
+        self.bytes_persisted += o.bytes_persisted;
+        self.messages += o.messages;
+        self.faults_injected += o.faults_injected;
+        self.tasks_retried += o.tasks_retried;
+        self.speculative_launched += o.speculative_launched;
+        self.speculative_wins += o.speculative_wins;
+        self.degraded_queries += o.degraded_queries;
+        self.band_candidates += o.band_candidates;
+        self.band_budget += o.band_budget;
+        self.elapsed_secs += o.elapsed_secs;
+        self.wall_stage_secs += o.wall_stage_secs;
+    }
+
+    /// Network traffic (four movement ledgers, no persists).
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_to_driver + self.bytes_shuffled + self.bytes_tree_reduced + self.bytes_broadcast
+    }
+
+    /// All five ledgers: movement plus storage.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_moved() + self.bytes_persisted
+    }
+
+    /// Lifetime band efficiency: Σ shipped / Σ budget, ≤ 1.0 always
+    /// (each extract truncates at its budget); 0.0 with no extracts.
+    pub fn band_efficiency(&self) -> f64 {
+        if self.band_budget == 0 {
+            0.0
+        } else {
+            self.band_candidates as f64 / self.band_budget as f64
+        }
+    }
+}
+
+/// Live residency of one stream in the [`SketchStore`], sampled at the
+/// last absorb — the O(P/ε) claim as gauges.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StreamResidency {
+    /// Epochs currently live (bounded by the compaction policy).
+    pub live_epochs: u64,
+    /// Epochs sealed over the stream's lifetime (monotone).
+    pub sealed_epochs: u64,
+    /// Cached GK partials currently held (`live_epochs × partitions`).
+    pub sketch_partials: u64,
+    /// Serialized bytes of those partials — the footprint compaction
+    /// keeps `O(P/ε)`.
+    pub sketch_bytes: u64,
+    /// Payload bytes across live epochs.
+    pub data_bytes: u64,
+    /// Records across live epochs.
+    pub records: u64,
+    /// Compactions run over the stream's lifetime (monotone).
+    pub compactions: u64,
+}
+
+impl StreamResidency {
+    /// Sketch + payload footprint.
+    pub fn store_bytes(&self) -> u64 {
+        self.sketch_bytes + self.data_bytes
+    }
+}
+
+/// Per-kind task-latency summary from the registry's folded GK sketch.
+/// Percentiles are sketched (ε = 0.01), `max_us` exact — same contract
+/// as [`super::StageStats`], but folded across the engine's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencySummary {
+    pub kind: OpKind,
+    /// Task attempts folded in.
+    pub tasks: u64,
+    pub p50_us: u32,
+    pub p95_us: u32,
+    pub p99_us: u32,
+    pub max_us: u32,
+}
+
+/// One per-kind latency fold: our own GK sketch fed the raw per-task
+/// durations of every absorbed report.
+#[derive(Debug, Clone)]
+struct LatencyFold {
+    sketch: GkCore,
+    tasks: u64,
+    max_us: u32,
+}
+
+impl LatencyFold {
+    fn new() -> Self {
+        Self {
+            sketch: GkCore::new(STATS_EPSILON),
+            tasks: 0,
+            max_us: 0,
+        }
+    }
+
+    fn fold(&mut self, stage_attempt_us: &[Vec<u32>]) {
+        let mut batch: Vec<Key> = stage_attempt_us
+            .iter()
+            .flatten()
+            .map(|&d| d.min(i32::MAX as u32) as Key)
+            .collect();
+        if batch.is_empty() {
+            return;
+        }
+        batch.sort_unstable();
+        self.tasks += batch.len() as u64;
+        self.max_us = self.max_us.max(*batch.last().expect("nonempty") as u32);
+        self.sketch.merge_sorted_batch(&batch);
+    }
+
+    fn summary(&self, kind: OpKind) -> LatencySummary {
+        let pct = |q: f64| self.sketch.query_quantile(q).unwrap_or(0).max(0) as u32;
+        LatencySummary {
+            kind,
+            tasks: self.tasks,
+            p50_us: pct(0.5),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: self.max_us,
+        }
+    }
+}
+
+/// Immutable view of the registry at one instant: everything the
+/// Prometheus renderer needs, cheap to clone out of the engine.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Operations absorbed over the engine's lifetime.
+    pub ops: u64,
+    /// Executor-pool mode label (`sequential` / `threads`).
+    pub exec_mode: String,
+    /// Kernel backend SIMD lane width (8 = AVX2, 4 = SSE2, 1 = scalar).
+    pub simd_lane_width: u64,
+    /// Per-(kind, stream) lifetime totals, sorted by key. Batch
+    /// operations use the empty stream id.
+    pub totals: Vec<((OpKind, String), OpTotals)>,
+    /// Per-kind folded task-latency summaries, sorted by kind.
+    pub latency: Vec<LatencySummary>,
+    /// Per-stream store residency at the last absorb, sorted by stream.
+    pub residency: Vec<(String, StreamResidency)>,
+}
+
+impl MetricsSnapshot {
+    /// Grand totals across every (kind, stream) key.
+    pub fn grand(&self) -> OpTotals {
+        let mut g = OpTotals::default();
+        for (_, t) in &self.totals {
+            g.merge(t);
+        }
+        g
+    }
+
+    /// Totals of one key, if any operation was absorbed under it.
+    pub fn totals_for(&self, kind: OpKind, stream: &str) -> Option<&OpTotals> {
+        self.totals
+            .iter()
+            .find(|((k, s), _)| *k == kind && s == stream)
+            .map(|(_, t)| t)
+    }
+}
+
+/// The engine-lifetime registry. `Off` mode is free: no allocation, no
+/// counters, empty snapshots — mirroring `TraceSink::Null`.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    mode: MetricsMode,
+    exec_mode: String,
+    simd_lane_width: u64,
+    ops: u64,
+    totals: BTreeMap<(OpKind, String), OpTotals>,
+    latency: BTreeMap<OpKind, LatencyFold>,
+    residency: BTreeMap<String, StreamResidency>,
+    qlog: Vec<String>,
+    qlog_writer: Option<qlog::QlogWriter>,
+}
+
+impl MetricsRegistry {
+    /// Build a registry for the resolved mode. `exec_mode` and
+    /// `simd_lane_width` become the constant `exec_mode` / `simd`
+    /// labels of every exported series.
+    pub fn new(mode: MetricsMode, exec_mode: &str, simd_lane_width: u64) -> Self {
+        let qlog_writer = match &mode {
+            MetricsMode::Qlog(path) => Some(qlog::QlogWriter::new(path.clone())),
+            _ => None,
+        };
+        Self {
+            mode,
+            exec_mode: exec_mode.to_string(),
+            simd_lane_width,
+            ops: 0,
+            totals: BTreeMap::new(),
+            latency: BTreeMap::new(),
+            residency: BTreeMap::new(),
+            qlog: Vec::new(),
+            qlog_writer,
+        }
+    }
+
+    /// Whether the registry accumulates at all (mode ≠ `Off`).
+    pub fn is_enabled(&self) -> bool {
+        self.mode != MetricsMode::Off
+    }
+
+    /// The resolved mode.
+    pub fn mode(&self) -> &MetricsMode {
+        &self.mode
+    }
+
+    /// Operations absorbed so far.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// The buffered qlog lines, in operation order (also the content of
+    /// the qlog file in `Qlog` mode — the buffer is kept in every armed
+    /// mode so tests and `repro metrics` can dump it).
+    pub fn qlog_lines(&self) -> &[String] {
+        &self.qlog
+    }
+
+    /// Absorb one operation: fold its report into the lifetime totals
+    /// and latency sketches, resample the store-residency gauges, and
+    /// emit the operation's qlog record / rewritten Prometheus file per
+    /// the mode. No-op (and allocation-free) when `Off`.
+    pub fn absorb(
+        &mut self,
+        ctx: &OpContext<'_>,
+        report: &MetricsReport,
+        store: &SketchStore,
+    ) -> anyhow::Result<()> {
+        if !self.is_enabled() {
+            return Ok(());
+        }
+        self.ops += 1;
+        let key = (ctx.kind, ctx.stream.unwrap_or("").to_string());
+        self.totals.entry(key).or_default().add(report);
+        self.latency
+            .entry(ctx.kind)
+            .or_insert_with(LatencyFold::new)
+            .fold(&report.stage_attempt_us);
+        self.sample_store(store);
+
+        let line = qlog::record(self.ops, ctx, report);
+        if let Some(w) = &self.qlog_writer {
+            w.append(&line)?;
+        }
+        self.qlog.push(line);
+        if let MetricsMode::Prom(path) = &self.mode {
+            std::fs::write(path, self.render_prometheus())?;
+        }
+        Ok(())
+    }
+
+    /// Resample the residency gauges from the store's current state.
+    fn sample_store(&mut self, store: &SketchStore) {
+        for id in store.stream_ids() {
+            let Some(state) = store.stream(id) else {
+                continue;
+            };
+            self.residency.insert(
+                id.to_string(),
+                StreamResidency {
+                    live_epochs: state.live_epochs() as u64,
+                    sealed_epochs: state.sealed_epochs(),
+                    sketch_partials: state.sketch_partials() as u64,
+                    sketch_bytes: state.sketch_bytes(),
+                    data_bytes: state.data_bytes(),
+                    records: state.total_count(),
+                    compactions: state.compactions,
+                },
+            );
+        }
+    }
+
+    /// Clone out the current state (sorted, render-ready).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            ops: self.ops,
+            exec_mode: self.exec_mode.clone(),
+            simd_lane_width: self.simd_lane_width,
+            totals: self
+                .totals
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            latency: self
+                .latency
+                .iter()
+                .map(|(&kind, fold)| fold.summary(kind))
+                .collect(),
+            residency: self
+                .residency
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        }
+    }
+
+    /// Render the current state in Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        prom::render_prometheus(&self.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::metrics::RunMetrics;
+    use std::str::FromStr;
+
+    fn report(algorithm: &str, exact: bool) -> MetricsReport {
+        let m = RunMetrics {
+            rounds: 2,
+            data_scans: 2,
+            bytes_to_driver: 100,
+            bytes_shuffled: 10,
+            bytes_tree_reduced: 20,
+            bytes_broadcast: 30,
+            bytes_persisted: 5,
+            band_candidates: 50,
+            band_budget: 100,
+            stage_attempt_us: vec![vec![100, 200], vec![300, 400]],
+            ..Default::default()
+        };
+        MetricsReport::from_metrics(algorithm, 1_000, 4, 2, 0.5, &m, exact)
+    }
+
+    #[test]
+    fn metrics_mode_grammar_roundtrips() {
+        for s in ["off", "memory", "prom:/tmp/m.prom", "qlog:/tmp/q.jsonl"] {
+            let m = MetricsMode::from_str(s).unwrap();
+            let again = MetricsMode::from_str(&m.to_string()).unwrap();
+            assert_eq!(m, again, "{s}");
+        }
+        assert_eq!(MetricsMode::from_str("off").unwrap(), MetricsMode::Off);
+        assert_eq!(
+            MetricsMode::from_str("prom:m.prom").unwrap(),
+            MetricsMode::Prom(PathBuf::from("m.prom"))
+        );
+        assert!(MetricsMode::from_str("prom:").is_err());
+        assert!(MetricsMode::from_str("qlog:").is_err());
+        assert!(MetricsMode::from_str("statsd").is_err());
+        assert!(MetricsMode::from_str("").is_err());
+    }
+
+    #[test]
+    fn classify_matches_the_registry_vocabulary() {
+        assert_eq!(OpKind::classify("GK Select", true, false), OpKind::Batch);
+        assert_eq!(OpKind::classify("GK Multi-Select", true, false), OpKind::Batch);
+        assert_eq!(OpKind::classify("Stream Query", true, false), OpKind::Stream);
+        assert_eq!(OpKind::classify("Stream Query", false, false), OpKind::Sketched);
+        assert_eq!(OpKind::classify("Stream Ingest", true, false), OpKind::Ingest);
+        assert_eq!(OpKind::classify("GK Select", false, true), OpKind::Degraded);
+        assert_eq!(OpKind::classify("Stream Query", true, true), OpKind::Degraded);
+    }
+
+    #[test]
+    fn off_mode_is_invisible() {
+        let mut reg = MetricsRegistry::new(MetricsMode::Off, "sequential", 1);
+        let ctx = OpContext {
+            kind: OpKind::Batch,
+            stream: None,
+            plan: "single",
+            trace: None,
+        };
+        reg.absorb(&ctx, &report("GK Select", true), &SketchStore::default())
+            .unwrap();
+        assert!(!reg.is_enabled());
+        assert_eq!(reg.ops(), 0);
+        assert!(reg.qlog_lines().is_empty());
+        let snap = reg.snapshot();
+        assert_eq!(snap.ops, 0);
+        assert!(snap.totals.is_empty());
+        assert!(snap.latency.is_empty());
+    }
+
+    #[test]
+    fn absorb_accumulates_per_key_totals_and_latency() {
+        let mut reg = MetricsRegistry::new(MetricsMode::Memory, "sequential", 1);
+        let store = SketchStore::default();
+        let batch = OpContext {
+            kind: OpKind::Batch,
+            stream: None,
+            plan: "single",
+            trace: Some(1),
+        };
+        let stream = OpContext {
+            kind: OpKind::Stream,
+            stream: Some("s"),
+            plan: "multi",
+            trace: Some(2),
+        };
+        reg.absorb(&batch, &report("GK Select", true), &store).unwrap();
+        reg.absorb(&batch, &report("GK Select", true), &store).unwrap();
+        reg.absorb(&stream, &report("Stream Query", true), &store).unwrap();
+
+        assert_eq!(reg.ops(), 3);
+        assert_eq!(reg.qlog_lines().len(), 3);
+        let snap = reg.snapshot();
+        let b = snap.totals_for(OpKind::Batch, "").unwrap();
+        assert_eq!(b.ops, 2);
+        assert_eq!(b.rounds, 4);
+        assert_eq!(b.bytes_moved(), 320);
+        assert_eq!(b.bytes_total(), 330);
+        assert!((b.band_efficiency() - 0.5).abs() < 1e-12);
+        let s = snap.totals_for(OpKind::Stream, "s").unwrap();
+        assert_eq!(s.ops, 1);
+        // grand = 3 ops, every counter the per-key bins carry
+        let g = snap.grand();
+        assert_eq!(g.ops, 3);
+        assert_eq!(g.rounds, 6);
+        assert_eq!(g.records, 3_000);
+        // latency folded per kind: 2 batch ops × 4 tasks, 1 stream op × 4
+        let lat: Vec<(OpKind, u64)> = snap.latency.iter().map(|l| (l.kind, l.tasks)).collect();
+        assert_eq!(lat, vec![(OpKind::Batch, 8), (OpKind::Stream, 4)]);
+        let l = snap.latency[0];
+        assert_eq!(l.max_us, 400);
+        assert!(l.p50_us <= l.p95_us && l.p95_us <= l.p99_us && l.p99_us <= l.max_us);
+    }
+
+    #[test]
+    fn qlog_mode_appends_to_the_file() {
+        let dir = std::env::temp_dir().join("gkselect_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("q{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut reg = MetricsRegistry::new(MetricsMode::Qlog(path.clone()), "sequential", 1);
+        let ctx = OpContext {
+            kind: OpKind::Batch,
+            stream: None,
+            plan: "single",
+            trace: None,
+        };
+        reg.absorb(&ctx, &report("GK Select", true), &SketchStore::default())
+            .unwrap();
+        reg.absorb(&ctx, &report("GK Select", true), &SketchStore::default())
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert_eq!(reg.qlog_lines().len(), 2, "buffer mirrors the file");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn prom_mode_rewrites_a_complete_scrape() {
+        let dir = std::env::temp_dir().join("gkselect_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("m{}.prom", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut reg = MetricsRegistry::new(MetricsMode::Prom(path.clone()), "threads", 8);
+        let ctx = OpContext {
+            kind: OpKind::Batch,
+            stream: None,
+            plan: "single",
+            trace: None,
+        };
+        reg.absorb(&ctx, &report("GK Select", true), &SketchStore::default())
+            .unwrap();
+        let scrape = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(scrape, reg.render_prometheus(), "file is the live render");
+        assert!(scrape.contains("# TYPE gkselect_ops_total counter"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

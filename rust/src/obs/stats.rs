@@ -14,7 +14,10 @@ use crate::Key;
 
 /// ε of the latency sketch. Stage task counts are small (≤ partitions),
 /// so a tight ε costs nothing and keeps the percentiles near-exact.
-const STATS_EPSILON: f64 = 0.01;
+/// Shared with the engine-lifetime registry's per-kind folds
+/// ([`crate::obs::registry::MetricsRegistry`]) so both layers quote the
+/// same precision.
+pub const STATS_EPSILON: f64 = 0.01;
 
 /// Task-latency summary of one `map_partitions` stage: percentiles from
 /// the GK sketch, maximum exact. Durations are virtual-clock µs, so the

@@ -111,6 +111,14 @@ impl StreamState {
         self.epochs.len()
     }
 
+    /// Epochs sealed over the stream's lifetime (monotone — compaction
+    /// folds live epochs but never rewinds this). Paired with
+    /// [`Self::live_epochs`] it is the registry's residency gauge: the
+    /// gap between the two is exactly what compaction reclaimed.
+    pub fn sealed_epochs(&self) -> u64 {
+        self.next_epoch
+    }
+
     /// Partition count every epoch of this stream carries (pinned at
     /// first ingest).
     pub fn partitions(&self) -> usize {
@@ -335,6 +343,7 @@ mod tests {
         assert_eq!(store.seal_epoch("s", d, s).unwrap(), 1);
         let st = store.stream("s").unwrap();
         assert_eq!(st.live_epochs(), 2);
+        assert_eq!(st.sealed_epochs(), 2);
         assert_eq!(st.total_count(), 150);
         assert_eq!(st.sketch_partials(), 8);
         assert!(st.sketch_bytes() > 0);
@@ -391,6 +400,7 @@ mod tests {
         assert_eq!(stats.bytes_rewritten, 4 * 60 * 4);
         let st = store.stream("s").unwrap();
         assert_eq!(st.live_epochs(), 2);
+        assert_eq!(st.sealed_epochs(), 5, "compaction never rewinds the seal count");
         assert_eq!(st.sketch_partials(), 6);
         assert_eq!(st.total_count(), 300);
         assert_eq!(st.compactions, 1);

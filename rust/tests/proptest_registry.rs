@@ -1,0 +1,405 @@
+//! Property tests for the engine-lifetime metrics registry: for any
+//! random interleaving of ingests, batch/stream/sketched queries, and
+//! recoverable chaos, under BOTH exec modes,
+//!
+//! * the registry's lifetime totals — per (kind, stream) bin and the
+//!   grand total — are exactly the sum of the per-operation
+//!   [`MetricsReport`]s the engine handed out (u64 counters bit-exact,
+//!   modelled seconds up to float associativity),
+//! * the latency folds account for every task attempt of every report,
+//! * the Prometheus render is deterministic (two renders of one state
+//!   are byte-identical) with totals in sorted key order,
+//! * the qlog carries one parseable JSON line per operation, in order,
+//!   agreeing with the report it logs,
+//! * and `MetricsMode::Off` (the default) is invisible: same answers,
+//!   same protocol counters, zero registry state.
+//!
+//! Every engine pins its metrics mode explicitly, so `GKSELECT_METRICS`
+//! cannot perturb what these properties measure.
+
+use gkselect::cluster::dataset::Dataset;
+use gkselect::cluster::metrics::MetricsReport;
+use gkselect::cluster::{ClusterConfig, ExecMode, FaultPlan};
+use gkselect::engine::{AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source};
+use gkselect::obs::registry::OpTotals;
+use gkselect::obs::{MetricsMode, OpKind};
+use gkselect::stream::MicroBatch;
+use gkselect::util::minijson;
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+fn gen_geometry(g: &mut Gen) -> (usize, usize) {
+    let executors = g.usize_in(1, 3);
+    let partitions = executors * g.usize_in(1, 3);
+    (executors, partitions)
+}
+
+fn gen_values(g: &mut Gen, min: usize) -> Vec<Key> {
+    let n = g.usize_in(min, 800);
+    (0..n).map(|_| g.i32_in(-500_000, 500_000)).collect()
+}
+
+/// Recoverable plan (mirrors `proptest_trace.rs`): every fault retires
+/// within the default retry budget, straggler multipliers stay off the
+/// 2.0 speculation boundary so outcomes are mode-independent.
+fn gen_recoverable_plan(g: &mut Gen, partitions: usize) -> FaultPlan {
+    let mut plan = FaultPlan::seeded(g.u64())
+        .panics(g.f64_unit() * 0.2)
+        .transients(g.f64_unit() * 0.25);
+    if g.bool() {
+        plan = plan.stragglers(g.f64_unit() * 0.4, 2.5 + g.f64_unit() * 2.0);
+    }
+    if g.bool() {
+        plan = plan.panic_task(g.usize_in(0, 1) as u64, g.usize_in(0, partitions - 1));
+    }
+    plan
+}
+
+/// One step of the random workload script, replayed identically in both
+/// exec modes.
+#[derive(Debug, Clone)]
+enum Op {
+    Batch(QuantileQuery),
+    Ingest(&'static str, Vec<Key>),
+    StreamQuery(&'static str, QuantileQuery),
+}
+
+/// Random interleaving of ingest/query ops. Stream queries only target
+/// streams a prior op has ingested, so every script is executable.
+fn gen_script(g: &mut Gen) -> Vec<Op> {
+    const STREAMS: [&str; 2] = ["alpha", "beta"];
+    let mut ingested: Vec<&'static str> = Vec::new();
+    let len = g.usize_in(3, 8);
+    let mut script = Vec::with_capacity(len);
+    for _ in 0..len {
+        let roll = g.usize_in(0, 3);
+        if roll == 0 || (roll == 2 && ingested.is_empty()) {
+            let id = STREAMS[g.usize_in(0, 1)];
+            if !ingested.contains(&id) {
+                ingested.push(id);
+            }
+            script.push(Op::Ingest(id, gen_values(g, 1)));
+        } else if roll == 2 {
+            let id = ingested[g.usize_in(0, ingested.len() - 1)];
+            let q = if g.bool() {
+                QuantileQuery::Single(g.f64_unit())
+            } else {
+                QuantileQuery::Sketched { q: g.f64_unit(), eps: 0.05 }
+            };
+            script.push(Op::StreamQuery(id, q));
+        } else {
+            let q = match g.usize_in(0, 3) {
+                0 => QuantileQuery::Single(g.f64_unit()),
+                1 => QuantileQuery::Multi(vec![0.25, g.f64_unit(), 0.95]),
+                2 => QuantileQuery::Rank(0),
+                _ => QuantileQuery::Sketched { q: g.f64_unit(), eps: 0.05 },
+            };
+            script.push(Op::Batch(q));
+        }
+    }
+    script
+}
+
+fn engine(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    faults: Option<FaultPlan>,
+    metrics: MetricsMode,
+) -> QuantileEngine {
+    EngineBuilder::new()
+        .cluster(
+            ClusterConfig::local(executors, partitions)
+                .with_exec_mode(mode)
+                .with_fault_plan(faults),
+        )
+        .algorithm(AlgoChoice::GkSelect)
+        .metrics(metrics)
+        .build()
+        .unwrap()
+}
+
+/// Run the script, returning each operation's (key, report) in order.
+fn run_script(
+    eng: &mut QuantileEngine,
+    data: &Dataset,
+    script: &[Op],
+) -> Vec<((OpKind, String), MetricsReport)> {
+    let mut out = Vec::with_capacity(script.len());
+    for op in script {
+        match op {
+            Op::Batch(q) => {
+                let r = eng.execute(Source::Dataset(data), q.clone()).unwrap();
+                out.push(((r.op_kind(), String::new()), r.report));
+            }
+            Op::Ingest(id, values) => {
+                let r = eng.ingest(id, MicroBatch::new(values.clone())).unwrap();
+                out.push(((OpKind::Ingest, id.to_string()), r.report));
+            }
+            Op::StreamQuery(id, q) => {
+                let r = eng.execute(Source::Stream(id), q.clone()).unwrap();
+                out.push(((r.op_kind(), id.to_string()), r.report));
+            }
+        }
+    }
+    out
+}
+
+/// Reference accumulator: sum reports into an [`OpTotals`] by hand,
+/// field by field — the independent ledger the registry must match.
+fn sum_reports<'a>(reports: impl Iterator<Item = &'a MetricsReport>) -> OpTotals {
+    let mut t = OpTotals::default();
+    for r in reports {
+        t.ops += 1;
+        t.records += r.n;
+        t.rounds += r.rounds;
+        t.stage_boundaries += r.stage_boundaries;
+        t.data_scans += r.data_scans;
+        t.shuffles += r.shuffles;
+        t.persists += r.persists;
+        t.bytes_to_driver += r.bytes_to_driver;
+        t.bytes_shuffled += r.bytes_shuffled;
+        t.bytes_tree_reduced += r.bytes_tree_reduced;
+        t.bytes_broadcast += r.bytes_broadcast;
+        t.bytes_persisted += r.bytes_persisted;
+        t.messages += r.messages;
+        t.faults_injected += r.faults_injected;
+        t.tasks_retried += r.tasks_retried;
+        t.speculative_launched += r.speculative_launched;
+        t.speculative_wins += r.speculative_wins;
+        t.degraded_queries += r.degraded_queries;
+        t.band_candidates += r.band_candidates;
+        t.band_budget += r.band_budget;
+        t.elapsed_secs += r.elapsed_secs;
+        t.wall_stage_secs += r.wall_stage_secs;
+    }
+    t
+}
+
+/// u64 counters must match bit-exactly; the float sums only up to
+/// associativity (the registry adds per-bin, then merges bins).
+fn assert_totals_eq(got: &OpTotals, want: &OpTotals, what: &str) {
+    let strip = |t: &OpTotals| OpTotals {
+        elapsed_secs: 0.0,
+        wall_stage_secs: 0.0,
+        ..t.clone()
+    };
+    assert_eq!(strip(got), strip(want), "{what}: u64 counters must be the exact sum");
+    assert!(
+        (got.elapsed_secs - want.elapsed_secs).abs() <= 1e-9 * (1.0 + want.elapsed_secs.abs()),
+        "{what}: elapsed_secs {} vs {}",
+        got.elapsed_secs,
+        want.elapsed_secs
+    );
+    assert!(
+        (got.wall_stage_secs - want.wall_stage_secs).abs()
+            <= 1e-9 * (1.0 + want.wall_stage_secs.abs()),
+        "{what}: wall_stage_secs {} vs {}",
+        got.wall_stage_secs,
+        want.wall_stage_secs
+    );
+}
+
+#[test]
+fn prop_registry_totals_are_the_exact_sum_of_reports() {
+    check("registry_totals_sum", 15, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g, 32), partitions).unwrap();
+        let script = gen_script(g);
+        let plan = g.bool().then(|| gen_recoverable_plan(g, partitions));
+
+        for mode in [ExecMode::Sequential, ExecMode::Threads] {
+            let mut eng =
+                engine(executors, partitions, mode, plan.clone(), MetricsMode::Memory);
+            let ledger = run_script(&mut eng, &data, &script);
+            let snap = eng.metrics_snapshot();
+
+            assert_eq!(snap.ops, ledger.len() as u64, "one absorb per operation");
+            assert_eq!(snap.exec_mode, mode.label());
+
+            // grand total == sum over every report, independent of binning
+            assert_totals_eq(
+                &snap.grand(),
+                &sum_reports(ledger.iter().map(|(_, r)| r)),
+                &format!("grand [{mode:?}]"),
+            );
+            // each (kind, stream) bin == sum over exactly its reports,
+            // and no bin exists without a report behind it
+            let mut keys: Vec<_> = ledger.iter().map(|(k, _)| k.clone()).collect();
+            keys.sort();
+            keys.dedup();
+            assert_eq!(
+                snap.totals.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>(),
+                keys,
+                "bins are exactly the keys seen, in sorted order [{mode:?}]"
+            );
+            for key in &keys {
+                let want = sum_reports(
+                    ledger.iter().filter(|(k, _)| k == key).map(|(_, r)| r),
+                );
+                let got = snap.totals_for(key.0, &key.1).unwrap();
+                assert_totals_eq(got, &want, &format!("bin {key:?} [{mode:?}]"));
+            }
+            // band efficiency ≤ 1.0 on every bin and the grand total:
+            // extracts truncate at their budget, so sums can't exceed it
+            for (key, t) in &snap.totals {
+                assert!(t.band_efficiency() <= 1.0, "bin {key:?} [{mode:?}]");
+                assert!(t.band_candidates <= t.band_budget, "bin {key:?} [{mode:?}]");
+            }
+            // latency folds account for every task attempt of every report
+            for l in &snap.latency {
+                let attempts: u64 = ledger
+                    .iter()
+                    .filter(|((k, _), _)| *k == l.kind)
+                    .flat_map(|(_, r)| r.stage_attempt_us.iter())
+                    .map(|stage| stage.len() as u64)
+                    .sum();
+                assert_eq!(l.tasks, attempts, "latency fold {:?} [{mode:?}]", l.kind);
+                assert!(l.p50_us <= l.p95_us && l.p95_us <= l.p99_us && l.p99_us <= l.max_us);
+            }
+            // residency gauges mirror the store: every ingested stream
+            // sampled, records exact (compaction never drops records)
+            for (id, res) in &snap.residency {
+                let ingested: u64 = script
+                    .iter()
+                    .filter_map(|op| match op {
+                        Op::Ingest(s, v) if *s == id.as_str() => Some(v.len() as u64),
+                        _ => None,
+                    })
+                    .sum();
+                assert_eq!(res.records, ingested, "stream {id} records [{mode:?}]");
+                assert!(res.sealed_epochs >= res.live_epochs);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_prometheus_render_is_deterministic_and_sorted() {
+    check("registry_prom_stable", 10, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g, 32), partitions).unwrap();
+        let script = gen_script(g);
+        let mut eng =
+            engine(executors, partitions, ExecMode::Sequential, None, MetricsMode::Memory);
+        let ledger = run_script(&mut eng, &data, &script);
+
+        let a = eng.registry().render_prometheus();
+        let b = eng.registry().render_prometheus();
+        assert_eq!(a, b, "two renders of one state are byte-identical");
+
+        // every family that has a series also has HELP and TYPE heads
+        for name in ["gkselect_ops_total", "gkselect_bytes_total", "gkselect_band_efficiency_ratio"]
+        {
+            assert!(a.contains(&format!("# HELP {name} ")), "{name} HELP");
+            assert!(a.contains(&format!("# TYPE {name} ")), "{name} TYPE");
+        }
+        // ops series come out in the snapshot's sorted key order
+        let rendered: Vec<&str> = a
+            .lines()
+            .filter(|l| l.starts_with("gkselect_ops_total{"))
+            .collect();
+        let snap = eng.metrics_snapshot();
+        assert_eq!(rendered.len(), snap.totals.len());
+        for (line, ((kind, stream), t)) in rendered.iter().zip(&snap.totals) {
+            assert!(
+                line.contains(&format!("kind=\"{}\"", kind.label()))
+                    && line.contains(&format!("stream=\"{stream}\""))
+                    && line.ends_with(&format!(" {}", t.ops)),
+                "series order mirrors the sorted snapshot: {line}"
+            );
+        }
+        // the absorbed ledger is what the scrape reports
+        assert!(a.contains(&format!(
+            "gkselect_ops_total{{kind=\"{}\",stream=\"\",exec_mode=\"sequential\"",
+            ledger
+                .iter()
+                .find(|((_, s), _)| s.is_empty())
+                .map(|((k, _), _)| k.label())
+                .unwrap_or("batch"),
+        )) || ledger.iter().all(|((_, s), _)| !s.is_empty()));
+    });
+}
+
+#[test]
+fn prop_qlog_is_one_parseable_line_per_operation() {
+    check("registry_qlog_parses", 10, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g, 32), partitions).unwrap();
+        let script = gen_script(g);
+        let mut eng =
+            engine(executors, partitions, ExecMode::Sequential, None, MetricsMode::Memory);
+        let ledger = run_script(&mut eng, &data, &script);
+
+        let lines = eng.registry().qlog_lines().to_vec();
+        assert_eq!(lines.len(), ledger.len(), "one qlog line per operation");
+        for (i, (line, ((kind, stream), report))) in lines.iter().zip(&ledger).enumerate() {
+            let j = minijson::parse(line)
+                .unwrap_or_else(|e| panic!("qlog line {i} must parse: {e}\n{line}"));
+            assert_eq!(j.get("seq").and_then(|v| v.as_u64()), Some(i as u64 + 1));
+            assert_eq!(
+                j.get("op").and_then(|v| v.as_str()),
+                Some(kind.label()),
+                "line {i}"
+            );
+            assert_eq!(j.get("n").and_then(|v| v.as_u64()), Some(report.n), "line {i}");
+            assert_eq!(
+                j.get("rounds").and_then(|v| v.as_u64()),
+                Some(report.rounds),
+                "line {i}"
+            );
+            assert_eq!(
+                j.get("bytes_moved").and_then(|v| v.as_u64()),
+                Some(report.network_volume_bytes),
+                "line {i}"
+            );
+            // stream field present exactly for stream-keyed ops; no
+            // trace field because no trace sink is armed here
+            assert_eq!(
+                j.get("stream").and_then(|v| v.as_str()),
+                (!stream.is_empty()).then_some(stream.as_str()),
+                "line {i}"
+            );
+            assert!(j.get("trace").is_none(), "line {i}: no sink, no join key");
+            assert!(j.get("band_efficiency").is_some(), "line {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_off_mode_is_invisible() {
+    check("registry_off_invisible", 10, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let data = Dataset::from_vec(gen_values(g, 32), partitions).unwrap();
+        let script = gen_script(g);
+
+        // MetricsMode::Off is the builder default — this run IS the
+        // metrics-disabled configuration
+        let mut off_eng =
+            engine(executors, partitions, ExecMode::Sequential, None, MetricsMode::Off);
+        assert!(!off_eng.registry().is_enabled());
+        let off = run_script(&mut off_eng, &data, &script);
+
+        let mut on_eng =
+            engine(executors, partitions, ExecMode::Sequential, None, MetricsMode::Memory);
+        let on = run_script(&mut on_eng, &data, &script);
+
+        // zero registry state with Off...
+        let snap = off_eng.metrics_snapshot();
+        assert_eq!((snap.ops, off_eng.registry().ops()), (0, 0));
+        assert!(snap.totals.is_empty());
+        assert!(snap.latency.is_empty());
+        assert!(snap.residency.is_empty());
+        assert!(off_eng.registry().qlog_lines().is_empty());
+        // ...and identical operations: same keys, same protocol counters
+        assert_eq!(off.len(), on.len());
+        for (i, ((ka, ra), (kb, rb))) in off.iter().zip(&on).enumerate() {
+            assert_eq!(ka, kb, "op {i}");
+            assert_eq!(
+                (ra.rounds, ra.data_scans, ra.n, ra.network_volume_bytes),
+                (rb.rounds, rb.data_scans, rb.n, rb.network_volume_bytes),
+                "absorbing must not change what op {i} reports"
+            );
+        }
+    });
+}

@@ -7,6 +7,11 @@ Two classes of check, per run (keyed by algorithm x exec_mode):
   exactly. These are the protocol's shape (fused = 2/2, stream query =
   1/1, forced fallback = 3/3); any drift is a regression regardless of
   hardware.
+* invariant — any fresh record carrying `band_efficiency` must have it
+  in [0, 1], unconditionally (no baseline needed, no calibration
+  floor): GK Select's band extract truncates at the 16eps*n+64 budget,
+  so shipped/budget > 1.0 is a protocol bug, not a perf regression.
+  `band_candidates`/`band_budget` must agree with the ratio.
 * performance — band_scan_wall_s must not exceed baseline by more than
   --max-regress (default 25%) AND --min-delta-s absolute (noise floor);
   executor_utilization (threads runs) must not drop below baseline by
@@ -135,6 +140,36 @@ def main():
 
     failures = []
     checked = 0
+
+    # structural invariant, enforced on EVERY fresh record that carries
+    # the field — baseline-independent, never skipped: the band extract
+    # truncates at its budget, so the ratio can never legitimately
+    # exceed 1.0
+    for key, fresh in sorted(fresh_runs.items()):
+        if "band_efficiency" not in fresh:
+            continue
+        name = f"{key[0]} [{key[1]}]"
+        eff = fresh["band_efficiency"]
+        cand = fresh.get("band_candidates", 0)
+        budget = fresh.get("band_budget", 0)
+        checked += 1
+        if not 0.0 <= eff <= 1.0:
+            failures.append(
+                f"{name}: band_efficiency {eff} outside [0, 1] — the "
+                f"extract shipped past its 16eps*n+64 budget"
+            )
+        if cand > budget:
+            failures.append(
+                f"{name}: band_candidates {cand} > band_budget {budget}"
+            )
+        if budget:
+            implied = cand / budget
+            if abs(implied - eff) > 1e-9:
+                failures.append(
+                    f"{name}: band_efficiency {eff} disagrees with "
+                    f"candidates/budget = {implied}"
+                )
+
     for key, base in sorted(base_runs.items()):
         name = f"{key[0]} [{key[1]}]"
         fresh = fresh_runs.get(key)

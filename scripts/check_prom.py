@@ -1,0 +1,224 @@
+#!/usr/bin/env python3
+"""Validate Prometheus text-exposition scrapes emitted by `repro metrics`.
+
+Checks the contract the CI `metrics` job pins (stdlib only, exit 0/1/2):
+
+* every series line parses as `name{labels} value` with a legal metric
+  name, legal label names, and properly quoted/escaped label values;
+* every series belongs to a family that declared `# HELP` and `# TYPE`
+  *before* its first sample, and each family is declared exactly once;
+* operation series carry the four standard labels (`kind`, `stream`,
+  `exec_mode`, `simd`); store gauges carry the three stream-scoped ones;
+* every `gkselect_band_efficiency_ratio` sample is in [0, 1] — the
+  paper's no-full-shuffle claim (extracts truncate at the 16eps*n+64
+  budget, so shipped/budget can never exceed 1);
+* with a second scrape of the same engine taken later, every series
+  whose family TYPE is `counter` is monotone non-decreasing from the
+  first scrape to the second, and no counter series disappears.
+
+Usage: check_prom.py final.prom [--earlier early.prom]
+       [--expect-kind KIND ...] [--expect-stream ID ...]
+
+`--expect-kind` (repeatable) requires at least one `gkselect_ops_total`
+series with that `kind` label; `--expect-stream` requires a store
+residency gauge for that stream id.
+"""
+
+import argparse
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+OP_LABELS = {"kind", "stream", "exec_mode", "simd"}
+STORE_LABELS = {"stream", "exec_mode", "simd"}
+KINDS = {"batch", "stream", "ingest", "sketched", "degraded"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+class BadScrape(Exception):
+    pass
+
+
+def parse_labels(body, where):
+    """Parse the `k="v",...` body of a label set, honouring \\ escapes."""
+    labels = {}
+    i = 0
+    while i < len(body):
+        eq = body.find("=", i)
+        if eq < 0:
+            raise BadScrape(f"{where}: missing '=' in label set {body!r}")
+        name = body[i:eq]
+        if not LABEL_RE.match(name):
+            raise BadScrape(f"{where}: bad label name {name!r}")
+        if eq + 1 >= len(body) or body[eq + 1] != '"':
+            raise BadScrape(f"{where}: label {name} value not quoted")
+        j = eq + 2
+        value = []
+        while j < len(body):
+            c = body[j]
+            if c == "\\":
+                if j + 1 >= len(body) or body[j + 1] not in '\\"n':
+                    raise BadScrape(f"{where}: bad escape in label {name}")
+                value.append({"n": "\n"}.get(body[j + 1], body[j + 1]))
+                j += 2
+            elif c == '"':
+                break
+            else:
+                value.append(c)
+                j += 1
+        else:
+            raise BadScrape(f"{where}: unterminated value for label {name}")
+        if name in labels:
+            raise BadScrape(f"{where}: duplicate label {name}")
+        labels[name] = "".join(value)
+        i = j + 1
+        if i < len(body):
+            if body[i] != ",":
+                raise BadScrape(f"{where}: expected ',' after label {name}")
+            i += 1
+    return labels
+
+
+def parse_scrape(path):
+    """Return (types, helps, series) where series maps
+    (name, sorted-label-items) -> float value."""
+    types, helps, series = {}, {}, {}
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for lineno, line in enumerate(lines, 1):
+        where = f"{path}:{lineno}"
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not NAME_RE.match(parts[2]):
+                raise BadScrape(f"{where}: malformed HELP line")
+            if parts[2] in helps:
+                raise BadScrape(f"{where}: duplicate HELP for {parts[2]}")
+            helps[parts[2]] = parts[3]
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not NAME_RE.match(parts[2]):
+                raise BadScrape(f"{where}: malformed TYPE line")
+            if parts[3] not in ("counter", "gauge", "histogram", "summary",
+                                "untyped"):
+                raise BadScrape(f"{where}: unknown TYPE {parts[3]!r}")
+            if parts[2] in types:
+                raise BadScrape(f"{where}: duplicate TYPE for {parts[2]}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # comments are legal
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)\{(.*)\}\s+(\S+)$", line)
+        if not m:
+            raise BadScrape(f"{where}: unparseable series line {line!r}")
+        name, body, raw = m.groups()
+        if name not in types or name not in helps:
+            raise BadScrape(f"{where}: series {name} has no TYPE/HELP above it")
+        labels = parse_labels(body, where)
+        try:
+            value = float(raw)
+        except ValueError:
+            raise BadScrape(f"{where}: non-numeric value {raw!r}")
+        if name.startswith("gkselect_store_"):
+            want = STORE_LABELS
+        else:
+            want = OP_LABELS | ({"ledger"} if name == "gkselect_bytes_total"
+                                else set())
+            want = want | ({"quantile"}
+                           if name == "gkselect_task_latency_us" else set())
+        if set(labels) != want:
+            raise BadScrape(
+                f"{where}: {name} labels {sorted(labels)} != {sorted(want)}")
+        if "kind" in labels and labels["kind"] not in KINDS:
+            raise BadScrape(f"{where}: unknown kind {labels['kind']!r}")
+        key = (name, tuple(sorted(labels.items())))
+        if key in series:
+            raise BadScrape(f"{where}: duplicate series {key}")
+        series[key] = value
+    if not series:
+        raise BadScrape(f"{path}: no series at all")
+    return types, helps, series
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("scrape", help="the (final) scrape to validate")
+    ap.add_argument("--earlier", default=None,
+                    help="an earlier scrape of the same engine: counters "
+                         "must be monotone non-decreasing earlier -> final")
+    ap.add_argument("--expect-kind", action="append", default=[],
+                    metavar="KIND", choices=sorted(KINDS),
+                    help="require a gkselect_ops_total series with this "
+                         "kind label (repeatable)")
+    ap.add_argument("--expect-stream", action="append", default=[],
+                    metavar="ID",
+                    help="require store gauges for this stream (repeatable)")
+    args = ap.parse_args()
+
+    try:
+        types, _, series = parse_scrape(args.scrape)
+    except OSError as e:
+        print(f"error: cannot read {args.scrape}: {e}", file=sys.stderr)
+        return 2
+    except BadScrape as e:
+        return fail(str(e))
+
+    for (name, labels), value in series.items():
+        if name == "gkselect_band_efficiency_ratio" and not 0 <= value <= 1:
+            return fail(f"{name}{dict(labels)} = {value}, must be in [0, 1]")
+        if types.get(name) == "counter" and value < 0:
+            return fail(f"counter {name}{dict(labels)} is negative: {value}")
+
+    kinds_seen = {dict(labels)["kind"] for (name, labels) in series
+                  if name == "gkselect_ops_total"}
+    for kind in args.expect_kind:
+        if kind not in kinds_seen:
+            return fail(f"no gkselect_ops_total series with kind={kind!r}; "
+                        f"saw {sorted(kinds_seen)}")
+    streams_seen = {dict(labels)["stream"] for (name, labels) in series
+                    if name.startswith("gkselect_store_")}
+    for stream in args.expect_stream:
+        if stream not in streams_seen:
+            return fail(f"no store gauges for stream {stream!r}; "
+                        f"saw {sorted(streams_seen)}")
+
+    monotone_checked = 0
+    if args.earlier:
+        try:
+            early_types, _, early = parse_scrape(args.earlier)
+        except OSError as e:
+            print(f"error: cannot read {args.earlier}: {e}", file=sys.stderr)
+            return 2
+        except BadScrape as e:
+            return fail(str(e))
+        for key, before in early.items():
+            name = key[0]
+            # the earlier scrape's TYPE decides: a counter family that
+            # disappears entirely is as wrong as one that rewinds
+            if early_types.get(name) != "counter":
+                continue
+            after = series.get(key)
+            if after is None:
+                return fail(f"counter series {key} vanished between scrapes")
+            if after < before:
+                return fail(f"counter {key} went backwards: "
+                            f"{before} -> {after}")
+            monotone_checked += 1
+        if monotone_checked == 0:
+            return fail("earlier scrape shares no counter series with final")
+
+    print(f"prom OK: {len(series)} series, {len(types)} families, "
+          f"kinds {sorted(kinds_seen)}, "
+          f"{monotone_checked} counters monotone")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
