@@ -72,6 +72,7 @@ use crate::obs::{
     MetricsMode, MetricsRegistry, MetricsSnapshot, OpKind, SpanKind, Trace, TraceMode, TraceSink,
 };
 use crate::runtime::{backend_from_name, KernelBackend, SimdPolicy};
+use crate::stream::store::StreamSnapshot;
 use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, SketchStore, StreamIngestor};
 use crate::Key;
 
@@ -1182,55 +1183,48 @@ impl QuantileEngine {
         id: &str,
         query: &QuantileQuery,
     ) -> Result<QueryOutcome, EngineError> {
-        let n = {
-            let state = self
-                .store
-                .stream(id)
-                .ok_or_else(|| EngineError::UnknownStream(id.to_string()))?;
-            state.total_count()
-        };
-        if n == 0 {
-            return Err(EngineError::DrainedStream(id.to_string()));
-        }
-        query.validate(n)?;
-        let backend = self.backend.as_ref();
-        match query {
-            QuantileQuery::Single(q) => Ok(crate::stream::query::quantile_with(
-                &mut self.cluster,
-                backend,
-                &self.gk_params,
-                &self.store,
-                id,
-                *q,
-            )?
-            .into()),
-            QuantileQuery::Rank(k) => Ok(crate::stream::query::quantile_with(
-                &mut self.cluster,
-                backend,
-                &self.gk_params,
-                &self.store,
-                id,
-                rank_to_quantile(*k, n),
-            )?
-            .into()),
-            QuantileQuery::Multi(qs) => Ok(crate::stream::query::quantiles_with(
-                &mut self.cluster,
-                backend,
-                &self.gk_params,
-                &self.store,
-                id,
-                qs,
-            )?
-            .into()),
-            QuantileQuery::Sketched { q, eps } => Ok(crate::stream::query::sketched_with(
-                &mut self.cluster,
-                &self.store,
-                id,
-                *q,
-                *eps,
-            )?
-            .into()),
-        }
+        let snap = self
+            .store
+            .stream(id)
+            .ok_or_else(|| EngineError::UnknownStream(id.to_string()))?
+            .snapshot();
+        snapshot_plan(
+            &mut self.cluster,
+            self.backend.as_ref(),
+            &self.gk_params,
+            &snap,
+            id,
+            query,
+        )
+    }
+
+    /// Answer `query` over an explicitly pinned [`StreamSnapshot`]
+    /// without touching the engine's own cluster, store, tracer, or
+    /// registry — the `&self` read path concurrent callers build on
+    /// (the serving layer runs many of these in parallel against one
+    /// engine configuration while a writer keeps ingesting). The caller
+    /// supplies the scratch `cluster` the fused scan runs on; the
+    /// answer is bit-identical to `execute(Source::Stream(id), query)`
+    /// over the same snapshot because both run the same plan body. The
+    /// outcome's report carries the backend's SIMD lane width, like
+    /// every [`Self::execute`] outcome.
+    pub fn query_snapshot(
+        &self,
+        cluster: &mut Cluster,
+        snap: &StreamSnapshot,
+        stream: &str,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let mut out = snapshot_plan(
+            cluster,
+            self.backend.as_ref(),
+            &self.gk_params,
+            snap,
+            stream,
+            query,
+        )?;
+        out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+        Ok(out)
     }
 
     /// Seal one micro-batch into `stream`'s epoch store (the streaming
@@ -1330,6 +1324,51 @@ impl QuantileEngine {
     /// counters, task-latency summaries, and store-residency gauges.
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         self.registry.snapshot()
+    }
+}
+
+/// The one stream-plan body: validate against the snapshot's count,
+/// then dispatch each query shape onto the snapshot-based fused
+/// protocol. `execute_stream` (the serialized `&mut` path) and
+/// [`QuantileEngine::query_snapshot`] / the serving layer (the
+/// concurrent `&self` path) both land here — bit-identical answers
+/// over the same pinned epochs are guaranteed by sharing this body,
+/// not by a test alone.
+pub(crate) fn snapshot_plan(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    snap: &StreamSnapshot,
+    stream: &str,
+    query: &QuantileQuery,
+) -> Result<QueryOutcome, EngineError> {
+    let n = snap.total_count();
+    if n == 0 {
+        return Err(EngineError::DrainedStream(stream.to_string()));
+    }
+    query.validate(n)?;
+    match query {
+        QuantileQuery::Single(q) => Ok(crate::stream::query::quantile_snapshot_with(
+            cluster, backend, params, snap, stream, *q,
+        )?
+        .into()),
+        QuantileQuery::Rank(k) => Ok(crate::stream::query::quantile_snapshot_with(
+            cluster,
+            backend,
+            params,
+            snap,
+            stream,
+            rank_to_quantile(*k, n),
+        )?
+        .into()),
+        QuantileQuery::Multi(qs) => Ok(crate::stream::query::quantiles_snapshot_with(
+            cluster, backend, params, snap, stream, qs,
+        )?
+        .into()),
+        QuantileQuery::Sketched { q, eps } => Ok(crate::stream::query::sketched_snapshot_with(
+            cluster, snap, stream, *q, *eps,
+        )?
+        .into()),
     }
 }
 

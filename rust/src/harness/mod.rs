@@ -570,6 +570,212 @@ pub fn run_stream(
     Ok(())
 }
 
+/// Value at quantile `p` of an ascending-sorted latency sample
+/// (nearest-rank; 0.0 on an empty sample).
+fn latency_percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// `repro serve`: closed-loop concurrent workload against the
+/// multi-tenant [`crate::service::QuantileService`] — `clients` client
+/// threads share `streams` streams under seeded per-thread schedules
+/// (one ingest per four ops, queries otherwise), measuring REAL query
+/// latency (p50/p99) and throughput at the offered load. With
+/// `verify_every > 0`, every Nth query each client answers is replayed
+/// through a fresh serialized sequential engine holding exactly the
+/// pinned snapshot's epochs ([`crate::service::QuantileService::oracle`])
+/// and must match bit-identically — snapshot isolation checked live,
+/// under real concurrency. After the run, the registry's per-stream
+/// residency gauges must equal each stream's Σ ingested records (no
+/// lost updates) and the grand op total must equal the ops the clients
+/// actually ran.
+pub fn run_serve(
+    cfg: &ReproConfig,
+    clients: usize,
+    streams: usize,
+    ops: u64,
+    batch_n: u64,
+    qs: &[f64],
+    verify_every: u64,
+) -> Result<()> {
+    use crate::algorithms::gk_select::GkSelectParams;
+    use crate::obs::MetricsMode;
+    use crate::service::QuantileService;
+    use crate::stream::MicroBatch;
+
+    ensure!(
+        clients > 0 && streams > 0 && ops > 0 && batch_n > 0,
+        "need at least one client, stream, op, and record per batch"
+    );
+    ensure!(!qs.is_empty(), "need at least one quantile");
+    let seed = cfg.algorithm.seed;
+    let params = GkSelectParams {
+        epsilon: cfg.algorithm.epsilon,
+        ..GkSelectParams::default()
+    };
+    let svc = QuantileService::builder()
+        .cluster(cfg.cluster_config())
+        .params(params)
+        .compaction(cfg.stream.to_policy()?)
+        .kernel_backend(std::sync::Arc::from(cfg.kernel_backend()?))
+        .metrics(MetricsMode::Memory)
+        .build()?;
+    println!(
+        "# serve — {clients} clients × {streams} streams, {ops} ops/client, \
+         batch {batch_n}, {} {} (simd ×{}), ε = {}",
+        svc.cluster_config().exec_mode.label(),
+        svc.backend_name(),
+        svc.simd_lane_width(),
+        cfg.algorithm.epsilon,
+    );
+
+    // warm every stream with one sealed epoch so no query races the
+    // very first seal of its stream
+    for s in 0..streams {
+        let values = StreamWorkload::Uniform.batch(seed ^ s as u64, 0, batch_n as usize);
+        svc.ingest(&format!("tenant-{s}"), MicroBatch::new(values))?;
+    }
+
+    #[derive(Default)]
+    struct ClientStats {
+        query_lat: Vec<f64>,
+        ingests: u64,
+        ingest_wall: f64,
+        records_by_stream: std::collections::BTreeMap<usize, u64>,
+        verified: u64,
+    }
+
+    let svc_ref = &svc;
+    let t0 = Instant::now();
+    let results: Vec<Result<ClientStats>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<ClientStats> {
+                    let mut rng = crate::data::pcg::Pcg64::new(seed, 0x5E21 ^ c as u64);
+                    let mut stats = ClientStats::default();
+                    for op in 0..ops {
+                        let s = (rng.next_u64() % streams as u64) as usize;
+                        let id = format!("tenant-{s}");
+                        if op % 4 == 3 {
+                            let values = StreamWorkload::Uniform.batch(
+                                seed ^ ((c as u64) << 20) ^ (op << 8),
+                                op,
+                                batch_n as usize,
+                            );
+                            let t = Instant::now();
+                            let ing = svc_ref.ingest(&id, MicroBatch::new(values))?;
+                            stats.ingest_wall += t.elapsed().as_secs_f64();
+                            stats.ingests += 1;
+                            *stats.records_by_stream.entry(s).or_default() +=
+                                ing.batch_records;
+                        } else {
+                            let q = qs[(op % qs.len() as u64) as usize];
+                            let t = Instant::now();
+                            let pin = svc_ref.pin(&id)?;
+                            let out =
+                                svc_ref.query_pinned(&pin, &QuantileQuery::Single(q))?;
+                            stats.query_lat.push(t.elapsed().as_secs_f64());
+                            ensure!(
+                                out.report.exact,
+                                "serve answered inexactly at client {c} op {op}"
+                            );
+                            if verify_every > 0
+                                && stats.query_lat.len() as u64 % verify_every == 0
+                            {
+                                let mut oracle = svc_ref.oracle(&pin)?;
+                                let want = oracle
+                                    .execute(Source::Stream(&id), QuantileQuery::Single(q))?;
+                                ensure!(
+                                    out.value() == want.value(),
+                                    "SNAPSHOT VIOLATION client {c} op {op} {id} q={q}: \
+                                     served {} but the serialized oracle over the pinned \
+                                     epochs answers {}",
+                                    out.value(),
+                                    want.value()
+                                );
+                                stats.verified += 1;
+                            }
+                        }
+                    }
+                    Ok(stats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve client thread panicked"))
+            .collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut lats = Vec::new();
+    let mut ingests = 0u64;
+    let mut ingest_wall = 0.0f64;
+    let mut verified = 0u64;
+    let mut by_stream = vec![0u64; streams];
+    for r in results {
+        let s = r?;
+        lats.extend(s.query_lat);
+        ingests += s.ingests;
+        ingest_wall += s.ingest_wall;
+        verified += s.verified;
+        for (stream, records) in s.records_by_stream {
+            by_stream[stream] += records;
+        }
+    }
+    lats.sort_by(f64::total_cmp);
+    let queries = lats.len() as u64;
+    println!(
+        "serve: {queries} queries in {elapsed:.3} s → {:.1} qps  \
+         (p50 {:.2} ms, p99 {:.2} ms)",
+        queries as f64 / elapsed.max(1e-12),
+        latency_percentile(&lats, 0.50) * 1e3,
+        latency_percentile(&lats, 0.99) * 1e3,
+    );
+    let ingested: u64 = by_stream.iter().sum();
+    println!(
+        "serve: {ingests} ingests, {ingested} records in {ingest_wall:.3} s ingest-wall \
+         ({:.2} Mkeys/s)",
+        ingested as f64 / ingest_wall.max(1e-12) / 1e6,
+    );
+
+    // no lost updates: the registry's residency gauge for each stream
+    // must equal exactly what was ingested into it (warmup + clients)
+    let snap = svc.metrics_snapshot();
+    for (s, client_records) in by_stream.iter().enumerate() {
+        let id = format!("tenant-{s}");
+        let expect = batch_n + client_records;
+        let got = snap
+            .residency
+            .iter()
+            .find(|(name, _)| name == &id)
+            .map(|(_, r)| r.records)
+            .unwrap_or(0);
+        ensure!(
+            got == expect,
+            "LOST UPDATE on {id}: residency gauge {got} != ingested {expect}"
+        );
+    }
+    let expected_ops = streams as u64 + ingests + queries;
+    ensure!(
+        snap.grand().ops == expected_ops,
+        "registry absorbed {} ops, clients ran {expected_ops}",
+        snap.grand().ops
+    );
+    println!("serve: residency check OK ({streams} streams, no lost updates)");
+    if verify_every > 0 {
+        println!(
+            "serve: verified {verified}/{queries} responses bit-identical to the \
+             serialized oracle over their pinned snapshots"
+        );
+    }
+    Ok(())
+}
+
 /// Rank error of `value` as an answer for quantile `q` over `sorted`
 /// (0.0 when the value's duplicate run covers the target rank) — the
 /// acceptance metric for degraded ε-approximate answers.
@@ -960,6 +1166,144 @@ pub fn stream_query_bench_record(
         ("store_bytes", JsonVal::U64(state.store_bytes())),
         ("ingest_wall_s_total", JsonVal::F64(ingest_wall)),
         ("exact", JsonVal::Bool(out.report.exact)),
+    ]))
+}
+
+/// Concurrent serving throughput: `clients` closed-loop client threads
+/// against one [`crate::service::QuantileService`] (4 streams warmed
+/// with `n` records total, mixed 1-ingest-per-8-ops schedule), vs the
+/// identical query sequence run serially through one `QuantileEngine`
+/// over the same store contents → a JSON record with real qps, p50/p99
+/// query latency, and the concurrency speedup. The per-query protocol
+/// stays the serving hot path (rounds=1 / data_scans=1, exact), pinned
+/// structurally from a sampled outcome; the service's scratch-cluster
+/// queries run `ExecMode::Sequential`, so all parallelism in the
+/// concurrent leg comes from clients — which is exactly what the
+/// record measures.
+pub fn serve_throughput_bench_record(n: u64, clients: usize, simd: SimdPolicy) -> Result<JsonVal> {
+    use crate::service::QuantileService;
+    use crate::stream::MicroBatch;
+
+    const STREAMS: usize = 4;
+    const WARM_BATCHES: u64 = 8;
+    const TOTAL_OPS: u64 = 128;
+    let per = (n / (STREAMS as u64 * WARM_BATCHES)).max(1) as usize;
+    let per_client = (TOTAL_OPS / clients as u64).max(1);
+    let mut cc = crate::cluster::ClusterConfig::local(4, 8);
+    cc.exec_mode = ExecMode::Sequential;
+    cc.faults = None;
+
+    let svc = QuantileService::builder()
+        .cluster(cc.clone())
+        .kernel_backend(std::sync::Arc::new(NativeBackend::with_policy(simd)))
+        .build()?;
+    for s in 0..STREAMS {
+        for tick in 0..WARM_BATCHES {
+            let values = StreamWorkload::Uniform.batch(42 ^ s as u64, tick, per);
+            svc.ingest(&format!("bench-{s}"), MicroBatch::new(values))?;
+        }
+    }
+
+    let svc_ref = &svc;
+    let t0 = Instant::now();
+    let per_thread: Vec<Result<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<Vec<f64>> {
+                    let mut rng = crate::data::pcg::Pcg64::new(42, 0xBE9C ^ c as u64);
+                    let mut lats = Vec::new();
+                    for op in 0..per_client {
+                        let s = (rng.next_u64() % STREAMS as u64) as usize;
+                        let id = format!("bench-{s}");
+                        if op % 8 == 7 {
+                            let values = StreamWorkload::Uniform
+                                .batch(7 ^ ((c as u64) << 16) ^ op, op, per);
+                            svc_ref.ingest(&id, MicroBatch::new(values))?;
+                        } else {
+                            let q = if op % 2 == 0 { 0.5 } else { 0.99 };
+                            let t = Instant::now();
+                            let out = svc_ref.query(&id, &QuantileQuery::Single(q))?;
+                            lats.push(t.elapsed().as_secs_f64());
+                            ensure!(out.report.exact, "serve bench answered inexactly");
+                        }
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve bench client panicked"))
+            .collect()
+    });
+    let concurrent_wall = t0.elapsed().as_secs_f64();
+    let mut lats = Vec::new();
+    for r in per_thread {
+        lats.extend(r?);
+    }
+    lats.sort_by(f64::total_cmp);
+    let queries = lats.len() as u64;
+    let qps = queries as f64 / concurrent_wall.max(1e-12);
+
+    // serialized baseline: the same number of queries over the same
+    // per-stream record volume, one at a time through one engine
+    let mut engine = EngineBuilder::new()
+        .cluster(cc)
+        .algorithm(AlgoChoice::GkSelect)
+        .simd(simd)
+        .build()?;
+    for s in 0..STREAMS {
+        for tick in 0..WARM_BATCHES {
+            let values = StreamWorkload::Uniform.batch(42 ^ s as u64, tick, per);
+            engine.ingest(&format!("bench-{s}"), MicroBatch::new(values))?;
+        }
+    }
+    let t1 = Instant::now();
+    let mut sample = None;
+    for i in 0..queries {
+        let s = (i % STREAMS as u64) as usize;
+        let q = if i % 2 == 0 { 0.5 } else { 0.99 };
+        let id = format!("bench-{s}");
+        sample = Some(engine.execute(Source::Stream(&id), QuantileQuery::Single(q))?);
+    }
+    let serial_wall = t1.elapsed().as_secs_f64();
+    let serial_qps = queries as f64 / serial_wall.max(1e-12);
+    let speedup = qps / serial_qps.max(1e-12);
+    let sample = sample.expect("at least one query ran");
+
+    println!(
+        "bench gk_select_serve/serve_throughput    {:>2} clients  {:>7.1} qps \
+         (p50 {:>6.2} ms p99 {:>6.2} ms)  serialized {:>7.1} qps  speedup {:.2}x",
+        clients,
+        qps,
+        latency_percentile(&lats, 0.50) * 1e3,
+        latency_percentile(&lats, 0.99) * 1e3,
+        serial_qps,
+        speedup,
+    );
+    Ok(JsonVal::obj(vec![
+        ("algorithm", JsonVal::Str("serve_throughput".into())),
+        ("exec_mode", JsonVal::Str(format!("clients_{clients}"))),
+        ("n", JsonVal::U64(n)),
+        ("clients", JsonVal::U64(clients as u64)),
+        ("streams", JsonVal::U64(STREAMS as u64)),
+        ("queries", JsonVal::U64(queries)),
+        ("serve_qps", JsonVal::F64(qps)),
+        ("serve_p50_s", JsonVal::F64(latency_percentile(&lats, 0.50))),
+        ("serve_p99_s", JsonVal::F64(latency_percentile(&lats, 0.99))),
+        ("serialized_qps", JsonVal::F64(serial_qps)),
+        ("concurrent_speedup", JsonVal::F64(speedup)),
+        ("rounds", JsonVal::U64(sample.report.rounds)),
+        ("data_scans", JsonVal::U64(sample.report.data_scans)),
+        (
+            "simd",
+            JsonVal::Str(SimdDispatch::resolve(simd).label().into()),
+        ),
+        (
+            "simd_lane_width",
+            JsonVal::U64(SimdDispatch::resolve(simd).lane_width() as u64),
+        ),
+        ("exact", JsonVal::Bool(sample.report.exact)),
     ]))
 }
 
@@ -1400,6 +1744,12 @@ pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
         // through the thread pool
         stream_query_bench_record("stream_query", n, 32, ExecMode::Sequential, simd)?,
         stream_query_bench_record("stream_query_threads", n, 32, ExecMode::Threads, simd)?,
+        // the concurrent serving layer: closed-loop clients against one
+        // QuantileService vs the same queries serialized through one
+        // engine — real qps and p50/p99 at three offered loads
+        serve_throughput_bench_record(n, 1, simd)?,
+        serve_throughput_bench_record(n, 8, simd)?,
+        serve_throughput_bench_record(n, 32, simd)?,
         // the kernel dispatch itself: single-thread band-scan rate of the
         // SIMD tile vs the scalar oracle (what ExecMode::Threads multiplies)
         simd_vs_scalar_bench_record(n)?,
@@ -1450,7 +1800,16 @@ pub fn gk_select_bench_doc(n: u64, simd: SimdPolicy) -> Result<JsonVal> {
                  trace_overhead_ratio should stay ~1.0. stage_stats on \
                  each run are the self-sketched per-stage task-latency \
                  percentiles (virtual-clock us through our own GK sketch; \
-                 deterministic, mode-independent)"
+                 deterministic, mode-independent). serve_throughput \
+                 [clients_1|8|32] measures the concurrent multi-tenant \
+                 QuantileService: closed-loop client threads running a \
+                 mixed ingest/query schedule over 4 streams vs the same \
+                 query count serialized through one engine — serve_qps, \
+                 real p50/p99 query latency, and concurrent_speedup \
+                 (clients_1 pins the service's per-query overhead near \
+                 1.0x; 8 and 32 must scale). Every served answer is \
+                 exact and snapshot-isolated; rounds/data_scans stay \
+                 the 1/1 serving hot path"
                     .into(),
             ),
         ),

@@ -18,7 +18,9 @@
 //!   shuffle, and a calibrated network/compute cost model; the
 //!   distributed quantile [`algorithms`] (stateless strategies behind
 //!   the engine); the [`stream`] serving layer (micro-batch ingestion,
-//!   cached sketch store, one-scan exact queries); and all the
+//!   cached sketch store, one-scan exact queries); the [`service`]
+//!   concurrent multi-tenant layer (snapshot-isolated epochs,
+//!   single-writer/many-reader streams); and all the
 //!   substrates they need ([`sketch`], [`select`], [`sort`], [`data`]).
 //! * **L2/L1 (python, build-time only)** — a JAX pivot-pass pipeline
 //!   whose hot loops are Pallas kernels, AOT-lowered to HLO text by
@@ -60,6 +62,7 @@ pub mod harness;
 pub mod obs;
 pub mod runtime;
 pub mod select;
+pub mod service;
 pub mod sketch;
 pub mod sort;
 pub mod stream;
@@ -93,6 +96,7 @@ pub mod prelude {
         StageStats, Trace, TraceMode, TraceSink,
     };
     pub use crate::runtime::{KernelBackend, NativeBackend, SimdPolicy};
+    pub use crate::service::{Pinned, QuantileService, ServiceBuilder};
     pub use crate::sketch::{
         classical::ClassicalGk, modified::ModifiedGk, spark::SparkGk, QuantileSketch,
     };

@@ -16,6 +16,7 @@
 //! repro bench ablation --n 8e6 --nodes 10
 //! repro bench json     --n 4e6 --out .
 //! repro stream         --batches 16 --batch-n 250000 --workload zipf --queries 0.5,0.95,0.99
+//! repro serve          --clients 8 --streams 4 --ops 64 --batch-n 50000 --verify
 //! repro chaos          --n 2e6 --plan "seed=7,panic=0.02,straggler=0.1x4" --verify
 //! repro trace batch    --n 2e5 --out trace.json
 //! repro metrics        --n 2e5 --out metrics-out
@@ -60,6 +61,15 @@ COMMANDS:
              queries through the streaming service
              --batches <count> --batch-n <records> --workload uniform|zipf|hostile
              --queries 0.5,0.95,0.99 --query-every <ticks> --nodes <count> --verify
+  serve      closed-loop concurrent workload against the multi-tenant
+             QuantileService: client threads share streams under a seeded
+             mixed ingest/query schedule; prints real qps + p50/p99 query
+             latency and checks residency/no-lost-updates; --verify
+             replays every Nth query through a serialized sequential
+             oracle over the pinned snapshot (bit-identical or fail)
+             --clients <count> --streams <count> --ops <per-client>
+             --batch-n <records> --queries 0.5,0.95,0.99 --nodes <count>
+             --seed <n> --verify [--verify-every <n>]
   chaos      replay batch + stream queries under seeded fault injection and
              report what the recovery layer did (retries, speculation,
              degradations); --verify pins answers against a fault-free run
@@ -252,6 +262,57 @@ fn main() -> Result<()> {
                 &qs,
                 args.u64_or("query-every", 1)?,
                 args.has("verify"),
+            )
+        }
+        "serve" => {
+            args.ensure_known(&[
+                "config",
+                "backend",
+                "exec-mode",
+                "simd",
+                "faults",
+                "trace",
+                "metrics",
+                "clients",
+                "streams",
+                "ops",
+                "batch-n",
+                "queries",
+                "nodes",
+                "seed",
+                "verify",
+                "verify-every",
+            ])?;
+            if let Some(nodes) = args.str_opt("nodes") {
+                cfg.cluster.nodes = nodes.parse()?;
+            }
+            if let Some(seed) = args.str_opt("seed") {
+                cfg.algorithm.seed = seed.parse()?;
+            }
+            let qs: Vec<f64> = args
+                .str_or("queries", "0.5,0.95,0.99")
+                .split(',')
+                .map(|s| {
+                    let q: f64 = s.trim().parse()?;
+                    anyhow::ensure!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+                    Ok(q)
+                })
+                .collect::<Result<_>>()?;
+            // --verify-every N oracle-checks every Nth query per client;
+            // bare --verify defaults to every 8th
+            let verify_every = match args.str_opt("verify-every") {
+                Some(v) => v.parse()?,
+                None if args.has("verify") => 8,
+                None => 0,
+            };
+            harness::run_serve(
+                &cfg,
+                args.u64_or("clients", 8)? as usize,
+                args.u64_or("streams", 4)? as usize,
+                args.u64_or("ops", 64)?,
+                args.u64_or("batch-n", 50_000)?,
+                &qs,
+                verify_every,
             )
         }
         "chaos" => {

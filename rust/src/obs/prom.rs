@@ -298,6 +298,42 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
         }
     }
 
+    // -- serving-layer load gauges (one series each; only once the
+    //    registry has absorbed something, so an empty snapshot stays
+    //    headers-only)
+    let svc_labels = vec![
+        ("exec_mode", snap.exec_mode.clone()),
+        ("simd", snap.simd_lane_width.to_string()),
+    ];
+    head(
+        &mut out,
+        "gkselect_service_in_flight_queries",
+        "Queries currently executing in the serving layer.",
+        "gauge",
+    );
+    if snap.ops > 0 {
+        line(
+            &mut out,
+            "gkselect_service_in_flight_queries",
+            &svc_labels,
+            snap.in_flight_queries,
+        );
+    }
+    head(
+        &mut out,
+        "gkselect_service_ingest_queue_depth",
+        "Ingests queued or executing in the serving layer.",
+        "gauge",
+    );
+    if snap.ops > 0 {
+        line(
+            &mut out,
+            "gkselect_service_ingest_queue_depth",
+            &svc_labels,
+            snap.ingest_queue_depth,
+        );
+    }
+
     out
 }
 
@@ -348,6 +384,8 @@ mod tests {
                     compactions: 1,
                 },
             )],
+            in_flight_queries: 3,
+            ingest_queue_depth: 1,
         }
     }
 
@@ -381,6 +419,12 @@ mod tests {
         assert!(a.contains("quantile=\"0.95\""));
         assert!(a.contains(
             "gkselect_store_live_epochs{stream=\"s\",exec_mode=\"sequential\",simd=\"8\"} 2"
+        ));
+        assert!(a.contains(
+            "gkselect_service_in_flight_queries{exec_mode=\"sequential\",simd=\"8\"} 3"
+        ));
+        assert!(a.contains(
+            "gkselect_service_ingest_queue_depth{exec_mode=\"sequential\",simd=\"8\"} 1"
         ));
     }
 

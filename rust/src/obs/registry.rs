@@ -367,6 +367,10 @@ pub struct MetricsSnapshot {
     pub latency: Vec<LatencySummary>,
     /// Per-stream store residency at the last absorb, sorted by stream.
     pub residency: Vec<(String, StreamResidency)>,
+    /// Queries currently executing in the serving layer (0 outside it).
+    pub in_flight_queries: u64,
+    /// Ingests queued or executing in the serving layer (0 outside it).
+    pub ingest_queue_depth: u64,
 }
 
 impl MetricsSnapshot {
@@ -399,6 +403,8 @@ pub struct MetricsRegistry {
     totals: BTreeMap<(OpKind, String), OpTotals>,
     latency: BTreeMap<OpKind, LatencyFold>,
     residency: BTreeMap<String, StreamResidency>,
+    in_flight_queries: u64,
+    ingest_queue_depth: u64,
     qlog: Vec<String>,
     qlog_writer: Option<qlog::QlogWriter>,
 }
@@ -420,6 +426,8 @@ impl MetricsRegistry {
             totals: BTreeMap::new(),
             latency: BTreeMap::new(),
             residency: BTreeMap::new(),
+            in_flight_queries: 0,
+            ingest_queue_depth: 0,
             qlog: Vec::new(),
             qlog_writer,
         }
@@ -460,6 +468,25 @@ impl MetricsRegistry {
         if !self.is_enabled() {
             return Ok(());
         }
+        self.sample_store(store);
+        self.absorb_with(ctx, report, std::iter::empty())
+    }
+
+    /// [`Self::absorb`] with residency supplied by the caller instead of
+    /// sampled from a borrowable store — the serving layer's absorb hook
+    /// (its per-stream stores live behind writer locks, so it samples
+    /// residency from the snapshot each ingest publishes; query absorbs
+    /// pass nothing, because a pinned — possibly stale — snapshot must
+    /// never roll a monotone residency gauge backwards).
+    pub fn absorb_with(
+        &mut self,
+        ctx: &OpContext<'_>,
+        report: &MetricsReport,
+        residency: impl IntoIterator<Item = (String, StreamResidency)>,
+    ) -> anyhow::Result<()> {
+        if !self.is_enabled() {
+            return Ok(());
+        }
         self.ops += 1;
         let key = (ctx.kind, ctx.stream.unwrap_or("").to_string());
         self.totals.entry(key).or_default().add(report);
@@ -467,7 +494,9 @@ impl MetricsRegistry {
             .entry(ctx.kind)
             .or_insert_with(LatencyFold::new)
             .fold(&report.stage_attempt_us);
-        self.sample_store(store);
+        for (stream, r) in residency {
+            self.residency.insert(stream, r);
+        }
 
         let line = qlog::record(self.ops, ctx, report);
         if let Some(w) = &self.qlog_writer {
@@ -478,6 +507,17 @@ impl MetricsRegistry {
             std::fs::write(path, self.render_prometheus())?;
         }
         Ok(())
+    }
+
+    /// Update the serving-layer gauges: queries currently executing and
+    /// ingests queued or executing. No-op when `Off`, like every other
+    /// write.
+    pub fn set_service_gauges(&mut self, in_flight_queries: u64, ingest_queue_depth: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.in_flight_queries = in_flight_queries;
+        self.ingest_queue_depth = ingest_queue_depth;
     }
 
     /// Resample the residency gauges from the store's current state.
@@ -522,6 +562,8 @@ impl MetricsRegistry {
                 .iter()
                 .map(|(k, v)| (k.clone(), v.clone()))
                 .collect(),
+            in_flight_queries: self.in_flight_queries,
+            ingest_queue_depth: self.ingest_queue_depth,
         }
     }
 

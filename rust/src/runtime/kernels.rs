@@ -187,11 +187,14 @@ impl NetSize for BandExtract {
 /// The executor-side compute hot spots, as implemented by either the
 /// AOT/PJRT path or native rust. All counts are over the full slice.
 ///
-/// Methods take `&self` and the trait requires `Sync`: one backend
-/// instance is shared by every executor thread of the pool
-/// (`ExecMode::Threads` runs partition closures concurrently), so any
-/// backend-internal scratch state must use interior mutability.
-pub trait KernelBackend: Sync {
+/// Methods take `&self` and the trait requires `Send + Sync`: one
+/// backend instance is shared by every executor thread of the pool
+/// (`ExecMode::Threads` runs partition closures concurrently) and, in
+/// the serving layer, by every client thread of a
+/// [`crate::service::QuantileService`] (one `Arc<dyn KernelBackend>`
+/// serves all readers and writers), so any backend-internal scratch
+/// state must use interior mutability.
+pub trait KernelBackend: Send + Sync {
     /// `[|{x < pivot}|, |{x == pivot}|, |{x > pivot}|]`.
     fn count_pivot(&self, data: &[Key], pivot: Key) -> PivotCounts;
 

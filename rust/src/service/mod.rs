@@ -1,0 +1,597 @@
+//! Concurrent multi-tenant serving layer: [`QuantileService`].
+//!
+//! [`crate::engine::QuantileEngine`] is one tenant deep and `&mut` at
+//! the call site — ingest and queries serialize, one client at a time.
+//! This module layers the same exact protocol into a shape that serves
+//! many clients and many streams at once, without giving up a single
+//! bit of the answers:
+//!
+//! ```text
+//!                 ┌──────────── QuantileService (&self everywhere) ───────────┐
+//!                 │  ShardMap: stream id ──hash──► shard ──► StreamEntry      │
+//!   ingest ──────►│  StreamEntry ┬ writer token (Mutex<Cluster + store>)      │
+//!   (per stream,  │              │   seal epoch → compact → publish ─┐        │
+//!    serialized)  │              └ published: Mutex<Arc<Snapshot>> ◄─┘        │
+//!   query ───────►│  pin = Arc-clone of published  (readers never wait        │
+//!   (any thread)  │  on a writer's work — only on the pointer swap)           │
+//!                 └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * **Snapshot isolation** — a query pins the
+//!   [`StreamSnapshot`](crate::stream::StreamSnapshot) published at
+//!   submit time and computes entirely against it: the `Arc`-shared
+//!   epoch list, its zero-copy `Dataset::concat` union, and the
+//!   merged-sketch memo that lives *on the snapshot*. Concurrent seals
+//!   and compactions publish new snapshots; they never mutate a pinned
+//!   one.
+//! * **Single-writer / many-reader per stream** — the writer token
+//!   serializes ingest within a stream; different streams' writers run
+//!   in parallel. Readers take no `RwLock`: the read path is one mutex
+//!   acquisition to clone the published `Arc`, then lock-free.
+//! * **Exactness** — every answer is bit-identical to a serialized
+//!   [`QuantileEngine`](crate::engine::QuantileEngine) fed exactly the
+//!   pinned epochs, because both paths execute the same crate-internal
+//!   snapshot plan (`tests/proptest_service.rs` races writers against
+//!   readers to pin this).
+//!
+//! What is linearizable and what is not: **seals are** — once `ingest`
+//! returns, every subsequently submitted query (any thread) observes
+//! the new epoch, because the snapshot is published before `ingest`
+//! returns and pinning synchronizes on the same mutex. **Cross-stream
+//! order is not** — queries of different streams pin independently, and
+//! a query holding an old pin may answer after a newer seal lands;
+//! that staleness is bounded by "the world as of submit time", which is
+//! exactly the isolation contract.
+//!
+//! # Example
+//!
+//! ```
+//! use gkselect::prelude::*;
+//!
+//! let svc = QuantileService::builder()
+//!     .cluster(ClusterConfig::local(2, 4))
+//!     .build()
+//!     .unwrap();
+//!
+//! // ingest seals epochs; queries answer exactly, from a pinned snapshot
+//! svc.ingest("events", MicroBatch::new((0..1_000).collect())).unwrap();
+//! let out = svc.query("events", &QuantileQuery::Single(0.5)).unwrap();
+//! assert_eq!(out.value(), 500);
+//!
+//! // a pin taken now is immune to later ingests…
+//! let pin = svc.pin("events").unwrap();
+//! svc.ingest("events", MicroBatch::new((1_000..2_000).collect())).unwrap();
+//! let old = svc.query_pinned(&pin, &QuantileQuery::Single(1.0)).unwrap();
+//! assert_eq!(old.value(), 999); // max of the pinned 1 000 records
+//!
+//! // …while a fresh query observes the seal (seals are linearizable)
+//! let new = svc.query("events", &QuantileQuery::Single(1.0)).unwrap();
+//! assert_eq!(new.value(), 1_999);
+//! ```
+
+mod shard;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::algorithms::gk_select::GkSelectParams;
+use crate::cluster::{Cluster, ClusterConfig, ExecMode};
+use crate::engine::{
+    snapshot_plan, EngineBuilder, EngineError, QuantileEngine, QuantileQuery, QueryOutcome,
+};
+use crate::obs::registry::{OpContext, StreamResidency};
+use crate::obs::{MetricsMode, MetricsRegistry, MetricsSnapshot, OpKind};
+use crate::runtime::{KernelBackend, NativeBackend};
+use crate::stream::store::StreamSnapshot;
+use crate::stream::{CompactionPolicy, IngestOutcome, MicroBatch, StreamIngestor};
+
+use shard::ShardMap;
+
+/// A pinned read view: one stream's [`StreamSnapshot`] captured at
+/// submit time. Hold it as long as you like — concurrent seals and
+/// compactions cannot change what it answers.
+#[derive(Clone)]
+pub struct Pinned {
+    stream: String,
+    snapshot: Arc<StreamSnapshot>,
+}
+
+impl Pinned {
+    /// The stream this pin reads.
+    pub fn stream(&self) -> &str {
+        &self.stream
+    }
+
+    /// The immutable epoch view the pin holds.
+    pub fn snapshot(&self) -> &StreamSnapshot {
+        &self.snapshot
+    }
+}
+
+/// Builder for [`QuantileService`] — the concurrent sibling of
+/// [`EngineBuilder`], deliberately smaller: the service always runs the
+/// GK fused stream protocol (the store is GK-shaped), so there is no
+/// algorithm choice, and tracing stays per-engine.
+pub struct ServiceBuilder {
+    cluster: ClusterConfig,
+    params: GkSelectParams,
+    epsilon: Option<f64>,
+    compaction: CompactionPolicy,
+    shards: usize,
+    metrics: MetricsMode,
+    backend: Option<Arc<dyn KernelBackend>>,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::local(2, 4),
+            params: GkSelectParams::default(),
+            epsilon: None,
+            compaction: CompactionPolicy::default(),
+            shards: 8,
+            metrics: MetricsMode::Off,
+            backend: None,
+        }
+    }
+}
+
+impl ServiceBuilder {
+    /// Fresh builder: local 2×4 cluster, default GK parameters, default
+    /// compaction, 8 shards, metrics off.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cluster shape every per-stream writer and per-query scratch
+    /// cluster is built from (executors, partitions, exec mode, fault
+    /// plan, cost model).
+    pub fn cluster(mut self, cc: ClusterConfig) -> Self {
+        self.cluster = cc;
+        self
+    }
+
+    /// GK parameters of the query protocol (ε, variant, merge, budget).
+    pub fn params(mut self, params: GkSelectParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Ingest-time sketch precision (defaults to the query ε).
+    pub fn ingest_epsilon(mut self, eps: f64) -> Self {
+        self.epsilon = Some(eps);
+        self
+    }
+
+    /// Per-stream epoch compaction policy.
+    pub fn compaction(mut self, policy: CompactionPolicy) -> Self {
+        self.compaction = policy;
+        self
+    }
+
+    /// Shard count of the stream directory (contention knob only;
+    /// clamped to ≥ 1).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Arm the service-lifetime metrics registry.
+    pub fn metrics(mut self, mode: MetricsMode) -> Self {
+        self.metrics = mode;
+        self
+    }
+
+    /// Inject a kernel backend shared by every reader and writer
+    /// (defaults to [`NativeBackend`] with auto SIMD dispatch).
+    pub fn kernel_backend(mut self, backend: Arc<dyn KernelBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn build(self) -> Result<QuantileService, EngineError> {
+        self.compaction
+            .validate()
+            .map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?;
+        let eps = self.epsilon.unwrap_or(self.params.epsilon);
+        let ingestor =
+            StreamIngestor::new(eps).map_err(|e| EngineError::InvalidConfig(format!("{e:#}")))?;
+        let ingestor = ingestor.with_variant(self.params.variant);
+        let backend: Arc<dyn KernelBackend> =
+            self.backend.unwrap_or_else(|| Arc::new(NativeBackend::new()));
+        let registry = MetricsRegistry::new(
+            self.metrics,
+            self.cluster.exec_mode.label(),
+            backend.simd_lane_width() as u64,
+        );
+        Ok(QuantileService {
+            cfg: self.cluster,
+            params: self.params,
+            ingestor,
+            policy: self.compaction,
+            backend,
+            shards: ShardMap::new(self.shards),
+            registry: Mutex::new(registry),
+            in_flight: AtomicU64::new(0),
+            ingest_queue: AtomicU64::new(0),
+        })
+    }
+}
+
+/// The concurrent multi-tenant serving layer — see the module doc for
+/// the concurrency model. Every method takes `&self`; share it across
+/// client threads with an `Arc` (or `std::thread::scope` borrows).
+pub struct QuantileService {
+    cfg: ClusterConfig,
+    params: GkSelectParams,
+    ingestor: StreamIngestor,
+    policy: CompactionPolicy,
+    backend: Arc<dyn KernelBackend>,
+    shards: ShardMap,
+    registry: Mutex<MetricsRegistry>,
+    /// Queries currently executing (the in-flight gauge).
+    in_flight: AtomicU64,
+    /// Ingests queued on a writer token or executing (the queue-depth
+    /// gauge).
+    ingest_queue: AtomicU64,
+}
+
+impl QuantileService {
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::default()
+    }
+
+    /// Seal one micro-batch into `stream`. Serialized per stream by the
+    /// writer token, parallel across streams; the new snapshot is
+    /// published before this returns, so every query submitted
+    /// afterwards observes the batch. A failed ingest (typed error)
+    /// publishes nothing and leaves the stream byte-identical.
+    pub fn ingest(&self, stream: &str, batch: MicroBatch) -> Result<IngestOutcome, EngineError> {
+        self.ingest_queue.fetch_add(1, Ordering::SeqCst);
+        let result = self.ingest_locked(stream, batch);
+        self.ingest_queue.fetch_sub(1, Ordering::SeqCst);
+        result
+    }
+
+    fn ingest_locked(&self, stream: &str, batch: MicroBatch) -> Result<IngestOutcome, EngineError> {
+        let entry = self.shards.get_or_create(stream, &self.cfg, self.policy);
+        let mut w = entry.lock_writer();
+        let out = self
+            .ingestor
+            .ingest(&mut w.cluster, &mut w.store, stream, batch)
+            .map_err(EngineError::from)?;
+        let snap = w
+            .store
+            .stream(stream)
+            .expect("epoch just sealed")
+            .snapshot();
+        entry.publish(snap.clone());
+        let residency = StreamResidency {
+            live_epochs: snap.live_epochs() as u64,
+            sealed_epochs: snap.sealed_epochs(),
+            sketch_partials: snap.sketch_partials() as u64,
+            sketch_bytes: snap.sketch_bytes(),
+            data_bytes: snap.data_bytes(),
+            records: snap.total_count(),
+            compactions: snap.compactions(),
+        };
+        let ctx = OpContext {
+            kind: OpKind::Ingest,
+            stream: Some(stream),
+            plan: "ingest",
+            trace: None,
+        };
+        // absorb while still holding the writer token so this stream's
+        // residency gauges are written in seal order — two ingests that
+        // absorbed after unlocking could land inverted and leave a stale
+        // (smaller) gauge as the final value. Lock order is writer →
+        // registry; queries absorb without any writer, so no cycle.
+        self.absorb(&ctx, &out.report, Some((stream.to_string(), residency)))?;
+        drop(w);
+        Ok(out)
+    }
+
+    /// Pin the snapshot currently published for `stream` — the view a
+    /// query submitted *now* would answer over. Errors with
+    /// [`EngineError::UnknownStream`] until a first ingest seals.
+    pub fn pin(&self, stream: &str) -> Result<Pinned, EngineError> {
+        let entry = self
+            .shards
+            .get(stream)
+            .ok_or_else(|| EngineError::UnknownStream(stream.to_string()))?;
+        let snapshot = entry.pin();
+        if snapshot.sealed_epochs() == 0 {
+            // entry exists but nothing ever sealed (first ingest failed):
+            // same contract as the engine — the stream was never ingested
+            return Err(EngineError::UnknownStream(stream.to_string()));
+        }
+        Ok(Pinned {
+            stream: stream.to_string(),
+            snapshot,
+        })
+    }
+
+    /// Pin-and-answer: the common client call. Equivalent to
+    /// [`Self::pin`] + [`Self::query_pinned`].
+    pub fn query(
+        &self,
+        stream: &str,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        let pin = self.pin(stream)?;
+        self.query_pinned(&pin, query)
+    }
+
+    /// Answer `query` over an explicit pin. Runs on a fresh scratch
+    /// cluster (the service's cluster shape), shares the service's one
+    /// kernel backend, and never touches any writer state — many of
+    /// these run in parallel with each other and with ingest. The
+    /// answer is bit-identical to a serialized engine over the same
+    /// pinned epochs.
+    pub fn query_pinned(
+        &self,
+        pin: &Pinned,
+        query: &QuantileQuery,
+    ) -> Result<QueryOutcome, EngineError> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let result = (|| {
+            let mut cluster = Cluster::new(self.cfg.clone());
+            let mut out = snapshot_plan(
+                &mut cluster,
+                self.backend.as_ref(),
+                &self.params,
+                &pin.snapshot,
+                &pin.stream,
+                query,
+            )?;
+            out.report.simd_lane_width = self.backend.simd_lane_width() as u64;
+            Ok(out)
+        })();
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        let out: QueryOutcome = result?;
+        let ctx = OpContext {
+            kind: out.op_kind(),
+            stream: Some(&pin.stream),
+            plan: query.label(),
+            trace: None,
+        };
+        // no residency here: a pinned (possibly stale) snapshot must
+        // never roll the monotone residency gauges backwards
+        self.absorb(&ctx, &out.report, None)?;
+        Ok(out)
+    }
+
+    /// Build the serialized oracle for a pin: a fresh sequential
+    /// [`QuantileEngine`] whose store holds exactly the pinned epochs
+    /// (`Arc`-cheap data clones). `oracle.execute(Source::Stream(..))`
+    /// must answer bit-identically to [`Self::query_pinned`] on the
+    /// same pin — `repro serve --verify` and the concurrency test suite
+    /// cross-check every Nth response through this.
+    pub fn oracle(&self, pin: &Pinned) -> Result<QuantileEngine, EngineError> {
+        let mut builder = EngineBuilder::new()
+            .cluster(self.cfg.clone())
+            .exec_mode(ExecMode::Sequential)
+            .epsilon(self.params.epsilon)
+            .sketch_variant(self.params.variant)
+            .sketch_merge(self.params.merge);
+        if let Some(depth) = self.params.tree_depth {
+            builder = builder.tree_depth(depth);
+        }
+        if let Some(budget) = self.params.candidate_budget {
+            builder = builder.candidate_budget(budget);
+        }
+        let mut oracle = builder.build()?;
+        for epoch in pin.snapshot.epochs() {
+            oracle
+                .store_mut()
+                .seal_epoch(&pin.stream, epoch.data.clone(), epoch.sketches.clone())
+                .map_err(EngineError::from)?;
+        }
+        Ok(oracle)
+    }
+
+    /// Every stream any ingest ever created, sorted.
+    pub fn streams(&self) -> Vec<String> {
+        self.shards.stream_ids()
+    }
+
+    /// Queries currently executing.
+    pub fn in_flight_queries(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Ingests queued on a writer token or executing.
+    pub fn ingest_queue_depth(&self) -> u64 {
+        self.ingest_queue.load(Ordering::SeqCst)
+    }
+
+    /// The shared backend's active SIMD lane width.
+    pub fn simd_lane_width(&self) -> usize {
+        self.backend.simd_lane_width()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The cluster shape queries and writers run on.
+    pub fn cluster_config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// A point-in-time copy of the service-lifetime registry (per-kind
+    /// × per-stream totals, latency folds, residency, load gauges).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        // gauges are sampled at snapshot time too, so a scrape between
+        // operations still sees live load
+        let (inf, queue) = (
+            self.in_flight.load(Ordering::SeqCst),
+            self.ingest_queue.load(Ordering::SeqCst),
+        );
+        reg.set_service_gauges(inf, queue);
+        reg.snapshot()
+    }
+
+    /// Render the registry in Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        reg.render_prometheus()
+    }
+
+    /// The buffered qlog lines, in absorb order.
+    pub fn qlog_lines(&self) -> Vec<String> {
+        let reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        reg.qlog_lines().to_vec()
+    }
+
+    fn absorb(
+        &self,
+        ctx: &OpContext<'_>,
+        report: &crate::cluster::metrics::MetricsReport,
+        residency: Option<(String, StreamResidency)>,
+    ) -> Result<(), EngineError> {
+        let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        if !reg.is_enabled() {
+            return Ok(());
+        }
+        reg.set_service_gauges(
+            self.in_flight.load(Ordering::SeqCst),
+            self.ingest_queue.load(Ordering::SeqCst),
+        );
+        reg.absorb_with(ctx, report, residency)
+            .map_err(EngineError::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Source;
+
+    fn service() -> QuantileService {
+        QuantileService::builder()
+            .cluster(ClusterConfig::local(2, 4))
+            .metrics(MetricsMode::Memory)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn service_and_pins_cross_threads() {
+        // compile-time: the whole point of the service is &self from many
+        // threads, and pins must travel to whichever thread answers
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<QuantileService>();
+        assert_send_sync::<Pinned>();
+    }
+
+    #[test]
+    fn ingest_then_query_is_exact() {
+        let svc = service();
+        svc.ingest("s", MicroBatch::new((0..1_000).collect())).unwrap();
+        let out = svc.query("s", &QuantileQuery::Single(0.5)).unwrap();
+        assert_eq!(out.value(), 500);
+        assert_eq!((out.report.rounds, out.report.data_scans), (1, 1));
+        assert!(out.report.exact);
+    }
+
+    #[test]
+    fn unknown_stream_is_typed() {
+        let svc = service();
+        assert_eq!(
+            svc.query("nope", &QuantileQuery::Single(0.5)).unwrap_err(),
+            EngineError::UnknownStream("nope".into())
+        );
+        assert!(svc.pin("nope").is_err());
+    }
+
+    #[test]
+    fn pinned_snapshot_ignores_later_ingests() {
+        let svc = service();
+        svc.ingest("s", MicroBatch::new((0..100).collect())).unwrap();
+        let pin = svc.pin("s").unwrap();
+        svc.ingest("s", MicroBatch::new((100..200).collect())).unwrap();
+        let old = svc.query_pinned(&pin, &QuantileQuery::Single(1.0)).unwrap();
+        assert_eq!(old.value(), 99);
+        let new = svc.query("s", &QuantileQuery::Single(1.0)).unwrap();
+        assert_eq!(new.value(), 199);
+    }
+
+    #[test]
+    fn oracle_answers_match_the_service() {
+        let svc = service();
+        for b in 0..3i32 {
+            let vals: Vec<i32> = (0..400).map(|i| (i * 37 + b * 101) % 5_000).collect();
+            svc.ingest("s", MicroBatch::new(vals)).unwrap();
+        }
+        let pin = svc.pin("s").unwrap();
+        let mut oracle = svc.oracle(&pin).unwrap();
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let got = svc.query_pinned(&pin, &QuantileQuery::Single(q)).unwrap();
+            let want = oracle
+                .execute(Source::Stream("s"), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(got.value(), want.value(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn per_stream_totals_and_residency_are_isolated() {
+        let svc = service();
+        svc.ingest("a", MicroBatch::new((0..300).collect())).unwrap();
+        svc.ingest("b", MicroBatch::new((0..700).collect())).unwrap();
+        svc.query("a", &QuantileQuery::Single(0.5)).unwrap();
+        let snap = svc.metrics_snapshot();
+        let ra = &snap
+            .residency
+            .iter()
+            .find(|(s, _)| s == "a")
+            .expect("stream a sampled")
+            .1;
+        let rb = &snap
+            .residency
+            .iter()
+            .find(|(s, _)| s == "b")
+            .expect("stream b sampled")
+            .1;
+        assert_eq!(ra.records, 300);
+        assert_eq!(rb.records, 700);
+        assert_eq!(
+            snap.totals_for(OpKind::Ingest, "a").unwrap().records,
+            300
+        );
+        assert_eq!(
+            snap.totals_for(OpKind::Ingest, "b").unwrap().records,
+            700
+        );
+        assert!(snap.totals_for(OpKind::Stream, "b").is_none());
+    }
+
+    #[test]
+    fn gauges_are_zero_at_rest_and_exported() {
+        let svc = service();
+        svc.ingest("s", MicroBatch::new((0..100).collect())).unwrap();
+        assert_eq!(svc.in_flight_queries(), 0);
+        assert_eq!(svc.ingest_queue_depth(), 0);
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.in_flight_queries, 0);
+        assert_eq!(snap.ingest_queue_depth, 0);
+        assert!(svc
+            .render_prometheus()
+            .contains("gkselect_service_in_flight_queries"));
+    }
+
+    #[test]
+    fn failed_ingest_publishes_nothing() {
+        let svc = service();
+        assert!(svc.ingest("s", MicroBatch::default()).is_err());
+        assert_eq!(
+            svc.pin("s").unwrap_err(),
+            EngineError::UnknownStream("s".into())
+        );
+        // and a later good ingest brings the stream up normally
+        svc.ingest("s", MicroBatch::new((0..10).collect())).unwrap();
+        assert_eq!(svc.pin("s").unwrap().snapshot().total_count(), 10);
+    }
+}

@@ -1,0 +1,184 @@
+//! Sharded stream directory: stream id → [`StreamEntry`].
+//!
+//! A [`ShardMap`] spreads streams over a fixed set of shards so
+//! concurrent lookups of *different* streams rarely contend on one
+//! mutex, and each shard's lock is held only long enough to clone an
+//! `Arc<StreamEntry>` out of (or insert one into) its map — never
+//! across an ingest or a query.
+//!
+//! The entry itself carries the stream's two synchronization points:
+//!
+//! * the **writer token** — a mutex around the stream's private
+//!   [`Cluster`] + single-stream [`SketchStore`]; holding it is what
+//!   "being the stream's one writer" means, and writers of different
+//!   streams never share it, so ingest pipelines run in parallel
+//!   across streams;
+//! * the **published snapshot pointer** — the epoch-list swap. Readers
+//!   lock it only to clone the current `Arc<StreamSnapshot>`; writers
+//!   lock it only to store the next one. Neither ever blocks on the
+//!   other's actual work, which is how queries stay un-blocked by
+//!   concurrent seals and compactions.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::stream::store::{SketchStore, StreamSnapshot};
+use crate::stream::CompactionPolicy;
+
+/// Recover the inner value even if a panicking holder poisoned the
+/// lock: every critical section here leaves consistent state on every
+/// exit path (ingest is atomic-under-failure, publishes are single
+/// stores), so poisoning carries no information we need to honor.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Everything the stream's single writer owns: its private execution
+/// substrate and its single-stream store. Lives behind
+/// [`StreamEntry::writer`].
+pub(crate) struct StreamWriter {
+    pub cluster: Cluster,
+    pub store: SketchStore,
+}
+
+/// One stream's slot in the directory.
+pub(crate) struct StreamEntry {
+    /// The single-writer token (see module doc).
+    pub writer: Mutex<StreamWriter>,
+    /// The currently published snapshot; swapped whole by writers.
+    published: Mutex<Arc<StreamSnapshot>>,
+}
+
+impl StreamEntry {
+    fn new(cfg: &ClusterConfig, policy: CompactionPolicy) -> Self {
+        Self {
+            writer: Mutex::new(StreamWriter {
+                cluster: Cluster::new(cfg.clone()),
+                store: SketchStore::new(policy).expect("policy validated at service build"),
+            }),
+            published: Mutex::new(Arc::new(StreamSnapshot::empty(cfg.partitions))),
+        }
+    }
+
+    /// Lock the writer token (blocking until the previous writer of
+    /// this stream finishes).
+    pub fn lock_writer(&self) -> MutexGuard<'_, StreamWriter> {
+        relock(&self.writer)
+    }
+
+    /// Swap in the next snapshot. Pins already handed out keep their
+    /// old `Arc`.
+    pub fn publish(&self, snap: Arc<StreamSnapshot>) {
+        *relock(&self.published) = snap;
+    }
+
+    /// Clone the current snapshot out — the whole read-side critical
+    /// section.
+    pub fn pin(&self) -> Arc<StreamSnapshot> {
+        relock(&self.published).clone()
+    }
+}
+
+struct Shard {
+    streams: Mutex<BTreeMap<String, Arc<StreamEntry>>>,
+}
+
+/// The service's stream directory (see module doc).
+pub(crate) struct ShardMap {
+    shards: Vec<Shard>,
+}
+
+impl ShardMap {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    streams: Mutex::new(BTreeMap::new()),
+                })
+                .collect(),
+        }
+    }
+
+    fn shard(&self, stream: &str) -> &Shard {
+        &self.shards[(fnv1a(stream) % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a stream's entry, if any ingest ever created it.
+    pub fn get(&self, stream: &str) -> Option<Arc<StreamEntry>> {
+        relock(&self.shard(stream).streams).get(stream).cloned()
+    }
+
+    /// Look up or create a stream's entry (first ingest creates).
+    pub fn get_or_create(&self, stream: &str, cfg: &ClusterConfig, policy: CompactionPolicy) -> Arc<StreamEntry> {
+        let mut map = relock(&self.shard(stream).streams);
+        map.entry(stream.to_string())
+            .or_insert_with(|| Arc::new(StreamEntry::new(cfg, policy)))
+            .clone()
+    }
+
+    /// Every known stream id, sorted (stable across shard layouts).
+    pub fn stream_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| relock(&s.streams).keys().cloned().collect::<Vec<_>>())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+/// FNV-1a over the stream id — cheap, deterministic, dependency-free;
+/// only shard balance rides on it, never correctness.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_is_idempotent_and_get_sees_it() {
+        let map = ShardMap::new(4);
+        let cfg = ClusterConfig::local(1, 2);
+        assert!(map.get("s").is_none());
+        let a = map.get_or_create("s", &cfg, CompactionPolicy::default());
+        let b = map.get_or_create("s", &cfg, CompactionPolicy::default());
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a, &map.get("s").unwrap()));
+        assert_eq!(map.stream_ids(), vec!["s".to_string()]);
+    }
+
+    #[test]
+    fn stream_ids_sorted_across_shards() {
+        let map = ShardMap::new(3);
+        let cfg = ClusterConfig::local(1, 2);
+        for id in ["zeta", "alpha", "mid"] {
+            map.get_or_create(id, &cfg, CompactionPolicy::default());
+        }
+        assert_eq!(map.stream_ids(), vec!["alpha", "mid", "zeta"]);
+    }
+
+    #[test]
+    fn publish_and_pin_swap_snapshots() {
+        let map = ShardMap::new(2);
+        let cfg = ClusterConfig::local(1, 2);
+        let e = map.get_or_create("s", &cfg, CompactionPolicy::default());
+        let empty = e.pin();
+        assert_eq!(empty.total_count(), 0);
+        e.publish(Arc::new(StreamSnapshot::empty(8)));
+        let next = e.pin();
+        assert!(!Arc::ptr_eq(&empty, &next));
+        assert_eq!(next.partitions(), 8);
+        // the old pin is untouched
+        assert_eq!(empty.partitions(), 2);
+    }
+}

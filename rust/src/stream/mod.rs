@@ -79,4 +79,6 @@ pub mod store;
 
 pub use ingest::{IngestOutcome, MicroBatch, StreamIngestor};
 pub use query::StreamQuery;
-pub use store::{CompactionPolicy, CompactionStats, Epoch, SketchStore, StreamState};
+pub use store::{
+    CompactionPolicy, CompactionStats, Epoch, SketchStore, StreamSnapshot, StreamState,
+};

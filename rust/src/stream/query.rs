@@ -26,7 +26,7 @@
 //! `quantiles_with` / `sketched_with`); the backend-owning
 //! [`StreamQuery`] struct remains as a deprecated shim.
 
-use super::store::SketchStore;
+use super::store::{SketchStore, StreamSnapshot};
 use crate::algorithms::gk_select::{self, GkSelectParams};
 use crate::algorithms::multi_select::{self, MultiOutcome};
 use crate::algorithms::Outcome;
@@ -49,15 +49,8 @@ pub(crate) fn quantile_with(
     stream: &str,
     q: f64,
 ) -> Result<Outcome, EngineError> {
-    let base = cluster.metrics.mark();
-    let clock0 = cluster.elapsed_secs();
-    let (data, sketch) = query_view(cluster, store, stream)?;
-    let out = gk_select::select_with_sketch_with(cluster, backend, params, &data, &sketch, q)?;
-    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
-    Ok(Outcome {
-        value: out.value,
-        report,
-    })
+    let snap = pin(store, stream)?;
+    quantile_snapshot_with(cluster, backend, params, &snap, stream, q)
 }
 
 /// Exact values for every quantile in `qs`, all sharing the single
@@ -70,20 +63,8 @@ pub(crate) fn quantiles_with(
     stream: &str,
     qs: &[f64],
 ) -> Result<MultiOutcome, EngineError> {
-    if qs.is_empty() {
-        return Err(EngineError::NoQuantiles);
-    }
-    let base = cluster.metrics.mark();
-    let clock0 = cluster.elapsed_secs();
-    let (data, sketch) = query_view(cluster, store, stream)?;
-    let out = multi_select::quantiles_with_sketch_with(
-        cluster, backend, params, &data, &sketch, qs,
-    )?;
-    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
-    Ok(MultiOutcome {
-        values: out.values,
-        report,
-    })
+    let snap = pin(store, stream)?;
+    quantiles_snapshot_with(cluster, backend, params, &snap, stream, qs)
 }
 
 /// ε-approximate quantile straight from the cached merged sketch — no
@@ -97,18 +78,88 @@ pub(crate) fn sketched_with(
     q: f64,
     eps: f64,
 ) -> Result<Outcome, EngineError> {
-    let base = cluster.metrics.mark();
-    let clock0 = cluster.elapsed_secs();
-    // no query_view here: a sketched answer never touches the data, so
-    // don't even assemble the epoch-union dataset — cached summaries only
+    let snap = pin(store, stream)?;
+    sketched_snapshot_with(cluster, &snap, stream, q, eps)
+}
+
+/// Pin the current snapshot of `stream` (the engine's serialized path
+/// pins and answers in one call — the service pins at submit time and
+/// may answer much later, against the same immutable view).
+fn pin(
+    store: &SketchStore,
+    stream: &str,
+) -> Result<std::sync::Arc<StreamSnapshot>, EngineError> {
     let state = store
         .stream(stream)
         .ok_or_else(|| EngineError::UnknownStream(stream.to_string()))?;
-    if state.total_count() == 0 {
+    Ok(state.snapshot())
+}
+
+/// [`quantile_with`] against an explicit pinned snapshot — the shared
+/// body of the engine's serialized path and the service's concurrent
+/// read path; identical inputs make the two bit-identical by
+/// construction.
+pub(crate) fn quantile_snapshot_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    snap: &StreamSnapshot,
+    stream: &str,
+    q: f64,
+) -> Result<Outcome, EngineError> {
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    let (data, sketch) = snapshot_view(cluster, snap, stream)?;
+    let out = gk_select::select_with_sketch_with(cluster, backend, params, &data, &sketch, q)?;
+    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
+    Ok(Outcome {
+        value: out.value,
+        report,
+    })
+}
+
+/// [`quantiles_with`] against an explicit pinned snapshot.
+pub(crate) fn quantiles_snapshot_with(
+    cluster: &mut Cluster,
+    backend: &dyn KernelBackend,
+    params: &GkSelectParams,
+    snap: &StreamSnapshot,
+    stream: &str,
+    qs: &[f64],
+) -> Result<MultiOutcome, EngineError> {
+    if qs.is_empty() {
+        return Err(EngineError::NoQuantiles);
+    }
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    let (data, sketch) = snapshot_view(cluster, snap, stream)?;
+    let out = multi_select::quantiles_with_sketch_with(
+        cluster, backend, params, &data, &sketch, qs,
+    )?;
+    let report = delta_report("Stream Query", cluster, &base, clock0, data.len(), &data, true);
+    Ok(MultiOutcome {
+        values: out.values,
+        report,
+    })
+}
+
+/// [`sketched_with`] against an explicit pinned snapshot.
+pub(crate) fn sketched_snapshot_with(
+    cluster: &mut Cluster,
+    snap: &StreamSnapshot,
+    stream: &str,
+    q: f64,
+    eps: f64,
+) -> Result<Outcome, EngineError> {
+    let base = cluster.metrics.mark();
+    let clock0 = cluster.elapsed_secs();
+    // no snapshot_view here: a sketched answer never touches the data, so
+    // don't even assemble the epoch-union dataset — cached summaries only
+    if snap.total_count() == 0 {
         return Err(EngineError::DrainedStream(stream.to_string()));
     }
     let sketch = cluster
-        .driver(|| state.merged_sketch())
+        .driver(|| snap.merged_sketch())
         .ok_or_else(|| EngineError::DrainedStream(stream.to_string()))?;
     if eps < sketch.epsilon {
         return Err(EngineError::SketchTooCoarse {
@@ -122,8 +173,8 @@ pub(crate) fn sketched_with(
     let delta = cluster.metrics.since(&base);
     let report = MetricsReport::from_metrics(
         "Stream Query",
-        state.total_count(),
-        state.partitions(),
+        snap.total_count(),
+        snap.partitions(),
         cluster.cfg.executors,
         cluster.elapsed_secs() - clock0,
         &delta,
@@ -132,23 +183,21 @@ pub(crate) fn sketched_with(
     Ok(Outcome { value, report })
 }
 
-/// The cached view a query runs against: the zero-copy union of all live
-/// epochs plus the driver-merged global sketch. No executor touches data
-/// here — the merge is driver compute over cached summaries.
-fn query_view(
+/// The pinned view a query runs against: the zero-copy union of the
+/// snapshot's epochs plus the snapshot-memoized global sketch. No
+/// executor touches data here — the merge is driver compute over cached
+/// summaries.
+fn snapshot_view(
     cluster: &mut Cluster,
-    store: &SketchStore,
+    snap: &StreamSnapshot,
     stream: &str,
 ) -> Result<(Dataset<Key>, GkCore), EngineError> {
-    let state = store
-        .stream(stream)
-        .ok_or_else(|| EngineError::UnknownStream(stream.to_string()))?;
-    if state.total_count() == 0 {
+    if snap.total_count() == 0 {
         return Err(EngineError::DrainedStream(stream.to_string()));
     }
-    let data = state.live_dataset()?;
+    let data = snap.live_dataset()?;
     let sketch = cluster
-        .driver(|| state.merged_sketch())
+        .driver(|| snap.merged_sketch())
         .ok_or_else(|| EngineError::DrainedStream(stream.to_string()))?;
     Ok((data, sketch))
 }

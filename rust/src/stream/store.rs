@@ -12,9 +12,25 @@
 //! `O(P/ε)` — independent of how many batches ever arrived — while the
 //! payload data is only ever rewritten, never dropped: queries stay
 //! exact across compactions.
+//!
+//! # Snapshots
+//!
+//! Epochs are `Arc`-shared and the queryable view of a stream is an
+//! immutable [`StreamSnapshot`]: the epoch list plus its own
+//! merged-sketch memo. [`StreamState::snapshot`] hands out the current
+//! one (cheap `Arc` clone); seal and compaction *replace* it rather than
+//! mutating it. A pinned snapshot therefore keeps answering over exactly
+//! the epoch set it captured — readers are never blocked by, and never
+//! observe, a concurrent seal or fold. Memoizing the merged sketch *on
+//! the snapshot* (not on the mutable stream state) is what makes the
+//! cache un-stale-able: the memo lives and dies with the epoch list it
+//! summarizes, so no invalidation protocol can be missed on any write
+//! path. The serving layer ([`crate::service`]) builds its whole
+//! single-writer/many-reader read path out of this.
 
 use std::cell::OnceCell;
 use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{ensure, Result};
 
@@ -77,17 +93,135 @@ impl Epoch {
     }
 }
 
+/// An immutable, shareable view of one stream at one seal point: the
+/// `Arc`-shared epoch list plus a merged-sketch memo scoped to exactly
+/// that list. This is the unit of snapshot isolation — a query that
+/// pinned a snapshot keeps reading it bit-identically no matter how many
+/// seals or compactions land afterwards, and the memo can never be newer
+/// or older than the epochs it summarizes because they are one object.
+#[derive(Debug)]
+pub struct StreamSnapshot {
+    epochs: Vec<Arc<Epoch>>,
+    seal_seq: u64,
+    partitions: usize,
+    compactions: u64,
+    /// Merged-sketch memo, filled by the first reader of this snapshot.
+    /// `OnceLock` (not `OnceCell`) because pinned snapshots cross
+    /// threads in the serving layer.
+    merged: OnceLock<Option<GkCore>>,
+}
+
+impl StreamSnapshot {
+    fn new(epochs: Vec<Arc<Epoch>>, seal_seq: u64, partitions: usize, compactions: u64) -> Self {
+        Self {
+            epochs,
+            seal_seq,
+            partitions,
+            compactions,
+            merged: OnceLock::new(),
+        }
+    }
+
+    /// An empty snapshot (a stream nobody has ingested into yet).
+    pub fn empty(partitions: usize) -> Self {
+        Self::new(Vec::new(), 0, partitions, 0)
+    }
+
+    /// The epochs this snapshot pins, oldest first.
+    pub fn epochs(&self) -> &[Arc<Epoch>] {
+        &self.epochs
+    }
+
+    /// Live epochs in this snapshot.
+    pub fn live_epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Epochs sealed over the stream's lifetime up to this snapshot
+    /// (monotone across the snapshots of one stream).
+    pub fn sealed_epochs(&self) -> u64 {
+        self.seal_seq
+    }
+
+    /// Partition count every epoch carries.
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    /// Compactions run up to this snapshot.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Total records across the pinned epochs.
+    pub fn total_count(&self) -> u64 {
+        self.epochs.iter().map(|e| e.count).sum()
+    }
+
+    /// Cached sketch partials held (`live_epochs × partitions`).
+    pub fn sketch_partials(&self) -> usize {
+        self.epochs.iter().map(|e| e.sketches.len()).sum()
+    }
+
+    /// Serialized size of all cached partials.
+    pub fn sketch_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.sketch_bytes()).sum()
+    }
+
+    /// Payload bytes across the pinned epochs.
+    pub fn data_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.data.data_bytes()).sum()
+    }
+
+    /// Store footprint: cached sketches + payload.
+    pub fn store_bytes(&self) -> u64 {
+        self.sketch_bytes() + self.data_bytes()
+    }
+
+    /// Zero-copy union over every pinned epoch — the dataset a streamed
+    /// query's single fused scan reads.
+    pub fn live_dataset(&self) -> Result<Dataset<Key>> {
+        let views: Vec<Dataset<Key>> = self.epochs.iter().map(|e| e.data.clone()).collect();
+        Dataset::concat(&views)
+    }
+
+    /// Pairwise tree-merge of every cached partial into the global
+    /// sketch — pure driver compute over `O(P/ε)` summaries, **no data
+    /// scan** — memoized on this snapshot, so repeat queries against the
+    /// same pin (the serving pattern: p50/p95/p99 every tick) pay only
+    /// the fused scan, not a re-merge. `None` when the snapshot holds no
+    /// records.
+    pub fn merged_sketch(&self) -> Option<GkCore> {
+        let core = self.merged.get_or_init(|| {
+            if self.epochs.is_empty() {
+                return None;
+            }
+            Some(
+                tree_merge(
+                    self.epochs
+                        .iter()
+                        .flat_map(|e| e.sketches.iter().cloned())
+                        .collect(),
+                )
+                .expect("nonempty epochs"),
+            )
+        });
+        core.as_ref()
+            .filter(|c| c.count > 0)
+            .cloned()
+    }
+}
+
 /// All live state of one stream.
 #[derive(Debug, Clone)]
 pub struct StreamState {
     next_epoch: u64,
     partitions: usize,
-    epochs: Vec<Epoch>,
-    /// Lazily-computed global sketch over all live partials; filled by
-    /// the first query after a seal/compaction, cleared by both. Repeat
-    /// queries between ingests (the serving pattern: p50/p95/p99 every
-    /// tick) pay only the fused scan, not a re-merge.
-    cached_global: OnceCell<GkCore>,
+    epochs: Vec<Arc<Epoch>>,
+    /// The current snapshot, built lazily on first read and *replaced*
+    /// (never mutated) by seal/compaction. The merged-sketch memo rides
+    /// on the snapshot itself — see [`StreamSnapshot::merged_sketch`].
+    current: OnceCell<Arc<StreamSnapshot>>,
     /// Compactions performed over the stream's lifetime.
     pub compactions: u64,
 }
@@ -98,12 +232,35 @@ impl StreamState {
             next_epoch: 0,
             partitions,
             epochs: Vec::new(),
-            cached_global: OnceCell::new(),
+            current: OnceCell::new(),
             compactions: 0,
         }
     }
 
-    pub fn epochs(&self) -> &[Epoch] {
+    /// The current snapshot: an immutable pin of the live epoch set,
+    /// cheap to clone and safe to carry across threads while this
+    /// stream keeps sealing.
+    pub fn snapshot(&self) -> Arc<StreamSnapshot> {
+        self.current
+            .get_or_init(|| {
+                Arc::new(StreamSnapshot::new(
+                    self.epochs.clone(),
+                    self.next_epoch,
+                    self.partitions,
+                    self.compactions,
+                ))
+            })
+            .clone()
+    }
+
+    /// Drop the cached snapshot after a state change — the next reader
+    /// builds a fresh pin over the new epoch list. Pins already handed
+    /// out keep their old (still-correct-for-them) view.
+    fn invalidate_snapshot(&mut self) {
+        self.current = OnceCell::new();
+    }
+
+    pub fn epochs(&self) -> &[Arc<Epoch>] {
         &self.epochs
     }
 
@@ -138,7 +295,7 @@ impl StreamState {
 
     /// Serialized size of all cached partials.
     pub fn sketch_bytes(&self) -> u64 {
-        self.epochs.iter().map(Epoch::sketch_bytes).sum()
+        self.epochs.iter().map(|e| e.sketch_bytes()).sum()
     }
 
     /// Payload bytes across live epochs.
@@ -154,28 +311,14 @@ impl StreamState {
     /// Zero-copy union over every live epoch — the dataset a streamed
     /// query's single fused scan reads.
     pub fn live_dataset(&self) -> Result<Dataset<Key>> {
-        let views: Vec<Dataset<Key>> = self.epochs.iter().map(|e| e.data.clone()).collect();
-        Dataset::concat(&views)
+        self.snapshot().live_dataset()
     }
 
-    /// Pairwise tree-merge of every cached partial into the global
-    /// sketch — pure driver compute over `O(P/ε)` summaries, **no data
-    /// scan** — memoized until the next seal or compaction. `None` when
-    /// the stream holds no records.
+    /// The current snapshot's merged sketch (memoized per snapshot, so
+    /// the single-threaded engine keeps the old repeat-query economics).
+    /// `None` when the stream holds no records.
     pub fn merged_sketch(&self) -> Option<GkCore> {
-        if self.epochs.is_empty() {
-            return None;
-        }
-        let core = self.cached_global.get_or_init(|| {
-            tree_merge(
-                self.epochs
-                    .iter()
-                    .flat_map(|e| e.sketches.iter().cloned())
-                    .collect(),
-            )
-            .expect("nonempty epochs")
-        });
-        (core.count > 0).then(|| core.clone())
+        self.snapshot().merged_sketch()
     }
 }
 
@@ -250,13 +393,13 @@ impl SketchStore {
         );
         let id = state.next_epoch;
         state.next_epoch += 1;
-        state.epochs.push(Epoch {
+        state.epochs.push(Arc::new(Epoch {
             id,
             data,
             sketches,
             count,
-        });
-        state.cached_global = OnceCell::new();
+        }));
+        state.invalidate_snapshot();
         Ok(id)
     }
 
@@ -272,7 +415,9 @@ impl SketchStore {
     /// physically, cached partials merge with `GkCore::merge_with`.
     /// Returns `None` when the stream is already at or under the target.
     /// Pure state transformation — the caller accounts for the data
-    /// rewrite (a persist in the cost model).
+    /// rewrite (a persist in the cost model). Snapshots pinned before
+    /// the fold keep the pre-fold epochs alive (`Arc`-shared) and stay
+    /// exact.
     pub fn compact(&mut self, stream: &str) -> Result<Option<CompactionStats>> {
         let state = self
             .streams
@@ -306,9 +451,9 @@ impl SketchStore {
             data,
             sketches,
         };
-        state.epochs.push(merged);
+        state.epochs.push(Arc::new(merged));
         state.epochs.extend(rest);
-        state.cached_global = OnceCell::new();
+        state.invalidate_snapshot();
         state.compactions += 1;
         Ok(Some(CompactionStats {
             merged_epochs: fold,
@@ -437,6 +582,56 @@ mod tests {
         let _ = store.stream("s").unwrap().merged_sketch();
         store.compact("s").unwrap().unwrap();
         assert_eq!(store.stream("s").unwrap().merged_sketch().unwrap().count, 400);
+    }
+
+    #[test]
+    fn pinned_snapshot_survives_seal_and_compact() {
+        let mut store = SketchStore::new(CompactionPolicy {
+            compact_threshold: 3,
+            max_live_epochs: 2,
+        })
+        .unwrap();
+        let (d, s) = epoch_inputs(0, 200, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        let pin = store.stream("s").unwrap().snapshot();
+        assert_eq!(pin.total_count(), 200);
+        assert_eq!(pin.sealed_epochs(), 1);
+        // warm the pin's memo, then mutate the stream underneath it
+        assert_eq!(pin.merged_sketch().unwrap().count, 200);
+        for b in 1..5 {
+            let (d, s) = epoch_inputs(b * 200, 200, 2, 0.05);
+            store.seal_epoch("s", d, s).unwrap();
+        }
+        store.compact("s").unwrap().unwrap();
+        // the pin still sees exactly what it pinned, memo included
+        assert_eq!(pin.live_epochs(), 1);
+        assert_eq!(pin.total_count(), 200);
+        assert_eq!(pin.merged_sketch().unwrap().count, 200);
+        assert_eq!(pin.live_dataset().unwrap().len(), 200);
+        // while a fresh snapshot sees the post-compaction world
+        let now = store.stream("s").unwrap().snapshot();
+        assert_eq!(now.sealed_epochs(), 5);
+        assert_eq!(now.total_count(), 1000);
+        assert_eq!(now.compactions(), 1);
+        assert_eq!(now.merged_sketch().unwrap().count, 1000);
+    }
+
+    #[test]
+    fn snapshot_is_cached_until_the_next_state_change() {
+        let mut store = SketchStore::default();
+        let (d, s) = epoch_inputs(0, 100, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        let a = store.stream("s").unwrap().snapshot();
+        let b = store.stream("s").unwrap().snapshot();
+        assert!(Arc::ptr_eq(&a, &b), "repeat pins share one snapshot");
+        let (d, s) = epoch_inputs(100, 100, 2, 0.05);
+        store.seal_epoch("s", d, s).unwrap();
+        let c = store.stream("s").unwrap().snapshot();
+        assert!(!Arc::ptr_eq(&a, &c), "a seal publishes a fresh snapshot");
+        assert!(
+            Arc::ptr_eq(&a.epochs()[0], &c.epochs()[0]),
+            "unchanged epochs are shared, not copied"
+        );
     }
 
     #[test]

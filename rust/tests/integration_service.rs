@@ -1,0 +1,284 @@
+//! Deterministic concurrency integration suite for the multi-tenant
+//! [`QuantileService`]: 8 client threads × 4 streams × 64 ops each, on a
+//! seeded per-thread schedule (`Pcg64`, fixed seeds — every run replays
+//! the same op mix). After the run the suite proves, against ledgers the
+//! clients kept themselves:
+//!
+//! * **zero lost updates** — every stream's pinned count, residency
+//!   gauge, and per-stream ingest totals all equal that stream's exact
+//!   Σ of ingested records across all clients;
+//! * **monotone sealed-epoch counts** — each client asserts, inline,
+//!   that successive pins of the same stream never observe the sealed
+//!   counter going backwards (the published-snapshot swap is ordered);
+//! * **exact accounting** — the registry's grand totals and every
+//!   `(kind, stream)` bin equal the field-by-field sum of the per-op
+//!   reports the clients collected, u64 counters bit-exactly.
+//!
+//! Plus the stale-memo regression race: `Sketched` queries served from a
+//! pinned snapshot's merged-sketch memo must stay bit-identical to the
+//! serialized oracle while a writer seals and compacts the same stream
+//! concurrently. Before the memo moved onto the immutable
+//! [`StreamSnapshot`], a seal/compact could leave a query reading a
+//! merged sketch built over a *different* epoch list than the one it
+//! pinned; this test fails loudly if that ever regresses.
+//!
+//! [`StreamSnapshot`]: gkselect::stream::StreamSnapshot
+
+use gkselect::cluster::metrics::MetricsReport;
+use gkselect::cluster::ClusterConfig;
+use gkselect::data::pcg::Pcg64;
+use gkselect::engine::{QuantileQuery, Source};
+use gkselect::obs::registry::OpTotals;
+use gkselect::obs::{MetricsMode, OpKind};
+use gkselect::service::QuantileService;
+use gkselect::stream::{CompactionPolicy, MicroBatch};
+use gkselect::Key;
+
+const CLIENTS: usize = 8;
+const STREAMS: usize = 4;
+const OPS: u64 = 64;
+const QS: [f64; 4] = [0.0, 0.5, 0.95, 1.0];
+
+fn stream_id(s: usize) -> String {
+    format!("tenant-{s}")
+}
+
+fn service() -> QuantileService {
+    QuantileService::builder()
+        .cluster(ClusterConfig::local(2, 4))
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap()
+}
+
+fn batch(rng: &mut Pcg64, n: usize) -> Vec<Key> {
+    (0..n)
+        .map(|_| (rng.next_u64() % 1_000_001) as i32 - 500_000)
+        .collect()
+}
+
+/// What one client brings back from its 64-op run: the per-op metrics
+/// reports (keyed like the registry bins them) and its per-stream count
+/// of ingested records.
+struct ClientRun {
+    ledger: Vec<((OpKind, String), MetricsReport)>,
+    ingested: Vec<u64>,
+}
+
+fn client(svc: &QuantileService, c: usize) -> ClientRun {
+    let mut rng = Pcg64::new(42, 0xC11E ^ c as u64);
+    let mut ledger = Vec::with_capacity(OPS as usize);
+    let mut ingested = vec![0u64; STREAMS];
+    let mut last_sealed = vec![0u64; STREAMS];
+    for op in 0..OPS {
+        let s = (rng.next_u64() % STREAMS as u64) as usize;
+        let id = stream_id(s);
+        if op % 4 == 3 {
+            let vals = batch(&mut rng, 16 + (rng.next_u64() % 48) as usize);
+            ingested[s] += vals.len() as u64;
+            let out = svc.ingest(&id, MicroBatch::new(vals)).unwrap();
+            ledger.push(((OpKind::Ingest, id), out.report));
+        } else {
+            let pin = svc.pin(&id).unwrap();
+            let sealed = pin.snapshot().sealed_epochs();
+            assert!(
+                sealed >= last_sealed[s],
+                "sealed-epoch count went backwards on {id}: \
+                 client {c} saw {} then {sealed}",
+                last_sealed[s]
+            );
+            last_sealed[s] = sealed;
+            let q = QS[(op % QS.len() as u64) as usize];
+            let out = svc.query_pinned(&pin, &QuantileQuery::Single(q)).unwrap();
+            assert!(out.report.exact, "served quantile must stay exact");
+            ledger.push(((out.op_kind(), id), out.report));
+        }
+    }
+    ClientRun { ledger, ingested }
+}
+
+/// Reference accumulator: sum reports into an [`OpTotals`] by hand,
+/// field by field — the independent ledger the registry must match
+/// (mirrors `proptest_registry.rs`).
+fn sum_reports<'a>(reports: impl Iterator<Item = &'a MetricsReport>) -> OpTotals {
+    let mut t = OpTotals::default();
+    for r in reports {
+        t.ops += 1;
+        t.records += r.n;
+        t.rounds += r.rounds;
+        t.stage_boundaries += r.stage_boundaries;
+        t.data_scans += r.data_scans;
+        t.shuffles += r.shuffles;
+        t.persists += r.persists;
+        t.bytes_to_driver += r.bytes_to_driver;
+        t.bytes_shuffled += r.bytes_shuffled;
+        t.bytes_tree_reduced += r.bytes_tree_reduced;
+        t.bytes_broadcast += r.bytes_broadcast;
+        t.bytes_persisted += r.bytes_persisted;
+        t.messages += r.messages;
+        t.faults_injected += r.faults_injected;
+        t.tasks_retried += r.tasks_retried;
+        t.speculative_launched += r.speculative_launched;
+        t.speculative_wins += r.speculative_wins;
+        t.degraded_queries += r.degraded_queries;
+        t.band_candidates += r.band_candidates;
+        t.band_budget += r.band_budget;
+        t.elapsed_secs += r.elapsed_secs;
+        t.wall_stage_secs += r.wall_stage_secs;
+    }
+    t
+}
+
+/// u64 counters must match bit-exactly; the float sums only up to
+/// associativity (the registry absorbed in interleave order, the ledger
+/// sums in client order).
+fn assert_totals_eq(got: &OpTotals, want: &OpTotals, what: &str) {
+    let strip = |t: &OpTotals| OpTotals {
+        elapsed_secs: 0.0,
+        wall_stage_secs: 0.0,
+        ..t.clone()
+    };
+    assert_eq!(strip(got), strip(want), "{what}: u64 counters must be the exact sum");
+    assert!(
+        (got.elapsed_secs - want.elapsed_secs).abs() <= 1e-9 * (1.0 + want.elapsed_secs.abs()),
+        "{what}: elapsed_secs {} vs {}",
+        got.elapsed_secs,
+        want.elapsed_secs
+    );
+    assert!(
+        (got.wall_stage_secs - want.wall_stage_secs).abs()
+            <= 1e-9 * (1.0 + want.wall_stage_secs.abs()),
+        "{what}: wall_stage_secs {} vs {}",
+        got.wall_stage_secs,
+        want.wall_stage_secs
+    );
+}
+
+#[test]
+fn eight_clients_four_streams_account_exactly() {
+    let svc = service();
+
+    // warm every stream so no client ever races an empty store, and
+    // start the ledger with the warm-up ops — they count too
+    let mut all: Vec<((OpKind, String), MetricsReport)> = Vec::new();
+    let mut ingested = vec![0u64; STREAMS];
+    let mut warm_rng = Pcg64::new(9, 0xA11CE);
+    for (s, tally) in ingested.iter_mut().enumerate() {
+        let vals = batch(&mut warm_rng, 64 + s * 7);
+        *tally += vals.len() as u64;
+        let out = svc.ingest(&stream_id(s), MicroBatch::new(vals)).unwrap();
+        all.push(((OpKind::Ingest, stream_id(s)), out.report));
+    }
+
+    let svc_ref = &svc;
+    let runs: Vec<ClientRun> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| scope.spawn(move || client(svc_ref, c)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for run in runs {
+        all.extend(run.ledger);
+        for (s, n) in run.ingested.into_iter().enumerate() {
+            ingested[s] += n;
+        }
+    }
+
+    let snap = svc.metrics_snapshot();
+
+    // (a) zero lost updates: store, residency gauge, and ingest totals
+    // all land on the exact per-stream sum
+    for (s, want) in ingested.iter().enumerate() {
+        let id = stream_id(s);
+        assert_eq!(
+            svc.pin(&id).unwrap().snapshot().total_count(),
+            *want,
+            "lost update: {id} store count != Σ ingested"
+        );
+        let residency = &snap
+            .residency
+            .iter()
+            .find(|(name, _)| name == &id)
+            .unwrap_or_else(|| panic!("no residency gauge for {id}"))
+            .1;
+        assert_eq!(
+            residency.records, *want,
+            "lost update: {id} residency gauge != Σ ingested"
+        );
+        assert_eq!(
+            snap.totals_for(OpKind::Ingest, &id).unwrap().records,
+            *want,
+            "lost update: {id} ingest totals != Σ ingested"
+        );
+    }
+
+    // (b) grand totals are the field-by-field sum of every per-op report
+    assert_eq!(snap.ops, all.len() as u64, "one absorb per operation");
+    assert_totals_eq(&snap.grand(), &sum_reports(all.iter().map(|(_, r)| r)), "grand");
+
+    // (c) ... and so is every (kind, stream) bin the clients touched
+    let mut keys: Vec<_> = all.iter().map(|(k, _)| k.clone()).collect();
+    keys.sort();
+    keys.dedup();
+    for key in keys {
+        let want = sum_reports(all.iter().filter(|(k, _)| k == &key).map(|(_, r)| r));
+        let got = snap
+            .totals_for(key.0, &key.1)
+            .unwrap_or_else(|| panic!("no bin for {key:?}"));
+        assert_totals_eq(got, &want, &format!("bin {key:?}"));
+    }
+
+    // quiesced: the live gauges drained back to zero
+    assert_eq!(svc.in_flight_queries(), 0);
+    assert_eq!(svc.ingest_queue_depth(), 0);
+    assert_eq!(svc.streams().len(), STREAMS);
+}
+
+/// Regression: a `Sketched` query must never read a merged-sketch memo
+/// that belongs to a different epoch list than the snapshot it pinned.
+/// A writer seals (and, with this aggressive policy, compacts) the same
+/// stream in a tight loop while the reader pins + queries; every served
+/// answer must bit-match the serialized oracle over exactly the pinned
+/// epochs.
+#[test]
+fn sketched_query_racing_seals_never_reads_a_stale_memo() {
+    let svc = QuantileService::builder()
+        .cluster(ClusterConfig::local(2, 4))
+        .compaction(CompactionPolicy {
+            compact_threshold: 3,
+            max_live_epochs: 2,
+        })
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap();
+
+    let mut rng = Pcg64::new(7, 0x5EA1);
+    svc.ingest("race", MicroBatch::new(batch(&mut rng, 128))).unwrap();
+    let writer_batches: Vec<Vec<Key>> = (0..24).map(|_| batch(&mut rng, 64)).collect();
+
+    let svc_ref = &svc;
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            for vals in writer_batches {
+                svc_ref.ingest("race", MicroBatch::new(vals)).unwrap();
+            }
+        });
+        for i in 0..48u64 {
+            let q = QS[(i % QS.len() as u64) as usize];
+            let query = QuantileQuery::Sketched { q, eps: 0.05 };
+            let pin = svc.pin("race").unwrap();
+            let served = svc.query_pinned(&pin, &query).unwrap();
+            let mut oracle = svc.oracle(&pin).unwrap();
+            let want = oracle.execute(Source::Stream("race"), query).unwrap();
+            assert_eq!(
+                served.value(),
+                want.value(),
+                "stale merged-sketch memo: pinned snapshot (seal #{}) served {} \
+                 but the oracle over the same epochs answers {}",
+                pin.snapshot().sealed_epochs(),
+                served.value(),
+                want.value()
+            );
+        }
+    });
+}

@@ -1,0 +1,309 @@
+//! Property tests for the concurrent multi-tenant [`QuantileService`]:
+//! across random geometries, BOTH exec modes, and optional seeded
+//! recoverable fault plans,
+//!
+//! * **snapshot isolation** — a query that pinned snapshot S answers
+//!   bit-identically to a fresh single-threaded engine whose store was
+//!   fed exactly S's epochs, even while K writer threads ingest into
+//!   the same stream concurrently with the queries;
+//! * **linearizability of seals** — once every concurrent ingest has
+//!   returned (thread join = barrier), every subsequently submitted
+//!   query observes all of them: the pinned count equals the running
+//!   total, and each writer observes its own seal immediately;
+//! * **multi-tenant isolation** — after concurrent per-stream writers
+//!   finish, the registry's per-stream residency gauges equal each
+//!   stream's Σ ingested records exactly, with no cross-stream bleed.
+//!
+//! The oracle engine always runs `ExecMode::Sequential` with no fault
+//! plan; the service under test may run `Threads` under recoverable
+//! chaos — recoverable plans are answer-preserving, so bit-equality
+//! against the clean serialized oracle is the acceptance bar.
+
+use gkselect::cluster::{ClusterConfig, ExecMode, FaultPlan};
+use gkselect::engine::{
+    AlgoChoice, EngineBuilder, QuantileEngine, QuantileQuery, Source,
+};
+use gkselect::obs::{MetricsMode, OpKind};
+use gkselect::service::{Pinned, QuantileService};
+use gkselect::stream::MicroBatch;
+use gkselect::util::propkit::{check, Gen};
+use gkselect::Key;
+
+fn gen_geometry(g: &mut Gen) -> (usize, usize) {
+    let executors = g.usize_in(1, 3);
+    let partitions = executors * g.usize_in(1, 3);
+    (executors, partitions)
+}
+
+fn gen_values(g: &mut Gen, min: usize) -> Vec<Key> {
+    let n = g.usize_in(min, 600);
+    (0..n).map(|_| g.i32_in(-500_000, 500_000)).collect()
+}
+
+fn gen_mode(g: &mut Gen) -> ExecMode {
+    if g.bool() {
+        ExecMode::Threads
+    } else {
+        ExecMode::Sequential
+    }
+}
+
+/// Recoverable plan (mirrors `proptest_registry.rs`): every fault
+/// retires within the default retry budget, straggler multipliers stay
+/// off the 2.0 speculation boundary so outcomes are mode-independent.
+fn gen_recoverable_plan(g: &mut Gen, partitions: usize) -> FaultPlan {
+    let mut plan = FaultPlan::seeded(g.u64())
+        .panics(g.f64_unit() * 0.2)
+        .transients(g.f64_unit() * 0.25);
+    if g.bool() {
+        plan = plan.stragglers(g.f64_unit() * 0.4, 2.5 + g.f64_unit() * 2.0);
+    }
+    if g.bool() {
+        plan = plan.panic_task(g.usize_in(0, 1) as u64, g.usize_in(0, partitions - 1));
+    }
+    plan
+}
+
+fn service(
+    executors: usize,
+    partitions: usize,
+    mode: ExecMode,
+    faults: Option<FaultPlan>,
+) -> QuantileService {
+    QuantileService::builder()
+        .cluster(
+            ClusterConfig::local(executors, partitions)
+                .with_exec_mode(mode)
+                .with_fault_plan(faults),
+        )
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap()
+}
+
+/// The independent oracle: a fresh sequential fault-free engine whose
+/// store holds exactly the pinned snapshot's epochs, sealed in pin
+/// order. Same epoch order → same tree merge → same plan → the answers
+/// the service must reproduce bit-identically.
+fn oracle_for(executors: usize, partitions: usize, pin: &Pinned) -> QuantileEngine {
+    let mut oracle = EngineBuilder::new()
+        .cluster(
+            ClusterConfig::local(executors, partitions)
+                .with_exec_mode(ExecMode::Sequential)
+                .with_fault_plan(None),
+        )
+        .algorithm(AlgoChoice::GkSelect)
+        .build()
+        .unwrap();
+    for epoch in pin.snapshot().epochs() {
+        oracle
+            .store_mut()
+            .seal_epoch(pin.stream(), epoch.data.clone(), epoch.sketches.clone())
+            .unwrap();
+    }
+    oracle
+}
+
+#[test]
+fn snapshot_isolation_holds_under_concurrent_writers() {
+    check("snapshot_isolation_holds_under_concurrent_writers", 12, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let mode = gen_mode(g);
+        let faults = if g.bool() {
+            Some(gen_recoverable_plan(g, partitions))
+        } else {
+            None
+        };
+        let svc = service(executors, partitions, mode, faults);
+
+        // warm epochs that the pin will capture
+        for _ in 0..g.usize_in(1, 3) {
+            svc.ingest("hot", MicroBatch::new(gen_values(g, 1))).unwrap();
+        }
+        let pin = svc.pin("hot").unwrap();
+
+        // pre-generate the concurrent writers' batches (Gen is not Sync)
+        const WRITERS: usize = 3;
+        let batches: Vec<Vec<Vec<Key>>> = (0..WRITERS)
+            .map(|_| (0..g.usize_in(1, 3)).map(|_| gen_values(g, 1)).collect())
+            .collect();
+        let qs = [0.0, g.f64_unit(), 0.5, g.f64_unit(), 1.0];
+
+        // queries against the pin race the writers' seals and compactions
+        let svc_ref = &svc;
+        let got: Vec<(f64, Key)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = batches
+                .into_iter()
+                .map(|mine| {
+                    scope.spawn(move || {
+                        for b in mine {
+                            svc_ref.ingest("hot", MicroBatch::new(b)).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            let got = qs
+                .iter()
+                .map(|&q| {
+                    let out = svc_ref
+                        .query_pinned(&pin, &QuantileQuery::Single(q))
+                        .unwrap();
+                    assert!(out.report.exact, "pinned answer must stay exact");
+                    (q, out.value())
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            got
+        });
+
+        // the serialized oracle over exactly the pinned epochs
+        let mut oracle = oracle_for(executors, partitions, &pin);
+        for (q, served) in got {
+            let want = oracle
+                .execute(Source::Stream("hot"), QuantileQuery::Single(q))
+                .unwrap();
+            assert_eq!(
+                served,
+                want.value(),
+                "snapshot isolation violated at q={q}: served {served}, \
+                 oracle over the pinned epochs answers {}",
+                want.value()
+            );
+        }
+
+        // and the pin still answers identically now that all writers are
+        // done — later seals must not have leaked into it
+        let after = svc.query_pinned(&pin, &QuantileQuery::Single(0.5)).unwrap();
+        let want = oracle
+            .execute(Source::Stream("hot"), QuantileQuery::Single(0.5))
+            .unwrap();
+        assert_eq!(after.value(), want.value());
+    });
+}
+
+#[test]
+fn seals_are_linearizable_at_the_ingest_return() {
+    check("seals_are_linearizable_at_the_ingest_return", 12, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let mode = gen_mode(g);
+        let faults = if g.bool() {
+            Some(gen_recoverable_plan(g, partitions))
+        } else {
+            None
+        };
+        let svc = service(executors, partitions, mode, faults);
+        let mut total: u64 = 0;
+
+        for _round in 0..g.usize_in(1, 3) {
+            const WRITERS: usize = 4;
+            let batches: Vec<Vec<Key>> =
+                (0..WRITERS).map(|_| gen_values(g, 1)).collect();
+            let round_records: u64 = batches.iter().map(|b| b.len() as u64).sum();
+
+            let svc_ref = &svc;
+            std::thread::scope(|scope| {
+                for mine in batches {
+                    scope.spawn(move || {
+                        let n = mine.len() as u64;
+                        let before = svc_ref
+                            .pin("s")
+                            .map(|p| p.snapshot().total_count())
+                            .unwrap_or(0);
+                        svc_ref.ingest("s", MicroBatch::new(mine)).unwrap();
+                        // once MY ingest returned, a fresh pin must observe
+                        // at least my batch on top of what I saw before
+                        let after =
+                            svc_ref.pin("s").unwrap().snapshot().total_count();
+                        assert!(
+                            after >= before + n,
+                            "seal not observed by its own writer: \
+                             {before} + {n} > {after}"
+                        );
+                    });
+                }
+            });
+            total += round_records;
+
+            // the join is a barrier: every ingest returned, so a query
+            // submitted now observes ALL of them
+            let pin = svc.pin("s").unwrap();
+            assert_eq!(
+                pin.snapshot().total_count(),
+                total,
+                "barrier-synced query missed a sealed ingest"
+            );
+            let served = svc.query_pinned(&pin, &QuantileQuery::Single(1.0)).unwrap();
+            let mut oracle = oracle_for(executors, partitions, &pin);
+            let want = oracle
+                .execute(Source::Stream("s"), QuantileQuery::Single(1.0))
+                .unwrap();
+            assert_eq!(served.value(), want.value());
+        }
+    });
+}
+
+#[test]
+fn tenants_stay_isolated_in_residency_and_totals() {
+    check("tenants_stay_isolated_in_residency_and_totals", 12, |g| {
+        let (executors, partitions) = gen_geometry(g);
+        let mode = gen_mode(g);
+        let faults = if g.bool() {
+            Some(gen_recoverable_plan(g, partitions))
+        } else {
+            None
+        };
+        let svc = service(executors, partitions, mode, faults);
+
+        const TENANTS: usize = 3;
+        let batches: Vec<Vec<Vec<Key>>> = (0..TENANTS)
+            .map(|_| (0..g.usize_in(1, 4)).map(|_| gen_values(g, 1)).collect())
+            .collect();
+        let expected: Vec<u64> = batches
+            .iter()
+            .map(|bs| bs.iter().map(|b| b.len() as u64).sum())
+            .collect();
+
+        let svc_ref = &svc;
+        std::thread::scope(|scope| {
+            for (t, mine) in batches.into_iter().enumerate() {
+                scope.spawn(move || {
+                    let id = format!("tenant-{t}");
+                    for b in mine {
+                        svc_ref.ingest(&id, MicroBatch::new(b)).unwrap();
+                    }
+                });
+            }
+        });
+
+        let snap = svc.metrics_snapshot();
+        for (t, want) in expected.iter().enumerate() {
+            let id = format!("tenant-{t}");
+            let residency = &snap
+                .residency
+                .iter()
+                .find(|(name, _)| name == &id)
+                .unwrap_or_else(|| panic!("no residency gauge for {id}"))
+                .1;
+            assert_eq!(
+                residency.records, *want,
+                "{id}: residency gauge {} != Σ ingested {want}",
+                residency.records
+            );
+            let totals = snap.totals_for(OpKind::Ingest, &id).unwrap();
+            assert_eq!(
+                totals.records, *want,
+                "{id}: ingest totals {} != Σ ingested {want}",
+                totals.records
+            );
+            // and the store itself agrees with the gauges
+            assert_eq!(
+                svc.pin(&id).unwrap().snapshot().total_count(),
+                *want,
+                "{id}: pinned count disagrees with Σ ingested"
+            );
+        }
+        assert_eq!(svc.streams().len(), TENANTS);
+    });
+}

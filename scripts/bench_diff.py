@@ -21,9 +21,14 @@ Two classes of check, per run (keyed by algorithm x exec_mode):
   baseline by more than --max-regress; trace_overhead_ratio (the
   trace_overhead record — Null span sink vs a live Chrome sink) must
   not grow past baseline by more than --max-regress, pinning the
-  tracing layer's disabled-path cost at ~1.0. Performance checks are
-  skipped per-field when the baseline value sits under the calibration
-  floor (an uncalibrated baseline stores 0.0 there).
+  tracing layer's disabled-path cost at ~1.0; concurrent_speedup (the
+  serve_throughput records — concurrent QuantileService qps over a
+  serialized single-engine baseline) must not drop below baseline by
+  more than --max-regress, and serve_p99_s (tail query latency under
+  concurrent load) must not grow past baseline by more than
+  --max-regress with the same wall-clock noise floors. Performance
+  checks are skipped per-field when the baseline value sits under the
+  calibration floor (an uncalibrated baseline stores 0.0 there).
 
 Named baselines: `--save-baseline <name>` snapshots the fresh JSON as
 .bench-baselines/<name>.json (only after the diff passes, when a
@@ -260,6 +265,44 @@ def main():
         elif "trace_overhead_ratio" in base:
             print(f"note: {name}: baseline trace_overhead_ratio uncalibrated "
                   f"({bt}); skipping overhead check")
+
+        # serving-layer scaling (the serve_throughput records only):
+        # concurrent qps over serialized qps must not drop past the
+        # regression budget once calibrated — the concurrent service
+        # losing its scaling win is a perf regression even though every
+        # answer stays exact
+        bss = base.get("concurrent_speedup", 0.0)
+        fss = fresh.get("concurrent_speedup", 0.0)
+        if bss >= args.min_speedup:
+            checked += 1
+            if fss < bss * (1 - args.max_regress):
+                failures.append(
+                    f"{name}: concurrent_speedup {bss:.2f}x -> {fss:.2f}x "
+                    f"(-{(1 - fss / bss) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif "concurrent_speedup" in base:
+            print(f"note: {name}: baseline concurrent_speedup uncalibrated "
+                  f"({bss}); skipping serve speedup check")
+
+        # serving-layer tail latency: p99 under concurrent load may not
+        # grow past the budget once calibrated (same wall-clock floors
+        # as band_scan_wall_s)
+        bp, fp = base.get("serve_p99_s", 0.0), fresh.get("serve_p99_s", 0.0)
+        if bp >= args.min_wall:
+            checked += 1
+            if "serve_p99_s" not in fresh:
+                failures.append(
+                    f"{name}: serve_p99_s missing from fresh bench "
+                    f"(baseline tracks {bp:.4f}s)"
+                )
+            elif fp > bp * (1 + args.max_regress) and fp - bp > args.min_delta_s:
+                failures.append(
+                    f"{name}: serve_p99_s {bp:.4f}s -> {fp:.4f}s "
+                    f"(+{(fp / bp - 1) * 100:.0f}%, limit {args.max_regress * 100:.0f}%)"
+                )
+        elif "serve_p99_s" in base:
+            print(f"note: {name}: baseline serve_p99_s uncalibrated "
+                  f"({bp}); skipping tail-latency check")
 
         # SIMD tile throughput win (the simd_vs_scalar record only)
         bs = base.get("simd_speedup", 0.0)
