@@ -13,6 +13,11 @@
 //! * an unparseable value → a typed [`EngineError::InvalidEnv`] naming
 //!   the variable, the offending value, and the accepted grammar —
 //!   never a silent fallback.
+//!
+//! Centralization is enforced: `scripts/lint_repo.py` (rule GK-I2, see
+//! docs/INVARIANTS.md) fails CI on any `env::var` read outside this
+//! module, so a stray `GKSELECT_*` read can't create configuration
+//! that bypasses validation and the run manifest.
 
 use super::EngineError;
 use crate::cluster::{ExecMode, FaultPlan};

@@ -66,6 +66,7 @@ pub mod service;
 pub mod sketch;
 pub mod sort;
 pub mod stream;
+pub mod testing;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the

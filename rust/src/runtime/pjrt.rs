@@ -46,6 +46,9 @@ pub struct PjrtBackend {
 // threads at once; the handles themselves are only *moved* across
 // threads, which PJRT's C API permits.
 unsafe impl Send for PjrtBackend {}
+// SAFETY: shared references only reach the handles through the `stage`
+// mutex (see the `Send` justification above), so concurrent `&self`
+// access serializes on the lock and never aliases a kernel call.
 unsafe impl Sync for PjrtBackend {}
 
 impl PjrtBackend {

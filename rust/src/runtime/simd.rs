@@ -137,6 +137,14 @@ impl SimdDispatch {
 
     #[cfg(target_arch = "x86_64")]
     fn best_available() -> Self {
+        // Miri interprets MIR and cannot execute vendor intrinsics:
+        // route every policy (including ForceSimd) to the scalar
+        // oracle so the whole suite runs under `cargo miri test`.
+        // Bit-identity of the tiles vs. the oracle is proptested
+        // natively (`proptest_simd.rs`), so Miri loses no coverage.
+        if cfg!(miri) {
+            return Self::Scalar;
+        }
         if is_x86_feature_detected!("avx2") {
             Self::Avx2
         } else {
@@ -182,13 +190,15 @@ impl SimdDispatch {
         match self {
             Self::Scalar => classify_chunk_scalar(chunk, pivot, lo, hi, out, extracting),
             #[cfg(target_arch = "x86_64")]
-            // SAFETY: Sse2 is an x86_64 baseline feature; Avx2 is only
-            // ever constructed after `is_x86_feature_detected!("avx2")`
-            // succeeded in `best_available`.
+            // SAFETY: SSE2 is part of the x86_64 baseline — every CPU
+            // this arm compiles for executes it.
             Self::Sse2 => unsafe {
                 x86::classify_chunk_sse2(chunk, pivot, lo, hi, out, extracting)
             },
             #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Avx2` is only ever constructed after
+            // `is_x86_feature_detected!("avx2")` succeeded in
+            // `best_available`, so the target feature is present.
             Self::Avx2 => unsafe {
                 x86::classify_chunk_avx2(chunk, pivot, lo, hi, out, extracting)
             },
@@ -320,6 +330,10 @@ mod x86 {
         }
     }
 
+    /// # Safety
+    /// Caller must have verified AVX2 support (the store is an
+    /// unaligned-safe `storeu` into a stack buffer of exactly one
+    /// vector, so feature presence is the only obligation).
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32_256(v: __m256i) -> u64 {
@@ -328,6 +342,10 @@ mod x86 {
         buf.iter().map(|&x| x as u64).sum()
     }
 
+    /// # Safety
+    /// SSE2 is the x86_64 baseline; the `storeu` writes exactly one
+    /// vector into a stack buffer of the same size, so this is safe to
+    /// call from any x86_64 context.
     #[inline]
     unsafe fn hsum_epi32_128(v: __m128i) -> u64 {
         let mut buf = [0i32; 4];

@@ -451,6 +451,10 @@ impl QuantileService {
         report: &crate::cluster::metrics::MetricsReport,
         residency: Option<(String, StreamResidency)>,
     ) -> Result<(), EngineError> {
+        // Explorer sync point *before* the lock: the registry mutex is
+        // never held across a yield, so contention on it needs no
+        // schedulable acquisition path (unlike the writer token).
+        crate::testing::yield_point(crate::testing::SyncPoint::RegistryAbsorb);
         let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
         if !reg.is_enabled() {
             return Ok(());

@@ -18,18 +18,53 @@
 //!   lock it only to store the next one. Neither ever blocks on the
 //!   other's actual work, which is how queries stay un-blocked by
 //!   concurrent seals and compactions.
+//!
+//! # Poisoning and the recovery contract
+//!
+//! Every lock here is acquired through [`relock`], which recovers the
+//! inner value from a poisoned mutex instead of propagating the
+//! poison. That is sound because each critical section leaves
+//! consistent state on **every** exit path, including unwinds:
+//!
+//! * A writer that panics mid-ingest drops its token with the store in
+//!   one of two consistent states: nothing sealed (the batch simply
+//!   never happened), or sealed-but-unpublished (seal is the store's
+//!   atomic commit point; the publish swap only exposes it). In the
+//!   second state the batch is durable in the writer's store and the
+//!   **next successful ingest publishes it** along with its own epoch —
+//!   readers never observe a half-sealed epoch either way.
+//! * The published pointer is only ever replaced by a single store of
+//!   an already-constructed `Arc`, so a panic can only happen before or
+//!   after the swap, never inside a half-written snapshot.
+//! * Shard maps only insert fully-built entries under their lock.
+//!
+//! So a panicking writer task cannot strand a stream: the entry stays
+//! usable, later writers recover the token via [`relock`], and the
+//! published snapshot is always one the writer fully built. This
+//! contract is pinned by the poisoning tests below and by the
+//! failpoint-injection tests in `tests/concurrency_explorer.rs`, which
+//! panic a writer inside the real ingest path at the publish point and
+//! then prove the stream still ingests, queries, and accounts exactly.
+//!
+//! Sync points here are instrumented for the deterministic
+//! interleaving explorer ([`crate::testing`]): `lock_writer` is the one
+//! lock held across yield points, so under an explorer schedule it
+//! acquires via a `try_lock` loop that yields contention to the
+//! scheduler instead of blocking the OS thread.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::stream::store::{SketchStore, StreamSnapshot};
 use crate::stream::CompactionPolicy;
+use crate::testing::{self, SyncPoint};
 
 /// Recover the inner value even if a panicking holder poisoned the
 /// lock: every critical section here leaves consistent state on every
 /// exit path (ingest is atomic-under-failure, publishes are single
-/// stores), so poisoning carries no information we need to honor.
+/// stores), so poisoning carries no information we need to honor. See
+/// the module doc's recovery contract.
 fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
@@ -62,20 +97,37 @@ impl StreamEntry {
     }
 
     /// Lock the writer token (blocking until the previous writer of
-    /// this stream finishes).
+    /// this stream finishes). Under an explorer schedule the blocking
+    /// wait becomes a schedulable `try_lock` loop — the writer token is
+    /// held across later yield points, so parking the OS thread here
+    /// would deadlock the cooperative scheduler.
     pub fn lock_writer(&self) -> MutexGuard<'_, StreamWriter> {
+        testing::yield_point(SyncPoint::LockWriter);
+        if testing::scheduled() {
+            loop {
+                match self.writer.try_lock() {
+                    Ok(guard) => return guard,
+                    Err(TryLockError::Poisoned(e)) => return e.into_inner(),
+                    Err(TryLockError::WouldBlock) => {
+                        testing::yield_contended(SyncPoint::LockWriter)
+                    }
+                }
+            }
+        }
         relock(&self.writer)
     }
 
     /// Swap in the next snapshot. Pins already handed out keep their
     /// old `Arc`.
     pub fn publish(&self, snap: Arc<StreamSnapshot>) {
+        testing::yield_point(SyncPoint::Publish);
         *relock(&self.published) = snap;
     }
 
     /// Clone the current snapshot out — the whole read-side critical
     /// section.
     pub fn pin(&self) -> Arc<StreamSnapshot> {
+        testing::yield_point(SyncPoint::Pin);
         relock(&self.published).clone()
     }
 }
@@ -165,6 +217,60 @@ mod tests {
             map.get_or_create(id, &cfg, CompactionPolicy::default());
         }
         assert_eq!(map.stream_ids(), vec!["alpha", "mid", "zeta"]);
+    }
+
+    /// The recovery contract, writer side: a holder that panics
+    /// mid-critical-section poisons the token, and the next
+    /// `lock_writer` recovers it with the entry fully usable.
+    #[test]
+    fn poisoned_writer_token_recovers_and_entry_stays_usable() {
+        let map = ShardMap::new(2);
+        let cfg = ClusterConfig::local(1, 2);
+        let e = map.get_or_create("s", &cfg, CompactionPolicy::default());
+
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence the expected unwind
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = e.lock_writer();
+            panic!("writer dies holding the token");
+        }));
+        std::panic::set_hook(hook);
+        assert!(died.is_err());
+        assert!(e.writer.is_poisoned(), "the unwind must actually poison");
+
+        // relock recovers the token; writer state is intact.
+        let w = e.lock_writer();
+        assert_eq!(w.store.stream_ids().count(), 0);
+        drop(w);
+        // The read/publish side never saw any of it.
+        e.publish(Arc::new(StreamSnapshot::empty(4)));
+        assert_eq!(e.pin().partitions(), 4);
+    }
+
+    /// The recovery contract, publish side: even a poisoned published
+    /// pointer (holder panicked while cloning) still pins the snapshot
+    /// the last writer fully built — the swap is a single store of a
+    /// complete `Arc`, so poison carries no torn state.
+    #[test]
+    fn poisoned_published_pointer_still_pins_the_last_full_snapshot() {
+        let map = ShardMap::new(2);
+        let cfg = ClusterConfig::local(1, 2);
+        let e = map.get_or_create("s", &cfg, CompactionPolicy::default());
+        e.publish(Arc::new(StreamSnapshot::empty(8)));
+
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = relock(&e.published);
+            panic!("reader dies holding the published lock");
+        }));
+        std::panic::set_hook(hook);
+        assert!(died.is_err());
+        assert!(e.published.is_poisoned());
+
+        assert_eq!(e.pin().partitions(), 8, "pin recovers the full snapshot");
+        e.publish(Arc::new(StreamSnapshot::empty(2)));
+        assert_eq!(e.pin().partitions(), 2, "publish keeps working after poison");
     }
 
     #[test]

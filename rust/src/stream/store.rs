@@ -192,6 +192,10 @@ impl StreamSnapshot {
     /// the fused scan, not a re-merge. `None` when the snapshot holds no
     /// records.
     pub fn merged_sketch(&self) -> Option<GkCore> {
+        // Explorer sync point: a schedule may interleave a seal between
+        // a reader's pin and this memo init — the stale-memo bug class
+        // this memo's placement on the immutable snapshot rules out.
+        crate::testing::yield_point(crate::testing::SyncPoint::MemoInit);
         let core = self.merged.get_or_init(|| {
             if self.epochs.is_empty() {
                 return None;

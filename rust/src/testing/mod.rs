@@ -1,0 +1,168 @@
+//! Deterministic interleaving explorer for the concurrent service
+//! layer.
+//!
+//! PR 9 made the repo genuinely concurrent: [`crate::service`]
+//! publishes `Arc<StreamSnapshot>`s across threads, shards guard writer
+//! tokens with mutexes, and the merged-sketch memo lives in an
+//! `OnceLock`. A handful of racing-thread tests exercise a handful of
+//! schedules; this module makes the schedule itself the test input.
+//!
+//! The model is cooperative token passing over real OS threads: every
+//! participating task parks until the scheduler hands it the **run
+//! token**, executes until its next instrumented synchronization point
+//! ([`SyncPoint`]), and yields the token back. Exactly one task runs at
+//! a time, every context switch happens at an instrumented point, and
+//! each switch target is a recorded **decision** — so a whole run is
+//! reduced to a vector of small integers that can be enumerated
+//! exhaustively (bounded DFS over the schedule tree), sampled
+//! seed-randomly, or replayed verbatim. A failing schedule is a
+//! first-class artifact: [`ScheduleFailure::schedule`] fed back through
+//! [`Explorer::replay`] reproduces the exact interleaving, every time.
+//!
+//! The service layer's synchronization points — `lock_writer`,
+//! `publish`, snapshot `pin`, the `OnceLock` memo init, the registry
+//! absorb — call [`yield_point`] inline. The hook is two relaxed loads
+//! when no explorer is armed and a no-op for unregistered threads (the
+//! executor pool's internal workers, unrelated tests running in the
+//! same binary), so production and ordinary test paths pay nothing.
+//!
+//! Writer tokens are the only lock *held across* yield points, so
+//! [`StreamEntry::lock_writer`] acquires with a `try_lock` loop that
+//! reports contention via the crate-internal `yield_contended`: a
+//! blocked task is
+//! deprioritized (never granted while any other task can run), which
+//! turns would-be deadlocks into schedulable waiting. Every other
+//! instrumented lock is released before the next yield, so a plain
+//! pre-acquisition yield point is sound for them.
+//!
+//! Failure injection: [`Explorer::failpoint`] arms a panic at the Nth
+//! arrival of a named sync point, which is how the mutex-poisoning
+//! recovery contract of the service shard layer is tested through the
+//! real ingest path.
+//!
+//! [`StreamEntry::lock_writer`]: crate::service
+//!
+//! ```no_run
+//! use gkselect::testing::{checkpoint, Explorer};
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//! use std::sync::Arc;
+//!
+//! let found = Explorer::exhaustive().explore(|tasks| {
+//!     let x = Arc::new(AtomicU64::new(0));
+//!     for name in ["a", "b"] {
+//!         let x = x.clone();
+//!         tasks.spawn(name, move || {
+//!             let seen = x.load(Ordering::SeqCst);
+//!             checkpoint("between-read-and-write"); // racy on purpose
+//!             x.store(seen + 1, Ordering::SeqCst);
+//!         });
+//!     }
+//!     let x = x.clone();
+//!     tasks.check(move || assert_eq!(x.load(Ordering::SeqCst), 2));
+//! });
+//! assert!(!found.failures.is_empty(), "explorer must find the lost update");
+//! ```
+
+mod explore;
+
+pub use explore::{Exploration, Explorer, RunOutcome, ScheduleFailure, TaskSet};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The service layer's instrumented synchronization points. Each
+/// variant marks one acquisition/initialization site; the explorer may
+/// switch tasks at any of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPoint {
+    /// `StreamEntry::lock_writer` — acquiring the single-writer token.
+    LockWriter,
+    /// `StreamEntry::publish` — swapping the published snapshot pointer.
+    Publish,
+    /// `StreamEntry::pin` — cloning the published snapshot out.
+    Pin,
+    /// `StreamSnapshot::merged_sketch` — the `OnceLock` memo init.
+    MemoInit,
+    /// `QuantileService::absorb` — taking the registry lock for
+    /// `absorb_with`.
+    RegistryAbsorb,
+    /// A test-defined checkpoint (see [`checkpoint`]); the label names
+    /// it in traces and failpoints.
+    Checkpoint(&'static str),
+}
+
+impl SyncPoint {
+    /// Stable label used in schedule traces and failpoint matching.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SyncPoint::LockWriter => "lock_writer",
+            SyncPoint::Publish => "publish",
+            SyncPoint::Pin => "pin",
+            SyncPoint::MemoInit => "memo_init",
+            SyncPoint::RegistryAbsorb => "registry_absorb",
+            SyncPoint::Checkpoint(label) => label,
+        }
+    }
+}
+
+/// Count of explorers currently mid-run, across all threads. The fast
+/// path of every hook: one relaxed load, zero when nothing explores.
+static ACTIVE_EXPLORERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// The current thread's registration with a running explorer, if
+    /// any. Set by the task wrapper for the closure's whole lifetime.
+    static PARTICIPANT: RefCell<Option<explore::Participant>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn set_participant(p: Option<explore::Participant>) {
+    PARTICIPANT.with(|slot| *slot.borrow_mut() = p);
+}
+
+pub(crate) fn active_explorers() -> &'static AtomicUsize {
+    &ACTIVE_EXPLORERS
+}
+
+fn current_participant() -> Option<explore::Participant> {
+    if ACTIVE_EXPLORERS.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    PARTICIPANT.with(|slot| slot.borrow().clone())
+}
+
+/// True iff the calling thread is a registered task of a running
+/// explorer — the signal for instrumented sites to switch to their
+/// explorable acquisition path (e.g. the `try_lock` loop in
+/// `lock_writer`).
+pub(crate) fn scheduled() -> bool {
+    current_participant().is_some()
+}
+
+/// Instrumented synchronization point: if the calling thread is a
+/// registered explorer task, yield the run token here (the scheduler
+/// picks who runs next — possibly this task again); otherwise do
+/// nothing. Sites must not hold any lock across this call unless the
+/// contended acquisition of that lock also yields (today only the
+/// writer token does, via the crate-internal `yield_contended`).
+pub fn yield_point(point: SyncPoint) {
+    if let Some(p) = current_participant() {
+        p.yield_at(point, false);
+    }
+}
+
+/// Contention yield: the calling task failed a `try_lock` on an
+/// instrumented lock. The scheduler marks it blocked — it is granted
+/// the token again (to retry) only when no unblocked task can run —
+/// and detects genuine deadlock if every live task ends up here.
+pub(crate) fn yield_contended(point: SyncPoint) {
+    if let Some(p) = current_participant() {
+        p.yield_at(point, true);
+    }
+}
+
+/// Test-defined yield point, for instrumenting doubles and fixtures
+/// outside the service layer (e.g. the deliberately broken memo store
+/// the explorer self-test catches). No-op outside explorer tasks.
+pub fn checkpoint(label: &'static str) {
+    yield_point(SyncPoint::Checkpoint(label));
+}

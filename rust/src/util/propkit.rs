@@ -47,6 +47,9 @@ impl<'a> Gen<'a> {
 
 /// Run `property` for `cases` seeded cases; panics with the failing seed.
 pub fn check(test_name: &str, cases: u64, mut property: impl FnMut(&mut Gen)) {
+    // PROPKIT_SEED is a test-harness replay knob, not engine
+    // configuration — the one env read exempt from the GK-I2
+    // centralization rule (docs/INVARIANTS.md).
     let base_seed = std::env::var("PROPKIT_SEED")
         .ok()
         .and_then(|s| s.parse::<u64>().ok());

@@ -1,0 +1,389 @@
+//! Deterministic interleaving exploration of the service layer
+//! ([`gkselect::testing`]): every context switch happens at an
+//! instrumented sync point, every schedule is a replayable decision
+//! vector, and the suite proves three things the racing-thread tests
+//! cannot:
+//!
+//! 1. **The 2-writer × 2-reader scenario holds its invariants on every
+//!    explored schedule** — ≥ 100 distinct interleavings of
+//!    `lock_writer` / `publish` / `pin` / memo-init / registry-absorb,
+//!    each asserting snapshot isolation (a pin answers identically no
+//!    matter what seals around it), seal linearizability (a writer's
+//!    batch is pinned-visible the moment its ingest returns), memo
+//!    freshness (the merged sketch counts exactly the pinned records),
+//!    zero lost updates, and exact registry accounting.
+//! 2. **The explorer catches the bug class** — a deliberately broken
+//!    store double that caches its merged-sketch memo on mutable stream
+//!    state (the shape PR 9's memo-on-snapshot design rules out) fails
+//!    under exploration, and replaying the failing schedule's decision
+//!    vector reproduces the failure deterministically; the fixed double
+//!    (memo scoped to the pin) passes every schedule of the same tree.
+//! 3. **The poisoning recovery contract survives the real ingest
+//!    path** — a failpoint panics a writer at the publish point (token
+//!    held, epoch sealed but unpublished); the stream stays usable, the
+//!    published snapshot stays coherent, and the next ingest publishes
+//!    the stranded epoch, exactly as `service/shard.rs` documents.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use gkselect::cluster::{ClusterConfig, FaultPlan};
+use gkselect::engine::QuantileQuery;
+use gkselect::obs::{MetricsMode, OpKind};
+use gkselect::service::QuantileService;
+use gkselect::stream::MicroBatch;
+use gkselect::testing::{checkpoint, Explorer, TaskSet};
+use gkselect::Key;
+
+const STREAM: &str = "explored";
+const WARM: u64 = 64;
+const W1_BATCH: u64 = 48;
+const W2_BATCH: u64 = 32;
+
+fn service() -> QuantileService {
+    QuantileService::builder()
+        .cluster(ClusterConfig::local(2, 4))
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap()
+}
+
+fn values(lo: i32, n: u64) -> Vec<Key> {
+    (0..n as i32).map(|i| lo + i * 3).collect()
+}
+
+/// Silence the default panic hook around explorations that *expect*
+/// failing schedules.
+fn with_quiet_panics<T>(f: impl FnOnce() -> T) -> T {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = f();
+    std::panic::set_hook(hook);
+    out
+}
+
+/// The tentpole scenario: one stream, two writers, two readers, fresh
+/// service per schedule. Writers assert seal linearizability at return;
+/// readers assert snapshot isolation and memo freshness on their pin;
+/// the final check asserts zero lost updates and exact accounting.
+fn two_writers_two_readers(tasks: &mut TaskSet) {
+    let svc = Arc::new(service());
+    // Warm from the driver (unregistered: hooks no-op) so a reader can
+    // never pin a stream with zero sealed epochs.
+    svc.ingest(STREAM, MicroBatch::new(values(0, WARM))).unwrap();
+
+    for (name, lo, n) in [("w1", 10_000, W1_BATCH), ("w2", 20_000, W2_BATCH)] {
+        let svc = svc.clone();
+        tasks.spawn(name, move || {
+            let out = svc.ingest(STREAM, MicroBatch::new(values(lo, n))).unwrap();
+            assert_eq!(out.batch_records, n, "{name}: batch sealed whole");
+            // Seal linearizability: the published snapshot at ingest
+            // return already contains this writer's batch.
+            let pin = svc.pin(STREAM).unwrap();
+            assert!(
+                pin.snapshot().total_count() >= WARM + n,
+                "{name}: pinned count {} misses the batch this ingest sealed",
+                pin.snapshot().total_count()
+            );
+        });
+    }
+
+    for name in ["r1", "r2"] {
+        let svc = svc.clone();
+        tasks.spawn(name, move || {
+            let pin = svc.pin(STREAM).unwrap();
+            let pinned = pin.snapshot().total_count();
+            assert!(pinned >= WARM, "{name}: pinned a pre-warm snapshot");
+            // Memo freshness: the merged sketch summarizes exactly the
+            // records of the pinned epoch list — never a later seal's.
+            let merged = pin.snapshot().merged_sketch().expect("warmed stream");
+            assert_eq!(merged.count, pinned, "{name}: merged-sketch memo is stale");
+            // Snapshot isolation: the same pin answers identically no
+            // matter how many seals the schedule interleaves between.
+            let query = QuantileQuery::Sketched { q: 0.5, eps: 0.05 };
+            let first = svc.query_pinned(&pin, &query).unwrap();
+            let second = svc.query_pinned(&pin, &query).unwrap();
+            assert_eq!(
+                first.value(),
+                second.value(),
+                "{name}: one pin, two answers — snapshot isolation broken"
+            );
+            assert_eq!(pin.snapshot().total_count(), pinned, "{name}: pin mutated");
+        });
+    }
+
+    tasks.check(move || {
+        // Zero lost updates: both batches landed exactly once.
+        let total = WARM + W1_BATCH + W2_BATCH;
+        let pin = svc.pin(STREAM).unwrap();
+        assert_eq!(pin.snapshot().total_count(), total, "lost update");
+        assert_eq!(
+            pin.snapshot().merged_sketch().unwrap().count,
+            total,
+            "final merged sketch misses records"
+        );
+        // Exact accounting: warm + 2 ingests + 2 readers × 2 queries.
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.ops, 7, "one absorb per operation, no matter the schedule");
+        assert_eq!(
+            snap.totals_for(OpKind::Ingest, STREAM).unwrap().records,
+            total,
+            "ingest totals drifted from the store"
+        );
+        assert_eq!(svc.in_flight_queries(), 0);
+        assert_eq!(svc.ingest_queue_depth(), 0);
+    });
+}
+
+#[test]
+fn service_invariants_hold_on_at_least_100_exhaustive_schedules() {
+    let exploration = Explorer::exhaustive()
+        .max_schedules(128)
+        .explore(two_writers_two_readers);
+    exploration.assert_no_failures();
+    assert!(
+        exploration.schedules >= 100,
+        "only {} distinct schedules explored",
+        exploration.schedules
+    );
+    assert!(
+        !exploration.complete,
+        "the 2w×2r tree is far larger than the cap; 'complete' means the \
+         instrumentation stopped yielding"
+    );
+}
+
+#[test]
+fn service_invariants_hold_on_seeded_random_schedules() {
+    let exploration = Explorer::random(0xD15C0, 48).explore(two_writers_two_readers);
+    exploration.assert_no_failures();
+    assert!(
+        exploration.schedules >= 8,
+        "seeded sampling collapsed to {} schedules",
+        exploration.schedules
+    );
+}
+
+// ---------------------------------------------------------------------
+// The broken store double: proof the explorer catches the bug class.
+// ---------------------------------------------------------------------
+
+/// A minimal model of the serving read path with the PR 9 bug
+/// deliberately reintroduced: epochs (record counts) live on the
+/// stream, pins copy the epoch list, but the merged "sketch" (here just
+/// the merged count) is cached on the *mutable stream state* and never
+/// invalidated by a seal — so a reader can serve a memo built over a
+/// different epoch list than the one it pinned.
+struct MemoDouble {
+    epochs: Mutex<Vec<u64>>,
+    stream_memo: Mutex<Option<u64>>,
+    /// True = the fixed design: the memo is computed per pin instead of
+    /// served from stream state.
+    memo_on_pin: bool,
+}
+
+impl MemoDouble {
+    fn new(memo_on_pin: bool) -> Self {
+        Self {
+            epochs: Mutex::new(Vec::new()),
+            stream_memo: Mutex::new(None),
+            memo_on_pin,
+        }
+    }
+
+    fn seal(&self, count: u64) {
+        checkpoint("double_seal");
+        self.epochs.lock().unwrap().push(count);
+        // BUG (broken variant): no memo invalidation here.
+    }
+
+    fn pin(&self) -> Vec<u64> {
+        checkpoint("double_pin");
+        self.epochs.lock().unwrap().clone()
+    }
+
+    /// The read path: merged count for a pinned epoch list.
+    fn merged(&self, pin: &[u64]) -> u64 {
+        checkpoint("double_memo");
+        if self.memo_on_pin {
+            // Fixed shape: memo scoped to exactly the pinned list.
+            return pin.iter().sum();
+        }
+        // Broken shape: first reader warms a stream-wide memo from the
+        // *current* epoch list; everyone after serves the cache.
+        let mut memo = self.stream_memo.lock().unwrap();
+        *memo.get_or_insert_with(|| self.epochs.lock().unwrap().iter().sum())
+    }
+}
+
+fn memo_scenario(memo_on_pin: bool) -> impl FnMut(&mut TaskSet) {
+    move |tasks: &mut TaskSet| {
+        let store = Arc::new(MemoDouble::new(memo_on_pin));
+        {
+            let store = store.clone();
+            tasks.spawn("writer", move || {
+                store.seal(100);
+                store.seal(50);
+            });
+        }
+        for name in ["r1", "r2"] {
+            let store = store.clone();
+            tasks.spawn(name, move || {
+                let pin = store.pin();
+                let served = store.merged(&pin);
+                assert_eq!(
+                    served,
+                    pin.iter().sum::<u64>(),
+                    "{name}: stale merged memo — served a sum over a different \
+                     epoch list than the pinned one"
+                );
+            });
+        }
+    }
+}
+
+#[test]
+fn explorer_catches_the_stale_memo_bug_and_replays_it_deterministically() {
+    let exploration = with_quiet_panics(|| {
+        Explorer::exhaustive()
+            .max_schedules(400)
+            .explore(memo_scenario(false))
+    });
+    assert!(
+        !exploration.failures.is_empty(),
+        "exploration must find the stale-memo interleaving"
+    );
+    assert!(
+        exploration.failures.len() < exploration.schedules,
+        "sequential schedules must still pass"
+    );
+    for failure in &exploration.failures {
+        assert!(
+            failure.messages.iter().any(|m| m.contains("stale merged memo")),
+            "unexpected failure mode: {:?}",
+            failure.messages
+        );
+    }
+
+    // The failing schedule is a deterministic reproduction: replaying
+    // its decision vector fails identically, run after run.
+    let failing = &exploration.failures[0];
+    for _ in 0..3 {
+        let replayed = with_quiet_panics(|| {
+            Explorer::exhaustive().replay(&failing.schedule, memo_scenario(false))
+        });
+        assert_eq!(replayed.failures, failing.messages, "replay diverged");
+        assert_eq!(replayed.trace, failing.trace, "replay took a different path");
+    }
+}
+
+#[test]
+fn fixed_memo_double_passes_the_same_schedule_tree() {
+    let exploration = Explorer::exhaustive().max_schedules(400).explore(memo_scenario(true));
+    exploration.assert_no_failures();
+    assert!(exploration.schedules > 1);
+}
+
+// ---------------------------------------------------------------------
+// Poisoning recovery through the real ingest path.
+// ---------------------------------------------------------------------
+
+/// A writer panics at the publish sync point — writer token held, epoch
+/// sealed but not yet published. The recovery contract in
+/// `service/shard.rs` promises: the stream stays usable, the published
+/// snapshot stays the last fully-built one, and the next successful
+/// ingest publishes the stranded epoch.
+#[test]
+fn writer_panicking_at_publish_leaves_stream_usable_and_snapshot_coherent() {
+    let svc = Arc::new(service());
+    svc.ingest(STREAM, MicroBatch::new(values(0, WARM))).unwrap();
+
+    let panicked = Arc::new(AtomicU64::new(0));
+    let exploration = with_quiet_panics(|| {
+        let svc = svc.clone();
+        let panicked = panicked.clone();
+        Explorer::exhaustive()
+            .max_schedules(1)
+            .failpoint("publish", 1)
+            .explore(move |tasks| {
+                let svc = svc.clone();
+                let panicked = panicked.clone();
+                tasks.spawn("doomed-writer", move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        svc.ingest(STREAM, MicroBatch::new(values(30_000, W1_BATCH)))
+                    }));
+                    assert!(r.is_err(), "the publish failpoint must fire");
+                    panicked.fetch_add(1, Ordering::SeqCst);
+                    // resume unwinding so the explorer records the task
+                    // as failed with the injected panic
+                    std::panic::resume_unwind(r.unwrap_err());
+                });
+            })
+    });
+    assert_eq!(panicked.load(Ordering::SeqCst), 1);
+    assert_eq!(exploration.failures.len(), 1);
+    assert!(
+        exploration.failures[0].messages[0].contains("failpoint"),
+        "got: {:?}",
+        exploration.failures[0].messages
+    );
+
+    // Coherent: the published snapshot is still the pre-panic one — the
+    // doomed batch sealed but never published.
+    let pin = svc.pin(STREAM).unwrap();
+    assert_eq!(pin.snapshot().total_count(), WARM);
+
+    // Usable: the next ingest recovers the poisoned token and publishes
+    // both its own epoch and the stranded one.
+    let out = svc.ingest(STREAM, MicroBatch::new(values(40_000, W2_BATCH))).unwrap();
+    assert_eq!(out.batch_records, W2_BATCH);
+    let pin = svc.pin(STREAM).unwrap();
+    assert_eq!(
+        pin.snapshot().total_count(),
+        WARM + W1_BATCH + W2_BATCH,
+        "recovery ingest must publish the stranded sealed epoch too"
+    );
+    assert_eq!(
+        pin.snapshot().merged_sketch().unwrap().count,
+        WARM + W1_BATCH + W2_BATCH
+    );
+    let out = svc
+        .query_pinned(&pin, &QuantileQuery::Single(0.5))
+        .unwrap();
+    assert!(out.report.exact, "served answers stay exact after recovery");
+}
+
+/// The pool-level fault path: a writer task that panics via `FaultPlan`
+/// is caught *inside* the executor pool (retried, then surfaced as a
+/// typed error), so a failed ingest returns `Err` without poisoning
+/// anything — the stream entry stays usable and the published snapshot
+/// untouched.
+#[test]
+fn fault_plan_panicking_writer_task_fails_cleanly_and_stream_recovers() {
+    let svc = QuantileService::builder()
+        .cluster(ClusterConfig::local(2, 4))
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap();
+    svc.ingest(STREAM, MicroBatch::new(values(0, WARM))).unwrap();
+
+    // A second service handle can't swap cluster config per-op, so use
+    // a dedicated service whose every task attempt panics: ingest must
+    // exhaust retries and fail with a typed error, not a poison.
+    let chaotic = QuantileService::builder()
+        .cluster(
+            ClusterConfig::local(2, 4)
+                .with_fault_plan(Some(FaultPlan::seeded(11).panics(1.0).attempts(u32::MAX))),
+        )
+        .metrics(MetricsMode::Memory)
+        .build()
+        .unwrap();
+    let err = chaotic.ingest(STREAM, MicroBatch::new(values(0, 16)));
+    assert!(err.is_err(), "all-attempts-panic plan must fail the ingest");
+    // The failed ingest never published: the stream either doesn't
+    // exist yet or is empty — and a later ingest on the healthy service
+    // keeps working (no cross-stream, no cross-service damage).
+    assert!(chaotic.pin(STREAM).is_err(), "nothing published from a failed first ingest");
+    let out = svc.ingest(STREAM, MicroBatch::new(values(50_000, 16))).unwrap();
+    assert_eq!(out.stream_records, WARM + 16);
+}

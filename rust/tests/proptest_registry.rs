@@ -122,7 +122,7 @@ fn engine(
 /// Run the script, returning each operation's (key, report) in order.
 fn run_script(
     eng: &mut QuantileEngine,
-    data: &Dataset,
+    data: &Dataset<Key>,
     script: &[Op],
 ) -> Vec<((OpKind, String), MetricsReport)> {
     let mut out = Vec::with_capacity(script.len());

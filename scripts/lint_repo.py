@@ -1,0 +1,473 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint: CI-gated static checks for gkselect.
+
+Stdlib-only, in the mold of check_prom.py / check_trace.py. Each rule
+enforces one invariant documented in docs/INVARIANTS.md and is cited by
+rule id in every failure message:
+
+  GK-I1  every `unsafe` site carries a SAFETY justification
+  GK-I2  GKSELECT_* env reads live only in rust/src/engine/env.rs
+  GK-I3  no `allow(deprecated)` outside the pinned shim suites
+  GK-I4  service/ lock acquisitions follow shard -> writer -> published
+         -> registry order, and never `.lock().unwrap()` (poison-unsafe)
+  GK-I5  no wall-clock / nondeterminism sources in answer-bearing paths
+
+Usage:
+  scripts/lint_repo.py [--root DIR]   # lint the tree (exit 1 on violation)
+  scripts/lint_repo.py --self-test    # run every rule against its own
+                                      # good/bad fixtures (exit 1 on bug)
+
+Exit codes: 0 = clean, 1 = violations (or self-test failure), 2 = usage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+DOC = "docs/INVARIANTS.md"
+
+# --- shared scanning helpers -------------------------------------------------
+
+FN_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?(?:async\s+)?(?:unsafe\s+)?fn\s+\w+")
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+
+
+def strip_test_module(text: str) -> str:
+    """Drop everything from the first `#[cfg(test)]` to EOF.
+
+    Repo convention keeps the unit-test module at the end of each file;
+    rules about runtime behavior don't apply to test bodies.
+    """
+    out = []
+    for line in text.splitlines():
+        if CFG_TEST_RE.match(line):
+            break
+        out.append(line)
+    return "\n".join(out)
+
+
+def strip_line_comment(line: str) -> str:
+    """Best-effort `// ...` removal for pattern matching (not parsing)."""
+    return line.split("//", 1)[0]
+
+
+class Violation:
+    def __init__(self, rule: str, path: str, lineno: int, message: str):
+        self.rule = rule
+        self.path = path
+        self.lineno = lineno
+        self.message = message
+
+    def render(self) -> str:
+        anchor = self.rule.lower()
+        return (
+            f"{self.path}:{self.lineno}: [{self.rule}] {self.message} "
+            f"(see {DOC}#{anchor})"
+        )
+
+
+# --- GK-I1: unsafe sites carry SAFETY justifications -------------------------
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+SAFETY_RE = re.compile(r"//\s*SAFETY:|///?\s*#\s*Safety")
+COMMENT_OR_ATTR_RE = re.compile(r"^\s*(//|#\[|#!\[|\*|/\*)")
+
+
+def check_unsafe_safety(path: str, text: str) -> list[Violation]:
+    """Every `unsafe` keyword must be preceded by a `// SAFETY:` comment
+    or a `# Safety` doc section within the contiguous run of comment /
+    attribute lines directly above it."""
+    violations = []
+    lines = text.splitlines()
+    for i, line in enumerate(lines):
+        code = strip_line_comment(line)
+        if not UNSAFE_RE.search(code):
+            continue
+        # walk the contiguous comment/attr block above, plus the line itself
+        justified = bool(SAFETY_RE.search(line))
+        j = i - 1
+        while j >= 0 and (COMMENT_OR_ATTR_RE.match(lines[j]) or not lines[j].strip()):
+            if SAFETY_RE.search(lines[j]):
+                justified = True
+                break
+            j -= 1
+        if not justified:
+            violations.append(
+                Violation(
+                    "GK-I1",
+                    path,
+                    i + 1,
+                    "unsafe without a `// SAFETY:` comment or `# Safety` doc "
+                    "directly above",
+                )
+            )
+    return violations
+
+
+# --- GK-I2: GKSELECT_* env reads centralized in engine/env.rs ----------------
+
+ENV_READ_RE = re.compile(r"\benv::(var|var_os)\s*\(")
+ENV_ALLOWLIST = {
+    "rust/src/engine/env.rs",  # the one documented read site
+}
+# PROPKIT_SEED is the propkit replay knob — a test-harness control, not
+# engine configuration, so reading it from tests/harness code is fine.
+ENV_KNOB_EXEMPT_RE = re.compile(r"PROPKIT_SEED")
+
+
+def check_env_reads(path: str, text: str) -> list[Violation]:
+    violations = []
+    allowed = path in ENV_ALLOWLIST
+    for i, line in enumerate(strip_test_module(text).splitlines()):
+        code = strip_line_comment(line)
+        if not ENV_READ_RE.search(code):
+            continue
+        if ENV_KNOB_EXEMPT_RE.search(code) and "GKSELECT" not in code:
+            continue
+        if "GKSELECT" in code:
+            if path != "rust/src/engine/env.rs":
+                violations.append(
+                    Violation(
+                        "GK-I2",
+                        path,
+                        i + 1,
+                        "GKSELECT_* env read outside engine/env.rs",
+                    )
+                )
+        elif not allowed:
+            violations.append(
+                Violation(
+                    "GK-I2",
+                    path,
+                    i + 1,
+                    "env::var read outside engine/env.rs (only PROPKIT_SEED "
+                    "is exempt)",
+                )
+            )
+    return violations
+
+
+# --- GK-I3: allow(deprecated) only in the pinned shim suites -----------------
+
+ALLOW_DEPRECATED_RE = re.compile(r"allow\(deprecated\)")
+DEPRECATED_ALLOWLIST = {
+    # the bit-identity pinning suites for the #[deprecated] shim surface
+    "rust/tests/proptest_engine.rs",
+    "rust/tests/integration_runtime.rs",
+}
+
+
+def check_allow_deprecated(path: str, text: str) -> list[Violation]:
+    if path in DEPRECATED_ALLOWLIST:
+        return []
+    violations = []
+    for i, line in enumerate(text.splitlines()):
+        if ALLOW_DEPRECATED_RE.search(strip_line_comment(line)):
+            violations.append(
+                Violation(
+                    "GK-I3",
+                    path,
+                    i + 1,
+                    "allow(deprecated) outside the pinned shim suites",
+                )
+            )
+    return violations
+
+
+# --- GK-I4: service/ lock discipline -----------------------------------------
+
+# Acquisition sites, in documented order. A function body must acquire
+# in non-decreasing level order (shard directory -> writer token ->
+# published pointer -> metrics registry).
+LOCK_LEVELS = [
+    (0, "shard directory", re.compile(r"\.streams\)")),
+    (1, "writer token", re.compile(r"lock_writer\(|\.writer\.try_lock|relock\(&self\.writer")),
+    (2, "published pointer", re.compile(r"relock\(&self\.published")),
+    (3, "metrics registry", re.compile(r"\.registry\.lock\(|relock\(&self\.registry")),
+]
+LOCK_UNWRAP_RE = re.compile(r"\.lock\(\)\s*\.unwrap\(\)")
+
+
+def check_service_lock_order(path: str, text: str) -> list[Violation]:
+    violations = []
+    current_fn = "<module>"
+    level = -1
+    for i, line in enumerate(strip_test_module(text).splitlines()):
+        code = strip_line_comment(line)
+        if FN_RE.match(code):
+            current_fn = code.strip()
+            level = -1
+        if LOCK_UNWRAP_RE.search(code):
+            violations.append(
+                Violation(
+                    "GK-I4",
+                    path,
+                    i + 1,
+                    "poison-unsafe `.lock().unwrap()` in service/ — use "
+                    "relock / unwrap_or_else(|e| e.into_inner())",
+                )
+            )
+        for lvl, name, pattern in LOCK_LEVELS:
+            if pattern.search(code):
+                if lvl < level:
+                    violations.append(
+                        Violation(
+                            "GK-I4",
+                            path,
+                            i + 1,
+                            f"{name} (level {lvl}) acquired after a "
+                            f"level-{level} lock in `{current_fn}` — order "
+                            "is shard -> writer -> published -> registry",
+                        )
+                    )
+                level = max(level, lvl)
+    return violations
+
+
+# --- GK-I5: no wall-clock / nondeterminism in answer-bearing paths -----------
+
+# Modules whose code derives the answer (quantile values, rank bounds,
+# band classification, snapshots). The cluster substrate and obs layer
+# measure wall time for *reports*; that never feeds an answer and is
+# deliberately out of scope here.
+ANSWER_BEARING_DIRS = (
+    "rust/src/algorithms/",
+    "rust/src/select/",
+    "rust/src/sketch/",
+    "rust/src/sort/",
+    "rust/src/stream/",
+    "rust/src/service/",
+    "rust/src/data/",
+    "rust/src/engine/",
+)
+ANSWER_BEARING_FILES = {
+    "rust/src/lib.rs",
+    "rust/src/runtime/simd.rs",  # the band kernel is the answer path
+    "rust/src/runtime/kernels.rs",
+}
+NONDETERMINISM = [
+    (re.compile(r"Instant::now"), "wall clock (Instant::now)"),
+    (re.compile(r"SystemTime"), "wall clock (SystemTime)"),
+    (re.compile(r"\bHashMap\b|\bHashSet\b"), "unordered hash collection (RandomState)"),
+    (re.compile(r"thread_rng|rand::random"), "ambient RNG"),
+]
+
+
+def is_answer_bearing(path: str) -> bool:
+    return path in ANSWER_BEARING_FILES or path.startswith(ANSWER_BEARING_DIRS)
+
+
+def check_answer_path_determinism(path: str, text: str) -> list[Violation]:
+    if not is_answer_bearing(path):
+        return []
+    violations = []
+    for i, line in enumerate(strip_test_module(text).splitlines()):
+        code = strip_line_comment(line)
+        for pattern, what in NONDETERMINISM:
+            if pattern.search(code):
+                violations.append(
+                    Violation(
+                        "GK-I5",
+                        path,
+                        i + 1,
+                        f"{what} in an answer-bearing module — answers must "
+                        "be deterministic functions of (data, config, seed)",
+                    )
+                )
+    return violations
+
+
+# --- driver ------------------------------------------------------------------
+
+ALL_CHECKS = [
+    ("GK-I1", check_unsafe_safety),
+    ("GK-I2", check_env_reads),
+    ("GK-I3", check_allow_deprecated),
+    ("GK-I4", check_service_lock_order),
+    ("GK-I5", check_answer_path_determinism),
+]
+
+
+def lint_tree(root: Path) -> list[Violation]:
+    violations: list[Violation] = []
+    for base in ("rust/src", "rust/tests"):
+        for f in sorted((root / base).rglob("*.rs")):
+            rel = f.relative_to(root).as_posix()
+            text = f.read_text(encoding="utf-8")
+            for rule, check in ALL_CHECKS:
+                if rule == "GK-I4" and not rel.startswith("rust/src/service/"):
+                    continue
+                violations.extend(check(rel, text))
+    return violations
+
+
+# --- self-test fixtures: every rule exercised both ways ----------------------
+
+FIXTURES = [
+    # (rule, path-the-fixture-pretends-to-be, source, expected violations)
+    (
+        "GK-I1",
+        "rust/src/x.rs",
+        "// SAFETY: lock held for the whole call\nunsafe impl Send for X {}\n",
+        0,
+    ),
+    (
+        "GK-I1",
+        "rust/src/x.rs",
+        "/// # Safety\n/// caller checked avx2\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n",
+        0,
+    ),
+    ("GK-I1", "rust/src/x.rs", "fn f() {\n    unsafe { g() }\n}\n", 1),
+    (
+        "GK-I2",
+        "rust/src/engine/env.rs",
+        'let v = std::env::var("GKSELECT_SIMD");\n',
+        0,
+    ),
+    (
+        "GK-I2",
+        "rust/src/stream/store.rs",
+        'let v = std::env::var("GKSELECT_SIMD");\n',
+        1,
+    ),
+    ("GK-I2", "rust/src/stream/store.rs", 'let v = std::env::var("HOME");\n', 1),
+    (
+        "GK-I2",
+        "rust/tests/proptest_gk_select.rs",
+        'if std::env::var("PROPKIT_SEED").is_err() {\n',
+        0,
+    ),
+    (
+        "GK-I3",
+        "rust/tests/proptest_engine.rs",
+        "#![allow(deprecated)]\n",
+        0,
+    ),
+    ("GK-I3", "rust/src/engine/mod.rs", "#[allow(deprecated)]\nfn f() {}\n", 1),
+    (
+        "GK-I4",
+        "rust/src/service/shard.rs",
+        "fn ok(&self) {\n"
+        "    let map = relock(&self.shard(stream).streams);\n"
+        "    let w = entry.lock_writer();\n"
+        "    let p = relock(&self.published);\n"
+        "    let r = self.registry.lock().unwrap_or_else(|e| e.into_inner());\n"
+        "}\n",
+        0,
+    ),
+    (
+        "GK-I4",
+        "rust/src/service/shard.rs",
+        "fn inverted(&self) {\n"
+        "    let r = self.registry.lock().unwrap_or_else(|e| e.into_inner());\n"
+        "    let w = entry.lock_writer();\n"
+        "}\n",
+        1,
+    ),
+    (
+        "GK-I4",
+        "rust/src/service/mod.rs",
+        "fn poison_unsafe(&self) {\n    let r = self.registry.lock().unwrap();\n}\n",
+        1,
+    ),
+    (
+        "GK-I4",
+        "rust/src/service/mod.rs",
+        "fn fresh_per_fn(&self) {\n    let p = relock(&self.published);\n}\n"
+        "fn other(&self) {\n    let w = entry.lock_writer();\n}\n",
+        0,
+    ),
+    (
+        "GK-I5",
+        "rust/src/sketch/mod.rs",
+        "fn f() {\n    let t = Instant::now();\n}\n",
+        1,
+    ),
+    (
+        "GK-I5",
+        "rust/src/sketch/mod.rs",
+        "fn f() {\n    let m = std::collections::BTreeMap::new();\n}\n"
+        "#[cfg(test)]\nmod tests {\n    fn t() { let m = std::collections::HashMap::new(); }\n}\n",
+        0,
+    ),
+    (
+        "GK-I5",
+        "rust/src/cluster/pool.rs",
+        "fn f() {\n    let t = Instant::now(); // substrate timing: out of scope\n}\n",
+        0,
+    ),
+]
+
+
+def self_test() -> int:
+    checks = dict(ALL_CHECKS)
+    failures = 0
+    rules_hit_bad = set()
+    for rule, path, source, expected in FIXTURES:
+        got = checks[rule](path, source)
+        if rule == "GK-I5" and not is_answer_bearing(path):
+            pass  # fixture exercises the scope boundary itself
+        if len(got) != expected:
+            failures += 1
+            print(
+                f"FAIL: self-test fixture for {rule} on {path}: expected "
+                f"{expected} violation(s), got {len(got)}: "
+                f"{[v.render() for v in got]}",
+                file=sys.stderr,
+            )
+        if expected:
+            rules_hit_bad.add(rule)
+            for v in got:
+                if v.rule != rule:
+                    failures += 1
+                    print(f"FAIL: fixture for {rule} reported {v.rule}", file=sys.stderr)
+                if DOC not in v.render():
+                    failures += 1
+                    print(f"FAIL: {rule} message must cite {DOC}", file=sys.stderr)
+    missing = {rule for rule, _ in ALL_CHECKS} - rules_hit_bad
+    if missing:
+        failures += 1
+        print(f"FAIL: rules with no failing fixture: {sorted(missing)}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"self-test OK: {len(FIXTURES)} fixtures across {len(ALL_CHECKS)} rules")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root (default: the script's repo)",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the linter's own good/bad fixtures instead of the tree",
+    )
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    if not (args.root / "rust" / "src").is_dir():
+        print(f"FAIL: {args.root} does not look like the repo root", file=sys.stderr)
+        return 2
+
+    violations = lint_tree(args.root)
+    for v in violations:
+        print(v.render(), file=sys.stderr)
+    if violations:
+        print(f"{len(violations)} invariant violation(s); see {DOC}", file=sys.stderr)
+        return 1
+    print("lint_repo OK: GK-I1..GK-I5 hold across rust/src and rust/tests")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
